@@ -1,0 +1,79 @@
+//! **ABL-2**: bucket-padding overhead.
+//!
+//! The runtime zero-pads workloads up to the nearest artifact bucket
+//! (DESIGN.md §2.3). This bench measures the cost of that padding by
+//! comparing workloads that exactly fill a bucket against workloads just
+//! past the previous bucket boundary (worst-case padding waste), for both
+//! the signal and the memory dimension.
+//!
+//! Output: `results/ablation_bucketing.csv`.
+
+use containerstress::bench::{figs, table, write_csv, Bencher};
+use containerstress::linalg::Mat;
+use containerstress::util::rng::Rng;
+
+fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let mut m = Mat::zeros(rows, cols);
+    rng.fill_gauss(&mut m.data);
+    m
+}
+
+fn main() {
+    containerstress::util::logger::init();
+    let server = figs::device_or_exit();
+    let handle = server.handle();
+    let (sigs, mems) = figs::available_axes(&handle);
+    if sigs.len() < 2 || mems.len() < 2 {
+        eprintln!("need ≥2 buckets per axis; run `make artifacts ARTIFACT_PROFILE=full`");
+        return;
+    }
+    let b = if figs::quick() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let obs = 512;
+    let mut ms = Vec::new();
+
+    // --- signal-dimension padding ------------------------------------------
+    let n_lo = sigs[sigs.len() - 2];
+    let n_hi = *sigs.last().unwrap();
+    let m_fix = *mems.last().unwrap();
+    for (label, n) in [("n_exact", n_hi), ("n_worstpad", n_lo + 1)] {
+        let mut sess = figs::session_for(&handle, n, m_fix, 7);
+        sess.train().expect("train");
+        let probe = random_mat(obs, n, 8);
+        ms.push(b.run_with_units(&format!("{label}_{n}→bucket{}", sess.bucket.n), obs as f64, || {
+            sess.surveil(&probe).expect("surveil")
+        }));
+    }
+
+    // --- memory-dimension padding ------------------------------------------
+    let m_lo = mems[mems.len() - 2];
+    let m_hi = *mems.last().unwrap();
+    let n_fix = sigs[0];
+    for (label, m) in [("m_exact", m_hi), ("m_worstpad", m_lo + 1)] {
+        let mut sess = figs::session_for(&handle, n_fix, m, 9);
+        sess.train().expect("train");
+        let probe = random_mat(obs, n_fix, 10);
+        ms.push(b.run_with_units(
+            &format!("{label}_{m}→bucket{}", sess.bucket.m),
+            obs as f64,
+            || sess.surveil(&probe).expect("surveil"),
+        ));
+    }
+
+    println!("{}", table(&ms));
+    // Padding overhead summary: worst-pad runs execute at bucket size, so
+    // their cost should match the exact-fill runs (same executable), and
+    // the "overhead" is the bucket-vs-real work ratio, not extra latency.
+    let exact = ms[0].stats.median;
+    let padded = ms[1].stats.median;
+    println!(
+        "signal-dim worst-case padding: {:.1}% latency delta at equal bucket",
+        (padded / exact - 1.0) * 100.0
+    );
+    write_csv("results/ablation_bucketing.csv", &ms).unwrap();
+    println!("ablation_bucketing done → results/ablation_bucketing.csv");
+}

@@ -1,0 +1,66 @@
+//! **ABL-3**: observation-chunk amortisation.
+//!
+//! Surveillance streams through the device in fixed `chunk`-row calls; the
+//! per-call overhead (literal marshaling, PJRT dispatch) must amortise as
+//! the window grows. This bench measures per-observation cost across
+//! window sizes (including non-multiples of the chunk — tail padding) and
+//! reports the amortisation curve that justified the chunk-size choice.
+//!
+//! Output: `results/ablation_chunk.csv`.
+
+use containerstress::bench::{figs, table, write_csv, Bencher};
+use containerstress::linalg::Mat;
+use containerstress::util::rng::Rng;
+
+fn main() {
+    containerstress::util::logger::init();
+    let server = figs::device_or_exit();
+    let handle = server.handle();
+    let (sigs, mems) = figs::available_axes(&handle);
+    let n = *sigs.last().unwrap();
+    let m = *mems.last().unwrap();
+    let chunk = handle.manifest().unwrap().chunk;
+    let b = if figs::quick() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+
+    let mut sess = figs::session_for(&handle, n, m, 11);
+    sess.train().expect("train");
+    let mut rng = Rng::new(12);
+
+    let mut ms = Vec::new();
+    let windows = [
+        1,
+        chunk / 2,
+        chunk,
+        chunk + 1, // tail padding worst case
+        4 * chunk,
+        16 * chunk,
+        64 * chunk,
+    ];
+    for &w in &windows {
+        let mut probe = Mat::zeros(w, n);
+        rng.fill_gauss(&mut probe.data);
+        ms.push(b.run_with_units(&format!("window_{w}"), w as f64, || {
+            sess.surveil(&probe).expect("surveil")
+        }));
+    }
+    println!("{}", table(&ms));
+    let per_obs_small = ms[0].stats.median / 1.0;
+    let per_obs_large = ms.last().unwrap().stats.median / (64 * chunk) as f64;
+    println!(
+        "per-observation cost: {:.1} µs (window=1) → {:.2} µs (window={}) — {:.0}× amortisation",
+        per_obs_small * 1e6,
+        per_obs_large * 1e6,
+        64 * chunk,
+        per_obs_small / per_obs_large
+    );
+    assert!(
+        per_obs_large < per_obs_small,
+        "chunking must amortise per-call overhead"
+    );
+    write_csv("results/ablation_chunk.csv", &ms).unwrap();
+    println!("ablation_chunk done → results/ablation_chunk.csv");
+}

@@ -1,0 +1,69 @@
+//! **ABL-1**: similarity-kernel formulation ablation.
+//!
+//! The paper's GPU contribution hinges on reformulating the similarity
+//! operator for the device (CUDA block/warp/thread decomposition; here the
+//! MXU Gram-trick, DESIGN.md §7). This bench quantifies that choice on CPU:
+//!
+//! - `direct`  — naive per-pair Euclidean loop (the pre-GPU formulation);
+//! - `gram`    — ‖a‖²+‖b‖²−2aᵀb via matmul (the kernel's formulation);
+//! - `device`  — the full AOT surveillance graph through PJRT (includes
+//!   the same formulation compiled by XLA).
+//!
+//! Output: `results/ablation_kernel.csv`.
+
+use containerstress::bench::{figs, table, write_csv, Bencher};
+use containerstress::linalg::Mat;
+use containerstress::mset::{sim_cross, sim_cross_gram};
+use containerstress::util::rng::Rng;
+
+fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let mut m = Mat::zeros(rows, cols);
+    rng.fill_gauss(&mut m.data);
+    m
+}
+
+fn main() {
+    containerstress::util::logger::init();
+    let b = if figs::quick() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let mut ms = Vec::new();
+    for &(m, n, bsz) in &[(64usize, 8usize, 64usize), (256, 32, 64), (512, 64, 64)] {
+        let d = random_mat(m, n, 1);
+        let x = random_mat(bsz, n, 2);
+        let units = (m * bsz) as f64;
+        let m1 = b.run_with_units(&format!("direct_m{m}_n{n}"), units, || {
+            sim_cross(&d, &x)
+        });
+        let m2 = b.run_with_units(&format!("gram_m{m}_n{n}"), units, || {
+            sim_cross_gram(&d, &x)
+        });
+        println!(
+            "m={m} n={n}: gram is {:.2}× the direct formulation",
+            m1.stats.median / m2.stats.median
+        );
+        ms.push(m1);
+        ms.push(m2);
+    }
+
+    // device path at matching bucket shapes (if artifacts present)
+    let server = figs::device_or_exit();
+    let handle = server.handle();
+    let (sigs, mems) = figs::available_axes(&handle);
+    let n = *sigs.last().unwrap();
+    let m = *mems.last().unwrap();
+    let mut sess = figs::session_for(&handle, n, m, 3);
+    sess.train().expect("train");
+    let probe = random_mat(64, n, 4);
+    let md = b.run_with_units(&format!("device_m{m}_n{n}"), (m * 64) as f64, || {
+        sess.surveil(&probe).expect("surveil")
+    });
+    ms.push(md);
+
+    println!("{}", table(&ms));
+    write_csv("results/ablation_kernel.csv", &ms).unwrap();
+    println!("ablation_kernel done → results/ablation_kernel.csv");
+}

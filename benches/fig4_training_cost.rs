@@ -1,0 +1,89 @@
+//! **Fig. 4 (a)–(d)**: 3-D training compute-cost contours vs (number of
+//! memory vectors × number of training observations), one panel per signal
+//! count. Paper panels use 10/20/30/40 signals; the scaled grid uses the
+//! artifact bucket axes (DESIGN.md §5). Expected shape: cost dominated by
+//! `n_memvec` (and signals across panels), nearly flat in `n_obs` — the
+//! paper's §III.A training conclusion.
+//!
+//! Output: `results/fig4_training_cost/` (CSV + gnuplot + ASCII per panel)
+//! and a fitted sensitivity table on stdout.
+
+use containerstress::bench::figs;
+use containerstress::report;
+use containerstress::surface::{ResponseSurface, Sample, SurfaceGrid};
+use std::path::Path;
+
+fn main() {
+    containerstress::util::logger::init();
+    let server = figs::device_or_exit();
+    let handle = server.handle();
+    let (signals, memvecs) = figs::available_axes(&handle);
+    let trials = if figs::quick() { 1 } else { 3 };
+    let obs_axis: Vec<usize> = if figs::quick() {
+        vec![256, 1024]
+    } else {
+        vec![256, 1024, 4096]
+    };
+    let out = Path::new("results/fig4_training_cost");
+    println!(
+        "fig4: panels(signals)={signals:?}, memvecs={memvecs:?}, train-obs={obs_axis:?}, {trials} trials"
+    );
+
+    let mut samples = Vec::new();
+    for (pi, &n) in signals.iter().enumerate() {
+        let mut grid = SurfaceGrid::new(
+            "n_memvec",
+            "n_train_obs",
+            memvecs.iter().map(|&v| v as f64).collect(),
+            obs_axis.iter().map(|&v| v as f64).collect(),
+        );
+        for (r, &m) in memvecs.iter().enumerate() {
+            if m < 2 * n {
+                continue; // training-constraint gap (paper Fig. 6 note)
+            }
+            for (c, &obs) in obs_axis.iter().enumerate() {
+                let ts = figs::measure_train(&handle, n, m, obs, trials);
+                let med = figs::median(&ts);
+                grid.set(r, c, med);
+                samples.push(Sample {
+                    n_signals: n,
+                    n_memvec: m,
+                    n_obs: obs,
+                    cost: med,
+                });
+            }
+        }
+        let panel = (b'a' + pi as u8) as char;
+        let ascii = report::emit_figure(
+            out,
+            &format!("fig4{panel}_n{n}"),
+            &format!("Fig4({panel}): training cost, {n} signals"),
+            &grid,
+            "train_cost_s",
+            false,
+        )
+        .expect("emit");
+        println!("{ascii}");
+    }
+
+    let surf = ResponseSurface::fit(&samples).expect("fit");
+    println!(
+        "training-cost surface: r²={:.3}, exponents (n, m, obs) = {:?}",
+        surf.r2,
+        surf.exponents().map(|e| (e * 1000.0).round() / 1000.0)
+    );
+    let rank = surf.ranking();
+    println!("dominant parameters: {} > {} > {}", rank[0].0, rank[1].0, rank[2].0);
+    // Paper §III.A: training cost "depends very sensitively on the number
+    // of memory vectors" and is insensitive to the observation count. (At
+    // this grid's signal range the n·m² similarity term is dwarfed by the
+    // m³ inverse, so the n exponent is also near zero — n and obs then
+    // rank by noise; we assert the physical claims, not the noise.)
+    assert_eq!(rank[0].0, "n_memvec", "memvecs must dominate training");
+    let e = surf.exponents();
+    assert!(
+        e[2].abs() < 0.3,
+        "training must be near-flat in n_obs: exponents {e:?}"
+    );
+    println!("fig4 done → {}", out.display());
+}

@@ -1,0 +1,79 @@
+//! **Fig. 5 (a)–(d)**: 3-D surveillance compute-cost contours vs (number of
+//! memory vectors × number of streamed observations), one panel per signal
+//! count. Expected shape: cost scales ~linearly with `n_obs` and strongly
+//! with signals/memvecs — the paper's §III.A surveillance conclusion.
+//!
+//! Output: `results/fig5_surveil_cost/`.
+
+use containerstress::bench::figs;
+use containerstress::report;
+use containerstress::surface::{ResponseSurface, Sample, SurfaceGrid};
+use std::path::Path;
+
+fn main() {
+    containerstress::util::logger::init();
+    let server = figs::device_or_exit();
+    let handle = server.handle();
+    let (signals, memvecs) = figs::available_axes(&handle);
+    let trials = if figs::quick() { 1 } else { 3 };
+    let obs_axis: Vec<usize> = if figs::quick() {
+        vec![128, 512]
+    } else {
+        vec![128, 512, 2048, 8192]
+    };
+    let out = Path::new("results/fig5_surveil_cost");
+    println!(
+        "fig5: panels(signals)={signals:?}, memvecs={memvecs:?}, obs={obs_axis:?}, {trials} trials"
+    );
+
+    let mut samples = Vec::new();
+    for (pi, &n) in signals.iter().enumerate() {
+        let mut grid = SurfaceGrid::new(
+            "n_memvec",
+            "n_obs",
+            memvecs.iter().map(|&v| v as f64).collect(),
+            obs_axis.iter().map(|&v| v as f64).collect(),
+        );
+        for (r, &m) in memvecs.iter().enumerate() {
+            if m < 2 * n {
+                continue;
+            }
+            for (c, &obs) in obs_axis.iter().enumerate() {
+                let ts = figs::measure_surveil(&handle, n, m, obs, trials);
+                let med = figs::median(&ts);
+                grid.set(r, c, med);
+                samples.push(Sample {
+                    n_signals: n,
+                    n_memvec: m,
+                    n_obs: obs,
+                    cost: med,
+                });
+            }
+        }
+        let panel = (b'a' + pi as u8) as char;
+        let ascii = report::emit_figure(
+            out,
+            &format!("fig5{panel}_n{n}"),
+            &format!("Fig5({panel}): surveillance cost, {n} signals"),
+            &grid,
+            "surveil_cost_s",
+            false,
+        )
+        .expect("emit");
+        println!("{ascii}");
+    }
+
+    let surf = ResponseSurface::fit(&samples).expect("fit");
+    let e = surf.exponents();
+    println!(
+        "surveillance-cost surface: r²={:.3}, exponents (n, m, obs) = {:?}",
+        surf.r2,
+        e.map(|x| (x * 1000.0).round() / 1000.0)
+    );
+    assert!(
+        e[2] > 0.5,
+        "paper conclusion: surveillance cost must scale with n_obs (exp {})",
+        e[2]
+    );
+    println!("fig5 done → {}", out.display());
+}

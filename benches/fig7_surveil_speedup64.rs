@@ -1,0 +1,103 @@
+//! **Fig. 7**: GPU surveillance speedup factor for the **64-signal** use
+//! case vs (number of observations × number of memory vectors), log–log.
+//! Paper: grows non-linearly, "can exceed 5000×".
+//!
+//! The modelled surface covers the paper's range; measured local
+//! surveillance costs over the scaled grid anchor the CPU term (same
+//! workflow as fig6).
+//!
+//! Output: `results/fig7_surveil_speedup64/`.
+
+use containerstress::accel::{self, CpuRef, GpuSpec};
+use containerstress::bench::figs;
+use containerstress::report;
+use containerstress::surface::SurfaceGrid;
+use std::path::Path;
+
+const N_SIGNALS: usize = 64;
+
+fn main() {
+    containerstress::util::logger::init();
+    let gpu = GpuSpec::v100();
+    let cpu = CpuRef::xeon_platinum();
+    let out = Path::new("results/fig7_surveil_speedup64");
+
+    // --- modelled paper-range surface ---------------------------------------
+    let obs_axis: Vec<usize> = (10..=20).step_by(2).map(|k| 1usize << k).collect();
+    let memvecs: Vec<usize> = (7..=13).map(|k| 1usize << k).collect();
+    let mut grid = SurfaceGrid::new(
+        "n_memvec",
+        "n_obs",
+        memvecs.iter().map(|&v| v as f64).collect(),
+        obs_axis.iter().map(|&v| v as f64).collect(),
+    );
+    let mut hi = 0.0f64;
+    for (r, &m) in memvecs.iter().enumerate() {
+        for (c, &obs) in obs_axis.iter().enumerate() {
+            let s = accel::speedup_surveil(N_SIGNALS, m, obs, &gpu, &cpu);
+            hi = hi.max(s);
+            grid.set(r, c, s);
+        }
+    }
+    let ascii = report::emit_figure(
+        out,
+        "fig7_modelled",
+        "Fig7: surveillance speedup @64 signals (modelled, log-log)",
+        &grid,
+        "speedup",
+        true,
+    )
+    .expect("emit");
+    println!("{ascii}");
+    println!("peak modelled speedup {hi:.0}× (paper: exceeds 5000×)");
+    assert!(hi > 4000.0, "peak {hi} too low vs paper anchor");
+
+    // Non-linear growth with obs (launch-overhead amortisation): probed at
+    // small m, where per-kernel overhead is still visible; at large m the
+    // speedup saturates immediately — both regimes are visible in Fig. 7.
+    let s_small = accel::speedup_surveil(N_SIGNALS, 128, 1 << 10, &gpu, &cpu);
+    let s_mid = accel::speedup_surveil(N_SIGNALS, 128, 1 << 16, &gpu, &cpu);
+    assert!(
+        s_mid > 1.5 * s_small,
+        "growth with n_obs missing: {s_small:.0}× → {s_mid:.0}×"
+    );
+
+    // --- measured local anchor ----------------------------------------------
+    let server = figs::device_or_exit();
+    let handle = server.handle();
+    let (sig_b, mem_b) = figs::available_axes(&handle);
+    // closest available bucket to the 64-signal use case
+    let n = *sig_b.iter().min_by_key(|&&s| s.abs_diff(N_SIGNALS)).unwrap();
+    let trials = if figs::quick() { 1 } else { 2 };
+    let obs_local: Vec<usize> = if figs::quick() {
+        vec![256, 1024]
+    } else {
+        vec![256, 1024, 4096]
+    };
+    let mut measured = Vec::new();
+    for &m in &mem_b {
+        if m < 2 * n {
+            continue;
+        }
+        for &obs in &obs_local {
+            let t = figs::median(&figs::measure_surveil(&handle, n, m, obs, trials));
+            let flops = accel::total_flops(&accel::surveil_routines(n, m, obs, accel::GPU_CHUNK));
+            measured.push((flops, t));
+        }
+    }
+    let local_eff = accel::calibrate_cpu_eff(&measured);
+    println!(
+        "local testbed effective surveillance throughput at n={n}: {:.2} GFLOP/s",
+        local_eff / 1e9
+    );
+    let local_cpu = CpuRef {
+        train_eff_flops: local_eff,
+        surveil_eff_flops: local_eff,
+    };
+    let s_anchored = accel::speedup_surveil(N_SIGNALS, 8192, 1 << 20, &gpu, &local_cpu);
+    println!(
+        "anchored to local CPU: peak speedup would be {s_anchored:.0}× \
+         (local XLA CPU is multithreaded/vectorised, unlike the paper-era reference)"
+    );
+    println!("fig7 done → {}", out.display());
+}

@@ -1,0 +1,87 @@
+//! Scenario: **commercial-aviation fleet telemetry** — the paper's
+//! "Customer B" extreme (§I): an Airbus A320 fleet with 75 000 sensors per
+//! plane at 1 Hz (20 TB/month/plane). Sensors are partitioned into
+//! 1024-signal prognostic groups; this example scopes one partition:
+//!
+//! 1. measures cost growth on the device across the scaled grid,
+//! 2. extrapolates to the partition size via the response surface,
+//! 3. compares CPU-only shapes with V100 shapes through the accel model —
+//!    reproducing the paper's conclusion that big-data use cases want GPUs.
+//!
+//! Run: `make artifacts && cargo run --release --example scoping_aviation`
+
+use containerstress::accel::{self, CpuRef, GpuSpec};
+use containerstress::coordinator::{run_sweep, Backend, SweepSpec};
+use containerstress::recommend::{recommend, LocalCalibration, Sla};
+use containerstress::runtime::DeviceServer;
+use containerstress::shapes::Workload;
+use containerstress::surface::ResponseSurface;
+
+fn main() -> anyhow::Result<()> {
+    containerstress::util::logger::init();
+    let server = DeviceServer::start(containerstress::runtime::default_artifact_dir())?;
+
+    // Device sweep on the scaled grid (the surface extrapolates beyond it).
+    let spec = SweepSpec {
+        signals: vec![4, 8, 16],
+        memvecs: vec![32, 48, 64],
+        obs: vec![64, 256, 1024],
+        trials: 3,
+        seed: 320,
+        model: "mset2".into(),
+        workers: 0,
+    };
+    let result = run_sweep(&spec, Backend::Device(server.handle()))?;
+    // Customer B sits far outside the measured grid: use the power-law fit,
+    // which extrapolates safely (the quadratic's curvature does not).
+    let train_surf = ResponseSurface::fit_power_law(&result.samples("train"))?;
+    let surveil_surf = ResponseSurface::fit_power_law(&result.samples("surveil"))?;
+
+    // One A320 partition: 1024 signals at 1 Hz.
+    let workload = Workload::customer_b_partition();
+    println!(
+        "A320 partition: {} signals, {} memvecs, {} obs/s",
+        workload.n_signals, workload.n_memvec, workload.obs_per_sec
+    );
+    let pred_train = train_surf.predict(workload.n_signals, workload.n_memvec, workload.train_window);
+    let pred_obs =
+        surveil_surf.predict(workload.n_signals, workload.n_memvec, 3600) / 3600.0;
+    println!(
+        "surface extrapolation (local testbed): training ≈ {:.1} s, {:.2} ms/obs streaming",
+        pred_train,
+        pred_obs * 1e3
+    );
+
+    // GPU vs CPU for this partition (the paper's Figs. 6–8 question).
+    let gpu = GpuSpec::v100();
+    let cpu = CpuRef::xeon_platinum();
+    let su_train = accel::speedup_train(workload.n_signals, workload.n_memvec, &gpu, &cpu);
+    let su_surveil = accel::speedup_surveil(
+        workload.n_signals,
+        workload.n_memvec,
+        1 << 20,
+        &gpu,
+        &cpu,
+    );
+    println!(
+        "modelled V100 speedup: training {su_train:.0}×, sustained surveillance {su_surveil:.0}×"
+    );
+
+    let cal = LocalCalibration::from_surface(&surveil_surf, 16, 64, 1024);
+    let rec = recommend(
+        &workload,
+        &train_surf,
+        &surveil_surf,
+        cal,
+        &Sla {
+            headroom: 2.0,
+            max_train_s: 7200.0,
+        },
+    );
+    println!("\n{}", rec.render());
+    match rec.chosen_shape() {
+        Some(c) => println!("→ scope: {} at ${:.2}/hr", c.shape.name, c.usd_per_hour),
+        None => println!("→ no single shape sustains this partition; shard further"),
+    }
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Scenario: **datacenter IT-asset monitoring** — the paper's "Customer A"
+//! extreme (§I): ~20 signals sampled once per hour, a couple of MB per
+//! year. Runs a small Monte Carlo sweep around the use case, fits the
+//! response surfaces, and asks the recommender which cloud shape to buy.
+//!
+//! Run: `make artifacts && cargo run --release --example scoping_datacenter`
+
+use containerstress::coordinator::{run_sweep, Backend, SweepSpec};
+use containerstress::recommend::{recommend, LocalCalibration, Sla};
+use containerstress::runtime::DeviceServer;
+use containerstress::shapes::Workload;
+use containerstress::surface::ResponseSurface;
+
+fn main() -> anyhow::Result<()> {
+    containerstress::util::logger::init();
+    let server = DeviceServer::start(containerstress::runtime::default_artifact_dir())?;
+
+    // Sweep a neighbourhood of the use case (scaled dev-bucket grid).
+    let spec = SweepSpec {
+        signals: vec![8, 12, 16],
+        memvecs: vec![32, 48, 64],
+        obs: vec![64, 128, 256],
+        trials: 3,
+        seed: 2024,
+        model: "mset2".into(),
+        workers: 0,
+    };
+    println!("sweeping {}×{}×{} cells …", 3, 3, 3);
+    let result = run_sweep(&spec, Backend::Device(server.handle()))?;
+
+    let train_surf = ResponseSurface::fit(&result.samples("train"))?;
+    let surveil_surf = ResponseSurface::fit(&result.samples("surveil"))?;
+    println!(
+        "response surfaces: train r²={:.3} exponents {:?}\n                  surveil r²={:.3} exponents {:?}",
+        train_surf.r2,
+        train_surf.exponents().map(|e| (e * 100.0).round() / 100.0),
+        surveil_surf.r2,
+        surveil_surf.exponents().map(|e| (e * 100.0).round() / 100.0),
+    );
+
+    // Customer A: 20 signals, hourly sampling.
+    let workload = Workload::customer_a();
+    let cal = LocalCalibration::from_surface(&surveil_surf, 16, 64, 256);
+    let rec = recommend(
+        &workload,
+        &train_surf,
+        &surveil_surf,
+        cal,
+        &Sla::default(),
+    );
+    println!("\n{}", rec.render());
+    let chosen = rec.chosen_shape().expect("customer A must fit somewhere");
+    println!(
+        "→ scope: {} at ${:.4}/hr ({:.4}% utilised)",
+        chosen.shape.name,
+        chosen.usd_per_hour,
+        chosen.utilization * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,153 @@
+"""AOT lowering: JAX graphs → HLO *text* artifacts + manifest.
+
+Python runs only here, at build time (``make artifacts``). The Rust
+coordinator loads the emitted ``*.hlo.txt`` through the PJRT CPU client and
+never imports Python on the request path.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the published ``xla`` crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Buckets: XLA executables are shape-specialised, so we emit one artifact per
+(graph, n, m) bucket; the Rust router zero-pads workloads up to the nearest
+bucket (masking contract in ``model.py``). ``--profile dev`` emits a small
+grid for fast tests; ``--profile full`` emits the grid the paper figures
+need (scaled per DESIGN.md §5).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+# The training graph computes its Newton–Schulz inverse in f64 (see
+# model.mset2_train); x64 must be enabled before any tracing happens.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+#: (signals, memvecs) bucket grids per profile. The MSET training
+#: constraint m ≥ 2n (paper Fig. 6) filters invalid pairs.
+PROFILES = {
+    "dev": {
+        "signals": [8, 16],
+        "memvecs": [32, 64],
+        "chunk": 32,
+    },
+    "full": {
+        "signals": [8, 16, 32, 64, 128],
+        "memvecs": [32, 64, 128, 256, 512],
+        "chunk": 64,
+    },
+}
+
+GRAPHS = ["mset2_train", "mset2_surveil", "aakr_surveil"]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_graph(graph, n, m, chunk):
+    """Lower one bucketed graph; returns (hlo_text, inputs, outputs)."""
+    d = spec((m, n))
+    g = spec((m, m))
+    mask = spec((m,))
+    bw = spec((1,))
+    x = spec((chunk, n))
+    if graph == "mset2_train":
+        lowered = jax.jit(model.mset2_train).lower(d, mask, bw)
+        inputs = [("d", [m, n]), ("mask", [m]), ("bw", [1])]
+        outputs = [("g", [m, m])]
+    elif graph == "mset2_surveil":
+        lowered = jax.jit(model.mset2_surveil).lower(d, g, mask, bw, x)
+        inputs = [
+            ("d", [m, n]),
+            ("g", [m, m]),
+            ("mask", [m]),
+            ("bw", [1]),
+            ("x", [chunk, n]),
+        ]
+        outputs = [("xhat", [chunk, n]), ("resid", [chunk, n])]
+    elif graph == "aakr_surveil":
+        lowered = jax.jit(model.aakr_surveil).lower(d, mask, bw, x)
+        inputs = [("d", [m, n]), ("mask", [m]), ("bw", [1]), ("x", [chunk, n])]
+        outputs = [("xhat", [chunk, n]), ("resid", [chunk, n])]
+    else:
+        raise ValueError(graph)
+    return to_hlo_text(lowered), inputs, outputs
+
+
+def emit(out_dir, profile):
+    cfg = PROFILES[profile]
+    chunk = cfg["chunk"]
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = []
+    for n in cfg["signals"]:
+        for m in cfg["memvecs"]:
+            if m < 2 * n:
+                continue  # paper's training constraint → surface gap
+            for graph in GRAPHS:
+                name = f"{graph}_n{n}_m{m}"
+                fname = f"{name}.hlo.txt"
+                hlo, inputs, outputs = lower_graph(graph, n, m, chunk)
+                with open(os.path.join(out_dir, fname), "w") as f:
+                    f.write(hlo)
+                artifacts.append(
+                    {
+                        "id": name,
+                        "graph": graph,
+                        "n": n,
+                        "m": m,
+                        "chunk": chunk,
+                        "file": fname,
+                        "inputs": [
+                            {"name": nm, "shape": shp} for nm, shp in inputs
+                        ],
+                        "outputs": [
+                            {"name": nm, "shape": shp} for nm, shp in outputs
+                        ],
+                    }
+                )
+                print(f"  lowered {name} ({len(hlo)} chars)")
+    manifest = {
+        "version": 1,
+        "profile": profile,
+        "gamma": ref.GAMMA,
+        "ridge_rel": ref.RIDGE_REL,
+        "ns_iters": ref.NS_ITERS,
+        "chunk": chunk,
+        "signals": cfg["signals"],
+        "memvecs": cfg["memvecs"],
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(artifacts)} artifacts + manifest.json to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profile", choices=sorted(PROFILES), default="dev")
+    args = ap.parse_args()
+    emit(args.out_dir, args.profile)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: fused MSET2 estimation step.
+
+Computes, in one kernel, the surveillance back-end that follows the
+similarity kernel:
+
+    W  = G · K        (m × B)   weight solve against the trained inverse
+    X̂  = Wᵀ · D       (B × n)   state estimate
+    R  = X − X̂        (B × n)   residuals
+
+Fusing the two matmuls and the subtraction keeps W entirely in VMEM — it
+is never materialised in HBM, which is the TPU analogue of the paper's
+"close attention is paid to efficient reuse of memory" for the CUDA
+implementation (§II.D).
+
+The whole G (m × m) is staged per grid step; at the largest bucket
+(m = 512) that is 1 MiB — comfortably inside VMEM next to the (m × TB)
+strip of K and the (m × n) memory matrix (512·128·4 ≈ 256 KiB each).
+Grid is over observation tiles only.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _estimate_kernel(g_ref, k_ref, d_ref, x_ref, xhat_ref, resid_ref):
+    g = g_ref[...]                      # (m, m)
+    k = k_ref[...]                      # (m, TB)
+    d = d_ref[...]                      # (m, n)
+    x = x_ref[...]                      # (TB, n)
+    # MXU matmul #1: weights stay in VMEM.
+    w = jax.lax.dot_general(
+        g, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                   # (m, TB)
+    # MXU matmul #2: contract over the memory dimension.
+    xhat = jax.lax.dot_general(
+        w, d, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                   # (TB, n)
+    xhat_ref[...] = xhat
+    resid_ref[...] = x - xhat
+
+
+@functools.partial(jax.jit, static_argnames=("tb",))
+def estimate_pallas(g, k, d, x, tb=128):
+    """Fused estimate: returns (xhat, resid), both (B, n) f32.
+
+    g: (m, m) trained inverse, k: (m, B) masked similarities,
+    d: (m, n) memory matrix, x: (B, n) observation chunk.
+    """
+    m, b = k.shape
+    n = d.shape[1]
+    assert g.shape == (m, m) and d.shape[0] == m and x.shape == (b, n)
+    tb = math.gcd(b, tb)
+    grid = (b // tb,)
+    return pl.pallas_call(
+        _estimate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, m), lambda j: (0, 0)),   # G resident
+            pl.BlockSpec((m, tb), lambda j: (0, j)),  # K strip
+            pl.BlockSpec((m, n), lambda j: (0, 0)),   # D resident
+            pl.BlockSpec((tb, n), lambda j: (j, 0)),  # X strip
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, n), lambda j: (j, 0)),
+            pl.BlockSpec((tb, n), lambda j: (j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+        ],
+        interpret=True,
+    )(g, k, d, x)
+
+
+def vmem_bytes(m, tb, n, dtype_bytes=4):
+    """VMEM working set per grid step (perf analysis)."""
+    return (m * m + m * tb + m * n + 2 * tb * n + m * tb) * dtype_bytes

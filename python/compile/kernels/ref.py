@@ -1,0 +1,89 @@
+"""Pure-jnp oracle for the L1 Pallas kernels.
+
+These definitions are the *source of truth* for the MSET2 similarity
+operator and the fused estimation step. They are mirrored in three places
+that the test suites cross-check against each other:
+
+- ``rust/src/mset/similarity.rs``  (native Rust oracle, f64)
+- ``kernels/similarity.py``        (Pallas/MXU kernel, f32)
+- this file                        (pure jnp, any dtype)
+
+Constants are shared with the Rust side; change them together.
+"""
+
+import jax.numpy as jnp
+
+#: Kernel bandwidth (dimensionless) — matches ``mset::similarity::GAMMA``.
+GAMMA = 0.5
+
+#: Ridge regularisation λ = RIDGE_REL · tr(S)/m; since diag(S) = 1 this is
+#: simply RIDGE_REL. Matches ``mset::RIDGE_REL``.
+RIDGE_REL = 1e-3
+
+#: Newton–Schulz iterations for the in-graph SPD inverse (see
+#: ``model.ns_inverse`` and DESIGN.md §7 — the TPU substitute for the
+#: paper's cuSOLVER eigendecomposition).
+NS_ITERS = 30
+
+
+def bandwidth(n_real):
+    """Similarity bandwidth γ·√n for the *unpadded* signal count."""
+    return GAMMA * float(n_real) ** 0.5
+
+
+def sim_cross(d, x, bw):
+    """Similarity K[i, b] = s(D[i], X[b]) — reference implementation.
+
+    d: (m, n) memory matrix (rows = memory vectors)
+    x: (B, n) observation chunk (rows = observations)
+    bw: scalar bandwidth γ·√n_real
+    returns (m, B)
+    """
+    # ‖a−b‖² via the Gram trick, clamped against rounding.
+    dn = jnp.sum(d * d, axis=1, keepdims=True)          # (m, 1)
+    xn = jnp.sum(x * x, axis=1)[None, :]                # (1, B)
+    cross = d @ x.T                                     # (m, B)
+    d2 = jnp.maximum(dn + xn - 2.0 * cross, 0.0)
+    return 1.0 / (1.0 + jnp.sqrt(d2) / bw)
+
+
+def sim_matrix(d, bw):
+    """Symmetric similarity matrix S = sim_cross(D, D)."""
+    return sim_cross(d, d, bw)
+
+
+def masked_similarity(d, mask, bw):
+    """Bucket-padded similarity matrix used by training.
+
+    Padded rows (mask == 0) are replaced by identity rows so that the
+    regularised inverse is block diagonal: the padded block never mixes
+    with the real block (see DESIGN.md §2.3).
+
+    The diagonal is pinned to exactly 1: the Gram-trick distance
+    ‖a‖²+‖b‖²−2aᵀb rounds to ~1e-6 instead of 0 in f32, and √ of that puts
+    ~1e-3 noise on the diagonal — the same order as the ridge λ.
+    """
+    s_raw = sim_matrix(d, bw)
+    outer = mask[:, None] * mask[None, :]
+    s = s_raw * outer
+    m = d.shape[0]
+    return s - jnp.diag(jnp.diagonal(s)) + jnp.eye(m, dtype=s.dtype)
+
+
+def estimate(g, k, d, x):
+    """Fused estimation: W = G·K, X̂ = Wᵀ·D, R = X − X̂.
+
+    g: (m, m), k: (m, B) masked similarities, d: (m, n), x: (B, n)
+    returns (xhat (B, n), resid (B, n))
+    """
+    w = g @ k                                           # (m, B)
+    xhat = w.T @ d                                      # (B, n)
+    return xhat, x - xhat
+
+
+def aakr_estimate(k, d, x):
+    """AAKR: similarity-weighted average of memory vectors."""
+    wsum = jnp.maximum(jnp.sum(k, axis=0, keepdims=True), 1e-12)
+    w = k / wsum                                        # (m, B)
+    xhat = w.T @ d
+    return xhat, x - xhat

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: the MSET2 similarity matrix.
+
+This is the paper's computational hot-spot — the "non-linear matrix binary
+operation" that the NVIDIA authors decomposed over CUDA grid/block/warp/
+thread (paper Fig. 3). The TPU re-think (DESIGN.md §7) replaces the warp-
+level dot products with a single **MXU matmul per tile** via the Gram
+identity ‖a−b‖² = ‖a‖² + ‖b‖² − 2aᵀb, followed by a VPU element-wise
+epilogue evaluating the reciprocal kernel — all fused in one Pallas kernel
+so the distance matrix never round-trips to HBM.
+
+Tiling: the output (m × B) is blocked (TM × TB); each grid step loads a
+(TM × n) strip of D and a (TB × n) strip of X into VMEM. With the default
+TM=128, TB=128 and n ≤ 512 the working set is
+  (128·512 + 128·512 + 128·128) · 4 B ≈ 580 KiB « 16 MiB VMEM,
+leaving headroom for double buffering. ``interpret=True`` everywhere: the
+CPU PJRT plugin cannot execute Mosaic custom-calls; real-TPU numbers are
+estimated analytically in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile(size, pref):
+    """Largest divisor of ``size`` that is ≤ ``pref`` (grid must divide)."""
+    t = math.gcd(size, pref)
+    if t == 0:
+        return 1
+    # gcd may be small for odd sizes; fall back to the full size when the
+    # preferred tile does not divide (keeps the kernel correct for any m).
+    return t if size % t == 0 and t > 1 else (pref if size % pref == 0 else size)
+
+
+def _sim_kernel(bw_ref, d_ref, x_ref, o_ref):
+    """One (TM × TB) output tile of the similarity matrix."""
+    d = d_ref[...]                      # (TM, n) VMEM strip of memory matrix
+    x = x_ref[...]                      # (TB, n) VMEM strip of observations
+    # MXU: cross = d @ x.T with f32 accumulation.
+    cross = jax.lax.dot_general(
+        d, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                   # (TM, TB)
+    dn = jnp.sum(d * d, axis=1, keepdims=True)   # (TM, 1)
+    xn = jnp.sum(x * x, axis=1)[None, :]         # (1, TB)
+    d2 = jnp.maximum(dn + xn - 2.0 * cross, 0.0)
+    # VPU epilogue: reciprocal similarity, fused — no HBM round-trip for d2.
+    o_ref[...] = 1.0 / (1.0 + jnp.sqrt(d2) / bw_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tb"))
+def sim_pallas(d, x, bw, tm=128, tb=128):
+    """Pallas similarity: K[i, b] = s(D[i], X[b]).
+
+    d: (m, n) f32, x: (B, n) f32, bw: (1,) f32 scalar bandwidth.
+    Returns (m, B) f32. Matches ``ref.sim_cross`` to f32 rounding.
+    """
+    m, n = d.shape
+    b, n2 = x.shape
+    assert n == n2, f"signal mismatch {n} vs {n2}"
+    tm = _tile(m, tm)
+    tb = _tile(b, tb)
+    grid = (m // tm, b // tb)
+    return pl.pallas_call(
+        _sim_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),            # bw: broadcast
+            pl.BlockSpec((tm, n), lambda i, j: (i, 0)),       # D strip
+            pl.BlockSpec((tb, n), lambda i, j: (j, 0)),       # X strip
+        ],
+        out_specs=pl.BlockSpec((tm, tb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, b), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(bw, d, x)
+
+
+def vmem_bytes(tm, tb, n, dtype_bytes=4):
+    """VMEM working-set estimate for one grid step (perf analysis)."""
+    return (tm * n + tb * n + tm * tb + tm + tb) * dtype_bytes
+
+
+def mxu_flops(m, b, n):
+    """FLOPs of the matmul portion (what the MXU executes)."""
+    return 2.0 * m * b * n

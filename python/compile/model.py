@@ -1,0 +1,144 @@
+"""L2: MSET2 compute graphs in JAX, calling the L1 Pallas kernels.
+
+Three graphs are AOT-lowered per (n, m) bucket by ``aot.py``:
+
+- ``mset2_train``   — similarity matrix + regularised inverse (the paper's
+  training phase; GPU version used the CUDA similarity kernel + cuSOLVER).
+- ``mset2_surveil`` — similarity + fused weight/estimate/residual step (the
+  paper's streaming surveillance phase).
+- ``aakr_surveil``  — the AAKR pluggable alternative.
+
+Bucket padding contract (DESIGN.md §2.3): callers may zero-pad the signal
+dimension to the bucket's ``n`` and the memory dimension to ``m``; the
+``mask`` input is 1.0 for real memory vectors and 0.0 for padding, and
+``bw`` carries γ·√n_real so bandwidth reflects the *unpadded* signal
+count. Padded memory rows are replaced by identity rows in S, making
+(S+λI)⁻¹ block-diagonal: padding can never leak into real estimates.
+
+The SPD inverse is computed **in-graph** with Newton–Schulz iteration —
+pure matmuls on the MXU — instead of calling out to LAPACK/cuSOLVER: the
+CPU PJRT runtime used by the Rust coordinator (xla_extension 0.5.1)
+predates jax's FFI custom-call ABI, so ``jnp.linalg.eigh``'s lapack
+custom-calls cannot execute there, and a matmul-only inverse is the
+natural TPU formulation anyway (DESIGN.md §7). Convergence: S is PD
+(reciprocal-Euclidean kernels are completely monotone ⇒ PD), so
+λ_min(S+λI) ≥ λ = 1e-3; with X₀ = I/max-row-sum the error contracts as
+e_{k+1} = e_k² from e₀ ≤ 1 − λ/m, giving < 1e-6 residual within 30
+iterations for every shipped bucket (verified by ``tests/test_model.py``).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.estimate import estimate_pallas
+from .kernels.similarity import sim_pallas
+
+NS_ITERS = ref.NS_ITERS
+RIDGE_REL = ref.RIDGE_REL
+
+
+def ns_inverse(a, iters=NS_ITERS):
+    """Newton–Schulz inverse of an SPD matrix, matmuls only.
+
+    X₀ = I / ‖A‖_∞ (row-sum bound ⇒ ‖I − X₀A‖₂ < 1),
+    X_{k+1} = X_k (2I − A X_k).
+    """
+    m = a.shape[0]
+    eye = jnp.eye(m, dtype=a.dtype)
+    scale = 1.0 / jnp.max(jnp.sum(jnp.abs(a), axis=1))
+    x0 = scale * eye
+
+    def body(_, x):
+        return x @ (2.0 * eye - a @ x)
+
+    return jax.lax.fori_loop(0, iters, body, x0)
+
+
+#: Refinement iterations of the mixed-precision inverse (EXPERIMENTS.md
+#: §Perf): the f32 phase converges to its ~eps32·cond fixed point (≤3e-2
+#: at the worst shipped conditioning), after which quadratic convergence
+#: needs 3 f64 steps to pass 1e-7.
+NS_REFINE_ITERS = 3
+
+
+def ns_inverse_mixed(a32, coarse_iters=NS_ITERS, refine_iters=NS_REFINE_ITERS):
+    """Mixed-precision Newton–Schulz: bulk iterations in f32 (half the
+    matmul cost on CPU, and the MXU-native dtype on TPU), then a short f64
+    refinement that restores full accuracy (quadratic convergence from the
+    f32 fixed point). ≈2× cheaper than the all-f64 variant at equal final
+    residual — the §Perf optimisation of the training graph.
+    """
+    x32 = ns_inverse(a32.astype(jnp.float32), coarse_iters)
+    a64 = a32.astype(jnp.float64)
+    m = a64.shape[0]
+    eye = jnp.eye(m, dtype=jnp.float64)
+
+    def body(_, x):
+        return x @ (2.0 * eye - a64 @ x)
+
+    return jax.lax.fori_loop(0, refine_iters, body, x32.astype(jnp.float64))
+
+
+def mset2_train(d, mask, bw):
+    """Training graph: memory matrix → regularised similarity inverse.
+
+    d: (m, n) scaled memory matrix (padded rows zero)
+    mask: (m,) 1.0 = real row, 0.0 = padding
+    bw: (1,) bandwidth γ·√n_real
+    returns (G,) with G = (S_masked + λI)⁻¹, (m, m)
+    """
+    m = d.shape[0]
+    s_raw = sim_pallas(d, d, bw)
+    outer = mask[:, None] * mask[None, :]
+    # Pin the diagonal to exactly 1 (Gram-trick f32 rounding would leave
+    # ~1e-3 noise there — same order as λ); padded rows become identity rows.
+    s = s_raw * outer
+    s = s - jnp.diag(jnp.diagonal(s)) + jnp.eye(m, dtype=s.dtype)
+    # Mixed-precision inverse (EXPERIMENTS.md §Perf): f32 bulk iterations +
+    # f64 refinement reach the same final residual as the all-f64 variant
+    # (the paper's f64 cuSOLVER analogue) at ≈half the matmul cost.
+    a = s + RIDGE_REL * jnp.eye(m, dtype=s.dtype)
+    g = ns_inverse_mixed(a).astype(jnp.float32)
+    return (g,)
+
+
+def mset2_surveil(d, g, mask, bw, x):
+    """Surveillance graph: estimate + residual for one observation chunk.
+
+    d: (m, n), g: (m, m), mask: (m,), bw: (1,), x: (B, n) scaled chunk
+    returns (xhat, resid) both (B, n)
+    """
+    k = sim_pallas(d, x, bw) * mask[:, None]
+    xhat, resid = estimate_pallas(g, k, d, x)
+    return xhat, resid
+
+
+def aakr_surveil(d, mask, bw, x):
+    """AAKR pluggable alternative: similarity-weighted memory average."""
+    k = sim_pallas(d, x, bw) * mask[:, None]
+    wsum = jnp.maximum(jnp.sum(k, axis=0, keepdims=True), 1e-12)
+    w = k / wsum
+    xhat = w.T @ d
+    return xhat, x - xhat
+
+
+# ---------------------------------------------------------------------------
+# Reference (pure-jnp) variants for pytest — identical maths, no Pallas.
+# ---------------------------------------------------------------------------
+
+
+def mset2_train_ref(d, mask, bw):
+    s = ref.masked_similarity(d, mask, bw)
+    a = s + RIDGE_REL * jnp.eye(d.shape[0], dtype=s.dtype)
+    return (ns_inverse(a),)
+
+
+def mset2_surveil_ref(d, g, mask, bw, x):
+    k = ref.sim_cross(d, x, bw) * mask[:, None]
+    return ref.estimate(g, k, d, x)
+
+
+def aakr_surveil_ref(d, mask, bw, x):
+    k = ref.sim_cross(d, x, bw) * mask[:, None]
+    return ref.aakr_estimate(k, d, x)

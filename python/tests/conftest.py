@@ -1,0 +1,6 @@
+import jax
+
+# Enable f64 before anything traces: the training graph upcasts its
+# Newton–Schulz inverse to f64 (model.mset2_train), and the oracles compare
+# against f64 numpy.
+jax.config.update("jax_enable_x64", True)

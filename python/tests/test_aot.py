@@ -1,0 +1,90 @@
+"""AOT pipeline: manifest emission, bucket filtering, HLO text sanity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def dev_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.emit(str(out), "dev")
+    return out
+
+
+def test_manifest_written_and_parses(dev_artifacts):
+    with open(dev_artifacts / "manifest.json") as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    assert man["gamma"] == 0.5
+    assert man["ridge_rel"] == 1e-3
+    assert man["chunk"] == 32
+    assert len(man["artifacts"]) > 0
+
+
+def test_all_listed_files_exist_and_are_hlo(dev_artifacts):
+    with open(dev_artifacts / "manifest.json") as f:
+        man = json.load(f)
+    for art in man["artifacts"]:
+        path = dev_artifacts / art["file"]
+        assert path.exists(), art["file"]
+        text = path.read_text()
+        assert "HloModule" in text, f"{art['file']} is not HLO text"
+        # 64-bit-id proto issue does not apply to text, but the text must
+        # contain an ENTRY computation the runtime can compile.
+        assert "ENTRY" in text
+
+
+def test_constraint_filters_buckets(dev_artifacts):
+    """No artifact may violate the paper's m ≥ 2n training constraint."""
+    with open(dev_artifacts / "manifest.json") as f:
+        man = json.load(f)
+    for art in man["artifacts"]:
+        assert art["m"] >= 2 * art["n"], art["id"]
+
+
+def test_graph_coverage(dev_artifacts):
+    """Every valid (n, m) bucket ships all three graphs."""
+    with open(dev_artifacts / "manifest.json") as f:
+        man = json.load(f)
+    combos = {}
+    for art in man["artifacts"]:
+        combos.setdefault((art["n"], art["m"]), set()).add(art["graph"])
+    for (n, m), graphs in combos.items():
+        assert graphs == {"mset2_train", "mset2_surveil", "aakr_surveil"}, (
+            n,
+            m,
+            graphs,
+        )
+    # dev grid: n ∈ {8,16} × m ∈ {32,64}, all satisfy m ≥ 2n
+    assert set(combos) == {(8, 32), (8, 64), (16, 32), (16, 64)}
+
+
+def test_io_shapes_recorded(dev_artifacts):
+    with open(dev_artifacts / "manifest.json") as f:
+        man = json.load(f)
+    chunk = man["chunk"]
+    for art in man["artifacts"]:
+        ins = {i["name"]: i["shape"] for i in art["inputs"]}
+        outs = {o["name"]: o["shape"] for o in art["outputs"]}
+        n, m = art["n"], art["m"]
+        assert ins["d"] == [m, n]
+        assert ins["mask"] == [m]
+        assert ins["bw"] == [1]
+        if art["graph"] == "mset2_train":
+            assert outs["g"] == [m, m]
+        else:
+            assert ins["x"] == [chunk, n]
+            assert outs["xhat"] == [chunk, n]
+            assert outs["resid"] == [chunk, n]
+
+
+def test_profiles_defined():
+    assert set(aot.PROFILES) == {"dev", "full"}
+    full = aot.PROFILES["full"]
+    # the full grid covers the scaled paper ranges (DESIGN.md §5)
+    assert max(full["memvecs"]) == 512
+    assert max(full["signals"]) == 128

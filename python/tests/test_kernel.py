@@ -1,0 +1,159 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (`ref.py`).
+
+This is the CORE correctness signal for the device hot path: hypothesis
+sweeps shapes (including non-divisible tile edge cases) and checks the
+Pallas similarity and fused-estimate kernels against `ref.py`, plus the
+mathematical properties the Rust side relies on (padding invariance,
+symmetry, boundedness).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.estimate import estimate_pallas
+from compile.kernels.similarity import sim_pallas, vmem_bytes
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def rand(shape, seed, dtype=jnp.float32):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(*shape), dtype)
+
+
+def bw_of(n):
+    return jnp.asarray([ref.bandwidth(n)], jnp.float32)
+
+
+# ------------------------------------------------------------- similarity --
+
+
+@given(
+    m=st.integers(1, 96),
+    b=st.integers(1, 48),
+    n=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sim_pallas_matches_ref_any_shape(m, b, n, seed):
+    d = rand((m, n), seed)
+    x = rand((b, n), seed + 1)
+    bw = bw_of(n)
+    got = sim_pallas(d, x, bw)
+    want = ref.sim_cross(d, x, bw)
+    # atol bound: for near-duplicate vectors the Gram-trick d² differs by
+    # O(eps_f32) between accumulation orders, and √ amplifies that to
+    # O(√eps) ≈ 3.5e-4 near d=0 — the analytically correct tolerance.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-4, rtol=1e-5)
+
+
+@pytest.mark.parametrize("m,b,n", [(32, 32, 8), (64, 32, 16), (128, 64, 8)])
+def test_sim_pallas_bucket_shapes(m, b, n):
+    """The exact bucket shapes the AOT pipeline ships."""
+    d = rand((m, n), 7)
+    x = rand((b, n), 8)
+    bw = bw_of(n)
+    got = sim_pallas(d, x, bw)
+    want = ref.sim_cross(d, x, bw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@given(tm=st.sampled_from([8, 16, 32, 128]), tb=st.sampled_from([8, 64, 128]))
+def test_sim_pallas_tiling_invariance(tm, tb):
+    """Result must not depend on the tile decomposition."""
+    d = rand((64, 8), 3)
+    x = rand((32, 8), 4)
+    bw = bw_of(8)
+    base = sim_pallas(d, x, bw)
+    tiled = sim_pallas(d, x, bw, tm=tm, tb=tb)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(tiled), atol=1e-6)
+
+
+def test_sim_self_similarity_is_one():
+    # Gram-trick rounding: ‖a‖²+‖a‖²−2aᵀa ≈ 1e-6 ≠ 0 in f32, so the diagonal
+    # carries ~√eps noise. Training pins it to exactly 1 downstream
+    # (ref.masked_similarity); here we only require the f32 bound.
+    d = rand((16, 4), 5)
+    k = sim_pallas(d, d, bw_of(4))
+    np.testing.assert_allclose(np.asarray(jnp.diag(k)), 1.0, atol=2e-3)
+
+
+def test_sim_bounded_unit_interval():
+    d = 10.0 * rand((32, 8), 6)
+    x = 10.0 * rand((16, 8), 7)
+    k = np.asarray(sim_pallas(d, x, bw_of(8)))
+    assert (k > 0).all() and (k <= 1.0 + 1e-7).all()
+
+
+def test_sim_padding_invariance():
+    """Zero-padding the signal dimension (bw fixed at n_real) must not
+    change similarities — the bucket-router contract."""
+    n_real, n_pad = 5, 16
+    d = rand((24, n_real), 9)
+    x = rand((12, n_real), 10)
+    dp = jnp.pad(d, ((0, 0), (0, n_pad - n_real)))
+    xp = jnp.pad(x, ((0, 0), (0, n_pad - n_real)))
+    bw = bw_of(n_real)
+    np.testing.assert_allclose(
+        np.asarray(sim_pallas(d, x, bw)),
+        np.asarray(sim_pallas(dp, xp, bw)),
+        atol=1e-6,
+    )
+
+
+def test_sim_dtype_is_f32():
+    k = sim_pallas(rand((8, 4), 1), rand((8, 4), 2), bw_of(4))
+    assert k.dtype == jnp.float32
+
+
+# --------------------------------------------------------------- estimate --
+
+
+@given(
+    m=st.integers(1, 64),
+    b=st.integers(1, 32),
+    n=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_estimate_pallas_matches_ref(m, b, n, seed):
+    g = rand((m, m), seed)
+    k = rand((m, b), seed + 1)
+    d = rand((m, n), seed + 2)
+    x = rand((b, n), seed + 3)
+    xhat, resid = estimate_pallas(g, k, d, x)
+    xhat_r, resid_r = ref.estimate(g, k, d, x)
+    np.testing.assert_allclose(np.asarray(xhat), np.asarray(xhat_r), atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(resid), np.asarray(resid_r), atol=2e-5, rtol=1e-4)
+
+
+def test_estimate_residual_identity():
+    """resid == x − xhat exactly (same kernel, same rounding)."""
+    m, b, n = 32, 16, 8
+    xhat, resid = estimate_pallas(
+        rand((m, m), 1), rand((m, b), 2), rand((m, n), 3), rand((b, n), 4)
+    )
+    x = rand((b, n), 4)
+    np.testing.assert_allclose(np.asarray(x - xhat), np.asarray(resid), atol=1e-7)
+
+
+def test_estimate_tiling_invariance():
+    m, b, n = 32, 64, 8
+    args = (rand((m, m), 5), rand((m, b), 6), rand((m, n), 7), rand((b, n), 8))
+    a1, r1 = estimate_pallas(*args, tb=64)
+    a2, r2 = estimate_pallas(*args, tb=16)
+    # f32 accumulation order differs across tilings; bound, don't bit-match.
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-4)
+
+
+# ------------------------------------------------------------- vmem model --
+
+
+def test_vmem_estimate_fits_tpu_budget():
+    """The shipped tile configuration must fit a 16 MiB VMEM budget with
+    double-buffering headroom (perf contract recorded in EXPERIMENTS.md)."""
+    for n in [8, 16, 32, 64, 128, 512]:
+        assert 2 * vmem_bytes(128, 128, n) < 16 * 2**20

@@ -1,0 +1,205 @@
+"""L2 correctness: the AOT-shipped graphs vs numpy oracles.
+
+Checks the full training graph (masked similarity + Newton–Schulz inverse)
+and both surveillance graphs, including the padding/masking contract the
+Rust bucket router depends on.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=15)
+settings.load_profile("ci")
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(scale * rng.randn(*shape), jnp.float32)
+
+
+def bw_of(n):
+    return jnp.asarray([ref.bandwidth(n)], jnp.float32)
+
+
+def full_mask(m):
+    return jnp.ones((m,), jnp.float32)
+
+
+# --------------------------------------------------------------- training --
+
+
+def test_train_inverse_residual_small():
+    m, n = 64, 8
+    d = rand((m, n), 0)
+    (g,) = model.mset2_train(d, full_mask(m), bw_of(n))
+    a = np.asarray(ref.masked_similarity(d, full_mask(m), bw_of(n)), np.float64)
+    a += ref.RIDGE_REL * np.eye(m)
+    resid = np.abs(np.asarray(g, np.float64) @ a - np.eye(m)).max()
+    # Limited by f32 similarity rounding amplified by cond(A), not by NS.
+    assert resid < 5e-3, f"inverse residual {resid}"
+
+
+def test_train_matches_numpy_inverse():
+    """G must match numpy's direct inverse of the same f32 similarity."""
+    m, n = 48, 6
+    d = rand((m, n), 1)
+    (g,) = model.mset2_train(d, full_mask(m), bw_of(n))
+    a = np.asarray(
+        ref.masked_similarity(d, full_mask(m), bw_of(n)), np.float64
+    ) + ref.RIDGE_REL * np.eye(m)
+    g_np = np.linalg.inv(a)
+    rel = np.abs(np.asarray(g, np.float64) - g_np).max() / np.abs(g_np).max()
+    assert rel < 1e-4, f"relative error vs numpy inverse {rel}"
+
+
+def test_ns_inverse_converges_on_worst_bucket():
+    """Conditioning worst case: near-duplicate memory vectors (λ_min → λ).
+
+    The check runs against the similarity matrix the graph *actually*
+    inverted (the Pallas f32 one): on near-duplicate vectors the f32
+    Gram-trick perturbs S by ~1e-3, and cond(A) ≈ 1/λ amplifies any ΔS —
+    an inherent f32-kernel property shared with the paper's CUDA version,
+    not an NS convergence failure (see DESIGN.md §4 numerics note).
+    """
+    from compile.kernels.similarity import sim_pallas
+
+    m, n = 96, 4
+    base = rand((m // 2, n), 2)
+    d = jnp.concatenate([base, base + 1e-4 * rand((m // 2, n), 3)], axis=0)
+    (g,) = model.mset2_train(d, full_mask(m), bw_of(n))
+    s = sim_pallas(d, d, bw_of(n))
+    s = s - jnp.diag(jnp.diagonal(s)) + jnp.eye(m, dtype=s.dtype)
+    a = np.asarray(s, np.float64) + ref.RIDGE_REL * np.eye(m)
+    resid = np.abs(np.asarray(g, np.float64) @ a - np.eye(m)).max()
+    assert resid < 1e-3, f"NS failed to converge: residual {resid}"
+
+
+@given(m=st.sampled_from([16, 32, 64]), n=st.sampled_from([4, 8]), seed=st.integers(0, 10**6))
+def test_train_g_symmetric(m, n, seed):
+    d = rand((m, n), seed)
+    (g,) = model.mset2_train(d, full_mask(m), bw_of(n))
+    g = np.asarray(g)
+    assert np.abs(g - g.T).max() < 1e-3 * np.abs(g).max()
+
+
+def test_train_padding_is_block_diagonal():
+    """Padded memory rows must not influence the real block of G."""
+    m_real, m_pad, n = 24, 40, 6
+    d_real = rand((m_real, n), 4)
+    (g_small,) = model.mset2_train(d_real, full_mask(m_real), bw_of(n))
+    d_pad = jnp.pad(d_real, ((0, m_pad - m_real), (0, 0)))
+    mask = jnp.concatenate(
+        [jnp.ones((m_real,)), jnp.zeros((m_pad - m_real,))]
+    ).astype(jnp.float32)
+    (g_pad,) = model.mset2_train(d_pad, mask, bw_of(n))
+    np.testing.assert_allclose(
+        np.asarray(g_pad)[:m_real, :m_real], np.asarray(g_small), atol=1e-4
+    )
+    # off-diagonal blocks are exactly zero
+    off = np.abs(np.asarray(g_pad)[:m_real, m_real:]).max()
+    assert off < 1e-6, f"padding leaked into G: {off}"
+
+
+# ------------------------------------------------------------ surveillance --
+
+
+def test_surveil_matches_ref_graph():
+    m, n, b = 64, 8, 32
+    d = rand((m, n), 5)
+    (g,) = model.mset2_train(d, full_mask(m), bw_of(n))
+    x = rand((b, n), 6)
+    xh, r = model.mset2_surveil(d, g, full_mask(m), bw_of(n), x)
+    xh_r, r_r = model.mset2_surveil_ref(d, g, full_mask(m), bw_of(n), x)
+    np.testing.assert_allclose(np.asarray(xh), np.asarray(xh_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r_r), atol=1e-5)
+
+
+def test_surveil_memory_vectors_reconstructed():
+    """Observations that are memory vectors reconstruct near-exactly."""
+    m, n = 48, 6
+    d = rand((m, n), 7)
+    (g,) = model.mset2_train(d, full_mask(m), bw_of(n))
+    xh, r = model.mset2_surveil(d, g, full_mask(m), bw_of(n), d[:16])
+    assert np.abs(np.asarray(r)).max() < 0.05
+
+
+def test_surveil_padding_full_contract():
+    """Pad n and m simultaneously: real outputs must match the unpadded
+    graph — the exact contract runtime::router relies on."""
+    m_r, m_p, n_r, n_p, b = 20, 32, 5, 8, 12
+    d = rand((m_r, n_r), 8)
+    x = rand((b, n_r), 9)
+    bw = bw_of(n_r)  # bandwidth stays at n_real
+    (g,) = model.mset2_train(d, full_mask(m_r), bw)
+    xh_small, r_small = model.mset2_surveil(d, g, full_mask(m_r), bw, x)
+
+    dp = jnp.pad(d, ((0, m_p - m_r), (0, n_p - n_r)))
+    xp = jnp.pad(x, ((0, 0), (0, n_p - n_r)))
+    mask = jnp.concatenate([jnp.ones((m_r,)), jnp.zeros((m_p - m_r,))]).astype(
+        jnp.float32
+    )
+    (gp,) = model.mset2_train(dp, mask, bw)
+    xh_pad, r_pad = model.mset2_surveil(dp, gp, mask, bw, xp)
+    np.testing.assert_allclose(
+        np.asarray(xh_pad)[:, :n_r], np.asarray(xh_small), atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(r_pad)[:, :n_r], np.asarray(r_small), atol=1e-4
+    )
+
+
+def test_surveil_healthy_residual_smaller_than_shifted():
+    m, n, b = 64, 8, 32
+    rng = np.random.RandomState(10)
+    base = rng.randn(400, n).astype(np.float32)
+    d = jnp.asarray(base[:m])
+    (g,) = model.mset2_train(d, full_mask(m), bw_of(n))
+    healthy = jnp.asarray(base[m : m + b])
+    shifted = healthy + 4.0
+    _, r_h = model.mset2_surveil(d, g, full_mask(m), bw_of(n), healthy)
+    _, r_s = model.mset2_surveil(d, g, full_mask(m), bw_of(n), shifted)
+    assert np.abs(np.asarray(r_s)).mean() > 2.0 * np.abs(np.asarray(r_h)).mean()
+
+
+# ------------------------------------------------------------------- AAKR --
+
+
+def test_aakr_matches_ref():
+    m, n, b = 32, 8, 16
+    d = rand((m, n), 11)
+    x = rand((b, n), 12)
+    xh, r = model.aakr_surveil(d, full_mask(m), bw_of(n), x)
+    xh_r, r_r = model.aakr_surveil_ref(d, full_mask(m), bw_of(n), x)
+    np.testing.assert_allclose(np.asarray(xh), np.asarray(xh_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r_r), atol=1e-5)
+
+
+def test_aakr_estimate_in_memory_hull():
+    """AAKR output is a convex combination of memory vectors."""
+    m, n, b = 24, 4, 8
+    d = rand((m, n), 13)
+    x = rand((b, n), 14)
+    xh, _ = model.aakr_surveil(d, full_mask(m), bw_of(n), x)
+    lo = np.asarray(d).min(axis=0) - 1e-5
+    hi = np.asarray(d).max(axis=0) + 1e-5
+    xh = np.asarray(xh)
+    assert (xh >= lo).all() and (xh <= hi).all()
+
+
+def test_aakr_padding_contract():
+    m_r, m_p, n = 16, 32, 4
+    d = rand((m_r, n), 15)
+    x = rand((8, n), 16)
+    bw = bw_of(n)
+    xh_small, _ = model.aakr_surveil(d, full_mask(m_r), bw, x)
+    dp = jnp.pad(d, ((0, m_p - m_r), (0, 0)))
+    mask = jnp.concatenate([jnp.ones((m_r,)), jnp.zeros((m_p - m_r,))]).astype(
+        jnp.float32
+    )
+    xh_pad, _ = model.aakr_surveil(dp, mask, bw, x)
+    np.testing.assert_allclose(np.asarray(xh_pad), np.asarray(xh_small), atol=1e-5)

@@ -1,0 +1,79 @@
+"""Newton–Schulz in-graph inverse: convergence envelope tests.
+
+The training graph replaces cuSOLVER's eigendecomposition with a
+matmul-only Newton–Schulz iteration (DESIGN.md §7). These tests pin down
+the convergence guarantee the shipped NS_ITERS relies on, across the full
+conditioning range the regularisation admits (λ_min ≥ RIDGE_REL = 1e-3).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=10)
+settings.load_profile("ci")
+
+
+def spd_with_condition(m, cond, seed):
+    """Random SPD matrix with prescribed condition number."""
+    rng = np.random.RandomState(seed)
+    q, _ = np.linalg.qr(rng.randn(m, m))
+    w = np.logspace(0, -np.log10(cond), m)
+    return jnp.asarray(q @ np.diag(w) @ q.T, jnp.float64)
+
+
+@given(
+    m=st.sampled_from([8, 32, 64]),
+    log_cond=st.integers(0, 5),
+    seed=st.integers(0, 10**6),
+)
+def test_ns_converges_across_conditioning(m, log_cond, seed):
+    a = spd_with_condition(m, 10.0**log_cond, seed)
+    x = model.ns_inverse(a)
+    resid = np.abs(np.asarray(x @ a) - np.eye(m)).max()
+    assert resid < 1e-6, f"cond=1e{log_cond}: residual {resid}"
+
+
+def test_ns_worst_case_similarity_conditioning():
+    """λ_min = λ = 1e-3, λ_max ≈ m — the worst case the training graph can
+    produce (m up to 512 in the full profile)."""
+    m = 512
+    a = spd_with_condition(m, m / ref.RIDGE_REL, 0)
+    # rescale so λ_max ≈ m like a similarity matrix row-sum bound
+    a = a * m
+    x = model.ns_inverse(a)
+    resid = np.abs(np.asarray(x @ a) - np.eye(m)).max()
+    assert resid < 1e-5, f"residual {resid}"
+
+
+def test_ns_identity_is_fixed_point():
+    eye = jnp.eye(16, dtype=jnp.float64)
+    x = model.ns_inverse(eye)
+    assert np.abs(np.asarray(x) - np.eye(16)).max() < 1e-12
+
+
+def test_ns_iters_budget_not_excessive():
+    """30 iterations must be enough AND 20 must not be (for the worst
+    case) — documents why NS_ITERS is what it is."""
+    m = 256
+    a = spd_with_condition(m, m / ref.RIDGE_REL, 3) * m
+    ok = model.ns_inverse(a, iters=30)
+    assert np.abs(np.asarray(ok @ a) - np.eye(m)).max() < 1e-5
+    short = model.ns_inverse(a, iters=12)
+    assert np.abs(np.asarray(short @ a) - np.eye(m)).max() > 1e-5, (
+        "12 iterations should NOT converge on the worst case — if it does, "
+        "NS_ITERS can be lowered (perf win); update ref.NS_ITERS"
+    )
+
+
+@pytest.mark.parametrize("m", [16, 64])
+def test_ns_matches_numpy_inverse(m):
+    a = spd_with_condition(m, 1e3, 7)
+    x = np.asarray(model.ns_inverse(a))
+    want = np.linalg.inv(np.asarray(a))
+    rel = np.abs(x - want).max() / np.abs(want).max()
+    assert rel < 1e-9, f"rel {rel}"

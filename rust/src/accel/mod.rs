@@ -1,0 +1,324 @@
+//! GPU-acceleration model: reproduces the paper's **speedup factor**
+//! evaluation (Figs. 6–8) without physical GPUs.
+//!
+//! The paper benchmarks MSET2 on Intel Xeon Platinum vs NVIDIA Tesla V100
+//! and reports speedup factors of 200×–1500× (training) and up to
+//! 5000×–9000× (surveillance). This environment has no GPU (repro band 0),
+//! so per DESIGN.md §5 we substitute an **analytic roofline model**:
+//!
+//! - each MSET2 phase is decomposed into routines (similarity GEMM,
+//!   eigendecomposition/inverse, element-wise epilogues) with exact FLOP
+//!   and byte counts — the same decomposition as paper Fig. 3;
+//! - GPU time per routine = launch overhead + flops / attainable, where
+//!   attainable = min(peak·util, AI·bandwidth) is the classic roofline;
+//! - CPU reference time = flops / effective-FLOPs of the paper-era
+//!   single-socket reference implementation.
+//!
+//! The two free efficiency constants are **calibrated once against the
+//! paper's published anchors** (≈200× at the smallest training cell,
+//! ≈1500× at the largest; ≈5000× surveillance at 64 signals, ≈9000× at
+//! 1024) and then *held fixed* across the whole grid — the figures are
+//! reproduced by the model's structure, not per-cell fitting. The measured
+//! local CPU cost can substitute for the analytic CPU term via
+//! [`calibrate_cpu_eff`] (used by the ablation bench).
+
+/// Routine classes with distinct attainable-efficiency behaviour.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutineClass {
+    /// Dense matmul-like (similarity Gram term, weight solve, estimate).
+    Gemm,
+    /// Eigendecomposition / iterative inverse (cuSOLVER-like, low util).
+    Solver,
+    /// Element-wise epilogue (bandwidth bound).
+    Elementwise,
+}
+
+/// One kernel in the decomposition.
+#[derive(Clone, Copy, Debug)]
+pub struct Routine {
+    pub class: RoutineClass,
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+/// GPU device model (defaults = Tesla V100 SXM2, per the paper).
+#[derive(Clone, Copy, Debug)]
+pub struct GpuSpec {
+    /// Peak f32 throughput (FLOP/s).
+    pub peak_flops: f64,
+    /// HBM bandwidth (B/s).
+    pub mem_bw: f64,
+    /// Per-kernel launch overhead (s).
+    pub launch_s: f64,
+    /// Utilisation of peak for GEMM-class kernels as a function of the
+    /// signal count (deeper contractions feed the tensor units better);
+    /// `util = min(gemm_util_log2 · log2(n), gemm_util_max)`.
+    pub gemm_util_log2: f64,
+    pub gemm_util_max: f64,
+    /// Utilisation of peak for solver-class kernels (cuSOLVER eigh).
+    pub solver_util: f64,
+}
+
+impl GpuSpec {
+    pub fn v100() -> GpuSpec {
+        GpuSpec {
+            peak_flops: 15.7e12,
+            mem_bw: 900e9,
+            launch_s: 10e-6,
+            gemm_util_log2: 0.085,
+            gemm_util_max: 0.92,
+            solver_util: 0.15,
+        }
+    }
+
+    /// Roofline-attainable throughput for a routine at signal count `n`.
+    pub fn attainable(&self, r: &Routine, n: usize) -> f64 {
+        let ai = r.flops / r.bytes.max(1.0);
+        let util = match r.class {
+            RoutineClass::Gemm => {
+                (self.gemm_util_log2 * (n.max(2) as f64).log2()).min(self.gemm_util_max)
+            }
+            RoutineClass::Solver => self.solver_util,
+            RoutineClass::Elementwise => 1.0,
+        };
+        (self.peak_flops * util).min(ai * self.mem_bw)
+    }
+
+    /// Time to run a set of routines, `launches` kernel launches total.
+    pub fn time(&self, routines: &[Routine], launches: usize, n: usize) -> f64 {
+        let compute: f64 = routines
+            .iter()
+            .map(|r| r.flops / self.attainable(r, n))
+            .sum();
+        compute + launches as f64 * self.launch_s
+    }
+}
+
+/// Paper-era CPU reference (single-socket Xeon Platinum running the vendor
+/// MSET implementation). Effective FLOP/s differ per phase: the training
+/// path is LAPACK-blocked (cache-friendly); the streaming path processes
+/// observation vectors as they arrive.
+#[derive(Clone, Copy, Debug)]
+pub struct CpuRef {
+    pub train_eff_flops: f64,
+    pub surveil_eff_flops: f64,
+}
+
+impl CpuRef {
+    pub fn xeon_platinum() -> CpuRef {
+        CpuRef {
+            train_eff_flops: 2.0e9,
+            surveil_eff_flops: 1.5e9,
+        }
+    }
+}
+
+// ------------------------------------------------------------ decomposition
+
+/// FLOP/byte decomposition of MSET2 **training** at (n signals, m memvecs).
+pub fn train_routines(n: usize, m: usize) -> Vec<Routine> {
+    let (nf, mf) = (n as f64, m as f64);
+    vec![
+        // similarity matrix: Gram GEMM  2·n·m²  + epilogue 6·m²
+        Routine {
+            class: RoutineClass::Gemm,
+            flops: 2.0 * nf * mf * mf,
+            bytes: (mf * nf + mf * mf) * 4.0,
+        },
+        Routine {
+            class: RoutineClass::Elementwise,
+            flops: 6.0 * mf * mf,
+            bytes: 2.0 * mf * mf * 4.0,
+        },
+        // regularised inverse via eigendecomposition (paper: cuSOLVER):
+        // reduction + QR iteration + back-transform ≈ 9·m³, plus the
+        // reconstruction V·diag·Vᵀ ≈ 2·m³.
+        Routine {
+            class: RoutineClass::Solver,
+            flops: 11.0 * mf * mf * mf,
+            bytes: 10.0 * mf * mf * 4.0,
+        },
+    ]
+}
+
+/// Kernel launches in one training run (similarity, epilogue, solver).
+pub const TRAIN_LAUNCHES: usize = 3;
+
+/// FLOP/byte decomposition of **surveillance** of `n_obs` observations in
+/// device chunks of `chunk` (weights + estimate per chunk).
+pub fn surveil_routines(n: usize, m: usize, n_obs: usize, chunk: usize) -> Vec<Routine> {
+    let (nf, mf, of) = (n as f64, m as f64, n_obs as f64);
+    let chunks = n_obs.div_ceil(chunk.max(1)) as f64;
+    vec![
+        // similarity of each observation against D
+        Routine {
+            class: RoutineClass::Gemm,
+            flops: 2.0 * nf * mf * of,
+            bytes: (chunks * mf * nf + of * (nf + mf)) * 4.0,
+        },
+        Routine {
+            class: RoutineClass::Elementwise,
+            flops: 6.0 * mf * of,
+            bytes: 2.0 * mf * of * 4.0,
+        },
+        // weight solve G·K re-reads G every chunk
+        Routine {
+            class: RoutineClass::Gemm,
+            flops: 2.0 * mf * mf * of,
+            bytes: (chunks * mf * mf + 2.0 * of * mf) * 4.0,
+        },
+        // estimate + residual
+        Routine {
+            class: RoutineClass::Gemm,
+            flops: 2.0 * mf * nf * of + 2.0 * nf * of,
+            bytes: (chunks * mf * nf + 3.0 * of * nf) * 4.0,
+        },
+    ]
+}
+
+/// Kernel launches for surveillance (3 kernels per device chunk).
+pub fn surveil_launches(n_obs: usize, chunk: usize) -> usize {
+    3 * n_obs.div_ceil(chunk.max(1))
+}
+
+/// GPU observation-chunk size (device batch; V100 has HBM for large ones).
+pub const GPU_CHUNK: usize = 4096;
+
+// ----------------------------------------------------------------- speedup
+
+/// Total FLOPs of a routine set.
+pub fn total_flops(routines: &[Routine]) -> f64 {
+    routines.iter().map(|r| r.flops).sum()
+}
+
+/// Training speedup factor (paper Fig. 6) for a (n, m) cell.
+pub fn speedup_train(n: usize, m: usize, gpu: &GpuSpec, cpu: &CpuRef) -> f64 {
+    let routines = train_routines(n, m);
+    let t_cpu = total_flops(&routines) / cpu.train_eff_flops;
+    let t_gpu = gpu.time(&routines, TRAIN_LAUNCHES, n);
+    t_cpu / t_gpu
+}
+
+/// Surveillance speedup factor (paper Figs. 7–8) for (n, m, n_obs).
+pub fn speedup_surveil(n: usize, m: usize, n_obs: usize, gpu: &GpuSpec, cpu: &CpuRef) -> f64 {
+    let routines = surveil_routines(n, m, n_obs, GPU_CHUNK);
+    let t_cpu = total_flops(&routines) / cpu.surveil_eff_flops;
+    let t_gpu = gpu.time(&routines, surveil_launches(n_obs, GPU_CHUNK), n);
+    t_cpu / t_gpu
+}
+
+/// Fit an effective CPU FLOP rate from measured (flops, seconds) pairs —
+/// the median ratio. Lets benches anchor the CPU term to *this* testbed
+/// instead of the paper-era reference.
+pub fn calibrate_cpu_eff(measured: &[(f64, f64)]) -> f64 {
+    assert!(!measured.is_empty());
+    let mut ratios: Vec<f64> = measured
+        .iter()
+        .filter(|&&(_, s)| s > 0.0)
+        .map(|&(f, s)| f / s)
+        .collect();
+    ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ratios[ratios.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn models() -> (GpuSpec, CpuRef) {
+        (GpuSpec::v100(), CpuRef::xeon_platinum())
+    }
+
+    #[test]
+    fn train_speedup_matches_paper_anchors() {
+        let (gpu, cpu) = models();
+        // Fig. 6: "speedup factor starts from 200x and can reach up to
+        // 1500x" over n ∈ [2⁵, 2¹⁰], m ∈ [2⁷, 2¹³] with m ≥ 2n.
+        let lo = speedup_train(32, 128, &gpu, &cpu);
+        let hi = speedup_train(1024, 8192, &gpu, &cpu);
+        assert!((100.0..800.0).contains(&lo), "smallest-cell speedup {lo}");
+        assert!((900.0..2500.0).contains(&hi), "largest-cell speedup {hi}");
+        assert!(hi > 2.0 * lo, "speedup must grow across the grid");
+    }
+
+    #[test]
+    fn surveil_speedup_matches_paper_anchors() {
+        let (gpu, cpu) = models();
+        // Fig. 7: 64 signals, "can exceed 5000x".
+        let s64 = speedup_surveil(64, 8192, 1 << 20, &gpu, &cpu);
+        assert!((3500.0..8000.0).contains(&s64), "64-signal speedup {s64}");
+        // Fig. 8: 1024 signals, "can exceed 9000x".
+        let s1024 = speedup_surveil(1024, 8192, 1 << 20, &gpu, &cpu);
+        assert!(s1024 > 8000.0, "1024-signal speedup {s1024}");
+        assert!(s1024 > s64, "speedup grows with signal count");
+    }
+
+    #[test]
+    fn surveil_speedup_grows_with_n_obs_then_saturates() {
+        let (gpu, cpu) = models();
+        let mut prev = 0.0;
+        let mut vals = Vec::new();
+        for k in [8, 12, 16, 20, 24] {
+            let s = speedup_surveil(64, 1024, 1 << k, &gpu, &cpu);
+            assert!(s >= prev * 0.999, "non-monotone at 2^{k}: {s} < {prev}");
+            prev = s;
+            vals.push(s);
+        }
+        // saturation: the last doubling gains little
+        let gain_last = vals[4] / vals[3];
+        let gain_first = vals[1] / vals[0];
+        assert!(gain_first > gain_last, "no saturation: {vals:?}");
+    }
+
+    #[test]
+    fn launch_overhead_dominates_tiny_workloads() {
+        let (gpu, cpu) = models();
+        // A single observation is overhead-bound: speedup far below peak.
+        let tiny = speedup_surveil(8, 32, 1, &gpu, &cpu);
+        let big = speedup_surveil(8, 32, 1 << 20, &gpu, &cpu);
+        assert!(tiny < big / 10.0, "tiny {tiny} vs big {big}");
+    }
+
+    #[test]
+    fn roofline_bandwidth_bound_for_elementwise() {
+        let gpu = GpuSpec::v100();
+        let r = Routine {
+            class: RoutineClass::Elementwise,
+            flops: 1e9,
+            bytes: 4e9, // AI = 0.25 → bw-bound
+        };
+        let att = gpu.attainable(&r, 64);
+        assert!((att - 0.25 * gpu.mem_bw).abs() / att < 1e-9);
+    }
+
+    #[test]
+    fn flop_counts_match_plugin_model() {
+        // accel's decomposition must agree (to leading order) with
+        // models::MsetPlugin's flop model used for scoping.
+        use crate::models::{MsetPlugin, PrognosticModel};
+        let p = MsetPlugin::default();
+        for (n, m) in [(16, 64), (64, 512)] {
+            let a = total_flops(&train_routines(n, m));
+            let b = p.train_flops(n, m);
+            let ratio = a / b;
+            assert!((0.5..2.0).contains(&ratio), "train flops ratio {ratio}");
+            let a = total_flops(&surveil_routines(n, m, 1000, GPU_CHUNK));
+            let b = 1000.0 * p.surveil_flops_per_obs(n, m);
+            let ratio = a / b;
+            assert!((0.5..2.0).contains(&ratio), "surveil flops ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn calibration_recovers_known_rate() {
+        let eff = 3.0e9;
+        let measured: Vec<(f64, f64)> = (1..10)
+            .map(|i| {
+                let f = i as f64 * 1e8;
+                (f, f / eff)
+            })
+            .collect();
+        let got = calibrate_cpu_eff(&measured);
+        assert!((got - eff).abs() / eff < 1e-9);
+    }
+}

@@ -1,0 +1,127 @@
+//! Shared support for the paper-figure bench binaries (`benches/fig*.rs`).
+//!
+//! Each bench regenerates one evaluation artefact of the paper on the
+//! scaled grid (DESIGN.md §5/§6). The helpers here measure single cells
+//! through the device path with fresh TPSS data per trial and write the
+//! combined CSV/ASCII/gnuplot outputs under `results/`.
+
+use crate::linalg::Mat;
+use crate::mset;
+use crate::runtime::mset::DeviceMset;
+use crate::runtime::{DeviceHandle, DeviceServer};
+use crate::tpss::{synthesize, TpssConfig};
+
+/// Start the device server, or exit cleanly with instructions when the
+/// artifacts are missing (bench binaries must not hard-fail a fresh tree).
+pub fn device_or_exit() -> DeviceServer {
+    let dir = crate::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!(
+            "bench: no artifacts at {} — run `make artifacts` (ARTIFACT_PROFILE=full for the full grids)",
+            dir.display()
+        );
+        std::process::exit(0);
+    }
+    DeviceServer::start(&dir).expect("device server")
+}
+
+/// Signal/memvec bucket axes actually available in the manifest (the bench
+/// grids adapt to the dev or full artifact profile automatically).
+pub fn available_axes(handle: &DeviceHandle) -> (Vec<usize>, Vec<usize>) {
+    let man = handle.manifest().expect("manifest");
+    let mut signals: Vec<usize> = man.artifacts.iter().map(|a| a.n).collect();
+    let mut memvecs: Vec<usize> = man.artifacts.iter().map(|a| a.m).collect();
+    signals.sort_unstable();
+    signals.dedup();
+    memvecs.sort_unstable();
+    memvecs.dedup();
+    (signals, memvecs)
+}
+
+/// Prepare a device session with a freshly synthesized, selected memory
+/// matrix for exact bucket shape (n, m).
+pub fn session_for(handle: &DeviceHandle, n: usize, m: usize, seed: u64) -> DeviceMset {
+    let ds = synthesize(&TpssConfig::sized(n, (2 * m).max(256)), seed);
+    let scaler = mset::Scaler::fit(&ds.data);
+    let xs = scaler.transform(&ds.data);
+    let idx = mset::select_memory(&xs, m);
+    let mut d = Mat::zeros(m, n);
+    for (r, &i) in idx.iter().enumerate() {
+        d.row_mut(r).copy_from_slice(xs.row(i));
+    }
+    DeviceMset::new(handle.clone(), &d).expect("session")
+}
+
+/// Measure device **training** cost for `trials` independent memory
+/// matrices selected from an `n_train`-observation window. Matches the
+/// coordinator's accounting: scaling + memory-vector selection (training
+/// work proportional to `n_train`) plus the training executable.
+pub fn measure_train(
+    handle: &DeviceHandle,
+    n: usize,
+    m: usize,
+    n_train: usize,
+    trials: usize,
+) -> Vec<f64> {
+    (0..trials)
+        .map(|t| {
+            let ds = synthesize(
+                &TpssConfig::sized(n, n_train.max(m)),
+                0xF16_4 + t as u64,
+            );
+            let t0 = std::time::Instant::now();
+            let scaler = mset::Scaler::fit(&ds.data);
+            let xs = scaler.transform(&ds.data);
+            let idx = mset::select_memory(&xs, m);
+            let mut d = Mat::zeros(m, n);
+            for (r, &i) in idx.iter().enumerate() {
+                d.row_mut(r).copy_from_slice(xs.row(i));
+            }
+            let prep = t0.elapsed().as_secs_f64();
+            let mut sess = DeviceMset::new(handle.clone(), &d).expect("session");
+            let (_, cost) = sess.train().expect("train");
+            prep + cost.exec.as_secs_f64()
+        })
+        .collect()
+}
+
+/// Measure device **surveillance** cost (pure exec seconds) of streaming
+/// `n_obs` observations, `trials` times.
+pub fn measure_surveil(
+    handle: &DeviceHandle,
+    n: usize,
+    m: usize,
+    n_obs: usize,
+    trials: usize,
+) -> Vec<f64> {
+    let mut sess = session_for(handle, n, m, 0xF16_5);
+    sess.train().expect("train");
+    (0..trials)
+        .map(|t| {
+            let probe = synthesize(&TpssConfig::sized(n, n_obs), 0xF16_6 + t as u64);
+            // scaling is data prep, not the measured streaming phase
+            let scaler = mset::Scaler::fit(&probe.data);
+            let xs = scaler.transform(&probe.data);
+            let (_, _, cost) = sess.surveil(&xs).expect("surveil");
+            cost.exec.as_secs_f64()
+        })
+        .collect()
+}
+
+/// `--quick` flag support for every bench binary (CI-friendly runtimes).
+pub fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("CS_BENCH_QUICK").is_ok()
+}
+
+/// Median of a sample (bench cells report medians).
+pub fn median(xs: &[f64]) -> f64 {
+    crate::util::Summary::of(xs).median
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn median_helper() {
+        assert_eq!(super::median(&[3.0, 1.0, 2.0]), 2.0);
+    }
+}

@@ -1,0 +1,218 @@
+//! Micro-benchmark framework (offline substitute for `criterion`).
+//!
+//! Bench targets in `benches/` are built with `harness = false` and drive
+//! this module. It provides warm-up, adaptive iteration-count selection,
+//! robust statistics, a text table and CSV export into `results/`.
+
+pub mod figs;
+
+use crate::util::Summary;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement run.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-iteration wall time.
+    pub stats: Summary,
+    /// Iterations actually timed.
+    pub iters: usize,
+    /// Optional work units per iteration (for throughput reporting).
+    pub units: Option<f64>,
+}
+
+impl Measurement {
+    /// Work units per second (if `units` was set).
+    pub fn throughput(&self) -> Option<f64> {
+        self.units.map(|u| u / self.stats.median)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bencher {
+    /// Warm-up time before measuring.
+    pub warmup: Duration,
+    /// Target total measuring time.
+    pub measure: Duration,
+    /// Minimum number of timed samples.
+    pub min_samples: usize,
+    /// Maximum number of timed samples.
+    pub max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            min_samples: 5,
+            max_samples: 200,
+        }
+    }
+}
+
+impl Bencher {
+    /// Fast profile for CI / tests.
+    pub fn quick() -> Bencher {
+        Bencher {
+            warmup: Duration::from_millis(10),
+            measure: Duration::from_millis(100),
+            min_samples: 3,
+            max_samples: 30,
+        }
+    }
+
+    /// Time `f`, one sample per call, until the time budget or sample cap
+    /// is reached. The closure's result is black-boxed.
+    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> Measurement {
+        // Warm-up.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let m0 = Instant::now();
+        while (m0.elapsed() < self.measure || samples.len() < self.min_samples)
+            && samples.len() < self.max_samples
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Measurement {
+            name: name.to_string(),
+            stats: Summary::of(&samples),
+            iters: samples.len(),
+            units: None,
+        }
+    }
+
+    /// Like [`Bencher::run`], attaching a work-unit count for throughput
+    /// reporting.
+    pub fn run_with_units<R>(
+        &self,
+        name: &str,
+        units: f64,
+        f: impl FnMut() -> R,
+    ) -> Measurement {
+        let mut m = self.run(name, f);
+        m.units = Some(units);
+        m
+    }
+}
+
+/// `std::hint::black_box` wrapper.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Render measurements as an aligned text table.
+pub fn table(measurements: &[Measurement]) -> String {
+    let mut out = String::new();
+    let name_w = measurements
+        .iter()
+        .map(|m| m.name.len())
+        .max()
+        .unwrap_or(4)
+        .max(4);
+    out.push_str(&format!(
+        "{:<name_w$}  {:>12} {:>12} {:>12} {:>8} {:>14}\n",
+        "name", "median", "mean", "p75", "samples", "throughput"
+    ));
+    for m in measurements {
+        let thr = m
+            .throughput()
+            .map(|t| format!("{:.3e}/s", t))
+            .unwrap_or_else(|| "-".into());
+        out.push_str(&format!(
+            "{:<name_w$}  {:>12} {:>12} {:>12} {:>8} {:>14}\n",
+            m.name,
+            fmt_secs(m.stats.median),
+            fmt_secs(m.stats.mean),
+            fmt_secs(m.stats.p75),
+            m.iters,
+            thr
+        ));
+    }
+    out
+}
+
+/// Human-readable seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Write a CSV of measurements under `results/`.
+pub fn write_csv(path: &str, measurements: &[Measurement]) -> std::io::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut s = String::from("name,median_s,mean_s,std_s,min_s,max_s,samples,units\n");
+    for m in measurements {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{}\n",
+            m.name,
+            m.stats.median,
+            m.stats.mean,
+            m.stats.std,
+            m.stats.min,
+            m.stats.max,
+            m.iters,
+            m.units.map(|u| u.to_string()).unwrap_or_default()
+        ));
+    }
+    std::fs::write(path, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_min_samples() {
+        let b = Bencher::quick();
+        let m = b.run("noop", || 1 + 1);
+        assert!(m.iters >= 3);
+        assert!(m.stats.median >= 0.0);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let b = Bencher::quick();
+        let m = b.run_with_units("spin", 1000.0, || {
+            std::hint::black_box((0..1000).sum::<u64>())
+        });
+        assert!(m.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn table_and_csv() {
+        let b = Bencher::quick();
+        let ms = vec![b.run("a", || ()), b.run_with_units("b", 10.0, || ())];
+        let t = table(&ms);
+        assert!(t.contains("a") && t.contains("b") && t.contains("median"));
+        let path = std::env::temp_dir().join("cs_bench_test.csv");
+        write_csv(path.to_str().unwrap(), &ms).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.lines().count() == 3);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(5e-9).contains("ns"));
+        assert!(fmt_secs(5e-6).contains("µs"));
+        assert!(fmt_secs(5e-3).contains("ms"));
+        assert!(fmt_secs(5.0).contains(" s"));
+    }
+}

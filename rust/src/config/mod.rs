@@ -1,0 +1,255 @@
+//! Configuration system for the launcher.
+//!
+//! JSON config files (own parser — no serde offline) with CLI-flag
+//! overrides, profile presets, and validation. Every `containerstress`
+//! subcommand builds its effective configuration through here, so runs are
+//! reproducible from a single file.
+
+use crate::coordinator::SweepSpec;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use std::path::PathBuf;
+
+/// Effective run configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub artifact_dir: PathBuf,
+    pub output_dir: PathBuf,
+    /// Execution backend: "device" | "native".
+    pub backend: String,
+    pub sweep: SweepSpec,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifact_dir: crate::runtime::default_artifact_dir(),
+            output_dir: PathBuf::from("results"),
+            backend: "device".into(),
+            sweep: SweepSpec::default(),
+        }
+    }
+}
+
+fn usize_list(j: &Json) -> Option<Vec<usize>> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+}
+
+impl Config {
+    /// Load from a JSON file (all keys optional; defaults fill the rest).
+    pub fn from_file(path: &str) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("config {path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("config {path}: {e}"))?;
+        let mut cfg = Config::default();
+        cfg.apply_json(&j);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply_json(&mut self, j: &Json) {
+        if let Some(v) = j.get("artifact_dir").and_then(Json::as_str) {
+            self.artifact_dir = PathBuf::from(v);
+        }
+        if let Some(v) = j.get("output_dir").and_then(Json::as_str) {
+            self.output_dir = PathBuf::from(v);
+        }
+        if let Some(v) = j.get("backend").and_then(Json::as_str) {
+            self.backend = v.to_string();
+        }
+        if let Some(s) = j.get("sweep") {
+            if let Some(v) = s.get("signals").and_then(usize_list) {
+                self.sweep.signals = v;
+            }
+            if let Some(v) = s.get("memvecs").and_then(usize_list) {
+                self.sweep.memvecs = v;
+            }
+            if let Some(v) = s.get("obs").and_then(usize_list) {
+                self.sweep.obs = v;
+            }
+            if let Some(v) = s.get("trials").and_then(Json::as_usize) {
+                self.sweep.trials = v;
+            }
+            if let Some(v) = s.get("seed").and_then(|x| x.as_f64()) {
+                self.sweep.seed = v as u64;
+            }
+            if let Some(v) = s.get("model").and_then(Json::as_str) {
+                self.sweep.model = v.to_string();
+            }
+            if let Some(v) = s.get("workers").and_then(Json::as_usize) {
+                self.sweep.workers = v;
+            }
+        }
+    }
+
+    /// Apply CLI overrides (highest precedence).
+    pub fn apply_args(&mut self, args: &Args) -> anyhow::Result<()> {
+        if let Some(v) = args.get("artifacts") {
+            self.artifact_dir = PathBuf::from(v);
+        }
+        if let Some(v) = args.get("out") {
+            self.output_dir = PathBuf::from(v);
+        }
+        if let Some(v) = args.get("backend") {
+            self.backend = v.to_string();
+        }
+        if let Some(v) = args.get("model") {
+            self.sweep.model = v.to_string();
+        }
+        self.sweep.signals = args.get_usize_list("signals", &self.sweep.signals)?;
+        self.sweep.memvecs = args.get_usize_list("memvecs", &self.sweep.memvecs)?;
+        self.sweep.obs = args.get_usize_list("obs", &self.sweep.obs)?;
+        self.sweep.trials = args.get_usize("trials", self.sweep.trials)?;
+        self.sweep.seed = args.get_u64("seed", self.sweep.seed)?;
+        self.sweep.workers = args.get_usize("workers", self.sweep.workers)?;
+        self.validate()
+    }
+
+    /// Build the effective config: optional `--config file` then flags.
+    pub fn resolve(args: &Args) -> anyhow::Result<Config> {
+        let mut cfg = match args.get("config") {
+            Some(path) => Config::from_file(path)?,
+            None => Config::default(),
+        };
+        cfg.apply_args(args)?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            matches!(self.backend.as_str(), "device" | "native"),
+            "backend must be 'device' or 'native', got '{}'",
+            self.backend
+        );
+        anyhow::ensure!(
+            matches!(
+                self.sweep.model.as_str(),
+                "mset2" | "aakr" | "ridge" | "mlp" | "svr"
+            ),
+            "model must be mset2|aakr|ridge|mlp|svr, got '{}'",
+            self.sweep.model
+        );
+        anyhow::ensure!(self.sweep.trials >= 1, "trials must be ≥ 1");
+        anyhow::ensure!(
+            !self.sweep.signals.is_empty()
+                && !self.sweep.memvecs.is_empty()
+                && !self.sweep.obs.is_empty(),
+            "sweep axes must be non-empty"
+        );
+        Ok(())
+    }
+
+    /// Serialise back to JSON (for run provenance in results/).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "artifact_dir",
+                Json::Str(self.artifact_dir.display().to_string()),
+            ),
+            (
+                "output_dir",
+                Json::Str(self.output_dir.display().to_string()),
+            ),
+            ("backend", Json::Str(self.backend.clone())),
+            (
+                "sweep",
+                Json::obj(vec![
+                    (
+                        "signals",
+                        Json::arr_f64(
+                            &self.sweep.signals.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+                        ),
+                    ),
+                    (
+                        "memvecs",
+                        Json::arr_f64(
+                            &self.sweep.memvecs.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+                        ),
+                    ),
+                    (
+                        "obs",
+                        Json::arr_f64(
+                            &self.sweep.obs.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+                        ),
+                    ),
+                    ("trials", Json::Num(self.sweep.trials as f64)),
+                    ("seed", Json::Num(self.sweep.seed as f64)),
+                    ("model", Json::Str(self.sweep.model.clone())),
+                    ("workers", Json::Num(self.sweep.workers as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut cfg = Config::default();
+        cfg.apply_args(&args(
+            "sweep --signals 4,8 --trials 5 --model aakr --backend native",
+        ))
+        .unwrap();
+        assert_eq!(cfg.sweep.signals, vec![4, 8]);
+        assert_eq!(cfg.sweep.trials, 5);
+        assert_eq!(cfg.sweep.model, "aakr");
+        assert_eq!(cfg.backend, "native");
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        let mut cfg = Config::default();
+        assert!(cfg.apply_args(&args("x --backend warp")).is_err());
+        let mut cfg = Config::default();
+        assert!(cfg.apply_args(&args("x --model svm")).is_err());
+        let mut cfg = Config::default();
+        assert!(cfg.apply_args(&args("x --trials 0")).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let cfg0 = {
+            let mut c = Config::default();
+            c.sweep.signals = vec![8, 16, 32];
+            c.sweep.model = "ridge".into();
+            c.backend = "native".into();
+            c
+        };
+        let path = std::env::temp_dir().join("cs_config_test.json");
+        std::fs::write(&path, cfg0.to_json().to_pretty()).unwrap();
+        let cfg1 = Config::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg1.sweep.signals, vec![8, 16, 32]);
+        assert_eq!(cfg1.sweep.model, "ridge");
+        assert_eq!(cfg1.backend, "native");
+    }
+
+    #[test]
+    fn resolve_config_plus_flags() {
+        let path = std::env::temp_dir().join("cs_config_test2.json");
+        std::fs::write(
+            &path,
+            r#"{"backend": "native", "sweep": {"trials": 7}}"#,
+        )
+        .unwrap();
+        let a = args(&format!(
+            "sweep --config {} --trials 9",
+            path.to_str().unwrap()
+        ));
+        let cfg = Config::resolve(&a).unwrap();
+        assert_eq!(cfg.backend, "native"); // from file
+        assert_eq!(cfg.sweep.trials, 9); // flag wins
+    }
+}

@@ -1,0 +1,213 @@
+//! Scoping-job queue: the leader/worker service front of the coordinator.
+//!
+//! Customers (or the CLI) submit [`ScopeJob`]s; a leader thread drains the
+//! queue in FIFO order and runs each sweep (each sweep fans its trials out
+//! over the shared thread pool). Results are retrievable by job id, so a
+//! long-running service can scope many customer use cases concurrently
+//! with bounded resources — the "autonomous" part of the paper's title.
+
+use super::sweep::{run_sweep, Backend, SweepResult, SweepSpec};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Job identifier.
+pub type JobId = u64;
+
+/// Job status as observed by clients.
+#[derive(Clone, Debug)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done(Arc<SweepResult>),
+    Failed(String),
+}
+
+/// One submitted scoping request.
+#[derive(Clone, Debug)]
+pub struct ScopeJob {
+    pub id: JobId,
+    pub spec: SweepSpec,
+}
+
+struct Shared {
+    statuses: Mutex<HashMap<JobId, JobStatus>>,
+    done: Condvar,
+}
+
+/// The scoping service (leader thread + job registry).
+pub struct ScopingService {
+    tx: Option<mpsc::Sender<ScopeJob>>,
+    shared: Arc<Shared>,
+    next_id: Mutex<JobId>,
+    leader: Option<std::thread::JoinHandle<()>>,
+    /// Max queued+running jobs before submits are rejected (backpressure).
+    queue_cap: usize,
+}
+
+impl ScopingService {
+    /// Start a service over the given execution backend. `queue_cap`
+    /// bounds the number of queued jobs (backpressure: submits fail fast
+    /// beyond it rather than accumulating unbounded work).
+    pub fn start(backend: Backend, queue_cap: usize) -> ScopingService {
+        let (tx, rx) = mpsc::channel::<ScopeJob>();
+        let shared = Arc::new(Shared {
+            statuses: Mutex::new(HashMap::new()),
+            done: Condvar::new(),
+        });
+        let shared2 = Arc::clone(&shared);
+        let leader = std::thread::Builder::new()
+            .name("scoping-leader".into())
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    {
+                        let mut st = shared2.statuses.lock().unwrap();
+                        st.insert(job.id, JobStatus::Running);
+                    }
+                    let result = run_sweep(&job.spec, backend.clone());
+                    let status = match result {
+                        Ok(r) => JobStatus::Done(Arc::new(r)),
+                        Err(e) => JobStatus::Failed(e.to_string()),
+                    };
+                    let mut st = shared2.statuses.lock().unwrap();
+                    st.insert(job.id, status);
+                    shared2.done.notify_all();
+                }
+            })
+            .expect("spawn leader");
+        ScopingService {
+            tx: Some(tx),
+            shared,
+            next_id: Mutex::new(1),
+            leader: Some(leader),
+            queue_cap: queue_cap.max(1),
+        }
+    }
+
+    /// Submit a sweep; returns its job id, or an error when the queue is
+    /// saturated (backpressure).
+    pub fn submit(&self, spec: SweepSpec) -> anyhow::Result<JobId> {
+        let queued = {
+            let st = self.shared.statuses.lock().unwrap();
+            st.values()
+                .filter(|s| matches!(s, JobStatus::Queued | JobStatus::Running))
+                .count()
+        };
+        let cap = self.queue_cap;
+        anyhow::ensure!(
+            queued < cap,
+            "scoping queue saturated ({queued}/{cap}); retry later"
+        );
+        let id = {
+            let mut n = self.next_id.lock().unwrap();
+            let id = *n;
+            *n += 1;
+            id
+        };
+        self.shared
+            .statuses
+            .lock()
+            .unwrap()
+            .insert(id, JobStatus::Queued);
+        self.tx
+            .as_ref()
+            .expect("service stopped")
+            .send(ScopeJob { id, spec })
+            .map_err(|_| anyhow::anyhow!("leader thread gone"))?;
+        Ok(id)
+    }
+
+    /// Non-blocking status check.
+    pub fn status(&self, id: JobId) -> Option<JobStatus> {
+        self.shared.statuses.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Block until a job completes (or fails).
+    pub fn wait(&self, id: JobId) -> anyhow::Result<Arc<SweepResult>> {
+        let mut st = self.shared.statuses.lock().unwrap();
+        loop {
+            match st.get(&id) {
+                None => anyhow::bail!("unknown job {id}"),
+                Some(JobStatus::Done(r)) => return Ok(Arc::clone(r)),
+                Some(JobStatus::Failed(e)) => anyhow::bail!("job {id} failed: {e}"),
+                Some(_) => {
+                    st = self.shared.done.wait(st).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, finish queued work.
+    pub fn shutdown(mut self) {
+        self.tx.take();
+        if let Some(l) = self.leader.take() {
+            let _ = l.join();
+        }
+    }
+}
+
+impl Drop for ScopingService {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(l) = self.leader.take() {
+            let _ = l.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> SweepSpec {
+        SweepSpec {
+            signals: vec![4],
+            memvecs: vec![8],
+            obs: vec![32],
+            trials: 1,
+            seed: 2,
+            model: "mset2".into(),
+            workers: 1,
+        }
+    }
+
+    #[test]
+    fn submit_and_wait_roundtrip() {
+        let svc = ScopingService::start(Backend::Native, 8);
+        let id = svc.submit(tiny_spec()).unwrap();
+        let res = svc.wait(id).unwrap();
+        assert_eq!(res.cells.len(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn jobs_processed_in_order_with_distinct_ids() {
+        let svc = ScopingService::start(Backend::Native, 8);
+        let a = svc.submit(tiny_spec()).unwrap();
+        let b = svc.submit(tiny_spec()).unwrap();
+        assert_ne!(a, b);
+        svc.wait(a).unwrap();
+        svc.wait(b).unwrap();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unknown_job_errors() {
+        let svc = ScopingService::start(Backend::Native, 8);
+        assert!(svc.wait(999).is_err());
+        assert!(svc.status(999).is_none());
+    }
+
+    #[test]
+    fn failed_job_reports_error() {
+        let svc = ScopingService::start(Backend::Native, 8);
+        let bad = SweepSpec {
+            model: "no-such-model".into(),
+            ..tiny_spec()
+        };
+        let id = svc.submit(bad).unwrap();
+        let err = svc.wait(id).unwrap_err().to_string();
+        assert!(err.contains("failed"), "{err}");
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,16 @@
+//! The **ContainerStress coordinator** — the paper's system contribution.
+//!
+//! A nested-loop Monte Carlo sweep (paper Fig. 1) over the three ML design
+//! parameters (signals × memory vectors × observations): every valid grid
+//! cell is measured `trials` times on freshly synthesized TPSS telemetry,
+//! through either the AOT/PJRT device path or the native comparator, and
+//! aggregated into compute-cost summaries that the [`crate::surface`]
+//! layer turns into the paper's 3-D response surfaces.
+//!
+//! - [`sweep`] — grid construction, trial execution, aggregation;
+//! - [`jobs`]  — the scoping-job queue (leader/worker service front).
+
+pub mod jobs;
+pub mod sweep;
+
+pub use sweep::{run_sweep, Backend, CellKey, CellMeasure, SweepResult, SweepSpec};

@@ -1,0 +1,339 @@
+//! **SPRT** — Wald's Sequential Probability Ratio Test over MSET residuals.
+//!
+//! The paper's headline claim for MSET2 is "very high sensitivity for
+//! proactive warnings of incipient anomalies, and ultra-low false-alarm and
+//! missed-alarm probabilities". In the MSET literature that property comes
+//! from pairing the estimator with SPRT fault detection on the residuals:
+//! for each signal we run four sequential tests (positive/negative mean
+//! shift, nominal/degraded variance is reduced here to the two mean tests,
+//! the classic configuration), with thresholds derived from the target
+//! false-alarm probability α and missed-alarm probability β.
+//!
+//! `h_hi = ln((1−β)/α)`, `h_lo = ln(β/(1−α))`; the log-likelihood ratio for
+//! a mean shift of `M·σ` under Gaussian residuals accumulates as
+//! `llr += M/σ·(r − M·σ/2)/σ` per sample. Crossing `h_hi` raises an alarm;
+//! crossing `h_lo` accepts health and resets.
+
+use crate::linalg::Mat;
+
+/// SPRT configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SprtConfig {
+    /// Target false-alarm probability.
+    pub alpha: f64,
+    /// Target missed-alarm probability.
+    pub beta: f64,
+    /// Hypothesised mean shift in units of residual σ.
+    pub shift: f64,
+    /// Hypothesised degraded-variance ratio (> 1) for the variance tests;
+    /// classic MSET runs four SPRTs per signal: mean ±shift·σ plus
+    /// nominal-vs-degraded variance. Set ≤ 1 to disable variance tests.
+    pub var_ratio: f64,
+}
+
+impl Default for SprtConfig {
+    fn default() -> Self {
+        SprtConfig {
+            alpha: 1e-4,
+            beta: 1e-4,
+            shift: 3.0,
+            var_ratio: 4.0,
+        }
+    }
+}
+
+/// Which sequential test fired.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlarmKind {
+    /// Positive mean shift.
+    MeanHigh,
+    /// Negative mean shift.
+    MeanLow,
+    /// Degraded (inflated) residual variance.
+    Variance,
+}
+
+/// One alarm event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Alarm {
+    pub signal: usize,
+    /// Observation index at which the SPRT crossed the alarm threshold.
+    pub at: usize,
+    /// Sign of the detected shift (+1 high, −1 low; 0 for variance).
+    pub direction: i8,
+    pub kind: AlarmKind,
+}
+
+/// Streaming SPRT detector over per-signal residuals.
+#[derive(Clone, Debug)]
+pub struct Sprt {
+    cfg: SprtConfig,
+    /// Residual σ per signal (estimated from healthy data).
+    sigma: Vec<f64>,
+    /// Log-likelihood accumulators, positive & negative mean test and
+    /// degraded-variance test per signal.
+    llr_pos: Vec<f64>,
+    llr_neg: Vec<f64>,
+    llr_var: Vec<f64>,
+    h_hi: f64,
+    h_lo: f64,
+    /// Samples consumed so far.
+    t: usize,
+}
+
+impl Sprt {
+    /// Build from healthy-window residuals (used to estimate σ per signal).
+    pub fn from_healthy(resid: &Mat, cfg: SprtConfig) -> Sprt {
+        let n = resid.cols;
+        let mut sigma = vec![0.0; n];
+        for j in 0..n {
+            let col = resid.col(j);
+            let mean = col.iter().sum::<f64>() / col.len() as f64;
+            let var =
+                col.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / col.len() as f64;
+            sigma[j] = var.sqrt().max(1e-9);
+        }
+        Sprt {
+            cfg,
+            h_hi: ((1.0 - cfg.beta) / cfg.alpha).ln(),
+            h_lo: (cfg.beta / (1.0 - cfg.alpha)).ln(),
+            llr_pos: vec![0.0; n],
+            llr_neg: vec![0.0; n],
+            llr_var: vec![0.0; n],
+            sigma,
+            t: 0,
+        }
+    }
+
+    pub fn n_signals(&self) -> usize {
+        self.sigma.len()
+    }
+
+    /// Consume one residual row; returns any alarms fired at this step.
+    /// Alarmed accumulators reset so detection can re-arm.
+    pub fn step(&mut self, resid_row: &[f64]) -> Vec<Alarm> {
+        assert_eq!(resid_row.len(), self.sigma.len());
+        let mut alarms = Vec::new();
+        let m = self.cfg.shift;
+        let v = self.cfg.var_ratio;
+        for (j, &r) in resid_row.iter().enumerate() {
+            let s = self.sigma[j];
+            let z = r / s;
+            // LLR increments for shift +Mσ and −Mσ
+            self.llr_pos[j] += m * (z - 0.5 * m);
+            self.llr_neg[j] += m * (-z - 0.5 * m);
+            // degraded-variance test: H1 σ² → V·σ²;
+            // llr += ½·[z²·(1−1/V) − ln V]
+            if v > 1.0 {
+                self.llr_var[j] += 0.5 * (z * z * (1.0 - 1.0 / v) - v.ln());
+            }
+            let tests = [
+                (&mut self.llr_pos[j], 1i8, AlarmKind::MeanHigh),
+                (&mut self.llr_neg[j], -1i8, AlarmKind::MeanLow),
+                (&mut self.llr_var[j], 0i8, AlarmKind::Variance),
+            ];
+            for (llr, dir, kind) in tests {
+                if *llr >= self.h_hi {
+                    alarms.push(Alarm {
+                        signal: j,
+                        at: self.t,
+                        direction: dir,
+                        kind,
+                    });
+                    *llr = 0.0;
+                } else if *llr <= self.h_lo {
+                    *llr = 0.0; // accept health, restart test
+                }
+            }
+        }
+        self.t += 1;
+        alarms
+    }
+
+    /// Run over a whole residual matrix, collecting alarms.
+    pub fn run(&mut self, resid: &Mat) -> Vec<Alarm> {
+        let mut out = Vec::new();
+        for r in 0..resid.rows {
+            out.extend(self.step(resid.row(r)));
+        }
+        out
+    }
+}
+
+/// Empirical false-/missed-alarm measurement on labelled data: returns
+/// `(false_alarm_rate, missed_alarm_rate, detection_latency)` where latency
+/// is observations from fault onset to first alarm on the faulted signal
+/// (`None` if never detected).
+///
+/// False alarms are counted **before fault onset only**: MSET estimates
+/// couple signals, so after onset a real fault legitimately perturbs the
+/// residuals of *other* signals too (secondary indications, not false
+/// alarms in the MSET literature's accounting).
+pub fn measure(
+    detector: &mut Sprt,
+    resid: &Mat,
+    fault_signal: Option<usize>,
+    fault_start: usize,
+) -> (f64, Option<f64>, Option<usize>) {
+    let alarms = detector.run(resid);
+    let horizon = if fault_signal.is_some() {
+        fault_start
+    } else {
+        resid.rows
+    };
+    let pre_fault = alarms.iter().filter(|a| a.at < horizon).count();
+    let n_healthy_samples = horizon * resid.cols;
+    let far = pre_fault as f64 / n_healthy_samples.max(1) as f64;
+    match fault_signal {
+        None => (far, None, None),
+        Some(f) => {
+            let first = alarms
+                .iter()
+                .filter(|a| a.signal == f && a.at >= fault_start)
+                .map(|a| a.at)
+                .min();
+            let missed = if first.is_none() { 1.0 } else { 0.0 };
+            (far, Some(missed), first.map(|t| t - fault_start))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gaussian_resid(rows: usize, cols: usize, seed: u64, sigma: f64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut m = Mat::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = sigma * rng.gauss();
+        }
+        m
+    }
+
+    #[test]
+    fn no_alarms_on_healthy_gaussian_residuals() {
+        let healthy = gaussian_resid(2000, 4, 1, 0.1);
+        let mut det = Sprt::from_healthy(&healthy, SprtConfig::default());
+        let probe = gaussian_resid(20_000, 4, 2, 0.1);
+        let alarms = det.run(&probe);
+        // α=1e-4 per test; 20k samples × 4 signals × 2 tests → expect ≲ a few
+        assert!(
+            alarms.len() <= 8,
+            "too many false alarms: {} on healthy data",
+            alarms.len()
+        );
+    }
+
+    #[test]
+    fn detects_mean_shift_quickly() {
+        let healthy = gaussian_resid(2000, 3, 3, 0.1);
+        let mut det = Sprt::from_healthy(&healthy, SprtConfig::default());
+        let mut probe = gaussian_resid(500, 3, 4, 0.1);
+        // inject +4σ shift on signal 1 from t=100
+        for r in 100..500 {
+            probe[(r, 1)] += 0.4;
+        }
+        let (far, missed, latency) = measure(&mut det, &probe, Some(1), 100);
+        assert_eq!(missed, Some(0.0), "shift missed");
+        let lat = latency.unwrap();
+        assert!(lat < 20, "latency {lat} too high for 4σ shift");
+        assert!(far < 1e-3, "false alarm rate {far}");
+    }
+
+    #[test]
+    fn detects_negative_shift_with_direction() {
+        let healthy = gaussian_resid(1000, 2, 5, 0.2);
+        let mut det = Sprt::from_healthy(&healthy, SprtConfig::default());
+        let mut probe = gaussian_resid(300, 2, 6, 0.2);
+        for r in 50..300 {
+            probe[(r, 0)] -= 1.0; // −5σ
+        }
+        let alarms = det.run(&probe);
+        let neg = alarms
+            .iter()
+            .find(|a| a.signal == 0 && a.direction == -1)
+            .expect("negative-direction alarm expected");
+        assert!(neg.at >= 50 && neg.at < 70);
+    }
+
+    #[test]
+    fn sub_threshold_drift_eventually_caught() {
+        // 1.5σ shift is below the 3σ design point but SPRT accumulates.
+        let healthy = gaussian_resid(2000, 1, 7, 1.0);
+        let mut det = Sprt::from_healthy(&healthy, SprtConfig::default());
+        let mut probe = gaussian_resid(3000, 1, 8, 1.0);
+        for r in 0..3000 {
+            probe[(r, 0)] += 1.5;
+        }
+        let alarms = det.run(&probe);
+        assert!(!alarms.is_empty(), "1.5σ sustained shift never detected");
+    }
+
+    #[test]
+    fn variance_test_catches_noise_inflation() {
+        // Pure variance degradation (no mean shift) must fire the variance
+        // SPRT — the failure mode the mean tests are blind to.
+        let healthy = gaussian_resid(2000, 2, 11, 0.1);
+        let mut det = Sprt::from_healthy(&healthy, SprtConfig::default());
+        let mut rng = Rng::new(12);
+        let mut probe = Mat::zeros(600, 2);
+        for r in 0..600 {
+            // signal 0: 3× σ after t=100 (9× variance); signal 1: healthy
+            let s0 = if r >= 100 { 0.3 } else { 0.1 };
+            probe[(r, 0)] = s0 * rng.gauss();
+            probe[(r, 1)] = 0.1 * rng.gauss();
+        }
+        let alarms = det.run(&probe);
+        let var_alarm = alarms
+            .iter()
+            .find(|a| a.signal == 0 && a.kind == AlarmKind::Variance)
+            .expect("variance degradation not detected");
+        assert!(var_alarm.at >= 100 && var_alarm.at < 200, "at={}", var_alarm.at);
+        // healthy signal stays quiet
+        assert!(alarms.iter().filter(|a| a.signal == 1).count() <= 1);
+    }
+
+    #[test]
+    fn variance_test_disabled_when_ratio_leq_one() {
+        let healthy = gaussian_resid(500, 1, 13, 1.0);
+        let mut det = Sprt::from_healthy(
+            &healthy,
+            SprtConfig {
+                var_ratio: 1.0,
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::new(14);
+        let mut probe = Mat::zeros(400, 1);
+        for r in 0..400 {
+            probe[(r, 0)] = 5.0 * rng.gauss(); // huge variance, zero mean
+        }
+        let alarms = det.run(&probe);
+        assert!(
+            alarms.iter().all(|a| a.kind != AlarmKind::Variance),
+            "variance test should be off"
+        );
+    }
+
+    #[test]
+    fn thresholds_respond_to_alpha() {
+        let healthy = gaussian_resid(500, 1, 9, 1.0);
+        let strict = Sprt::from_healthy(
+            &healthy,
+            SprtConfig {
+                alpha: 1e-8,
+                ..Default::default()
+            },
+        );
+        let lax = Sprt::from_healthy(
+            &healthy,
+            SprtConfig {
+                alpha: 1e-2,
+                ..Default::default()
+            },
+        );
+        assert!(strict.h_hi > lax.h_hi);
+    }
+}

@@ -1,0 +1,35 @@
+//! # ContainerStress
+//!
+//! Reproduction of *"ContainerStress: Autonomous Cloud-Node Scoping Framework
+//! for Big-Data ML Use Cases"* (Wang, Gross, Subramaniam; 2020) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the ContainerStress coordinator: nested-loop
+//!   Monte Carlo sweep engine, cloud shape catalog, GPU-speedup model,
+//!   response-surface methodology, and scoping recommender.
+//! - **L2** — MSET2 train/surveil compute graphs written in JAX
+//!   (`python/compile/model.py`), AOT-lowered to HLO text artifacts.
+//! - **L1** — the similarity-matrix hot-spot as a Pallas kernel
+//!   (`python/compile/kernels/similarity.py`), fused into the L2 graphs.
+//!
+//! The Rust binary loads the artifacts through the PJRT CPU client
+//! ([`runtime`]) and never invokes Python at run time.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index.
+
+pub mod accel;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod detect;
+pub mod linalg;
+pub mod metrics;
+pub mod models;
+pub mod mset;
+pub mod recommend;
+pub mod report;
+pub mod runtime;
+pub mod shapes;
+pub mod surface;
+pub mod tpss;
+pub mod util;

@@ -1,0 +1,270 @@
+//! Matrix decompositions: Cholesky, QR least squares, symmetric Jacobi
+//! eigendecomposition, and the regularised pseudo-inverse MSET training uses.
+
+use super::mat::Mat;
+
+/// Cholesky factor `L` with `L Lᵀ = A` for symmetric positive-definite `A`.
+/// Returns `None` if a pivot drops below `eps` (not SPD).
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols, "cholesky: square required");
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 1e-14 {
+                    return None;
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `A x = b` for SPD `A` via Cholesky.
+pub fn solve_spd(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    // forward: L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * y[k];
+        }
+        y[i] = s / l[(i, i)];
+    }
+    // back: Lᵀ x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    Some(x)
+}
+
+/// Least squares `min ‖A x − b‖₂` via normal equations with ridge fallback:
+/// used by the response-surface fitter where `A` is tall and well-scaled.
+pub fn lstsq(a: &Mat, b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows, b.len());
+    let at = a.transpose();
+    let mut ata = at.matmul(a);
+    let atb = at.matvec(b);
+    // Tikhonov jitter escalates until the system factors.
+    let trace: f64 = (0..ata.rows).map(|i| ata[(i, i)]).sum();
+    let mut jitter = 1e-12 * trace.max(1.0) / ata.rows as f64;
+    for _ in 0..12 {
+        if let Some(x) = solve_spd(&ata, &atb) {
+            return x;
+        }
+        for i in 0..ata.rows {
+            ata[(i, i)] += jitter;
+        }
+        jitter *= 10.0;
+    }
+    panic!("lstsq: normal equations failed to factor");
+}
+
+/// Symmetric eigendecomposition by cyclic Jacobi rotations.
+/// Returns `(eigenvalues, V)` with `A = V diag(w) Vᵀ`, eigenvalues ascending.
+pub fn eigh(a: &Mat) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows, a.cols, "eigh: square required");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius norm
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + m.norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p,q of m
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut w: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    // sort ascending, permute V columns to match
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| w[i].partial_cmp(&w[j]).unwrap());
+    let wv: Vec<f64> = order.iter().map(|&i| w[i]).collect();
+    let mut vs = Mat::zeros(n, n);
+    for (new_c, &old_c) in order.iter().enumerate() {
+        for r in 0..n {
+            vs[(r, new_c)] = v[(r, old_c)];
+        }
+    }
+    w = wv;
+    (w, vs)
+}
+
+/// Regularised symmetric pseudo-inverse: `(A + λI)⁻¹` computed through the
+/// eigendecomposition with an eigenvalue floor — the same construction the
+/// paper applies to the MSET similarity matrix via cuSOLVER.
+pub fn reg_pinv(a: &Mat, lambda: f64) -> Mat {
+    let (w, v) = eigh(a);
+    let n = a.rows;
+    let floor = 1e-12 * w.iter().fold(0.0f64, |m, &x| m.max(x.abs())).max(1e-12);
+    let mut out = Mat::zeros(n, n);
+    // out = V diag(1/(w+λ)) Vᵀ
+    for k in 0..n {
+        let d = 1.0 / (w[k] + lambda).max(floor);
+        for i in 0..n {
+            let vik = v[(i, k)] * d;
+            if vik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out[(i, j)] += vik * v[(j, k)];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Mat {
+        let mut b = Mat::zeros(n, n);
+        for v in b.data.iter_mut() {
+            *v = rng.gauss();
+        }
+        let bt = b.transpose();
+        let mut a = bt.matmul(&b);
+        for i in 0..n {
+            a[(i, i)] += n as f64; // well-conditioned
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(1);
+        let a = random_spd(8, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose());
+        assert!(a.max_abs_diff(&rec) < 1e-9, "diff={}", a.max_abs_diff(&rec));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![2.0, 1.0]]); // eig −1, 3
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_spd_roundtrip() {
+        let mut rng = Rng::new(2);
+        let a = random_spd(10, &mut rng);
+        let x_true: Vec<f64> = (0..10).map(|i| i as f64 - 4.5).collect();
+        let b = a.matvec(&x_true);
+        let x = solve_spd(&a, &b).unwrap();
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn lstsq_recovers_line() {
+        // y = 2 + 3x, overdetermined
+        let xs: Vec<f64> = (0..20).map(|i| i as f64 / 5.0).collect();
+        let a = Mat::from_rows(xs.iter().map(|&x| vec![1.0, x]).collect());
+        let b: Vec<f64> = xs.iter().map(|&x| 2.0 + 3.0 * x).collect();
+        let c = lstsq(&a, &b);
+        assert!((c[0] - 2.0).abs() < 1e-9 && (c[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eigh_reconstructs_and_orthogonal() {
+        let mut rng = Rng::new(3);
+        let a = random_spd(12, &mut rng);
+        let (w, v) = eigh(&a);
+        // ascending
+        for k in 1..w.len() {
+            assert!(w[k] >= w[k - 1]);
+        }
+        // V diag(w) Vᵀ == A
+        let mut d = Mat::zeros(12, 12);
+        for i in 0..12 {
+            d[(i, i)] = w[i];
+        }
+        let rec = v.matmul(&d).matmul(&v.transpose());
+        assert!(a.max_abs_diff(&rec) < 1e-8, "diff={}", a.max_abs_diff(&rec));
+        // VᵀV == I
+        let vtv = v.transpose().matmul(&v);
+        assert!(vtv.max_abs_diff(&Mat::eye(12)) < 1e-9);
+    }
+
+    #[test]
+    fn eigh_known_2x2() {
+        let a = Mat::from_rows(vec![vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let (w, _) = eigh(&a);
+        assert!((w[0] - 1.0).abs() < 1e-10 && (w[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn reg_pinv_inverts_well_conditioned() {
+        let mut rng = Rng::new(4);
+        let a = random_spd(6, &mut rng);
+        let inv = reg_pinv(&a, 0.0);
+        let eye = a.matmul(&inv);
+        assert!(eye.max_abs_diff(&Mat::eye(6)) < 1e-7);
+    }
+
+    #[test]
+    fn reg_pinv_handles_singular() {
+        // rank-1 matrix; with λ>0 result stays finite
+        let a = Mat::from_rows(vec![vec![1.0, 1.0], vec![1.0, 1.0]]);
+        let p = reg_pinv(&a, 0.1);
+        assert!(p.data.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,9 @@
+//! Small dense linear algebra substrate (no external BLAS available
+//! offline). Backs TPSS cross-correlation shaping, response-surface fitting
+//! and the native MSET2 oracle. The production hot path runs inside XLA.
+
+pub mod decomp;
+pub mod mat;
+
+pub use decomp::{cholesky, eigh, lstsq, reg_pinv, solve_spd};
+pub use mat::Mat;

@@ -1,0 +1,306 @@
+//! `containerstress` — launcher CLI for the ContainerStress framework.
+//!
+//! ```text
+//! containerstress sweep     run a Monte Carlo cost sweep, emit surfaces
+//! containerstress scope     sweep + fit surfaces + recommend cloud shapes
+//! containerstress speedup   emit the GPU speedup surfaces (Figs. 6–8)
+//! containerstress synth     synthesize TPSS telemetry to CSV
+//! containerstress detect    run MSET2+SPRT anomaly detection demo
+//! containerstress shapes    print the cloud shape catalog
+//! ```
+//!
+//! Flags: `--config file.json` plus per-key overrides (see `config`),
+//! `--backend device|native`, `--metrics` to dump the metrics registry.
+
+use containerstress::accel::{self, CpuRef, GpuSpec};
+use containerstress::config::Config;
+use containerstress::coordinator::{run_sweep, Backend};
+use containerstress::detect::{Sprt, SprtConfig};
+use containerstress::metrics::Registry;
+use containerstress::recommend::{recommend, LocalCalibration, Sla};
+use containerstress::report;
+use containerstress::runtime::DeviceServer;
+use containerstress::shapes::{self, Workload};
+use containerstress::surface::{ResponseSurface, SurfaceGrid};
+use containerstress::tpss::{synthesize, Fault, TpssConfig};
+use containerstress::util::cli::Args;
+use containerstress::util::logger;
+
+fn main() {
+    logger::init();
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    if args.flag("metrics") {
+        eprint!("{}", Registry::global().render());
+    }
+    std::process::exit(code);
+}
+
+fn make_backend(cfg: &Config) -> anyhow::Result<(Backend, Option<DeviceServer>)> {
+    match cfg.backend.as_str() {
+        "native" => Ok((Backend::Native, None)),
+        _ => {
+            let server = DeviceServer::start(&cfg.artifact_dir)?;
+            let handle = server.handle();
+            Ok((Backend::Device(handle), Some(server)))
+        }
+    }
+}
+
+fn dispatch(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand.as_deref() {
+        Some("sweep") => cmd_sweep(args),
+        Some("scope") => cmd_scope(args),
+        Some("speedup") => cmd_speedup(args),
+        Some("synth") => cmd_synth(args),
+        Some("detect") => cmd_detect(args),
+        Some("shapes") => cmd_shapes(),
+        Some("elastic") => cmd_elastic(args),
+        Some(other) => anyhow::bail!("unknown subcommand '{other}' (see --help)"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "containerstress — autonomous cloud-node scoping for big-data ML use cases\n\
+         \n\
+         subcommands:\n\
+           sweep    Monte Carlo compute-cost sweep over (signals × memvecs × obs)\n\
+           scope    sweep + response surfaces + cloud-shape recommendation\n\
+           speedup  GPU speedup-factor surfaces (paper Figs. 6-8)\n\
+           synth    synthesize TPSS telemetry to CSV\n\
+           detect   MSET2 + SPRT anomaly-detection demo\n\
+           shapes   print the cloud shape catalog\n\
+           elastic  pre-scoped vs autoscaled cost/violation simulation\n\
+         \n\
+         common flags: --config FILE --backend device|native --signals a,b,c\n\
+           --memvecs a,b,c --obs a,b,c --trials N --model mset2|aakr|ridge\n\
+           --out DIR --metrics"
+    );
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let cfg = Config::resolve(args)?;
+    let (backend, _server) = make_backend(&cfg)?;
+    let result = run_sweep(&cfg.sweep, backend)?;
+    report::write(&cfg.output_dir, "sweep.csv", &report::sweep_csv(&result))?;
+    report::write(
+        &cfg.output_dir,
+        "sweep_config.json",
+        &cfg.to_json().to_pretty(),
+    )?;
+    for phase in ["train", "surveil"] {
+        for &n in &cfg.sweep.signals {
+            let grid = result.panel(phase, n);
+            let ascii = report::emit_figure(
+                &cfg.output_dir,
+                &format!("{phase}_n{n}"),
+                &format!("MSET2 {phase} compute cost, {n} signals"),
+                &grid,
+                "cost_s",
+                false,
+            )?;
+            println!("{ascii}");
+        }
+        println!("{}", report::sensitivity_table(&result, phase)?);
+    }
+    println!("wrote results to {}", cfg.output_dir.display());
+    Ok(())
+}
+
+fn cmd_scope(args: &Args) -> anyhow::Result<()> {
+    let cfg = Config::resolve(args)?;
+    let (backend, _server) = make_backend(&cfg)?;
+    let result = run_sweep(&cfg.sweep, backend)?;
+    let train_surf = ResponseSurface::fit(&result.samples("train"))?;
+    let surveil_surf = ResponseSurface::fit(&result.samples("surveil"))?;
+    log::info!(
+        "surfaces fitted: train r²={:.4}, surveil r²={:.4}",
+        train_surf.r2,
+        surveil_surf.r2
+    );
+    let (ref_n, ref_m, ref_obs) = (
+        *cfg.sweep.signals.last().unwrap(),
+        *cfg.sweep.memvecs.last().unwrap(),
+        *cfg.sweep.obs.last().unwrap(),
+    );
+    let cal = LocalCalibration::from_surface(&surveil_surf, ref_n, ref_m, ref_obs);
+
+    let workload = Workload {
+        n_signals: args.get_usize("wl-signals", 20)?,
+        n_memvec: args.get_usize("wl-memvecs", 64)?,
+        obs_per_sec: args.get_f64("wl-rate", 1.0)?,
+        train_window: args.get_usize("wl-window", 4096)?,
+    };
+    let sla = Sla {
+        headroom: args.get_f64("sla-headroom", 2.0)?,
+        max_train_s: args.get_f64("sla-train", 3600.0)?,
+    };
+    let rec = recommend(&workload, &train_surf, &surveil_surf, cal, &sla);
+    println!("{}", rec.render());
+    report::write(&cfg.output_dir, "recommendation.txt", &rec.render())?;
+    Ok(())
+}
+
+fn cmd_speedup(args: &Args) -> anyhow::Result<()> {
+    let cfg = Config::resolve(args)?;
+    let gpu = GpuSpec::v100();
+    let cpu = CpuRef::xeon_platinum();
+    // Fig. 6: training speedup over (signals × memvecs), log–log, m ≥ 2n.
+    let signals: Vec<usize> = args.get_usize_list("signals", &[32, 64, 128, 256, 512, 1024])?;
+    let memvecs: Vec<usize> =
+        args.get_usize_list("memvecs", &[128, 256, 512, 1024, 2048, 4096, 8192])?;
+    let mut grid = SurfaceGrid::new(
+        "n_memvec",
+        "n_signals",
+        memvecs.iter().map(|&v| v as f64).collect(),
+        signals.iter().map(|&v| v as f64).collect(),
+    );
+    for (r, &m) in memvecs.iter().enumerate() {
+        for (c, &n) in signals.iter().enumerate() {
+            if m >= 2 * n {
+                grid.set(r, c, accel::speedup_train(n, m, &gpu, &cpu));
+            }
+        }
+    }
+    let ascii = report::emit_figure(
+        &cfg.output_dir,
+        "fig6_training_speedup",
+        "GPU training speedup factor (Fig. 6)",
+        &grid,
+        "speedup",
+        true,
+    )?;
+    println!("{ascii}");
+    Ok(())
+}
+
+fn cmd_synth(args: &Args) -> anyhow::Result<()> {
+    let cfg = TpssConfig {
+        n_signals: args.get_usize("signals", 8)?,
+        n_obs: args.get_usize("obs", 1024)?,
+        cross_corr: args.get_f64("rho", 0.4)?,
+        ar_coeff: args.get_f64("ar", 0.7)?,
+        skewness: args.get_f64("skew", 0.0)?,
+        kurtosis: args.get_f64("kurt", 3.0)?,
+        ..TpssConfig::default()
+    };
+    let ds = synthesize(&cfg, args.get_u64("seed", 1)?);
+    let mut out = String::new();
+    for r in 0..ds.data.rows {
+        let row: Vec<String> = ds.data.row(r).iter().map(|v| format!("{v:.6}")).collect();
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    let path = args.get_or("out", "results/telemetry.csv");
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, out)?;
+    println!(
+        "wrote {} × {} telemetry to {path}",
+        ds.data.rows, ds.data.cols
+    );
+    Ok(())
+}
+
+fn cmd_detect(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("signals", 8)?;
+    let cfg = TpssConfig::sized(n, 4096);
+    let train = synthesize(&cfg, 11);
+    let model = containerstress::mset::train(&train.data, args.get_usize("memvecs", 64)?)?;
+    // healthy window calibrates the detector
+    let healthy = synthesize(&cfg, 12);
+    let est_h = model.surveil(&healthy.data);
+    let mut det = Sprt::from_healthy(&est_h.resid, SprtConfig::default());
+    // faulted stream
+    let mut probe = synthesize(&cfg, 13);
+    let onset = containerstress::tpss::inject(
+        &mut probe,
+        2,
+        Fault::Drift { magnitude: 6.0 },
+        0.5,
+        14,
+    );
+    let est = model.surveil(&probe.data);
+    let alarms = det.run(&est.resid);
+    let first = alarms.iter().find(|a| a.signal == 2 && a.at >= onset);
+    println!(
+        "injected 6σ drift on signal 2 at t={onset}; {} alarms; first on-target at {:?}",
+        alarms.len(),
+        first.map(|a| a.at)
+    );
+    anyhow::ensure!(first.is_some(), "drift not detected");
+    println!(
+        "detection latency: {} observations",
+        first.unwrap().at - onset
+    );
+    Ok(())
+}
+
+fn cmd_elastic(args: &Args) -> anyhow::Result<()> {
+    use containerstress::shapes::elastic::{compare, ElasticPolicy, GrowthTrace};
+    let epochs = args.get_usize("epochs", 120)?;
+    let d0 = args.get_f64("demand0", 0.5)?;
+    let growth = args.get_f64("growth", 1.03)?;
+    let trace = GrowthTrace::exponential(d0, growth, epochs, 24.0);
+    let policy = ElasticPolicy {
+        scale_lag_epochs: args.get_usize("lag", 2)?,
+        migration_usd: args.get_f64("migration-usd", 5.0)?,
+        ..Default::default()
+    };
+    let (fixed, elastic) = compare(&trace, &policy);
+    println!(
+        "growth trace: {epochs} epochs × 24h, demand {d0:.2} → {:.2} core-eq ({growth}×/epoch)",
+        trace.demand.last().unwrap()
+    );
+    println!(
+        "pre-scoped ({}):   ${:>9.2}  violations {:>3}  migrations {}",
+        fixed.shape_trace[0], fixed.total_usd, fixed.violation_epochs, fixed.migrations
+    );
+    println!(
+        "elastic autoscale: ${:>9.2}  violations {:>3}  migrations {} (final shape {})",
+        elastic.total_usd,
+        elastic.violation_epochs,
+        elastic.migrations,
+        elastic.shape_trace.last().unwrap()
+    );
+    println!(
+        "→ {}",
+        if elastic.violation_epochs > 0 {
+            "elasticity is cheaper but 'not as smooth as cloud marketing teams might wish' (paper §I): SLA violations during scale-up lag"
+        } else {
+            "both strategies meet SLA; elastic is cheaper for slow growth"
+        }
+    );
+    Ok(())
+}
+
+fn cmd_shapes() -> anyhow::Result<()> {
+    println!(
+        "{:<18} {:>6} {:>8} {:>6} {:>10} {:>14}",
+        "shape", "cores", "mem_gb", "gpus", "$/hr", "eff GFLOP/s"
+    );
+    for s in shapes::catalog() {
+        println!(
+            "{:<18} {:>6} {:>8.0} {:>6} {:>10.4} {:>14.1}",
+            s.name,
+            s.cpu.cores,
+            s.mem_gb,
+            s.gpus,
+            s.usd_per_hour,
+            s.cpu_eff_flops() / 1e9
+        );
+    }
+    Ok(())
+}

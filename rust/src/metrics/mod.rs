@@ -1,0 +1,184 @@
+//! Runtime metrics: counters and timing histograms with text/JSON export.
+//!
+//! The coordinator and runtime record device calls, cache hits, trial
+//! counts and per-phase timings here; `containerstress … --metrics` dumps
+//! the registry at exit.
+
+use crate::util::json::Json;
+use crate::util::Summary;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Global-or-local metrics registry (thread-safe).
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    samples: Mutex<BTreeMap<String, Vec<f64>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Process-wide registry.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: once_cell::sync::Lazy<Registry> =
+            once_cell::sync::Lazy::new(Registry::new);
+        &GLOBAL
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, v: u64) {
+        *self
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += v;
+    }
+
+    /// Record a duration sample under `name`.
+    pub fn time(&self, name: &str, d: Duration) {
+        self.sample(name, d.as_secs_f64());
+    }
+
+    pub fn sample(&self, name: &str, v: f64) {
+        self.samples
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .push(v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    pub fn summary(&self, name: &str) -> Option<Summary> {
+        self.samples
+            .lock()
+            .unwrap()
+            .get(name)
+            .filter(|v| !v.is_empty())
+            .map(|v| Summary::of(v))
+    }
+
+    /// Human-readable dump.
+    pub fn render(&self) -> String {
+        let mut out = String::from("=== metrics ===\n");
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k}: {v}\n"));
+        }
+        for (k, v) in self.samples.lock().unwrap().iter() {
+            if v.is_empty() {
+                continue;
+            }
+            let s = Summary::of(v);
+            out.push_str(&format!(
+                "{k}: n={} median={:.3e}s mean={:.3e}s p75={:.3e}s\n",
+                s.n, s.median, s.mean, s.p75
+            ));
+        }
+        out
+    }
+
+    /// JSON export (counters + summaries).
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            counters.insert(k.clone(), Json::Num(*v as f64));
+        }
+        let mut samples = BTreeMap::new();
+        for (k, v) in self.samples.lock().unwrap().iter() {
+            if v.is_empty() {
+                continue;
+            }
+            let s = Summary::of(v);
+            samples.insert(
+                k.clone(),
+                Json::obj(vec![
+                    ("n", Json::Num(s.n as f64)),
+                    ("median", Json::Num(s.median)),
+                    ("mean", Json::Num(s.mean)),
+                    ("min", Json::Num(s.min)),
+                    ("max", Json::Num(s.max)),
+                ]),
+            );
+        }
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("timers", Json::Obj(samples)),
+        ])
+    }
+
+    /// Reset everything (tests).
+    pub fn clear(&self) {
+        self.counters.lock().unwrap().clear();
+        self.samples.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let r = Registry::new();
+        r.inc("a");
+        r.inc("a");
+        r.add("a", 3);
+        assert_eq!(r.counter("a"), 5);
+        assert_eq!(r.counter("missing"), 0);
+    }
+
+    #[test]
+    fn samples_summarise() {
+        let r = Registry::new();
+        for i in 1..=5 {
+            r.sample("lat", i as f64);
+        }
+        let s = r.summary("lat").unwrap();
+        assert_eq!(s.n, 5);
+        assert_eq!(s.median, 3.0);
+        assert!(r.summary("none").is_none());
+    }
+
+    #[test]
+    fn render_and_json() {
+        let r = Registry::new();
+        r.inc("calls");
+        r.time("t", Duration::from_millis(5));
+        let text = r.render();
+        assert!(text.contains("calls: 1"));
+        let j = r.to_json();
+        assert!(j.get("counters").unwrap().get("calls").is_some());
+        assert!(j.get("timers").unwrap().get("t").is_some());
+    }
+
+    #[test]
+    fn concurrent_increments() {
+        let r = Registry::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        r.inc("n");
+                    }
+                });
+            }
+        });
+        assert_eq!(r.counter("n"), 8000);
+    }
+}

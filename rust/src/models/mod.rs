@@ -1,0 +1,349 @@
+//! The **pluggable ML prognostic interface** (§II.B of the paper):
+//! "we have architected ContainerStress to support pluggable ML algorithms
+//! so that other conventional forms of ML services … will also be easily
+//! evaluated".
+//!
+//! [`PrognosticModel`] is that plug point. Three implementations ship:
+//!
+//! - [`MsetPlugin`] — the paper's primary technique (wraps [`crate::mset`]);
+//! - [`AakrPlugin`] — Auto-Associative Kernel Regression, the first
+//!   alternative the paper names;
+//! - [`RidgePlugin`] — per-signal linear ridge regression, a cheap linear
+//!   baseline that bounds the nonlinear methods from below.
+//!
+//! The sweep engine and the scoping recommender only see this trait, so a
+//! new algorithm is scoped across cloud shapes by implementing four methods.
+
+pub mod nn;
+pub mod svr;
+
+pub use nn::MlpPlugin;
+pub use svr::SvrPlugin;
+
+use crate::linalg::{solve_spd, Mat};
+use crate::mset::{self, Estimate, MsetModel, Scaler};
+
+/// A trainable prognostic estimator of sensor state.
+pub trait PrognosticModel: Send + Sync {
+    /// Short identifier used in reports and CSV output.
+    fn name(&self) -> &'static str;
+
+    /// Train on raw observations (rows = observations). `m` is the memory /
+    /// capacity parameter — memory vectors for kernel methods, ignored by
+    /// parametric ones.
+    fn fit(&mut self, x_train: &Mat, m: usize) -> anyhow::Result<()>;
+
+    /// Estimate a chunk of raw observations; returns scaled-unit estimates
+    /// and residuals.
+    fn estimate(&self, x: &Mat) -> Estimate;
+
+    /// Approximate training FLOP count for the accelerator model.
+    fn train_flops(&self, n: usize, m: usize) -> f64;
+
+    /// Approximate per-observation surveillance FLOP count.
+    fn surveil_flops_per_obs(&self, n: usize, m: usize) -> f64;
+}
+
+// ---------------------------------------------------------------- MSET2 ----
+
+/// MSET2 as a plug-in (delegates to [`crate::mset`]).
+#[derive(Default)]
+pub struct MsetPlugin {
+    model: Option<MsetModel>,
+}
+
+impl PrognosticModel for MsetPlugin {
+    fn name(&self) -> &'static str {
+        "mset2"
+    }
+
+    fn fit(&mut self, x_train: &Mat, m: usize) -> anyhow::Result<()> {
+        self.model = Some(mset::train(x_train, m)?);
+        Ok(())
+    }
+
+    fn estimate(&self, x: &Mat) -> Estimate {
+        self.model.as_ref().expect("fit first").surveil(x)
+    }
+
+    fn train_flops(&self, n: usize, m: usize) -> f64 {
+        let (n, m) = (n as f64, m as f64);
+        // similarity matrix m²·(3n) + eigendecomposition ~ 9m³ + pinv 2m³
+        3.0 * n * m * m + 11.0 * m * m * m
+    }
+
+    fn surveil_flops_per_obs(&self, n: usize, m: usize) -> f64 {
+        let (n, m) = (n as f64, m as f64);
+        // similarity m·3n + weights m² (G·k) + estimate m·n
+        3.0 * n * m + 2.0 * m * m + 2.0 * m * n
+    }
+}
+
+// ----------------------------------------------------------------- AAKR ----
+
+/// Auto-Associative Kernel Regression: the estimate is the similarity-
+/// weighted average of the memory vectors (no trained inverse).
+pub struct AakrPlugin {
+    d: Option<Mat>,
+    scaler: Option<Scaler>,
+}
+
+impl Default for AakrPlugin {
+    fn default() -> Self {
+        AakrPlugin {
+            d: None,
+            scaler: None,
+        }
+    }
+}
+
+impl PrognosticModel for AakrPlugin {
+    fn name(&self) -> &'static str {
+        "aakr"
+    }
+
+    fn fit(&mut self, x_train: &Mat, m: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(m <= x_train.rows, "m exceeds observations");
+        let scaler = Scaler::fit(x_train);
+        let xs = scaler.transform(x_train);
+        let idx = mset::select_memory(&xs, m);
+        let mut d = Mat::zeros(m, x_train.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            d.row_mut(r).copy_from_slice(xs.row(i));
+        }
+        self.d = Some(d);
+        self.scaler = Some(scaler);
+        Ok(())
+    }
+
+    fn estimate(&self, x: &Mat) -> Estimate {
+        let d = self.d.as_ref().expect("fit first");
+        let xs = self.scaler.as_ref().unwrap().transform(x);
+        // K = sim(D, X) : m × B, weights normalised per observation column.
+        let k = mset::sim_cross(d, &xs);
+        let b = xs.rows;
+        let m = d.rows;
+        let mut xhat = Mat::zeros(b, xs.cols);
+        for col in 0..b {
+            let mut wsum = 0.0;
+            for row in 0..m {
+                wsum += k[(row, col)];
+            }
+            let inv = 1.0 / wsum.max(1e-12);
+            for row in 0..m {
+                let w = k[(row, col)] * inv;
+                if w == 0.0 {
+                    continue;
+                }
+                for (j, &dv) in d.row(row).iter().enumerate() {
+                    xhat[(col, j)] += w * dv;
+                }
+            }
+        }
+        let resid = xs.sub(&xhat);
+        Estimate { xhat, resid }
+    }
+
+    fn train_flops(&self, n: usize, m: usize) -> f64 {
+        // selection only: one norm pass over the candidate set
+        2.0 * n as f64 * m as f64
+    }
+
+    fn surveil_flops_per_obs(&self, n: usize, m: usize) -> f64 {
+        let (n, m) = (n as f64, m as f64);
+        // similarity m·3n + normalisation m + weighted sum m·n
+        3.0 * n * m + m + 2.0 * m * n
+    }
+}
+
+// ---------------------------------------------------------------- Ridge ----
+
+/// Per-signal linear ridge regression: each signal is predicted from all
+/// others by a linear model fit on the training window.
+pub struct RidgePlugin {
+    /// `n × n` coefficient matrix, row j = weights predicting signal j
+    /// (with coef[j][j] = 0), plus intercept handling via scaled space.
+    coef: Option<Mat>,
+    scaler: Option<Scaler>,
+    /// Ridge strength.
+    pub alpha: f64,
+}
+
+impl Default for RidgePlugin {
+    fn default() -> Self {
+        RidgePlugin {
+            coef: None,
+            scaler: None,
+            alpha: 1e-2,
+        }
+    }
+}
+
+impl PrognosticModel for RidgePlugin {
+    fn name(&self) -> &'static str {
+        "ridge"
+    }
+
+    fn fit(&mut self, x_train: &Mat, _m: usize) -> anyhow::Result<()> {
+        let scaler = Scaler::fit(x_train);
+        let xs = scaler.transform(x_train);
+        let n = xs.cols;
+        // Gram matrix XᵀX once, then per-signal system with the target
+        // column/row zeroed out.
+        let xt = xs.transpose();
+        let gram = xt.matmul(&xs);
+        let mut coef = Mat::zeros(n, n);
+        for j in 0..n {
+            // A = gram over features != j (+ αI), b = Xᵀ x_j over same
+            let feats: Vec<usize> = (0..n).filter(|&f| f != j).collect();
+            let mut a = Mat::zeros(n - 1, n - 1);
+            let mut rhs = vec![0.0; n - 1];
+            for (r, &fr) in feats.iter().enumerate() {
+                rhs[r] = gram[(fr, j)];
+                for (c, &fc) in feats.iter().enumerate() {
+                    a[(r, c)] = gram[(fr, fc)];
+                }
+                a[(r, r)] += self.alpha * xs.rows as f64;
+            }
+            let w = solve_spd(&a, &rhs)
+                .ok_or_else(|| anyhow::anyhow!("ridge system not SPD"))?;
+            for (r, &fr) in feats.iter().enumerate() {
+                coef[(j, fr)] = w[r];
+            }
+        }
+        self.coef = Some(coef);
+        self.scaler = Some(scaler);
+        Ok(())
+    }
+
+    fn estimate(&self, x: &Mat) -> Estimate {
+        let coef = self.coef.as_ref().expect("fit first");
+        let xs = self.scaler.as_ref().unwrap().transform(x);
+        // X̂ = X · Cᵀ (row-major obs × n)
+        let xhat = xs.matmul(&coef.transpose());
+        let resid = xs.sub(&xhat);
+        Estimate { xhat, resid }
+    }
+
+    fn train_flops(&self, n: usize, _m: usize) -> f64 {
+        let n = n as f64;
+        // n solves of (n-1)³/3 plus the gram matrix
+        n * (n * n * n / 3.0) + 2.0 * n * n
+    }
+
+    fn surveil_flops_per_obs(&self, n: usize, _m: usize) -> f64 {
+        2.0 * (n * n) as f64
+    }
+}
+
+/// Construct a plug-in by name (CLI dispatch).
+pub fn by_name(name: &str) -> anyhow::Result<Box<dyn PrognosticModel>> {
+    match name {
+        "mset2" => Ok(Box::new(MsetPlugin::default())),
+        "aakr" => Ok(Box::new(AakrPlugin::default())),
+        "ridge" => Ok(Box::new(RidgePlugin::default())),
+        "mlp" => Ok(Box::new(MlpPlugin::default())),
+        "svr" => Ok(Box::new(SvrPlugin::default())),
+        other => anyhow::bail!("unknown model '{other}' (try mset2|aakr|ridge|mlp|svr)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tpss::{inject, synthesize, Fault, TpssConfig};
+
+    fn fit_all(n: usize, t: usize, m: usize) -> Vec<Box<dyn PrognosticModel>> {
+        let ds = synthesize(&TpssConfig::sized(n, t), 42);
+        ["mset2", "aakr", "ridge"]
+            .iter()
+            .map(|name| {
+                let mut p = by_name(name).unwrap();
+                p.fit(&ds.data, m).unwrap();
+                p
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_plugins_fit_and_estimate() {
+        let plugins = fit_all(6, 1500, 32);
+        let probe = synthesize(&TpssConfig::sized(6, 100), 43);
+        for p in &plugins {
+            let est = p.estimate(&probe.data);
+            assert_eq!(est.xhat.rows, 100);
+            assert_eq!(est.xhat.cols, 6);
+            assert!(est.resid.data.iter().all(|v| v.is_finite()), "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn all_plugins_detect_gross_fault() {
+        let plugins = fit_all(6, 1500, 32);
+        let cfg = TpssConfig::sized(6, 400);
+        let healthy = synthesize(&cfg, 44);
+        let mut faulted = synthesize(&cfg, 44);
+        inject(&mut faulted, 3, Fault::Step { magnitude: 8.0 }, 0.0, 9);
+        for p in &plugins {
+            let rh = p.estimate(&healthy.data).resid.norm();
+            let rf = p.estimate(&faulted.data).resid.norm();
+            assert!(
+                rf > 1.5 * rh,
+                "{}: fault residual {rf} vs healthy {rh}",
+                p.name()
+            );
+        }
+    }
+
+    #[test]
+    fn flop_models_monotone() {
+        let plugins: Vec<Box<dyn PrognosticModel>> = vec![
+            Box::new(MsetPlugin::default()),
+            Box::new(AakrPlugin::default()),
+            Box::new(RidgePlugin::default()),
+        ];
+        for p in &plugins {
+            assert!(p.train_flops(16, 128) > p.train_flops(8, 64));
+            assert!(
+                p.surveil_flops_per_obs(16, 128) >= p.surveil_flops_per_obs(8, 64),
+                "{}",
+                p.name()
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_name_rejected() {
+        assert!(by_name("svm").is_err());
+    }
+
+    #[test]
+    fn mset_beats_ridge_on_nonlinear_data() {
+        // Kernel methods should track the nonlinear manifold better than a
+        // linear model on held-out healthy data.
+        let cfg = TpssConfig {
+            n_signals: 5,
+            n_obs: 3000,
+            noise_frac: 0.15,
+            ..TpssConfig::default()
+        };
+        let train = synthesize(&cfg, 50);
+        let test = synthesize(
+            &TpssConfig {
+                n_obs: 500,
+                ..cfg.clone()
+            },
+            51,
+        );
+        let mut mset = MsetPlugin::default();
+        mset.fit(&train.data, 128).unwrap();
+        let mut ridge = RidgePlugin::default();
+        ridge.fit(&train.data, 128).unwrap();
+        let r_mset = mset.estimate(&test.data).resid.norm();
+        let r_ridge = ridge.estimate(&test.data).resid.norm();
+        assert!(
+            r_mset < r_ridge * 1.5,
+            "mset {r_mset} should be competitive with ridge {r_ridge}"
+        );
+    }
+}

@@ -1,0 +1,256 @@
+//! Neural-net plug-in: a small auto-associative MLP (autoencoder).
+//!
+//! The paper (§II.B) names neural nets as one of the "other conventional
+//! forms of ML services" ContainerStress should evaluate through the same
+//! pluggable interface. This is a deliberately compact implementation —
+//! one tanh hidden layer trained by mini-batch SGD with momentum on the
+//! z-scored training window — sufficient to scope the *compute-cost
+//! shape* of an NN service (training ∝ epochs·N·n·h, streaming ∝ n·h per
+//! observation) and to act as a third residual generator in detection
+//! studies.
+
+use super::PrognosticModel;
+use crate::linalg::Mat;
+use crate::mset::{Estimate, Scaler};
+use crate::util::rng::Rng;
+
+/// Auto-associative MLP: n → h → n with tanh hidden activation.
+pub struct MlpPlugin {
+    /// Hidden width as a fraction of the input (≥ 2 units).
+    pub hidden_frac: f64,
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    pub seed: u64,
+    scaler: Option<Scaler>,
+    /// (h × n) input weights, (h,) hidden bias.
+    w1: Option<Mat>,
+    b1: Vec<f64>,
+    /// (n × h) output weights, (n,) output bias.
+    w2: Option<Mat>,
+    b2: Vec<f64>,
+}
+
+impl Default for MlpPlugin {
+    fn default() -> Self {
+        MlpPlugin {
+            hidden_frac: 0.5,
+            epochs: 30,
+            batch: 32,
+            lr: 0.05,
+            momentum: 0.9,
+            seed: 17,
+            scaler: None,
+            w1: None,
+            b1: Vec::new(),
+            w2: None,
+            b2: Vec::new(),
+        }
+    }
+}
+
+impl MlpPlugin {
+    fn hidden(&self, n: usize) -> usize {
+        ((n as f64 * self.hidden_frac).round() as usize).max(2)
+    }
+
+    /// Forward pass for a batch (rows = observations, scaled units).
+    fn forward(&self, xs: &Mat) -> (Mat, Mat) {
+        let w1 = self.w1.as_ref().unwrap();
+        let w2 = self.w2.as_ref().unwrap();
+        // hidden = tanh(X W1ᵀ + b1)
+        let mut hid = xs.matmul(&w1.transpose());
+        for r in 0..hid.rows {
+            let row = hid.row_mut(r);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = (*v + self.b1[j]).tanh();
+            }
+        }
+        // out = H W2ᵀ + b2
+        let mut out = hid.matmul(&w2.transpose());
+        for r in 0..out.rows {
+            let row = out.row_mut(r);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v += self.b2[j];
+            }
+        }
+        (hid, out)
+    }
+}
+
+impl PrognosticModel for MlpPlugin {
+    fn name(&self) -> &'static str {
+        "mlp"
+    }
+
+    fn fit(&mut self, x_train: &Mat, _m: usize) -> anyhow::Result<()> {
+        let n = x_train.cols;
+        let h = self.hidden(n);
+        let scaler = Scaler::fit(x_train);
+        let xs = scaler.transform(x_train);
+        let mut rng = Rng::new(self.seed);
+        // Xavier-ish init.
+        let mut w1 = Mat::zeros(h, n);
+        let s1 = (1.0 / n as f64).sqrt();
+        for v in w1.data.iter_mut() {
+            *v = s1 * rng.gauss();
+        }
+        let mut w2 = Mat::zeros(n, h);
+        let s2 = (1.0 / h as f64).sqrt();
+        for v in w2.data.iter_mut() {
+            *v = s2 * rng.gauss();
+        }
+        self.w1 = Some(w1);
+        self.w2 = Some(w2);
+        self.b1 = vec![0.0; h];
+        self.b2 = vec![0.0; n];
+        self.scaler = Some(scaler);
+
+        let mut vw1 = Mat::zeros(h, n);
+        let mut vw2 = Mat::zeros(n, h);
+        let mut vb1 = vec![0.0; h];
+        let mut vb2 = vec![0.0; n];
+        let t = xs.rows;
+        let mut order: Vec<usize> = (0..t).collect();
+        for _epoch in 0..self.epochs {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(self.batch) {
+                let b = chunk.len();
+                let mut xb = Mat::zeros(b, n);
+                for (r, &i) in chunk.iter().enumerate() {
+                    xb.row_mut(r).copy_from_slice(xs.row(i));
+                }
+                let (hid, out) = self.forward(&xb);
+                // dL/dout = 2(out − x)/b   (MSE)
+                let mut dout = out.sub(&xb);
+                for v in dout.data.iter_mut() {
+                    *v *= 2.0 / b as f64;
+                }
+                // grads
+                let w2g = dout.transpose().matmul(&hid); // (n × h)
+                let db2: Vec<f64> = (0..n).map(|j| dout.col(j).iter().sum()).collect();
+                // dhid = dout W2 ⊙ (1 − hid²)
+                let mut dhid = dout.matmul(self.w2.as_ref().unwrap()); // (b × h)
+                for r in 0..b {
+                    for j in 0..h {
+                        let hv = hid[(r, j)];
+                        dhid[(r, j)] *= 1.0 - hv * hv;
+                    }
+                }
+                let w1g = dhid.transpose().matmul(&xb); // (h × n)
+                let db1: Vec<f64> = (0..h).map(|j| dhid.col(j).iter().sum()).collect();
+                // momentum SGD
+                let w1 = self.w1.as_mut().unwrap();
+                let w2 = self.w2.as_mut().unwrap();
+                for (v, g) in vw1.data.iter_mut().zip(&w1g.data) {
+                    *v = self.momentum * *v - self.lr * g;
+                }
+                for (w, v) in w1.data.iter_mut().zip(&vw1.data) {
+                    *w += v;
+                }
+                for (v, g) in vw2.data.iter_mut().zip(&w2g.data) {
+                    *v = self.momentum * *v - self.lr * g;
+                }
+                for (w, v) in w2.data.iter_mut().zip(&vw2.data) {
+                    *w += v;
+                }
+                for j in 0..h {
+                    vb1[j] = self.momentum * vb1[j] - self.lr * db1[j];
+                    self.b1[j] += vb1[j];
+                }
+                for j in 0..n {
+                    vb2[j] = self.momentum * vb2[j] - self.lr * db2[j];
+                    self.b2[j] += vb2[j];
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn estimate(&self, x: &Mat) -> Estimate {
+        let xs = self.scaler.as_ref().expect("fit first").transform(x);
+        let (_, xhat) = self.forward(&xs);
+        let resid = xs.sub(&xhat);
+        Estimate { xhat, resid }
+    }
+
+    fn train_flops(&self, n: usize, _m: usize) -> f64 {
+        let h = self.hidden(n) as f64;
+        let n = n as f64;
+        // fwd+bwd ≈ 6·n·h per sample per epoch; window size folded into a
+        // nominal 4096-sample training window for scoping purposes.
+        6.0 * n * h * 4096.0 * self.epochs as f64
+    }
+
+    fn surveil_flops_per_obs(&self, n: usize, _m: usize) -> f64 {
+        let h = self.hidden(n) as f64;
+        4.0 * n as f64 * h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tpss::{inject, synthesize, Fault, TpssConfig};
+
+    #[test]
+    fn mlp_learns_reconstruction() {
+        let cfg = TpssConfig {
+            n_signals: 5,
+            n_obs: 2000,
+            noise_frac: 0.2,
+            cross_corr: 0.7, // strong structure → compressible
+            ..TpssConfig::default()
+        };
+        let train = synthesize(&cfg, 1);
+        let mut mlp = MlpPlugin::default();
+        mlp.fit(&train.data, 0).unwrap();
+        let test = synthesize(&TpssConfig { n_obs: 400, ..cfg }, 2);
+        let est = mlp.estimate(&test.data);
+        let rms = est.resid.norm() / (est.resid.data.len() as f64).sqrt();
+        // untrained reconstruction of z-scored data would have RMS ≈ 1
+        assert!(rms < 0.7, "reconstruction RMS {rms} — did not learn");
+    }
+
+    #[test]
+    fn mlp_detects_gross_fault() {
+        let cfg = TpssConfig {
+            n_signals: 5,
+            n_obs: 2000,
+            cross_corr: 0.7,
+            ..TpssConfig::default()
+        };
+        let train = synthesize(&cfg, 3);
+        let mut mlp = MlpPlugin::default();
+        mlp.fit(&train.data, 0).unwrap();
+        let probe_cfg = TpssConfig { n_obs: 300, ..cfg };
+        let healthy = synthesize(&probe_cfg, 4);
+        let mut faulted = synthesize(&probe_cfg, 4);
+        inject(&mut faulted, 2, Fault::Step { magnitude: 8.0 }, 0.0, 5);
+        let rh = mlp.estimate(&healthy.data).resid.norm();
+        let rf = mlp.estimate(&faulted.data).resid.norm();
+        assert!(rf > 1.3 * rh, "fault {rf} vs healthy {rh}");
+    }
+
+    #[test]
+    fn mlp_deterministic_for_seed() {
+        let cfg = TpssConfig::sized(4, 500);
+        let train = synthesize(&cfg, 6);
+        let mut a = MlpPlugin::default();
+        let mut b = MlpPlugin::default();
+        a.fit(&train.data, 0).unwrap();
+        b.fit(&train.data, 0).unwrap();
+        let probe = synthesize(&TpssConfig::sized(4, 50), 7);
+        let ea = a.estimate(&probe.data);
+        let eb = b.estimate(&probe.data);
+        assert!(ea.xhat.max_abs_diff(&eb.xhat) < 1e-12);
+    }
+
+    #[test]
+    fn flop_model_scales() {
+        let p = MlpPlugin::default();
+        assert!(p.train_flops(32, 0) > p.train_flops(8, 0));
+        assert!(p.surveil_flops_per_obs(32, 0) > p.surveil_flops_per_obs(8, 0));
+    }
+}

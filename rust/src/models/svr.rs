@@ -1,0 +1,178 @@
+//! SVM-family plug-in: auto-associative **kernel ridge regression** over
+//! the selected memory vectors.
+//!
+//! The paper (§II.B) lists support vector machines among the pluggable ML
+//! services. The least-squares SVM (a.k.a. kernel ridge regression) is the
+//! standard dense-solver member of that family and shares MSET2's compute
+//! skeleton — kernel matrix + regularised solve at training, kernel row +
+//! weighted sum at streaming — which is exactly what ContainerStress needs
+//! to scope: same cost *shape*, different constants and kernel.
+//!
+//! Model: `x̂ = Aᵀ k(x)` with `A = (K_DD + λI)⁻¹ D`, Gaussian kernel
+//! `k(a,b) = exp(−‖a−b‖² / (2γ²n))`.
+
+use super::PrognosticModel;
+use crate::linalg::{reg_pinv, Mat};
+use crate::mset::{select_memory, Estimate, Scaler};
+
+/// Least-squares SVM / kernel ridge auto-associative estimator.
+pub struct SvrPlugin {
+    /// Gaussian kernel width (dimensionless, scaled by √n like MSET's γ).
+    pub gamma: f64,
+    /// Ridge regularisation λ.
+    pub lambda: f64,
+    scaler: Option<Scaler>,
+    /// Memory matrix (m × n, scaled units).
+    d: Option<Mat>,
+    /// Precomputed coefficient matrix `A = (K + λI)⁻¹ D` (m × n).
+    a: Option<Mat>,
+}
+
+impl Default for SvrPlugin {
+    fn default() -> Self {
+        SvrPlugin {
+            gamma: 1.0,
+            lambda: 1e-3,
+            scaler: None,
+            d: None,
+            a: None,
+        }
+    }
+}
+
+impl SvrPlugin {
+    fn kernel(&self, a: &[f64], b: &[f64], n: usize) -> f64 {
+        let mut d2 = 0.0;
+        for (x, y) in a.iter().zip(b) {
+            let d = x - y;
+            d2 += d * d;
+        }
+        (-d2 / (2.0 * self.gamma * self.gamma * n as f64)).exp()
+    }
+}
+
+impl PrognosticModel for SvrPlugin {
+    fn name(&self) -> &'static str {
+        "svr"
+    }
+
+    fn fit(&mut self, x_train: &Mat, m: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(m >= 2, "svr needs m ≥ 2 memory vectors");
+        anyhow::ensure!(m <= x_train.rows, "m exceeds observations");
+        let n = x_train.cols;
+        let scaler = Scaler::fit(x_train);
+        let xs = scaler.transform(x_train);
+        let idx = select_memory(&xs, m);
+        let mut d = Mat::zeros(m, n);
+        for (r, &i) in idx.iter().enumerate() {
+            d.row_mut(r).copy_from_slice(xs.row(i));
+        }
+        // K_DD + λI, then A = (K + λI)⁻¹ D
+        let mut k = Mat::zeros(m, m);
+        for i in 0..m {
+            k[(i, i)] = 1.0 + self.lambda;
+            for j in 0..i {
+                let v = self.kernel(d.row(i), d.row(j), n);
+                k[(i, j)] = v;
+                k[(j, i)] = v;
+            }
+        }
+        let kinv = reg_pinv(&k, 0.0);
+        self.a = Some(kinv.matmul(&d));
+        self.d = Some(d);
+        self.scaler = Some(scaler);
+        Ok(())
+    }
+
+    fn estimate(&self, x: &Mat) -> Estimate {
+        let d = self.d.as_ref().expect("fit first");
+        let a = self.a.as_ref().unwrap();
+        let xs = self.scaler.as_ref().unwrap().transform(x);
+        let n = xs.cols;
+        let m = d.rows;
+        let mut xhat = Mat::zeros(xs.rows, n);
+        for r in 0..xs.rows {
+            // k(x) against all memory vectors, then x̂ = Aᵀ k
+            let xr = xs.row(r);
+            let kx: Vec<f64> = (0..m).map(|i| self.kernel(d.row(i), xr, n)).collect();
+            let row = xhat.row_mut(r);
+            for (i, &kv) in kx.iter().enumerate() {
+                if kv == 0.0 {
+                    continue;
+                }
+                for (j, o) in row.iter_mut().enumerate() {
+                    *o += kv * a[(i, j)];
+                }
+            }
+        }
+        let resid = xs.sub(&xhat);
+        Estimate { xhat, resid }
+    }
+
+    fn train_flops(&self, n: usize, m: usize) -> f64 {
+        let (n, m) = (n as f64, m as f64);
+        // kernel matrix 3nm²/2 + inverse 11m³ + A = K⁻¹D 2m²n
+        1.5 * n * m * m + 11.0 * m * m * m + 2.0 * m * m * n
+    }
+
+    fn surveil_flops_per_obs(&self, n: usize, m: usize) -> f64 {
+        let (n, m) = (n as f64, m as f64);
+        3.0 * n * m + 2.0 * m * n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tpss::{inject, synthesize, Fault, TpssConfig};
+
+    fn fitted(seed: u64) -> (SvrPlugin, TpssConfig) {
+        let cfg = TpssConfig {
+            n_signals: 5,
+            n_obs: 1500,
+            cross_corr: 0.6,
+            ..TpssConfig::default()
+        };
+        let train = synthesize(&cfg, seed);
+        let mut svr = SvrPlugin::default();
+        svr.fit(&train.data, 64).unwrap();
+        (svr, cfg)
+    }
+
+    #[test]
+    fn memory_vectors_reconstruct() {
+        let (svr, _) = fitted(1);
+        let d_raw = svr.scaler.as_ref().unwrap().inverse(svr.d.as_ref().unwrap());
+        let est = svr.estimate(&d_raw);
+        let max_resid = est.resid.data.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+        assert!(max_resid < 0.1, "max memory-vector residual {max_resid}");
+    }
+
+    #[test]
+    fn healthy_vs_faulted_residuals() {
+        let (svr, cfg) = fitted(2);
+        let probe_cfg = TpssConfig { n_obs: 300, ..cfg };
+        let healthy = synthesize(&probe_cfg, 3);
+        let mut faulted = synthesize(&probe_cfg, 3);
+        inject(&mut faulted, 1, Fault::Step { magnitude: 8.0 }, 0.0, 4);
+        let rh = svr.estimate(&healthy.data).resid.norm();
+        let rf = svr.estimate(&faulted.data).resid.norm();
+        assert!(rf > 1.5 * rh, "fault {rf} vs healthy {rh}");
+    }
+
+    #[test]
+    fn rejects_bad_m() {
+        let cfg = TpssConfig::sized(4, 100);
+        let train = synthesize(&cfg, 5);
+        let mut svr = SvrPlugin::default();
+        assert!(svr.fit(&train.data, 1).is_err());
+        assert!(svr.fit(&train.data, 500).is_err());
+    }
+
+    #[test]
+    fn flop_model_monotone() {
+        let p = SvrPlugin::default();
+        assert!(p.train_flops(16, 128) > p.train_flops(8, 64));
+        assert!(p.surveil_flops_per_obs(16, 128) > p.surveil_flops_per_obs(8, 64));
+    }
+}

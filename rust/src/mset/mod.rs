@@ -1,0 +1,282 @@
+//! **MSET2** — Multivariate State Estimation Technique, native Rust
+//! implementation.
+//!
+//! This is the "pluggable ML prognostic algorithm" the paper's case study
+//! scopes (§II.B). The native implementation serves three roles:
+//!
+//! 1. **numerical oracle** for the AOT/XLA device path (`runtime`) — the
+//!    integration tests require device results to match this module;
+//! 2. **data preparation** — memory-vector selection and z-scaling run once
+//!    per training set and are not on the streaming hot path;
+//! 3. **pure-CPU comparator** for the kernel ablation bench.
+//!
+//! Pipeline (see DESIGN.md §4):
+//! `scale → select D → S = Dᵀ⊗D → G = (S+λI)⁻¹ → (stream) X̂ = D·G·(Dᵀ⊗x)`.
+//!
+//! The similarity operator ⊗ and all constants are shared with the L1/L2
+//! Python definitions (`python/compile/kernels/ref.py`); changing one side
+//! requires changing the other — the cross-layer tests will catch drift.
+
+pub mod select;
+pub mod similarity;
+
+use crate::linalg::{reg_pinv, Mat};
+
+pub use select::select_memory;
+pub use similarity::{sim, sim_cross, sim_cross_gram, sim_matrix, GAMMA};
+
+/// Per-signal affine scaler (z-score using training statistics).
+#[derive(Clone, Debug)]
+pub struct Scaler {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl Scaler {
+    /// Fit on training data (rows = observations).
+    pub fn fit(x: &Mat) -> Scaler {
+        let n = x.cols;
+        let t = x.rows as f64;
+        let mut mean = vec![0.0; n];
+        for r in 0..x.rows {
+            for (j, v) in x.row(r).iter().enumerate() {
+                mean[j] += v;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= t;
+        }
+        let mut var = vec![0.0; n];
+        for r in 0..x.rows {
+            for (j, v) in x.row(r).iter().enumerate() {
+                let d = v - mean[j];
+                var[j] += d * d;
+            }
+        }
+        let std = var
+            .into_iter()
+            .map(|v| (v / t).sqrt().max(1e-9))
+            .collect();
+        Scaler { mean, std }
+    }
+
+    pub fn transform(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.mean.len());
+        let mut out = x.clone();
+        for r in 0..out.rows {
+            let row = out.row_mut(r);
+            for j in 0..row.len() {
+                row[j] = (row[j] - self.mean[j]) / self.std[j];
+            }
+        }
+        out
+    }
+
+    /// Undo scaling (for reporting estimates in engineering units).
+    pub fn inverse(&self, x: &Mat) -> Mat {
+        let mut out = x.clone();
+        for r in 0..out.rows {
+            let row = out.row_mut(r);
+            for j in 0..row.len() {
+                row[j] = row[j] * self.std[j] + self.mean[j];
+            }
+        }
+        out
+    }
+}
+
+/// A trained MSET2 model.
+#[derive(Clone, Debug)]
+pub struct MsetModel {
+    /// Memory matrix, `m × n` (row = one memory vector, scaled units).
+    pub d: Mat,
+    /// `(S + λI)⁻¹`, `m × m`.
+    pub g: Mat,
+    pub scaler: Scaler,
+    /// Regularisation actually applied.
+    pub lambda: f64,
+}
+
+/// Ridge regularisation scale: λ = RIDGE_REL · tr(S)/m.
+pub const RIDGE_REL: f64 = 1e-3;
+
+/// Train MSET2: scale, select `m` memory vectors, build `G`.
+///
+/// Enforces the paper's training constraint `m ≥ 2·n_signals` (Fig. 6 note);
+/// violations return an error so the sweep engine can emit surface gaps.
+pub fn train(x_train: &Mat, m: usize) -> anyhow::Result<MsetModel> {
+    let n = x_train.cols;
+    anyhow::ensure!(
+        m >= 2 * n,
+        "MSET training constraint violated: m={m} < 2·n_signals={}",
+        2 * n
+    );
+    anyhow::ensure!(
+        m <= x_train.rows,
+        "cannot select {m} memory vectors from {} observations",
+        x_train.rows
+    );
+    let scaler = Scaler::fit(x_train);
+    let xs = scaler.transform(x_train);
+    let idx = select_memory(&xs, m);
+    let mut d = Mat::zeros(m, n);
+    for (r, &i) in idx.iter().enumerate() {
+        d.row_mut(r).copy_from_slice(xs.row(i));
+    }
+    let (g, lambda) = train_from_memory(&d);
+    Ok(MsetModel {
+        d,
+        g,
+        scaler,
+        lambda,
+    })
+}
+
+/// Build `G = (S + λI)⁻¹` from an already-selected memory matrix (scaled).
+/// Exposed separately so the device path can reuse the exact same D.
+pub fn train_from_memory(d: &Mat) -> (Mat, f64) {
+    let s = sim_matrix(d);
+    let m = s.rows;
+    let trace: f64 = (0..m).map(|i| s[(i, i)]).sum();
+    let lambda = RIDGE_REL * trace / m as f64;
+    let mut s_reg = s;
+    for i in 0..m {
+        s_reg[(i, i)] += lambda;
+    }
+    // reg_pinv applies the eigenvalue floor; λ already added on the diagonal.
+    (reg_pinv(&s_reg, 0.0), lambda)
+}
+
+/// Surveillance result for a chunk of observations.
+#[derive(Clone, Debug)]
+pub struct Estimate {
+    /// Estimated observations (scaled units), rows = observations.
+    pub xhat: Mat,
+    /// Residuals `x − x̂` (scaled units).
+    pub resid: Mat,
+}
+
+impl MsetModel {
+    pub fn n_signals(&self) -> usize {
+        self.d.cols
+    }
+
+    pub fn n_memvec(&self) -> usize {
+        self.d.rows
+    }
+
+    /// Estimate a chunk of raw observations (rows = observations).
+    pub fn surveil(&self, x_raw: &Mat) -> Estimate {
+        let xs = self.scaler.transform(x_raw);
+        self.surveil_scaled(&xs)
+    }
+
+    /// Estimate a chunk already in scaled units — the exact computation the
+    /// L2 graph performs on device.
+    pub fn surveil_scaled(&self, xs: &Mat) -> Estimate {
+        assert_eq!(xs.cols, self.d.cols, "signal count mismatch");
+        // K = sim(D, X) : m × B
+        let k = sim_cross(&self.d, xs);
+        // W = G K : m × B
+        let w = self.g.matmul(&k);
+        // X̂ = Wᵀ · D : B × n   (D is m×n row-major)
+        let xhat = w.transpose().matmul(&self.d);
+        let resid = xs.sub(&xhat);
+        Estimate { xhat, resid }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tpss::{synthesize, TpssConfig};
+
+    fn train_set(n: usize, t: usize, seed: u64) -> Mat {
+        synthesize(&TpssConfig::sized(n, t), seed).data
+    }
+
+    #[test]
+    fn scaler_zero_mean_unit_var() {
+        let x = train_set(4, 500, 1);
+        let sc = Scaler::fit(&x);
+        let xs = sc.transform(&x);
+        for j in 0..4 {
+            let col = xs.col(j);
+            let m = crate::tpss::stats::moments(&col);
+            assert!(m.mean.abs() < 1e-10);
+            assert!((m.var - 1.0).abs() < 1e-8);
+        }
+        // inverse round-trips
+        let back = sc.inverse(&xs);
+        assert!(x.max_abs_diff(&back) < 1e-9);
+    }
+
+    #[test]
+    fn training_constraint_enforced() {
+        let x = train_set(8, 200, 2);
+        assert!(train(&x, 15).is_err()); // m < 2n
+        assert!(train(&x, 16).is_ok());
+        assert!(train(&x, 300).is_err()); // m > n_obs
+    }
+
+    #[test]
+    fn memory_vectors_estimate_themselves() {
+        // An observation that IS a memory vector must be reconstructed
+        // almost exactly (s(a,a)=1 dominates the weight vector).
+        let x = train_set(4, 400, 3);
+        let model = train(&x, 32).unwrap();
+        let d_raw = model.scaler.inverse(&model.d);
+        let est = model.surveil(&d_raw);
+        let max_resid = est
+            .resid
+            .data
+            .iter()
+            .fold(0.0f64, |a, &b| a.max(b.abs()));
+        assert!(max_resid < 0.05, "max residual {max_resid}");
+    }
+
+    #[test]
+    fn healthy_data_small_residuals_faulted_data_large() {
+        let cfg = TpssConfig::sized(6, 2000);
+        let ds = synthesize(&cfg, 5);
+        let model = train(&ds.data, 64).unwrap();
+
+        let healthy = synthesize(&cfg, 6); // same distribution, new draw
+        let est_h = model.surveil(&healthy.data);
+        let rms_h = est_h.resid.norm() / (est_h.resid.data.len() as f64).sqrt();
+
+        let mut faulted = synthesize(&cfg, 6);
+        crate::tpss::inject(
+            &mut faulted,
+            2,
+            crate::tpss::Fault::Step { magnitude: 6.0 },
+            0.0,
+            7,
+        );
+        let est_f = model.surveil(&faulted.data);
+        let rms_f = est_f.resid.norm() / (est_f.resid.data.len() as f64).sqrt();
+        assert!(
+            rms_f > 2.0 * rms_h,
+            "fault must inflate residuals: healthy={rms_h} faulted={rms_f}"
+        );
+    }
+
+    #[test]
+    fn surveil_shapes() {
+        let x = train_set(5, 300, 8);
+        let model = train(&x, 24).unwrap();
+        let probe = train_set(5, 17, 9);
+        let est = model.surveil(&probe);
+        assert_eq!(est.xhat.rows, 17);
+        assert_eq!(est.xhat.cols, 5);
+        assert_eq!(est.resid.rows, 17);
+    }
+
+    #[test]
+    fn g_is_symmetric() {
+        let x = train_set(3, 200, 10);
+        let model = train(&x, 12).unwrap();
+        let gt = model.g.transpose();
+        assert!(model.g.max_abs_diff(&gt) < 1e-8);
+    }
+}

@@ -1,0 +1,162 @@
+//! Memory-vector (training-vector) selection — classic MSET two-pass
+//! procedure:
+//!
+//! 1. **Extrema coverage**: every observation that carries the minimum or
+//!    maximum of any signal enters the memory matrix, so the model spans the
+//!    observed operating envelope.
+//! 2. **Norm-spaced fill**: the remaining slots are filled by ordering the
+//!    unchosen observations by vector norm and taking evenly spaced ranks,
+//!    giving uniform coverage of the state space in between.
+//!
+//! Selection runs on *scaled* data, once per training set; it is data
+//! preparation, not part of the streamed hot path, so it lives in L3
+//! rather than in the AOT graphs.
+
+use crate::linalg::Mat;
+
+/// Select `m` row indices of `xs` (scaled training data, rows=observations)
+/// to serve as memory vectors. Deterministic; returns indices sorted by the
+/// order of selection (extrema first).
+pub fn select_memory(xs: &Mat, m: usize) -> Vec<usize> {
+    let t = xs.rows;
+    let n = xs.cols;
+    assert!(m <= t, "cannot select {m} from {t} observations");
+
+    let mut chosen = vec![false; t];
+    let mut out = Vec::with_capacity(m);
+
+    // Pass 1: extrema of each signal.
+    for j in 0..n {
+        let mut lo = 0usize;
+        let mut hi = 0usize;
+        for i in 1..t {
+            if xs[(i, j)] < xs[(lo, j)] {
+                lo = i;
+            }
+            if xs[(i, j)] > xs[(hi, j)] {
+                hi = i;
+            }
+        }
+        for idx in [lo, hi] {
+            if !chosen[idx] && out.len() < m {
+                chosen[idx] = true;
+                out.push(idx);
+            }
+        }
+    }
+
+    // Pass 2: norm-spaced fill over the remainder.
+    if out.len() < m {
+        let mut rest: Vec<(f64, usize)> = (0..t)
+            .filter(|&i| !chosen[i])
+            .map(|i| {
+                let norm2: f64 = xs.row(i).iter().map(|v| v * v).sum();
+                (norm2, i)
+            })
+            .collect();
+        rest.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let need = m - out.len();
+        // evenly spaced ranks across the sorted remainder
+        for k in 0..need {
+            let pos = if need == 1 {
+                0
+            } else {
+                k * (rest.len() - 1) / (need - 1)
+            };
+            let idx = rest[pos].1;
+            if !chosen[idx] {
+                chosen[idx] = true;
+                out.push(idx);
+            }
+        }
+        // rank collisions are possible when need ~ rest.len(); top up linearly
+        let mut it = rest.iter();
+        while out.len() < m {
+            let &(_, idx) = it.next().expect("enough observations checked above");
+            if !chosen[idx] {
+                chosen[idx] = true;
+                out.push(idx);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_gauss(&mut m.data);
+        m
+    }
+
+    #[test]
+    fn selects_exactly_m_distinct() {
+        let xs = random_mat(500, 6, 1);
+        for m in [12, 64, 200, 500] {
+            let idx = select_memory(&xs, m);
+            assert_eq!(idx.len(), m);
+            let mut s = idx.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), m, "duplicates for m={m}");
+            assert!(idx.iter().all(|&i| i < 500));
+        }
+    }
+
+    #[test]
+    fn extrema_always_included() {
+        let xs = random_mat(300, 4, 2);
+        let idx = select_memory(&xs, 32);
+        for j in 0..4 {
+            let col = xs.col(j);
+            let lo = (0..300)
+                .min_by(|&a, &b| col[a].partial_cmp(&col[b]).unwrap())
+                .unwrap();
+            let hi = (0..300)
+                .max_by(|&a, &b| col[a].partial_cmp(&col[b]).unwrap())
+                .unwrap();
+            assert!(idx.contains(&lo), "min of signal {j} not selected");
+            assert!(idx.contains(&hi), "max of signal {j} not selected");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let xs = random_mat(200, 3, 3);
+        assert_eq!(select_memory(&xs, 40), select_memory(&xs, 40));
+    }
+
+    #[test]
+    fn m_equals_t_selects_all() {
+        let xs = random_mat(50, 2, 4);
+        let mut idx = select_memory(&xs, 50);
+        idx.sort_unstable();
+        assert_eq!(idx, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn norm_coverage_spread() {
+        // Selected vectors should span the norm range, not cluster.
+        let xs = random_mat(1000, 5, 5);
+        let idx = select_memory(&xs, 64);
+        let norms: Vec<f64> = idx
+            .iter()
+            .map(|&i| xs.row(i).iter().map(|v| v * v).sum::<f64>().sqrt())
+            .collect();
+        let all_norms: Vec<f64> = (0..1000)
+            .map(|i| xs.row(i).iter().map(|v| v * v).sum::<f64>().sqrt())
+            .collect();
+        let max_all = all_norms.iter().cloned().fold(0.0, f64::max);
+        let max_sel = norms.iter().cloned().fold(0.0, f64::max);
+        let min_all = all_norms.iter().cloned().fold(f64::INFINITY, f64::min);
+        let min_sel = norms.iter().cloned().fold(f64::INFINITY, f64::min);
+        // top/bottom 10% of the norm range must be represented
+        assert!(max_sel > max_all - 0.1 * (max_all - min_all));
+        assert!(min_sel < min_all + 0.2 * (max_all - min_all));
+    }
+}

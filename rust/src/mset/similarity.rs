@@ -1,0 +1,171 @@
+//! The MSET similarity operator ⊗ — the paper's computational hot-spot
+//! ("a non-linear matrix binary operation", §II.D), the routine NVIDIA
+//! hand-wrote in CUDA and we re-think as a Pallas/MXU kernel at L1.
+//!
+//! Definition (shared verbatim with `python/compile/kernels/ref.py`):
+//!
+//! ```text
+//! s(a, b) = 1 / (1 + ‖a − b‖₂ / (γ·√n))      γ = 0.5
+//! ```
+//!
+//! Bounded in (0, 1], s(a, a) = 1, and scale-normalised by √n so kernel
+//! bandwidth is independent of the signal count — which is what lets the
+//! bucket router zero-pad the signal dimension without changing results
+//! (padding contributes 0 to the squared distance).
+
+use crate::linalg::Mat;
+
+/// Kernel bandwidth γ (dimensionless).
+pub const GAMMA: f64 = 0.5;
+
+/// Similarity of two vectors. `n_real` is the *unpadded* signal count used
+/// for bandwidth normalisation.
+#[inline]
+pub fn sim(a: &[f64], b: &[f64], n_real: usize) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut d2 = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        d2 += d * d;
+    }
+    1.0 / (1.0 + d2.sqrt() / (GAMMA * (n_real as f64).sqrt()))
+}
+
+/// Symmetric similarity matrix `S[i][j] = s(D[i], D[j])` for a memory
+/// matrix stored rows-as-vectors (`m × n`). Exploits symmetry (half the
+/// evaluations of the naive loop — see the `ablation_kernel` bench).
+pub fn sim_matrix(d: &Mat) -> Mat {
+    let m = d.rows;
+    let n = d.cols;
+    let mut s = Mat::zeros(m, m);
+    for i in 0..m {
+        s[(i, i)] = 1.0;
+        for j in 0..i {
+            let v = sim(d.row(i), d.row(j), n);
+            s[(i, j)] = v;
+            s[(j, i)] = v;
+        }
+    }
+    s
+}
+
+/// Cross similarity `K[i][b] = s(D[i], X[b])` between memory vectors
+/// (`m × n`) and an observation chunk (`B × n`). Result is `m × B`.
+pub fn sim_cross(d: &Mat, x: &Mat) -> Mat {
+    assert_eq!(d.cols, x.cols, "signal count mismatch");
+    let m = d.rows;
+    let b = x.rows;
+    let n = d.cols;
+    let mut k = Mat::zeros(m, b);
+    for i in 0..m {
+        let di = d.row(i);
+        for j in 0..b {
+            k[(i, j)] = sim(di, x.row(j), n);
+        }
+    }
+    k
+}
+
+/// Gram-trick variant of [`sim_cross`] — computes ‖a−b‖² as
+/// ‖a‖² + ‖b‖² − 2aᵀb with a matmul, the exact formulation the L1 Pallas
+/// kernel uses on the MXU. Kept here for the kernel ablation bench and as
+/// a second oracle for the Python kernel.
+pub fn sim_cross_gram(d: &Mat, x: &Mat) -> Mat {
+    assert_eq!(d.cols, x.cols);
+    let m = d.rows;
+    let b = x.rows;
+    let n = d.cols;
+    let d_norm2: Vec<f64> = (0..m)
+        .map(|i| d.row(i).iter().map(|v| v * v).sum())
+        .collect();
+    let x_norm2: Vec<f64> = (0..b)
+        .map(|j| x.row(j).iter().map(|v| v * v).sum())
+        .collect();
+    let cross = d.matmul(&x.transpose()); // m × B
+    let mut k = Mat::zeros(m, b);
+    let bw = GAMMA * (n as f64).sqrt();
+    for i in 0..m {
+        for j in 0..b {
+            let d2 = (d_norm2[i] + x_norm2[j] - 2.0 * cross[(i, j)]).max(0.0);
+            k[(i, j)] = 1.0 / (1.0 + d2.sqrt() / bw);
+        }
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_gauss(&mut m.data);
+        m
+    }
+
+    #[test]
+    fn self_similarity_is_one() {
+        let v = vec![1.0, -2.0, 3.0];
+        assert_eq!(sim(&v, &v, 3), 1.0);
+    }
+
+    #[test]
+    fn similarity_bounded_and_monotone() {
+        let a = vec![0.0; 4];
+        let near = vec![0.1; 4];
+        let far = vec![5.0; 4];
+        let s_near = sim(&a, &near, 4);
+        let s_far = sim(&a, &far, 4);
+        assert!(s_near > s_far);
+        assert!(s_far > 0.0 && s_near < 1.0);
+    }
+
+    #[test]
+    fn padding_invariance() {
+        // zero-padding the signal dimension (with n_real fixed) must not
+        // change similarity — the property the bucket router relies on.
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![0.5, 2.5, 2.0];
+        let mut ap = a.clone();
+        let mut bp = b.clone();
+        ap.extend([0.0; 5]);
+        bp.extend([0.0; 5]);
+        assert!((sim(&a, &b, 3) - sim(&ap, &bp, 3)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sim_matrix_symmetric_unit_diag() {
+        let d = random_mat(10, 4, 1);
+        let s = sim_matrix(&d);
+        for i in 0..10 {
+            assert_eq!(s[(i, i)], 1.0);
+            for j in 0..10 {
+                assert!((s[(i, j)] - s[(j, i)]).abs() < 1e-15);
+                assert!(s[(i, j)] > 0.0 && s[(i, j)] <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_trick_matches_direct() {
+        let d = random_mat(20, 7, 2);
+        let x = random_mat(13, 7, 3);
+        let direct = sim_cross(&d, &x);
+        let gram = sim_cross_gram(&d, &x);
+        assert!(
+            direct.max_abs_diff(&gram) < 1e-9,
+            "gram formulation diverged: {}",
+            direct.max_abs_diff(&gram)
+        );
+    }
+
+    #[test]
+    fn sim_cross_against_sim_matrix() {
+        let d = random_mat(8, 3, 4);
+        let k = sim_cross(&d, &d);
+        let s = sim_matrix(&d);
+        assert!(k.max_abs_diff(&s) < 1e-12);
+    }
+}

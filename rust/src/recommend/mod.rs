@@ -1,0 +1,287 @@
+//! Scoping recommender: the output stage of ContainerStress.
+//!
+//! Given a customer workload (signals, memory vectors, sampling rate) and
+//! the measured cost surfaces, recommend the cheapest cloud shape that
+//! sustains real-time streaming surveillance with headroom, fits the MSET
+//! memory footprint, and (optionally) compares the CPU-only choice against
+//! GPU shapes using the [`crate::accel`] speedup model — automating the
+//! trial-and-error consulting loop the paper's introduction describes.
+
+use crate::accel::{self, CpuRef, GpuSpec};
+use crate::shapes::{self, mset_footprint_bytes, Shape, Workload};
+use crate::surface::ResponseSurface;
+
+/// SLA constraints for scoping.
+#[derive(Clone, Copy, Debug)]
+pub struct Sla {
+    /// Required sustained throughput headroom (e.g. 2.0 = run at ≤50% load).
+    pub headroom: f64,
+    /// Maximum training wall time tolerated (s).
+    pub max_train_s: f64,
+}
+
+impl Default for Sla {
+    fn default() -> Self {
+        Sla {
+            headroom: 2.0,
+            max_train_s: 3600.0,
+        }
+    }
+}
+
+/// One evaluated shape.
+#[derive(Clone, Debug)]
+pub struct ShapeAssessment {
+    pub shape: Shape,
+    /// Predicted fraction of the shape consumed by streaming surveillance
+    /// (1.0 = saturated).
+    pub utilization: f64,
+    /// Predicted training wall time on this shape (s).
+    pub train_s: f64,
+    /// Whether the workload's memory footprint fits.
+    pub fits_memory: bool,
+    /// Meets all SLA terms.
+    pub feasible: bool,
+    /// USD per hour.
+    pub usd_per_hour: f64,
+}
+
+/// Recommendation output.
+#[derive(Clone, Debug)]
+pub struct Recommendation {
+    pub workload: Workload,
+    /// All shapes, assessed (sorted by price ascending).
+    pub assessments: Vec<ShapeAssessment>,
+    /// Index of the chosen (cheapest feasible) shape, if any.
+    pub chosen: Option<usize>,
+}
+
+/// Effective throughput of the local testbed implied by the measured
+/// surfaces (FLOP/s), used to translate measured seconds to shape seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct LocalCalibration {
+    pub eff_flops: f64,
+}
+
+impl LocalCalibration {
+    /// Derive from a surveillance surface: predicted cost of a reference
+    /// cell divided into its FLOP count.
+    pub fn from_surface(surf: &ResponseSurface, n: usize, m: usize, obs: usize) -> Self {
+        let secs = surf.predict(n, m, obs).max(1e-12);
+        let flops =
+            accel::total_flops(&accel::surveil_routines(n, m, obs, accel::GPU_CHUNK));
+        LocalCalibration {
+            eff_flops: flops / secs,
+        }
+    }
+}
+
+/// Assess every catalog shape for a workload, using the measured surfaces.
+///
+/// `train_surface`/`surveil_surface` are the fitted response surfaces from
+/// a sweep on the local testbed; costs are rescaled to each shape by the
+/// ratio of effective throughputs. GPU shapes apply the V100 speedup model
+/// to the dominant kernels.
+pub fn recommend(
+    workload: &Workload,
+    train_surface: &ResponseSurface,
+    surveil_surface: &ResponseSurface,
+    local: LocalCalibration,
+    sla: &Sla,
+) -> Recommendation {
+    let n = workload.n_signals;
+    let m = workload.n_memvec;
+    // Measured local costs for this workload.
+    let train_local_s = train_surface.predict(n, m, workload.train_window);
+    // surveillance cost per single observation (predict at a window, divide)
+    let window = 4096;
+    let surveil_window_s = surveil_surface.predict(n, m, window);
+    let per_obs_local_s = surveil_window_s / window as f64;
+
+    let gpu_spec = GpuSpec::v100();
+    let cpu_ref = CpuRef::xeon_platinum();
+    let footprint = mset_footprint_bytes(n, m, 64, workload.train_window);
+
+    let mut assessments: Vec<ShapeAssessment> = shapes::catalog()
+        .into_iter()
+        .map(|shape| {
+            let cpu_ratio = local.eff_flops / shape.cpu_eff_flops();
+            let (train_s, per_obs_s) = if shape.has_gpu() {
+                // GPU path: apply the modelled speedup over the *reference
+                // CPU*, expressed relative to this shape's CPU baseline.
+                let su_t = accel::speedup_train(n, m, &gpu_spec, &cpu_ref).max(1.0);
+                let su_s =
+                    accel::speedup_surveil(n, m, window, &gpu_spec, &cpu_ref).max(1.0);
+                // reference-CPU times for this workload
+                let t_ref_train = accel::total_flops(&accel::train_routines(n, m))
+                    / cpu_ref.train_eff_flops;
+                let t_ref_obs = accel::total_flops(&accel::surveil_routines(
+                    n,
+                    m,
+                    window,
+                    accel::GPU_CHUNK,
+                )) / cpu_ref.surveil_eff_flops
+                    / window as f64;
+                let g = (shape.gpus as f64).max(1.0);
+                (t_ref_train / su_t / g, t_ref_obs / su_s / g)
+            } else {
+                (train_local_s * cpu_ratio, per_obs_local_s * cpu_ratio)
+            };
+            let demand = workload.obs_per_sec * per_obs_s; // fraction of shape
+            let utilization = demand * sla.headroom;
+            let fits_memory = (footprint as f64) < shape.mem_gb * 1e9;
+            let feasible = utilization < 1.0 && train_s <= sla.max_train_s && fits_memory;
+            ShapeAssessment {
+                utilization,
+                train_s,
+                fits_memory,
+                feasible,
+                usd_per_hour: shape.usd_per_hour,
+                shape,
+            }
+        })
+        .collect();
+
+    assessments.sort_by(|a, b| a.usd_per_hour.partial_cmp(&b.usd_per_hour).unwrap());
+    let chosen = assessments.iter().position(|a| a.feasible);
+    Recommendation {
+        workload: *workload,
+        assessments,
+        chosen,
+    }
+}
+
+impl Recommendation {
+    pub fn chosen_shape(&self) -> Option<&ShapeAssessment> {
+        self.chosen.map(|i| &self.assessments[i])
+    }
+
+    /// Render a report table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "Workload: {} signals, {} memvecs, {:.4} obs/s, train window {}\n",
+            self.workload.n_signals,
+            self.workload.n_memvec,
+            self.workload.obs_per_sec,
+            self.workload.train_window
+        ));
+        out.push_str(&format!(
+            "{:<18} {:>9} {:>12} {:>10} {:>6} {:>9}\n",
+            "shape", "$/hr", "train(s)", "util", "mem", "feasible"
+        ));
+        for (i, a) in self.assessments.iter().enumerate() {
+            let marker = if Some(i) == self.chosen { " ← chosen" } else { "" };
+            out.push_str(&format!(
+                "{:<18} {:>9.4} {:>12.4} {:>9.1}% {:>6} {:>9}{}\n",
+                a.shape.name,
+                a.usd_per_hour,
+                a.train_s,
+                a.utilization * 100.0,
+                if a.fits_memory { "ok" } else { "OOM" },
+                if a.feasible { "yes" } else { "no" },
+                marker
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::surface::{ResponseSurface, Sample};
+
+    /// Synthetic surfaces with realistic exponents.
+    fn surfaces() -> (ResponseSurface, ResponseSurface, LocalCalibration) {
+        let mut train = Vec::new();
+        let mut surveil = Vec::new();
+        for &n in &[8usize, 16, 32, 64] {
+            for &m in &[32usize, 64, 128, 256] {
+                for &obs in &[256usize, 1024, 4096] {
+                    train.push(Sample {
+                        n_signals: n,
+                        n_memvec: m,
+                        n_obs: obs,
+                        cost: 1e-9 * (n as f64) * (m as f64).powi(2),
+                    });
+                    surveil.push(Sample {
+                        n_signals: n,
+                        n_memvec: m,
+                        n_obs: obs,
+                        cost: 2e-10 * (obs as f64) * (m as f64) * (n as f64).sqrt(),
+                    });
+                }
+            }
+        }
+        let ts = ResponseSurface::fit(&train).unwrap();
+        let ss = ResponseSurface::fit(&surveil).unwrap();
+        let cal = LocalCalibration::from_surface(&ss, 32, 128, 4096);
+        (ts, ss, cal)
+    }
+
+    #[test]
+    fn small_workload_gets_cheap_shape() {
+        let (ts, ss, cal) = surfaces();
+        let rec = recommend(&Workload::customer_a(), &ts, &ss, cal, &Sla::default());
+        let chosen = rec.chosen_shape().expect("feasible shape exists");
+        // Customer A (20 signals @ 1/hr) must not need a bare-metal monster.
+        assert!(
+            chosen.shape.usd_per_hour <= 0.26,
+            "chose {} at ${}",
+            chosen.shape.name,
+            chosen.shape.usd_per_hour
+        );
+    }
+
+    #[test]
+    fn heavier_stream_needs_bigger_shape() {
+        let (ts, ss, cal) = surfaces();
+        let light = Workload {
+            n_signals: 32,
+            n_memvec: 128,
+            obs_per_sec: 0.1,
+            train_window: 4096,
+        };
+        let heavy = Workload {
+            obs_per_sec: 2000.0,
+            ..light
+        };
+        let r_light = recommend(&light, &ts, &ss, cal, &Sla::default());
+        let r_heavy = recommend(&heavy, &ts, &ss, cal, &Sla::default());
+        let c_light = r_light.chosen_shape().unwrap().usd_per_hour;
+        let c_heavy = r_heavy.chosen_shape().map(|s| s.usd_per_hour);
+        if let Some(c_heavy) = c_heavy {
+            assert!(c_heavy >= c_light, "heavy {c_heavy} < light {c_light}");
+        } // else: infeasible everywhere is acceptable for the heavy case
+    }
+
+    #[test]
+    fn utilization_monotone_in_rate() {
+        let (ts, ss, cal) = surfaces();
+        let base = Workload {
+            n_signals: 16,
+            n_memvec: 64,
+            obs_per_sec: 1.0,
+            train_window: 1024,
+        };
+        let fast = Workload {
+            obs_per_sec: 100.0,
+            ..base
+        };
+        let r1 = recommend(&base, &ts, &ss, cal, &Sla::default());
+        let r2 = recommend(&fast, &ts, &ss, cal, &Sla::default());
+        for (a, b) in r1.assessments.iter().zip(&r2.assessments) {
+            assert!(b.utilization >= a.utilization);
+        }
+    }
+
+    #[test]
+    fn render_mentions_chosen() {
+        let (ts, ss, cal) = surfaces();
+        let rec = recommend(&Workload::customer_a(), &ts, &ss, cal, &Sla::default());
+        let text = rec.render();
+        assert!(text.contains("chosen"));
+        assert!(text.contains("VM.Standard2.1"));
+    }
+}

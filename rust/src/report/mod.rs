@@ -1,0 +1,128 @@
+//! Report rendering: turns sweep results into the paper's artefacts —
+//! per-figure CSV data, gnuplot scripts, ASCII surfaces, sensitivity
+//! tables — written under `results/`.
+
+use crate::coordinator::SweepResult;
+use crate::surface::{ResponseSurface, SurfaceGrid};
+use crate::util::plot;
+use std::path::Path;
+
+/// Write a string to `dir/name`, creating directories as needed.
+pub fn write(dir: &Path, name: &str, content: &str) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(name), content)?;
+    Ok(())
+}
+
+/// Emit one paper-style figure: CSV + gnuplot script + ASCII preview.
+/// Returns the ASCII preview (also printed by the CLI).
+pub fn emit_figure(
+    dir: &Path,
+    stem: &str,
+    title: &str,
+    grid: &SurfaceGrid,
+    value_name: &str,
+    log_xy: bool,
+) -> anyhow::Result<String> {
+    let csv_name = format!("{stem}.csv");
+    write(dir, &csv_name, &grid.csv(value_name))?;
+    write(
+        dir,
+        &format!("{stem}.gnuplot"),
+        &plot::gnuplot_script(&csv_name, &format!("{stem}.png"), title, log_xy),
+    )?;
+    let ascii = grid.ascii(title, true);
+    write(dir, &format!("{stem}.txt"), &ascii)?;
+    Ok(ascii)
+}
+
+/// Sensitivity table for a sweep phase (the paper's §III.A conclusions).
+pub fn sensitivity_table(result: &SweepResult, phase: &str) -> anyhow::Result<String> {
+    let samples = result.samples(phase);
+    let surf = ResponseSurface::fit(&samples)?;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Sensitivity ({phase}), response-surface fit r²={:.4}\n",
+        surf.r2
+    ));
+    out.push_str("parameter     local power-law exponent\n");
+    for (name, e) in surf.ranking() {
+        out.push_str(&format!("{name:<13} {e:+.3}\n"));
+    }
+    Ok(out)
+}
+
+/// Per-cell measurement CSV (full provenance of a sweep).
+pub fn sweep_csv(result: &SweepResult) -> String {
+    let mut out = String::from(
+        "n_signals,n_memvec,n_obs,violated,train_median_s,train_iqr_s,surveil_median_s,surveil_iqr_s,trials\n",
+    );
+    for c in &result.cells {
+        let fmt = |s: &Option<crate::util::Summary>| match s {
+            Some(s) => format!("{},{}", s.median, s.p75 - s.p25),
+            None => ",".to_string(),
+        };
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{}\n",
+            c.key.n,
+            c.key.m,
+            c.key.obs,
+            c.violated,
+            fmt(&c.train),
+            fmt(&c.surveil),
+            result.spec.trials,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_sweep, Backend, SweepSpec};
+
+    fn small_result() -> SweepResult {
+        run_sweep(
+            &SweepSpec {
+                signals: vec![4, 8],
+                memvecs: vec![8, 16, 32],
+                obs: vec![32, 128],
+                trials: 2,
+                seed: 3,
+                model: "mset2".into(),
+                workers: 2,
+            },
+            Backend::Native,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn figure_emission_writes_three_files() {
+        let res = small_result();
+        let grid = res.panel("train", 4);
+        let dir = std::env::temp_dir().join("cs_report_test");
+        let ascii = emit_figure(&dir, "fig_test", "t", &grid, "cost_s", true).unwrap();
+        assert!(ascii.contains("t"));
+        for ext in ["csv", "gnuplot", "txt"] {
+            assert!(dir.join(format!("fig_test.{ext}")).exists());
+        }
+    }
+
+    #[test]
+    fn sensitivity_table_ranks_memvecs_for_training() {
+        let res = small_result();
+        let table = sensitivity_table(&res, "train").unwrap();
+        assert!(table.contains("n_memvec"));
+        assert!(table.contains("r²="));
+    }
+
+    #[test]
+    fn sweep_csv_has_all_cells() {
+        let res = small_result();
+        let csv = sweep_csv(&res);
+        // header + 12 cells
+        assert_eq!(csv.lines().count(), 13);
+        assert!(csv.contains("true")); // gap rows flagged
+    }
+}

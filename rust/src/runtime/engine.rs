@@ -1,0 +1,375 @@
+//! PJRT execution engine (device-thread confined).
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `compile` → `execute`. Executables are compiled
+//! lazily on first use and cached for the life of the engine — compile
+//! time is reported separately from execute time so the Monte Carlo cost
+//! measurements never include compilation.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so `Engine` must stay on one
+//! thread; [`super::DeviceServer`] provides the thread-safe front door.
+
+use super::manifest::{ArtifactMeta, Manifest};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// A host-side tensor (f32, row-major) that can cross thread boundaries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data");
+        Tensor { shape, data }
+    }
+
+    pub fn scalar1(v: f32) -> Tensor {
+        Tensor {
+            shape: vec![1],
+            data: vec![v],
+        }
+    }
+}
+
+/// Result of one device execution.
+#[derive(Clone, Debug)]
+pub struct ExecResult {
+    pub outputs: Vec<Tensor>,
+    /// Pure execute wall time (excludes compile).
+    pub exec_time: Duration,
+    /// Compile time if this call triggered the first compilation.
+    pub compiled_in: Option<Duration>,
+}
+
+/// Device-thread-confined engine.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Bound sessions: **device-resident** input prefixes (§Perf — the
+    /// streaming path keeps D/G/mask/bw as PjRtBuffers across chunks;
+    /// plain `execute` would re-upload ~1.3 MB of literals per call).
+    sessions: HashMap<u64, BoundSession>,
+}
+
+struct BoundSession {
+    artifact_id: String,
+    prefix: Vec<xla::PjRtBuffer>,
+}
+
+fn tensor_to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape input: {e}"))
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine over an artifact directory.
+    pub fn load(artifact_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        log::info!(
+            "PJRT engine up: platform={} devices={} artifacts={} (profile {})",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len(),
+            manifest.profile,
+        );
+        Ok(Engine {
+            manifest,
+            client,
+            cache: HashMap::new(),
+            sessions: HashMap::new(),
+        })
+    }
+
+    /// Number of executables compiled so far (cache size).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn compile_if_needed(&mut self, id: &str) -> anyhow::Result<Option<Duration>> {
+        if self.cache.contains_key(id) {
+            return Ok(None);
+        }
+        let art = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.id == id)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{id}'"))?
+            .clone();
+        let path = self.manifest.hlo_path(&art);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {id}: {e}"))?;
+        let dt = t0.elapsed();
+        log::debug!("compiled {id} in {:.3}s", dt.as_secs_f64());
+        self.cache.insert(id.to_string(), exe);
+        Ok(Some(dt))
+    }
+
+    /// Execute an artifact with the given inputs (validated against the
+    /// manifest). Outputs are unpacked from the return tuple in manifest
+    /// order.
+    pub fn exec(&mut self, id: &str, inputs: &[Tensor]) -> anyhow::Result<ExecResult> {
+        let compiled_in = self.compile_if_needed(id)?;
+        let art = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.id == id)
+            .unwrap()
+            .clone();
+        validate_inputs(&art, inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.run_literals(id, &art, &refs, compiled_in)
+    }
+
+    /// Bind an input prefix for repeated execution: marshals the first
+    /// `prefix.len()` manifest inputs of `id` into device literals once.
+    pub fn bind(&mut self, session: u64, id: &str, prefix: &[Tensor]) -> anyhow::Result<()> {
+        let art = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.id == id)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{id}'"))?;
+        anyhow::ensure!(
+            prefix.len() <= art.inputs.len(),
+            "prefix longer than artifact inputs"
+        );
+        for (t, spec) in prefix.iter().zip(&art.inputs) {
+            anyhow::ensure!(
+                t.shape == spec.shape,
+                "bind {id}: input '{}' shape {:?} != manifest {:?}",
+                spec.name,
+                t.shape,
+                spec.shape
+            );
+        }
+        let buffers = prefix
+            .iter()
+            .map(|t| {
+                self.client
+                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                    .map_err(|e| anyhow::anyhow!("upload bound input: {e}"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        self.sessions.insert(
+            session,
+            BoundSession {
+                artifact_id: id.to_string(),
+                prefix: buffers,
+            },
+        );
+        Ok(())
+    }
+
+    /// Execute a bound session with the remaining (tail) inputs.
+    pub fn exec_bound(&mut self, session: u64, tail: &[Tensor]) -> anyhow::Result<ExecResult> {
+        let id = self
+            .sessions
+            .get(&session)
+            .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))?
+            .artifact_id
+            .clone();
+        let compiled_in = self.compile_if_needed(&id)?;
+        let art = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.id == id)
+            .unwrap()
+            .clone();
+        let sess = self.sessions.get(&session).unwrap();
+        anyhow::ensure!(
+            sess.prefix.len() + tail.len() == art.inputs.len(),
+            "session {session}: {} bound + {} tail != {} inputs",
+            sess.prefix.len(),
+            tail.len(),
+            art.inputs.len()
+        );
+        for (t, spec) in tail.iter().zip(&art.inputs[sess.prefix.len()..]) {
+            anyhow::ensure!(
+                t.shape == spec.shape,
+                "exec_bound {id}: input '{}' shape {:?} != manifest {:?}",
+                spec.name,
+                t.shape,
+                spec.shape
+            );
+        }
+        let tail_bufs = tail
+            .iter()
+            .map(|t| {
+                self.client
+                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                    .map_err(|e| anyhow::anyhow!("upload tail input: {e}"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let sess = self.sessions.get(&session).unwrap();
+        let refs: Vec<&xla::PjRtBuffer> = sess.prefix.iter().chain(tail_bufs.iter()).collect();
+        self.run_buffers(&id, &art, &refs, compiled_in)
+    }
+
+    /// Drop a bound session (frees its literals).
+    pub fn unbind(&mut self, session: u64) {
+        self.sessions.remove(&session);
+    }
+
+    fn run_literals(
+        &self,
+        id: &str,
+        art: &ArtifactMeta,
+        literals: &[&xla::Literal],
+        compiled_in: Option<Duration>,
+    ) -> anyhow::Result<ExecResult> {
+        let exe = self.cache.get(id).unwrap();
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<&xla::Literal>(literals)
+            .map_err(|e| anyhow::anyhow!("execute {id}: {e}"))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+        let exec_time = t0.elapsed();
+        self.unpack_outputs(id, art, out_lit, exec_time, compiled_in)
+    }
+
+    /// Buffer-path execution (bound sessions): inputs already live on the
+    /// device, so only the tail upload and the output download move data.
+    fn run_buffers(
+        &self,
+        id: &str,
+        art: &ArtifactMeta,
+        buffers: &[&xla::PjRtBuffer],
+        compiled_in: Option<Duration>,
+    ) -> anyhow::Result<ExecResult> {
+        let exe = self.cache.get(id).unwrap();
+        let t0 = Instant::now();
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(buffers)
+            .map_err(|e| anyhow::anyhow!("execute_b {id}: {e}"))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+        let exec_time = t0.elapsed();
+        self.unpack_outputs(id, art, out_lit, exec_time, compiled_in)
+    }
+
+    fn unpack_outputs(
+        &self,
+        id: &str,
+        art: &ArtifactMeta,
+        out_lit: xla::Literal,
+        exec_time: Duration,
+        compiled_in: Option<Duration>,
+    ) -> anyhow::Result<ExecResult> {
+
+        // Graphs are lowered with return_tuple=True.
+        let parts = out_lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+        anyhow::ensure!(
+            parts.len() == art.outputs.len(),
+            "artifact {id}: expected {} outputs, got {}",
+            art.outputs.len(),
+            parts.len()
+        );
+        let outputs = parts
+            .into_iter()
+            .zip(&art.outputs)
+            .map(|(lit, spec)| {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("output {}: {e}", spec.name))?;
+                anyhow::ensure!(
+                    data.len() == spec.shape.iter().product::<usize>(),
+                    "output {} size mismatch",
+                    spec.name
+                );
+                Ok(Tensor::new(spec.shape.clone(), data))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(ExecResult {
+            outputs,
+            exec_time,
+            compiled_in,
+        })
+    }
+}
+
+fn validate_inputs(art: &ArtifactMeta, inputs: &[Tensor]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        inputs.len() == art.inputs.len(),
+        "artifact {}: expected {} inputs, got {}",
+        art.id,
+        art.inputs.len(),
+        inputs.len()
+    );
+    for (t, spec) in inputs.iter().zip(&art.inputs) {
+        anyhow::ensure!(
+            t.shape == spec.shape,
+            "artifact {}: input '{}' shape {:?} != manifest {:?}",
+            art.id,
+            spec.name,
+            t.shape,
+            spec.shape
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TEST_MANIFEST;
+    use std::path::PathBuf;
+
+    #[test]
+    fn tensor_shape_checked() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data")]
+    fn tensor_bad_shape_panics() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn validate_inputs_catches_mismatch() {
+        let man = Manifest::parse(TEST_MANIFEST, PathBuf::from(".")).unwrap();
+        let art = man.find("mset2_train", 8, 32).unwrap();
+        let good = vec![
+            Tensor::new(vec![32, 8], vec![0.0; 256]),
+            Tensor::new(vec![32], vec![1.0; 32]),
+            Tensor::scalar1(1.4),
+        ];
+        assert!(validate_inputs(art, &good).is_ok());
+        let bad = vec![
+            Tensor::new(vec![32, 8], vec![0.0; 256]),
+            Tensor::new(vec![16], vec![1.0; 16]),
+            Tensor::scalar1(1.4),
+        ];
+        assert!(validate_inputs(art, &bad).is_err());
+        assert!(validate_inputs(art, &good[..2].to_vec()).is_err());
+    }
+}

@@ -1,0 +1,211 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json` at build time) and the Rust runtime
+//! (which loads it at startup and never touches Python again).
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Shape of one graph input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One AOT-lowered executable.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub id: String,
+    /// Graph family: `mset2_train` | `mset2_surveil` | `aakr_surveil`.
+    pub graph: String,
+    /// Bucket signal count.
+    pub n: usize,
+    /// Bucket memory-vector count.
+    pub m: usize,
+    /// Observation-chunk rows for surveillance graphs.
+    pub chunk: usize,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub profile: String,
+    pub gamma: f64,
+    pub ridge_rel: f64,
+    pub ns_iters: usize,
+    pub chunk: usize,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn io_specs(v: &Json) -> anyhow::Result<Vec<IoSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("io spec not an array"))?
+        .iter()
+        .map(|e| {
+            Ok(IoSpec {
+                name: e.req("name")?.as_str().unwrap_or_default().to_string(),
+                shape: e
+                    .req("shape")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Manifest::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON (separated from I/O for testing).
+    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let version = root.req("version")?.as_usize().unwrap_or(0);
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let artifacts = root
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("artifacts not an array"))?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactMeta {
+                    id: a.req("id")?.as_str().unwrap_or_default().to_string(),
+                    graph: a.req("graph")?.as_str().unwrap_or_default().to_string(),
+                    n: a.req("n")?.as_usize().unwrap_or(0),
+                    m: a.req("m")?.as_usize().unwrap_or(0),
+                    chunk: a.req("chunk")?.as_usize().unwrap_or(0),
+                    file: a.req("file")?.as_str().unwrap_or_default().to_string(),
+                    inputs: io_specs(a.req("inputs")?)?,
+                    outputs: io_specs(a.req("outputs")?)?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir,
+            profile: root
+                .req("profile")?
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            gamma: root.req("gamma")?.as_f64().unwrap_or(0.5),
+            ridge_rel: root.req("ridge_rel")?.as_f64().unwrap_or(1e-3),
+            ns_iters: root.req("ns_iters")?.as_usize().unwrap_or(30),
+            chunk: root.req("chunk")?.as_usize().unwrap_or(0),
+            artifacts,
+        })
+    }
+
+    /// Look up an artifact by graph family and bucket.
+    pub fn find(&self, graph: &str, n: usize, m: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.graph == graph && a.n == n && a.m == m)
+    }
+
+    /// All (n, m) buckets available for a graph family, sorted by capacity.
+    pub fn buckets(&self, graph: &str) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.graph == graph)
+            .map(|a| (a.n, a.m))
+            .collect();
+        v.sort_by_key(|&(n, m)| (n * m, n, m));
+        v
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, art: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&art.file)
+    }
+}
+
+#[cfg(test)]
+pub(crate) const TEST_MANIFEST: &str = r#"{
+  "version": 1, "profile": "dev", "gamma": 0.5, "ridge_rel": 0.001,
+  "ns_iters": 30, "chunk": 32, "signals": [8, 16], "memvecs": [32, 64],
+  "artifacts": [
+    {"id": "mset2_train_n8_m32", "graph": "mset2_train", "n": 8, "m": 32,
+     "chunk": 32, "file": "mset2_train_n8_m32.hlo.txt",
+     "inputs": [{"name": "d", "shape": [32, 8]}, {"name": "mask", "shape": [32]},
+                {"name": "bw", "shape": [1]}],
+     "outputs": [{"name": "g", "shape": [32, 32]}]},
+    {"id": "mset2_train_n16_m64", "graph": "mset2_train", "n": 16, "m": 64,
+     "chunk": 32, "file": "mset2_train_n16_m64.hlo.txt",
+     "inputs": [{"name": "d", "shape": [64, 16]}, {"name": "mask", "shape": [64]},
+                {"name": "bw", "shape": [1]}],
+     "outputs": [{"name": "g", "shape": [64, 64]}]},
+    {"id": "mset2_surveil_n8_m32", "graph": "mset2_surveil", "n": 8, "m": 32,
+     "chunk": 32, "file": "mset2_surveil_n8_m32.hlo.txt",
+     "inputs": [{"name": "d", "shape": [32, 8]}, {"name": "g", "shape": [32, 32]},
+                {"name": "mask", "shape": [32]}, {"name": "bw", "shape": [1]},
+                {"name": "x", "shape": [32, 8]}],
+     "outputs": [{"name": "xhat", "shape": [32, 8]}, {"name": "resid", "shape": [32, 8]}]}
+  ]
+}"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(TEST_MANIFEST, PathBuf::from("/tmp/a")).unwrap()
+    }
+
+    #[test]
+    fn parses_fields() {
+        let m = manifest();
+        assert_eq!(m.profile, "dev");
+        assert_eq!(m.chunk, 32);
+        assert_eq!(m.artifacts.len(), 3);
+        assert!((m.gamma - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn find_and_buckets() {
+        let m = manifest();
+        assert!(m.find("mset2_train", 8, 32).is_some());
+        assert!(m.find("mset2_train", 8, 33).is_none());
+        let b = m.buckets("mset2_train");
+        assert_eq!(b, vec![(8, 32), (16, 64)]);
+    }
+
+    #[test]
+    fn io_specs_parsed() {
+        let m = manifest();
+        let art = m.find("mset2_surveil", 8, 32).unwrap();
+        assert_eq!(art.inputs.len(), 5);
+        assert_eq!(art.inputs[4].shape, vec![32, 8]);
+        assert_eq!(art.outputs[0].name, "xhat");
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let text = TEST_MANIFEST.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&text, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn missing_file_message_mentions_make() {
+        let err = Manifest::load("/nonexistent-dir-xyz").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

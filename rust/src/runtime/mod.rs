@@ -1,0 +1,215 @@
+//! Runtime: loads the AOT artifacts and executes them via PJRT.
+//!
+//! Layering (DESIGN.md §2.4):
+//!
+//! - [`manifest`] — parse `artifacts/manifest.json`;
+//! - [`router`]  — bucket selection + zero-padding;
+//! - [`engine`]  — PJRT client, lazy compile cache, timed execution
+//!   (thread-confined: `PjRtClient` is `Rc`-based);
+//! - [`DeviceServer`]/[`DeviceHandle`] — the thread-safe front door: a
+//!   dedicated device thread owns the [`engine::Engine`]; any number of
+//!   coordinator workers hold cloneable handles and submit requests over a
+//!   channel. Serialising executions also keeps the Monte Carlo *compute
+//!   cost* measurements free of cross-trial contention — matching the
+//!   paper's setting of benchmarking one container at a time.
+//! - [`mset`]    — high-level `DeviceMset`/`DeviceAakr` sessions that pad,
+//!   execute and unpad whole workloads.
+
+pub mod engine;
+pub mod manifest;
+pub mod mset;
+pub mod router;
+
+pub use engine::{ExecResult, Tensor};
+pub use manifest::Manifest;
+pub use router::Bucket;
+
+use std::sync::mpsc;
+
+enum Request {
+    Exec {
+        id: String,
+        inputs: Vec<Tensor>,
+        reply: mpsc::Sender<anyhow::Result<ExecResult>>,
+    },
+    Bind {
+        session: u64,
+        id: String,
+        prefix: Vec<Tensor>,
+        reply: mpsc::Sender<anyhow::Result<()>>,
+    },
+    ExecBound {
+        session: u64,
+        tail: Vec<Tensor>,
+        reply: mpsc::Sender<anyhow::Result<ExecResult>>,
+    },
+    Unbind {
+        session: u64,
+    },
+    Manifest {
+        reply: mpsc::Sender<Manifest>,
+    },
+    CompiledCount {
+        reply: mpsc::Sender<usize>,
+    },
+}
+
+/// Session-id allocator (process-wide; ids never reused).
+static NEXT_SESSION: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+/// Cloneable, `Send` handle to the device thread.
+#[derive(Clone)]
+pub struct DeviceHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+/// Owns the device thread; the thread exits when every [`DeviceHandle`]
+/// (including the server's own) has been dropped.
+pub struct DeviceServer {
+    handle: DeviceHandle,
+    #[allow(dead_code)]
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl DeviceServer {
+    /// Spawn the device thread over an artifact directory.
+    pub fn start(artifact_dir: impl AsRef<std::path::Path>) -> anyhow::Result<DeviceServer> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-device".into())
+            .spawn(move || {
+                let mut engine = match engine::Engine::load(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Exec { id, inputs, reply } => {
+                            let _ = reply.send(engine.exec(&id, &inputs));
+                        }
+                        Request::Bind {
+                            session,
+                            id,
+                            prefix,
+                            reply,
+                        } => {
+                            let _ = reply.send(engine.bind(session, &id, &prefix));
+                        }
+                        Request::ExecBound {
+                            session,
+                            tail,
+                            reply,
+                        } => {
+                            let _ = reply.send(engine.exec_bound(session, &tail));
+                        }
+                        Request::Unbind { session } => {
+                            engine.unbind(session);
+                        }
+                        Request::Manifest { reply } => {
+                            let _ = reply.send(engine.manifest.clone());
+                        }
+                        Request::CompiledCount { reply } => {
+                            let _ = reply.send(engine.compiled_count());
+                        }
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("device thread died during startup"))??;
+        Ok(DeviceServer {
+            handle: DeviceHandle { tx },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> DeviceHandle {
+        self.handle.clone()
+    }
+}
+
+impl DeviceHandle {
+    /// Execute an artifact by id (blocking request/reply).
+    pub fn exec(&self, id: &str, inputs: Vec<Tensor>) -> anyhow::Result<ExecResult> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Exec {
+                id: id.to_string(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("device thread gone"))?
+    }
+
+    /// Bind an input prefix on the device thread; returns the session id.
+    /// Bound literals are marshaled once and reused by [`Self::exec_bound`]
+    /// — the §Perf fix for streaming surveillance (D/G/mask/bw stay
+    /// resident instead of being re-marshaled per chunk).
+    pub fn bind_session(&self, id: &str, prefix: Vec<Tensor>) -> anyhow::Result<u64> {
+        let session = NEXT_SESSION.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Bind {
+                session,
+                id: id.to_string(),
+                prefix,
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("device thread gone"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("device thread gone"))??;
+        Ok(session)
+    }
+
+    /// Execute a bound session with the remaining inputs.
+    pub fn exec_bound(&self, session: u64, tail: Vec<Tensor>) -> anyhow::Result<ExecResult> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::ExecBound {
+                session,
+                tail,
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("device thread gone"))?
+    }
+
+    /// Release a bound session (idempotent; best-effort on shutdown).
+    pub fn unbind_session(&self, session: u64) {
+        let _ = self.tx.send(Request::Unbind { session });
+    }
+
+    /// Fetch the manifest (cached copy crossing the channel).
+    pub fn manifest(&self) -> anyhow::Result<Manifest> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Manifest { reply })
+            .map_err(|_| anyhow::anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("device thread gone"))
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> anyhow::Result<usize> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::CompiledCount { reply })
+            .map_err(|_| anyhow::anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("device thread gone"))
+    }
+}
+
+/// Default artifact directory (overridable via `CONTAINERSTRESS_ARTIFACTS`).
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var("CONTAINERSTRESS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,256 @@
+//! High-level device sessions: pad → execute → unpad whole MSET2/AAKR
+//! workloads against the bucketed artifacts.
+//!
+//! A session binds one workload shape `(n_real, m_real)` to a bucket. Data
+//! preparation (scaling, memory-vector selection) happens in L3 via
+//! [`crate::mset`]; the session runs the two device phases the paper
+//! measures — **training** and **streaming surveillance** — and reports
+//! their pure execution times.
+
+use super::engine::Tensor;
+use super::router::{self, Bucket};
+use super::DeviceHandle;
+use crate::linalg::Mat;
+use std::time::Duration;
+
+/// Device-resident MSET2 session.
+pub struct DeviceMset {
+    handle: DeviceHandle,
+    pub bucket: Bucket,
+    pub n_real: usize,
+    pub m_real: usize,
+    pub chunk: usize,
+    /// Similarity-kernel γ from the manifest (exposed for diagnostics).
+    pub gamma: f64,
+    /// Padded memory matrix, kept for surveillance calls.
+    d_pad: Tensor,
+    mask: Tensor,
+    bw: Tensor,
+    /// Trained inverse (padded), present after `train`.
+    g_pad: Option<Tensor>,
+    /// Bound device session for surveillance: [d, g, mask, bw] marshaled
+    /// once on the device thread (§Perf — saves ~1.3 MB of marshaling per
+    /// chunk at the largest bucket).
+    surveil_session: Option<u64>,
+}
+
+/// Timing of one device phase.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseCost {
+    /// Pure execution time.
+    pub exec: Duration,
+    /// First-use compilation time, if any (excluded from cost metrics).
+    pub compile: Duration,
+    /// Device calls made.
+    pub calls: usize,
+}
+
+impl PhaseCost {
+    fn add(&mut self, r: &super::ExecResult) {
+        self.exec += r.exec_time;
+        self.compile += r.compiled_in.unwrap_or_default();
+        self.calls += 1;
+    }
+}
+
+impl DeviceMset {
+    /// Create a session for `(n_real, m_real)` from a scaled memory matrix
+    /// (`m_real × n_real`, e.g. selected by [`crate::mset::select_memory`]).
+    pub fn new(handle: DeviceHandle, d_scaled: &Mat) -> anyhow::Result<DeviceMset> {
+        let (m_real, n_real) = (d_scaled.rows, d_scaled.cols);
+        let man = handle.manifest()?;
+        let bucket = router::pick_bucket(&man.buckets("mset2_train"), n_real, m_real)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact bucket fits n={n_real}, m={m_real} \
+                     (largest: {:?}); re-run `make artifacts ARTIFACT_PROFILE=full`",
+                    man.buckets("mset2_train").last()
+                )
+            })?;
+        let d_pad = Tensor::new(
+            vec![bucket.m, bucket.n],
+            router::pad_mat_f32(d_scaled, bucket.m, bucket.n),
+        );
+        Ok(DeviceMset {
+            handle,
+            bucket,
+            n_real,
+            m_real,
+            chunk: man.chunk,
+            gamma: man.gamma,
+            mask: Tensor::new(vec![bucket.m], router::mask_f32(m_real, bucket.m)),
+            bw: Tensor::scalar1(router::bandwidth(man.gamma, n_real)),
+            d_pad,
+            g_pad: None,
+            surveil_session: None,
+        })
+    }
+
+    fn train_id(&self) -> String {
+        format!("mset2_train_n{}_m{}", self.bucket.n, self.bucket.m)
+    }
+
+    fn surveil_id(&self) -> String {
+        format!("mset2_surveil_n{}_m{}", self.bucket.n, self.bucket.m)
+    }
+
+    /// Run the training graph; returns the real-block `G` and phase cost.
+    pub fn train(&mut self) -> anyhow::Result<(Mat, PhaseCost)> {
+        let mut cost = PhaseCost::default();
+        let r = self.handle.exec(
+            &self.train_id(),
+            vec![self.d_pad.clone(), self.mask.clone(), self.bw.clone()],
+        )?;
+        cost.add(&r);
+        let g_pad = r.outputs.into_iter().next().expect("train emits G");
+        let g = router::unpad_mat_f32(&g_pad.data, self.bucket.m, self.m_real, self.m_real);
+        // Bind the surveillance prefix once: D, G, mask, bw stay marshaled
+        // on the device thread for every subsequent chunk.
+        if let Some(old) = self.surveil_session.take() {
+            self.handle.unbind_session(old);
+        }
+        let session = self.handle.bind_session(
+            &self.surveil_id(),
+            vec![
+                self.d_pad.clone(),
+                g_pad.clone(),
+                self.mask.clone(),
+                self.bw.clone(),
+            ],
+        )?;
+        self.surveil_session = Some(session);
+        self.g_pad = Some(g_pad);
+        Ok((g, cost))
+    }
+
+    /// Stream a scaled observation window (`rows × n_real`) through the
+    /// surveillance graph in bucket-sized chunks. Returns estimates,
+    /// residuals (both `rows × n_real`) and the phase cost.
+    pub fn surveil(&self, xs: &Mat) -> anyhow::Result<(Mat, Mat, PhaseCost)> {
+        anyhow::ensure!(xs.cols == self.n_real, "signal count mismatch");
+        let session = self
+            .surveil_session
+            .ok_or_else(|| anyhow::anyhow!("call train() before surveil()"))?;
+        let mut cost = PhaseCost::default();
+        let mut xhat = Mat::zeros(xs.rows, xs.cols);
+        let mut resid = Mat::zeros(xs.rows, xs.cols);
+        let mut row = 0;
+        while row < xs.rows {
+            let take = (xs.rows - row).min(self.chunk);
+            // Slice rows [row, row+take) then pad to (chunk × bucket.n).
+            let mut slice = Mat::zeros(take, xs.cols);
+            for r in 0..take {
+                slice.row_mut(r).copy_from_slice(xs.row(row + r));
+            }
+            let x_pad = Tensor::new(
+                vec![self.chunk, self.bucket.n],
+                router::pad_mat_f32(&slice, self.chunk, self.bucket.n),
+            );
+            let r = self.handle.exec_bound(session, vec![x_pad])?;
+            cost.add(&r);
+            let xh = router::unpad_mat_f32(
+                &r.outputs[0].data,
+                self.bucket.n,
+                take,
+                self.n_real,
+            );
+            let rs = router::unpad_mat_f32(
+                &r.outputs[1].data,
+                self.bucket.n,
+                take,
+                self.n_real,
+            );
+            for i in 0..take {
+                xhat.row_mut(row + i).copy_from_slice(xh.row(i));
+                resid.row_mut(row + i).copy_from_slice(rs.row(i));
+            }
+            row += take;
+        }
+        Ok((xhat, resid, cost))
+    }
+}
+
+impl Drop for DeviceMset {
+    fn drop(&mut self) {
+        if let Some(s) = self.surveil_session.take() {
+            self.handle.unbind_session(s);
+        }
+    }
+}
+
+/// Device-resident AAKR session (pluggable alternative; no training graph).
+pub struct DeviceAakr {
+    handle: DeviceHandle,
+    pub bucket: Bucket,
+    pub n_real: usize,
+    pub m_real: usize,
+    pub chunk: usize,
+    session: u64,
+}
+
+impl DeviceAakr {
+    pub fn new(handle: DeviceHandle, d_scaled: &Mat) -> anyhow::Result<DeviceAakr> {
+        let (m_real, n_real) = (d_scaled.rows, d_scaled.cols);
+        let man = handle.manifest()?;
+        let bucket = router::pick_bucket(&man.buckets("aakr_surveil"), n_real, m_real)
+            .ok_or_else(|| anyhow::anyhow!("no aakr bucket fits n={n_real}, m={m_real}"))?;
+        let d_pad = Tensor::new(
+            vec![bucket.m, bucket.n],
+            router::pad_mat_f32(d_scaled, bucket.m, bucket.n),
+        );
+        let mask = Tensor::new(vec![bucket.m], router::mask_f32(m_real, bucket.m));
+        let bw = Tensor::scalar1(router::bandwidth(man.gamma, n_real));
+        let session = handle.bind_session(
+            &format!("aakr_surveil_n{}_m{}", bucket.n, bucket.m),
+            vec![d_pad, mask, bw],
+        )?;
+        Ok(DeviceAakr {
+            handle,
+            bucket,
+            n_real,
+            m_real,
+            chunk: man.chunk,
+            session,
+        })
+    }
+
+    /// Stream a scaled window through the AAKR graph.
+    pub fn surveil(&self, xs: &Mat) -> anyhow::Result<(Mat, Mat, PhaseCost)> {
+        anyhow::ensure!(xs.cols == self.n_real, "signal count mismatch");
+        let mut cost = PhaseCost::default();
+        let mut xhat = Mat::zeros(xs.rows, xs.cols);
+        let mut resid = Mat::zeros(xs.rows, xs.cols);
+        let mut row = 0;
+        while row < xs.rows {
+            let take = (xs.rows - row).min(self.chunk);
+            let mut slice = Mat::zeros(take, xs.cols);
+            for r in 0..take {
+                slice.row_mut(r).copy_from_slice(xs.row(row + r));
+            }
+            let x_pad = Tensor::new(
+                vec![self.chunk, self.bucket.n],
+                router::pad_mat_f32(&slice, self.chunk, self.bucket.n),
+            );
+            let r = self.handle.exec_bound(self.session, vec![x_pad])?;
+            cost.add(&r);
+            let xh = router::unpad_mat_f32(
+                &r.outputs[0].data,
+                self.bucket.n,
+                take,
+                self.n_real,
+            );
+            let rs = router::unpad_mat_f32(
+                &r.outputs[1].data,
+                self.bucket.n,
+                take,
+                self.n_real,
+            );
+            for i in 0..take {
+                xhat.row_mut(row + i).copy_from_slice(xh.row(i));
+                resid.row_mut(row + i).copy_from_slice(rs.row(i));
+            }
+            row += take;
+        }
+        Ok((xhat, resid, cost))
+    }
+}

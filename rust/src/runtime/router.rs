@@ -1,0 +1,209 @@
+//! Bucket routing and padding.
+//!
+//! XLA executables are shape-specialised; the AOT pipeline ships a grid of
+//! (n_signals, n_memvec) buckets. The router picks the smallest bucket that
+//! fits a workload and zero-pads tensors up to it. Correctness of padding
+//! relies on the masking contract of the L2 graphs (`model.py`):
+//! similarity bandwidth is passed separately (γ·√n_real) and padded memory
+//! rows are masked out of S and K.
+
+use crate::linalg::Mat;
+
+/// A (signals, memvecs) bucket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    pub n: usize,
+    pub m: usize,
+}
+
+/// Pick the smallest bucket (by padded area `n·m`, ties toward smaller n)
+/// that fits `(n_real, m_real)`. `buckets` need not be sorted.
+pub fn pick_bucket(buckets: &[(usize, usize)], n_real: usize, m_real: usize) -> Option<Bucket> {
+    buckets
+        .iter()
+        .filter(|&&(n, m)| n >= n_real && m >= m_real)
+        .min_by_key(|&&(n, m)| (n * m, n, m))
+        .map(|&(n, m)| Bucket { n, m })
+}
+
+/// Zero-pad a matrix (rows × cols) to (rows_to × cols_to), row-major f32.
+pub fn pad_mat_f32(x: &Mat, rows_to: usize, cols_to: usize) -> Vec<f32> {
+    assert!(x.rows <= rows_to && x.cols <= cols_to, "pad smaller than data");
+    let mut out = vec![0.0f32; rows_to * cols_to];
+    for r in 0..x.rows {
+        let src = x.row(r);
+        let dst = &mut out[r * cols_to..r * cols_to + x.cols];
+        for (d, &s) in dst.iter_mut().zip(src.iter()) {
+            *d = s as f32;
+        }
+    }
+    out
+}
+
+/// Extract the top-left (rows × cols) block from a padded row-major buffer.
+pub fn unpad_mat_f32(data: &[f32], padded_cols: usize, rows: usize, cols: usize) -> Mat {
+    assert!(data.len() >= rows * padded_cols);
+    let mut out = Mat::zeros(rows, cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            out[(r, c)] = data[r * padded_cols + c] as f64;
+        }
+    }
+    out
+}
+
+/// Memory-vector mask: 1.0 for the first `m_real` slots, 0.0 for padding.
+pub fn mask_f32(m_real: usize, m_bucket: usize) -> Vec<f32> {
+    assert!(m_real <= m_bucket);
+    let mut v = vec![0.0f32; m_bucket];
+    for s in v.iter_mut().take(m_real) {
+        *s = 1.0;
+    }
+    v
+}
+
+/// Similarity bandwidth for the *unpadded* signal count.
+pub fn bandwidth(gamma: f64, n_real: usize) -> f32 {
+    (gamma * (n_real as f64).sqrt()) as f32
+}
+
+/// Number of `chunk`-row device calls needed for `rows` observations.
+pub fn n_chunks(rows: usize, chunk: usize) -> usize {
+    rows.div_ceil(chunk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall_res;
+    use crate::util::rng::Rng;
+
+    const GRID: &[(usize, usize)] = &[
+        (8, 32),
+        (8, 64),
+        (16, 32),
+        (16, 64),
+        (32, 64),
+        (32, 128),
+        (64, 128),
+        (64, 256),
+        (128, 256),
+        (128, 512),
+    ];
+
+    #[test]
+    fn picks_exact_bucket_when_available() {
+        assert_eq!(
+            pick_bucket(GRID, 16, 64),
+            Some(Bucket { n: 16, m: 64 })
+        );
+    }
+
+    #[test]
+    fn picks_smallest_feasible() {
+        // 9 signals, 40 memvecs → (16, 64) has area 1024; (16,32) can't fit m.
+        assert_eq!(pick_bucket(GRID, 9, 40), Some(Bucket { n: 16, m: 64 }));
+        // 1 signal, 1 memvec → (8, 32)
+        assert_eq!(pick_bucket(GRID, 1, 1), Some(Bucket { n: 8, m: 32 }));
+    }
+
+    #[test]
+    fn none_when_too_large() {
+        assert_eq!(pick_bucket(GRID, 200, 32), None);
+        assert_eq!(pick_bucket(GRID, 8, 1024), None);
+    }
+
+    #[test]
+    fn pad_unpad_roundtrip() {
+        let mut rng = Rng::new(1);
+        let mut x = Mat::zeros(5, 3);
+        rng.fill_gauss(&mut x.data);
+        let padded = pad_mat_f32(&x, 8, 4);
+        assert_eq!(padded.len(), 32);
+        // padding area is zero
+        assert_eq!(padded[3], 0.0); // row 0, col 3
+        assert_eq!(padded[8 * 4 - 1], 0.0);
+        let back = unpad_mat_f32(&padded, 4, 5, 3);
+        assert!(x.max_abs_diff(&back) < 1e-6);
+    }
+
+    #[test]
+    fn mask_layout() {
+        let m = mask_f32(3, 6);
+        assert_eq!(m, vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn chunk_count() {
+        assert_eq!(n_chunks(0, 32), 0);
+        assert_eq!(n_chunks(1, 32), 1);
+        assert_eq!(n_chunks(32, 32), 1);
+        assert_eq!(n_chunks(33, 32), 2);
+    }
+
+    #[test]
+    fn prop_router_minimal_and_feasible() {
+        forall_res(
+            "router picks the smallest feasible bucket",
+            300,
+            |rng| {
+                let n = rng.range_usize(1, 140);
+                let m = rng.range_usize(1, 600);
+                (n, m)
+            },
+            |&(n, m)| {
+                match pick_bucket(GRID, n, m) {
+                    None => {
+                        // no feasible bucket may exist in the grid
+                        if GRID.iter().any(|&(bn, bm)| bn >= n && bm >= m) {
+                            return Err("router returned None but a bucket fits".into());
+                        }
+                    }
+                    Some(b) => {
+                        if b.n < n || b.m < m {
+                            return Err(format!("bucket {b:?} does not fit ({n},{m})"));
+                        }
+                        // minimality: no feasible bucket with smaller area
+                        if GRID
+                            .iter()
+                            .any(|&(bn, bm)| bn >= n && bm >= m && bn * bm < b.n * b.m)
+                        {
+                            return Err(format!("bucket {b:?} not minimal for ({n},{m})"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_pad_preserves_content_and_zeroes_rest() {
+        forall_res(
+            "padding preserves content",
+            100,
+            |rng| {
+                let r = rng.range_usize(1, 10);
+                let c = rng.range_usize(1, 10);
+                let rt = r + rng.range_usize(0, 6);
+                let ct = c + rng.range_usize(0, 6);
+                let mut x = Mat::zeros(r, c);
+                rng.fill_gauss(&mut x.data);
+                (x, rt, ct)
+            },
+            |(x, rt, ct)| {
+                let p = pad_mat_f32(x, *rt, *ct);
+                for r in 0..*rt {
+                    for c in 0..*ct {
+                        let v = p[r * ct + c] as f64;
+                        let expect = if r < x.rows && c < x.cols { x[(r, c)] } else { 0.0 };
+                        if (v - expect).abs() > 1e-6 {
+                            return Err(format!("mismatch at ({r},{c})"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

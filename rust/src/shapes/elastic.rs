@@ -1,0 +1,262 @@
+//! Elasticity simulator.
+//!
+//! The paper's introduction motivates ContainerStress with exactly this
+//! trade-off: *"Ideally, it would be nice to let a customer start small and
+//! autonomously grow their cloud container capabilities through
+//! 'elasticity' as compute dynamics dictate. However, in practice that
+//! flexibility is not as smooth as cloud marketing teams might wish."*
+//!
+//! This module quantifies that claim: given a workload-growth trace, it
+//! simulates (a) a **pre-scoped fixed shape** (what the ContainerStress
+//! recommendation buys up front) against (b) a **reactive autoscaler**
+//! that climbs the shape ladder when utilisation crosses a threshold —
+//! paying a scale-up lag (SLA violations while saturated) and a migration
+//! cost (retraining/transfer) on every step. Output: cost-over-time,
+//! violation counts, and the crossover where pre-scoping wins.
+
+use super::{catalog, Shape};
+
+/// Workload intensity over time: per-epoch demand expressed as the
+/// *fraction of a reference shape's capacity* (1 core-equivalent unit).
+#[derive(Clone, Debug)]
+pub struct GrowthTrace {
+    /// Demand per epoch, in core-equivalents.
+    pub demand: Vec<f64>,
+    /// Wall-clock hours per epoch.
+    pub hours_per_epoch: f64,
+}
+
+impl GrowthTrace {
+    /// Exponential customer growth: `d0 · g^t` for `epochs` epochs.
+    pub fn exponential(d0: f64, growth_per_epoch: f64, epochs: usize, hours: f64) -> Self {
+        GrowthTrace {
+            demand: (0..epochs)
+                .map(|t| d0 * growth_per_epoch.powi(t as i32))
+                .collect(),
+            hours_per_epoch: hours,
+        }
+    }
+
+    /// Step growth: demand doubles at each given epoch index.
+    pub fn steps(d0: f64, step_epochs: &[usize], epochs: usize, hours: f64) -> Self {
+        let mut demand = Vec::with_capacity(epochs);
+        let mut d = d0;
+        for t in 0..epochs {
+            if step_epochs.contains(&t) {
+                d *= 2.0;
+            }
+            demand.push(d);
+        }
+        GrowthTrace {
+            demand,
+            hours_per_epoch: hours,
+        }
+    }
+}
+
+/// Autoscaler policy.
+#[derive(Clone, Copy, Debug)]
+pub struct ElasticPolicy {
+    /// Scale up when utilisation exceeds this.
+    pub scale_up_at: f64,
+    /// Scale down when utilisation drops below this.
+    pub scale_down_at: f64,
+    /// Epochs of lag before a scale-up takes effect (provisioning +
+    /// retraining); demand above capacity during the lag violates SLA.
+    pub scale_lag_epochs: usize,
+    /// One-off cost per migration (USD — data transfer + retraining time).
+    pub migration_usd: f64,
+}
+
+impl Default for ElasticPolicy {
+    fn default() -> Self {
+        ElasticPolicy {
+            scale_up_at: 0.8,
+            scale_down_at: 0.3,
+            scale_lag_epochs: 2,
+            migration_usd: 5.0,
+        }
+    }
+}
+
+/// Result of one strategy simulation.
+#[derive(Clone, Debug)]
+pub struct ElasticOutcome {
+    pub total_usd: f64,
+    /// Epochs in which demand exceeded provisioned capacity.
+    pub violation_epochs: usize,
+    /// Number of shape migrations performed.
+    pub migrations: usize,
+    /// Shape name per epoch (for reporting).
+    pub shape_trace: Vec<&'static str>,
+}
+
+/// Capacity of a shape in core-equivalents (relative to a 1-core VM).
+fn capacity(shape: &Shape) -> f64 {
+    let base = catalog()[0].cpu_eff_flops();
+    shape.cpu_eff_flops() / base
+}
+
+/// CPU-shape ladder sorted by capacity.
+fn ladder() -> Vec<Shape> {
+    let mut v: Vec<Shape> = catalog().into_iter().filter(|s| !s.has_gpu()).collect();
+    v.sort_by(|a, b| capacity(a).partial_cmp(&capacity(b)).unwrap());
+    v
+}
+
+/// Simulate a fixed, pre-scoped shape over the trace.
+pub fn simulate_fixed(shape: &Shape, trace: &GrowthTrace) -> ElasticOutcome {
+    let cap = capacity(shape);
+    let mut violations = 0;
+    for &d in &trace.demand {
+        if d > cap {
+            violations += 1;
+        }
+    }
+    ElasticOutcome {
+        total_usd: shape.usd_per_hour * trace.hours_per_epoch * trace.demand.len() as f64,
+        violation_epochs: violations,
+        migrations: 0,
+        shape_trace: vec![shape.name; trace.demand.len()],
+    }
+}
+
+/// Simulate the reactive autoscaler over the trace.
+pub fn simulate_elastic(policy: &ElasticPolicy, trace: &GrowthTrace) -> ElasticOutcome {
+    let ladder = ladder();
+    let mut level = 0usize;
+    let mut pending: Option<(usize, usize)> = None; // (target level, ready epoch)
+    let mut total = 0.0;
+    let mut violations = 0;
+    let mut migrations = 0;
+    let mut shape_trace = Vec::with_capacity(trace.demand.len());
+    for (t, &d) in trace.demand.iter().enumerate() {
+        // complete a pending migration
+        if let Some((target, ready)) = pending {
+            if t >= ready {
+                level = target;
+                migrations += 1;
+                total += policy.migration_usd;
+                pending = None;
+            }
+        }
+        let shape = &ladder[level];
+        let cap = capacity(shape);
+        let util = d / cap;
+        if util > 1.0 {
+            violations += 1;
+        }
+        // policy decisions (only when no migration is in flight)
+        if pending.is_none() {
+            if util > policy.scale_up_at && level + 1 < ladder.len() {
+                // pick the smallest level with headroom
+                let target = (level + 1..ladder.len())
+                    .find(|&l| d / capacity(&ladder[l]) <= policy.scale_up_at)
+                    .unwrap_or(ladder.len() - 1);
+                pending = Some((target, t + policy.scale_lag_epochs));
+            } else if util < policy.scale_down_at && level > 0 {
+                let target = (0..level)
+                    .find(|&l| d / capacity(&ladder[l]) <= policy.scale_up_at)
+                    .unwrap_or(level - 1);
+                pending = Some((target, t + 1)); // scale-down is fast
+            }
+        }
+        total += shape.usd_per_hour * trace.hours_per_epoch;
+        shape_trace.push(shape.name);
+    }
+    ElasticOutcome {
+        total_usd: total,
+        violation_epochs: violations,
+        migrations,
+        shape_trace,
+    }
+}
+
+/// Side-by-side comparison used by reports: returns (fixed, elastic) for a
+/// pre-scoped shape chosen to cover the trace's *final* demand — the
+/// ContainerStress recommendation.
+pub fn compare(trace: &GrowthTrace, policy: &ElasticPolicy) -> (ElasticOutcome, ElasticOutcome) {
+    let peak = trace.demand.iter().cloned().fold(0.0, f64::max);
+    let ladder = ladder();
+    let scoped = ladder
+        .iter()
+        .find(|s| capacity(s) >= peak / 0.8)
+        .unwrap_or_else(|| ladder.last().unwrap())
+        .clone();
+    (
+        simulate_fixed(&scoped, trace),
+        simulate_elastic(policy, trace),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_shape_covering_peak_never_violates() {
+        // growth kept inside the catalog's largest CPU shape (~35 core-eq)
+        let trace = GrowthTrace::exponential(0.5, 1.04, 80, 24.0);
+        let (fixed, _) = compare(&trace, &ElasticPolicy::default());
+        assert_eq!(fixed.violation_epochs, 0);
+        assert_eq!(fixed.migrations, 0);
+    }
+
+    #[test]
+    fn elastic_violates_during_scale_lag() {
+        // Paper's point: elasticity "is not as smooth" — a fast-growing
+        // workload outruns the scale-up lag and takes SLA hits.
+        let trace = GrowthTrace::steps(0.5, &[10, 20, 30], 60, 24.0);
+        let elastic = simulate_elastic(&ElasticPolicy::default(), &trace);
+        assert!(
+            elastic.violation_epochs > 0,
+            "step growth must violate during lag"
+        );
+        assert!(elastic.migrations >= 3);
+    }
+
+    #[test]
+    fn elastic_cheaper_for_slow_growth() {
+        // A workload that stays small for most of its life: paying for the
+        // peak-scoped shape the whole time costs more.
+        let trace = GrowthTrace::exponential(0.3, 1.02, 200, 24.0);
+        let (fixed, elastic) = compare(&trace, &ElasticPolicy::default());
+        assert!(
+            elastic.total_usd < fixed.total_usd,
+            "elastic {:.0} vs fixed {:.0}",
+            elastic.total_usd,
+            fixed.total_usd
+        );
+    }
+
+    #[test]
+    fn fixed_wins_on_violations_elastic_on_cost() {
+        let trace = GrowthTrace::steps(0.4, &[5, 15, 25], 50, 24.0);
+        let (fixed, elastic) = compare(&trace, &ElasticPolicy::default());
+        assert_eq!(fixed.violation_epochs, 0);
+        assert!(elastic.violation_epochs > 0);
+        assert!(elastic.total_usd < fixed.total_usd);
+    }
+
+    #[test]
+    fn scale_down_happens() {
+        let mut demand = vec![8.0; 20];
+        demand.extend(vec![0.5; 40]);
+        let trace = GrowthTrace {
+            demand,
+            hours_per_epoch: 24.0,
+        };
+        let elastic = simulate_elastic(&ElasticPolicy::default(), &trace);
+        let last = elastic.shape_trace.last().unwrap();
+        let first_big = elastic.shape_trace[5];
+        assert_ne!(last, &first_big, "autoscaler never scaled down");
+    }
+
+    #[test]
+    fn trace_generators() {
+        let e = GrowthTrace::exponential(1.0, 2.0, 4, 1.0);
+        assert_eq!(e.demand, vec![1.0, 2.0, 4.0, 8.0]);
+        let s = GrowthTrace::steps(1.0, &[2], 4, 1.0);
+        assert_eq!(s.demand, vec![1.0, 1.0, 2.0, 2.0]);
+    }
+}

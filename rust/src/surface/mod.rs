@@ -1,0 +1,351 @@
+//! **Response-surface methodology** — the paper's §III.A presentation layer.
+//!
+//! The sweep engine produces compute-cost measurements over the 3-D grid of
+//! ML design parameters; this module fits the parametric cost function the
+//! paper visualises as 3-D response surfaces, computes sensitivity
+//! (which parameter dominates each phase — the paper's stated conclusion
+//! for Figs. 4/5), and exports surfaces as CSV/ASCII/gnuplot.
+//!
+//! The fit is a full quadratic in **log space**:
+//!
+//! ```text
+//! log t = c₀ + Σᵢ aᵢ·log pᵢ + Σᵢ≤ⱼ bᵢⱼ·log pᵢ·log pⱼ
+//! ```
+//!
+//! which captures power-law cost functions t ∝ nᵃ·mᵇ·Nᶜ exactly and their
+//! curvature; the fitted *main-effect exponents* aᵢ (evaluated at the grid
+//! centre) are the sensitivity indices.
+
+use crate::linalg::{lstsq, Mat};
+
+/// Names of the three ML design parameters (fixed order everywhere).
+pub const PARAMS: [&str; 3] = ["n_signals", "n_memvec", "n_obs"];
+
+/// One measured grid cell.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub n_signals: usize,
+    pub n_memvec: usize,
+    pub n_obs: usize,
+    /// Measured compute cost (seconds); must be > 0.
+    pub cost: f64,
+}
+
+impl Sample {
+    fn logs(&self) -> [f64; 3] {
+        [
+            (self.n_signals as f64).ln(),
+            (self.n_memvec as f64).ln(),
+            (self.n_obs as f64).ln(),
+        ]
+    }
+}
+
+/// Fitted quadratic response surface in log space.
+#[derive(Clone, Debug)]
+pub struct ResponseSurface {
+    /// 10 coefficients: 1, l0, l1, l2, l0², l0l1, l0l2, l1², l1l2, l2².
+    pub coef: Vec<f64>,
+    /// Centre of the design (mean of logs) for sensitivity evaluation.
+    pub centre: [f64; 3],
+    /// Coefficient of determination on the training samples.
+    pub r2: f64,
+}
+
+fn features(l: &[f64; 3]) -> [f64; 10] {
+    [
+        1.0,
+        l[0],
+        l[1],
+        l[2],
+        l[0] * l[0],
+        l[0] * l[1],
+        l[0] * l[2],
+        l[1] * l[1],
+        l[1] * l[2],
+        l[2] * l[2],
+    ]
+}
+
+impl ResponseSurface {
+    /// Fit from measured samples (needs ≥ 10 well-spread cells).
+    pub fn fit(samples: &[Sample]) -> anyhow::Result<ResponseSurface> {
+        Self::fit_inner(samples, false)
+    }
+
+    /// Pure power-law fit (`log t` linear in `log p`, quadratic terms
+    /// forced to zero). Slightly worse interpolation, but **safe for
+    /// extrapolation** far outside the measured grid (the quadratic's
+    /// curvature can bend predictions toward zero out there) — use this
+    /// when scoping workloads much larger than the sweep, e.g. the
+    /// paper's Customer-B extreme.
+    pub fn fit_power_law(samples: &[Sample]) -> anyhow::Result<ResponseSurface> {
+        Self::fit_inner(samples, true)
+    }
+
+    fn fit_inner(samples: &[Sample], linear_only: bool) -> anyhow::Result<ResponseSurface> {
+        anyhow::ensure!(samples.len() >= 10, "need ≥10 samples, got {}", samples.len());
+        anyhow::ensure!(
+            samples.iter().all(|s| s.cost > 0.0),
+            "costs must be positive"
+        );
+        let rows: Vec<Vec<f64>> = samples
+            .iter()
+            .map(|s| {
+                let f = features(&s.logs());
+                if linear_only {
+                    f[..4].to_vec()
+                } else {
+                    f.to_vec()
+                }
+            })
+            .collect();
+        let a = Mat::from_rows(rows);
+        let y: Vec<f64> = samples.iter().map(|s| s.cost.ln()).collect();
+        let mut coef = lstsq(&a, &y);
+        let pred = a.matvec(&coef);
+        coef.resize(10, 0.0); // linear-only fits: quadratic coeffs = 0
+        // centre
+        let mut centre = [0.0; 3];
+        for s in samples {
+            let l = s.logs();
+            for k in 0..3 {
+                centre[k] += l[k];
+            }
+        }
+        for c in centre.iter_mut() {
+            *c /= samples.len() as f64;
+        }
+        // r²
+        let mean_y = y.iter().sum::<f64>() / y.len() as f64;
+        let ss_tot: f64 = y.iter().map(|v| (v - mean_y).powi(2)).sum();
+        let ss_res: f64 = y
+            .iter()
+            .zip(&pred)
+            .map(|(v, p)| (v - p) * (v - p))
+            .sum();
+        let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+        Ok(ResponseSurface { coef, centre, r2 })
+    }
+
+    /// Predicted cost (seconds) at a parameter point.
+    pub fn predict(&self, n_signals: usize, n_memvec: usize, n_obs: usize) -> f64 {
+        let l = [
+            (n_signals as f64).ln(),
+            (n_memvec as f64).ln(),
+            (n_obs as f64).ln(),
+        ];
+        let f = features(&l);
+        let log_t: f64 = f.iter().zip(&self.coef).map(|(a, b)| a * b).sum();
+        log_t.exp()
+    }
+
+    /// Main-effect exponents ∂log t / ∂log pᵢ at the design centre — the
+    /// local power-law exponent of each parameter. Larger |exponent| =
+    /// stronger influence (the paper's sensitivity conclusion).
+    pub fn exponents(&self) -> [f64; 3] {
+        let c = &self.coef;
+        let l = &self.centre;
+        [
+            c[1] + 2.0 * c[4] * l[0] + c[5] * l[1] + c[6] * l[2],
+            c[2] + c[5] * l[0] + 2.0 * c[7] * l[1] + c[8] * l[2],
+            c[3] + c[6] * l[0] + c[8] * l[1] + 2.0 * c[9] * l[2],
+        ]
+    }
+
+    /// Parameters ranked by influence (descending |exponent|).
+    pub fn ranking(&self) -> Vec<(&'static str, f64)> {
+        let e = self.exponents();
+        let mut v: Vec<(&'static str, f64)> =
+            PARAMS.iter().copied().zip(e.iter().copied()).collect();
+        v.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
+        v
+    }
+}
+
+/// A 2-D slice of measurements for rendering one paper panel: rows =
+/// memvec axis, cols = second axis, `None` = constraint gap.
+#[derive(Clone, Debug)]
+pub struct SurfaceGrid {
+    pub row_name: String,
+    pub col_name: String,
+    pub row_vals: Vec<f64>,
+    pub col_vals: Vec<f64>,
+    pub cells: Vec<Vec<Option<f64>>>,
+}
+
+impl SurfaceGrid {
+    pub fn new(
+        row_name: &str,
+        col_name: &str,
+        row_vals: Vec<f64>,
+        col_vals: Vec<f64>,
+    ) -> SurfaceGrid {
+        let cells = vec![vec![None; col_vals.len()]; row_vals.len()];
+        SurfaceGrid {
+            row_name: row_name.to_string(),
+            col_name: col_name.to_string(),
+            row_vals,
+            col_vals,
+            cells,
+        }
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.cells[r][c] = Some(v);
+    }
+
+    /// Fraction of cells filled (1.0 − gap fraction).
+    pub fn coverage(&self) -> f64 {
+        let total = self.row_vals.len() * self.col_vals.len();
+        let filled = self
+            .cells
+            .iter()
+            .flat_map(|r| r.iter())
+            .filter(|c| c.is_some())
+            .count();
+        filled as f64 / total.max(1) as f64
+    }
+
+    /// ASCII heat-map (paper-style blue→red becomes glyph density).
+    pub fn ascii(&self, title: &str, log_scale: bool) -> String {
+        let row_ticks: Vec<String> = self.row_vals.iter().map(|v| format!("{v}")).collect();
+        let col_ticks: Vec<String> = self.col_vals.iter().map(|v| format!("{v}")).collect();
+        crate::util::plot::heatmap(
+            title,
+            &self.row_name,
+            &self.col_name,
+            &row_ticks,
+            &col_ticks,
+            &self.cells,
+            log_scale,
+        )
+    }
+
+    /// Long-format CSV.
+    pub fn csv(&self, value_name: &str) -> String {
+        crate::util::plot::grid_csv(
+            &self.row_name,
+            &self.col_name,
+            value_name,
+            &self.row_vals,
+            &self.col_vals,
+            &self.cells,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Synthetic cost law t = 3e-9 · n^1.1 · m^2.05 · N^0.1 (training-like).
+    fn synth_samples(noise: f64, seed: u64) -> Vec<Sample> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        for &n in &[8usize, 16, 32, 64] {
+            for &m in &[32usize, 64, 128, 256] {
+                for &obs in &[256usize, 1024, 4096] {
+                    let t = 3e-9
+                        * (n as f64).powf(1.1)
+                        * (m as f64).powf(2.05)
+                        * (obs as f64).powf(0.1);
+                    let t = t * (1.0 + noise * rng.gauss()).max(0.1);
+                    out.push(Sample {
+                        n_signals: n,
+                        n_memvec: m,
+                        n_obs: obs,
+                        cost: t,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fit_recovers_power_law() {
+        let surf = ResponseSurface::fit(&synth_samples(0.0, 1)).unwrap();
+        assert!(surf.r2 > 0.9999, "r2={}", surf.r2);
+        let e = surf.exponents();
+        assert!((e[0] - 1.1).abs() < 0.05, "n exponent {e:?}");
+        assert!((e[1] - 2.05).abs() < 0.05, "m exponent {e:?}");
+        assert!((e[2] - 0.1).abs() < 0.05, "obs exponent {e:?}");
+    }
+
+    #[test]
+    fn fit_robust_to_noise() {
+        let surf = ResponseSurface::fit(&synth_samples(0.1, 2)).unwrap();
+        assert!(surf.r2 > 0.95, "r2={}", surf.r2);
+        let e = surf.exponents();
+        assert!((e[1] - 2.05).abs() < 0.2, "m exponent under noise {e:?}");
+    }
+
+    #[test]
+    fn ranking_identifies_dominant_parameter() {
+        let surf = ResponseSurface::fit(&synth_samples(0.05, 3)).unwrap();
+        let rank = surf.ranking();
+        // m (exponent ≈2) must rank first, n (≈1.1) second — the paper's
+        // training-phase sensitivity conclusion.
+        assert_eq!(rank[0].0, "n_memvec");
+        assert_eq!(rank[1].0, "n_signals");
+        assert_eq!(rank[2].0, "n_obs");
+    }
+
+    #[test]
+    fn predict_interpolates() {
+        let surf = ResponseSurface::fit(&synth_samples(0.0, 4)).unwrap();
+        let truth = 3e-9 * 24f64.powf(1.1) * 96f64.powf(2.05) * 512f64.powf(0.1);
+        let pred = surf.predict(24, 96, 512);
+        assert!((pred - truth).abs() / truth < 0.05, "pred {pred} truth {truth}");
+    }
+
+    #[test]
+    fn power_law_fit_extrapolates_sanely() {
+        let samples = synth_samples(0.05, 8);
+        let surf = ResponseSurface::fit_power_law(&samples).unwrap();
+        assert!(surf.r2 > 0.95, "r2={}", surf.r2);
+        // Extrapolate 64× beyond the grid in m: prediction must follow the
+        // power law (×64^2.05 per doubling chain), not collapse.
+        let base = surf.predict(32, 256, 1024);
+        let far = surf.predict(32, 16384, 1024);
+        let ratio = far / base;
+        let expect = 64f64.powf(2.05);
+        assert!(
+            (ratio / expect).ln().abs() < 0.5,
+            "extrapolation ratio {ratio:.1} vs power-law {expect:.1}"
+        );
+        // exponents equal the global power law
+        let e = surf.exponents();
+        assert!((e[1] - 2.05).abs() < 0.1, "{e:?}");
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_input() {
+        assert!(ResponseSurface::fit(&[]).is_err());
+        let bad = vec![
+            Sample {
+                n_signals: 8,
+                n_memvec: 32,
+                n_obs: 100,
+                cost: -1.0,
+            };
+            12
+        ];
+        assert!(ResponseSurface::fit(&bad).is_err());
+    }
+
+    #[test]
+    fn grid_coverage_and_render() {
+        let mut g = SurfaceGrid::new("m", "N", vec![32.0, 64.0], vec![100.0, 200.0]);
+        g.set(0, 0, 1.0);
+        g.set(1, 1, 4.0);
+        assert!((g.coverage() - 0.5).abs() < 1e-12);
+        let a = g.ascii("test", true);
+        assert!(a.contains("test"));
+        let csv = g.csv("cost");
+        assert!(csv.contains("m,N,cost"));
+        assert!(csv.lines().count() == 5);
+    }
+}

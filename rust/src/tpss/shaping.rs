@@ -1,0 +1,168 @@
+//! Distribution shaping for synthesized telemetry.
+//!
+//! TPSS (refs [7–9] of the paper) synthesizes signals that match real
+//! telemetry "in all statistical characteristics important to ML
+//! prognostics", including *stochastic content* — variance, skewness and
+//! kurtosis. We realise that with the **Fleishman power method**: a cubic
+//! transform `y = a + b·z + c·z² + d·z³` of a standard normal `z` whose
+//! coefficients are solved (Newton iteration) to hit target skewness and
+//! kurtosis, then rescaled to the target variance.
+
+/// Coefficients of the Fleishman cubic.
+#[derive(Clone, Copy, Debug)]
+pub struct Fleishman {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub d: f64,
+}
+
+/// Moments of `y = a + bz + cz² + dz³`, z ~ N(0,1), as functions of (b,c,d),
+/// with `a = −c` so the mean is zero. Returns (var, skew, kurt).
+fn cubic_moments(b: f64, c: f64, d: f64) -> (f64, f64, f64) {
+    let b2 = b * b;
+    let c2 = c * c;
+    let d2 = d * d;
+    let var = b2 + 6.0 * b * d + 2.0 * c2 + 15.0 * d2;
+    let skew = 2.0 * c * (b2 + 24.0 * b * d + 105.0 * d2 + 2.0);
+    let kurt = 24.0
+        * (b * d + c2 * (1.0 + b2 + 28.0 * b * d)
+            + d2 * (12.0 + 48.0 * b * d + 141.0 * c2 + 225.0 * d2))
+        + 3.0 * var * var;
+    (var, skew, kurt)
+}
+
+/// Solve for Fleishman coefficients hitting (skewness, kurtosis) with unit
+/// variance and zero mean. `kurtosis` is the *raw* standardised fourth
+/// moment (normal = 3). Feasible region requires
+/// `kurtosis ≥ 1.64 + 1.77·skewness²` approximately; infeasible targets are
+/// clamped toward the boundary. Returns `None` only if Newton fails.
+pub fn fleishman(skewness: f64, kurtosis: f64) -> Option<Fleishman> {
+    // Feasibility clamp (Fleishman's empirical boundary).
+    let min_kurt = 1.64 + 1.77 * skewness * skewness + 0.05;
+    let kurt = kurtosis.max(min_kurt);
+
+    // Newton iteration on f(b,c,d) = (var−1, skew−s, kurt−k).
+    let (mut b, mut c, mut d) = (1.0f64, 0.05 * skewness.signum().max(0.0) + 0.01, 0.01);
+    if skewness == 0.0 {
+        c = 0.0;
+    }
+    for _ in 0..200 {
+        let (v, s, k) = cubic_moments(b, c, d);
+        let f = [v - 1.0, s - skewness, k - kurt];
+        let err = f.iter().map(|x| x.abs()).fold(0.0, f64::max);
+        if err < 1e-10 {
+            return Some(Fleishman { a: -c, b, c, d });
+        }
+        // numerical Jacobian
+        let h = 1e-7;
+        let mut jac = [[0.0; 3]; 3];
+        for (j, &(db, dc, dd)) in [(h, 0.0, 0.0), (0.0, h, 0.0), (0.0, 0.0, h)]
+            .iter()
+            .enumerate()
+        {
+            let (v2, s2, k2) = cubic_moments(b + db, c + dc, d + dd);
+            jac[0][j] = (v2 - v) / h;
+            jac[1][j] = (s2 - s) / h;
+            jac[2][j] = (k2 - k) / h;
+        }
+        // solve 3x3 system jac * delta = f (Cramer)
+        let det = det3(&jac);
+        if det.abs() < 1e-14 {
+            return None;
+        }
+        let dx = solve3(&jac, &f, det);
+        // damped update
+        let step = 0.8;
+        b -= step * dx[0];
+        c -= step * dx[1];
+        d -= step * dx[2];
+    }
+    let (v, s, k) = cubic_moments(b, c, d);
+    let ok = (v - 1.0).abs() < 1e-5 && (s - skewness).abs() < 1e-4 && (k - kurt).abs() < 1e-3;
+    if ok {
+        Some(Fleishman { a: -c, b, c, d })
+    } else {
+        None
+    }
+}
+
+fn det3(m: &[[f64; 3]; 3]) -> f64 {
+    m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+        - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+        + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0])
+}
+
+fn solve3(m: &[[f64; 3]; 3], f: &[f64; 3], det: f64) -> [f64; 3] {
+    let mut out = [0.0; 3];
+    for col in 0..3 {
+        let mut mm = *m;
+        for r in 0..3 {
+            mm[r][col] = f[r];
+        }
+        out[col] = det3(&mm) / det;
+    }
+    out
+}
+
+impl Fleishman {
+    /// Transform a standard-normal draw.
+    #[inline]
+    pub fn apply(&self, z: f64) -> f64 {
+        self.a + z * (self.b + z * (self.c + z * self.d))
+    }
+
+    /// Identity transform (Gaussian targets).
+    pub fn identity() -> Fleishman {
+        Fleishman {
+            a: 0.0,
+            b: 1.0,
+            c: 0.0,
+            d: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tpss::stats::moments;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gaussian_target_is_identityish() {
+        let f = fleishman(0.0, 3.0).unwrap();
+        assert!(f.c.abs() < 1e-6);
+        assert!((f.b - 1.0).abs() < 0.05 || f.d.abs() < 0.05);
+        let (v, s, k) = cubic_moments(f.b, f.c, f.d);
+        assert!((v - 1.0).abs() < 1e-6 && s.abs() < 1e-6 && (k - 3.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn skewed_heavy_tailed_sample_moments() {
+        let f = fleishman(0.8, 4.5).expect("solvable");
+        let mut rng = Rng::new(31);
+        let ys: Vec<f64> = (0..400_000).map(|_| f.apply(rng.gauss())).collect();
+        let m = moments(&ys);
+        assert!(m.mean.abs() < 0.02, "mean={}", m.mean);
+        assert!((m.var - 1.0).abs() < 0.05, "var={}", m.var);
+        assert!((m.skewness - 0.8).abs() < 0.1, "skew={}", m.skewness);
+        assert!((m.kurtosis - 4.5).abs() < 0.4, "kurt={}", m.kurtosis);
+    }
+
+    #[test]
+    fn negative_skew() {
+        let f = fleishman(-0.5, 3.5).expect("solvable");
+        let mut rng = Rng::new(37);
+        let ys: Vec<f64> = (0..200_000).map(|_| f.apply(rng.gauss())).collect();
+        let m = moments(&ys);
+        assert!((m.skewness + 0.5).abs() < 0.1, "skew={}", m.skewness);
+    }
+
+    #[test]
+    fn infeasible_kurtosis_clamped_not_crash() {
+        // kurtosis below the boundary for this skewness
+        let f = fleishman(1.5, 2.0);
+        assert!(f.is_some());
+    }
+}

@@ -1,0 +1,113 @@
+//! Statistical estimators used to validate synthesized telemetry against
+//! its specification (the properties the paper says matter: serial
+//! correlation, cross-correlation, variance/skewness/kurtosis).
+
+/// First four sample moments.
+#[derive(Clone, Copy, Debug)]
+pub struct Moments {
+    pub mean: f64,
+    pub var: f64,
+    /// Standardised third moment.
+    pub skewness: f64,
+    /// Standardised fourth moment (normal = 3).
+    pub kurtosis: f64,
+}
+
+pub fn moments(xs: &[f64]) -> Moments {
+    let n = xs.len() as f64;
+    assert!(n >= 2.0);
+    let mean = xs.iter().sum::<f64>() / n;
+    let (mut m2, mut m3, mut m4) = (0.0, 0.0, 0.0);
+    for &x in xs {
+        let d = x - mean;
+        m2 += d * d;
+        m3 += d * d * d;
+        m4 += d * d * d * d;
+    }
+    m2 /= n;
+    m3 /= n;
+    m4 /= n;
+    let sd = m2.sqrt();
+    Moments {
+        mean,
+        var: m2,
+        skewness: if sd > 0.0 { m3 / (sd * sd * sd) } else { 0.0 },
+        kurtosis: if m2 > 0.0 { m4 / (m2 * m2) } else { 0.0 },
+    }
+}
+
+/// Lag-`k` sample autocorrelation.
+pub fn autocorr(xs: &[f64], k: usize) -> f64 {
+    assert!(k < xs.len());
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let denom: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    let num: f64 = (0..n - k)
+        .map(|i| (xs[i] - mean) * (xs[i + k] - mean))
+        .sum();
+    num / denom
+}
+
+/// Pearson correlation between two equal-length series.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let (mut sab, mut saa, mut sbb) = (0.0, 0.0, 0.0);
+    for (&x, &y) in a.iter().zip(b) {
+        let dx = x - ma;
+        let dy = y - mb;
+        sab += dx * dy;
+        saa += dx * dx;
+        sbb += dy * dy;
+    }
+    if saa == 0.0 || sbb == 0.0 {
+        0.0
+    } else {
+        sab / (saa * sbb).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn moments_of_standard_normal_sample() {
+        let mut rng = Rng::new(17);
+        let xs: Vec<f64> = (0..100_000).map(|_| rng.gauss()).collect();
+        let m = moments(&xs);
+        assert!(m.mean.abs() < 0.02);
+        assert!((m.var - 1.0).abs() < 0.03);
+        assert!(m.skewness.abs() < 0.05);
+        assert!((m.kurtosis - 3.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn autocorr_of_white_noise_near_zero() {
+        let mut rng = Rng::new(23);
+        let xs: Vec<f64> = (0..50_000).map(|_| rng.gauss()).collect();
+        assert!(autocorr(&xs, 1).abs() < 0.02);
+        assert!(autocorr(&xs, 5).abs() < 0.02);
+    }
+
+    #[test]
+    fn autocorr_lag0_is_one() {
+        let xs = vec![1.0, 3.0, 2.0, 5.0, 4.0];
+        assert!((autocorr(&xs, 0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b: Vec<f64> = a.iter().map(|x| 2.0 * x + 1.0).collect();
+        let c: Vec<f64> = a.iter().map(|x| -x).collect();
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-12);
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,167 @@
+//! Command-line argument parsing (offline substitute for `clap`).
+//!
+//! Supports the launcher grammar used by `containerstress`:
+//!
+//! ```text
+//! containerstress <subcommand> [--flag] [--key value] [--key=value] [positional…]
+//! ```
+//!
+//! Typed getters return `anyhow::Result` so the binary can print a friendly
+//! usage message on bad input.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: one optional subcommand, `--key value` options,
+/// bare `--flag`s and positionals, in original order.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        // subcommand = first non-flag token
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// Parse a comma-separated list of integers, e.g. `--signals 8,16,32`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{name}: bad integer '{s}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NB: `--flag value` is parsed as an option; bare flags go last or
+        // before another `--` token.
+        let a = args("sweep --signals 8,16 --trials=5 out.csv --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("sweep"));
+        assert_eq!(a.get("signals"), Some("8,16"));
+        assert_eq!(a.get_usize("trials", 1).unwrap(), 5);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = args("scope --dry-run --fast");
+        assert!(a.flag("dry-run"));
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("dry-run"), None);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = args("x --n abc");
+        assert!(a.get_usize("n", 0).is_err());
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = args("x --ms 32,64, 128");
+        // note: space after comma splits the token; only '32,64,' belongs to --ms
+        assert!(a.get_usize_list("ms", &[]).is_err());
+        let b = args("x --ms 32,64,128");
+        assert_eq!(b.get_usize_list("ms", &[]).unwrap(), vec![32, 64, 128]);
+        assert_eq!(b.get_usize_list("none", &[1]).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn no_subcommand_when_flag_first() {
+        let a = args("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+}

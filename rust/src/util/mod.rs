@@ -1,0 +1,78 @@
+//! Foundational substrates that would normally come from crates.io but are
+//! unavailable in the offline build environment (see DESIGN.md §3):
+//! RNG (`rand`), JSON (`serde_json`), CLI (`clap`), thread pool
+//! (`tokio`/`rayon`), logger (`env_logger`), property testing (`proptest`),
+//! plus ASCII surface plotting.
+
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod plot;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+
+/// Robust summary statistics over a sample of measurements (seconds, etc.).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of(empty)");
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let q = |p: f64| -> f64 {
+            let idx = p * (n - 1) as f64;
+            let lo = idx.floor() as usize;
+            let hi = idx.ceil() as usize;
+            let frac = idx - lo as f64;
+            v[lo] * (1.0 - frac) + v[hi] * frac
+        };
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: v[0],
+            p25: q(0.25),
+            median: q(0.5),
+            p75: q(0.75),
+            max: v[n - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_sample() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p25, 2.0);
+        assert_eq!(s.p75, 4.0);
+    }
+
+    #[test]
+    fn summary_single_element() {
+        let s = Summary::of(&[2.5]);
+        assert_eq!(s.median, 2.5);
+        assert_eq!(s.std, 0.0);
+    }
+}

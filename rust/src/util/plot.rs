@@ -1,0 +1,166 @@
+//! ASCII rendering of the paper's 3-D response surfaces.
+//!
+//! The paper presents compute cost as 3-D response surfaces with a blue→red
+//! colour ramp. In a terminal we render the same data as a heat-map: rows =
+//! one axis, columns = the other, glyph density = normalised cost. Cells the
+//! sweep skipped (the m ≥ 2n training constraint, Fig. 6) render as blanks —
+//! the "missing parts of the training surface".
+
+/// Glyph ramp from cold to hot.
+const RAMP: &[char] = &['·', '░', '▒', '▓', '█'];
+
+/// Render a heat-map. `grid[r][c]` is the value at row `r`, column `c`;
+/// `None` marks constraint gaps. Rows are printed top-down in given order.
+pub fn heatmap(
+    title: &str,
+    row_label: &str,
+    col_label: &str,
+    row_ticks: &[String],
+    col_ticks: &[String],
+    grid: &[Vec<Option<f64>>],
+    log_scale: bool,
+) -> String {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for row in grid {
+        for v in row.iter().flatten() {
+            let v = if log_scale { v.max(1e-30).ln() } else { *v };
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    let span = (hi - lo).max(1e-12);
+    let tick_w = row_ticks.iter().map(|t| t.len()).max().unwrap_or(4).max(4);
+    let cell_w = col_ticks.iter().map(|t| t.len()).max().unwrap_or(3).max(3) + 1;
+
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    out.push_str(&format!(
+        "  rows: {row_label}   cols: {col_label}   ramp: {} (low) → {} (high){}\n",
+        RAMP[0],
+        RAMP[RAMP.len() - 1],
+        if log_scale { "  [log scale]" } else { "" }
+    ));
+    for (r, row) in grid.iter().enumerate() {
+        let tick = row_ticks.get(r).map(String::as_str).unwrap_or("");
+        out.push_str(&format!("  {tick:>tick_w$} |"));
+        for v in row {
+            match v {
+                None => out.push_str(&" ".repeat(cell_w)),
+                Some(x) => {
+                    let x = if log_scale { x.max(1e-30).ln() } else { *x };
+                    let t = ((x - lo) / span).clamp(0.0, 1.0);
+                    let g = RAMP[((t * (RAMP.len() - 1) as f64).round()) as usize];
+                    let pad = cell_w - 1;
+                    out.push_str(&" ".repeat(pad / 2));
+                    out.push(g);
+                    out.push_str(&" ".repeat(pad - pad / 2));
+                }
+            }
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!("  {:>tick_w$} +", ""));
+    for _ in col_ticks {
+        out.push_str(&"-".repeat(cell_w));
+    }
+    out.push('\n');
+    out.push_str(&format!("  {:>tick_w$}  ", ""));
+    for t in col_ticks {
+        out.push_str(&format!("{t:>cell_w$}"));
+    }
+    out.push('\n');
+    out
+}
+
+/// CSV export of the same grid (long format: row,col,value) for gnuplot /
+/// external plotting; gaps are written as empty values.
+pub fn grid_csv(
+    row_name: &str,
+    col_name: &str,
+    value_name: &str,
+    row_vals: &[f64],
+    col_vals: &[f64],
+    grid: &[Vec<Option<f64>>],
+) -> String {
+    let mut out = format!("{row_name},{col_name},{value_name}\n");
+    for (r, row) in grid.iter().enumerate() {
+        for (c, v) in row.iter().enumerate() {
+            match v {
+                Some(x) => out.push_str(&format!("{},{},{}\n", row_vals[r], col_vals[c], x)),
+                None => out.push_str(&format!("{},{},\n", row_vals[r], col_vals[c])),
+            }
+        }
+    }
+    out
+}
+
+/// Emit a gnuplot script that renders the CSV as a paper-style 3-D surface
+/// (pm3d, blue→red palette).
+pub fn gnuplot_script(csv_path: &str, png_path: &str, title: &str, log_xy: bool) -> String {
+    let mut s = String::new();
+    s.push_str("set datafile separator ','\n");
+    s.push_str(&format!("set output '{png_path}'\n"));
+    s.push_str("set terminal pngcairo size 900,700\n");
+    s.push_str(&format!("set title '{title}'\n"));
+    s.push_str("set palette defined (0 'blue', 0.5 'yellow', 1 'red')\n");
+    s.push_str("set pm3d at s\nset hidden3d\nset dgrid3d 32,32\n");
+    if log_xy {
+        s.push_str("set logscale xy 2\n");
+    }
+    s.push_str(&format!(
+        "splot '{csv_path}' every ::1 using 1:2:3 with pm3d notitle\n"
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ticks(v: &[f64]) -> Vec<String> {
+        v.iter().map(|x| format!("{x}")).collect()
+    }
+
+    #[test]
+    fn heatmap_renders_all_rows_and_gaps() {
+        let grid = vec![
+            vec![Some(1.0), Some(2.0), None],
+            vec![Some(4.0), None, Some(8.0)],
+        ];
+        let s = heatmap(
+            "t",
+            "m",
+            "n",
+            &ticks(&[32.0, 64.0]),
+            &ticks(&[8.0, 16.0, 32.0]),
+            &grid,
+            true,
+        );
+        assert!(s.contains('█'));
+        assert!(s.lines().count() >= 6);
+    }
+
+    #[test]
+    fn heatmap_constant_grid_no_panic() {
+        let grid = vec![vec![Some(5.0); 3]; 3];
+        let s = heatmap("c", "a", "b", &ticks(&[1., 2., 3.]), &ticks(&[1., 2., 3.]), &grid, false);
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn csv_long_format() {
+        let grid = vec![vec![Some(1.5), None]];
+        let csv = grid_csv("m", "n", "cost", &[32.0], &[8.0, 16.0], &grid);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "m,n,cost");
+        assert_eq!(lines[1], "32,8,1.5");
+        assert_eq!(lines[2], "32,16,");
+    }
+
+    #[test]
+    fn gnuplot_script_mentions_files() {
+        let s = gnuplot_script("a.csv", "a.png", "Fig 4", true);
+        assert!(s.contains("a.csv") && s.contains("a.png") && s.contains("logscale"));
+    }
+}

@@ -1,0 +1,112 @@
+//! Randomised property-testing harness (offline substitute for `proptest`).
+//!
+//! Usage:
+//!
+//! ```ignore
+//! use containerstress::util::prop::forall;
+//! forall("router picks smallest bucket", 200, |rng| gen_workload(rng), |w| {
+//!     check(w)
+//! });
+//! ```
+//!
+//! On failure the harness panics with the case index, seed and a debug dump
+//! of the failing input, so the case can be replayed deterministically with
+//! [`replay`]. (No shrinking — generators are encouraged to produce small
+//! cases with reasonable probability instead.)
+
+use super::rng::Rng;
+
+/// Base seed; override with `CONTAINERSTRESS_PROP_SEED` to replay a run.
+fn base_seed() -> u64 {
+    std::env::var("CONTAINERSTRESS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Check `prop(gen(rng))` for `cases` generated inputs.
+pub fn forall<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut rng = Rng::new(seed).fork(case as u64);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n{input:#?}\n\
+                 replay with CONTAINERSTRESS_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result` so failures can carry
+/// a message.
+pub fn forall_res<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut rng = Rng::new(seed).fork(case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {msg}\n{input:#?}\n\
+                 replay with CONTAINERSTRESS_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by index.
+pub fn replay<T, G>(case: usize, mut gen: G) -> T
+where
+    G: FnMut(&mut Rng) -> T,
+{
+    let mut rng = Rng::new(base_seed()).fork(case as u64);
+    gen(&mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall("reverse twice is identity", 100, |rng| {
+            let n = rng.range_usize(0, 20);
+            (0..n).map(|_| rng.below(100)).collect::<Vec<_>>()
+        }, |v| {
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            w == *v
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_case() {
+        forall("always fails", 10, |rng| rng.below(10), |_| false);
+    }
+
+    #[test]
+    fn replay_matches_forall_generation() {
+        let from_replay: Vec<u64> = (0..5)
+            .map(|c| replay(c, |rng: &mut Rng| rng.below(1000)))
+            .collect();
+        let mut from_forall = Vec::new();
+        forall("collect", 5, |rng| rng.below(1000), |x| {
+            from_forall.push(*x);
+            true
+        });
+        assert_eq!(from_replay, from_forall);
+    }
+}

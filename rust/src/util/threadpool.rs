@@ -1,0 +1,177 @@
+//! Work-stealing parallel map + persistent worker pool.
+//!
+//! `tokio`/`rayon` are unavailable offline; the sweep engine is compute-bound
+//! fan-out, so a scoped thread pool with an atomic work index covers the need.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Run `f(i, &items[i])` over all items on `workers` threads, returning the
+/// results in input order. `f` must be `Sync` (it is shared, not cloned).
+pub fn parallel_map<T, R, F>(workers: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let workers = workers.clamp(1, items.len().max(1));
+    if workers == 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    let out_slots: Vec<Mutex<&mut Option<R>>> = out.iter_mut().map(Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                **out_slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    drop(out_slots);
+    out.into_iter().map(|o| o.expect("worker missed slot")).collect()
+}
+
+/// Number of usable worker threads on this machine.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// A persistent FIFO job pool for the coordinator's leader/worker topology:
+/// jobs are boxed closures; results arrive on a channel as they complete.
+pub struct JobPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub workers: usize,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+impl JobPool {
+    pub fn new(workers: usize) -> JobPool {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // pool dropped
+                    }
+                })
+            })
+            .collect();
+        JobPool {
+            tx: Some(tx),
+            handles,
+            workers,
+        }
+    }
+
+    /// Submit a job; its result is delivered on `result_tx`.
+    pub fn submit<R, F>(&self, f: F, result_tx: mpsc::Sender<R>)
+    where
+        R: Send + 'static,
+        F: FnOnce() -> R + Send + 'static,
+    {
+        let job: Job = Box::new(move || {
+            let r = f();
+            // Receiver may have hung up if the submitter gave up; ignore.
+            let _ = result_tx.send(r);
+        });
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(job)
+            .expect("worker threads gone");
+    }
+
+    /// Wait for all workers to drain and exit.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close channel
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for JobPool {
+    fn drop(&mut self) {
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = parallel_map(8, &items, |i, &x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_single_worker() {
+        let items = vec![1, 2, 3];
+        assert_eq!(parallel_map(1, &items, |_, &x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let items: Vec<u8> = vec![];
+        assert!(parallel_map(4, &items, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn parallel_map_actually_parallel() {
+        // All workers must be in-flight at once for this to finish quickly.
+        use std::sync::atomic::AtomicUsize;
+        let peak = AtomicUsize::new(0);
+        let live = AtomicUsize::new(0);
+        let items: Vec<usize> = (0..8).collect();
+        parallel_map(8, &items, |_, _| {
+            let n = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(n, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            live.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) >= 2, "no overlap observed");
+    }
+
+    #[test]
+    fn job_pool_roundtrip() {
+        let pool = JobPool::new(4);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..100usize {
+            pool.submit(move || i * i, tx.clone());
+        }
+        drop(tx);
+        let mut got: Vec<usize> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        pool.shutdown();
+    }
+}

@@ -1,0 +1,197 @@
+//! Property tests over coordinator invariants (DESIGN.md §8), using the
+//! in-repo property harness (`util::prop`) — `proptest` is unavailable in
+//! the offline build environment.
+//!
+//! All properties run on the native backend (no artifacts required) so
+//! this suite is independent of `make artifacts`.
+
+use containerstress::coordinator::{run_sweep, Backend, SweepSpec};
+use containerstress::util::prop::{forall_res, forall};
+use containerstress::util::rng::Rng;
+
+/// Generate a small random sweep spec (kept tiny: each case really runs).
+fn gen_spec(rng: &mut Rng) -> SweepSpec {
+    let pick = |rng: &mut Rng, opts: &[usize], k: usize| -> Vec<usize> {
+        let mut v = rng.sample_indices(opts.len(), k.min(opts.len()));
+        v.sort_unstable();
+        v.into_iter().map(|i| opts[i]).collect()
+    };
+    let k_sig = 1 + rng.range_usize(0, 2);
+    let k_mem = 1 + rng.range_usize(0, 2);
+    let k_obs = 1 + rng.range_usize(0, 2);
+    SweepSpec {
+        signals: pick(rng, &[2, 3, 4, 6, 8], k_sig),
+        memvecs: pick(rng, &[4, 8, 12, 16, 24], k_mem),
+        obs: pick(rng, &[16, 32, 64], k_obs),
+        trials: 1 + rng.range_usize(0, 2),
+        seed: rng.next_u64(),
+        model: "mset2".into(),
+        workers: 1 + rng.range_usize(0, 3),
+    }
+}
+
+#[test]
+fn prop_grid_coverage_exact() {
+    forall_res(
+        "every grid cell appears exactly once",
+        12,
+        gen_spec,
+        |spec| {
+            let res = run_sweep(spec, Backend::Native).map_err(|e| e.to_string())?;
+            let expect = spec.signals.len() * spec.memvecs.len() * spec.obs.len();
+            if res.cells.len() != expect {
+                return Err(format!("{} cells != {expect}", res.cells.len()));
+            }
+            // no duplicates
+            let mut seen = std::collections::HashSet::new();
+            for c in &res.cells {
+                if !seen.insert((c.key.n, c.key.m, c.key.obs)) {
+                    return Err(format!("duplicate cell {:?}", c.key));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_constraint_cells_are_gaps_and_only_those() {
+    forall_res(
+        "m < 2n cells are gaps; all others measured",
+        12,
+        gen_spec,
+        |spec| {
+            let res = run_sweep(spec, Backend::Native).map_err(|e| e.to_string())?;
+            for c in &res.cells {
+                let should_gap = c.key.m < 2 * c.key.n;
+                if c.violated != should_gap {
+                    return Err(format!(
+                        "cell {:?}: violated={} expected {}",
+                        c.key, c.violated, should_gap
+                    ));
+                }
+                if should_gap && (c.train.is_some() || c.surveil.is_some()) {
+                    return Err(format!("gap cell {:?} has measurements", c.key));
+                }
+                if !should_gap {
+                    let t = c.train.as_ref().ok_or("missing train")?;
+                    let s = c.surveil.as_ref().ok_or("missing surveil")?;
+                    if t.n != spec.trials || s.n != spec.trials {
+                        return Err(format!(
+                            "cell {:?}: {}/{} trials, expected {}",
+                            c.key, t.n, s.n, spec.trials
+                        ));
+                    }
+                    if !(t.median > 0.0 && s.median > 0.0) {
+                        return Err(format!("cell {:?}: non-positive cost", c.key));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_worker_count_does_not_change_structure() {
+    forall_res(
+        "results independent of worker parallelism",
+        6,
+        |rng| {
+            let mut s = gen_spec(rng);
+            s.trials = 1;
+            s
+        },
+        |spec| {
+            let mut s1 = spec.clone();
+            s1.workers = 1;
+            let mut s4 = spec.clone();
+            s4.workers = 4;
+            let a = run_sweep(&s1, Backend::Native).map_err(|e| e.to_string())?;
+            let b = run_sweep(&s4, Backend::Native).map_err(|e| e.to_string())?;
+            if a.gap_cells() != b.gap_cells() {
+                return Err("gap cells differ with worker count".into());
+            }
+            let keys_a: Vec<_> = a.cells.iter().map(|c| c.key).collect();
+            let keys_b: Vec<_> = b.cells.iter().map(|c| c.key).collect();
+            if keys_a != keys_b {
+                return Err("cell order differs with worker count".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_samples_match_measured_cells() {
+    forall(
+        "surface samples = non-gap cells",
+        10,
+        gen_spec,
+        |spec| {
+            let res = run_sweep(spec, Backend::Native).unwrap();
+            let gaps = res.gap_cells().len();
+            res.samples("train").len() == res.cells.len() - gaps
+                && res.samples("surveil").len() == res.cells.len() - gaps
+        },
+    );
+}
+
+#[test]
+fn prop_aggregation_permutation_invariant() {
+    // Summary statistics must not depend on trial completion order — the
+    // engine keys results by cell, so shuffling the work list is safe.
+    use containerstress::util::Summary;
+    forall_res(
+        "Summary is permutation invariant",
+        50,
+        |rng| {
+            let n = 2 + rng.range_usize(0, 8);
+            let xs: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0).collect();
+            let mut shuffled = xs.clone();
+            rng.shuffle(&mut shuffled);
+            (xs, shuffled)
+        },
+        |(a, b)| {
+            let sa = Summary::of(a);
+            let sb = Summary::of(b);
+            if (sa.median - sb.median).abs() > 1e-12 || (sa.mean - sb.mean).abs() > 1e-12 {
+                return Err("summary changed under permutation".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scoping_service_completes_all_jobs() {
+    use containerstress::coordinator::jobs::ScopingService;
+    forall_res(
+        "every submitted job completes",
+        4,
+        |rng| {
+            let specs: Vec<SweepSpec> = (0..1 + rng.range_usize(0, 3))
+                .map(|_| {
+                    let mut s = gen_spec(rng);
+                    s.trials = 1;
+                    s.signals.truncate(1);
+                    s.memvecs.truncate(1);
+                    s.obs.truncate(1);
+                    s
+                })
+                .collect();
+            specs
+        },
+        |specs| {
+            let svc = ScopingService::start(Backend::Native, 16);
+            let ids: Vec<_> = specs
+                .iter()
+                .map(|s| svc.submit(s.clone()).map_err(|e| e.to_string()))
+                .collect::<Result<_, _>>()?;
+            for id in ids {
+                svc.wait(id).map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        },
+    );
+}

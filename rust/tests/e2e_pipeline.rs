@@ -1,0 +1,118 @@
+//! End-to-end pipeline test: TPSS synthesis → device sweep → response
+//! surfaces → sensitivity conclusions → shape recommendation → SPRT
+//! detection — the whole paper in one test, on a small grid.
+//!
+//! Requires `make artifacts` (dev profile).
+
+use containerstress::coordinator::{run_sweep, Backend, SweepSpec};
+use containerstress::detect::{measure, Sprt, SprtConfig};
+use containerstress::recommend::{recommend, LocalCalibration, Sla};
+use containerstress::runtime::DeviceServer;
+use containerstress::shapes::Workload;
+use containerstress::surface::ResponseSurface;
+use containerstress::tpss::{inject, synthesize, Fault, TpssConfig};
+
+fn dev_spec() -> SweepSpec {
+    SweepSpec {
+        signals: vec![4, 8, 12, 16],
+        memvecs: vec![32, 48, 64],
+        obs: vec![64, 128, 256],
+        trials: 2,
+        seed: 42,
+        model: "mset2".into(),
+        workers: 4,
+    }
+}
+
+#[test]
+fn full_pipeline_on_device() {
+    let dir = containerstress::runtime::default_artifact_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing; run `make artifacts`"
+    );
+    let server = DeviceServer::start(&dir).expect("device server");
+    let spec = dev_spec();
+    let result = run_sweep(&spec, Backend::Device(server.handle())).expect("sweep");
+
+    // --- structure -------------------------------------------------------
+    assert_eq!(result.cells.len(), 4 * 3 * 3);
+    assert!(result.gap_cells().is_empty(), "all dev cells satisfy m ≥ 2n");
+
+    // --- response surfaces + the paper's §III.A conclusions ---------------
+    let train_surf = ResponseSurface::fit(&result.samples("train")).unwrap();
+    let surveil_surf = ResponseSurface::fit(&result.samples("surveil")).unwrap();
+    // Debug-build prep timings are noisy; the release benches demand much
+    // tighter fits (see EXPERIMENTS.md), here we only require signal.
+    assert!(train_surf.r2 > 0.3, "train surface r² {}", train_surf.r2);
+    assert!(
+        surveil_surf.r2 > 0.4,
+        "surveil surface r² {}",
+        surveil_surf.r2
+    );
+    // Surveillance cost must depend on n_obs (paper: "primarily depends on
+    // the number of observations and signals").
+    let e = surveil_surf.exponents();
+    assert!(
+        e[2] > 0.3,
+        "surveillance must scale with n_obs: exponents {e:?}"
+    );
+    // Training cost must be much less obs-sensitive than surveillance.
+    let et = train_surf.exponents();
+    assert!(
+        et[2] < e[2],
+        "training obs-sensitivity {et:?} should be below surveillance {e:?}"
+    );
+
+    // --- recommendation ---------------------------------------------------
+    let cal = LocalCalibration::from_surface(&surveil_surf, 16, 64, 256);
+    let rec = recommend(
+        &Workload::customer_a(),
+        &train_surf,
+        &surveil_surf,
+        cal,
+        &Sla::default(),
+    );
+    assert!(
+        rec.chosen_shape().is_some(),
+        "customer A must be schedulable:\n{}",
+        rec.render()
+    );
+
+    // --- detection through the device path --------------------------------
+    let n = 8;
+    let cfg = TpssConfig::sized(n, 2048);
+    let train_ds = synthesize(&cfg, 100);
+    let model = containerstress::mset::train(&train_ds.data, 64).unwrap();
+    let mut sess =
+        containerstress::runtime::mset::DeviceMset::new(server.handle(), &model.d).unwrap();
+    sess.train().unwrap();
+
+    let healthy = synthesize(&cfg, 101);
+    let (_, resid_h, _) = sess
+        .surveil(&model.scaler.transform(&healthy.data))
+        .unwrap();
+    // TPSS residuals are serially correlated (deterministic modes + AR
+    // noise), which inflates SPRT evidence relative to the iid design
+    // theory; deployments compensate by designing for a larger shift and
+    // stricter α — same here.
+    let mut det = Sprt::from_healthy(
+        &resid_h,
+        SprtConfig {
+            alpha: 1e-6,
+            beta: 1e-4,
+            shift: 4.5,
+            var_ratio: 6.0,
+        },
+    );
+
+    let mut faulted = synthesize(&cfg, 102);
+    let onset = inject(&mut faulted, 3, Fault::Step { magnitude: 5.0 }, 0.5, 103);
+    let (_, resid_f, _) = sess
+        .surveil(&model.scaler.transform(&faulted.data))
+        .unwrap();
+    let (far, missed, latency) = measure(&mut det, &resid_f, Some(3), onset);
+    assert_eq!(missed, Some(0.0), "5σ step missed by device-path SPRT");
+    assert!(far < 5e-3, "false alarm rate {far}");
+    assert!(latency.unwrap() < 50, "latency {latency:?}");
+}

@@ -1,0 +1,150 @@
+//! Integration: the AOT device path (PJRT-loaded artifacts) must reproduce
+//! the native Rust MSET2 oracle on real synthesized telemetry.
+//!
+//! Requires `make artifacts` (dev profile is enough). Tests panic with a
+//! clear message if artifacts are missing.
+
+use containerstress::linalg::Mat;
+use containerstress::mset;
+use containerstress::runtime::{DeviceServer, Tensor};
+use containerstress::tpss::{synthesize, TpssConfig};
+use std::sync::OnceLock;
+
+fn server() -> &'static DeviceServer {
+    static SERVER: OnceLock<DeviceServer> = OnceLock::new();
+    SERVER.get_or_init(|| {
+        let dir = containerstress::runtime::default_artifact_dir();
+        assert!(
+            dir.join("manifest.json").exists(),
+            "artifacts missing at {}; run `make artifacts` first",
+            dir.display()
+        );
+        DeviceServer::start(&dir).expect("device server")
+    })
+}
+
+/// Scaled memory matrix + scaled probe window from TPSS data.
+fn prep(n: usize, m: usize, t: usize, seed: u64) -> (Mat, Mat, mset::MsetModel) {
+    let ds = synthesize(&TpssConfig::sized(n, t), seed);
+    let model = mset::train(&ds.data, m).expect("native train");
+    let probe_raw = synthesize(&TpssConfig::sized(n, 70), seed + 1);
+    let probe_scaled = model.scaler.transform(&probe_raw.data);
+    (model.d.clone(), probe_scaled, model)
+}
+
+#[test]
+fn device_training_matches_native_oracle() {
+    let (d, _, native) = prep(8, 32, 400, 1);
+    let mut sess =
+        containerstress::runtime::mset::DeviceMset::new(server().handle(), &d).unwrap();
+    let (g_dev, cost) = sess.train().unwrap();
+    assert_eq!(g_dev.rows, 32);
+    assert!(cost.exec.as_nanos() > 0);
+    // Device G (f32 similarity + NS inverse) vs native f64 eigendecomposition.
+    // Agreement is conditioning-limited (DESIGN.md §4): compare relatively.
+    let scale = native.g.data.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+    let rel = g_dev.max_abs_diff(&native.g) / scale;
+    assert!(rel < 2e-2, "G relative diff {rel}");
+}
+
+#[test]
+fn device_surveillance_matches_native_oracle() {
+    let (d, probe, native) = prep(8, 32, 400, 2);
+    let mut sess =
+        containerstress::runtime::mset::DeviceMset::new(server().handle(), &d).unwrap();
+    sess.train().unwrap();
+    let (xhat_dev, resid_dev, cost) = sess.surveil(&probe).unwrap();
+    let est_native = native.surveil_scaled(&probe);
+    assert_eq!(xhat_dev.rows, probe.rows);
+    // 70 rows at the manifest chunk size → ⌈70/chunk⌉ device calls
+    let chunk = server().handle().manifest().unwrap().chunk;
+    assert_eq!(cost.calls, probe.rows.div_ceil(chunk));
+    let diff = xhat_dev.max_abs_diff(&est_native.xhat);
+    assert!(diff < 2e-2, "estimate diff {diff}");
+    let rdiff = resid_dev.max_abs_diff(&est_native.resid);
+    assert!(rdiff < 2e-2, "residual diff {rdiff}");
+    // residual identity holds on-device too
+    let recon = probe.sub(&xhat_dev);
+    assert!(recon.max_abs_diff(&resid_dev) < 1e-5);
+}
+
+#[test]
+fn device_bucket_padding_transparent() {
+    // A workload smaller than any bucket must route up and still match the
+    // native oracle computed at the real (unpadded) size.
+    let (d, probe, native) = prep(5, 20, 300, 3);
+    let mut sess =
+        containerstress::runtime::mset::DeviceMset::new(server().handle(), &d).unwrap();
+    assert_eq!((sess.bucket.n, sess.bucket.m), (8, 32));
+    sess.train().unwrap();
+    let (xhat_dev, _, _) = sess.surveil(&probe).unwrap();
+    let est_native = native.surveil_scaled(&probe);
+    let diff = xhat_dev.max_abs_diff(&est_native.xhat);
+    assert!(diff < 2e-2, "padded estimate diff {diff}");
+}
+
+#[test]
+fn device_aakr_matches_native_plugin() {
+    use containerstress::models::{AakrPlugin, PrognosticModel};
+    let n = 8;
+    let ds = synthesize(&TpssConfig::sized(n, 400), 4);
+    let mut plugin = AakrPlugin::default();
+    plugin.fit(&ds.data, 32).unwrap();
+    // Re-derive the same scaled memory matrix the plugin selected (the
+    // selection procedure is deterministic).
+    let scaler = mset::Scaler::fit(&ds.data);
+    let xs = scaler.transform(&ds.data);
+    let idx = mset::select_memory(&xs, 32);
+    let mut d = Mat::zeros(32, n);
+    for (r, &i) in idx.iter().enumerate() {
+        d.row_mut(r).copy_from_slice(xs.row(i));
+    }
+    let sess =
+        containerstress::runtime::mset::DeviceAakr::new(server().handle(), &d).unwrap();
+    let probe = synthesize(&TpssConfig::sized(n, 40), 5);
+    let probe_scaled = scaler.transform(&probe.data);
+    let (xhat_dev, _, _) = sess.surveil(&probe_scaled).unwrap();
+    let est_native = plugin.estimate(&probe.data);
+    let diff = xhat_dev.max_abs_diff(&est_native.xhat);
+    assert!(diff < 1e-3, "aakr estimate diff {diff}");
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let handle = server().handle();
+    let man = handle.manifest().unwrap();
+    let art = man
+        .find("mset2_train", 8, 32)
+        .expect("dev artifact present");
+    let inputs = || {
+        vec![
+            Tensor::new(vec![32, 8], vec![0.1; 256]),
+            Tensor::new(vec![32], {
+                let mut m = vec![0.0; 32];
+                m[..16].fill(1.0);
+                m
+            }),
+            Tensor::scalar1(1.414),
+        ]
+    };
+    let r1 = handle.exec(&art.id, inputs()).unwrap();
+    let r2 = handle.exec(&art.id, inputs()).unwrap();
+    // First call may compile; second must hit the cache.
+    assert!(r2.compiled_in.is_none(), "cache miss on second exec");
+    // deterministic outputs
+    assert_eq!(r1.outputs[0].data, r2.outputs[0].data);
+}
+
+#[test]
+fn exec_rejects_wrong_shapes() {
+    let handle = server().handle();
+    let bad = vec![
+        Tensor::new(vec![32, 8], vec![0.1; 256]),
+        Tensor::new(vec![31], vec![1.0; 31]), // wrong mask length
+        Tensor::scalar1(1.0),
+    ];
+    assert!(handle.exec("mset2_train_n8_m32", bad).is_err());
+    assert!(handle
+        .exec("no_such_artifact", vec![Tensor::scalar1(0.0)])
+        .is_err());
+}
