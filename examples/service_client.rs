@@ -1,0 +1,121 @@
+//! A raw-socket client round-trip against the scoping service.
+//!
+//! Boots an in-process `containerstress serve` instance on an ephemeral
+//! loopback port (native backend, so no artifacts are needed), then talks
+//! to it exactly as an external customer would — hand-written HTTP/1.1
+//! over `TcpStream`:
+//!
+//! 1. `POST /v1/scope` — submit a workload + SLA, receive a job id;
+//! 2. `GET /v1/jobs/{id}` — poll until the sweep completes;
+//! 3. `GET /v1/recommendations/{id}` — fetch the cloud-shape table;
+//! 4. repeat the same scope request and watch `/metrics` report it served
+//!    from the cell-level sweep cache (zero new trials).
+//!
+//! Run: `cargo run --release --example service_client`
+//!
+//! Point it at an already-running server instead with
+//! `--addr HOST:PORT` (skips the in-process boot).
+
+use containerstress::config::Config;
+use containerstress::coordinator::Backend;
+use containerstress::service::Server;
+use containerstress::util::cli::Args;
+use containerstress::util::json::Json;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Minimal HTTP/1.1 exchange: one request, one connection.
+fn http(addr: &str, method: &str, path: &str, body: &str) -> anyhow::Result<(u16, Json)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let raw = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(raw.as_bytes())?;
+    let mut out = String::new();
+    stream.read_to_string(&mut out)?;
+    let status: u16 = out
+        .split_whitespace()
+        .nth(1)
+        .ok_or_else(|| anyhow::anyhow!("bad response: {out}"))?
+        .parse()?;
+    let payload = out.split("\r\n\r\n").nth(1).unwrap_or("");
+    let json = if payload.is_empty() {
+        Json::Null
+    } else {
+        Json::parse(payload).map_err(|e| anyhow::anyhow!("bad body: {e}"))?
+    };
+    Ok((status, json))
+}
+
+const SCOPE_BODY: &str = r#"{
+  "sweep": {"signals": [2, 3], "memvecs": [8, 12, 16], "obs": [16, 32],
+            "trials": 1, "seed": 11, "model": "mset2"},
+  "workload": {"signals": 20, "memvecs": 64, "obs_per_sec": 1.0, "train_window": 4096},
+  "sla": {"headroom": 2.0, "max_train_s": 3600.0}
+}"#;
+
+fn scope_once(addr: &str) -> anyhow::Result<u64> {
+    let (status, j) = http(addr, "POST", "/v1/scope", SCOPE_BODY)?;
+    anyhow::ensure!(status == 202, "scope submit: HTTP {status}: {j}");
+    let id = j.req("job_id")?.as_f64().unwrap_or(0.0) as u64;
+    println!("submitted scope job {id}");
+    loop {
+        let (_, j) = http(addr, "GET", &format!("/v1/jobs/{id}"), "")?;
+        match j.req("status")?.as_str() {
+            Some("done") => break,
+            Some("failed") => anyhow::bail!("job {id} failed: {j}"),
+            _ => std::thread::sleep(Duration::from_millis(50)),
+        }
+    }
+    println!("job {id} done");
+    Ok(id)
+}
+
+fn main() -> anyhow::Result<()> {
+    containerstress::util::logger::init();
+    let args = Args::from_env();
+
+    // In-process server unless the caller points us at a live one.
+    let (_server, addr) = match args.get("addr") {
+        Some(a) => (None, a.to_string()),
+        None => {
+            let mut cfg = Config {
+                backend: "native".into(),
+                ..Config::default()
+            };
+            cfg.service.port = 0;
+            cfg.service.cache_dir = None;
+            let server = Server::start(&cfg, Backend::Native)?;
+            let addr = server.addr().to_string();
+            println!("booted in-process service at http://{addr}");
+            (Some(server), addr)
+        }
+    };
+
+    let (_, health) = http(&addr, "GET", "/healthz", "")?;
+    println!("healthz: {health}");
+
+    // First scope request: a full Monte Carlo measurement.
+    let id = scope_once(&addr)?;
+    let (status, rec) = http(&addr, "GET", &format!("/v1/recommendations/{id}"), "")?;
+    anyhow::ensure!(status == 200, "recommendation: HTTP {status}: {rec}");
+    println!("\n{}", rec.req("rendered")?.as_str().unwrap_or(""));
+
+    // Identical second request: served from the cell-level sweep cache.
+    scope_once(&addr)?;
+    let (_, metrics) = http(&addr, "GET", "/metrics", "")?;
+    let counters = metrics.req("counters")?;
+    let hits = counters
+        .get("sweep.cache.hits")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    let trials = counters
+        .get("sweep.trials")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    println!("sweep cache hits: {hits} (trials executed in total: {trials})");
+    println!("→ the repeat request re-used every measured cell: no re-measurement");
+    Ok(())
+}

@@ -18,6 +18,95 @@ pub struct Config {
     /// Execution backend: "device" | "native".
     pub backend: String,
     pub sweep: SweepSpec,
+    pub service: ServiceConfig,
+}
+
+/// `containerstress serve` settings.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Bind host (loopback by default — front with a proxy to expose).
+    pub host: String,
+    /// Bind port; 0 picks an ephemeral port (tests).
+    pub port: u16,
+    /// Max queued+running scope jobs before submits are rejected.
+    pub queue_cap: usize,
+    /// Sweep-cache spill directory; `None` keeps the cache memory-only.
+    pub cache_dir: Option<PathBuf>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            host: "127.0.0.1".into(),
+            port: 8080,
+            queue_cap: 64,
+            cache_dir: Some(PathBuf::from("results/sweep_cache")),
+        }
+    }
+}
+
+/// Strict: every element must be a non-negative integer — silently
+/// dropping bad entries would run a different grid than requested.
+fn usize_list(j: &Json) -> Option<Vec<usize>> {
+    let arr = j.as_arr()?;
+    let v: Vec<usize> = arr.iter().filter_map(Json::as_usize).collect();
+    (v.len() == arr.len()).then_some(v)
+}
+
+/// Reject out-of-range ports instead of silently truncating to `u16`.
+fn port_u16(v: usize) -> anyhow::Result<u16> {
+    u16::try_from(v).map_err(|_| anyhow::anyhow!("port must be 0..=65535, got {v}"))
+}
+
+/// Overlay sweep keys from a JSON object onto `base` (missing keys keep the
+/// base value). Shared by config files and the service's `POST /v1/scope`
+/// body so both speak the same schema. A present-but-malformed key is an
+/// error, never a silent fallback to the base value.
+pub fn sweep_spec_from_json(base: &SweepSpec, j: &Json) -> anyhow::Result<SweepSpec> {
+    let mut s = base.clone();
+    let axis = |name: &str, v: &Json| {
+        usize_list(v).ok_or_else(|| {
+            anyhow::anyhow!("sweep.{name} must be an array of non-negative integers")
+        })
+    };
+    if let Some(v) = j.get("signals") {
+        s.signals = axis("signals", v)?;
+    }
+    if let Some(v) = j.get("memvecs") {
+        s.memvecs = axis("memvecs", v)?;
+    }
+    if let Some(v) = j.get("obs") {
+        s.obs = axis("obs", v)?;
+    }
+    if let Some(v) = j.get("trials") {
+        s.trials = v
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("sweep.trials must be a non-negative integer"))?;
+    }
+    if let Some(v) = j.get("seed") {
+        let f = v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("sweep.seed must be a number"))?;
+        // JSON numbers are f64: only integers ≤ 2^53 survive a round-trip,
+        // and the sweep cache keys on the exact seed — reject the rest.
+        anyhow::ensure!(
+            f >= 0.0 && f.fract() == 0.0 && f <= 9_007_199_254_740_992.0,
+            "sweep.seed must be a non-negative integer ≤ 2^53"
+        );
+        s.seed = f as u64;
+    }
+    if let Some(v) = j.get("model") {
+        s.model = v
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("sweep.model must be a string"))?
+            .to_string();
+    }
+    if let Some(v) = j.get("workers") {
+        s.workers = v
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("sweep.workers must be a non-negative integer"))?;
+    }
+    Ok(s)
 }
 
 impl Default for Config {
@@ -27,13 +116,9 @@ impl Default for Config {
             output_dir: PathBuf::from("results"),
             backend: "device".into(),
             sweep: SweepSpec::default(),
+            service: ServiceConfig::default(),
         }
     }
-}
-
-fn usize_list(j: &Json) -> Option<Vec<usize>> {
-    j.as_arr()
-        .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
 }
 
 impl Config {
@@ -43,12 +128,12 @@ impl Config {
             .map_err(|e| anyhow::anyhow!("config {path}: {e}"))?;
         let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("config {path}: {e}"))?;
         let mut cfg = Config::default();
-        cfg.apply_json(&j);
+        cfg.apply_json(&j)?;
         cfg.validate()?;
         Ok(cfg)
     }
 
-    fn apply_json(&mut self, j: &Json) {
+    fn apply_json(&mut self, j: &Json) -> anyhow::Result<()> {
         if let Some(v) = j.get("artifact_dir").and_then(Json::as_str) {
             self.artifact_dir = PathBuf::from(v);
         }
@@ -59,28 +144,41 @@ impl Config {
             self.backend = v.to_string();
         }
         if let Some(s) = j.get("sweep") {
-            if let Some(v) = s.get("signals").and_then(usize_list) {
-                self.sweep.signals = v;
+            self.sweep = sweep_spec_from_json(&self.sweep, s)?;
+        }
+        if let Some(s) = j.get("service") {
+            // Same rule as the sweep section: a present-but-malformed key
+            // is an error, never a silent fallback to the default.
+            if let Some(v) = s.get("host") {
+                self.service.host = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("service.host must be a string"))?
+                    .to_string();
             }
-            if let Some(v) = s.get("memvecs").and_then(usize_list) {
-                self.sweep.memvecs = v;
+            if let Some(v) = s.get("port") {
+                let v = v
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("service.port must be an integer"))?;
+                self.service.port = port_u16(v)?;
             }
-            if let Some(v) = s.get("obs").and_then(usize_list) {
-                self.sweep.obs = v;
+            if let Some(v) = s.get("queue_cap") {
+                self.service.queue_cap = v.as_usize().ok_or_else(|| {
+                    anyhow::anyhow!("service.queue_cap must be a non-negative integer")
+                })?;
             }
-            if let Some(v) = s.get("trials").and_then(Json::as_usize) {
-                self.sweep.trials = v;
-            }
-            if let Some(v) = s.get("seed").and_then(|x| x.as_f64()) {
-                self.sweep.seed = v as u64;
-            }
-            if let Some(v) = s.get("model").and_then(Json::as_str) {
-                self.sweep.model = v.to_string();
-            }
-            if let Some(v) = s.get("workers").and_then(Json::as_usize) {
-                self.sweep.workers = v;
+            match s.get("cache_dir") {
+                None => {}
+                Some(Json::Null) => self.service.cache_dir = None,
+                Some(Json::Str(v)) if v == "none" || v.is_empty() => {
+                    self.service.cache_dir = None
+                }
+                Some(Json::Str(v)) => self.service.cache_dir = Some(PathBuf::from(v)),
+                Some(_) => {
+                    anyhow::bail!("service.cache_dir must be a string or null")
+                }
             }
         }
+        Ok(())
     }
 
     /// Apply CLI overrides (highest precedence).
@@ -103,6 +201,18 @@ impl Config {
         self.sweep.trials = args.get_usize("trials", self.sweep.trials)?;
         self.sweep.seed = args.get_u64("seed", self.sweep.seed)?;
         self.sweep.workers = args.get_usize("workers", self.sweep.workers)?;
+        if let Some(v) = args.get("host") {
+            self.service.host = v.to_string();
+        }
+        self.service.port = port_u16(args.get_usize("port", self.service.port as usize)?)?;
+        self.service.queue_cap = args.get_usize("queue-cap", self.service.queue_cap)?;
+        if let Some(v) = args.get("cache-dir") {
+            self.service.cache_dir = if v == "none" || v.is_empty() {
+                None
+            } else {
+                Some(PathBuf::from(v))
+            };
+        }
         self.validate()
     }
 
@@ -122,21 +232,9 @@ impl Config {
             "backend must be 'device' or 'native', got '{}'",
             self.backend
         );
-        anyhow::ensure!(
-            matches!(
-                self.sweep.model.as_str(),
-                "mset2" | "aakr" | "ridge" | "mlp" | "svr"
-            ),
-            "model must be mset2|aakr|ridge|mlp|svr, got '{}'",
-            self.sweep.model
-        );
-        anyhow::ensure!(self.sweep.trials >= 1, "trials must be ≥ 1");
-        anyhow::ensure!(
-            !self.sweep.signals.is_empty()
-                && !self.sweep.memvecs.is_empty()
-                && !self.sweep.obs.is_empty(),
-            "sweep axes must be non-empty"
-        );
+        self.sweep.validate()?;
+        anyhow::ensure!(self.service.queue_cap >= 1, "queue_cap must be ≥ 1");
+        anyhow::ensure!(!self.service.host.is_empty(), "service host must be set");
         Ok(())
     }
 
@@ -177,6 +275,21 @@ impl Config {
                     ("seed", Json::Num(self.sweep.seed as f64)),
                     ("model", Json::Str(self.sweep.model.clone())),
                     ("workers", Json::Num(self.sweep.workers as f64)),
+                ]),
+            ),
+            (
+                "service",
+                Json::obj(vec![
+                    ("host", Json::Str(self.service.host.clone())),
+                    ("port", Json::Num(self.service.port as f64)),
+                    ("queue_cap", Json::Num(self.service.queue_cap as f64)),
+                    (
+                        "cache_dir",
+                        match &self.service.cache_dir {
+                            Some(d) => Json::Str(d.display().to_string()),
+                            None => Json::Null,
+                        },
+                    ),
                 ]),
             ),
         ])
@@ -234,6 +347,48 @@ mod tests {
         assert_eq!(cfg1.sweep.signals, vec![8, 16, 32]);
         assert_eq!(cfg1.sweep.model, "ridge");
         assert_eq!(cfg1.backend, "native");
+    }
+
+    #[test]
+    fn service_keys_roundtrip_and_override() {
+        let mut cfg = Config::default();
+        cfg.apply_args(&args(
+            "serve --port 9001 --queue-cap 5 --cache-dir /tmp/cs_cache --backend native",
+        ))
+        .unwrap();
+        assert_eq!(cfg.service.port, 9001);
+        assert_eq!(cfg.service.queue_cap, 5);
+        assert_eq!(cfg.service.cache_dir, Some(PathBuf::from("/tmp/cs_cache")));
+
+        // file roundtrip keeps the service section
+        let path = std::env::temp_dir().join("cs_config_service.json");
+        std::fs::write(&path, cfg.to_json().to_pretty()).unwrap();
+        let cfg2 = Config::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg2.service.port, 9001);
+        assert_eq!(cfg2.service.queue_cap, 5);
+
+        // cache can be disabled from the CLI and from a file
+        let mut cfg3 = Config::default();
+        cfg3.apply_args(&args("serve --cache-dir none --backend native"))
+            .unwrap();
+        assert_eq!(cfg3.service.cache_dir, None);
+        std::fs::write(
+            &path,
+            r#"{"backend": "native", "service": {"cache_dir": null, "port": 0}}"#,
+        )
+        .unwrap();
+        let cfg4 = Config::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg4.service.cache_dir, None);
+        assert_eq!(cfg4.service.port, 0);
+
+        let mut bad = Config::default();
+        assert!(bad.apply_args(&args("serve --queue-cap 0")).is_err());
+        let mut bad = Config::default();
+        let err = bad
+            .apply_args(&args("serve --port 70000"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("65535"), "{err}");
     }
 
     #[test]

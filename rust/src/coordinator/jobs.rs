@@ -6,13 +6,18 @@
 //! long-running service can scope many customer use cases concurrently
 //! with bounded resources — the "autonomous" part of the paper's title.
 
-use super::sweep::{run_sweep, Backend, SweepResult, SweepSpec};
+use super::sweep::{run_sweep_cached, Backend, CellStore, SweepResult, SweepSpec};
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 
 /// Job identifier.
 pub type JobId = u64;
+
+/// Completed (done/failed) jobs retained for status queries. Oldest
+/// completed results are evicted beyond this, so a long-running service
+/// does not grow without bound; in-flight jobs are never evicted.
+pub const COMPLETED_RETAIN: usize = 256;
 
 /// Job status as observed by clients.
 #[derive(Clone, Debug)]
@@ -36,8 +41,11 @@ struct Shared {
 }
 
 /// The scoping service (leader thread + job registry).
+///
+/// The sender sits behind a `Mutex` so the service is `Sync` and can be
+/// shared across the HTTP connection-handler threads.
 pub struct ScopingService {
-    tx: Option<mpsc::Sender<ScopeJob>>,
+    tx: Mutex<Option<mpsc::Sender<ScopeJob>>>,
     shared: Arc<Shared>,
     next_id: Mutex<JobId>,
     leader: Option<std::thread::JoinHandle<()>>,
@@ -50,6 +58,17 @@ impl ScopingService {
     /// bounds the number of queued jobs (backpressure: submits fail fast
     /// beyond it rather than accumulating unbounded work).
     pub fn start(backend: Backend, queue_cap: usize) -> ScopingService {
+        Self::start_with_cache(backend, queue_cap, None)
+    }
+
+    /// [`ScopingService::start`] with a shared cell store: cells measured
+    /// by any job are reused by every later job with an identical cell
+    /// context (see [`crate::service::cache`] for the standard store).
+    pub fn start_with_cache(
+        backend: Backend,
+        queue_cap: usize,
+        cache: Option<Arc<dyn CellStore>>,
+    ) -> ScopingService {
         let (tx, rx) = mpsc::channel::<ScopeJob>();
         let shared = Arc::new(Shared {
             statuses: Mutex::new(HashMap::new()),
@@ -64,19 +83,35 @@ impl ScopingService {
                         let mut st = shared2.statuses.lock().unwrap();
                         st.insert(job.id, JobStatus::Running);
                     }
-                    let result = run_sweep(&job.spec, backend.clone());
+                    let result =
+                        run_sweep_cached(&job.spec, backend.clone(), cache.as_deref());
                     let status = match result {
                         Ok(r) => JobStatus::Done(Arc::new(r)),
                         Err(e) => JobStatus::Failed(e.to_string()),
                     };
                     let mut st = shared2.statuses.lock().unwrap();
                     st.insert(job.id, status);
+                    // Evict the oldest completed entries beyond the
+                    // retention bound (ids are monotonic → oldest = min).
+                    let mut completed: Vec<JobId> = st
+                        .iter()
+                        .filter(|(_, s)| {
+                            matches!(s, JobStatus::Done(_) | JobStatus::Failed(_))
+                        })
+                        .map(|(&id, _)| id)
+                        .collect();
+                    if completed.len() > COMPLETED_RETAIN {
+                        completed.sort_unstable();
+                        for id in &completed[..completed.len() - COMPLETED_RETAIN] {
+                            st.remove(id);
+                        }
+                    }
                     shared2.done.notify_all();
                 }
             })
             .expect("spawn leader");
         ScopingService {
-            tx: Some(tx),
+            tx: Mutex::new(Some(tx)),
             shared,
             next_id: Mutex::new(1),
             leader: Some(leader),
@@ -87,34 +122,59 @@ impl ScopingService {
     /// Submit a sweep; returns its job id, or an error when the queue is
     /// saturated (backpressure).
     pub fn submit(&self, spec: SweepSpec) -> anyhow::Result<JobId> {
-        let queued = {
-            let st = self.shared.statuses.lock().unwrap();
-            st.values()
-                .filter(|s| matches!(s, JobStatus::Queued | JobStatus::Running))
-                .count()
-        };
-        let cap = self.queue_cap;
-        anyhow::ensure!(
-            queued < cap,
-            "scoping queue saturated ({queued}/{cap}); retry later"
-        );
+        // Count + insert under one statuses lock, so concurrent submitters
+        // cannot jointly overshoot the cap (check-then-act would race).
         let id = {
-            let mut n = self.next_id.lock().unwrap();
-            let id = *n;
-            *n += 1;
+            let mut st = self.shared.statuses.lock().unwrap();
+            let queued = st
+                .values()
+                .filter(|s| matches!(s, JobStatus::Queued | JobStatus::Running))
+                .count();
+            let cap = self.queue_cap;
+            anyhow::ensure!(
+                queued < cap,
+                "scoping queue saturated ({queued}/{cap}); retry later"
+            );
+            let id = {
+                let mut n = self.next_id.lock().unwrap();
+                let id = *n;
+                *n += 1;
+                id
+            };
+            st.insert(id, JobStatus::Queued);
             id
         };
+        let sent = self
+            .tx
+            .lock()
+            .unwrap()
+            .as_ref()
+            .expect("service stopped")
+            .send(ScopeJob { id, spec });
+        if sent.is_err() {
+            // Roll the reservation back, or the dead leader's ghost jobs
+            // would pin in_flight() at the cap forever.
+            self.shared.statuses.lock().unwrap().remove(&id);
+            anyhow::bail!("leader thread gone");
+        }
+        Ok(id)
+    }
+
+    /// Number of jobs currently queued or running (the backpressure gauge
+    /// reported by the service's `/healthz`).
+    pub fn in_flight(&self) -> usize {
         self.shared
             .statuses
             .lock()
             .unwrap()
-            .insert(id, JobStatus::Queued);
-        self.tx
-            .as_ref()
-            .expect("service stopped")
-            .send(ScopeJob { id, spec })
-            .map_err(|_| anyhow::anyhow!("leader thread gone"))?;
-        Ok(id)
+            .values()
+            .filter(|s| matches!(s, JobStatus::Queued | JobStatus::Running))
+            .count()
+    }
+
+    /// Configured backpressure bound.
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
     }
 
     /// Non-blocking status check.
@@ -139,7 +199,7 @@ impl ScopingService {
 
     /// Graceful shutdown: stop accepting, finish queued work.
     pub fn shutdown(mut self) {
-        self.tx.take();
+        self.tx.lock().unwrap().take();
         if let Some(l) = self.leader.take() {
             let _ = l.join();
         }
@@ -148,7 +208,7 @@ impl ScopingService {
 
 impl Drop for ScopingService {
     fn drop(&mut self) {
-        self.tx.take();
+        self.tx.lock().unwrap().take();
         if let Some(l) = self.leader.take() {
             let _ = l.join();
         }
@@ -196,6 +256,59 @@ mod tests {
         let svc = ScopingService::start(Backend::Native, 8);
         assert!(svc.wait(999).is_err());
         assert!(svc.status(999).is_none());
+    }
+
+    #[test]
+    fn backpressure_rejects_when_saturated() {
+        let svc = ScopingService::start(Backend::Native, 1);
+        // A job heavy enough to still be in flight when the next submit
+        // arrives microseconds later.
+        let slow = SweepSpec {
+            obs: vec![4096],
+            trials: 3,
+            ..tiny_spec()
+        };
+        let id = svc.submit(slow.clone()).unwrap();
+        let err = svc.submit(slow).unwrap_err().to_string();
+        assert!(err.contains("saturated"), "{err}");
+        svc.wait(id).unwrap();
+        // capacity frees once the job completes
+        let id2 = svc.submit(tiny_spec()).unwrap();
+        svc.wait(id2).unwrap();
+        assert_eq!(svc.in_flight(), 0);
+        assert_eq!(svc.queue_cap(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn cached_service_skips_remeasurement() {
+        let cache = Arc::new(crate::service::cache::SweepCache::in_memory());
+        let svc = ScopingService::start_with_cache(
+            Backend::Native,
+            8,
+            Some(Arc::clone(&cache) as Arc<dyn CellStore>),
+        );
+        let id = svc.submit(tiny_spec()).unwrap();
+        svc.wait(id).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        let id2 = svc.submit(tiny_spec()).unwrap();
+        svc.wait(id2).unwrap();
+        assert_eq!(cache.hits(), 1, "identical request must be cache-served");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn completed_jobs_are_evicted_beyond_retention() {
+        let svc = ScopingService::start(Backend::Native, 8);
+        let total = COMPLETED_RETAIN + 2;
+        let mut last = 0;
+        for _ in 0..total {
+            last = svc.submit(tiny_spec()).unwrap();
+            svc.wait(last).unwrap();
+        }
+        assert!(svc.status(1).is_none(), "oldest job must be evicted");
+        assert!(svc.status(last).is_some(), "newest job must be retained");
+        svc.shutdown();
     }
 
     #[test]

@@ -13,4 +13,7 @@
 pub mod jobs;
 pub mod sweep;
 
-pub use sweep::{run_sweep, Backend, CellKey, CellMeasure, SweepResult, SweepSpec};
+pub use sweep::{
+    run_sweep, run_sweep_cached, Backend, CellCosts, CellKey, CellMeasure, CellStore,
+    SweepResult, SweepSpec,
+};

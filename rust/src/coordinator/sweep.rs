@@ -27,7 +27,27 @@ use crate::tpss::{synthesize, TpssConfig};
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_map;
 use crate::util::Summary;
+use std::collections::HashMap;
 use std::time::Instant;
+
+/// Per-trial measured costs of one cell (seconds).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CellCosts {
+    pub train_s: Vec<f64>,
+    pub surveil_s: Vec<f64>,
+}
+
+/// A store of per-cell measurements the sweep engine can consult before
+/// scheduling trials. Implemented by [`crate::service::cache::SweepCache`];
+/// the coordinator only sees this trait, keeping the service a layer above
+/// it rather than a dependency of it.
+pub trait CellStore: Send + Sync {
+    /// Measurements for `cell` under an identical `(spec, backend)`
+    /// context, if present.
+    fn fetch(&self, cell: CellKey, spec: &SweepSpec, backend: &str) -> Option<CellCosts>;
+    /// Record freshly measured trial costs for `cell`.
+    fn store(&self, cell: CellKey, spec: &SweepSpec, backend: &str, costs: CellCosts);
+}
 
 /// Where trials execute.
 #[derive(Clone)]
@@ -36,6 +56,16 @@ pub enum Backend {
     Device(DeviceHandle),
     /// Native Rust implementation (comparator / no-artifact fallback).
     Native,
+}
+
+impl Backend {
+    /// Stable tag used in cache keys and logs.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Backend::Device(_) => "device",
+            Backend::Native => "native",
+        }
+    }
 }
 
 /// Sweep specification (the outer loops of paper Fig. 1).
@@ -64,6 +94,33 @@ impl Default for SweepSpec {
             model: "mset2".into(),
             workers: 0,
         }
+    }
+}
+
+impl SweepSpec {
+    /// Reject specs that cannot run: unknown model, zero trials, or empty
+    /// sweep axes (e.g. `"signals": []` in a config file or service
+    /// request) — callers get a clean error instead of a downstream panic.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            matches!(
+                self.model.as_str(),
+                "mset2" | "aakr" | "ridge" | "mlp" | "svr"
+            ),
+            "model must be mset2|aakr|ridge|mlp|svr, got '{}'",
+            self.model
+        );
+        anyhow::ensure!(self.trials >= 1, "trials must be ≥ 1");
+        anyhow::ensure!(
+            !self.signals.is_empty() && !self.memvecs.is_empty() && !self.obs.is_empty(),
+            "sweep axes must be non-empty"
+        );
+        Ok(())
+    }
+
+    /// Whether a cell is a constraint gap (`m < 2n` under MSET training).
+    fn is_gap(&self, key: CellKey) -> bool {
+        key.m < 2 * key.n && self.model == "mset2"
     }
 }
 
@@ -165,13 +222,40 @@ fn run_trial(
     }
 }
 
+/// Trial-seed tag derived from the cell *content*, not its grid position,
+/// so a cell's measurements are identical no matter which request's grid it
+/// appears in — the property that makes the sweep cache content-addressed.
+fn cell_tag(key: CellKey) -> u64 {
+    crate::util::fnv1a(format!("{}/{}/{}", key.n, key.m, key.obs).as_bytes())
+}
+
 /// Run the full nested-loop Monte Carlo sweep.
 pub fn run_sweep(spec: &SweepSpec, backend: Backend) -> anyhow::Result<SweepResult> {
+    run_sweep_cached(spec, backend, None)
+}
+
+/// [`run_sweep`] with an optional cell-level cache: cells already measured
+/// under an identical `(cell, model, seed, backend, trials)` context are
+/// reused without scheduling any trials; freshly measured cells are
+/// inserted for future requests.
+pub fn run_sweep_cached(
+    spec: &SweepSpec,
+    backend: Backend,
+    cache: Option<&dyn CellStore>,
+) -> anyhow::Result<SweepResult> {
+    spec.validate()?;
+    // Duplicate axis values would create duplicate cells (double-counted
+    // trials, cache entries violating the trials-per-cell invariant) —
+    // measure each distinct cell once.
     let mut keys = Vec::new();
+    let mut seen = std::collections::HashSet::new();
     for &n in &spec.signals {
         for &m in &spec.memvecs {
             for &obs in &spec.obs {
-                keys.push(CellKey { n, m, obs });
+                let key = CellKey { n, m, obs };
+                if seen.insert(key) {
+                    keys.push(key);
+                }
             }
         }
     }
@@ -181,25 +265,37 @@ pub fn run_sweep(spec: &SweepSpec, backend: Backend) -> anyhow::Result<SweepResu
         spec.workers
     };
     let root = Rng::new(spec.seed);
-    log::info!(
-        "sweep: {} cells × {} trials, model={}, workers={workers}",
-        keys.len(),
-        spec.trials,
-        spec.model
-    );
 
-    // Fan out (cell, trial) pairs; trial seeds are forked from the root so
-    // results are independent of scheduling.
+    // Probe the cache, then fan out (cell, trial) pairs for the rest;
+    // trial seeds are forked from the root per cell tag so results are
+    // independent of both scheduling and grid composition.
+    let mut cached: HashMap<CellKey, CellCosts> = HashMap::new();
     let mut work = Vec::new();
-    for (ci, &key) in keys.iter().enumerate() {
-        if key.m < 2 * key.n && spec.model == "mset2" {
+    for &key in &keys {
+        if spec.is_gap(key) {
             continue; // constraint gap — never scheduled
         }
+        if let Some(c) = cache {
+            if let Some(costs) = c.fetch(key, spec, backend.tag()) {
+                cached.insert(key, costs);
+                continue;
+            }
+        }
         for t in 0..spec.trials {
-            let seed = root.fork((ci * 1000 + t) as u64).next_u64_seed();
+            let seed = root
+                .fork(cell_tag(key).wrapping_add(t as u64))
+                .next_u64_seed();
             work.push((key, seed));
         }
     }
+    log::info!(
+        "sweep: {} cells ({} cached) × {} trials, model={}, backend={}, workers={workers}",
+        keys.len(),
+        cached.len(),
+        spec.trials,
+        spec.model,
+        backend.tag()
+    );
     let results = parallel_map(workers, &work, |_, &(key, seed)| {
         let r = run_trial(&backend, &spec.model, key, seed);
         Registry::global().inc("sweep.trials");
@@ -209,7 +305,7 @@ pub fn run_sweep(spec: &SweepSpec, backend: Backend) -> anyhow::Result<SweepResu
     // Aggregate per cell.
     let mut cells = Vec::new();
     for &key in &keys {
-        if key.m < 2 * key.n && spec.model == "mset2" {
+        if spec.is_gap(key) {
             cells.push(CellMeasure {
                 key,
                 train: None,
@@ -217,6 +313,15 @@ pub fn run_sweep(spec: &SweepSpec, backend: Backend) -> anyhow::Result<SweepResu
                 violated: true,
             });
             Registry::global().inc("sweep.gap_cells");
+            continue;
+        }
+        if let Some(costs) = cached.get(&key) {
+            cells.push(CellMeasure {
+                key,
+                train: Some(Summary::of(&costs.train_s)),
+                surveil: Some(Summary::of(&costs.surveil_s)),
+                violated: false,
+            });
             continue;
         }
         let mut train_ts = Vec::new();
@@ -231,6 +336,17 @@ pub fn run_sweep(spec: &SweepSpec, backend: Backend) -> anyhow::Result<SweepResu
             }
         }
         anyhow::ensure!(!train_ts.is_empty(), "no trials completed for {key:?}");
+        if let Some(c) = cache {
+            c.store(
+                key,
+                spec,
+                backend.tag(),
+                CellCosts {
+                    train_s: train_ts.clone(),
+                    surveil_s: surveil_ts.clone(),
+                },
+            );
+        }
         cells.push(CellMeasure {
             key,
             train: Some(Summary::of(&train_ts)),
@@ -324,6 +440,7 @@ fn dedup_sorted(it: impl Iterator<Item = usize>) -> Vec<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::service::cache::SweepCache;
 
     fn tiny_spec() -> SweepSpec {
         SweepSpec {
@@ -399,6 +516,81 @@ mod tests {
             assert_eq!(res.cells.len(), 1);
             assert!(!res.cells[0].violated);
         }
+    }
+
+    #[test]
+    fn duplicate_axis_values_measure_once() {
+        let spec = SweepSpec {
+            signals: vec![4, 4],
+            memvecs: vec![16],
+            obs: vec![32],
+            trials: 2,
+            ..tiny_spec()
+        };
+        let res = run_sweep(&spec, Backend::Native).unwrap();
+        assert_eq!(res.cells.len(), 1, "duplicate cells must be deduplicated");
+        assert_eq!(res.cells[0].train.as_ref().unwrap().n, 2);
+    }
+
+    #[test]
+    fn empty_axes_error_cleanly() {
+        let bad = SweepSpec {
+            signals: vec![],
+            ..tiny_spec()
+        };
+        let err = run_sweep(&bad, Backend::Native).unwrap_err().to_string();
+        assert!(err.contains("non-empty"), "{err}");
+    }
+
+    #[test]
+    fn cached_sweep_reuses_cells_across_grids() {
+        let cache = SweepCache::in_memory();
+        let a = run_sweep_cached(&tiny_spec(), Backend::Native, Some(&cache)).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (0, 6)); // 8 cells − 2 gaps
+        assert_eq!(cache.len(), 6);
+
+        // Identical request: every measurable cell served from the cache,
+        // with bit-identical summaries (same stored trial costs).
+        let b = run_sweep_cached(&tiny_spec(), Backend::Native, Some(&cache)).unwrap();
+        assert_eq!(cache.hits(), 6);
+        for (ca, cb) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(ca.key, cb.key);
+            assert_eq!(ca.violated, cb.violated);
+            if !ca.violated {
+                assert_eq!(
+                    ca.train.as_ref().unwrap().median,
+                    cb.train.as_ref().unwrap().median
+                );
+                assert_eq!(
+                    ca.surveil.as_ref().unwrap().median,
+                    cb.surveil.as_ref().unwrap().median
+                );
+            }
+        }
+
+        // A differently-shaped grid still reuses its shared cells — seeds
+        // are content-derived, so cell identity survives re-gridding.
+        let sub = SweepSpec {
+            signals: vec![4],
+            memvecs: vec![8, 16],
+            obs: vec![32],
+            ..tiny_spec()
+        };
+        run_sweep_cached(&sub, Backend::Native, Some(&cache)).unwrap();
+        assert_eq!(cache.hits(), 8, "both sub-grid cells must be reused");
+    }
+
+    #[test]
+    fn cache_misses_on_different_seed_or_trials() {
+        let cache = SweepCache::in_memory();
+        run_sweep_cached(&tiny_spec(), Backend::Native, Some(&cache)).unwrap();
+        let reseeded = SweepSpec {
+            seed: 99,
+            ..tiny_spec()
+        };
+        run_sweep_cached(&reseeded, Backend::Native, Some(&cache)).unwrap();
+        assert_eq!(cache.hits(), 0, "different seed must not share cells");
+        assert_eq!(cache.len(), 12);
     }
 
     #[test]

@@ -6,7 +6,11 @@
 //!
 //! - **L3 (this crate)** — the ContainerStress coordinator: nested-loop
 //!   Monte Carlo sweep engine, cloud shape catalog, GPU-speedup model,
-//!   response-surface methodology, and scoping recommender.
+//!   response-surface methodology, and scoping recommender — plus the
+//!   [`service`] layer (`containerstress serve`): a multi-tenant HTTP JSON
+//!   API over the scoping-job queue with a content-addressed cell-level
+//!   sweep cache, so identical grid cells are never measured twice across
+//!   customer requests.
 //! - **L2** — MSET2 train/surveil compute graphs written in JAX
 //!   (`python/compile/model.py`), AOT-lowered to HLO text artifacts.
 //! - **L1** — the similarity-matrix hot-spot as a Pallas kernel
@@ -29,6 +33,7 @@ pub mod mset;
 pub mod recommend;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod shapes;
 pub mod surface;
 pub mod tpss;

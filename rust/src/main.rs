@@ -3,6 +3,7 @@
 //! ```text
 //! containerstress sweep     run a Monte Carlo cost sweep, emit surfaces
 //! containerstress scope     sweep + fit surfaces + recommend cloud shapes
+//! containerstress serve     multi-tenant scoping service (HTTP JSON API)
 //! containerstress speedup   emit the GPU speedup surfaces (Figs. 6–8)
 //! containerstress synth     synthesize TPSS telemetry to CSV
 //! containerstress detect    run MSET2+SPRT anomaly detection demo
@@ -17,11 +18,12 @@ use containerstress::config::Config;
 use containerstress::coordinator::{run_sweep, Backend};
 use containerstress::detect::{Sprt, SprtConfig};
 use containerstress::metrics::Registry;
-use containerstress::recommend::{recommend, LocalCalibration, Sla};
+use containerstress::recommend::{recommend_from_sweep, Sla};
 use containerstress::report;
 use containerstress::runtime::DeviceServer;
+use containerstress::service;
 use containerstress::shapes::{self, Workload};
-use containerstress::surface::{ResponseSurface, SurfaceGrid};
+use containerstress::surface::SurfaceGrid;
 use containerstress::tpss::{synthesize, Fault, TpssConfig};
 use containerstress::util::cli::Args;
 use containerstress::util::logger;
@@ -57,6 +59,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
     match args.subcommand.as_deref() {
         Some("sweep") => cmd_sweep(args),
         Some("scope") => cmd_scope(args),
+        Some("serve") => cmd_serve(args),
         Some("speedup") => cmd_speedup(args),
         Some("synth") => cmd_synth(args),
         Some("detect") => cmd_detect(args),
@@ -77,6 +80,7 @@ fn print_help() {
          subcommands:\n\
            sweep    Monte Carlo compute-cost sweep over (signals × memvecs × obs)\n\
            scope    sweep + response surfaces + cloud-shape recommendation\n\
+           serve    multi-tenant scoping service: HTTP JSON API + sweep cache\n\
            speedup  GPU speedup-factor surfaces (paper Figs. 6-8)\n\
            synth    synthesize TPSS telemetry to CSV\n\
            detect   MSET2 + SPRT anomaly-detection demo\n\
@@ -85,7 +89,11 @@ fn print_help() {
          \n\
          common flags: --config FILE --backend device|native --signals a,b,c\n\
            --memvecs a,b,c --obs a,b,c --trials N --model mset2|aakr|ridge\n\
-           --out DIR --metrics"
+           --out DIR --metrics\n\
+         serve flags:  --host H --port P --queue-cap N --cache-dir DIR|none\n\
+         \n\
+         serve API:    POST /v1/scope  GET /v1/jobs/ID  GET /v1/recommendations/ID\n\
+                       GET /v1/shapes  GET /healthz  GET /metrics[?format=text]"
     );
 }
 
@@ -122,20 +130,6 @@ fn cmd_scope(args: &Args) -> anyhow::Result<()> {
     let cfg = Config::resolve(args)?;
     let (backend, _server) = make_backend(&cfg)?;
     let result = run_sweep(&cfg.sweep, backend)?;
-    let train_surf = ResponseSurface::fit(&result.samples("train"))?;
-    let surveil_surf = ResponseSurface::fit(&result.samples("surveil"))?;
-    log::info!(
-        "surfaces fitted: train r²={:.4}, surveil r²={:.4}",
-        train_surf.r2,
-        surveil_surf.r2
-    );
-    let (ref_n, ref_m, ref_obs) = (
-        *cfg.sweep.signals.last().unwrap(),
-        *cfg.sweep.memvecs.last().unwrap(),
-        *cfg.sweep.obs.last().unwrap(),
-    );
-    let cal = LocalCalibration::from_surface(&surveil_surf, ref_n, ref_m, ref_obs);
-
     let workload = Workload {
         n_signals: args.get_usize("wl-signals", 20)?,
         n_memvec: args.get_usize("wl-memvecs", 64)?,
@@ -146,9 +140,37 @@ fn cmd_scope(args: &Args) -> anyhow::Result<()> {
         headroom: args.get_f64("sla-headroom", 2.0)?,
         max_train_s: args.get_f64("sla-train", 3600.0)?,
     };
-    let rec = recommend(&workload, &train_surf, &surveil_surf, cal, &sla);
+    // Surface fit + calibration + assessment; errors cleanly on degenerate
+    // sweep grids instead of panicking (empty axes, too few cells).
+    let rec = recommend_from_sweep(&result, &workload, &sla)?;
     println!("{}", rec.render());
     report::write(&cfg.output_dir, "recommendation.txt", &rec.render())?;
+    report::write(
+        &cfg.output_dir,
+        "recommendation.json",
+        &rec.to_json().to_pretty(),
+    )?;
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = Config::resolve(args)?;
+    let (backend, _device) = make_backend(&cfg)?;
+    let server = service::Server::start(&cfg, backend)?;
+    println!("containerstress service listening on http://{}", server.addr());
+    println!("  POST /v1/scope                submit a scoping job");
+    println!("  GET  /v1/jobs/ID              job status");
+    println!("  GET  /v1/recommendations/ID   shape recommendation");
+    println!("  GET  /v1/shapes | /healthz | /metrics[?format=text]");
+    match &cfg.service.cache_dir {
+        Some(d) => println!(
+            "sweep cache: {} ({} cells warm)",
+            d.display(),
+            server.state().cache().len()
+        ),
+        None => println!("sweep cache: in-memory only"),
+    }
+    server.join();
     Ok(())
 }
 

@@ -24,9 +24,8 @@ impl Registry {
 
     /// Process-wide registry.
     pub fn global() -> &'static Registry {
-        static GLOBAL: once_cell::sync::Lazy<Registry> =
-            once_cell::sync::Lazy::new(Registry::new);
-        &GLOBAL
+        static GLOBAL: std::sync::OnceLock<Registry> = std::sync::OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
     }
 
     pub fn inc(&self, name: &str) {

@@ -8,8 +8,10 @@
 //! trial-and-error consulting loop the paper's introduction describes.
 
 use crate::accel::{self, CpuRef, GpuSpec};
+use crate::coordinator::SweepResult;
 use crate::shapes::{self, mset_footprint_bytes, Shape, Workload};
 use crate::surface::ResponseSurface;
+use crate::util::json::Json;
 
 /// SLA constraints for scoping.
 #[derive(Clone, Copy, Debug)]
@@ -151,9 +153,81 @@ pub fn recommend(
     }
 }
 
+/// The sweep → recommendation pipeline shared by the `scope` subcommand and
+/// the service's `GET /v1/recommendations/{id}`: fit both response surfaces
+/// from the measured cells, calibrate the local testbed against the
+/// largest measured cell, and assess the shape catalog.
+///
+/// Errors cleanly (no panics) when the sweep axes are empty or the grid is
+/// too small to fit a surface.
+pub fn recommend_from_sweep(
+    result: &SweepResult,
+    workload: &Workload,
+    sla: &Sla,
+) -> anyhow::Result<Recommendation> {
+    let train_surf = ResponseSurface::fit(&result.samples("train"))?;
+    let surveil_surf = ResponseSurface::fit(&result.samples("surveil"))?;
+    log::info!(
+        "surfaces fitted: train r²={:.4}, surveil r²={:.4}",
+        train_surf.r2,
+        surveil_surf.r2
+    );
+    let spec = &result.spec;
+    let (ref_n, ref_m, ref_obs) = match (
+        spec.signals.last(),
+        spec.memvecs.last(),
+        spec.obs.last(),
+    ) {
+        (Some(&n), Some(&m), Some(&obs)) => (n, m, obs),
+        _ => anyhow::bail!("sweep axes are empty; cannot calibrate a recommendation"),
+    };
+    let cal = LocalCalibration::from_surface(&surveil_surf, ref_n, ref_m, ref_obs);
+    Ok(recommend(workload, &train_surf, &surveil_surf, cal, sla))
+}
+
 impl Recommendation {
     pub fn chosen_shape(&self) -> Option<&ShapeAssessment> {
         self.chosen.map(|i| &self.assessments[i])
+    }
+
+    /// JSON rendering (the service's recommendation payload).
+    pub fn to_json(&self) -> Json {
+        let assessments: Vec<Json> = self
+            .assessments
+            .iter()
+            .map(|a| {
+                Json::obj(vec![
+                    ("shape", Json::Str(a.shape.name.to_string())),
+                    ("usd_per_hour", Json::Num(a.usd_per_hour)),
+                    ("train_s", Json::Num(a.train_s)),
+                    ("utilization", Json::Num(a.utilization)),
+                    ("fits_memory", Json::Bool(a.fits_memory)),
+                    ("feasible", Json::Bool(a.feasible)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            (
+                "workload",
+                Json::obj(vec![
+                    ("signals", Json::Num(self.workload.n_signals as f64)),
+                    ("memvecs", Json::Num(self.workload.n_memvec as f64)),
+                    ("obs_per_sec", Json::Num(self.workload.obs_per_sec)),
+                    (
+                        "train_window",
+                        Json::Num(self.workload.train_window as f64),
+                    ),
+                ]),
+            ),
+            (
+                "chosen",
+                match self.chosen_shape() {
+                    Some(a) => Json::Str(a.shape.name.to_string()),
+                    None => Json::Null,
+                },
+            ),
+            ("assessments", Json::Arr(assessments)),
+        ])
     }
 
     /// Render a report table.
@@ -274,6 +348,39 @@ mod tests {
         for (a, b) in r1.assessments.iter().zip(&r2.assessments) {
             assert!(b.utilization >= a.utilization);
         }
+    }
+
+    #[test]
+    fn json_rendering_lists_all_shapes() {
+        let (ts, ss, cal) = surfaces();
+        let rec = recommend(&Workload::customer_a(), &ts, &ss, cal, &Sla::default());
+        let j = rec.to_json();
+        assert_eq!(
+            j.get("assessments").unwrap().as_arr().unwrap().len(),
+            rec.assessments.len()
+        );
+        assert!(j.get("chosen").unwrap().as_str().is_some());
+        // round-trips through the writer/parser
+        let j2 = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn recommend_from_sweep_pipeline() {
+        use crate::coordinator::{run_sweep, Backend, SweepSpec};
+        let spec = SweepSpec {
+            signals: vec![2, 3],
+            memvecs: vec![8, 12, 16],
+            obs: vec![16, 32],
+            trials: 1,
+            seed: 5,
+            model: "mset2".into(),
+            workers: 2,
+        };
+        let result = run_sweep(&spec, Backend::Native).unwrap();
+        let rec = recommend_from_sweep(&result, &Workload::customer_a(), &Sla::default())
+            .expect("12 measured cells fit a surface");
+        assert_eq!(rec.assessments.len(), shapes::catalog().len());
     }
 
     #[test]

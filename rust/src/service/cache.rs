@@ -1,0 +1,376 @@
+//! Cell-level **sweep cache** — the measurement store behind the service.
+//!
+//! Every Monte Carlo sweep decomposes into independent grid cells, and a
+//! cell's measured trial costs are fully determined by the tuple
+//! `(cell, model, seed, backend, trials)` (trial seeds are derived from the
+//! cell *content*, see [`crate::coordinator::sweep`]). The cache is therefore
+//! content-addressed on that tuple: identical cells across scoping requests
+//! are never re-measured, turning repeated customer scoping into a cheap
+//! surface-fit + recommend over stored measurements — the "build oracles,
+//! don't re-run the experiment" economics the service exists for.
+//!
+//! Storage is an in-memory map with an optional JSON spill directory: each
+//! entry is one small self-describing file named by the FNV-1a hash of its
+//! canonical key, so a warm cache survives service restarts. Entries are
+//! wall-clock timings of *this* testbed — do not share a spill directory
+//! between machines of different hardware, and wipe it after a hardware
+//! change; the recommender's calibration assumes the measuring host.
+
+use crate::coordinator::sweep::{CellKey, CellStore, SweepSpec};
+use crate::metrics::Registry;
+use crate::util::fnv1a;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+pub use crate::coordinator::sweep::CellCosts;
+
+/// Full identity of one cached cell measurement.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub cell: CellKey,
+    pub model: String,
+    pub seed: u64,
+    pub backend: String,
+    pub trials: usize,
+}
+
+impl CacheKey {
+    /// Key for a cell measured under `spec` on the named backend.
+    pub fn new(cell: CellKey, spec: &SweepSpec, backend: &str) -> CacheKey {
+        CacheKey {
+            cell,
+            model: spec.model.clone(),
+            seed: spec.seed,
+            backend: backend.to_string(),
+            trials: spec.trials,
+        }
+    }
+
+    /// Canonical string form (the content address). The `v1` prefix is the
+    /// entry-schema version: bump it to invalidate old spill dirs.
+    pub fn canonical(&self) -> String {
+        format!(
+            "v1|model={}|backend={}|seed={}|trials={}|n={}|m={}|obs={}",
+            self.model,
+            self.backend,
+            self.seed,
+            self.trials,
+            self.cell.n,
+            self.cell.m,
+            self.cell.obs
+        )
+    }
+
+    /// Spill-file stem: hex FNV-1a of the canonical form.
+    pub fn file_stem(&self) -> String {
+        stem_of(&self.canonical())
+    }
+}
+
+/// Spill-file stem for a canonical key (single definition — eviction and
+/// insertion must always derive the same file name).
+fn stem_of(canonical: &str) -> String {
+    format!("{:016x}", fnv1a(canonical.as_bytes()))
+}
+
+/// Upper bound on cached cells. Keys are client-controlled through the
+/// service (`seed`, axes, …), so the store must not grow without limit: at
+/// the cap an arbitrary entry (and its spill file) is evicted per insert.
+pub const MAX_CACHED_CELLS: usize = 65_536;
+
+/// Content-addressed store of cell measurements (thread-safe).
+pub struct SweepCache {
+    dir: Option<PathBuf>,
+    map: Mutex<HashMap<String, CellCosts>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SweepCache {
+    /// Volatile cache (no disk spill) — tests and `--cache-dir none`.
+    pub fn in_memory() -> SweepCache {
+        SweepCache {
+            dir: None,
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Open (or create) a disk-backed cache, loading every valid spilled
+    /// entry up front. Unreadable entries are skipped with a warning, not
+    /// fatal — the cache must never take the service down.
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<SweepCache> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| anyhow::anyhow!("cache dir {}: {e}", dir.display()))?;
+        let mut map = HashMap::new();
+        for entry in std::fs::read_dir(&dir)? {
+            if map.len() >= MAX_CACHED_CELLS {
+                log::warn!("sweep cache: load cap {MAX_CACHED_CELLS} reached; rest ignored");
+                break;
+            }
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("json") {
+                continue;
+            }
+            match std::fs::read_to_string(&path)
+                .ok()
+                .and_then(|text| Json::parse(&text).ok())
+                .and_then(|j| parse_entry(&j))
+            {
+                Some((key, costs)) => {
+                    map.insert(key.canonical(), costs);
+                }
+                None => log::warn!("sweep cache: skipping unreadable {}", path.display()),
+            }
+        }
+        log::info!("sweep cache: {} entries loaded from {}", map.len(), dir.display());
+        Ok(SweepCache {
+            dir: Some(dir),
+            map: Mutex::new(map),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
+    }
+
+    /// Look up a cell; counts a hit or miss (locally and in the global
+    /// metrics registry).
+    pub fn get(&self, key: &CacheKey) -> Option<CellCosts> {
+        let found = self.map.lock().unwrap().get(&key.canonical()).cloned();
+        match &found {
+            Some(_) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Registry::global().inc("sweep.cache.hits");
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Registry::global().inc("sweep.cache.misses");
+            }
+        }
+        found
+    }
+
+    /// Insert a measurement, spilling it to disk when a directory is
+    /// configured. Spill failures are logged, never propagated. At
+    /// [`MAX_CACHED_CELLS`] an arbitrary entry is evicted (memory + spill
+    /// file) to keep the store bounded.
+    pub fn put(&self, key: CacheKey, costs: CellCosts) {
+        let canon = key.canonical();
+        {
+            let mut map = self.map.lock().unwrap();
+            if map.len() >= MAX_CACHED_CELLS && !map.contains_key(&canon) {
+                if let Some(victim) = map.keys().next().cloned() {
+                    map.remove(&victim);
+                    if let Some(dir) = &self.dir {
+                        let _ =
+                            std::fs::remove_file(dir.join(format!("{}.json", stem_of(&victim))));
+                    }
+                    Registry::global().inc("sweep.cache.evictions");
+                }
+            }
+            map.insert(canon, costs.clone());
+        }
+        if let Some(dir) = &self.dir {
+            // Spill files carry the seed as a JSON f64; a seed above 2^53
+            // would reload rounded, silently never matching its key again.
+            // Keep such entries memory-only (CLI-only case — the service
+            // path rejects non-round-trippable seeds at parse time).
+            if key.seed as f64 as u64 != key.seed {
+                log::debug!("sweep cache: seed {} not f64-exact; entry not spilled", key.seed);
+                return;
+            }
+            let path = dir.join(format!("{}.json", key.file_stem()));
+            if let Err(e) = std::fs::write(&path, entry_json(&key, &costs).to_pretty()) {
+                log::warn!("sweep cache: spill to {} failed: {e}", path.display());
+            }
+        }
+    }
+
+    /// Number of cached cells.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookup hits since this instance was created.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookup misses since this instance was created.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+/// The coordinator-facing store interface ([`crate::coordinator::sweep`]
+/// consults this through the trait, never through this module directly).
+impl CellStore for SweepCache {
+    fn fetch(&self, cell: CellKey, spec: &SweepSpec, backend: &str) -> Option<CellCosts> {
+        self.get(&CacheKey::new(cell, spec, backend))
+    }
+
+    fn store(&self, cell: CellKey, spec: &SweepSpec, backend: &str, costs: CellCosts) {
+        self.put(CacheKey::new(cell, spec, backend), costs);
+    }
+}
+
+fn entry_json(key: &CacheKey, costs: &CellCosts) -> Json {
+    Json::obj(vec![
+        ("backend", Json::Str(key.backend.clone())),
+        ("model", Json::Str(key.model.clone())),
+        ("seed", Json::Num(key.seed as f64)),
+        ("trials", Json::Num(key.trials as f64)),
+        ("n", Json::Num(key.cell.n as f64)),
+        ("m", Json::Num(key.cell.m as f64)),
+        ("obs", Json::Num(key.cell.obs as f64)),
+        ("train_s", Json::arr_f64(&costs.train_s)),
+        ("surveil_s", Json::arr_f64(&costs.surveil_s)),
+    ])
+}
+
+fn f64_list(j: &Json) -> Option<Vec<f64>> {
+    let arr = j.as_arr()?;
+    let v: Vec<f64> = arr.iter().filter_map(Json::as_f64).collect();
+    if v.len() == arr.len() {
+        Some(v)
+    } else {
+        None
+    }
+}
+
+fn parse_entry(j: &Json) -> Option<(CacheKey, CellCosts)> {
+    let key = CacheKey {
+        cell: CellKey {
+            n: j.get("n")?.as_usize()?,
+            m: j.get("m")?.as_usize()?,
+            obs: j.get("obs")?.as_usize()?,
+        },
+        model: j.get("model")?.as_str()?.to_string(),
+        seed: j.get("seed")?.as_f64()? as u64,
+        backend: j.get("backend")?.as_str()?.to_string(),
+        trials: j.get("trials")?.as_usize()?,
+    };
+    let costs = CellCosts {
+        train_s: f64_list(j.get("train_s")?)?,
+        surveil_s: f64_list(j.get("surveil_s")?)?,
+    };
+    // A valid entry carries exactly `trials` ≥ 1 measurements per phase;
+    // anything else is a corrupt or foreign file.
+    if key.trials == 0
+        || costs.train_s.len() != key.trials
+        || costs.surveil_s.len() != key.trials
+    {
+        return None;
+    }
+    Some((key, costs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(n: usize, m: usize, obs: usize) -> CacheKey {
+        CacheKey {
+            cell: CellKey { n, m, obs },
+            model: "mset2".into(),
+            seed: 7,
+            backend: "native".into(),
+            trials: 2,
+        }
+    }
+
+    fn costs() -> CellCosts {
+        CellCosts {
+            train_s: vec![0.5, 0.625],
+            surveil_s: vec![0.25, 0.125],
+        }
+    }
+
+    #[test]
+    fn memory_roundtrip_and_accounting() {
+        let c = SweepCache::in_memory();
+        assert!(c.get(&key(4, 8, 32)).is_none());
+        c.put(key(4, 8, 32), costs());
+        assert_eq!(c.get(&key(4, 8, 32)), Some(costs()));
+        assert_eq!((c.hits(), c.misses(), c.len()), (1, 1, 1));
+        // any key component change is a different address
+        assert!(c.get(&key(4, 8, 64)).is_none());
+        let other = CacheKey {
+            seed: 8,
+            ..key(4, 8, 32)
+        };
+        assert!(c.get(&other).is_none());
+        assert_eq!(c.misses(), 3);
+    }
+
+    #[test]
+    fn disk_spill_survives_reopen() {
+        let dir = std::env::temp_dir().join(format!(
+            "cs_cache_test_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let c = SweepCache::open(&dir).unwrap();
+            c.put(key(4, 8, 32), costs());
+            c.put(key(8, 16, 64), costs());
+        }
+        let c2 = SweepCache::open(&dir).unwrap();
+        assert_eq!(c2.len(), 2);
+        assert_eq!(c2.get(&key(4, 8, 32)), Some(costs()));
+        // costs round-trip exactly through the JSON writer
+        assert_eq!(c2.get(&key(8, 16, 64)).unwrap().surveil_s, vec![0.25, 0.125]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_spill_entries_are_skipped() {
+        let dir = std::env::temp_dir().join(format!(
+            "cs_cache_corrupt_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("bad.json"), "{not json").unwrap();
+        std::fs::write(dir.join("wrong.json"), r#"{"n": 4}"#).unwrap();
+        // trial-count mismatch: claims 3 trials, carries 1
+        std::fs::write(
+            dir.join("mismatch.json"),
+            r#"{"backend":"native","model":"mset2","seed":1,"trials":3,"n":4,"m":8,"obs":16,"train_s":[0.1],"surveil_s":[0.1]}"#,
+        )
+        .unwrap();
+        let c = SweepCache::open(&dir).unwrap();
+        assert!(c.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn canonical_keys_are_distinct() {
+        let a = key(4, 8, 32);
+        let mut seen = std::collections::HashSet::new();
+        for k in [
+            a.clone(),
+            CacheKey {
+                backend: "device".into(),
+                ..a.clone()
+            },
+            CacheKey {
+                model: "aakr".into(),
+                ..a.clone()
+            },
+            CacheKey { trials: 3, ..a },
+        ] {
+            assert!(seen.insert(k.canonical()), "collision: {}", k.canonical());
+        }
+    }
+}

@@ -1,0 +1,438 @@
+//! Dependency-free HTTP/1.1 server core.
+//!
+//! `hyper`/`axum` are unavailable in the offline build environment; the
+//! service's needs are small — parse a request, dispatch to a handler,
+//! write a JSON response — so a std `TcpListener` accept loop fanning
+//! connections out over [`crate::util::threadpool::JobPool`] covers them.
+//!
+//! Protocol subset (documented, deliberate):
+//! - one request per connection (`Connection: close` on every response);
+//! - bodies bounded by `Content-Length` (no chunked transfer encoding);
+//! - no percent-decoding — all structured data travels in JSON bodies.
+
+use crate::util::json::Json;
+use crate::util::threadpool::JobPool;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// Largest accepted request body.
+const MAX_BODY_BYTES: usize = 1 << 20;
+/// Largest accepted request line + headers, in bytes (caps `read_line`
+/// growth — a client streaming garbage without newlines hits EOF here).
+const MAX_HEAD_BYTES: u64 = 8 << 10;
+/// Largest accepted header count.
+const MAX_HEADERS: usize = 64;
+/// Per-read socket timeout.
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+/// Whole-request deadline (defeats byte-at-a-time trickle within the
+/// per-read timeout).
+const REQUEST_DEADLINE: Duration = Duration::from_secs(30);
+/// Connections admitted concurrently (handling + queued for a pool
+/// thread); beyond this the accept loop answers 503 and closes rather
+/// than buffering sockets without bound.
+const MAX_PENDING_CONNS: usize = 64;
+
+/// A parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string.
+    pub path: String,
+    /// Raw `k=v` query pairs (no percent-decoding).
+    pub query: Vec<(String, String)>,
+    /// Lower-cased header names with trimmed values.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn query_get(&self, key: &str) -> Option<&str> {
+        self.query
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> anyhow::Result<&str> {
+        std::str::from_utf8(&self.body).map_err(|_| anyhow::anyhow!("body is not valid UTF-8"))
+    }
+}
+
+/// A response ready to serialize.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.to_string().into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into().into_bytes(),
+        }
+    }
+
+    /// JSON error envelope: `{"error": msg}`.
+    pub fn error(status: u16, msg: &str) -> Response {
+        Response::json(status, &Json::obj(vec![("error", Json::Str(msg.to_string()))]))
+    }
+
+    fn reason(status: u16) -> &'static str {
+        match status {
+            200 => "OK",
+            202 => "Accepted",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            409 => "Conflict",
+            422 => "Unprocessable Entity",
+            429 => "Too Many Requests",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "",
+        }
+    }
+
+    fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            Response::reason(self.status),
+            self.content_type,
+            self.body.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&self.body)?;
+        stream.flush()
+    }
+}
+
+/// A `Read` over a borrowed `TcpStream` that enforces an absolute deadline:
+/// every read gets a socket timeout of `min(remaining, READ_TIMEOUT)`, so a
+/// byte-at-a-time trickle cannot hold a handler thread past the deadline.
+struct DeadlineStream<'a> {
+    stream: &'a TcpStream,
+    deadline: std::time::Instant,
+}
+
+impl Read for DeadlineStream<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let remaining = self
+            .deadline
+            .saturating_duration_since(std::time::Instant::now());
+        if remaining.is_zero() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "request deadline exceeded",
+            ));
+        }
+        self.stream
+            .set_read_timeout(Some(remaining.min(READ_TIMEOUT)))?;
+        (&mut &*self.stream).read(buf)
+    }
+}
+
+fn read_request(stream: &mut TcpStream) -> anyhow::Result<Request> {
+    let deadline = std::time::Instant::now() + REQUEST_DEADLINE;
+    // The head (request line + headers) is read through a hard byte cap;
+    // the body allowance is added only after Content-Length is validated.
+    let mut reader = BufReader::new(Read::take(
+        DeadlineStream {
+            stream: &*stream,
+            deadline,
+        },
+        MAX_HEAD_BYTES,
+    ));
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty request line"))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("missing request target"))?
+        .to_string();
+    let version = parts.next().unwrap_or("");
+    anyhow::ensure!(
+        version.starts_with("HTTP/1."),
+        "unsupported protocol '{version}'"
+    );
+
+    let mut headers = Vec::new();
+    let mut content_len = 0usize;
+    loop {
+        anyhow::ensure!(
+            std::time::Instant::now() < deadline,
+            "request deadline exceeded"
+        );
+        let mut h = String::new();
+        let n = reader.read_line(&mut h)?;
+        anyhow::ensure!(n > 0, "unexpected eof in headers (or head too large)");
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let (k, v) = h
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("malformed header line"))?;
+        let k = k.trim().to_ascii_lowercase();
+        let v = v.trim().to_string();
+        if k == "content-length" {
+            content_len = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad content-length '{v}'"))?;
+        }
+        headers.push((k, v));
+        anyhow::ensure!(headers.len() <= MAX_HEADERS, "too many headers");
+    }
+    anyhow::ensure!(
+        content_len <= MAX_BODY_BYTES,
+        "body too large ({content_len} bytes)"
+    );
+    anyhow::ensure!(
+        std::time::Instant::now() < deadline,
+        "request deadline exceeded"
+    );
+    // Extend the read cap to cover exactly the declared body.
+    reader.get_mut().set_limit(content_len as u64);
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+
+    let (path, query_raw) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q),
+        None => (target.clone(), ""),
+    };
+    let query = query_raw
+        .split('&')
+        .filter(|p| !p.is_empty())
+        .map(|p| {
+            let (k, v) = p.split_once('=').unwrap_or((p, ""));
+            (k.to_string(), v.to_string())
+        })
+        .collect();
+    Ok(Request {
+        method,
+        path,
+        query,
+        headers,
+        body,
+    })
+}
+
+/// Connection handler signature: pure request → response.
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync + 'static>;
+
+fn handle_connection(mut stream: TcpStream, handler: Handler) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let resp = match read_request(&mut stream) {
+        Ok(req) => (*handler)(&req),
+        Err(e) => Response::error(400, &format!("bad request: {e}")),
+    };
+    if let Err(e) = resp.write_to(&mut stream) {
+        log::debug!("http: response write failed: {e}");
+    }
+}
+
+/// Accept loop + connection thread pool over a generic [`Handler`].
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and serve
+    /// connections on `workers` pool threads until shutdown/drop.
+    pub fn bind(addr: &str, workers: usize, handler: Handler) -> anyhow::Result<HttpServer> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("http-accept".into())
+            .spawn(move || {
+                let pool = JobPool::new(workers.max(1));
+                // Results are fire-and-forget; the receiver is dropped and
+                // JobPool ignores the failed send.
+                let (done_tx, _) = mpsc::channel::<()>();
+                let pending = Arc::new(AtomicUsize::new(0));
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(mut stream) => {
+                            if pending.load(Ordering::SeqCst) >= MAX_PENDING_CONNS {
+                                // Shed load instead of buffering sockets
+                                // without bound behind a busy pool.
+                                let _ = Response::error(503, "server busy; retry later")
+                                    .write_to(&mut stream);
+                                continue;
+                            }
+                            pending.fetch_add(1, Ordering::SeqCst);
+                            let h = Arc::clone(&handler);
+                            let p = Arc::clone(&pending);
+                            pool.submit(
+                                move || {
+                                    // A panicking handler must not kill the
+                                    // pool worker or leak its pending slot.
+                                    let r = std::panic::catch_unwind(
+                                        std::panic::AssertUnwindSafe(move || {
+                                            handle_connection(stream, h)
+                                        }),
+                                    );
+                                    if r.is_err() {
+                                        log::error!("http: connection handler panicked");
+                                    }
+                                    p.fetch_sub(1, Ordering::SeqCst);
+                                },
+                                done_tx.clone(),
+                            );
+                        }
+                        Err(e) => log::warn!("http: accept failed: {e}"),
+                    }
+                }
+                pool.shutdown();
+            })?;
+        Ok(HttpServer {
+            addr: local,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (with the real port when bound to port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain in-flight connections, join the accept thread.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+
+    /// Block until the accept loop exits (serve-forever mode).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Nudge the blocking accept() so the loop observes the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> HttpServer {
+        let handler: Handler = Arc::new(|req: &Request| {
+            Response::json(
+                200,
+                &Json::obj(vec![
+                    ("method", Json::Str(req.method.clone())),
+                    ("path", Json::Str(req.path.clone())),
+                    (
+                        "q",
+                        Json::Str(req.query_get("q").unwrap_or("").to_string()),
+                    ),
+                    (
+                        "body",
+                        Json::Str(req.body_str().unwrap_or("").to_string()),
+                    ),
+                ]),
+            )
+        });
+        HttpServer::bind("127.0.0.1:0", 2, handler).unwrap()
+    }
+
+    fn raw_roundtrip(addr: SocketAddr, raw: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn parses_and_echoes_request() {
+        let server = echo_server();
+        let body = r#"{"x":1}"#;
+        let raw = format!(
+            "POST /v1/echo?q=7 HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let out = raw_roundtrip(server.addr(), &raw);
+        assert!(out.starts_with("HTTP/1.1 200 OK\r\n"), "{out}");
+        let payload = out.split("\r\n\r\n").nth(1).unwrap();
+        let j = Json::parse(payload).unwrap();
+        assert_eq!(j.get("method").unwrap().as_str(), Some("POST"));
+        assert_eq!(j.get("path").unwrap().as_str(), Some("/v1/echo"));
+        assert_eq!(j.get("q").unwrap().as_str(), Some("7"));
+        assert_eq!(j.get("body").unwrap().as_str(), Some(body));
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_requests_get_400() {
+        let server = echo_server();
+        let out = raw_roundtrip(server.addr(), "NONSENSE\r\n\r\n");
+        assert!(out.starts_with("HTTP/1.1 400 "), "{out}");
+        let out = raw_roundtrip(
+            server.addr(),
+            "GET / HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n",
+        );
+        assert!(out.starts_with("HTTP/1.1 400 "), "{out}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_connections_are_served() {
+        let server = echo_server();
+        let addr = server.addr();
+        std::thread::scope(|scope| {
+            for i in 0..8 {
+                scope.spawn(move || {
+                    let raw = format!("GET /c/{i} HTTP/1.1\r\nHost: t\r\n\r\n");
+                    let out = raw_roundtrip(addr, &raw);
+                    assert!(out.contains(&format!("/c/{i}")), "{out}");
+                });
+            }
+        });
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_unblocks_accept() {
+        let server = echo_server();
+        let t0 = std::time::Instant::now();
+        server.shutdown();
+        assert!(t0.elapsed() < Duration::from_secs(5), "shutdown hung");
+    }
+}

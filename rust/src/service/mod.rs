@@ -1,0 +1,84 @@
+//! The **multi-tenant scoping service** — `containerstress serve`.
+//!
+//! The paper's framework exists to "autonomously scale any size customer ML
+//! use case"; this module is the network surface that makes the coordinator
+//! operable as such a service rather than a one-shot CLI. It is built
+//! entirely from in-repo substrates (std `TcpListener`,
+//! [`crate::util::threadpool`], [`crate::util::json`]) — no external web
+//! stack is available offline:
+//!
+//! - [`http`]   — minimal HTTP/1.1 server core (parse, dispatch, respond);
+//! - [`routes`] — the JSON API: submit scope jobs, poll status, fetch
+//!   recommendations, shape catalog, health, metrics;
+//! - [`cache`]  — the content-addressed **cell-level sweep cache**:
+//!   identical grid cells across customer requests are measured once, so a
+//!   repeat scoping request costs a surface fit + recommend instead of a
+//!   full Monte Carlo sweep.
+
+pub mod cache;
+pub mod http;
+pub mod routes;
+
+pub use cache::{CacheKey, CellCosts, SweepCache};
+pub use http::{Handler, HttpServer, Request, Response};
+pub use routes::ServiceState;
+
+use crate::config::Config;
+use crate::coordinator::jobs::ScopingService;
+use crate::coordinator::{Backend, CellStore};
+use std::sync::Arc;
+
+/// Connection-handler pool size. Handlers only parse/serialize JSON and
+/// enqueue jobs (sweep compute runs on the leader thread), so a small,
+/// fixed pool suffices.
+const HTTP_WORKERS: usize = 4;
+
+/// A running service instance: HTTP front + scoping queue + sweep cache.
+pub struct Server {
+    http: HttpServer,
+    state: Arc<ServiceState>,
+}
+
+impl Server {
+    /// Start serving on `cfg.service.host:port` (port 0 picks an ephemeral
+    /// port — use [`Server::addr`] for the real one). The sweep cache is
+    /// disk-backed at `cfg.service.cache_dir`, or memory-only when `None`.
+    pub fn start(cfg: &Config, backend: Backend) -> anyhow::Result<Server> {
+        let cache = match &cfg.service.cache_dir {
+            Some(dir) => Arc::new(SweepCache::open(dir)?),
+            None => Arc::new(SweepCache::in_memory()),
+        };
+        let svc = ScopingService::start_with_cache(
+            backend,
+            cfg.service.queue_cap,
+            Some(Arc::clone(&cache) as Arc<dyn CellStore>),
+        );
+        let state = Arc::new(ServiceState::new(svc, cache, cfg.sweep.clone()));
+        let handler_state = Arc::clone(&state);
+        let handler: Handler = Arc::new(move |req| handler_state.handle(req));
+        let addr = format!("{}:{}", cfg.service.host, cfg.service.port);
+        let http = HttpServer::bind(&addr, HTTP_WORKERS, handler)?;
+        log::info!("scoping service listening on http://{}", http.addr());
+        Ok(Server { http, state })
+    }
+
+    /// The bound socket address.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.http.addr()
+    }
+
+    /// Shared route state (job queue + cache) — tests and embedders.
+    pub fn state(&self) -> &ServiceState {
+        &self.state
+    }
+
+    /// Serve until the process is killed (the `serve` subcommand).
+    pub fn join(self) {
+        self.http.join();
+    }
+
+    /// Stop accepting and drain in-flight connections.
+    pub fn shutdown(self) {
+        self.http.shutdown();
+    }
+}

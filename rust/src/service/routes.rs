@@ -1,0 +1,466 @@
+//! Route dispatch for the scoping service's JSON API.
+//!
+//! ```text
+//! POST /v1/scope                submit a workload + SLA, get a job id
+//! GET  /v1/jobs/{id}            job status / sweep summary
+//! GET  /v1/recommendations/{id} rendered shape recommendation (job → rec)
+//! GET  /v1/shapes               cloud shape catalog
+//! GET  /healthz                 liveness + queue gauge
+//! GET  /metrics                 metrics registry (JSON; ?format=text)
+//! ```
+//!
+//! `POST /v1/scope` body (all keys optional; defaults fill the rest):
+//!
+//! ```json
+//! {
+//!   "sweep":    {"signals": [2,3], "memvecs": [8,16], "obs": [16,32],
+//!                "trials": 1, "seed": 9, "model": "mset2", "workers": 2},
+//!   "workload": {"signals": 20, "memvecs": 64,
+//!                "obs_per_sec": 1.0, "train_window": 4096},
+//!   "sla":      {"headroom": 2.0, "max_train_s": 3600.0}
+//! }
+//! ```
+
+use crate::config;
+use crate::coordinator::jobs::{JobId, JobStatus, ScopingService};
+use crate::coordinator::{SweepResult, SweepSpec};
+use crate::metrics::Registry;
+use crate::recommend::{recommend_from_sweep, Sla};
+use crate::service::cache::SweepCache;
+use crate::service::http::{Request, Response};
+use crate::shapes::{self, Workload};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Shared state behind every connection handler: the scoping job queue,
+/// the sweep cache, and the per-job scoping context needed to turn a
+/// finished sweep into a recommendation.
+pub struct ServiceState {
+    svc: ScopingService,
+    cache: Arc<SweepCache>,
+    default_spec: SweepSpec,
+    jobs: Mutex<HashMap<JobId, (Workload, Sla)>>,
+}
+
+impl ServiceState {
+    pub fn new(svc: ScopingService, cache: Arc<SweepCache>, default_spec: SweepSpec) -> Self {
+        ServiceState {
+            svc,
+            cache,
+            default_spec,
+            jobs: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn cache(&self) -> &SweepCache {
+        &self.cache
+    }
+
+    /// Top-level dispatch (the [`crate::service::http::Handler`] body).
+    pub fn handle(&self, req: &Request) -> Response {
+        Registry::global().inc("service.http.requests");
+        let segs: Vec<&str> = req
+            .path
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .collect();
+        let resp = match (req.method.as_str(), segs.as_slice()) {
+            ("GET", ["healthz"]) => self.healthz(),
+            ("GET", ["metrics"]) => metrics(req),
+            ("GET", ["v1", "shapes"]) => shapes_catalog(),
+            ("POST", ["v1", "scope"]) => self.scope(req),
+            ("GET", ["v1", "jobs", id]) => self.job_status(id),
+            ("GET", ["v1", "recommendations", id]) => self.recommendation(id),
+            (_, ["healthz"])
+            | (_, ["metrics"])
+            | (_, ["v1", "shapes"])
+            | (_, ["v1", "scope"])
+            | (_, ["v1", "jobs", _])
+            | (_, ["v1", "recommendations", _]) => {
+                Response::error(405, "method not allowed on this route")
+            }
+            _ => {
+                Registry::global().inc("service.http.not_found");
+                Response::error(404, "no such route")
+            }
+        };
+        if resp.status >= 400 {
+            Registry::global().inc("service.http.errors");
+        }
+        resp
+    }
+
+    fn healthz(&self) -> Response {
+        Response::json(
+            200,
+            &Json::obj(vec![
+                ("status", Json::Str("ok".into())),
+                ("jobs_in_flight", Json::Num(self.svc.in_flight() as f64)),
+                ("queue_cap", Json::Num(self.svc.queue_cap() as f64)),
+                ("cached_cells", Json::Num(self.cache.len() as f64)),
+            ]),
+        )
+    }
+
+    fn scope(&self, req: &Request) -> Response {
+        let body = if req.body.is_empty() {
+            Json::obj(vec![])
+        } else {
+            let text = match req.body_str() {
+                Ok(t) => t,
+                Err(e) => return Response::error(400, &e.to_string()),
+            };
+            match Json::parse(text) {
+                Ok(j) => j,
+                Err(e) => return Response::error(400, &format!("invalid JSON body: {e}")),
+            }
+        };
+        if body.as_obj().is_none() {
+            // An array/string/number envelope would silently run the full
+            // default sweep (every get() returns None) — reject it.
+            return Response::error(400, "body must be a JSON object");
+        }
+        let spec = match body.get("sweep") {
+            Some(s) => match config::sweep_spec_from_json(&self.default_spec, s) {
+                Ok(spec) => spec,
+                Err(e) => return Response::error(422, &format!("invalid sweep spec: {e}")),
+            },
+            None => self.default_spec.clone(),
+        };
+        if let Err(e) = spec.validate().and_then(|_| check_service_limits(&spec)) {
+            return Response::error(422, &format!("invalid sweep spec: {e}"));
+        }
+        let workload = match workload_from_json(body.get("workload")) {
+            Ok(w) => w,
+            Err(e) => return Response::error(422, &format!("invalid workload: {e}")),
+        };
+        let sla = match sla_from_json(body.get("sla")) {
+            Ok(s) => s,
+            Err(e) => return Response::error(422, &format!("invalid sla: {e}")),
+        };
+        match self.svc.submit(spec) {
+            Ok(id) => {
+                let mut jobs = self.jobs.lock().unwrap();
+                // Drop scoping contexts for jobs the queue has evicted, so
+                // this map stays bounded by the queue's retention policy.
+                jobs.retain(|jid, _| self.svc.status(*jid).is_some());
+                jobs.insert(id, (workload, sla));
+                drop(jobs);
+                Registry::global().inc("service.scope.submitted");
+                Response::json(
+                    202,
+                    &Json::obj(vec![
+                        ("job_id", Json::Num(id as f64)),
+                        ("status", Json::Str("queued".into())),
+                    ]),
+                )
+            }
+            Err(e) => {
+                Registry::global().inc("service.scope.rejected");
+                Response::error(429, &e.to_string())
+            }
+        }
+    }
+
+    fn job_status(&self, id: &str) -> Response {
+        let id: JobId = match id.parse() {
+            Ok(v) => v,
+            Err(_) => return Response::error(400, "job id must be an integer"),
+        };
+        match self.svc.status(id) {
+            None => Response::error(404, &format!("unknown job {id}")),
+            Some(status) => {
+                let mut fields = vec![("job_id", Json::Num(id as f64))];
+                match status {
+                    JobStatus::Queued => fields.push(("status", Json::Str("queued".into()))),
+                    JobStatus::Running => {
+                        fields.push(("status", Json::Str("running".into())))
+                    }
+                    JobStatus::Failed(e) => {
+                        fields.push(("status", Json::Str("failed".into())));
+                        fields.push(("error", Json::Str(e)));
+                    }
+                    JobStatus::Done(r) => {
+                        fields.push(("status", Json::Str("done".into())));
+                        fields.push(("result", sweep_summary(&r)));
+                    }
+                }
+                Response::json(200, &Json::obj(fields))
+            }
+        }
+    }
+
+    fn recommendation(&self, id: &str) -> Response {
+        let id: JobId = match id.parse() {
+            Ok(v) => v,
+            Err(_) => return Response::error(400, "job id must be an integer"),
+        };
+        let result = match self.svc.status(id) {
+            None => return Response::error(404, &format!("unknown job {id}")),
+            Some(JobStatus::Done(r)) => r,
+            Some(JobStatus::Failed(e)) => {
+                return Response::error(409, &format!("job {id} failed: {e}"))
+            }
+            Some(_) => {
+                return Response::error(409, &format!("job {id} is not complete yet"))
+            }
+        };
+        // No silent fallback workload: a recommendation sized for the wrong
+        // customer with a 200 status would be worse than an honest 409.
+        let Some((workload, sla)) = self.jobs.lock().unwrap().get(&id).copied() else {
+            return Response::error(
+                409,
+                &format!("job {id} has no scoping context (evicted or still registering)"),
+            );
+        };
+        match recommend_from_sweep(&result, &workload, &sla) {
+            Ok(rec) => {
+                let mut j = rec.to_json();
+                if let Json::Obj(m) = &mut j {
+                    m.insert("job_id".into(), Json::Num(id as f64));
+                    m.insert("rendered".into(), Json::Str(rec.render()));
+                }
+                Response::json(200, &j)
+            }
+            Err(e) => Response::error(500, &format!("recommendation failed: {e}")),
+        }
+    }
+}
+
+/// Per-request bounds on client-supplied sweep specs. The CLI is
+/// operator-trusted and unbounded; the network path is not — one request
+/// must not be able to exhaust the node's memory or threads.
+const MAX_CELLS: usize = 512;
+const MAX_TRIALS: usize = 32;
+const MAX_WORKERS: usize = 64;
+/// Per-cell synthesis size cap: `signals × max(obs, memvecs)` elements
+/// (f64), ~128 MB at the bound.
+const MAX_CELL_ELEMS: usize = 1 << 24;
+/// Joint cap on concurrent synthesis: `workers × cell elements` — each
+/// in-flight trial holds a few cell-sized buffers, so bounding the product
+/// (not each factor alone) is what actually bounds transient memory.
+const MAX_CONCURRENT_ELEMS: usize = 1 << 26;
+
+fn check_service_limits(spec: &SweepSpec) -> anyhow::Result<()> {
+    let cells = spec.signals.len() * spec.memvecs.len() * spec.obs.len();
+    anyhow::ensure!(
+        cells <= MAX_CELLS,
+        "sweep grid too large: {cells} cells (service max {MAX_CELLS})"
+    );
+    anyhow::ensure!(
+        spec.trials <= MAX_TRIALS,
+        "trials too large: {} (service max {MAX_TRIALS})",
+        spec.trials
+    );
+    anyhow::ensure!(
+        spec.workers <= MAX_WORKERS,
+        "workers too large: {} (service max {MAX_WORKERS})",
+        spec.workers
+    );
+    let max_n = spec.signals.iter().copied().max().unwrap_or(0);
+    let max_m = spec.memvecs.iter().copied().max().unwrap_or(0);
+    let max_obs = spec.obs.iter().copied().max().unwrap_or(0);
+    let elems = max_n.saturating_mul(max_obs.max(max_m));
+    anyhow::ensure!(
+        elems <= MAX_CELL_ELEMS,
+        "cell too large: {max_n} signals × {} obs/memvecs exceeds the service limit",
+        max_obs.max(max_m)
+    );
+    let eff_workers = if spec.workers == 0 {
+        crate::util::threadpool::default_workers()
+    } else {
+        spec.workers
+    };
+    anyhow::ensure!(
+        eff_workers.saturating_mul(elems) <= MAX_CONCURRENT_ELEMS,
+        "sweep too large: {eff_workers} workers × {elems}-element cells exceeds the \
+         service's concurrent-memory limit; reduce workers or cell size"
+    );
+    Ok(())
+}
+
+fn sweep_summary(r: &SweepResult) -> Json {
+    Json::obj(vec![
+        ("cells", Json::Num(r.cells.len() as f64)),
+        ("gap_cells", Json::Num(r.gap_cells().len() as f64)),
+        ("model", Json::Str(r.spec.model.clone())),
+        ("trials", Json::Num(r.spec.trials as f64)),
+        ("seed", Json::Num(r.spec.seed as f64)),
+    ])
+}
+
+// Like `config::sweep_spec_from_json`, present-but-malformed keys are an
+// error — a silently defaulted workload would size the wrong customer.
+
+fn req_usize(j: &Json, key: &str) -> anyhow::Result<Option<usize>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("{key} must be a non-negative integer")),
+    }
+}
+
+fn req_f64(j: &Json, key: &str) -> anyhow::Result<Option<f64>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("{key} must be a number")),
+    }
+}
+
+fn workload_from_json(j: Option<&Json>) -> anyhow::Result<Workload> {
+    let mut w = Workload::customer_a();
+    if let Some(j) = j {
+        if let Some(v) = req_usize(j, "signals")? {
+            w.n_signals = v;
+        }
+        if let Some(v) = req_usize(j, "memvecs")? {
+            w.n_memvec = v;
+        }
+        if let Some(v) = req_f64(j, "obs_per_sec")? {
+            w.obs_per_sec = v;
+        }
+        if let Some(v) = req_usize(j, "train_window")? {
+            w.train_window = v;
+        }
+    }
+    Ok(w)
+}
+
+fn sla_from_json(j: Option<&Json>) -> anyhow::Result<Sla> {
+    let mut sla = Sla::default();
+    if let Some(j) = j {
+        if let Some(v) = req_f64(j, "headroom")? {
+            sla.headroom = v;
+        }
+        if let Some(v) = req_f64(j, "max_train_s")? {
+            sla.max_train_s = v;
+        }
+    }
+    Ok(sla)
+}
+
+fn metrics(req: &Request) -> Response {
+    let reg = Registry::global();
+    if req.query_get("format") == Some("text") {
+        Response::text(200, reg.render())
+    } else {
+        Response::json(200, &reg.to_json())
+    }
+}
+
+fn shapes_catalog() -> Response {
+    let shapes: Vec<Json> = shapes::catalog()
+        .into_iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("name", Json::Str(s.name.to_string())),
+                ("cores", Json::Num(s.cpu.cores as f64)),
+                ("mem_gb", Json::Num(s.mem_gb)),
+                ("gpus", Json::Num(s.gpus as f64)),
+                ("usd_per_hour", Json::Num(s.usd_per_hour)),
+                ("cpu_eff_gflops", Json::Num(s.cpu_eff_flops() / 1e9)),
+            ])
+        })
+        .collect();
+    Response::json(200, &Json::obj(vec![("shapes", Json::Arr(shapes))]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Backend;
+
+    fn state() -> ServiceState {
+        ServiceState::new(
+            ScopingService::start(Backend::Native, 4),
+            Arc::new(SweepCache::in_memory()),
+            SweepSpec::default(),
+        )
+    }
+
+    fn get(path: &str) -> Request {
+        Request {
+            method: "GET".into(),
+            path: path.to_string(),
+            query: vec![],
+            headers: vec![],
+            body: vec![],
+        }
+    }
+
+    fn post(path: &str, body: &str) -> Request {
+        Request {
+            method: "POST".into(),
+            path: path.to_string(),
+            query: vec![],
+            headers: vec![],
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    #[test]
+    fn health_shapes_and_404() {
+        let st = state();
+        assert_eq!(st.handle(&get("/healthz")).status, 200);
+        let r = st.handle(&get("/v1/shapes"));
+        assert_eq!(r.status, 200);
+        assert!(String::from_utf8(r.body).unwrap().contains("VM.Standard2.1"));
+        assert_eq!(st.handle(&get("/nope")).status, 404);
+        assert_eq!(st.handle(&post("/healthz", "")).status, 405);
+    }
+
+    #[test]
+    fn scope_input_validation() {
+        let st = state();
+        assert_eq!(st.handle(&post("/v1/scope", "{oops")).status, 400);
+        // valid JSON, wrong envelope type
+        assert_eq!(st.handle(&post("/v1/scope", "[1, 2]")).status, 400);
+        assert_eq!(st.handle(&post("/v1/scope", "\"scope me\"")).status, 400);
+        let r = st.handle(&post("/v1/scope", r#"{"sweep": {"signals": []}}"#));
+        assert_eq!(r.status, 422);
+        let r = st.handle(&post("/v1/scope", r#"{"sweep": {"model": "gpt"}}"#));
+        assert_eq!(r.status, 422);
+        // malformed axis entries are an error, not silently dropped
+        let r = st.handle(&post("/v1/scope", r#"{"sweep": {"signals": [16.5, 32]}}"#));
+        assert_eq!(r.status, 422);
+        assert!(String::from_utf8(r.body).unwrap().contains("signals"));
+        assert_eq!(st.handle(&get("/v1/jobs/zzz")).status, 400);
+        assert_eq!(st.handle(&get("/v1/jobs/12345")).status, 404);
+        assert_eq!(st.handle(&get("/v1/recommendations/12345")).status, 404);
+    }
+
+    #[test]
+    fn scope_resource_limits() {
+        let st = state();
+        // one cell of ~8 GB synthesis: rejected before any work is queued
+        let r = st.handle(&post(
+            "/v1/scope",
+            r#"{"sweep": {"signals": [4], "memvecs": [8], "obs": [1000000000]}}"#,
+        ));
+        assert_eq!(r.status, 422);
+        assert!(String::from_utf8(r.body).unwrap().contains("too large"));
+        let r = st.handle(&post("/v1/scope", r#"{"sweep": {"trials": 1000}}"#));
+        assert_eq!(r.status, 422);
+        let r = st.handle(&post("/v1/scope", r#"{"sweep": {"workers": 10000}}"#));
+        assert_eq!(r.status, 422);
+    }
+
+    #[test]
+    fn metrics_renders_both_formats() {
+        let st = state();
+        let r = st.handle(&get("/metrics"));
+        assert_eq!(r.status, 200);
+        assert!(Json::parse(std::str::from_utf8(&r.body).unwrap()).is_ok());
+        let mut req = get("/metrics");
+        req.query.push(("format".into(), "text".into()));
+        let r = st.handle(&req);
+        assert_eq!(r.content_type, "text/plain; charset=utf-8");
+        assert!(String::from_utf8(r.body).unwrap().contains("metrics"));
+    }
+}

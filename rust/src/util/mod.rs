@@ -12,6 +12,17 @@ pub mod prop;
 pub mod rng;
 pub mod threadpool;
 
+/// FNV-1a 64-bit hash — stable across runs and platforms (cache file
+/// names and content-derived seeds depend on that stability).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// Robust summary statistics over a sample of measurements (seconds, etc.).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Summary {
@@ -74,5 +85,13 @@ mod tests {
         let s = Summary::of(&[2.5]);
         assert_eq!(s.median, 2.5);
         assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn fnv1a_stable_and_distinct() {
+        // Known FNV-1a vectors; file names on disk depend on these.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a(b"4/8/32"), fnv1a(b"4/8/33"));
     }
 }

@@ -1,0 +1,158 @@
+//! Service integration: boot `serve`'s [`Server`] on an ephemeral loopback
+//! port, drive it with a raw TCP client (no HTTP library exists offline):
+//! submit a scope job, poll it to completion, fetch the recommendation —
+//! then submit the *identical* request and prove it is served entirely
+//! from the cell-level sweep cache (≥1 hit per cell, zero new trials).
+
+use containerstress::config::Config;
+use containerstress::coordinator::Backend;
+use containerstress::metrics::Registry;
+use containerstress::service::Server;
+use containerstress::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+fn request(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let body = body.unwrap_or("");
+    let raw = format!(
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(raw.as_bytes()).expect("send");
+    let mut out = String::new();
+    stream.read_to_string(&mut out).expect("recv");
+    let status: u16 = out
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line: {out}"));
+    let payload = out.split("\r\n\r\n").nth(1).unwrap_or("");
+    let json = if payload.is_empty() {
+        Json::Null
+    } else {
+        Json::parse(payload).unwrap_or_else(|e| panic!("bad body ({e}): {payload}"))
+    };
+    (status, json)
+}
+
+fn test_config() -> Config {
+    let mut cfg = Config {
+        backend: "native".into(),
+        ..Config::default()
+    };
+    cfg.service.port = 0; // ephemeral
+    cfg.service.queue_cap = 8;
+    cfg.service.cache_dir = None; // memory-only cache for the test
+    cfg
+}
+
+/// 2×3×2 = 12 measurable cells (no m<2n gaps), enough for a surface fit,
+/// each cell tiny enough to measure in milliseconds on the native backend.
+const SCOPE_BODY: &str = r#"{
+  "sweep": {"signals": [2, 3], "memvecs": [8, 12, 16], "obs": [16, 32],
+            "trials": 1, "seed": 9, "model": "mset2", "workers": 2},
+  "workload": {"signals": 8, "memvecs": 16, "obs_per_sec": 0.5, "train_window": 256},
+  "sla": {"headroom": 2.0, "max_train_s": 3600.0}
+}"#;
+
+fn submit_and_finish(addr: SocketAddr) -> u64 {
+    let (status, j) = request(addr, "POST", "/v1/scope", Some(SCOPE_BODY));
+    assert_eq!(status, 202, "{j}");
+    let id = j.get("job_id").unwrap().as_f64().unwrap() as u64;
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, j) = request(addr, "GET", &format!("/v1/jobs/{id}"), None);
+        assert_eq!(status, 200, "{j}");
+        match j.get("status").and_then(Json::as_str) {
+            Some("done") => {
+                let result = j.get("result").expect("done jobs carry a summary");
+                assert_eq!(result.get("cells").unwrap().as_usize(), Some(12));
+                assert_eq!(result.get("gap_cells").unwrap().as_usize(), Some(0));
+                return id;
+            }
+            Some("failed") => panic!("job failed: {j}"),
+            Some("queued" | "running") => {
+                assert!(Instant::now() < deadline, "job {id} timed out");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            other => panic!("bad status {other:?}: {j}"),
+        }
+    }
+}
+
+#[test]
+fn scope_roundtrip_and_sweep_cache() {
+    let server = Server::start(&test_config(), Backend::Native).expect("server");
+    let addr = server.addr();
+
+    // liveness + catalog routes answer
+    let (status, j) = request(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200);
+    assert_eq!(j.get("status").and_then(Json::as_str), Some("ok"));
+    let (status, j) = request(addr, "GET", "/v1/shapes", None);
+    assert_eq!(status, 200);
+    assert!(j.get("shapes").unwrap().as_arr().unwrap().len() >= 10);
+
+    // --- request 1: a full measurement -----------------------------------
+    let id = submit_and_finish(addr);
+    let trials_first = Registry::global().counter("sweep.trials");
+    assert!(trials_first >= 12, "12 cells × 1 trial expected");
+    assert_eq!(server.state().cache().hits(), 0);
+    assert_eq!(server.state().cache().len(), 12);
+
+    let (status, rec) = request(addr, "GET", &format!("/v1/recommendations/{id}"), None);
+    assert_eq!(status, 200, "{rec}");
+    assert!(rec.get("assessments").unwrap().as_arr().unwrap().len() >= 10);
+    let rendered = rec.get("rendered").unwrap().as_str().unwrap();
+    assert!(rendered.contains("shape"), "{rendered}");
+
+    // --- request 2: identical scope → served from the sweep cache --------
+    let id2 = submit_and_finish(addr);
+    assert_ne!(id, id2);
+    let trials_second = Registry::global().counter("sweep.trials");
+    assert_eq!(
+        trials_second, trials_first,
+        "no new trials may execute on a warm cache"
+    );
+    assert!(
+        server.state().cache().hits() >= 12,
+        "every cell must hit the cache, got {}",
+        server.state().cache().hits()
+    );
+    assert!(Registry::global().counter("sweep.cache.hits") >= 12);
+    let (status, _) = request(addr, "GET", &format!("/v1/recommendations/{id2}"), None);
+    assert_eq!(status, 200);
+
+    // metrics route exposes the counters we just asserted on
+    let (status, m) = request(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    assert!(m.get("counters").unwrap().get("sweep.cache.hits").is_some());
+
+    server.shutdown();
+}
+
+#[test]
+fn service_rejects_bad_requests() {
+    let server = Server::start(&test_config(), Backend::Native).expect("server");
+    let addr = server.addr();
+
+    let (status, _) = request(addr, "POST", "/v1/scope", Some("{not json"));
+    assert_eq!(status, 400);
+    // empty sweep axes: a clean 422, not a panic (in the service path too)
+    let (status, j) = request(addr, "POST", "/v1/scope", Some(r#"{"sweep": {"signals": []}}"#));
+    assert_eq!(status, 422, "{j}");
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("non-empty"));
+
+    let (status, _) = request(addr, "GET", "/v1/jobs/99999", None);
+    assert_eq!(status, 404);
+    let (status, _) = request(addr, "GET", "/v1/recommendations/not-a-number", None);
+    assert_eq!(status, 400);
+    let (status, _) = request(addr, "GET", "/no/such/route", None);
+    assert_eq!(status, 404);
+    let (status, _) = request(addr, "DELETE", "/v1/scope", None);
+    assert_eq!(status, 405);
+
+    server.shutdown();
+}
