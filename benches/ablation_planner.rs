@@ -1,0 +1,190 @@
+//! **ABL-4**: adaptive sweep planner vs the exhaustive fixed-trials sweep.
+//!
+//! Runs the seed sweep grid twice on the native backend:
+//!
+//! 1. **exhaustive** — the paper-faithful nested loop, `trials` per cell,
+//!    run twice to demonstrate that the fixed seed reproduces the same
+//!    deterministic trial schedule (cells, gaps, per-cell trial counts —
+//!    wall-clock timings naturally jitter);
+//! 2. **adaptive** — the planner (`ci_target > 0`) with the same per-cell
+//!    cap, pilot trials, CI-targeted allocation and surface-model pruning.
+//!
+//! Asserts the planner completes the grid with **≥30% fewer total trials**
+//! while recommending the *same cloud shape* for each reference use case —
+//! the equal-output-for-less-work claim of the adaptive sweep.
+//!
+//! Output: `results/ablation_planner.csv`. `--quick` (or
+//! `CS_BENCH_QUICK=1`) shrinks the grid.
+
+use containerstress::bench::figs;
+use containerstress::coordinator::{run_sweep, Backend, SweepResult, SweepSpec};
+use containerstress::recommend::{recommend_from_sweep, Sla};
+use containerstress::report;
+use containerstress::shapes::Workload;
+
+/// The seed sweep grid (native backend; no artifacts required).
+fn seed_grid() -> SweepSpec {
+    let quick = figs::quick();
+    SweepSpec {
+        signals: if quick {
+            vec![2, 3, 4]
+        } else {
+            vec![2, 3, 4, 6]
+        },
+        memvecs: vec![8, 12, 16, 24],
+        obs: if quick {
+            vec![64, 128]
+        } else {
+            vec![64, 128, 256]
+        },
+        trials: 6,
+        seed: 41,
+        model: "mset2".into(),
+        workers: 0,
+        ..SweepSpec::default()
+    }
+}
+
+fn trial_counts(res: &SweepResult) -> Vec<(String, usize)> {
+    res.cells
+        .iter()
+        .map(|c| {
+            (
+                format!("{}/{}/{}", c.key.n, c.key.m, c.key.obs),
+                c.train.as_ref().map(|s| s.n).unwrap_or(0),
+            )
+        })
+        .collect()
+}
+
+fn chosen_shapes(res: &SweepResult, cases: &[(&str, Workload)]) -> Vec<(String, String)> {
+    cases
+        .iter()
+        .map(|(name, wl)| {
+            let rec = recommend_from_sweep(res, wl, &Sla::default()).expect("recommend");
+            let shape = rec
+                .chosen_shape()
+                .map(|a| a.shape.name.to_string())
+                .unwrap_or_else(|| "<none feasible>".into());
+            (name.to_string(), shape)
+        })
+        .collect()
+}
+
+fn main() {
+    containerstress::util::logger::init();
+    let exhaustive = seed_grid();
+    let adaptive = SweepSpec {
+        pilot_trials: 2,
+        ci_target: 0.5,
+        max_trials: exhaustive.trials,
+        interpolate: true,
+        ..seed_grid()
+    };
+    let cells = exhaustive.signals.len() * exhaustive.memvecs.len() * exhaustive.obs.len();
+    println!(
+        "ablation_planner: {} cells, exhaustive {} trials/cell vs adaptive \
+         pilot={} ci_target={} max={}",
+        cells, exhaustive.trials, adaptive.pilot_trials, adaptive.ci_target, adaptive.max_trials
+    );
+
+    // --- exhaustive mode: deterministic schedule under the fixed seed -----
+    let t0 = std::time::Instant::now();
+    let ex1 = run_sweep(&exhaustive, Backend::Native).expect("exhaustive sweep");
+    let wall_ex = t0.elapsed().as_secs_f64();
+    let ex2 = run_sweep(&exhaustive, Backend::Native).expect("exhaustive sweep (repeat)");
+    assert_eq!(
+        ex1.gap_cells(),
+        ex2.gap_cells(),
+        "fixed seed must reproduce the gap structure"
+    );
+    assert_eq!(
+        trial_counts(&ex1),
+        trial_counts(&ex2),
+        "fixed seed must reproduce the per-cell trial schedule bit-for-bit"
+    );
+    assert_eq!(ex1.interpolated_cells(), 0, "exhaustive mode never interpolates");
+
+    // --- adaptive mode ----------------------------------------------------
+    let t1 = std::time::Instant::now();
+    let ad = run_sweep(&adaptive, Backend::Native).expect("adaptive sweep");
+    let wall_ad = t1.elapsed().as_secs_f64();
+
+    let t_ex = ex1.total_trials();
+    let t_ad = ad.total_trials();
+    let reduction = 1.0 - t_ad as f64 / t_ex as f64;
+    println!(
+        "{:<12} {:>12} {:>10} {:>14} {:>10}",
+        "mode", "total_trials", "wall_s", "interpolated", "measured"
+    );
+    println!(
+        "{:<12} {:>12} {:>10.3} {:>14} {:>10}",
+        "exhaustive",
+        t_ex,
+        wall_ex,
+        ex1.interpolated_cells(),
+        ex1.measured_cells()
+    );
+    println!(
+        "{:<12} {:>12} {:>10.3} {:>14} {:>10}",
+        "adaptive",
+        t_ad,
+        wall_ad,
+        ad.interpolated_cells(),
+        ad.measured_cells()
+    );
+    println!(
+        "trial reduction: {:.1}% (wall-clock {:.1}%)",
+        reduction * 100.0,
+        (1.0 - wall_ad / wall_ex) * 100.0
+    );
+
+    // --- equal recommendation output at lower cost ------------------------
+    let cases = [
+        (
+            "aviation (customer A)",
+            Workload::customer_a(),
+        ),
+        (
+            "datacenter",
+            Workload {
+                n_signals: 16,
+                n_memvec: 24,
+                obs_per_sec: 10.0,
+                train_window: 256,
+            },
+        ),
+    ];
+    let shapes_ex = chosen_shapes(&ex1, &cases);
+    let shapes_ad = chosen_shapes(&ad, &cases);
+    for ((name, se), (_, sa)) in shapes_ex.iter().zip(&shapes_ad) {
+        println!("use case {name:<22} exhaustive → {se:<18} adaptive → {sa}");
+    }
+    assert_eq!(
+        shapes_ex, shapes_ad,
+        "the recommended shape per use case must be unchanged under the planner"
+    );
+    assert!(
+        reduction >= 0.30,
+        "adaptive planner must save ≥30% of trials (got {:.1}%: {t_ad}/{t_ex})",
+        reduction * 100.0
+    );
+
+    let mut csv = String::from("mode,total_trials,wall_s,interpolated_cells,measured_cells\n");
+    csv.push_str(&format!(
+        "exhaustive,{},{:.6},{},{}\n",
+        t_ex,
+        wall_ex,
+        ex1.interpolated_cells(),
+        ex1.measured_cells()
+    ));
+    csv.push_str(&format!(
+        "adaptive,{},{:.6},{},{}\n",
+        t_ad,
+        wall_ad,
+        ad.interpolated_cells(),
+        ad.measured_cells()
+    ));
+    report::write(std::path::Path::new("results"), "ablation_planner.csv", &csv).unwrap();
+    println!("ablation_planner done → results/ablation_planner.csv");
+}

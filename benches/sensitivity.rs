@@ -32,6 +32,7 @@ fn main() {
         seed: 99,
         model: "mset2".into(),
         workers: 0,
+        ..SweepSpec::default()
     };
     let result = run_sweep(&spec, Backend::Device(server.handle())).expect("sweep");
     let out = Path::new("results/sensitivity");

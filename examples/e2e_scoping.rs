@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
         seed: 7,
         model: "mset2".into(),
         workers: 0,
+        ..SweepSpec::default()
     };
     let n_cells = spec.signals.len() * spec.memvecs.len() * spec.obs.len();
     println!("[1/5] scoping sweep: {n_cells} cells × {} trials (device)", spec.trials);

@@ -30,6 +30,7 @@ fn main() -> anyhow::Result<()> {
         seed: 320,
         model: "mset2".into(),
         workers: 0,
+        ..SweepSpec::default()
     };
     let result = run_sweep(&spec, Backend::Device(server.handle()))?;
     // Customer B sits far outside the measured grid: use the power-law fit,

@@ -24,6 +24,7 @@ fn main() -> anyhow::Result<()> {
         seed: 2024,
         model: "mset2".into(),
         workers: 0,
+        ..SweepSpec::default()
     };
     println!("sweeping {}×{}×{} cells …", 3, 3, 3);
     let result = run_sweep(&spec, Backend::Device(server.handle()))?;

@@ -36,8 +36,11 @@ pub enum RoutineClass {
 /// One kernel in the decomposition.
 #[derive(Clone, Copy, Debug)]
 pub struct Routine {
+    /// Which attainable-efficiency class the kernel belongs to.
     pub class: RoutineClass,
+    /// Floating-point operations executed.
     pub flops: f64,
+    /// Bytes moved to/from memory (for arithmetic intensity).
     pub bytes: f64,
 }
 
@@ -54,12 +57,14 @@ pub struct GpuSpec {
     /// signal count (deeper contractions feed the tensor units better);
     /// `util = min(gemm_util_log2 · log2(n), gemm_util_max)`.
     pub gemm_util_log2: f64,
+    /// Cap on GEMM utilisation of peak.
     pub gemm_util_max: f64,
     /// Utilisation of peak for solver-class kernels (cuSOLVER eigh).
     pub solver_util: f64,
 }
 
 impl GpuSpec {
+    /// Tesla V100 SXM2 (the paper's GPU), anchors calibrated per DESIGN.md §5.
     pub fn v100() -> GpuSpec {
         GpuSpec {
             peak_flops: 15.7e12,
@@ -100,11 +105,14 @@ impl GpuSpec {
 /// observation vectors as they arrive.
 #[derive(Clone, Copy, Debug)]
 pub struct CpuRef {
+    /// Effective FLOP/s of the reference training path.
     pub train_eff_flops: f64,
+    /// Effective FLOP/s of the reference streaming path.
     pub surveil_eff_flops: f64,
 }
 
 impl CpuRef {
+    /// Paper-era single-socket Xeon Platinum reference.
     pub fn xeon_platinum() -> CpuRef {
         CpuRef {
             train_eff_flops: 2.0e9,

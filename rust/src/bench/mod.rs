@@ -12,6 +12,7 @@ use std::time::{Duration, Instant};
 /// One benchmark measurement run.
 #[derive(Clone, Debug)]
 pub struct Measurement {
+    /// Benchmark label (row name in tables/CSV).
     pub name: String,
     /// Per-iteration wall time.
     pub stats: Summary,

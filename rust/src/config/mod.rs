@@ -13,11 +13,15 @@ use std::path::PathBuf;
 /// Effective run configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Directory holding the AOT artifact bundle (device backend).
     pub artifact_dir: PathBuf,
+    /// Directory reports and figures are written to.
     pub output_dir: PathBuf,
     /// Execution backend: "device" | "native".
     pub backend: String,
+    /// Sweep grid, trial budget, and adaptive-planner knobs.
     pub sweep: SweepSpec,
+    /// `containerstress serve` settings.
     pub service: ServiceConfig,
 }
 
@@ -105,6 +109,26 @@ pub fn sweep_spec_from_json(base: &SweepSpec, j: &Json) -> anyhow::Result<SweepS
         s.workers = v
             .as_usize()
             .ok_or_else(|| anyhow::anyhow!("sweep.workers must be a non-negative integer"))?;
+    }
+    if let Some(v) = j.get("pilot_trials") {
+        s.pilot_trials = v.as_usize().ok_or_else(|| {
+            anyhow::anyhow!("sweep.pilot_trials must be a non-negative integer")
+        })?;
+    }
+    if let Some(v) = j.get("ci_target") {
+        s.ci_target = v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("sweep.ci_target must be a number"))?;
+    }
+    if let Some(v) = j.get("max_trials") {
+        s.max_trials = v
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("sweep.max_trials must be a non-negative integer"))?;
+    }
+    if let Some(v) = j.get("interpolate") {
+        s.interpolate = v
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("sweep.interpolate must be a boolean"))?;
     }
     Ok(s)
 }
@@ -201,6 +225,16 @@ impl Config {
         self.sweep.trials = args.get_usize("trials", self.sweep.trials)?;
         self.sweep.seed = args.get_u64("seed", self.sweep.seed)?;
         self.sweep.workers = args.get_usize("workers", self.sweep.workers)?;
+        self.sweep.pilot_trials = args.get_usize("pilot-trials", self.sweep.pilot_trials)?;
+        self.sweep.ci_target = args.get_f64("ci-target", self.sweep.ci_target)?;
+        self.sweep.max_trials = args.get_usize("max-trials", self.sweep.max_trials)?;
+        if let Some(v) = args.get("interpolate") {
+            self.sweep.interpolate = match v {
+                "true" | "yes" | "on" => true,
+                "false" | "no" | "off" => false,
+                _ => anyhow::bail!("--interpolate expects true|false, got '{v}'"),
+            };
+        }
         if let Some(v) = args.get("host") {
             self.service.host = v.to_string();
         }
@@ -226,6 +260,7 @@ impl Config {
         Ok(cfg)
     }
 
+    /// Cross-field validation (backend name, sweep spec, service bounds).
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(
             matches!(self.backend.as_str(), "device" | "native"),
@@ -275,6 +310,13 @@ impl Config {
                     ("seed", Json::Num(self.sweep.seed as f64)),
                     ("model", Json::Str(self.sweep.model.clone())),
                     ("workers", Json::Num(self.sweep.workers as f64)),
+                    (
+                        "pilot_trials",
+                        Json::Num(self.sweep.pilot_trials as f64),
+                    ),
+                    ("ci_target", Json::Num(self.sweep.ci_target)),
+                    ("max_trials", Json::Num(self.sweep.max_trials as f64)),
+                    ("interpolate", Json::Bool(self.sweep.interpolate)),
                 ]),
             ),
             (
@@ -389,6 +431,55 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("65535"), "{err}");
+    }
+
+    #[test]
+    fn planner_knobs_from_flags_file_and_roundtrip() {
+        let mut cfg = Config::default();
+        cfg.apply_args(&args(
+            "scope --ci-target 0.2 --pilot-trials 3 --max-trials 12 \
+             --interpolate false --backend native",
+        ))
+        .unwrap();
+        assert_eq!(cfg.sweep.ci_target, 0.2);
+        assert_eq!(cfg.sweep.pilot_trials, 3);
+        assert_eq!(cfg.sweep.max_trials, 12);
+        assert!(!cfg.sweep.interpolate);
+        assert!(cfg.sweep.adaptive());
+
+        // file roundtrip keeps every planner knob
+        let path = std::env::temp_dir().join("cs_config_planner.json");
+        std::fs::write(&path, cfg.to_json().to_pretty()).unwrap();
+        let cfg2 = Config::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg2.sweep.ci_target, 0.2);
+        assert_eq!(cfg2.sweep.pilot_trials, 3);
+        assert_eq!(cfg2.sweep.max_trials, 12);
+        assert!(!cfg2.sweep.interpolate);
+
+        // malformed knobs are errors, not silent defaults
+        let mut bad = Config::default();
+        assert!(bad.apply_args(&args("x --interpolate maybe")).is_err());
+        let base = SweepSpec::default();
+        let j = Json::parse(r#"{"interpolate": "yes"}"#).unwrap();
+        assert!(sweep_spec_from_json(&base, &j).is_err());
+        let j = Json::parse(r#"{"ci_target": "tight"}"#).unwrap();
+        assert!(sweep_spec_from_json(&base, &j).is_err());
+
+        // adaptive specs validate their internal consistency
+        let mut bad = Config::default();
+        let err = bad
+            .apply_args(&args("x --ci-target 0.2 --pilot-trials 1 --backend native"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("pilot_trials"), "{err}");
+        let mut bad = Config::default();
+        let err = bad
+            .apply_args(&args(
+                "x --ci-target 0.2 --pilot-trials 4 --max-trials 2 --backend native",
+            ))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("max_trials"), "{err}");
     }
 
     #[test]

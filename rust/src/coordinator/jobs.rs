@@ -22,16 +22,23 @@ pub const COMPLETED_RETAIN: usize = 256;
 /// Job status as observed by clients.
 #[derive(Clone, Debug)]
 pub enum JobStatus {
+    /// Accepted, waiting for the leader thread.
     Queued,
+    /// Sweep in progress.
     Running,
+    /// Sweep finished; the result is shared until evicted.
     Done(Arc<SweepResult>),
+    /// Sweep failed with this error message.
     Failed(String),
 }
 
 /// One submitted scoping request.
 #[derive(Clone, Debug)]
 pub struct ScopeJob {
+    /// Identifier handed back to the submitter.
     pub id: JobId,
+    /// The sweep to run (exhaustive or adaptive — see
+    /// [`SweepSpec::adaptive`]).
     pub spec: SweepSpec,
 }
 
@@ -228,6 +235,7 @@ mod tests {
             seed: 2,
             model: "mset2".into(),
             workers: 1,
+            ..SweepSpec::default()
         }
     }
 

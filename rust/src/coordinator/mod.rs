@@ -7,10 +7,12 @@
 //! aggregated into compute-cost summaries that the [`crate::surface`]
 //! layer turns into the paper's 3-D response surfaces.
 //!
-//! - [`sweep`] — grid construction, trial execution, aggregation;
-//! - [`jobs`]  — the scoping-job queue (leader/worker service front).
+//! - [`sweep`]   — grid construction, trial execution, aggregation;
+//! - [`planner`] — adaptive trial allocation + surface-model cell pruning;
+//! - [`jobs`]    — the scoping-job queue (leader/worker service front).
 
 pub mod jobs;
+pub mod planner;
 pub mod sweep;
 
 pub use sweep::{

@@ -1,0 +1,473 @@
+//! Adaptive sweep planner — variance-targeted trial allocation with
+//! surface-model cell pruning.
+//!
+//! The paper's nested-loop sweep spends a fixed `trials` budget on every
+//! grid cell, even where the cost surface is already smooth and
+//! low-variance. The planner instead runs the sweep in rounds:
+//!
+//! 1. **Pilot** — every measurable cell is brought up to
+//!    [`SweepSpec::pilot_trials`] cheap trials. Measurements preloaded from
+//!    the cell cache count toward this for free, so a warm service skips
+//!    straight to convergence checks.
+//! 2. **Prune** — when [`SweepSpec::interpolate`] is set, both cost
+//!    surfaces (train / surveil) are fitted to the pilot medians. A cell
+//!    whose pilot median already agrees with the model's prediction to
+//!    within the CI target sits well inside the converged region: it is
+//!    marked *interpolated* and receives no further trials. Pruning only
+//!    engages when both fits are trustworthy (r² ≥ [`PRUNE_MIN_R2`]).
+//!    (In a cache-warm run a pruned cell keeps however many preloaded
+//!    trials it arrived with — possibly more than the pilot budget.)
+//! 3. **Allocate** — remaining trials go to the cells with the widest
+//!    relative confidence intervals, in rounds, until every cell meets
+//!    [`SweepSpec::ci_target`] or hits [`SweepSpec::effective_max_trials`].
+//!
+//! Trial seeds stay content-derived per `(cell, trial index)` — see
+//! [`super::sweep`] — so trial `t` of a cell is fed identical synthetic
+//! telemetry no matter how many rounds, worker threads, or cache top-ups
+//! got the planner there. Adaptive and exhaustive sweeps are therefore
+//! fully cache-compatible: an adaptive run can finish on an exhaustive
+//! run's stored cells and vice versa.
+
+use super::sweep::{
+    grid_keys, run_trial, trial_seed, Backend, CellCosts, CellKey, CellMeasure, CellStore,
+    SweepResult, SweepSpec,
+};
+use crate::metrics::Registry;
+use crate::surface::{ResponseSurface, Sample};
+use crate::util::threadpool::parallel_map;
+use crate::util::Summary;
+use std::collections::HashMap;
+
+/// Two-sided normal multiplier for the ~95% confidence interval behind the
+/// planner's convergence test.
+pub const CI_Z: f64 = 1.96;
+
+/// Minimum response-surface fit quality (r², both phases) before the
+/// surface model is trusted to prune cells.
+pub const PRUNE_MIN_R2: f64 = 0.9;
+
+/// Relative half-width of the ~95% confidence interval of the mean of
+/// `xs`: `z·s / (√n·x̄)` with the sample standard deviation `s`. Returns
+/// `f64::INFINITY` below two samples — one timing carries no variance
+/// information — so unvisited cells always look unconverged.
+pub fn rel_ci(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n < 2 {
+        return f64::INFINITY;
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    if mean <= 0.0 {
+        return f64::INFINITY;
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
+    CI_Z * var.sqrt() / ((n as f64).sqrt() * mean)
+}
+
+/// Whether both phases of a cell meet the relative-CI target.
+pub fn converged(costs: &CellCosts, ci_target: f64) -> bool {
+    rel_ci(&costs.train_s) <= ci_target && rel_ci(&costs.surveil_s) <= ci_target
+}
+
+/// Trials needed for `rel_ci(xs) ≤ target`, estimated from the current
+/// sample: `n ≈ (z·s / (x̄·target))²`. Never less than the current count.
+fn needed_trials(xs: &[f64], target: f64) -> usize {
+    let n = xs.len();
+    if n < 2 {
+        return n + 1;
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    if mean <= 0.0 {
+        return n;
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
+    let need = (CI_Z * var.sqrt() / (mean * target)).powi(2);
+    (need.ceil() as usize).max(n)
+}
+
+/// Mutable planner state for one measurable (non-gap) cell.
+struct CellState {
+    key: CellKey,
+    costs: CellCosts,
+    /// Trials preloaded from the cache (no store-back needed when the
+    /// planner adds nothing beyond them).
+    cached_trials: usize,
+    interpolated: bool,
+}
+
+impl CellState {
+    fn trials(&self) -> usize {
+        self.costs.train_s.len()
+    }
+}
+
+/// Execute one round of trials and append the costs in trial-index order.
+/// `work` items are `(state index, cell, seed)`.
+fn execute_round(
+    workers: usize,
+    backend: &Backend,
+    model: &str,
+    states: &mut [CellState],
+    work: &[(usize, CellKey, u64)],
+) -> anyhow::Result<()> {
+    if work.is_empty() {
+        return Ok(());
+    }
+    let results = parallel_map(workers, work, |_, &(_, key, seed)| {
+        let r = run_trial(backend, model, key, seed);
+        Registry::global().inc("sweep.trials");
+        r
+    });
+    // `parallel_map` returns results in input order and `work` lists each
+    // cell's trials in ascending index order, so pushing in order keeps
+    // every cost vector aligned with its trial-seed sequence.
+    for (&(i, key, _), r) in work.iter().zip(results.into_iter()) {
+        let c = r.map_err(|e| anyhow::anyhow!("cell {key:?}: {e}"))?;
+        states[i].costs.train_s.push(c.train_s);
+        states[i].costs.surveil_s.push(c.surveil_s);
+    }
+    Ok(())
+}
+
+/// Fit both cost surfaces to the current medians and mark unconverged
+/// cells whose predictions agree with their pilot medians to within
+/// `ci_target`. Returns the number of cells pruned. No-ops when fewer than
+/// 10 cells are measurable or either fit is below [`PRUNE_MIN_R2`].
+fn prune_by_surface(states: &mut [CellState], ci_target: f64) -> usize {
+    if states.len() < 10 {
+        return 0;
+    }
+    let sample = |s: &CellState, cost: f64| Sample {
+        n_signals: s.key.n,
+        n_memvec: s.key.m,
+        n_obs: s.key.obs,
+        cost: cost.max(1e-9),
+    };
+    let train: Vec<Sample> = states
+        .iter()
+        .map(|s| sample(s, Summary::of(&s.costs.train_s).median))
+        .collect();
+    let surveil: Vec<Sample> = states
+        .iter()
+        .map(|s| sample(s, Summary::of(&s.costs.surveil_s).median))
+        .collect();
+    let (ts, ss) = match (ResponseSurface::fit(&train), ResponseSurface::fit(&surveil)) {
+        (Ok(a), Ok(b)) => (a, b),
+        _ => return 0,
+    };
+    if ts.r2 < PRUNE_MIN_R2 || ss.r2 < PRUNE_MIN_R2 {
+        log::info!(
+            "planner: surface fits too weak to prune (train r²={:.3}, surveil r²={:.3})",
+            ts.r2,
+            ss.r2
+        );
+        return 0;
+    }
+    let mut pruned = 0usize;
+    for (i, s) in states.iter_mut().enumerate() {
+        if s.interpolated || converged(&s.costs, ci_target) {
+            continue;
+        }
+        // `train`/`surveil` were built in `states` order — reuse their
+        // medians instead of re-sorting both phases per cell.
+        let med_t = train[i].cost;
+        let med_s = surveil[i].cost;
+        let pred_t = ts.predict(s.key.n, s.key.m, s.key.obs);
+        let pred_s = ss.predict(s.key.n, s.key.m, s.key.obs);
+        let within = |pred: f64, med: f64| med > 0.0 && ((pred - med) / med).abs() <= ci_target;
+        if within(pred_t, med_t) && within(pred_s, med_s) {
+            s.interpolated = true;
+            pruned += 1;
+        }
+    }
+    if pruned > 0 {
+        Registry::global().add("sweep.planner.interpolated_cells", pruned as u64);
+    }
+    pruned
+}
+
+/// Run the sweep under the adaptive planner (entered from
+/// [`super::sweep::run_sweep_cached`] when [`SweepSpec::adaptive`] is set;
+/// the spec is already validated).
+pub(crate) fn run_adaptive(
+    spec: &SweepSpec,
+    backend: Backend,
+    cache: Option<&dyn CellStore>,
+) -> anyhow::Result<SweepResult> {
+    let pilot = spec.pilot_trials;
+    let max = spec.effective_max_trials();
+    let target = spec.ci_target;
+    let workers = spec.effective_workers();
+    let keys = grid_keys(spec);
+
+    // Preload cell state from the cache; whatever is stored counts toward
+    // pilot coverage and convergence for free.
+    let mut states: Vec<CellState> = Vec::new();
+    for &key in &keys {
+        if spec.is_gap(key) {
+            continue;
+        }
+        let mut costs = CellCosts::default();
+        if let Some(c) = cache {
+            if let Some(mut got) = c.fetch(key, spec, backend.tag()) {
+                // Honour the per-cell bound even against oversized entries,
+                // and drop any phase-length mismatch from a foreign store
+                // (same defence as the exhaustive path).
+                got.normalize(max);
+                costs = got;
+            }
+        }
+        let cached_trials = costs.train_s.len();
+        states.push(CellState {
+            key,
+            costs,
+            cached_trials,
+            interpolated: false,
+        });
+    }
+
+    // Round 1: pilot — bring every cell up to `pilot` trials.
+    let mut work: Vec<(usize, CellKey, u64)> = Vec::new();
+    for (i, s) in states.iter().enumerate() {
+        for t in s.trials()..pilot {
+            work.push((i, s.key, trial_seed(spec, s.key, t)));
+        }
+    }
+    log::info!(
+        "planner pilot: {} cells × ≤{pilot} trials ({} scheduled, {} from cache), \
+         ci_target={target}, max_trials={max}, model={}, backend={}, workers={workers}",
+        states.len(),
+        work.len(),
+        states.iter().map(|s| s.cached_trials).sum::<usize>(),
+        spec.model,
+        backend.tag()
+    );
+    execute_round(workers, &backend, &spec.model, &mut states, &work)?;
+
+    // Round 2: surface-model pruning of predictable cells.
+    if spec.interpolate {
+        let pruned = prune_by_surface(&mut states, target);
+        if pruned > 0 {
+            log::info!("planner: {pruned} cells accepted via surface interpolation");
+        }
+    }
+
+    // Rounds 3+: variance-targeted allocation until convergence or cap.
+    // Terminates: every non-empty round grows at least one cell's trial
+    // count toward `max`, and converged/capped cells leave the pool.
+    let mut rounds = 0usize;
+    loop {
+        let mut work: Vec<(usize, CellKey, u64)> = Vec::new();
+        for (i, s) in states.iter().enumerate() {
+            if s.interpolated {
+                continue;
+            }
+            let n = s.trials();
+            if n >= max || converged(&s.costs, target) {
+                continue;
+            }
+            let goal = needed_trials(&s.costs.train_s, target)
+                .max(needed_trials(&s.costs.surveil_s, target))
+                .clamp(n + 1, max);
+            for t in n..goal {
+                work.push((i, s.key, trial_seed(spec, s.key, t)));
+            }
+        }
+        if work.is_empty() {
+            break;
+        }
+        rounds += 1;
+        log::info!("planner round {rounds}: {} top-up trials", work.len());
+        execute_round(workers, &backend, &spec.model, &mut states, &work)?;
+    }
+    Registry::global().add("sweep.planner.rounds", rounds as u64);
+
+    // Aggregate in grid order; store freshly measured cells back.
+    let by_key: HashMap<CellKey, &CellState> = states.iter().map(|s| (s.key, s)).collect();
+    let mut cells = Vec::new();
+    for &key in &keys {
+        if spec.is_gap(key) {
+            cells.push(CellMeasure {
+                key,
+                train: None,
+                surveil: None,
+                violated: true,
+                interpolated: false,
+            });
+            Registry::global().inc("sweep.gap_cells");
+            continue;
+        }
+        let s = by_key.get(&key).expect("planner state for measurable cell");
+        anyhow::ensure!(
+            !s.costs.train_s.is_empty(),
+            "no trials completed for {key:?}"
+        );
+        if let Some(c) = cache {
+            if s.trials() > s.cached_trials {
+                c.store(key, spec, backend.tag(), s.costs.clone());
+            }
+        }
+        cells.push(CellMeasure {
+            key,
+            train: Some(Summary::of(&s.costs.train_s)),
+            surveil: Some(Summary::of(&s.costs.surveil_s)),
+            violated: false,
+            interpolated: s.interpolated,
+        });
+    }
+    Ok(SweepResult {
+        spec: spec.clone(),
+        cells,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run_sweep_cached;
+    use crate::service::cache::SweepCache;
+
+    fn adaptive_spec() -> SweepSpec {
+        SweepSpec {
+            signals: vec![2, 3, 4],
+            memvecs: vec![8, 12, 16],
+            obs: vec![16, 32],
+            trials: 4,
+            seed: 9,
+            model: "mset2".into(),
+            workers: 2,
+            pilot_trials: 2,
+            ci_target: 0.5,
+            max_trials: 4,
+            interpolate: false,
+        }
+    }
+
+    #[test]
+    fn rel_ci_basics() {
+        assert!(rel_ci(&[]).is_infinite());
+        assert!(rel_ci(&[1.0]).is_infinite());
+        assert_eq!(rel_ci(&[2.0, 2.0, 2.0]), 0.0);
+        // wide spread → wide interval
+        assert!(rel_ci(&[1.0, 10.0]) > 1.0);
+    }
+
+    #[test]
+    fn adaptive_counts_stay_within_bounds() {
+        let res = run_sweep_cached(&adaptive_spec(), Backend::Native, None).unwrap();
+        assert_eq!(res.cells.len(), 18);
+        assert!(res.gap_cells().is_empty()); // m ≥ 2n everywhere on this grid
+        for c in &res.cells {
+            let t = c.train.as_ref().unwrap();
+            let s = c.surveil.as_ref().unwrap();
+            assert_eq!(t.n, s.n, "phases share the trial schedule");
+            assert!(
+                (2..=4).contains(&t.n),
+                "cell {:?} ran {} trials, outside [pilot, max]",
+                c.key,
+                t.n
+            );
+            assert!(!c.interpolated, "interpolate=false must never mark cells");
+        }
+    }
+
+    #[test]
+    fn interpolated_cells_keep_pilot_budget() {
+        let spec = SweepSpec {
+            interpolate: true,
+            ..adaptive_spec()
+        };
+        let res = run_sweep_cached(&spec, Backend::Native, None).unwrap();
+        for c in &res.cells {
+            if c.interpolated {
+                assert_eq!(
+                    c.train.as_ref().unwrap().n,
+                    spec.pilot_trials,
+                    "pruned cells must stop at the pilot budget"
+                );
+            }
+        }
+        // Whether any cell prunes depends on measured noise, but the result
+        // must always partition cleanly.
+        assert_eq!(
+            res.measured_cells() + res.interpolated_cells() + res.gap_cells().len(),
+            res.cells.len()
+        );
+    }
+
+    #[test]
+    fn all_gap_grid_yields_no_measurements_and_no_panic() {
+        let spec = SweepSpec {
+            signals: vec![8],
+            memvecs: vec![8], // 8 < 2·8 → gap
+            obs: vec![16],
+            ..adaptive_spec()
+        };
+        let res = run_sweep_cached(&spec, Backend::Native, None).unwrap();
+        assert_eq!(res.cells.len(), 1);
+        assert!(res.cells[0].violated);
+        assert_eq!(res.measured_cells(), 0);
+        assert_eq!(res.total_trials(), 0);
+    }
+
+    #[test]
+    fn second_adaptive_run_is_served_from_cache() {
+        let cache = SweepCache::in_memory();
+        let spec = adaptive_spec();
+        let a = run_sweep_cached(&spec, Backend::Native, Some(&cache)).unwrap();
+        let stored = cache.len();
+        assert_eq!(stored, 18);
+
+        // Identical request: every cell's stored trials already satisfy
+        // the planner — each terminated converged or at the cap, and with
+        // interpolate=false no noise-dependent prune decision is re-made —
+        // so no new trials run and the summaries are bit-identical. (With
+        // interpolate=true a warm run may legitimately re-measure a cell
+        // the cold run pruned, since the re-fitted surface sees newer
+        // medians; that refinement is allowed, just not exercised here.)
+        let b = run_sweep_cached(&spec, Backend::Native, Some(&cache)).unwrap();
+        assert_eq!(cache.hits(), 18);
+        assert_eq!(cache.len(), stored);
+        for (ca, cb) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(ca.key, cb.key);
+            assert_eq!(
+                ca.train.as_ref().unwrap().n,
+                cb.train.as_ref().unwrap().n,
+                "cell {:?} re-measured despite warm cache",
+                ca.key
+            );
+            assert_eq!(
+                ca.train.as_ref().unwrap().median,
+                cb.train.as_ref().unwrap().median
+            );
+        }
+    }
+
+    #[test]
+    fn exhaustive_run_tops_up_short_adaptive_entries() {
+        // An adaptive sweep may store fewer trials per cell than a later
+        // exhaustive request needs; the exhaustive run keeps the stored
+        // prefix and measures only the missing trial indices.
+        let cache = SweepCache::in_memory();
+        let adaptive = adaptive_spec();
+        run_sweep_cached(&adaptive, Backend::Native, Some(&cache)).unwrap();
+        let exhaustive = SweepSpec {
+            ci_target: 0.0,
+            trials: 4,
+            ..adaptive_spec()
+        };
+        let probe = CellKey { n: 2, m: 8, obs: 16 };
+        let before = CellStore::fetch(&cache, probe, &exhaustive, "native").unwrap();
+        let res = run_sweep_cached(&exhaustive, Backend::Native, Some(&cache)).unwrap();
+        for c in &res.cells {
+            assert_eq!(c.train.as_ref().unwrap().n, 4);
+            assert!(!c.interpolated);
+        }
+        let after = CellStore::fetch(&cache, probe, &exhaustive, "native").unwrap();
+        assert_eq!(after.train_s.len(), 4);
+        assert_eq!(
+            &after.train_s[..before.train_s.len()],
+            &before.train_s[..],
+            "the cached prefix must be reused, not re-measured"
+        );
+    }
+}

@@ -15,6 +15,11 @@
 //! Trials are fanned out over the thread pool; device executions serialise
 //! on the dedicated PJRT thread (see `runtime`), so measured execution
 //! times stay contention-free.
+//!
+//! The fixed-`trials` loop here is the paper-faithful *exhaustive* mode.
+//! Setting [`SweepSpec::ci_target`] hands the same grid to the adaptive
+//! planner ([`crate::coordinator::planner`]), which spends trials where
+//! cost variance needs them and can skip surface-predictable cells.
 
 use crate::linalg::Mat;
 use crate::metrics::Registry;
@@ -30,11 +35,30 @@ use crate::util::Summary;
 use std::collections::HashMap;
 use std::time::Instant;
 
-/// Per-trial measured costs of one cell (seconds).
+/// Per-trial measured costs of one cell (seconds), in trial-index order —
+/// entry `t` was measured under the content-derived seed for trial `t`, so
+/// stored vectors can be extended trial-by-trial (the planner's top-ups)
+/// or truncated to a prefix (an exhaustive request against a longer entry)
+/// without invalidating the measurements.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CellCosts {
+    /// Training-phase wall time per trial.
     pub train_s: Vec<f64>,
+    /// Surveillance-phase wall time per trial.
     pub surveil_s: Vec<f64>,
+}
+
+impl CellCosts {
+    /// Normalise a fetched entry against a per-cell trial limit: both
+    /// phases are truncated to the shorter of the two (they share one
+    /// trial schedule — a mismatch means a foreign or corrupt store) and
+    /// to `limit`. Returns the resulting usable trial count.
+    pub fn normalize(&mut self, limit: usize) -> usize {
+        let n = self.train_s.len().min(self.surveil_s.len()).min(limit);
+        self.train_s.truncate(n);
+        self.surveil_s.truncate(n);
+        n
+    }
 }
 
 /// A store of per-cell measurements the sweep engine can consult before
@@ -43,9 +67,13 @@ pub struct CellCosts {
 /// it rather than a dependency of it.
 pub trait CellStore: Send + Sync {
     /// Measurements for `cell` under an identical `(spec, backend)`
-    /// context, if present.
+    /// context, if present: the stored prefix of the cell's deterministic
+    /// trial sequence, whatever its current length. Callers must treat a
+    /// returned entry as reusable — serve from it, or top it up with the
+    /// missing trial indices — never discard it.
     fn fetch(&self, cell: CellKey, spec: &SweepSpec, backend: &str) -> Option<CellCosts>;
-    /// Record freshly measured trial costs for `cell`.
+    /// Record the (possibly extended) trial costs for `cell`, replacing
+    /// any previous entry.
     fn store(&self, cell: CellKey, spec: &SweepSpec, backend: &str, costs: CellCosts);
 }
 
@@ -71,16 +99,34 @@ impl Backend {
 /// Sweep specification (the outer loops of paper Fig. 1).
 #[derive(Clone, Debug)]
 pub struct SweepSpec {
+    /// Signal-count axis (`n`).
     pub signals: Vec<usize>,
+    /// Memory-vector axis (`m`).
     pub memvecs: Vec<usize>,
+    /// Observation-count axis (`N`).
     pub obs: Vec<usize>,
-    /// Monte Carlo trials per cell.
+    /// Monte Carlo trials per cell (exhaustive mode).
     pub trials: usize,
+    /// Root seed; every trial seed is derived from it and the cell content.
     pub seed: u64,
     /// Pluggable model: `mset2` | `aakr` | `ridge`.
     pub model: String,
     /// Worker threads for trial fan-out (0 = auto).
     pub workers: usize,
+    /// Adaptive planner: trials per cell in the cheap pilot round.
+    pub pilot_trials: usize,
+    /// Adaptive planner: relative 95%-CI half-width target that stops trial
+    /// allocation for a cell. `0.0` disables the planner entirely — the
+    /// sweep runs the exhaustive fixed-`trials` loop, which is what the
+    /// Fig. 4–8 reproductions rely on for bit-identical trial schedules.
+    pub ci_target: f64,
+    /// Adaptive planner: per-cell trial cap
+    /// (`0` = `max(trials, pilot_trials)`).
+    pub max_trials: usize,
+    /// Adaptive planner: allow the surface-model pruning step to skip cells
+    /// whose cost is already predicted accurately (such cells are marked
+    /// [`CellMeasure::interpolated`] in the result).
+    pub interpolate: bool,
 }
 
 impl Default for SweepSpec {
@@ -93,6 +139,10 @@ impl Default for SweepSpec {
             seed: 7,
             model: "mset2".into(),
             workers: 0,
+            pilot_trials: 2,
+            ci_target: 0.0,
+            max_trials: 0,
+            interpolate: true,
         }
     }
 }
@@ -115,11 +165,54 @@ impl SweepSpec {
             !self.signals.is_empty() && !self.memvecs.is_empty() && !self.obs.is_empty(),
             "sweep axes must be non-empty"
         );
+        anyhow::ensure!(
+            self.ci_target >= 0.0, // also rejects NaN
+            "ci_target must be ≥ 0 (0 disables the adaptive planner)"
+        );
+        if self.adaptive() {
+            anyhow::ensure!(self.ci_target.is_finite(), "ci_target must be finite");
+            anyhow::ensure!(
+                self.pilot_trials >= 2,
+                "pilot_trials must be ≥ 2 (a variance estimate needs two samples)"
+            );
+            anyhow::ensure!(
+                self.effective_max_trials() >= self.pilot_trials,
+                "max_trials ({}) must be ≥ pilot_trials ({})",
+                self.effective_max_trials(),
+                self.pilot_trials
+            );
+        }
         Ok(())
     }
 
+    /// Whether the adaptive planner is enabled (`ci_target > 0`). Disabled
+    /// specs run the exhaustive nested loop unchanged.
+    pub fn adaptive(&self) -> bool {
+        self.ci_target > 0.0
+    }
+
+    /// Per-cell trial cap in adaptive mode: `max_trials`, defaulting to
+    /// `max(trials, pilot_trials)` when unset (0).
+    pub fn effective_max_trials(&self) -> usize {
+        if self.max_trials == 0 {
+            self.trials.max(self.pilot_trials)
+        } else {
+            self.max_trials
+        }
+    }
+
+    /// Worker threads for trial fan-out: `workers`, defaulting to the
+    /// machine's available parallelism when unset (0).
+    pub fn effective_workers(&self) -> usize {
+        if self.workers == 0 {
+            crate::util::threadpool::default_workers()
+        } else {
+            self.workers
+        }
+    }
+
     /// Whether a cell is a constraint gap (`m < 2n` under MSET training).
-    fn is_gap(&self, key: CellKey) -> bool {
+    pub(crate) fn is_gap(&self, key: CellKey) -> bool {
         key.m < 2 * key.n && self.model == "mset2"
     }
 }
@@ -127,36 +220,50 @@ impl SweepSpec {
 /// One grid-cell coordinate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct CellKey {
+    /// Number of signals.
     pub n: usize,
+    /// Number of memory vectors.
     pub m: usize,
+    /// Number of observations.
     pub obs: usize,
 }
 
 /// Aggregated measurements for one cell.
 #[derive(Clone, Debug)]
 pub struct CellMeasure {
+    /// Grid coordinate of the cell.
     pub key: CellKey,
     /// `None` when the training constraint `m ≥ 2n` is violated (gap).
     pub train: Option<Summary>,
+    /// Surveillance-phase summary (`None` for gaps).
     pub surveil: Option<Summary>,
+    /// Training constraint violated — the cell has no measurements.
     pub violated: bool,
+    /// Accepted early by the adaptive planner's surface model instead of
+    /// being measured to the CI target — at pilot precision in a
+    /// cold-cache run; a cache-preloaded cell may carry more trials than
+    /// the pilot when pruned. Always `false` in exhaustive mode; see
+    /// [`crate::coordinator::planner`].
+    pub interpolated: bool,
 }
 
 /// Complete sweep output.
 #[derive(Clone, Debug)]
 pub struct SweepResult {
+    /// The spec the sweep ran under.
     pub spec: SweepSpec,
+    /// One entry per distinct grid cell, in grid order.
     pub cells: Vec<CellMeasure>,
 }
 
 /// Per-trial raw timings.
 #[derive(Clone, Copy, Debug)]
-struct TrialCost {
-    train_s: f64,
-    surveil_s: f64,
+pub(crate) struct TrialCost {
+    pub(crate) train_s: f64,
+    pub(crate) surveil_s: f64,
 }
 
-fn run_trial(
+pub(crate) fn run_trial(
     backend: &Backend,
     model_name: &str,
     key: CellKey,
@@ -229,24 +336,21 @@ fn cell_tag(key: CellKey) -> u64 {
     crate::util::fnv1a(format!("{}/{}/{}", key.n, key.m, key.obs).as_bytes())
 }
 
-/// Run the full nested-loop Monte Carlo sweep.
-pub fn run_sweep(spec: &SweepSpec, backend: Backend) -> anyhow::Result<SweepResult> {
-    run_sweep_cached(spec, backend, None)
+/// Seed for trial `t` of `key`: forked from the spec's root seed by the
+/// cell-content tag plus the trial index. A cell's trial `t` therefore sees
+/// the same synthetic telemetry regardless of grid composition, scheduling
+/// order, worker count, or whether the exhaustive loop or the adaptive
+/// planner asked for it — the invariant both the sweep cache and the
+/// planner's incremental trial top-ups rely on.
+pub(crate) fn trial_seed(spec: &SweepSpec, key: CellKey, t: usize) -> u64 {
+    let mut rng = Rng::new(spec.seed).fork(cell_tag(key).wrapping_add(t as u64));
+    rng.next_u64()
 }
 
-/// [`run_sweep`] with an optional cell-level cache: cells already measured
-/// under an identical `(cell, model, seed, backend, trials)` context are
-/// reused without scheduling any trials; freshly measured cells are
-/// inserted for future requests.
-pub fn run_sweep_cached(
-    spec: &SweepSpec,
-    backend: Backend,
-    cache: Option<&dyn CellStore>,
-) -> anyhow::Result<SweepResult> {
-    spec.validate()?;
-    // Duplicate axis values would create duplicate cells (double-counted
-    // trials, cache entries violating the trials-per-cell invariant) —
-    // measure each distinct cell once.
+/// The spec's distinct grid cells in deterministic nested-loop order.
+/// Duplicate axis values would create duplicate cells (double-counted
+/// trials, conflicting cache writes) — each distinct cell appears once.
+pub(crate) fn grid_keys(spec: &SweepSpec) -> Vec<CellKey> {
     let mut keys = Vec::new();
     let mut seen = std::collections::HashSet::new();
     for &n in &spec.signals {
@@ -259,33 +363,61 @@ pub fn run_sweep_cached(
             }
         }
     }
-    let workers = if spec.workers == 0 {
-        crate::util::threadpool::default_workers()
-    } else {
-        spec.workers
-    };
-    let root = Rng::new(spec.seed);
+    keys
+}
+
+/// Run the full nested-loop Monte Carlo sweep.
+pub fn run_sweep(spec: &SweepSpec, backend: Backend) -> anyhow::Result<SweepResult> {
+    run_sweep_cached(spec, backend, None)
+}
+
+/// [`run_sweep`] with an optional cell-level cache: cells already measured
+/// under an identical `(cell, model, seed, backend)` context are reused
+/// without scheduling any trials; freshly measured cells are inserted for
+/// future requests. Because trial seeds are content-derived per trial
+/// index, a stored entry with at least `trials` measurements serves the
+/// request as a prefix, and a shorter one is topped up with only the
+/// missing trial indices (the merged entry is written back).
+///
+/// When [`SweepSpec::adaptive`] is set the sweep is delegated to the
+/// [`crate::coordinator::planner`], which spends trials where the cost
+/// variance needs them instead of uniformly (cached measurements count
+/// toward its convergence target for free).
+pub fn run_sweep_cached(
+    spec: &SweepSpec,
+    backend: Backend,
+    cache: Option<&dyn CellStore>,
+) -> anyhow::Result<SweepResult> {
+    spec.validate()?;
+    if spec.adaptive() {
+        return super::planner::run_adaptive(spec, backend, cache);
+    }
+    let keys = grid_keys(spec);
+    let workers = spec.effective_workers();
 
     // Probe the cache, then fan out (cell, trial) pairs for the rest;
     // trial seeds are forked from the root per cell tag so results are
-    // independent of both scheduling and grid composition.
+    // independent of both scheduling and grid composition. A cached entry
+    // is always usable: one holding at least `trials` measurements serves
+    // the request as a prefix (its first `trials` trials are exactly the
+    // ones this sweep would schedule), and a shorter one — e.g. from an
+    // adaptive sweep that converged early — keeps its measurements and is
+    // topped up with only the missing trial indices.
     let mut cached: HashMap<CellKey, CellCosts> = HashMap::new();
     let mut work = Vec::new();
     for &key in &keys {
         if spec.is_gap(key) {
             continue; // constraint gap — never scheduled
         }
+        let mut have = 0;
         if let Some(c) = cache {
-            if let Some(costs) = c.fetch(key, spec, backend.tag()) {
+            if let Some(mut costs) = c.fetch(key, spec, backend.tag()) {
+                have = costs.normalize(spec.trials);
                 cached.insert(key, costs);
-                continue;
             }
         }
-        for t in 0..spec.trials {
-            let seed = root
-                .fork(cell_tag(key).wrapping_add(t as u64))
-                .next_u64_seed();
-            work.push((key, seed));
+        for t in have..spec.trials {
+            work.push((key, trial_seed(spec, key, t)));
         }
     }
     log::info!(
@@ -311,21 +443,22 @@ pub fn run_sweep_cached(
                 train: None,
                 surveil: None,
                 violated: true,
+                interpolated: false,
             });
             Registry::global().inc("sweep.gap_cells");
             continue;
         }
-        if let Some(costs) = cached.get(&key) {
-            cells.push(CellMeasure {
-                key,
-                train: Some(Summary::of(&costs.train_s)),
-                surveil: Some(Summary::of(&costs.surveil_s)),
-                violated: false,
-            });
-            continue;
-        }
-        let mut train_ts = Vec::new();
-        let mut surveil_ts = Vec::new();
+        // Start from the cached prefix (if any), then append this run's
+        // fresh trials — `results` preserves `work` order, which lists each
+        // cell's trials in ascending index order, so the merged vectors stay
+        // aligned with the deterministic trial-seed sequence.
+        let (mut train_ts, mut surveil_ts, prefix) = match cached.remove(&key) {
+            Some(c) => {
+                let prefix = c.train_s.len();
+                (c.train_s, c.surveil_s, prefix)
+            }
+            None => (Vec::new(), Vec::new(), 0),
+        };
         for (k, r) in &results {
             if *k == key {
                 let c = r
@@ -336,38 +469,32 @@ pub fn run_sweep_cached(
             }
         }
         anyhow::ensure!(!train_ts.is_empty(), "no trials completed for {key:?}");
-        if let Some(c) = cache {
-            c.store(
-                key,
-                spec,
-                backend.tag(),
-                CellCosts {
-                    train_s: train_ts.clone(),
-                    surveil_s: surveil_ts.clone(),
-                },
-            );
+        if train_ts.len() > prefix {
+            // Something fresh was measured — write the merged entry back.
+            if let Some(c) = cache {
+                c.store(
+                    key,
+                    spec,
+                    backend.tag(),
+                    CellCosts {
+                        train_s: train_ts.clone(),
+                        surveil_s: surveil_ts.clone(),
+                    },
+                );
+            }
         }
         cells.push(CellMeasure {
             key,
             train: Some(Summary::of(&train_ts)),
             surveil: Some(Summary::of(&surveil_ts)),
             violated: false,
+            interpolated: false,
         });
     }
     Ok(SweepResult {
         spec: spec.clone(),
         cells,
     })
-}
-
-// Seed helper: Rng → one u64 (keeps fork semantics out of sweep logic).
-trait SeedExt {
-    fn next_u64_seed(self) -> u64;
-}
-impl SeedExt for Rng {
-    fn next_u64_seed(mut self) -> u64 {
-        self.next_u64()
-    }
 }
 
 impl SweepResult {
@@ -428,6 +555,29 @@ impl SweepResult {
             .map(|c| c.key)
             .collect()
     }
+
+    /// Cells measured to full precision (non-gap, not interpolated).
+    pub fn measured_cells(&self) -> usize {
+        self.cells
+            .iter()
+            .filter(|c| !c.violated && !c.interpolated)
+            .count()
+    }
+
+    /// Cells accepted at pilot precision via the planner's surface model.
+    pub fn interpolated_cells(&self) -> usize {
+        self.cells.iter().filter(|c| c.interpolated).count()
+    }
+
+    /// Total trials aggregated across all measured cells (the sweep's
+    /// Monte Carlo budget — the quantity the adaptive planner minimises).
+    pub fn total_trials(&self) -> usize {
+        self.cells
+            .iter()
+            .filter_map(|c| c.train.as_ref())
+            .map(|s| s.n)
+            .sum()
+    }
 }
 
 fn dedup_sorted(it: impl Iterator<Item = usize>) -> Vec<usize> {
@@ -451,6 +601,7 @@ mod tests {
             seed: 1,
             model: "mset2".into(),
             workers: 2,
+            ..SweepSpec::default()
         }
     }
 
@@ -578,6 +729,33 @@ mod tests {
         };
         run_sweep_cached(&sub, Backend::Native, Some(&cache)).unwrap();
         assert_eq!(cache.hits(), 8, "both sub-grid cells must be reused");
+    }
+
+    #[test]
+    fn cached_entry_serves_smaller_trial_request_as_prefix() {
+        let cache = SweepCache::in_memory();
+        let spec3 = SweepSpec {
+            trials: 3,
+            ..tiny_spec()
+        };
+        run_sweep_cached(&spec3, Backend::Native, Some(&cache)).unwrap();
+        let len_after_first = cache.len();
+
+        // Fewer trials, same seed: every cell is served from the stored
+        // entries' prefixes — no new measurements, no new entries.
+        let spec2 = SweepSpec {
+            trials: 2,
+            ..tiny_spec()
+        };
+        let res = run_sweep_cached(&spec2, Backend::Native, Some(&cache)).unwrap();
+        assert_eq!(cache.len(), len_after_first);
+        assert_eq!(cache.hits(), 6); // 8 cells − 2 gaps
+        for c in &res.cells {
+            if !c.violated {
+                assert_eq!(c.train.as_ref().unwrap().n, 2);
+                assert_eq!(c.surveil.as_ref().unwrap().n, 2);
+            }
+        }
     }
 
     #[test]

@@ -56,11 +56,13 @@ pub enum AlarmKind {
 /// One alarm event.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Alarm {
+    /// Index of the signal that raised the alarm.
     pub signal: usize,
     /// Observation index at which the SPRT crossed the alarm threshold.
     pub at: usize,
     /// Sign of the detected shift (+1 high, −1 low; 0 for variance).
     pub direction: i8,
+    /// Which SPRT test crossed its threshold.
     pub kind: AlarmKind,
 }
 
@@ -105,6 +107,7 @@ impl Sprt {
         }
     }
 
+    /// Number of signals the detector was calibrated over.
     pub fn n_signals(&self) -> usize {
         self.sigma.len()
     }

@@ -19,7 +19,43 @@
 //! The Rust binary loads the artifacts through the PJRT CPU client
 //! ([`runtime`]) and never invokes Python at run time.
 //!
+//! ## Pipeline
+//!
+//! One scope request flows `tpss` (synthetic telemetry) → `mset`/`models`
+//! (estimators) → `runtime` (device execution) → `coordinator` (Monte
+//! Carlo sweep — exhaustive or adaptive via [`coordinator::planner`]) →
+//! `surface` (response-surface fit) → `recommend` (cloud-shape choice),
+//! with [`service`] wrapping the whole pipeline in a multi-tenant HTTP
+//! JSON API backed by a content-addressed cell-level sweep cache. See
+//! `docs/ARCHITECTURE.md` for the full map and `docs/API.md` for the
+//! service endpoints.
+//!
+//! ## Example: sweep a tiny grid and recommend a shape
+//!
+//! ```
+//! use containerstress::coordinator::{run_sweep, Backend, SweepSpec};
+//! use containerstress::recommend::{recommend_from_sweep, Sla};
+//! use containerstress::shapes::Workload;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let spec = SweepSpec {
+//!     signals: vec![2, 3],
+//!     memvecs: vec![8, 12, 16],
+//!     obs: vec![16, 32],
+//!     trials: 1,
+//!     ..SweepSpec::default()
+//! };
+//! let result = run_sweep(&spec, Backend::Native)?;
+//! let rec = recommend_from_sweep(&result, &Workload::customer_a(), &Sla::default())?;
+//! assert!(!rec.assessments.is_empty());
+//! println!("{}", rec.render());
+//! # Ok(())
+//! # }
+//! ```
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index.
+
+#![warn(missing_docs)]
 
 pub mod accel;
 pub mod bench;

@@ -7,14 +7,19 @@
 
 use std::ops::{Index, IndexMut};
 
+/// Dense row-major matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Elements, row-major (`rows × cols`).
     pub data: Vec<f64>,
 }
 
 impl Mat {
+    /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Mat {
         Mat {
             rows,
@@ -23,6 +28,7 @@ impl Mat {
         }
     }
 
+    /// Identity matrix.
     pub fn eye(n: usize) -> Mat {
         let mut m = Mat::zeros(n, n);
         for i in 0..n {
@@ -31,6 +37,7 @@ impl Mat {
         m
     }
 
+    /// Matrix from equal-length row vectors.
     pub fn from_rows(rows: Vec<Vec<f64>>) -> Mat {
         let r = rows.len();
         let c = rows.first().map(|x| x.len()).unwrap_or(0);
@@ -42,25 +49,30 @@ impl Mat {
         }
     }
 
+    /// Matrix wrapping an existing row-major buffer.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
         assert_eq!(data.len(), rows * cols);
         Mat { rows, cols, data }
     }
 
+    /// Row `r` as a slice.
     #[inline]
     pub fn row(&self, r: usize) -> &[f64] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Mutable row `r`.
     #[inline]
     pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Column `c`, copied out.
     pub fn col(&self, c: usize) -> Vec<f64> {
         (0..self.rows).map(|r| self[(r, c)]).collect()
     }
 
+    /// Transposed copy.
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
         for r in 0..self.rows {
@@ -99,6 +111,7 @@ impl Mat {
             .collect()
     }
 
+    /// Scalar multiple.
     pub fn scale(&self, s: f64) -> Mat {
         Mat {
             rows: self.rows,
@@ -107,6 +120,7 @@ impl Mat {
         }
     }
 
+    /// Element-wise sum.
     pub fn add(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Mat {
@@ -121,6 +135,7 @@ impl Mat {
         }
     }
 
+    /// Element-wise difference.
     pub fn sub(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Mat {

@@ -12,6 +12,12 @@
 //!
 //! Flags: `--config file.json` plus per-key overrides (see `config`),
 //! `--backend device|native`, `--metrics` to dump the metrics registry.
+//! `--ci-target F` (with `--pilot-trials`, `--max-trials`,
+//! `--interpolate`) switches `sweep`/`scope`/`serve` from the exhaustive
+//! fixed-trials loop to the adaptive sweep planner.
+//!
+//! See `docs/ARCHITECTURE.md` for the module map and `docs/API.md` for the
+//! `serve` endpoint reference.
 
 use containerstress::accel::{self, CpuRef, GpuSpec};
 use containerstress::config::Config;
@@ -90,6 +96,11 @@ fn print_help() {
          common flags: --config FILE --backend device|native --signals a,b,c\n\
            --memvecs a,b,c --obs a,b,c --trials N --model mset2|aakr|ridge\n\
            --out DIR --metrics\n\
+         planner flags (adaptive sweep; sweep/scope/serve):\n\
+           --ci-target F     relative 95%-CI target per cell (0 = exhaustive)\n\
+           --pilot-trials N  cheap pilot trials per cell (default 2)\n\
+           --max-trials N    per-cell trial cap (0 = max(trials, pilot))\n\
+           --interpolate B   surface-model cell pruning on|off (default on)\n\
          serve flags:  --host H --port P --queue-cap N --cache-dir DIR|none\n\
          \n\
          serve API:    POST /v1/scope  GET /v1/jobs/ID  GET /v1/recommendations/ID\n\
@@ -101,6 +112,14 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let cfg = Config::resolve(args)?;
     let (backend, _server) = make_backend(&cfg)?;
     let result = run_sweep(&cfg.sweep, backend)?;
+    if cfg.sweep.adaptive() {
+        println!(
+            "adaptive planner: {} measured + {} interpolated cells, {} total trials",
+            result.measured_cells(),
+            result.interpolated_cells(),
+            result.total_trials()
+        );
+    }
     report::write(&cfg.output_dir, "sweep.csv", &report::sweep_csv(&result))?;
     report::write(
         &cfg.output_dir,

@@ -18,6 +18,7 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// Fresh, empty registry (tests; production uses [`Registry::global`]).
     pub fn new() -> Registry {
         Registry::default()
     }
@@ -28,10 +29,12 @@ impl Registry {
         GLOBAL.get_or_init(Registry::new)
     }
 
+    /// Increment a counter by one.
     pub fn inc(&self, name: &str) {
         self.add(name, 1);
     }
 
+    /// Add `v` to a counter.
     pub fn add(&self, name: &str, v: u64) {
         *self
             .counters
@@ -46,6 +49,7 @@ impl Registry {
         self.sample(name, d.as_secs_f64());
     }
 
+    /// Record one observation of a sampled statistic.
     pub fn sample(&self, name: &str, v: f64) {
         self.samples
             .lock()
@@ -55,6 +59,7 @@ impl Registry {
             .push(v);
     }
 
+    /// Current value of a counter (0 if never touched).
     pub fn counter(&self, name: &str) -> u64 {
         self.counters
             .lock()
@@ -64,6 +69,7 @@ impl Registry {
             .unwrap_or(0)
     }
 
+    /// Summary statistics of a sampled series, if any were recorded.
     pub fn summary(&self, name: &str) -> Option<Summary> {
         self.samples
             .lock()

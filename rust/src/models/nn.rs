@@ -18,10 +18,15 @@ use crate::util::rng::Rng;
 pub struct MlpPlugin {
     /// Hidden width as a fraction of the input (≥ 2 units).
     pub hidden_frac: f64,
+    /// Training epochs.
     pub epochs: usize,
+    /// Mini-batch size.
     pub batch: usize,
+    /// Learning rate.
     pub lr: f64,
+    /// SGD momentum coefficient.
     pub momentum: f64,
+    /// Weight-init / shuffle seed.
     pub seed: u64,
     scaler: Option<Scaler>,
     /// (h × n) input weights, (h,) hidden bias.

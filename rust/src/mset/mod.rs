@@ -28,7 +28,9 @@ pub use similarity::{sim, sim_cross, sim_cross_gram, sim_matrix, GAMMA};
 /// Per-signal affine scaler (z-score using training statistics).
 #[derive(Clone, Debug)]
 pub struct Scaler {
+    /// Per-signal mean of the training data.
     pub mean: Vec<f64>,
+    /// Per-signal standard deviation (≥ tiny epsilon).
     pub std: Vec<f64>,
 }
 
@@ -60,6 +62,7 @@ impl Scaler {
         Scaler { mean, std }
     }
 
+    /// Standardise `x` column-wise with the fitted statistics.
     pub fn transform(&self, x: &Mat) -> Mat {
         assert_eq!(x.cols, self.mean.len());
         let mut out = x.clone();
@@ -92,6 +95,7 @@ pub struct MsetModel {
     pub d: Mat,
     /// `(S + λI)⁻¹`, `m × m`.
     pub g: Mat,
+    /// The scaler fitted on the training data (applied to probes).
     pub scaler: Scaler,
     /// Regularisation actually applied.
     pub lambda: f64,
@@ -157,10 +161,12 @@ pub struct Estimate {
 }
 
 impl MsetModel {
+    /// Number of signals the model was trained on.
     pub fn n_signals(&self) -> usize {
         self.d.cols
     }
 
+    /// Number of memory vectors selected at training time.
     pub fn n_memvec(&self) -> usize {
         self.d.rows
     }

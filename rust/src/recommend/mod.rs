@@ -34,6 +34,7 @@ impl Default for Sla {
 /// One evaluated shape.
 #[derive(Clone, Debug)]
 pub struct ShapeAssessment {
+    /// The catalog shape under assessment.
     pub shape: Shape,
     /// Predicted fraction of the shape consumed by streaming surveillance
     /// (1.0 = saturated).
@@ -48,20 +49,42 @@ pub struct ShapeAssessment {
     pub usd_per_hour: f64,
 }
 
+/// Origin of the surface samples behind a recommendation: how many sweep
+/// cells were measured to full precision versus accepted at pilot
+/// precision by the adaptive planner's surface model. Surfaced (rather
+/// than silently merged) so a consumer can tell a fully measured
+/// recommendation from a partially interpolated one — and force
+/// exhaustive mode (`interpolate=false`, `ci_target=0`) when reproducing
+/// the paper figures.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SurfaceBasis {
+    /// Cells measured to the planner's CI target (or exhaustively).
+    pub measured: usize,
+    /// Cells accepted via surface-model interpolation at pilot precision.
+    pub interpolated: usize,
+    /// Constraint-gap cells (`m < 2n`) with no measurements at all.
+    pub gaps: usize,
+}
+
 /// Recommendation output.
 #[derive(Clone, Debug)]
 pub struct Recommendation {
+    /// The customer workload this recommendation is sized for.
     pub workload: Workload,
     /// All shapes, assessed (sorted by price ascending).
     pub assessments: Vec<ShapeAssessment>,
     /// Index of the chosen (cheapest feasible) shape, if any.
     pub chosen: Option<usize>,
+    /// Sweep provenance when built by [`recommend_from_sweep`]; `None` for
+    /// recommendations built directly from externally fitted surfaces.
+    pub basis: Option<SurfaceBasis>,
 }
 
 /// Effective throughput of the local testbed implied by the measured
 /// surfaces (FLOP/s), used to translate measured seconds to shape seconds.
 #[derive(Clone, Copy, Debug)]
 pub struct LocalCalibration {
+    /// Effective throughput of the measuring host (FLOP/s).
     pub eff_flops: f64,
 }
 
@@ -150,6 +173,7 @@ pub fn recommend(
         workload: *workload,
         assessments,
         chosen,
+        basis: None,
     }
 }
 
@@ -165,6 +189,20 @@ pub fn recommend_from_sweep(
     workload: &Workload,
     sla: &Sla,
 ) -> anyhow::Result<Recommendation> {
+    // Empty-pilot edge case: a grid whose every cell violates the MSET
+    // training constraint has nothing to fit — error before the surface
+    // fit would report a confusing "need ≥10 samples, got 0".
+    let basis = SurfaceBasis {
+        measured: result.measured_cells(),
+        interpolated: result.interpolated_cells(),
+        gaps: result.gap_cells().len(),
+    };
+    anyhow::ensure!(
+        basis.measured + basis.interpolated > 0,
+        "sweep has no measurable cells: all {} grid cells violate the MSET training \
+         constraint m ≥ 2n; widen the memvec axis",
+        result.cells.len()
+    );
     let train_surf = ResponseSurface::fit(&result.samples("train"))?;
     let surveil_surf = ResponseSurface::fit(&result.samples("surveil"))?;
     log::info!(
@@ -182,10 +220,13 @@ pub fn recommend_from_sweep(
         _ => anyhow::bail!("sweep axes are empty; cannot calibrate a recommendation"),
     };
     let cal = LocalCalibration::from_surface(&surveil_surf, ref_n, ref_m, ref_obs);
-    Ok(recommend(workload, &train_surf, &surveil_surf, cal, sla))
+    let mut rec = recommend(workload, &train_surf, &surveil_surf, cal, sla);
+    rec.basis = Some(basis);
+    Ok(rec)
 }
 
 impl Recommendation {
+    /// The cheapest feasible shape's assessment, if any shape is feasible.
     pub fn chosen_shape(&self) -> Option<&ShapeAssessment> {
         self.chosen.map(|i| &self.assessments[i])
     }
@@ -226,6 +267,17 @@ impl Recommendation {
                     None => Json::Null,
                 },
             ),
+            (
+                "surface_basis",
+                match self.basis {
+                    Some(b) => Json::obj(vec![
+                        ("measured_cells", Json::Num(b.measured as f64)),
+                        ("interpolated_cells", Json::Num(b.interpolated as f64)),
+                        ("gap_cells", Json::Num(b.gaps as f64)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
             ("assessments", Json::Arr(assessments)),
         ])
     }
@@ -240,6 +292,12 @@ impl Recommendation {
             self.workload.obs_per_sec,
             self.workload.train_window
         ));
+        if let Some(b) = self.basis {
+            out.push_str(&format!(
+                "Surfaces: {} measured + {} interpolated cells ({} constraint gaps)\n",
+                b.measured, b.interpolated, b.gaps
+            ));
+        }
         out.push_str(&format!(
             "{:<18} {:>9} {:>12} {:>10} {:>6} {:>9}\n",
             "shape", "$/hr", "train(s)", "util", "mem", "feasible"
@@ -376,11 +434,45 @@ mod tests {
             seed: 5,
             model: "mset2".into(),
             workers: 2,
+            ..SweepSpec::default()
         };
         let result = run_sweep(&spec, Backend::Native).unwrap();
         let rec = recommend_from_sweep(&result, &Workload::customer_a(), &Sla::default())
             .expect("12 measured cells fit a surface");
         assert_eq!(rec.assessments.len(), shapes::catalog().len());
+        // exhaustive sweeps report a fully measured basis
+        assert_eq!(
+            rec.basis,
+            Some(SurfaceBasis {
+                measured: 12,
+                interpolated: 0,
+                gaps: 0
+            })
+        );
+        assert!(rec.render().contains("12 measured"));
+    }
+
+    #[test]
+    fn all_gap_sweep_errors_cleanly() {
+        use crate::coordinator::{run_sweep, Backend, SweepSpec};
+        // Every cell violates m ≥ 2n: the "empty pilot" edge case must be
+        // a clean error, not a panic or a confusing fit failure.
+        let spec = SweepSpec {
+            signals: vec![8, 16],
+            memvecs: vec![8],
+            obs: vec![16],
+            trials: 1,
+            seed: 5,
+            model: "mset2".into(),
+            workers: 1,
+            ..SweepSpec::default()
+        };
+        let result = run_sweep(&spec, Backend::Native).unwrap();
+        assert_eq!(result.measured_cells(), 0);
+        let err = recommend_from_sweep(&result, &Workload::customer_a(), &Sla::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no measurable cells"), "{err}");
     }
 
     #[test]

@@ -52,10 +52,14 @@ pub fn sensitivity_table(result: &SweepResult, phase: &str) -> anyhow::Result<St
     Ok(out)
 }
 
-/// Per-cell measurement CSV (full provenance of a sweep).
+/// Per-cell measurement CSV (full provenance of a sweep). The
+/// `interpolated` column distinguishes cells the adaptive planner accepted
+/// at pilot precision from fully measured ones, and `trials` is the count
+/// each cell actually ran (uniform in exhaustive mode, per-cell under the
+/// planner).
 pub fn sweep_csv(result: &SweepResult) -> String {
     let mut out = String::from(
-        "n_signals,n_memvec,n_obs,violated,train_median_s,train_iqr_s,surveil_median_s,surveil_iqr_s,trials\n",
+        "n_signals,n_memvec,n_obs,violated,interpolated,train_median_s,train_iqr_s,surveil_median_s,surveil_iqr_s,trials\n",
     );
     for c in &result.cells {
         let fmt = |s: &Option<crate::util::Summary>| match s {
@@ -63,14 +67,15 @@ pub fn sweep_csv(result: &SweepResult) -> String {
             None => ",".to_string(),
         };
         out.push_str(&format!(
-            "{},{},{},{},{},{},{}\n",
+            "{},{},{},{},{},{},{},{}\n",
             c.key.n,
             c.key.m,
             c.key.obs,
             c.violated,
+            c.interpolated,
             fmt(&c.train),
             fmt(&c.surveil),
-            result.spec.trials,
+            c.train.as_ref().map(|s| s.n).unwrap_or(0),
         ));
     }
     out
@@ -91,6 +96,7 @@ mod tests {
                 seed: 3,
                 model: "mset2".into(),
                 workers: 2,
+                ..SweepSpec::default()
             },
             Backend::Native,
         )

@@ -16,16 +16,20 @@ use std::time::{Duration, Instant};
 /// A host-side tensor (f32, row-major) that can cross thread boundaries.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Dimensions (row-major).
     pub shape: Vec<usize>,
+    /// Flat row-major element buffer.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// Tensor from a shape and a matching flat buffer.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data");
         Tensor { shape, data }
     }
 
+    /// Rank-1 single-element tensor (scalar inputs to HLO programs).
     pub fn scalar1(v: f32) -> Tensor {
         Tensor {
             shape: vec![1],
@@ -37,6 +41,7 @@ impl Tensor {
 /// Result of one device execution.
 #[derive(Clone, Debug)]
 pub struct ExecResult {
+    /// Program outputs, in manifest order.
     pub outputs: Vec<Tensor>,
     /// Pure execute wall time (excludes compile).
     pub exec_time: Duration,
@@ -46,6 +51,7 @@ pub struct ExecResult {
 
 /// Device-thread-confined engine.
 pub struct Engine {
+    /// The artifact manifest the engine was loaded from.
     pub manifest: Manifest,
     client: xla::PjRtClient,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,

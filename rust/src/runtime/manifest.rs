@@ -8,13 +8,16 @@ use std::path::{Path, PathBuf};
 /// Shape of one graph input/output.
 #[derive(Clone, Debug, PartialEq)]
 pub struct IoSpec {
+    /// Input/output name from the lowered graph.
     pub name: String,
+    /// Dimensions of the buffer.
     pub shape: Vec<usize>,
 }
 
 /// One AOT-lowered executable.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// Unique artifact id (file stem).
     pub id: String,
     /// Graph family: `mset2_train` | `mset2_surveil` | `aakr_surveil`.
     pub graph: String,
@@ -26,19 +29,28 @@ pub struct ArtifactMeta {
     pub chunk: usize,
     /// HLO text file, relative to the artifact directory.
     pub file: String,
+    /// Input buffer specs, in call order.
     pub inputs: Vec<IoSpec>,
+    /// Output buffer specs, in result order.
     pub outputs: Vec<IoSpec>,
 }
 
 /// Parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Artifact profile (`dev` | `full`).
     pub profile: String,
+    /// Similarity-kernel γ baked into the graphs.
     pub gamma: f64,
+    /// Relative ridge regularisation of the training solve.
     pub ridge_rel: f64,
+    /// Newton–Schulz iterations in the trained inverse.
     pub ns_iters: usize,
+    /// Default observation-chunk rows.
     pub chunk: usize,
+    /// Every lowered executable in the bundle.
     pub artifacts: Vec<ArtifactMeta>,
 }
 

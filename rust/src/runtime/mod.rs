@@ -131,6 +131,7 @@ impl DeviceServer {
         })
     }
 
+    /// Cloneable handle for submitting work to the device thread.
     pub fn handle(&self) -> DeviceHandle {
         self.handle.clone()
     }

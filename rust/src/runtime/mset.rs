@@ -16,9 +16,13 @@ use std::time::Duration;
 /// Device-resident MSET2 session.
 pub struct DeviceMset {
     handle: DeviceHandle,
+    /// Artifact bucket the workload was routed to.
     pub bucket: Bucket,
+    /// Real (unpadded) signal count.
     pub n_real: usize,
+    /// Real (unpadded) memory-vector count.
     pub m_real: usize,
+    /// Observation-chunk rows per surveillance call.
     pub chunk: usize,
     /// Similarity-kernel γ from the manifest (exposed for diagnostics).
     pub gamma: f64,
@@ -181,14 +185,19 @@ impl Drop for DeviceMset {
 /// Device-resident AAKR session (pluggable alternative; no training graph).
 pub struct DeviceAakr {
     handle: DeviceHandle,
+    /// Artifact bucket the workload was routed to.
     pub bucket: Bucket,
+    /// Real (unpadded) signal count.
     pub n_real: usize,
+    /// Real (unpadded) memory-vector count.
     pub m_real: usize,
+    /// Observation-chunk rows per surveillance call.
     pub chunk: usize,
     session: u64,
 }
 
 impl DeviceAakr {
+    /// Create a session for a scaled memory matrix (`m_real × n_real`).
     pub fn new(handle: DeviceHandle, d_scaled: &Mat) -> anyhow::Result<DeviceAakr> {
         let (m_real, n_real) = (d_scaled.rows, d_scaled.cols);
         let man = handle.manifest()?;

@@ -12,7 +12,9 @@ use crate::linalg::Mat;
 /// A (signals, memvecs) bucket.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Bucket {
+    /// Bucket signal count.
     pub n: usize,
+    /// Bucket memory-vector count.
     pub m: usize,
 }
 

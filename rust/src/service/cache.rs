@@ -1,11 +1,15 @@
 //! Cell-level **sweep cache** — the measurement store behind the service.
 //!
 //! Every Monte Carlo sweep decomposes into independent grid cells, and a
-//! cell's measured trial costs are fully determined by the tuple
-//! `(cell, model, seed, backend, trials)` (trial seeds are derived from the
-//! cell *content*, see [`crate::coordinator::sweep`]). The cache is therefore
-//! content-addressed on that tuple: identical cells across scoping requests
-//! are never re-measured, turning repeated customer scoping into a cheap
+//! cell's measured trial *sequence* is fully determined by the tuple
+//! `(cell, model, seed, backend)` — trial seeds are derived from the cell
+//! content and the trial index, see [`crate::coordinator::sweep`]. The
+//! cache is therefore content-addressed on that tuple, with the entry
+//! holding however many trials have been measured so far: an exhaustive
+//! sweep reuses a longer entry as a prefix, and the adaptive planner
+//! counts any stored trials toward its convergence target and tops the
+//! entry up in place. Identical cells across scoping requests are never
+//! re-measured, turning repeated customer scoping into a cheap
 //! surface-fit + recommend over stored measurements — the "build oracles,
 //! don't re-run the experiment" economics the service exists for.
 //!
@@ -27,14 +31,19 @@ use std::sync::Mutex;
 
 pub use crate::coordinator::sweep::CellCosts;
 
-/// Full identity of one cached cell measurement.
+/// Full identity of one cached cell measurement. Deliberately excludes any
+/// trial count: the entry stores the measured prefix of the cell's
+/// deterministic trial sequence, whatever its current length.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct CacheKey {
+    /// Grid coordinate.
     pub cell: CellKey,
+    /// Model name (`mset2` | `aakr` | …).
     pub model: String,
+    /// Sweep root seed (trial seeds derive from it).
     pub seed: u64,
+    /// Backend tag (`device` | `native`).
     pub backend: String,
-    pub trials: usize,
 }
 
 impl CacheKey {
@@ -45,22 +54,16 @@ impl CacheKey {
             model: spec.model.clone(),
             seed: spec.seed,
             backend: backend.to_string(),
-            trials: spec.trials,
         }
     }
 
-    /// Canonical string form (the content address). The `v1` prefix is the
-    /// entry-schema version: bump it to invalidate old spill dirs.
+    /// Canonical string form (the content address). The `v2` prefix is the
+    /// entry-schema version: bump it to invalidate old spill dirs
+    /// (`v1` keyed on the trial count; `v2` entries are length-agnostic).
     pub fn canonical(&self) -> String {
         format!(
-            "v1|model={}|backend={}|seed={}|trials={}|n={}|m={}|obs={}",
-            self.model,
-            self.backend,
-            self.seed,
-            self.trials,
-            self.cell.n,
-            self.cell.m,
-            self.cell.obs
+            "v2|model={}|backend={}|seed={}|n={}|m={}|obs={}",
+            self.model, self.backend, self.seed, self.cell.n, self.cell.m, self.cell.obs
         )
     }
 
@@ -123,7 +126,21 @@ impl SweepCache {
                 .and_then(|j| parse_entry(&j))
             {
                 Some((key, costs)) => {
-                    map.insert(key.canonical(), costs);
+                    // A file must live under its own canonical stem. Files
+                    // from older schema versions (v1 stems) parse fine but
+                    // are skipped: they would collide with the v2 address
+                    // while put()/eviction only ever touch the v2-stem
+                    // file, letting a stale entry shadow or resurrect a
+                    // newer one across restarts.
+                    let stem = path.file_stem().and_then(|s| s.to_str());
+                    if stem == Some(key.file_stem().as_str()) {
+                        map.insert(key.canonical(), costs);
+                    } else {
+                        log::warn!(
+                            "sweep cache: skipping {} (foreign schema version)",
+                            path.display()
+                        );
+                    }
                 }
                 None => log::warn!("sweep cache: skipping unreadable {}", path.display()),
             }
@@ -138,7 +155,9 @@ impl SweepCache {
     }
 
     /// Look up a cell; counts a hit or miss (locally and in the global
-    /// metrics registry).
+    /// metrics registry). A hit means the stored trial prefix is reused —
+    /// possibly topped up with further trials when the request wants more
+    /// than the entry holds, but never discarded.
     pub fn get(&self, key: &CacheKey) -> Option<CellCosts> {
         let found = self.map.lock().unwrap().get(&key.canonical()).cloned();
         match &found {
@@ -195,6 +214,7 @@ impl SweepCache {
         self.map.lock().unwrap().len()
     }
 
+    /// Whether the cache holds no cells.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -227,7 +247,6 @@ fn entry_json(key: &CacheKey, costs: &CellCosts) -> Json {
         ("backend", Json::Str(key.backend.clone())),
         ("model", Json::Str(key.model.clone())),
         ("seed", Json::Num(key.seed as f64)),
-        ("trials", Json::Num(key.trials as f64)),
         ("n", Json::Num(key.cell.n as f64)),
         ("m", Json::Num(key.cell.m as f64)),
         ("obs", Json::Num(key.cell.obs as f64)),
@@ -256,18 +275,16 @@ fn parse_entry(j: &Json) -> Option<(CacheKey, CellCosts)> {
         model: j.get("model")?.as_str()?.to_string(),
         seed: j.get("seed")?.as_f64()? as u64,
         backend: j.get("backend")?.as_str()?.to_string(),
-        trials: j.get("trials")?.as_usize()?,
     };
     let costs = CellCosts {
         train_s: f64_list(j.get("train_s")?)?,
         surveil_s: f64_list(j.get("surveil_s")?)?,
     };
-    // A valid entry carries exactly `trials` ≥ 1 measurements per phase;
-    // anything else is a corrupt or foreign file.
-    if key.trials == 0
-        || costs.train_s.len() != key.trials
-        || costs.surveil_s.len() != key.trials
-    {
+    // A valid entry carries the same number ≥ 1 of measurements for both
+    // phases (they share the trial schedule); anything else is a corrupt
+    // or foreign file. (Old `v1` files also parse, but `open()` rejects
+    // them by their file stem so they cannot shadow `v2` entries.)
+    if costs.train_s.is_empty() || costs.train_s.len() != costs.surveil_s.len() {
         return None;
     }
     Some((key, costs))
@@ -283,7 +300,6 @@ mod tests {
             model: "mset2".into(),
             seed: 7,
             backend: "native".into(),
-            trials: 2,
         }
     }
 
@@ -343,10 +359,23 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("bad.json"), "{not json").unwrap();
         std::fs::write(dir.join("wrong.json"), r#"{"n": 4}"#).unwrap();
-        // trial-count mismatch: claims 3 trials, carries 1
+        // phase mismatch: 2 train timings but 1 surveillance timing
         std::fs::write(
             dir.join("mismatch.json"),
-            r#"{"backend":"native","model":"mset2","seed":1,"trials":3,"n":4,"m":8,"obs":16,"train_s":[0.1],"surveil_s":[0.1]}"#,
+            r#"{"backend":"native","model":"mset2","seed":1,"n":4,"m":8,"obs":16,"train_s":[0.1,0.2],"surveil_s":[0.1]}"#,
+        )
+        .unwrap();
+        // empty entry: no measurements at all
+        std::fs::write(
+            dir.join("empty.json"),
+            r#"{"backend":"native","model":"mset2","seed":1,"n":4,"m":8,"obs":16,"train_s":[],"surveil_s":[]}"#,
+        )
+        .unwrap();
+        // well-formed content under a foreign (e.g. v1-era) file stem:
+        // must be rejected so it can never shadow the v2-stem entry
+        std::fs::write(
+            dir.join("00deadbeef00cafe.json"),
+            r#"{"backend":"native","model":"mset2","seed":1,"n":4,"m":8,"obs":16,"train_s":[0.1],"surveil_s":[0.1]}"#,
         )
         .unwrap();
         let c = SweepCache::open(&dir).unwrap();
@@ -368,7 +397,8 @@ mod tests {
                 model: "aakr".into(),
                 ..a.clone()
             },
-            CacheKey { trials: 3, ..a },
+            CacheKey { seed: 8, ..a.clone() },
+            key(4, 8, 64),
         ] {
             assert!(seen.insert(k.canonical()), "collision: {}", k.canonical());
         }

@@ -38,6 +38,7 @@ const MAX_PENDING_CONNS: usize = 64;
 /// A parsed request.
 #[derive(Debug)]
 pub struct Request {
+    /// HTTP method (upper-case).
     pub method: String,
     /// Path without the query string.
     pub path: String,
@@ -45,10 +46,12 @@ pub struct Request {
     pub query: Vec<(String, String)>,
     /// Lower-cased header names with trimmed values.
     pub headers: Vec<(String, String)>,
+    /// Raw body bytes.
     pub body: Vec<u8>,
 }
 
 impl Request {
+    /// First query-string value for `key`.
     pub fn query_get(&self, key: &str) -> Option<&str> {
         self.query
             .iter()
@@ -56,6 +59,7 @@ impl Request {
             .map(|(_, v)| v.as_str())
     }
 
+    /// Body as UTF-8 (errors on invalid encodings).
     pub fn body_str(&self) -> anyhow::Result<&str> {
         std::str::from_utf8(&self.body).map_err(|_| anyhow::anyhow!("body is not valid UTF-8"))
     }
@@ -64,12 +68,16 @@ impl Request {
 /// A response ready to serialize.
 #[derive(Debug)]
 pub struct Response {
+    /// HTTP status code.
     pub status: u16,
+    /// `Content-Type` header value.
     pub content_type: &'static str,
+    /// Raw body bytes.
     pub body: Vec<u8>,
 }
 
 impl Response {
+    /// JSON response with the given status.
     pub fn json(status: u16, body: &Json) -> Response {
         Response {
             status,
@@ -78,6 +86,7 @@ impl Response {
         }
     }
 
+    /// Plain-text response with the given status.
     pub fn text(status: u16, body: impl Into<String>) -> Response {
         Response {
             status,

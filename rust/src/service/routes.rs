@@ -14,12 +14,18 @@
 //! ```json
 //! {
 //!   "sweep":    {"signals": [2,3], "memvecs": [8,16], "obs": [16,32],
-//!                "trials": 1, "seed": 9, "model": "mset2", "workers": 2},
+//!                "trials": 1, "seed": 9, "model": "mset2", "workers": 2,
+//!                "pilot_trials": 2, "ci_target": 0.25,
+//!                "max_trials": 8, "interpolate": true},
 //!   "workload": {"signals": 20, "memvecs": 64,
 //!                "obs_per_sec": 1.0, "train_window": 4096},
 //!   "sla":      {"headroom": 2.0, "max_train_s": 3600.0}
 //! }
 //! ```
+//!
+//! `ci_target > 0` enables the adaptive sweep planner
+//! ([`crate::coordinator::planner`]); omitting it keeps the exhaustive
+//! fixed-`trials` sweep. See `docs/API.md` for the full endpoint reference.
 
 use crate::config;
 use crate::coordinator::jobs::{JobId, JobStatus, ScopingService};
@@ -44,6 +50,7 @@ pub struct ServiceState {
 }
 
 impl ServiceState {
+    /// Assemble the shared state for a service instance.
     pub fn new(svc: ScopingService, cache: Arc<SweepCache>, default_spec: SweepSpec) -> Self {
         ServiceState {
             svc,
@@ -53,6 +60,7 @@ impl ServiceState {
         }
     }
 
+    /// The shared cell-level sweep cache.
     pub fn cache(&self) -> &SweepCache {
         &self.cache
     }
@@ -248,10 +256,16 @@ fn check_service_limits(spec: &SweepSpec) -> anyhow::Result<()> {
         cells <= MAX_CELLS,
         "sweep grid too large: {cells} cells (service max {MAX_CELLS})"
     );
-    anyhow::ensure!(
-        spec.trials <= MAX_TRIALS,
-        "trials too large: {} (service max {MAX_TRIALS})",
+    // In adaptive mode the per-cell worst case is the planner's cap, not
+    // the exhaustive `trials` budget.
+    let per_cell = if spec.adaptive() {
+        spec.effective_max_trials()
+    } else {
         spec.trials
+    };
+    anyhow::ensure!(
+        per_cell <= MAX_TRIALS,
+        "trials too large: {per_cell} per cell (service max {MAX_TRIALS})"
     );
     anyhow::ensure!(
         spec.workers <= MAX_WORKERS,
@@ -267,11 +281,7 @@ fn check_service_limits(spec: &SweepSpec) -> anyhow::Result<()> {
         "cell too large: {max_n} signals × {} obs/memvecs exceeds the service limit",
         max_obs.max(max_m)
     );
-    let eff_workers = if spec.workers == 0 {
-        crate::util::threadpool::default_workers()
-    } else {
-        spec.workers
-    };
+    let eff_workers = spec.effective_workers();
     anyhow::ensure!(
         eff_workers.saturating_mul(elems) <= MAX_CONCURRENT_ELEMS,
         "sweep too large: {eff_workers} workers × {elems}-element cells exceeds the \
@@ -284,8 +294,15 @@ fn sweep_summary(r: &SweepResult) -> Json {
     Json::obj(vec![
         ("cells", Json::Num(r.cells.len() as f64)),
         ("gap_cells", Json::Num(r.gap_cells().len() as f64)),
+        ("measured_cells", Json::Num(r.measured_cells() as f64)),
+        (
+            "interpolated_cells",
+            Json::Num(r.interpolated_cells() as f64),
+        ),
+        ("total_trials", Json::Num(r.total_trials() as f64)),
         ("model", Json::Str(r.spec.model.clone())),
         ("trials", Json::Num(r.spec.trials as f64)),
+        ("adaptive", Json::Bool(r.spec.adaptive())),
         ("seed", Json::Num(r.spec.seed as f64)),
     ])
 }
@@ -449,6 +466,26 @@ mod tests {
         assert_eq!(r.status, 422);
         let r = st.handle(&post("/v1/scope", r#"{"sweep": {"workers": 10000}}"#));
         assert_eq!(r.status, 422);
+        // the adaptive planner's per-cell cap is bounded like `trials`
+        let r = st.handle(&post(
+            "/v1/scope",
+            r#"{"sweep": {"ci_target": 0.2, "max_trials": 1000}}"#,
+        ));
+        assert_eq!(r.status, 422);
+        assert!(String::from_utf8(r.body).unwrap().contains("too large"));
+    }
+
+    #[test]
+    fn planner_knobs_validated() {
+        let st = state();
+        let r = st.handle(&post("/v1/scope", r#"{"sweep": {"interpolate": "yes"}}"#));
+        assert_eq!(r.status, 422);
+        let r = st.handle(&post(
+            "/v1/scope",
+            r#"{"sweep": {"ci_target": 0.3, "pilot_trials": 1}}"#,
+        ));
+        assert_eq!(r.status, 422);
+        assert!(String::from_utf8(r.body).unwrap().contains("pilot_trials"));
     }
 
     #[test]

@@ -82,6 +82,7 @@ impl Default for ElasticPolicy {
 /// Result of one strategy simulation.
 #[derive(Clone, Debug)]
 pub struct ElasticOutcome {
+    /// Total spend over the trace (USD).
     pub total_usd: f64,
     /// Epochs in which demand exceeded provisioned capacity.
     pub violation_epochs: usize,

@@ -23,7 +23,9 @@ pub mod elastic;
 /// Processor generation parameters.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CpuSpec {
+    /// Physical core count.
     pub cores: usize,
+    /// Base clock (GHz).
     pub clock_ghz: f64,
     /// Sustained f32 FLOPs per cycle per core (SIMD-aware, derated).
     pub flops_per_cycle: f64,
@@ -32,8 +34,11 @@ pub struct CpuSpec {
 /// One cloud shape ("container configuration").
 #[derive(Clone, Debug, PartialEq)]
 pub struct Shape {
+    /// Catalog name (OCI-style shape id).
     pub name: &'static str,
+    /// CPU complement.
     pub cpu: CpuSpec,
+    /// Memory capacity (GB).
     pub mem_gb: f64,
     /// V100-class GPUs attached.
     pub gpus: usize,
@@ -50,6 +55,7 @@ impl Shape {
         c * parallel_eff * self.cpu.clock_ghz * 1e9 * self.cpu.flops_per_cycle
     }
 
+    /// Whether the shape carries GPUs.
     pub fn has_gpu(&self) -> bool {
         self.gpus > 0
     }
@@ -102,7 +108,9 @@ pub fn mset_footprint_bytes(n: usize, m: usize, chunk: usize, train_window: usiz
 /// Workload definition used for shape scoping (engineering units).
 #[derive(Clone, Copy, Debug)]
 pub struct Workload {
+    /// Number of telemetry signals.
     pub n_signals: usize,
+    /// Memory vectors the model will be sized with.
     pub n_memvec: usize,
     /// Observations per second arriving for surveillance.
     pub obs_per_sec: f64,

@@ -24,8 +24,11 @@ pub const PARAMS: [&str; 3] = ["n_signals", "n_memvec", "n_obs"];
 /// One measured grid cell.
 #[derive(Clone, Copy, Debug)]
 pub struct Sample {
+    /// Signal count of the cell.
     pub n_signals: usize,
+    /// Memory-vector count of the cell.
     pub n_memvec: usize,
+    /// Observation count of the cell.
     pub n_obs: usize,
     /// Measured compute cost (seconds); must be > 0.
     pub cost: f64,
@@ -167,14 +170,20 @@ impl ResponseSurface {
 /// memvec axis, cols = second axis, `None` = constraint gap.
 #[derive(Clone, Debug)]
 pub struct SurfaceGrid {
+    /// Label of the row axis.
     pub row_name: String,
+    /// Label of the column axis.
     pub col_name: String,
+    /// Row-axis tick values.
     pub row_vals: Vec<f64>,
+    /// Column-axis tick values.
     pub col_vals: Vec<f64>,
+    /// Cell values; `None` marks a constraint gap.
     pub cells: Vec<Vec<Option<f64>>>,
 }
 
 impl SurfaceGrid {
+    /// Empty grid (all gaps) over the given axes.
     pub fn new(
         row_name: &str,
         col_name: &str,
@@ -191,6 +200,7 @@ impl SurfaceGrid {
         }
     }
 
+    /// Fill one cell.
     pub fn set(&mut self, r: usize, c: usize, v: f64) {
         self.cells[r][c] = Some(v);
     }

@@ -44,10 +44,13 @@ pub enum Archetype {
 /// Specification of a synthesized telemetry dataset.
 #[derive(Clone, Debug)]
 pub struct TpssConfig {
+    /// Number of correlated signals to synthesize.
     pub n_signals: usize,
+    /// Number of observations (rows).
     pub n_obs: usize,
     /// Sampling interval in seconds (defines mode frequencies).
     pub dt: f64,
+    /// Telemetry archetype shaping the spectral content.
     pub archetype: Archetype,
     /// Mean target cross-correlation of the stochastic component (0..0.95).
     pub cross_corr: f64,
@@ -98,7 +101,9 @@ impl TpssConfig {
 /// observation vector, matching MSET's convention).
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Synthesized telemetry, observations × signals.
     pub data: Mat,
+    /// The configuration that produced it.
     pub cfg: TpssConfig,
 }
 

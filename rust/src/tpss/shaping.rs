@@ -11,9 +11,13 @@
 /// Coefficients of the Fleishman cubic.
 #[derive(Clone, Copy, Debug)]
 pub struct Fleishman {
+    /// Johnson γ location parameter.
     pub a: f64,
+    /// Johnson δ shape parameter.
     pub b: f64,
+    /// Johnson ξ translation parameter.
     pub c: f64,
+    /// Johnson λ scale parameter.
     pub d: f64,
 }
 

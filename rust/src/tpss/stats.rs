@@ -5,7 +5,9 @@
 /// First four sample moments.
 #[derive(Clone, Copy, Debug)]
 pub struct Moments {
+    /// Sample mean.
     pub mean: f64,
+    /// Sample variance.
     pub var: f64,
     /// Standardised third moment.
     pub skewness: f64,
@@ -13,6 +15,7 @@ pub struct Moments {
     pub kurtosis: f64,
 }
 
+/// First four standardised moments of a sample (n ≥ 2).
 pub fn moments(xs: &[f64]) -> Moments {
     let n = xs.len() as f64;
     assert!(n >= 2.0);

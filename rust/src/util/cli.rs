@@ -15,9 +15,11 @@ use std::collections::BTreeMap;
 /// bare `--flag`s and positionals, in original order.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First non-flag token, if any.
     pub subcommand: Option<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Bare tokens after the subcommand.
     pub positional: Vec<String>,
 }
 
@@ -58,18 +60,22 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether bare `--name` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw value of `--name value`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// Raw value of `--name`, or `default`.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// `--name` as a usize, or `default` when absent.
     pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -79,6 +85,7 @@ impl Args {
         }
     }
 
+    /// `--name` as a float, or `default` when absent.
     pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -88,6 +95,7 @@ impl Args {
         }
     }
 
+    /// `--name` as a u64, or `default` when absent.
     pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
         match self.get(name) {
             None => Ok(default),

@@ -12,11 +12,17 @@ use std::fmt;
 /// is sufficient for manifests and keeps output deterministic.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always an f64).
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
@@ -24,27 +30,33 @@ pub enum Json {
 #[derive(Debug, thiserror::Error)]
 #[error("json parse error at byte {offset}: {msg}")]
 pub struct JsonError {
+    /// Byte offset of the error in the input.
     pub offset: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 
 impl Json {
     // ---- constructors -------------------------------------------------
 
+    /// Object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Array of numbers.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// Array of strings.
     pub fn arr_str(xs: &[&str]) -> Json {
         Json::Arr(xs.iter().map(|s| Json::Str(s.to_string())).collect())
     }
 
     // ---- accessors -----------------------------------------------------
 
+    /// Object member lookup (`None` for non-objects/missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -58,6 +70,7 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing json key: {key}"))
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -65,6 +78,7 @@ impl Json {
         }
     }
 
+    /// Numeric value as a non-negative integer (rejects fractions).
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|x| {
             if x >= 0.0 && x.fract() == 0.0 {
@@ -75,6 +89,7 @@ impl Json {
         })
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -82,6 +97,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -89,6 +105,7 @@ impl Json {
         }
     }
 
+    /// Array elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -96,6 +113,7 @@ impl Json {
         }
     }
 
+    /// Object members, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -105,6 +123,7 @@ impl Json {
 
     // ---- parsing -------------------------------------------------------
 
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             bytes: text.as_bytes(),

@@ -26,17 +26,26 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
 /// Robust summary statistics over a sample of measurements (seconds, etc.).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest observation.
     pub min: f64,
+    /// 25th percentile (linear interpolation).
     pub p25: f64,
+    /// 50th percentile.
     pub median: f64,
+    /// 75th percentile.
     pub p75: f64,
+    /// Largest observation.
     pub max: f64,
 }
 
 impl Summary {
+    /// Summarise a non-empty sample.
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "Summary::of(empty)");
         let mut v = xs.to_vec();

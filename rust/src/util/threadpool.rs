@@ -51,12 +51,14 @@ pub fn default_workers() -> usize {
 pub struct JobPool {
     tx: Option<mpsc::Sender<Job>>,
     handles: Vec<std::thread::JoinHandle<()>>,
+    /// Number of worker threads.
     pub workers: usize,
 }
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 impl JobPool {
+    /// Spawn a pool with `workers` threads (min 1).
     pub fn new(workers: usize) -> JobPool {
         let workers = workers.max(1);
         let (tx, rx) = mpsc::channel::<Job>();

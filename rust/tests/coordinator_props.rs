@@ -27,6 +27,7 @@ fn gen_spec(rng: &mut Rng) -> SweepSpec {
         seed: rng.next_u64(),
         model: "mset2".into(),
         workers: 1 + rng.range_usize(0, 3),
+        ..SweepSpec::default()
     }
 }
 
@@ -116,6 +117,102 @@ fn prop_worker_count_does_not_change_structure() {
             let keys_b: Vec<_> = b.cells.iter().map(|c| c.key).collect();
             if keys_a != keys_b {
                 return Err("cell order differs with worker count".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random adaptive spec: small grids, pilot 2, varied CI target and cap.
+fn gen_adaptive_spec(rng: &mut Rng) -> SweepSpec {
+    let mut s = gen_spec(rng);
+    s.trials = 1; // ignored in adaptive mode (the cap governs)
+    s.pilot_trials = 2;
+    s.ci_target = 0.25 + 0.25 * rng.range_usize(0, 3) as f64; // 0.25 | 0.5 | 0.75
+    s.max_trials = 3 + rng.range_usize(0, 2); // 3..=4
+    s.interpolate = rng.range_usize(0, 2) == 1;
+    s
+}
+
+#[test]
+fn prop_adaptive_trials_bounded_and_structure_thread_independent() {
+    forall_res(
+        "planner: pilot ≤ trials ≤ max; grid structure independent of workers",
+        8,
+        gen_adaptive_spec,
+        |spec| {
+            let res = run_sweep(spec, Backend::Native).map_err(|e| e.to_string())?;
+            let mut other = spec.clone();
+            other.workers = (spec.workers % 4) + 1; // a different thread count
+            let res2 = run_sweep(&other, Backend::Native).map_err(|e| e.to_string())?;
+
+            // The deterministic part of the planner — which cells exist,
+            // which are gaps, and in what order — must not depend on the
+            // worker count (trial seeds are content-derived; only the
+            // noise-driven allocation totals may differ).
+            if res.gap_cells() != res2.gap_cells() {
+                return Err("gap cells differ with worker count".into());
+            }
+            let keys: Vec<_> = res.cells.iter().map(|c| c.key).collect();
+            let keys2: Vec<_> = res2.cells.iter().map(|c| c.key).collect();
+            if keys != keys2 {
+                return Err("cell order differs with worker count".into());
+            }
+
+            let max = spec.effective_max_trials();
+            for c in &res.cells {
+                if c.violated {
+                    if c.interpolated {
+                        return Err(format!("gap cell {:?} marked interpolated", c.key));
+                    }
+                    continue;
+                }
+                let t = c.train.as_ref().ok_or("missing train")?;
+                let s = c.surveil.as_ref().ok_or("missing surveil")?;
+                if t.n != s.n {
+                    return Err(format!(
+                        "cell {:?}: phases disagree on trials ({} vs {})",
+                        c.key, t.n, s.n
+                    ));
+                }
+                if t.n < spec.pilot_trials || t.n > max {
+                    return Err(format!(
+                        "cell {:?}: {} trials outside [{}, {max}]",
+                        c.key, t.n, spec.pilot_trials
+                    ));
+                }
+                if c.interpolated && t.n != spec.pilot_trials {
+                    return Err(format!(
+                        "interpolated cell {:?} ran {} trials, expected the pilot {}",
+                        c.key, t.n, spec.pilot_trials
+                    ));
+                }
+                if c.interpolated && !spec.interpolate {
+                    return Err(format!(
+                        "cell {:?} interpolated with interpolate=false",
+                        c.key
+                    ));
+                }
+                // Termination invariant: a measured (non-interpolated) cell
+                // stopped because it met the CI target or hit the cap.
+                if !c.interpolated && t.n < max {
+                    let rel = |s: &containerstress::util::Summary| {
+                        // Summary stores the population std; convert to the
+                        // sample std the planner uses.
+                        let n = s.n as f64;
+                        let sample_std = s.std * (n / (n - 1.0)).sqrt();
+                        1.96 * sample_std / (n.sqrt() * s.mean)
+                    };
+                    // small tolerance: the planner sums raw costs in trial
+                    // order, Summary in sorted order — FP rounding differs
+                    let target = spec.ci_target * (1.0 + 1e-9);
+                    if rel(t) > target || rel(s) > target {
+                        return Err(format!(
+                            "cell {:?} stopped at {} trials without meeting the CI target",
+                            c.key, t.n
+                        ));
+                    }
+                }
             }
             Ok(())
         },

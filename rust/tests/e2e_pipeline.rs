@@ -22,6 +22,7 @@ fn dev_spec() -> SweepSpec {
         seed: 42,
         model: "mset2".into(),
         workers: 4,
+        ..SweepSpec::default()
     }
 }
 
