@@ -21,6 +21,7 @@ use containerstress::coordinator::{run_sweep, Backend, SweepResult, SweepSpec};
 use containerstress::recommend::{recommend_from_sweep, Sla};
 use containerstress::report;
 use containerstress::shapes::Workload;
+use containerstress::util::json::Json;
 
 /// The seed sweep grid (native backend; no artifacts required).
 fn seed_grid() -> SweepSpec {
@@ -186,5 +187,21 @@ fn main() {
         ad.measured_cells()
     ));
     report::write(std::path::Path::new("results"), "ablation_planner.csv", &csv).unwrap();
-    println!("ablation_planner done → results/ablation_planner.csv");
+    let json = Json::obj(vec![
+        ("bench", Json::Str("ablation_planner".into())),
+        ("exhaustive_trials", Json::Num(t_ex as f64)),
+        ("adaptive_trials", Json::Num(t_ad as f64)),
+        ("trial_reduction", Json::Num(reduction)),
+        ("wall_exhaustive_s", Json::Num(wall_ex)),
+        ("wall_adaptive_s", Json::Num(wall_ad)),
+        ("interpolated_cells", Json::Num(ad.interpolated_cells() as f64)),
+        ("measured_cells", Json::Num(ad.measured_cells() as f64)),
+    ]);
+    report::write(
+        std::path::Path::new("results"),
+        "BENCH_planner.json",
+        &json.to_pretty(),
+    )
+    .unwrap();
+    println!("ablation_planner done → results/ablation_planner.csv, results/BENCH_planner.json");
 }

@@ -1,0 +1,187 @@
+//! **BENCH-1**: shared trial executor vs the sequential-leader baseline.
+//!
+//! The service front used to drain jobs strictly one at a time through a
+//! single leader thread, so one customer's giant sweep head-of-line-blocked
+//! every other tenant's small request. This benchmark reproduces that
+//! multi-tenant mix — `N` small scoping jobs submitted alongside one large
+//! sweep — under both disciplines:
+//!
+//! 1. **sequential-leader baseline** — jobs run one at a time in
+//!    submission order (large first), exactly the old FIFO;
+//! 2. **fair executor** — all jobs submitted to a [`ScopingService`],
+//!    whose shared [`TrialExecutor`] interleaves `(cell, trial)` tasks
+//!    across jobs with weighted fair queueing.
+//!
+//! Asserts the small jobs' **p95 completion latency improves ≥ 3×** under
+//! fair scheduling. Distinct per-job seeds keep every measurement fresh
+//! (no cache involved on either side).
+//!
+//! Output: `results/BENCH_scheduler.json` (the first entry of the bench
+//! trajectory) + `results/throughput_scheduler.csv`. `--quick` (or
+//! `CS_BENCH_QUICK=1`) shrinks the workload.
+//!
+//! [`TrialExecutor`]: containerstress::util::threadpool::TrialExecutor
+//! [`ScopingService`]: containerstress::coordinator::jobs::ScopingService
+
+use containerstress::bench::figs;
+use containerstress::coordinator::jobs::ScopingService;
+use containerstress::coordinator::{run_sweep, Backend, SweepSpec};
+use containerstress::report;
+use containerstress::util::json::Json;
+use std::time::Instant;
+
+/// Number of concurrent small (interactive-tenant) jobs.
+const SMALL_JOBS: usize = 8;
+
+/// A 10-cell-scale interactive request: milliseconds of work.
+fn small_spec(i: usize) -> SweepSpec {
+    SweepSpec {
+        signals: vec![2],
+        memvecs: vec![8],
+        obs: vec![16],
+        trials: 1,
+        seed: 1000 + i as u64,
+        model: "mset2".into(),
+        workers: 1,
+        ..SweepSpec::default()
+    }
+}
+
+/// The bulk tenant: a grid heavy enough to dominate the leader queue.
+fn large_spec(quick: bool) -> SweepSpec {
+    SweepSpec {
+        signals: vec![2, 3],
+        memvecs: vec![8, 12],
+        obs: if quick { vec![1024] } else { vec![2048] },
+        trials: if quick { 3 } else { 6 },
+        seed: 77,
+        model: "mset2".into(),
+        workers: 0,
+        ..SweepSpec::default()
+    }
+}
+
+fn p95(lat: &[f64]) -> f64 {
+    let mut xs = lat.to_vec();
+    xs.sort_by(f64::total_cmp);
+    let idx = ((xs.len() as f64 * 0.95).ceil() as usize).max(1) - 1;
+    xs[idx.min(xs.len() - 1)]
+}
+
+fn mean(lat: &[f64]) -> f64 {
+    lat.iter().sum::<f64>() / lat.len() as f64
+}
+
+fn main() {
+    containerstress::util::logger::init();
+    let quick = figs::quick();
+    let large = large_spec(quick);
+    println!(
+        "throughput_scheduler: 1 large job ({} cells × {} trials) + {SMALL_JOBS} small jobs",
+        large.signals.len() * large.memvecs.len() * large.obs.len(),
+        large.trials
+    );
+
+    // --- baseline: the old single-leader FIFO, large job first -----------
+    let t0 = Instant::now();
+    let mut seq_lat = Vec::with_capacity(SMALL_JOBS);
+    run_sweep(&large, Backend::Native).expect("large sweep (sequential)");
+    for i in 0..SMALL_JOBS {
+        run_sweep(&small_spec(i), Backend::Native).expect("small sweep (sequential)");
+        seq_lat.push(t0.elapsed().as_secs_f64());
+    }
+    let seq_total = t0.elapsed().as_secs_f64();
+
+    // --- fair executor: all jobs concurrent, trials interleaved ----------
+    let svc = ScopingService::start(Backend::Native, SMALL_JOBS + 2);
+    let t0 = Instant::now();
+    let large_id = svc.submit(large_spec(quick)).expect("submit large");
+    let ids: Vec<_> = (0..SMALL_JOBS)
+        .map(|i| svc.submit(small_spec(i)).expect("submit small"))
+        .collect();
+    let mut fair_lat = vec![0.0f64; SMALL_JOBS];
+    std::thread::scope(|scope| {
+        let svc = &svc;
+        let handles: Vec<_> = ids
+            .iter()
+            .map(|&id| {
+                scope.spawn(move || {
+                    svc.wait(id).expect("small job");
+                    t0.elapsed().as_secs_f64()
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            fair_lat[i] = h.join().expect("join waiter");
+        }
+    });
+    svc.wait(large_id).expect("large job");
+    let fair_total = t0.elapsed().as_secs_f64();
+    svc.shutdown();
+
+    let (p95_seq, p95_fair) = (p95(&seq_lat), p95(&fair_lat));
+    let speedup = p95_seq / p95_fair.max(1e-9);
+    println!(
+        "{:<18} {:>14} {:>14} {:>14}",
+        "discipline", "small_p95_s", "small_mean_s", "makespan_s"
+    );
+    println!(
+        "{:<18} {:>14.4} {:>14.4} {:>14.4}",
+        "sequential-leader",
+        p95_seq,
+        mean(&seq_lat),
+        seq_total
+    );
+    println!(
+        "{:<18} {:>14.4} {:>14.4} {:>14.4}",
+        "fair-executor",
+        p95_fair,
+        mean(&fair_lat),
+        fair_total
+    );
+    println!("small-job p95 latency speedup: {speedup:.1}x");
+    assert!(
+        speedup >= 3.0,
+        "fair scheduling must improve small-job p95 latency ≥3x over the \
+         sequential leader (got {speedup:.2}x: {p95_seq:.4}s vs {p95_fair:.4}s)"
+    );
+
+    let dir = std::path::Path::new("results");
+    let mut csv = String::from("discipline,small_p95_s,small_mean_s,makespan_s\n");
+    csv.push_str(&format!(
+        "sequential-leader,{p95_seq},{},{seq_total}\n",
+        mean(&seq_lat)
+    ));
+    csv.push_str(&format!(
+        "fair-executor,{p95_fair},{},{fair_total}\n",
+        mean(&fair_lat)
+    ));
+    report::write(dir, "throughput_scheduler.csv", &csv).unwrap();
+    let json = Json::obj(vec![
+        ("bench", Json::Str("throughput_scheduler".into())),
+        ("small_jobs", Json::Num(SMALL_JOBS as f64)),
+        ("quick", Json::Bool(quick)),
+        (
+            "sequential",
+            Json::obj(vec![
+                ("small_p95_s", Json::Num(p95_seq)),
+                ("small_mean_s", Json::Num(mean(&seq_lat))),
+                ("makespan_s", Json::Num(seq_total)),
+            ]),
+        ),
+        (
+            "fair",
+            Json::obj(vec![
+                ("small_p95_s", Json::Num(p95_fair)),
+                ("small_mean_s", Json::Num(mean(&fair_lat))),
+                ("makespan_s", Json::Num(fair_total)),
+            ]),
+        ),
+        ("p95_speedup", Json::Num(speedup)),
+    ]);
+    report::write(dir, "BENCH_scheduler.json", &json.to_pretty()).unwrap();
+    println!(
+        "throughput_scheduler done → results/BENCH_scheduler.json, \
+         results/throughput_scheduler.csv"
+    );
+}

@@ -36,6 +36,13 @@ pub struct ServiceConfig {
     pub queue_cap: usize,
     /// Sweep-cache spill directory; `None` keeps the cache memory-only.
     pub cache_dir: Option<PathBuf>,
+    /// Worker threads in the shared trial executor all jobs' `(cell,
+    /// trial)` tasks run on (0 = machine parallelism).
+    pub executor_workers: usize,
+    /// Weighted fair interleaving across concurrent jobs (default). Off =
+    /// strict job-arrival FIFO, the old single-leader discipline, kept for
+    /// A/B comparisons.
+    pub fair_share: bool,
 }
 
 impl Default for ServiceConfig {
@@ -45,6 +52,8 @@ impl Default for ServiceConfig {
             port: 8080,
             queue_cap: 64,
             cache_dir: Some(PathBuf::from("results/sweep_cache")),
+            executor_workers: 0,
+            fair_share: true,
         }
     }
 }
@@ -190,6 +199,16 @@ impl Config {
                     anyhow::anyhow!("service.queue_cap must be a non-negative integer")
                 })?;
             }
+            if let Some(v) = s.get("executor_workers") {
+                self.service.executor_workers = v.as_usize().ok_or_else(|| {
+                    anyhow::anyhow!("service.executor_workers must be a non-negative integer")
+                })?;
+            }
+            if let Some(v) = s.get("fair_share") {
+                self.service.fair_share = v.as_bool().ok_or_else(|| {
+                    anyhow::anyhow!("service.fair_share must be a boolean")
+                })?;
+            }
             match s.get("cache_dir") {
                 None => {}
                 Some(Json::Null) => self.service.cache_dir = None,
@@ -240,6 +259,15 @@ impl Config {
         }
         self.service.port = port_u16(args.get_usize("port", self.service.port as usize)?)?;
         self.service.queue_cap = args.get_usize("queue-cap", self.service.queue_cap)?;
+        self.service.executor_workers =
+            args.get_usize("executor-workers", self.service.executor_workers)?;
+        if let Some(v) = args.get("fair-share") {
+            self.service.fair_share = match v {
+                "true" | "yes" | "on" => true,
+                "false" | "no" | "off" => false,
+                _ => anyhow::bail!("--fair-share expects true|false, got '{v}'"),
+            };
+        }
         if let Some(v) = args.get("cache-dir") {
             self.service.cache_dir = if v == "none" || v.is_empty() {
                 None
@@ -332,6 +360,11 @@ impl Config {
                             None => Json::Null,
                         },
                     ),
+                    (
+                        "executor_workers",
+                        Json::Num(self.service.executor_workers as f64),
+                    ),
+                    ("fair_share", Json::Bool(self.service.fair_share)),
                 ]),
             ),
         ])
@@ -480,6 +513,42 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("max_trials"), "{err}");
+    }
+
+    #[test]
+    fn scheduler_knobs_from_flags_file_and_roundtrip() {
+        let mut cfg = Config::default();
+        assert_eq!(cfg.service.executor_workers, 0);
+        assert!(cfg.service.fair_share);
+        cfg.apply_args(&args(
+            "serve --executor-workers 6 --fair-share false --backend native",
+        ))
+        .unwrap();
+        assert_eq!(cfg.service.executor_workers, 6);
+        assert!(!cfg.service.fair_share);
+
+        // file roundtrip keeps both scheduler knobs
+        let path = std::env::temp_dir().join("cs_config_sched.json");
+        std::fs::write(&path, cfg.to_json().to_pretty()).unwrap();
+        let cfg2 = Config::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg2.service.executor_workers, 6);
+        assert!(!cfg2.service.fair_share);
+
+        // malformed knobs are errors, not silent defaults
+        let mut bad = Config::default();
+        assert!(bad.apply_args(&args("serve --fair-share maybe")).is_err());
+        std::fs::write(
+            &path,
+            r#"{"backend": "native", "service": {"fair_share": "yes"}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_file(path.to_str().unwrap()).is_err());
+        std::fs::write(
+            &path,
+            r#"{"backend": "native", "service": {"executor_workers": -2}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_file(path.to_str().unwrap()).is_err());
     }
 
     #[test]

@@ -1,35 +1,56 @@
-//! Scoping-job queue: the leader/worker service front of the coordinator.
+//! Scoping-job front of the coordinator: fair multi-tenant scheduling.
 //!
-//! Customers (or the CLI) submit [`ScopeJob`]s; a leader thread drains the
-//! queue in FIFO order and runs each sweep (each sweep fans its trials out
-//! over the shared thread pool). Results are retrievable by job id, so a
-//! long-running service can scope many customer use cases concurrently
-//! with bounded resources — the "autonomous" part of the paper's title.
+//! Customers (or the CLI) submit [`ScopeJob`]s; each job is driven by a
+//! lightweight coordinator thread that streams its `(cell, trial)` tasks
+//! into the **shared [`TrialExecutor`]**, where they interleave fairly
+//! with every other job's tasks. The old single-leader FIFO — one job at a
+//! time, a 1000-cell sweep head-of-line-blocking every 10-cell request —
+//! is gone: a small job submitted behind a giant one finishes as soon as
+//! its own trials do.
+//!
+//! Per job the service tracks live [`SweepProgress`] (updated atomically
+//! from executor worker threads) and a cooperative [`CancelToken`]:
+//! cancelling reclaims the job's queued trial tasks within one scheduling
+//! quantum, lets in-flight trials finish (they are still written to the
+//! cell store), and reports the job as [`JobStatus::Cancelled`].
 
-use super::sweep::{run_sweep_cached, Backend, CellStore, SweepResult, SweepSpec};
+use super::sweep::{
+    run_sweep_executor, Backend, Cancelled, CellStore, ProgressSnapshot, SweepProgress,
+    SweepResult, SweepSpec,
+};
+use crate::util::threadpool::{CancelToken, TrialExecutor};
 use std::collections::HashMap;
-use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 
 /// Job identifier.
 pub type JobId = u64;
 
-/// Completed (done/failed) jobs retained for status queries. Oldest
-/// completed results are evicted beyond this, so a long-running service
-/// does not grow without bound; in-flight jobs are never evicted.
+/// Completed (done/failed/cancelled) jobs retained for status queries.
+/// Oldest completed results are evicted beyond this, so a long-running
+/// service does not grow without bound; in-flight jobs are never evicted.
 pub const COMPLETED_RETAIN: usize = 256;
 
 /// Job status as observed by clients.
 #[derive(Clone, Debug)]
 pub enum JobStatus {
-    /// Accepted, waiting for the leader thread.
+    /// Accepted; its driver has not started streaming trials yet.
     Queued,
-    /// Sweep in progress.
+    /// Sweep in progress (poll [`ScopingService::progress`] for detail).
     Running,
     /// Sweep finished; the result is shared until evicted.
     Done(Arc<SweepResult>),
+    /// Cancelled via [`ScopingService::cancel`]; trials measured before
+    /// the cancellation are in the cell store.
+    Cancelled,
     /// Sweep failed with this error message.
     Failed(String),
+}
+
+impl JobStatus {
+    /// Whether the job still occupies a queue slot (backpressure gauge).
+    fn in_flight(&self) -> bool {
+        matches!(self, JobStatus::Queued | JobStatus::Running)
+    }
 }
 
 /// One submitted scoping request.
@@ -42,28 +63,37 @@ pub struct ScopeJob {
     pub spec: SweepSpec,
 }
 
+struct JobEntry {
+    status: JobStatus,
+    progress: Arc<SweepProgress>,
+    cancel: CancelToken,
+}
+
 struct Shared {
-    statuses: Mutex<HashMap<JobId, JobStatus>>,
+    jobs: Mutex<HashMap<JobId, JobEntry>>,
     done: Condvar,
 }
 
-/// The scoping service (leader thread + job registry).
-///
-/// The sender sits behind a `Mutex` so the service is `Sync` and can be
-/// shared across the HTTP connection-handler threads.
+/// The scoping service: a shared trial executor plus the job registry.
+/// Jobs run concurrently; their `(cell, trial)` tasks interleave on the
+/// executor under weighted fair queueing.
 pub struct ScopingService {
-    tx: Mutex<Option<mpsc::Sender<ScopeJob>>>,
+    exec: Arc<TrialExecutor>,
     shared: Arc<Shared>,
+    backend: Backend,
+    cache: Option<Arc<dyn CellStore>>,
     next_id: Mutex<JobId>,
-    leader: Option<std::thread::JoinHandle<()>>,
+    drivers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     /// Max queued+running jobs before submits are rejected (backpressure).
     queue_cap: usize,
 }
 
 impl ScopingService {
     /// Start a service over the given execution backend. `queue_cap`
-    /// bounds the number of queued jobs (backpressure: submits fail fast
-    /// beyond it rather than accumulating unbounded work).
+    /// bounds the number of concurrent jobs (backpressure: submits fail
+    /// fast beyond it rather than accumulating unbounded work). The
+    /// executor is sized to the machine with fair interleaving on; use
+    /// [`ScopingService::start_with_scheduler`] to tune either.
     pub fn start(backend: Backend, queue_cap: usize) -> ScopingService {
         Self::start_with_cache(backend, queue_cap, None)
     }
@@ -76,71 +106,61 @@ impl ScopingService {
         queue_cap: usize,
         cache: Option<Arc<dyn CellStore>>,
     ) -> ScopingService {
-        let (tx, rx) = mpsc::channel::<ScopeJob>();
-        let shared = Arc::new(Shared {
-            statuses: Mutex::new(HashMap::new()),
-            done: Condvar::new(),
-        });
-        let shared2 = Arc::clone(&shared);
-        let leader = std::thread::Builder::new()
-            .name("scoping-leader".into())
-            .spawn(move || {
-                while let Ok(job) = rx.recv() {
-                    {
-                        let mut st = shared2.statuses.lock().unwrap();
-                        st.insert(job.id, JobStatus::Running);
-                    }
-                    let result =
-                        run_sweep_cached(&job.spec, backend.clone(), cache.as_deref());
-                    let status = match result {
-                        Ok(r) => JobStatus::Done(Arc::new(r)),
-                        Err(e) => JobStatus::Failed(e.to_string()),
-                    };
-                    let mut st = shared2.statuses.lock().unwrap();
-                    st.insert(job.id, status);
-                    // Evict the oldest completed entries beyond the
-                    // retention bound (ids are monotonic → oldest = min).
-                    let mut completed: Vec<JobId> = st
-                        .iter()
-                        .filter(|(_, s)| {
-                            matches!(s, JobStatus::Done(_) | JobStatus::Failed(_))
-                        })
-                        .map(|(&id, _)| id)
-                        .collect();
-                    if completed.len() > COMPLETED_RETAIN {
-                        completed.sort_unstable();
-                        for id in &completed[..completed.len() - COMPLETED_RETAIN] {
-                            st.remove(id);
-                        }
-                    }
-                    shared2.done.notify_all();
-                }
-            })
-            .expect("spawn leader");
+        Self::start_with_scheduler(backend, queue_cap, cache, 0, true)
+    }
+
+    /// Fully configured start: `executor_workers` sizes the shared trial
+    /// executor (0 = machine parallelism) and `fair_share` selects
+    /// weighted fair interleaving across jobs (`false` = strict
+    /// job-arrival FIFO, the old leader discipline).
+    pub fn start_with_scheduler(
+        backend: Backend,
+        queue_cap: usize,
+        cache: Option<Arc<dyn CellStore>>,
+        executor_workers: usize,
+        fair_share: bool,
+    ) -> ScopingService {
+        let workers = if executor_workers == 0 {
+            crate::util::threadpool::default_workers()
+        } else {
+            executor_workers
+        };
         ScopingService {
-            tx: Mutex::new(Some(tx)),
-            shared,
+            exec: Arc::new(TrialExecutor::new(workers, fair_share)),
+            shared: Arc::new(Shared {
+                jobs: Mutex::new(HashMap::new()),
+                done: Condvar::new(),
+            }),
+            backend,
+            cache,
             next_id: Mutex::new(1),
-            leader: Some(leader),
+            drivers: Mutex::new(Vec::new()),
             queue_cap: queue_cap.max(1),
         }
     }
 
-    /// Submit a sweep; returns its job id, or an error when the queue is
-    /// saturated (backpressure).
+    /// Submit a sweep with an equal fair share; returns its job id, or an
+    /// error when the service is saturated (backpressure).
     pub fn submit(&self, spec: SweepSpec) -> anyhow::Result<JobId> {
-        // Count + insert under one statuses lock, so concurrent submitters
+        self.submit_weighted(spec, 1.0)
+    }
+
+    /// [`ScopingService::submit`] with an explicit fair-share `weight`
+    /// (clamped to `[1/16, 16]` by the executor): while jobs contend, a
+    /// weight-2 job's trials are dispatched twice as often as a weight-1
+    /// job's.
+    pub fn submit_weighted(&self, spec: SweepSpec, weight: f64) -> anyhow::Result<JobId> {
+        // Count + insert under one jobs lock, so concurrent submitters
         // cannot jointly overshoot the cap (check-then-act would race).
+        let ticket = self.exec.register(weight);
+        let progress = Arc::new(SweepProgress::default());
         let id = {
-            let mut st = self.shared.statuses.lock().unwrap();
-            let queued = st
-                .values()
-                .filter(|s| matches!(s, JobStatus::Queued | JobStatus::Running))
-                .count();
+            let mut jobs = self.shared.jobs.lock().unwrap();
+            let in_flight = jobs.values().filter(|e| e.status.in_flight()).count();
             let cap = self.queue_cap;
             anyhow::ensure!(
-                queued < cap,
-                "scoping queue saturated ({queued}/{cap}); retry later"
+                in_flight < cap,
+                "scoping queue saturated ({in_flight}/{cap}); retry later"
             );
             let id = {
                 let mut n = self.next_id.lock().unwrap();
@@ -148,34 +168,105 @@ impl ScopingService {
                 *n += 1;
                 id
             };
-            st.insert(id, JobStatus::Queued);
+            jobs.insert(
+                id,
+                JobEntry {
+                    status: JobStatus::Queued,
+                    progress: Arc::clone(&progress),
+                    cancel: ticket.cancel_token(),
+                },
+            );
             id
         };
-        let sent = self
-            .tx
-            .lock()
-            .unwrap()
-            .as_ref()
-            .expect("service stopped")
-            .send(ScopeJob { id, spec });
-        if sent.is_err() {
-            // Roll the reservation back, or the dead leader's ghost jobs
-            // would pin in_flight() at the cap forever.
-            self.shared.statuses.lock().unwrap().remove(&id);
-            anyhow::bail!("leader thread gone");
+        let shared = Arc::clone(&self.shared);
+        let backend = self.backend.clone();
+        let cache = self.cache.clone();
+        let driver = std::thread::Builder::new()
+            .name(format!("scope-job-{id}"))
+            .spawn(move || {
+                {
+                    let mut jobs = shared.jobs.lock().unwrap();
+                    if let Some(e) = jobs.get_mut(&id) {
+                        e.status = JobStatus::Running;
+                    }
+                }
+                let result =
+                    run_sweep_executor(&spec, backend, cache.as_deref(), &ticket, &progress);
+                let status = match result {
+                    Ok(r) => JobStatus::Done(Arc::new(r)),
+                    Err(e) if e.is::<Cancelled>() => JobStatus::Cancelled,
+                    Err(e) => JobStatus::Failed(e.to_string()),
+                };
+                let mut jobs = shared.jobs.lock().unwrap();
+                if let Some(e) = jobs.get_mut(&id) {
+                    e.status = status;
+                }
+                // Evict the oldest completed entries beyond the retention
+                // bound (ids are monotonic → oldest = min).
+                let mut completed: Vec<JobId> = jobs
+                    .iter()
+                    .filter(|(_, e)| !e.status.in_flight())
+                    .map(|(&id, _)| id)
+                    .collect();
+                if completed.len() > COMPLETED_RETAIN {
+                    completed.sort_unstable();
+                    for id in &completed[..completed.len() - COMPLETED_RETAIN] {
+                        jobs.remove(id);
+                    }
+                }
+                drop(jobs);
+                shared.done.notify_all();
+            });
+        match driver {
+            Ok(handle) => {
+                let mut drivers = self.drivers.lock().unwrap();
+                // Reap drivers of completed jobs so a long-running service
+                // does not accumulate joinable handles without bound.
+                let mut i = 0;
+                while i < drivers.len() {
+                    if drivers[i].is_finished() {
+                        let _ = drivers.swap_remove(i).join();
+                    } else {
+                        i += 1;
+                    }
+                }
+                drivers.push(handle);
+                Ok(id)
+            }
+            Err(e) => {
+                // Roll the reservation back, or the ghost job would pin
+                // in_flight() at the cap forever.
+                self.shared.jobs.lock().unwrap().remove(&id);
+                Err(anyhow::anyhow!("spawn job driver: {e}"))
+            }
         }
-        Ok(id)
+    }
+
+    /// Request cancellation of a queued/running job. Queued trial tasks
+    /// are reclaimed within one scheduling quantum; in-flight trials
+    /// finish (and land in the cell store) before the status flips to
+    /// [`JobStatus::Cancelled`]. Returns the status observed at the time
+    /// of the request, or `None` for unknown ids. Cancelling an already
+    /// completed job is a no-op.
+    pub fn cancel(&self, id: JobId) -> Option<JobStatus> {
+        let jobs = self.shared.jobs.lock().unwrap();
+        jobs.get(&id).map(|e| {
+            if e.status.in_flight() {
+                e.cancel.cancel();
+            }
+            e.status.clone()
+        })
     }
 
     /// Number of jobs currently queued or running (the backpressure gauge
     /// reported by the service's `/healthz`).
     pub fn in_flight(&self) -> usize {
         self.shared
-            .statuses
+            .jobs
             .lock()
             .unwrap()
             .values()
-            .filter(|s| matches!(s, JobStatus::Queued | JobStatus::Running))
+            .filter(|e| e.status.in_flight())
             .count()
     }
 
@@ -184,41 +275,70 @@ impl ScopingService {
         self.queue_cap
     }
 
-    /// Non-blocking status check.
-    pub fn status(&self, id: JobId) -> Option<JobStatus> {
-        self.shared.statuses.lock().unwrap().get(&id).cloned()
+    /// Worker threads in the shared trial executor.
+    pub fn executor_workers(&self) -> usize {
+        self.exec.workers()
     }
 
-    /// Block until a job completes (or fails).
+    /// Whether fair interleaving across jobs is enabled.
+    pub fn fair_share(&self) -> bool {
+        self.exec.fair()
+    }
+
+    /// Non-blocking status check.
+    pub fn status(&self, id: JobId) -> Option<JobStatus> {
+        self.shared
+            .jobs
+            .lock()
+            .unwrap()
+            .get(&id)
+            .map(|e| e.status.clone())
+    }
+
+    /// Live progress snapshot of a job (available from submission until
+    /// eviction; final values remain visible after completion).
+    pub fn progress(&self, id: JobId) -> Option<ProgressSnapshot> {
+        self.shared
+            .jobs
+            .lock()
+            .unwrap()
+            .get(&id)
+            .map(|e| e.progress.snapshot())
+    }
+
+    /// Block until a job completes; errors for failed, cancelled, or
+    /// unknown jobs.
     pub fn wait(&self, id: JobId) -> anyhow::Result<Arc<SweepResult>> {
-        let mut st = self.shared.statuses.lock().unwrap();
+        let mut jobs = self.shared.jobs.lock().unwrap();
         loop {
-            match st.get(&id) {
+            match jobs.get(&id).map(|e| &e.status) {
                 None => anyhow::bail!("unknown job {id}"),
                 Some(JobStatus::Done(r)) => return Ok(Arc::clone(r)),
+                Some(JobStatus::Cancelled) => anyhow::bail!("job {id} cancelled"),
                 Some(JobStatus::Failed(e)) => anyhow::bail!("job {id} failed: {e}"),
                 Some(_) => {
-                    st = self.shared.done.wait(st).unwrap();
+                    jobs = self.shared.done.wait(jobs).unwrap();
                 }
             }
         }
     }
 
-    /// Graceful shutdown: stop accepting, finish queued work.
+    /// Graceful shutdown: stop accepting, finish in-flight work.
     pub fn shutdown(mut self) {
-        self.tx.lock().unwrap().take();
-        if let Some(l) = self.leader.take() {
-            let _ = l.join();
+        self.join_drivers();
+    }
+
+    fn join_drivers(&mut self) {
+        let handles: Vec<_> = self.drivers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
         }
     }
 }
 
 impl Drop for ScopingService {
     fn drop(&mut self) {
-        self.tx.lock().unwrap().take();
-        if let Some(l) = self.leader.take() {
-            let _ = l.join();
-        }
+        self.join_drivers();
     }
 }
 
@@ -239,6 +359,16 @@ mod tests {
         }
     }
 
+    /// A sweep heavy enough to still be in flight milliseconds after
+    /// submission (native-backend cost scales with `obs`).
+    fn slow_spec() -> SweepSpec {
+        SweepSpec {
+            obs: vec![4096],
+            trials: 3,
+            ..tiny_spec()
+        }
+    }
+
     #[test]
     fn submit_and_wait_roundtrip() {
         let svc = ScopingService::start(Backend::Native, 8);
@@ -249,7 +379,7 @@ mod tests {
     }
 
     #[test]
-    fn jobs_processed_in_order_with_distinct_ids() {
+    fn concurrent_jobs_get_distinct_ids_and_complete() {
         let svc = ScopingService::start(Backend::Native, 8);
         let a = svc.submit(tiny_spec()).unwrap();
         let b = svc.submit(tiny_spec()).unwrap();
@@ -264,20 +394,15 @@ mod tests {
         let svc = ScopingService::start(Backend::Native, 8);
         assert!(svc.wait(999).is_err());
         assert!(svc.status(999).is_none());
+        assert!(svc.progress(999).is_none());
+        assert!(svc.cancel(999).is_none());
     }
 
     #[test]
     fn backpressure_rejects_when_saturated() {
         let svc = ScopingService::start(Backend::Native, 1);
-        // A job heavy enough to still be in flight when the next submit
-        // arrives microseconds later.
-        let slow = SweepSpec {
-            obs: vec![4096],
-            trials: 3,
-            ..tiny_spec()
-        };
-        let id = svc.submit(slow.clone()).unwrap();
-        let err = svc.submit(slow).unwrap_err().to_string();
+        let id = svc.submit(slow_spec()).unwrap();
+        let err = svc.submit(slow_spec()).unwrap_err().to_string();
         assert!(err.contains("saturated"), "{err}");
         svc.wait(id).unwrap();
         // capacity frees once the job completes
@@ -329,6 +454,66 @@ mod tests {
         let id = svc.submit(bad).unwrap();
         let err = svc.wait(id).unwrap_err().to_string();
         assert!(err.contains("failed"), "{err}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn cancelled_job_reports_cancelled_not_failed() {
+        let svc = ScopingService::start(Backend::Native, 4);
+        let id = svc.submit(slow_spec()).unwrap();
+        let seen = svc.cancel(id).expect("job known");
+        assert!(seen.in_flight(), "cancel must observe a live job");
+        let err = svc.wait(id).unwrap_err().to_string();
+        assert!(err.contains("cancelled"), "{err}");
+        assert!(matches!(svc.status(id), Some(JobStatus::Cancelled)));
+        // cancelling a completed job is a no-op
+        assert!(matches!(svc.cancel(id), Some(JobStatus::Cancelled)));
+        assert_eq!(svc.in_flight(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn small_job_overtakes_large_one() {
+        // Single-worker executor makes the old head-of-line blocking
+        // deterministic: under the leader FIFO the small job could never
+        // finish first; under fair interleaving it must.
+        let svc =
+            ScopingService::start_with_scheduler(Backend::Native, 8, None, 1, true);
+        let large = svc
+            .submit(SweepSpec {
+                memvecs: vec![8, 16],
+                ..slow_spec()
+            })
+            .unwrap();
+        let small = svc.submit(tiny_spec()).unwrap();
+        svc.wait(small).unwrap();
+        assert!(
+            matches!(svc.status(large), Some(JobStatus::Queued | JobStatus::Running)),
+            "small job must complete while the large sweep is still running"
+        );
+        svc.wait(large).unwrap();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn progress_is_live_and_monotone() {
+        let svc = ScopingService::start(Backend::Native, 4);
+        let id = svc.submit(slow_spec()).unwrap();
+        let mut last = 0usize;
+        loop {
+            let p = svc.progress(id).expect("progress available");
+            assert!(p.trials_done >= last, "progress went backwards");
+            assert!(p.trials_done <= p.trials_planned.max(3));
+            last = p.trials_done;
+            if matches!(svc.status(id), Some(JobStatus::Done(_))) {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let p = svc.progress(id).unwrap();
+        assert_eq!(p.trials_done, 3, "3 trials over 1 cell");
+        assert_eq!(p.cells_done, p.cells_total);
+        svc.wait(id).unwrap();
         svc.shutdown();
     }
 }

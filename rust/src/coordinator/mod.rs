@@ -7,15 +7,19 @@
 //! aggregated into compute-cost summaries that the [`crate::surface`]
 //! layer turns into the paper's 3-D response surfaces.
 //!
-//! - [`sweep`]   — grid construction, trial execution, aggregation;
-//! - [`planner`] — adaptive trial allocation + surface-model cell pruning;
-//! - [`jobs`]    — the scoping-job queue (leader/worker service front).
+//! - [`sweep`]   — grid construction, streaming trial execution,
+//!   per-cell retirement and aggregation;
+//! - [`planner`] — adaptive trial allocation (CI-width priority heap) +
+//!   surface-model cell pruning;
+//! - [`jobs`]    — the multi-job service front over the shared
+//!   [`crate::util::threadpool::TrialExecutor`] (fair scheduling, live
+//!   progress, cancellation).
 
 pub mod jobs;
 pub mod planner;
 pub mod sweep;
 
 pub use sweep::{
-    run_sweep, run_sweep_cached, Backend, CellCosts, CellKey, CellMeasure, CellStore,
-    SweepResult, SweepSpec,
+    run_sweep, run_sweep_cached, run_sweep_executor, Backend, Cancelled, CellCosts, CellKey,
+    CellMeasure, CellStore, ProgressSnapshot, SweepProgress, SweepResult, SweepSpec,
 };

@@ -1,42 +1,51 @@
 //! Adaptive sweep planner — variance-targeted trial allocation with
-//! surface-model cell pruning.
+//! surface-model cell pruning, streamed over the shared trial executor.
 //!
 //! The paper's nested-loop sweep spends a fixed `trials` budget on every
 //! grid cell, even where the cost surface is already smooth and
-//! low-variance. The planner instead runs the sweep in rounds:
+//! low-variance. The planner instead converges each cell independently:
 //!
 //! 1. **Pilot** — every measurable cell is brought up to
 //!    [`SweepSpec::pilot_trials`] cheap trials. Measurements preloaded from
 //!    the cell cache count toward this for free, so a warm service skips
 //!    straight to convergence checks.
 //! 2. **Prune** — when [`SweepSpec::interpolate`] is set, both cost
-//!    surfaces (train / surveil) are fitted to the pilot medians. A cell
-//!    whose pilot median already agrees with the model's prediction to
-//!    within the CI target sits well inside the converged region: it is
-//!    marked *interpolated* and receives no further trials. Pruning only
-//!    engages when both fits are trustworthy (r² ≥ [`PRUNE_MIN_R2`]).
-//!    (In a cache-warm run a pruned cell keeps however many preloaded
-//!    trials it arrived with — possibly more than the pilot budget.)
-//! 3. **Allocate** — remaining trials go to the cells with the widest
-//!    relative confidence intervals, in rounds, until every cell meets
-//!    [`SweepSpec::ci_target`] or hits [`SweepSpec::effective_max_trials`].
+//!    surfaces (train / surveil) are fitted once the whole grid has pilot
+//!    data. A cell whose pilot median already agrees with the model's
+//!    prediction to within the CI target sits well inside the converged
+//!    region: it is marked *interpolated* and receives no further trials.
+//!    Pruning only engages when both fits are trustworthy
+//!    (r² ≥ [`PRUNE_MIN_R2`]). (In a cache-warm run a pruned cell keeps
+//!    however many preloaded trials it arrived with — possibly more than
+//!    the pilot budget.)
+//! 3. **Allocate** — remaining trials are topped up from a **priority heap
+//!    ordered by current relative CI width** (widest first). There is no
+//!    round barrier: the moment a cell's own results land it either
+//!    retires (CI target met, or the per-cell cap
+//!    [`SweepSpec::effective_max_trials`] reached) or re-enters the heap —
+//!    a straggler cell never delays its neighbours' retirement or cache
+//!    write-back.
 //!
 //! Trial seeds stay content-derived per `(cell, trial index)` — see
 //! [`super::sweep`] — so trial `t` of a cell is fed identical synthetic
-//! telemetry no matter how many rounds, worker threads, or cache top-ups
-//! got the planner there. Adaptive and exhaustive sweeps are therefore
-//! fully cache-compatible: an adaptive run can finish on an exhaustive
-//! run's stored cells and vice versa.
+//! telemetry no matter how the executor interleaves, how many jobs share
+//! it, or which cache top-ups got the planner there. Adaptive and
+//! exhaustive sweeps are therefore fully cache-compatible: an adaptive run
+//! can finish on an exhaustive run's stored cells and vice versa.
 
 use super::sweep::{
-    grid_keys, run_trial, trial_seed, Backend, CellCosts, CellKey, CellMeasure, CellStore,
-    SweepResult, SweepSpec,
+    gap_measure, grid_keys, submit_trial, Backend, Cancelled, CellCosts, CellKey, CellMeasure,
+    CellStore, SweepProgress, SweepResult, SweepSpec, TrialCost,
 };
 use crate::metrics::Registry;
 use crate::surface::{ResponseSurface, Sample};
-use crate::util::threadpool::parallel_map;
+use crate::util::threadpool::{CancelToken, JobTicket};
 use crate::util::Summary;
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 /// Two-sided normal multiplier for the ~95% confidence interval behind the
 /// planner's convergence test.
@@ -84,6 +93,31 @@ fn needed_trials(xs: &[f64], target: f64) -> usize {
     (need.ceil() as usize).max(n)
 }
 
+/// The heap priority of an unconverged cell: the wider of its two phases'
+/// relative CI widths (the planner serves the widest first).
+fn ci_width(costs: &CellCosts) -> f64 {
+    rel_ci(&costs.train_s).max(rel_ci(&costs.surveil_s))
+}
+
+/// Max-heap key over CI widths. `f64::total_cmp` gives a total order
+/// (`INFINITY` — an unvisited phase — sorts widest, as it must).
+#[derive(PartialEq)]
+struct Width(f64);
+
+impl Eq for Width {}
+
+impl PartialOrd for Width {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Width {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
 /// Mutable planner state for one measurable (non-gap) cell.
 struct CellState {
     key: CellKey,
@@ -92,40 +126,118 @@ struct CellState {
     /// planner adds nothing beyond them).
     cached_trials: usize,
     interpolated: bool,
+    /// Final decision made (summary frozen, cache written).
+    retired: bool,
+    /// Trial indices scheduled so far (appended + buffered + in flight).
+    scheduled: usize,
+    /// Results that arrived ahead of a missing earlier trial index; they
+    /// append the moment the gap fills, keeping `costs` in trial order.
+    buffer: HashMap<usize, TrialCost>,
+    /// Scheduled trials whose results have not arrived yet.
+    in_flight: usize,
 }
 
 impl CellState {
     fn trials(&self) -> usize {
         self.costs.train_s.len()
     }
+
+    /// Record the result of trial `t`, then append every contiguously
+    /// available buffered trial so `costs` stays in trial-index order.
+    fn absorb(&mut self, t: usize, c: TrialCost) {
+        self.buffer.insert(t, c);
+        while let Some(c) = self.buffer.remove(&self.costs.train_s.len()) {
+            self.costs.train_s.push(c.train_s);
+            self.costs.surveil_s.push(c.surveil_s);
+        }
+    }
 }
 
-/// Execute one round of trials and append the costs in trial-index order.
-/// `work` items are `(state index, cell, seed)`.
-fn execute_round(
-    workers: usize,
+/// Freeze a cell: write it back to the store (if it gained trials beyond
+/// the cached prefix) and bump the progress gauges.
+fn retire(
+    s: &mut CellState,
+    spec: &SweepSpec,
     backend: &Backend,
-    model: &str,
+    cache: Option<&dyn CellStore>,
+    progress: &Arc<SweepProgress>,
+) {
+    debug_assert!(!s.retired, "cell retired twice");
+    s.retired = true;
+    if s.trials() > s.cached_trials {
+        if let Some(c) = cache {
+            c.store(s.key, spec, backend.tag(), s.costs.clone());
+        }
+    }
+    if s.interpolated {
+        progress.cells_interpolated.fetch_add(1, Ordering::SeqCst);
+    }
+    progress.cells_done.fetch_add(1, Ordering::SeqCst);
+}
+
+/// Submit trials `scheduled..goal` of cell `i` to the executor; returns
+/// how many were queued. `trials_planned` is bumped *before* the first
+/// task is queued so a fast worker's `trials_done` increment can never be
+/// observed ahead of it (the progress counters promise
+/// `trials_done ≤ trials_planned`).
+#[allow(clippy::too_many_arguments)]
+fn dispatch_trials(
+    s: &mut CellState,
+    i: usize,
+    goal: usize,
+    spec: &SweepSpec,
+    backend: &Backend,
+    ticket: &JobTicket,
+    tx: &mpsc::Sender<(usize, usize, anyhow::Result<TrialCost>)>,
+    progress: &Arc<SweepProgress>,
+    cancel: &CancelToken,
+) -> usize {
+    let n = goal.saturating_sub(s.scheduled);
+    progress.trials_planned.fetch_add(n, Ordering::SeqCst);
+    for t in s.scheduled..goal {
+        submit_trial(ticket, spec, backend, s.key, i, t, tx, progress, cancel);
+    }
+    s.in_flight += n;
+    s.scheduled = s.scheduled.max(goal);
+    n
+}
+
+/// A cell's trials have all landed — decide its fate: retire it, queue it
+/// on the CI-width heap for a top-up, or (before the prune pass has run)
+/// park it so the surface model gets first refusal.
+#[allow(clippy::too_many_arguments)]
+fn on_ready(
     states: &mut [CellState],
-    work: &[(usize, CellKey, u64)],
-) -> anyhow::Result<()> {
-    if work.is_empty() {
-        return Ok(());
+    i: usize,
+    spec: &SweepSpec,
+    target: f64,
+    max: usize,
+    prune_done: bool,
+    heap: &mut BinaryHeap<(Width, Reverse<usize>)>,
+    parked: &mut Vec<usize>,
+    backend: &Backend,
+    cache: Option<&dyn CellStore>,
+    progress: &Arc<SweepProgress>,
+) {
+    let s = &mut states[i];
+    if s.retired {
+        return;
     }
-    let results = parallel_map(workers, work, |_, &(_, key, seed)| {
-        let r = run_trial(backend, model, key, seed);
-        Registry::global().inc("sweep.trials");
-        r
-    });
-    // `parallel_map` returns results in input order and `work` lists each
-    // cell's trials in ascending index order, so pushing in order keeps
-    // every cost vector aligned with its trial-seed sequence.
-    for (&(i, key, _), r) in work.iter().zip(results.into_iter()) {
-        let c = r.map_err(|e| anyhow::anyhow!("cell {key:?}: {e}"))?;
-        states[i].costs.train_s.push(c.train_s);
-        states[i].costs.surveil_s.push(c.surveil_s);
+    if converged(&s.costs, target) {
+        retire(s, spec, backend, cache, progress);
+        return;
     }
-    Ok(())
+    if !prune_done {
+        // Held until the whole grid has pilot data: the surface fit may
+        // accept this cell without spending another trial on it.
+        parked.push(i);
+        return;
+    }
+    if s.trials() >= max {
+        retire(s, spec, backend, cache, progress);
+        return;
+    }
+    heap.push((Width(ci_width(&s.costs)), Reverse(i)));
 }
 
 /// Fit both cost surfaces to the current medians and mark unconverged
@@ -164,7 +276,7 @@ fn prune_by_surface(states: &mut [CellState], ci_target: f64) -> usize {
     }
     let mut pruned = 0usize;
     for (i, s) in states.iter_mut().enumerate() {
-        if s.interpolated || converged(&s.costs, ci_target) {
+        if s.retired || s.interpolated || converged(&s.costs, ci_target) {
             continue;
         }
         // `train`/`surveil` were built in `states` order — reuse their
@@ -186,24 +298,29 @@ fn prune_by_surface(states: &mut [CellState], ci_target: f64) -> usize {
 }
 
 /// Run the sweep under the adaptive planner (entered from
-/// [`super::sweep::run_sweep_cached`] when [`SweepSpec::adaptive`] is set;
-/// the spec is already validated).
+/// [`super::sweep::run_sweep_executor`] when [`SweepSpec::adaptive`] is
+/// set; the spec is already validated).
 pub(crate) fn run_adaptive(
     spec: &SweepSpec,
     backend: Backend,
     cache: Option<&dyn CellStore>,
+    ticket: &JobTicket,
+    progress: &Arc<SweepProgress>,
 ) -> anyhow::Result<SweepResult> {
     let pilot = spec.pilot_trials;
     let max = spec.effective_max_trials();
     let target = spec.ci_target;
-    let workers = spec.effective_workers();
     let keys = grid_keys(spec);
+    let cancel = ticket.cancel_token();
+    progress.cells_total.store(keys.len(), Ordering::SeqCst);
 
     // Preload cell state from the cache; whatever is stored counts toward
     // pilot coverage and convergence for free.
     let mut states: Vec<CellState> = Vec::new();
+    let mut gaps = 0usize;
     for &key in &keys {
         if spec.is_gap(key) {
+            gaps += 1;
             continue;
         }
         let mut costs = CellCosts::default();
@@ -222,78 +339,211 @@ pub(crate) fn run_adaptive(
             costs,
             cached_trials,
             interpolated: false,
+            retired: false,
+            scheduled: cached_trials,
+            buffer: HashMap::new(),
+            in_flight: 0,
         });
     }
+    progress.cells_done.fetch_add(gaps, Ordering::SeqCst);
 
-    // Round 1: pilot — bring every cell up to `pilot` trials.
-    let mut work: Vec<(usize, CellKey, u64)> = Vec::new();
-    for (i, s) in states.iter().enumerate() {
-        for t in s.trials()..pilot {
-            work.push((i, s.key, trial_seed(spec, s.key, t)));
+    // Scheduling state. `prune_done` starts true when pruning is disabled
+    // so nothing is ever parked; the dispatch window bounds speculative
+    // top-ups so fresh results keep steering the heap.
+    let (tx, rx) = mpsc::channel::<(usize, usize, anyhow::Result<TrialCost>)>();
+    let mut heap: BinaryHeap<(Width, Reverse<usize>)> = BinaryHeap::new();
+    let mut parked: Vec<usize> = Vec::new();
+    let mut prune_done = !spec.interpolate;
+    let window = ticket.executor_workers().saturating_mul(2).max(4);
+    let mut outstanding = 0usize;
+    let mut pilot_gap = 0usize;
+    let mut first_err: Option<anyhow::Error> = None;
+    let mut dispatches = 0usize;
+    let mut starved_rounds = 0usize;
+
+    // Pilot: bring every cell up to `pilot` trials (cache counts for free).
+    for (i, s) in states.iter_mut().enumerate() {
+        if s.trials() < pilot {
+            pilot_gap += 1;
+            outstanding +=
+                dispatch_trials(s, i, pilot, spec, &backend, ticket, &tx, progress, &cancel);
         }
     }
     log::info!(
-        "planner pilot: {} cells × ≤{pilot} trials ({} scheduled, {} from cache), \
-         ci_target={target}, max_trials={max}, model={}, backend={}, workers={workers}",
+        "planner pilot: {} cells ({} scheduled up to {pilot} trials, {} cached trials), \
+         ci_target={target}, max_trials={max}, model={}, backend={}, executor={}",
         states.len(),
-        work.len(),
+        pilot_gap,
         states.iter().map(|s| s.cached_trials).sum::<usize>(),
         spec.model,
-        backend.tag()
+        backend.tag(),
+        ticket.executor_workers()
     );
-    execute_round(workers, &backend, &spec.model, &mut states, &work)?;
 
-    // Round 2: surface-model pruning of predictable cells.
-    if spec.interpolate {
-        let pruned = prune_by_surface(&mut states, target);
-        if pruned > 0 {
-            log::info!("planner: {pruned} cells accepted via surface interpolation");
-        }
+    // Cells the cache already carried past the pilot are ready right away.
+    let ready0: Vec<usize> = states
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.in_flight == 0)
+        .map(|(i, _)| i)
+        .collect();
+    for i in ready0 {
+        on_ready(
+            &mut states, i, spec, target, max, prune_done, &mut heap, &mut parked, &backend,
+            cache, progress,
+        );
     }
 
-    // Rounds 3+: variance-targeted allocation until convergence or cap.
-    // Terminates: every non-empty round grows at least one cell's trial
-    // count toward `max`, and converged/capped cells leave the pool.
-    let mut rounds = 0usize;
     loop {
-        let mut work: Vec<(usize, CellKey, u64)> = Vec::new();
-        for (i, s) in states.iter().enumerate() {
-            if s.interpolated {
-                continue;
-            }
-            let n = s.trials();
-            if n >= max || converged(&s.costs, target) {
-                continue;
-            }
-            let goal = needed_trials(&s.costs.train_s, target)
-                .max(needed_trials(&s.costs.surveil_s, target))
-                .clamp(n + 1, max);
-            for t in n..goal {
-                work.push((i, s.key, trial_seed(spec, s.key, t)));
-            }
-        }
-        if work.is_empty() {
+        if cancel.is_cancelled() {
             break;
         }
-        rounds += 1;
-        log::info!("planner round {rounds}: {} top-up trials", work.len());
-        execute_round(workers, &backend, &spec.model, &mut states, &work)?;
+        if !prune_done && pilot_gap == 0 {
+            // The whole grid has pilot data: fit the surfaces once, accept
+            // predictable cells, then release the parked cells to the heap.
+            prune_done = true;
+            let pruned = prune_by_surface(&mut states, target);
+            if pruned > 0 {
+                log::info!("planner: {pruned} cells accepted via surface interpolation");
+            }
+            for i in std::mem::take(&mut parked) {
+                if states[i].interpolated {
+                    retire(&mut states[i], spec, &backend, cache, progress);
+                } else {
+                    on_ready(
+                        &mut states, i, spec, target, max, prune_done, &mut heap, &mut parked,
+                        &backend, cache, progress,
+                    );
+                }
+            }
+        }
+        // Top-ups: widest relative CI first, while the window has room.
+        if prune_done {
+            while outstanding < window {
+                let Some((_, Reverse(i))) = heap.pop() else { break };
+                let s = &mut states[i];
+                if s.retired || s.interpolated || s.in_flight > 0 {
+                    continue;
+                }
+                let n = s.trials();
+                if n >= max || converged(&s.costs, target) {
+                    retire(s, spec, &backend, cache, progress);
+                    continue;
+                }
+                let goal = needed_trials(&s.costs.train_s, target)
+                    .max(needed_trials(&s.costs.surveil_s, target))
+                    .clamp(n + 1, max);
+                outstanding +=
+                    dispatch_trials(s, i, goal, spec, &backend, ticket, &tx, progress, &cancel);
+                dispatches += 1;
+            }
+        }
+        if outstanding == 0 && heap.is_empty() && parked.is_empty() && pilot_gap == 0 {
+            break;
+        }
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok((i, t, r)) => {
+                starved_rounds = 0;
+                outstanding = outstanding.saturating_sub(1);
+                match r {
+                    Ok(c) => {
+                        let ready = {
+                            let s = &mut states[i];
+                            s.in_flight = s.in_flight.saturating_sub(1);
+                            let before = s.trials();
+                            s.absorb(t, c);
+                            if before < pilot && s.trials() >= pilot {
+                                pilot_gap -= 1;
+                            }
+                            s.in_flight == 0
+                        };
+                        if ready {
+                            on_ready(
+                                &mut states, i, spec, target, max, prune_done, &mut heap,
+                                &mut parked, &backend, cache, progress,
+                            );
+                        }
+                    }
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err =
+                                Some(anyhow::anyhow!("cell {:?}: {e}", states[i].key));
+                            // Reclaim queued tasks; in-flight trials finish
+                            // and are drained below.
+                            cancel.cancel();
+                        }
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // A task that panicked was consumed without reporting. If
+                // the executor has nothing queued or running for this job
+                // across two silent timeouts (one guards against a result
+                // racing the first check), the outstanding count can never
+                // drain — fail the job instead of spinning forever.
+                if outstanding > 0 && ticket.pending() == (0, 0) {
+                    starved_rounds += 1;
+                    if starved_rounds >= 2 && first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!(
+                            "{outstanding} trial results lost (task panicked?)"
+                        ));
+                        cancel.cancel();
+                        break;
+                    }
+                } else {
+                    starved_rounds = 0;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break, // unreachable: we hold `tx`
+        }
     }
-    Registry::global().add("sweep.planner.rounds", rounds as u64);
 
-    // Aggregate in grid order; store freshly measured cells back.
+    if cancel.is_cancelled() {
+        // Drain whatever in-flight trials still land (queued tasks were
+        // reclaimed by the executor), then flush every cell's contiguous
+        // finished prefix so a resubmission reuses the stranded work.
+        loop {
+            if ticket.pending() == (0, 0) {
+                while let Ok((i, t, r)) = rx.try_recv() {
+                    if let Ok(c) = r {
+                        states[i].absorb(t, c);
+                    }
+                }
+                break;
+            }
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok((i, t, r)) => {
+                    if let Ok(c) = r {
+                        states[i].absorb(t, c);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let mut flushed = 0usize;
+        for s in states.iter_mut().filter(|s| !s.retired) {
+            if s.trials() > s.cached_trials {
+                if let Some(c) = cache {
+                    c.store(s.key, spec, backend.tag(), s.costs.clone());
+                    flushed += 1;
+                }
+            }
+        }
+        log::info!("planner cancelled: {flushed} partial cells flushed to the store");
+        return Err(Cancelled.into());
+    }
+    Registry::global().add("sweep.planner.rounds", dispatches as u64);
+
+    // Assemble in grid order (every measurable cell has retired).
     let by_key: HashMap<CellKey, &CellState> = states.iter().map(|s| (s.key, s)).collect();
     let mut cells = Vec::new();
     for &key in &keys {
         if spec.is_gap(key) {
-            cells.push(CellMeasure {
-                key,
-                train: None,
-                surveil: None,
-                violated: true,
-                interpolated: false,
-            });
-            Registry::global().inc("sweep.gap_cells");
+            cells.push(gap_measure(key));
             continue;
         }
         let s = by_key.get(&key).expect("planner state for measurable cell");
@@ -301,11 +551,7 @@ pub(crate) fn run_adaptive(
             !s.costs.train_s.is_empty(),
             "no trials completed for {key:?}"
         );
-        if let Some(c) = cache {
-            if s.trials() > s.cached_trials {
-                c.store(key, spec, backend.tag(), s.costs.clone());
-            }
-        }
+        debug_assert!(s.retired, "unretired cell at assembly");
         cells.push(CellMeasure {
             key,
             train: Some(Summary::of(&s.costs.train_s)),
@@ -349,6 +595,17 @@ mod tests {
         assert_eq!(rel_ci(&[2.0, 2.0, 2.0]), 0.0);
         // wide spread → wide interval
         assert!(rel_ci(&[1.0, 10.0]) > 1.0);
+    }
+
+    #[test]
+    fn width_orders_infinity_widest() {
+        let mut h = BinaryHeap::new();
+        h.push((Width(0.3), Reverse(0usize)));
+        h.push((Width(f64::INFINITY), Reverse(1usize)));
+        h.push((Width(0.9), Reverse(2usize)));
+        let order: Vec<usize> = std::iter::from_fn(|| h.pop().map(|(_, Reverse(i))| i))
+            .collect();
+        assert_eq!(order, vec![1, 2, 0], "widest CI must be served first");
     }
 
     #[test]

@@ -12,14 +12,22 @@
 //!    `n_obs` observations through the surveillance executable);
 //! 4. per-cell costs are aggregated into robust summaries.
 //!
-//! Trials are fanned out over the thread pool; device executions serialise
-//! on the dedicated PJRT thread (see `runtime`), so measured execution
-//! times stay contention-free.
+//! Trials are fanned out as independent `(cell, trial)` tasks over the
+//! shared [`TrialExecutor`] and **stream back**: each cell retires the
+//! moment its own trials are complete — there is no whole-grid barrier, so
+//! one slow cell never holds up aggregation (or the cache write) of the
+//! others. Device executions still serialise on the dedicated PJRT thread
+//! (see `runtime`), so measured execution times stay contention-free.
 //!
-//! The fixed-`trials` loop here is the paper-faithful *exhaustive* mode.
-//! Setting [`SweepSpec::ci_target`] hands the same grid to the adaptive
-//! planner ([`crate::coordinator::planner`]), which spends trials where
-//! cost variance needs them and can skip surface-predictable cells.
+//! The fixed-`trials` schedule here is the paper-faithful *exhaustive*
+//! mode. Setting [`SweepSpec::ci_target`] hands the same grid to the
+//! adaptive planner ([`crate::coordinator::planner`]), which spends trials
+//! where cost variance needs them and can skip surface-predictable cells.
+//!
+//! Because trial seeds are content-derived per `(cell, trial index)`, the
+//! executor may run trials in any order, interleaved with any other job's
+//! trials, without changing a single measurement input — completion
+//! *order* is the only thing scheduling can affect.
 
 use crate::linalg::Mat;
 use crate::metrics::Registry;
@@ -30,10 +38,69 @@ use crate::runtime::DeviceHandle;
 use crate::surface::{Sample, SurfaceGrid};
 use crate::tpss::{synthesize, TpssConfig};
 use crate::util::rng::Rng;
-use crate::util::threadpool::parallel_map;
+use crate::util::threadpool::{CancelToken, JobTicket, TrialExecutor};
 use crate::util::Summary;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
+
+/// Sentinel error the sweep engine returns when its job's cancellation
+/// token fires mid-run. Callers downcast (`err.is::<Cancelled>()`) to
+/// distinguish an operator cancellation from a real failure; whatever
+/// trials finished before the cancellation are already in the cell store.
+#[derive(Clone, Copy, Debug, thiserror::Error)]
+#[error("sweep cancelled")]
+pub struct Cancelled;
+
+/// Live progress of one sweep, updated atomically from executor worker
+/// threads (trial counts) and the driving thread (cell retirements) while
+/// the sweep runs. Every counter is monotone non-decreasing over a job's
+/// lifetime, so pollers can rely on `trials_done / trials_planned` never
+/// moving backwards.
+#[derive(Debug, Default)]
+pub struct SweepProgress {
+    /// Freshly executed trials (cache-served trials are not counted).
+    pub trials_done: AtomicUsize,
+    /// Trials scheduled so far; grows as the adaptive planner tops up.
+    pub trials_planned: AtomicUsize,
+    /// Grid cells in the sweep, constraint gaps included.
+    pub cells_total: AtomicUsize,
+    /// Cells with a final result (measured, interpolated, or gap).
+    pub cells_done: AtomicUsize,
+    /// Cells accepted at pilot precision by the planner's surface model.
+    pub cells_interpolated: AtomicUsize,
+}
+
+impl SweepProgress {
+    /// Plain-value copy for status reporting (each field is read
+    /// atomically; the set is only loosely consistent, which is fine for
+    /// a progress gauge).
+    pub fn snapshot(&self) -> ProgressSnapshot {
+        ProgressSnapshot {
+            trials_done: self.trials_done.load(Ordering::SeqCst),
+            trials_planned: self.trials_planned.load(Ordering::SeqCst),
+            cells_total: self.cells_total.load(Ordering::SeqCst),
+            cells_done: self.cells_done.load(Ordering::SeqCst),
+            cells_interpolated: self.cells_interpolated.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// Plain-value snapshot of a [`SweepProgress`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProgressSnapshot {
+    /// Freshly executed trials.
+    pub trials_done: usize,
+    /// Trials scheduled so far.
+    pub trials_planned: usize,
+    /// Grid cells in the sweep.
+    pub cells_total: usize,
+    /// Cells with a final result.
+    pub cells_done: usize,
+    /// Cells accepted via surface interpolation.
+    pub cells_interpolated: usize,
+}
 
 /// Per-trial measured costs of one cell (seconds), in trial-index order —
 /// entry `t` was measured under the content-derived seed for trial `t`, so
@@ -383,117 +450,291 @@ pub fn run_sweep(spec: &SweepSpec, backend: Backend) -> anyhow::Result<SweepResu
 /// [`crate::coordinator::planner`], which spends trials where the cost
 /// variance needs them instead of uniformly (cached measurements count
 /// toward its convergence target for free).
+///
+/// Standalone entry point: spins up a private [`TrialExecutor`] sized by
+/// [`SweepSpec::effective_workers`]. Services sharing one executor across
+/// jobs call [`run_sweep_executor`] instead.
 pub fn run_sweep_cached(
     spec: &SweepSpec,
     backend: Backend,
     cache: Option<&dyn CellStore>,
 ) -> anyhow::Result<SweepResult> {
     spec.validate()?;
+    let exec = TrialExecutor::new(spec.effective_workers(), true);
+    let ticket = exec.register(1.0);
+    let progress = Arc::new(SweepProgress::default());
+    run_sweep_executor(spec, backend, cache, &ticket, &progress)
+}
+
+/// Run a sweep on a caller-provided executor job: the service's shared
+/// [`TrialExecutor`] interleaves this sweep's `(cell, trial)` tasks fairly
+/// with every other job's. `progress` is updated live; cancelling the
+/// ticket's token makes the engine stop scheduling, drain in-flight
+/// trials, flush every finished trial prefix to the cell store, and
+/// return [`Cancelled`].
+pub fn run_sweep_executor(
+    spec: &SweepSpec,
+    backend: Backend,
+    cache: Option<&dyn CellStore>,
+    ticket: &JobTicket,
+    progress: &Arc<SweepProgress>,
+) -> anyhow::Result<SweepResult> {
+    spec.validate()?;
+    if ticket.cancel_token().is_cancelled() {
+        return Err(Cancelled.into());
+    }
     if spec.adaptive() {
-        return super::planner::run_adaptive(spec, backend, cache);
+        return super::planner::run_adaptive(spec, backend, cache, ticket, progress);
     }
-    let keys = grid_keys(spec);
-    let workers = spec.effective_workers();
+    run_exhaustive_streaming(spec, backend, cache, ticket, progress)
+}
 
-    // Probe the cache, then fan out (cell, trial) pairs for the rest;
-    // trial seeds are forked from the root per cell tag so results are
-    // independent of both scheduling and grid composition. A cached entry
-    // is always usable: one holding at least `trials` measurements serves
-    // the request as a prefix (its first `trials` trials are exactly the
-    // ones this sweep would schedule), and a shorter one — e.g. from an
-    // adaptive sweep that converged early — keeps its measurements and is
-    // topped up with only the missing trial indices.
-    let mut cached: HashMap<CellKey, CellCosts> = HashMap::new();
-    let mut work = Vec::new();
-    for &key in &keys {
-        if spec.is_gap(key) {
-            continue; // constraint gap — never scheduled
-        }
-        let mut have = 0;
-        if let Some(c) = cache {
-            if let Some(mut costs) = c.fetch(key, spec, backend.tag()) {
-                have = costs.normalize(spec.trials);
-                cached.insert(key, costs);
-            }
-        }
-        for t in have..spec.trials {
-            work.push((key, trial_seed(spec, key, t)));
-        }
+/// Per-cell accumulator for the streaming exhaustive engine.
+struct CellAcc {
+    key: CellKey,
+    /// Cached prefix; extended with fresh trials at retirement.
+    costs: CellCosts,
+    /// Trials preloaded from the cache (length of the stored prefix).
+    cached: usize,
+    /// Fresh results by `trial_index - cached` (completion order varies).
+    fresh: Vec<Option<TrialCost>>,
+    /// Fresh results still outstanding.
+    remaining: usize,
+}
+
+fn measure_of(key: CellKey, costs: &CellCosts) -> CellMeasure {
+    CellMeasure {
+        key,
+        train: Some(Summary::of(&costs.train_s)),
+        surveil: Some(Summary::of(&costs.surveil_s)),
+        violated: false,
+        interpolated: false,
     }
-    log::info!(
-        "sweep: {} cells ({} cached) × {} trials, model={}, backend={}, workers={workers}",
-        keys.len(),
-        cached.len(),
-        spec.trials,
-        spec.model,
-        backend.tag()
-    );
-    let results = parallel_map(workers, &work, |_, &(key, seed)| {
-        let r = run_trial(&backend, &spec.model, key, seed);
+}
+
+pub(crate) fn gap_measure(key: CellKey) -> CellMeasure {
+    Registry::global().inc("sweep.gap_cells");
+    CellMeasure {
+        key,
+        train: None,
+        surveil: None,
+        violated: true,
+        interpolated: false,
+    }
+}
+
+/// Queue one `(cell, trial)` measurement on the job's executor queue. The
+/// result lands on `tx` tagged `(slot, t)` — a task reclaimed by a
+/// cancellation simply drops its sender without reporting. Shared by the
+/// exhaustive engine and the adaptive planner so both schedule trials
+/// identically.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn submit_trial(
+    ticket: &JobTicket,
+    spec: &SweepSpec,
+    backend: &Backend,
+    key: CellKey,
+    slot: usize,
+    t: usize,
+    tx: &mpsc::Sender<(usize, usize, anyhow::Result<TrialCost>)>,
+    progress: &Arc<SweepProgress>,
+    cancel: &CancelToken,
+) {
+    let seed = trial_seed(spec, key, t);
+    let tx = tx.clone();
+    let backend = backend.clone();
+    let model = spec.model.clone();
+    let progress = Arc::clone(progress);
+    let cancel = cancel.clone();
+    ticket.submit(move || {
+        if cancel.is_cancelled() {
+            return; // dequeued just before the reclaim swept it
+        }
+        let r = run_trial(&backend, &model, key, seed);
         Registry::global().inc("sweep.trials");
-        (key, r)
+        progress.trials_done.fetch_add(1, Ordering::SeqCst);
+        let _ = tx.send((slot, t, r));
     });
+}
 
-    // Aggregate per cell.
-    let mut cells = Vec::new();
-    for &key in &keys {
+/// The exhaustive fixed-`trials` schedule, streamed: every missing
+/// `(cell, trial)` is submitted up front, results retire each cell
+/// independently as its last trial lands, and the deterministic
+/// trial-index order of the aggregated vectors is restored from the trial
+/// index carried with each result — so per-cell summaries are bit-identical
+/// to the sequential nested loop no matter how the executor interleaves.
+fn run_exhaustive_streaming(
+    spec: &SweepSpec,
+    backend: Backend,
+    cache: Option<&dyn CellStore>,
+    ticket: &JobTicket,
+    progress: &Arc<SweepProgress>,
+) -> anyhow::Result<SweepResult> {
+    let keys = grid_keys(spec);
+    let cancel = ticket.cancel_token();
+    progress.cells_total.store(keys.len(), Ordering::SeqCst);
+
+    // Probe the cache and build per-cell accumulators for the remainder.
+    // A cached entry is always usable: one holding at least `trials`
+    // measurements serves the request as a prefix, and a shorter one — e.g.
+    // from an adaptive sweep that converged early — keeps its measurements
+    // and is topped up with only the missing trial indices.
+    let mut cells: Vec<Option<CellMeasure>> = vec![None; keys.len()];
+    let mut accs: HashMap<usize, CellAcc> = HashMap::new();
+    let mut planned = 0usize;
+    for (i, &key) in keys.iter().enumerate() {
         if spec.is_gap(key) {
-            cells.push(CellMeasure {
-                key,
-                train: None,
-                surveil: None,
-                violated: true,
-                interpolated: false,
-            });
-            Registry::global().inc("sweep.gap_cells");
+            cells[i] = Some(gap_measure(key));
+            progress.cells_done.fetch_add(1, Ordering::SeqCst);
             continue;
         }
-        // Start from the cached prefix (if any), then append this run's
-        // fresh trials — `results` preserves `work` order, which lists each
-        // cell's trials in ascending index order, so the merged vectors stay
-        // aligned with the deterministic trial-seed sequence.
-        let (mut train_ts, mut surveil_ts, prefix) = match cached.remove(&key) {
-            Some(c) => {
-                let prefix = c.train_s.len();
-                (c.train_s, c.surveil_s, prefix)
-            }
-            None => (Vec::new(), Vec::new(), 0),
-        };
-        for (k, r) in &results {
-            if *k == key {
-                let c = r
-                    .as_ref()
-                    .map_err(|e| anyhow::anyhow!("cell {key:?}: {e}"))?;
-                train_ts.push(c.train_s);
-                surveil_ts.push(c.surveil_s);
+        let mut costs = CellCosts::default();
+        if let Some(c) = cache {
+            if let Some(mut got) = c.fetch(key, spec, backend.tag()) {
+                got.normalize(spec.trials);
+                costs = got;
             }
         }
-        anyhow::ensure!(!train_ts.is_empty(), "no trials completed for {key:?}");
-        if train_ts.len() > prefix {
-            // Something fresh was measured — write the merged entry back.
-            if let Some(c) = cache {
-                c.store(
-                    key,
-                    spec,
-                    backend.tag(),
-                    CellCosts {
-                        train_s: train_ts.clone(),
-                        surveil_s: surveil_ts.clone(),
-                    },
-                );
+        let have = costs.train_s.len();
+        if have >= spec.trials {
+            cells[i] = Some(measure_of(key, &costs));
+            progress.cells_done.fetch_add(1, Ordering::SeqCst);
+            continue;
+        }
+        let fresh_n = spec.trials - have;
+        planned += fresh_n;
+        accs.insert(
+            i,
+            CellAcc {
+                key,
+                costs,
+                cached: have,
+                fresh: vec![None; fresh_n],
+                remaining: fresh_n,
+            },
+        );
+    }
+    progress.trials_planned.fetch_add(planned, Ordering::SeqCst);
+    log::info!(
+        "sweep: {} cells ({} to measure) × {} trials, model={}, backend={}, executor={}",
+        keys.len(),
+        accs.len(),
+        spec.trials,
+        spec.model,
+        backend.tag(),
+        ticket.executor_workers()
+    );
+
+    // Submit every missing (cell, trial) task; results stream back tagged
+    // with (cell index, trial index). Task closures own `tx` clones, so the
+    // channel disconnects exactly when every task has run or been reclaimed
+    // by a cancellation — the drain loop needs no separate bookkeeping.
+    let (tx, rx) = mpsc::channel::<(usize, usize, anyhow::Result<TrialCost>)>();
+    for (i, &key) in keys.iter().enumerate() {
+        let Some(acc) = accs.get(&i) else { continue };
+        for t in acc.cached..spec.trials {
+            submit_trial(ticket, spec, &backend, key, i, t, &tx, progress, &cancel);
+        }
+    }
+    drop(tx);
+
+    let mut first_err: Option<anyhow::Error> = None;
+    let mut handle = |accs: &mut HashMap<usize, CellAcc>,
+                      cells: &mut Vec<Option<CellMeasure>>,
+                      (i, t, r): (usize, usize, anyhow::Result<TrialCost>)| {
+        let acc = accs.get_mut(&i).expect("result for unknown cell");
+        match r {
+            Ok(c) => {
+                let slot = t - acc.cached;
+                if acc.fresh[slot].is_none() {
+                    acc.remaining -= 1;
+                }
+                acc.fresh[slot] = Some(c);
+                if acc.remaining == 0 {
+                    // Retire this cell now — no waiting on the rest of the
+                    // grid. Fresh trials append in trial-index order, so the
+                    // merged vectors stay aligned with the deterministic
+                    // trial-seed sequence.
+                    let mut acc = accs.remove(&i).expect("accumulator present");
+                    for c in acc.fresh.iter().map(|c| c.expect("all fresh present")) {
+                        acc.costs.train_s.push(c.train_s);
+                        acc.costs.surveil_s.push(c.surveil_s);
+                    }
+                    if let Some(store) = cache {
+                        store.store(acc.key, spec, backend.tag(), acc.costs.clone());
+                    }
+                    cells[i] = Some(measure_of(acc.key, &acc.costs));
+                    progress.cells_done.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(anyhow::anyhow!("cell {:?}: {e}", acc.key));
+                    // Reclaim this job's queued tasks; in-flight trials
+                    // finish and are drained below.
+                    cancel.cancel();
+                }
             }
         }
-        cells.push(CellMeasure {
-            key,
-            train: Some(Summary::of(&train_ts)),
-            surveil: Some(Summary::of(&surveil_ts)),
-            violated: false,
-            interpolated: false,
-        });
+    };
+    loop {
+        match rx.recv_timeout(std::time::Duration::from_millis(50)) {
+            Ok(msg) => handle(&mut accs, &mut cells, msg),
+            Err(mpsc::RecvTimeoutError::Disconnected) => break, // all tasks ran
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // A cancellation with parked workers leaves reclaimed-task
+                // senders alive until a sweep; `pending` performs one, and
+                // `(0, 0)` means nothing can send any more.
+                if cancel.is_cancelled() && ticket.pending() == (0, 0) {
+                    while let Ok(msg) = rx.try_recv() {
+                        handle(&mut accs, &mut cells, msg);
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    if cancel.is_cancelled() {
+        // Flush the contiguous finished prefix of every partial cell so a
+        // resubmitted request reuses the work the cancellation stranded.
+        let mut flushed = 0usize;
+        for (_, mut acc) in accs {
+            for c in &acc.fresh {
+                match c {
+                    Some(c) => {
+                        acc.costs.train_s.push(c.train_s);
+                        acc.costs.surveil_s.push(c.surveil_s);
+                    }
+                    None => break, // only a prefix is reusable
+                }
+            }
+            if acc.costs.train_s.len() > acc.cached {
+                if let Some(store) = cache {
+                    store.store(acc.key, spec, backend.tag(), acc.costs.clone());
+                    flushed += 1;
+                }
+            }
+        }
+        log::info!("sweep cancelled: {flushed} partial cells flushed to the store");
+        return Err(Cancelled.into());
+    }
+    // Every sender is gone and nothing was cancelled, so every cell must
+    // have retired — unless a task panicked and its result was lost, which
+    // is a job failure, not a panic in the driver.
+    let mut out = Vec::with_capacity(cells.len());
+    for c in cells {
+        match c {
+            Some(m) => out.push(m),
+            None => anyhow::bail!("sweep lost trial results (task panicked?)"),
+        }
     }
     Ok(SweepResult {
         spec: spec.clone(),
-        cells,
+        cells: out,
     })
 }
 

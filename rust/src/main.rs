@@ -102,9 +102,12 @@ fn print_help() {
            --max-trials N    per-cell trial cap (0 = max(trials, pilot))\n\
            --interpolate B   surface-model cell pruning on|off (default on)\n\
          serve flags:  --host H --port P --queue-cap N --cache-dir DIR|none\n\
+           --executor-workers N  shared trial-executor threads (0 = auto)\n\
+           --fair-share B        fair job interleaving on|off (default on)\n\
          \n\
-         serve API:    POST /v1/scope  GET /v1/jobs/ID  GET /v1/recommendations/ID\n\
-                       GET /v1/shapes  GET /healthz  GET /metrics[?format=text]"
+         serve API:    POST /v1/scope  GET /v1/jobs/ID  DELETE /v1/jobs/ID\n\
+                       GET /v1/recommendations/ID  GET /v1/shapes  GET /healthz\n\
+                       GET /metrics[?format=text]"
     );
 }
 
@@ -177,10 +180,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let (backend, _device) = make_backend(&cfg)?;
     let server = service::Server::start(&cfg, backend)?;
     println!("containerstress service listening on http://{}", server.addr());
-    println!("  POST /v1/scope                submit a scoping job");
-    println!("  GET  /v1/jobs/ID              job status");
-    println!("  GET  /v1/recommendations/ID   shape recommendation");
-    println!("  GET  /v1/shapes | /healthz | /metrics[?format=text]");
+    println!("  POST   /v1/scope              submit a scoping job");
+    println!("  GET    /v1/jobs/ID            job status + live progress");
+    println!("  DELETE /v1/jobs/ID            cancel a queued/running job");
+    println!("  GET    /v1/recommendations/ID shape recommendation");
+    println!("  GET    /v1/shapes | /healthz | /metrics[?format=text]");
+    println!(
+        "scheduler: {} executor workers, fair_share={}",
+        server.state().executor_workers(),
+        server.state().fair_share()
+    );
     match &cfg.service.cache_dir {
         Some(d) => println!(
             "sweep cache: {} ({} cells warm)",

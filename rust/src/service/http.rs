@@ -3,7 +3,8 @@
 //! `hyper`/`axum` are unavailable in the offline build environment; the
 //! service's needs are small — parse a request, dispatch to a handler,
 //! write a JSON response — so a std `TcpListener` accept loop fanning
-//! connections out over [`crate::util::threadpool::JobPool`] covers them.
+//! connections out over [`crate::util::threadpool::TrialExecutor`] covers
+//! them (one registered job holds the connection queue).
 //!
 //! Protocol subset (documented, deliberate):
 //! - one request per connection (`Connection: close` on every response);
@@ -11,11 +12,11 @@
 //! - no percent-decoding — all structured data travels in JSON bodies.
 
 use crate::util::json::Json;
-use crate::util::threadpool::JobPool;
+use crate::util::threadpool::TrialExecutor;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Largest accepted request body.
@@ -277,10 +278,8 @@ impl HttpServer {
         let accept = std::thread::Builder::new()
             .name("http-accept".into())
             .spawn(move || {
-                let pool = JobPool::new(workers.max(1));
-                // Results are fire-and-forget; the receiver is dropped and
-                // JobPool ignores the failed send.
-                let (done_tx, _) = mpsc::channel::<()>();
+                let pool = TrialExecutor::new(workers.max(1), false);
+                let conns = pool.register(1.0);
                 let pending = Arc::new(AtomicUsize::new(0));
                 for conn in listener.incoming() {
                     if stop2.load(Ordering::SeqCst) {
@@ -298,26 +297,24 @@ impl HttpServer {
                             pending.fetch_add(1, Ordering::SeqCst);
                             let h = Arc::clone(&handler);
                             let p = Arc::clone(&pending);
-                            pool.submit(
-                                move || {
-                                    // A panicking handler must not kill the
-                                    // pool worker or leak its pending slot.
-                                    let r = std::panic::catch_unwind(
-                                        std::panic::AssertUnwindSafe(move || {
-                                            handle_connection(stream, h)
-                                        }),
-                                    );
-                                    if r.is_err() {
-                                        log::error!("http: connection handler panicked");
-                                    }
-                                    p.fetch_sub(1, Ordering::SeqCst);
-                                },
-                                done_tx.clone(),
-                            );
+                            conns.submit(move || {
+                                // A panicking handler must not kill the
+                                // pool worker or leak its pending slot.
+                                let r = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(move || {
+                                        handle_connection(stream, h)
+                                    }),
+                                );
+                                if r.is_err() {
+                                    log::error!("http: connection handler panicked");
+                                }
+                                p.fetch_sub(1, Ordering::SeqCst);
+                            });
                         }
                         Err(e) => log::warn!("http: accept failed: {e}"),
                     }
                 }
+                drop(conns);
                 pool.shutdown();
             })?;
         Ok(HttpServer {

@@ -8,8 +8,9 @@
 //! stack is available offline:
 //!
 //! - [`http`]   — minimal HTTP/1.1 server core (parse, dispatch, respond);
-//! - [`routes`] — the JSON API: submit scope jobs, poll status, fetch
-//!   recommendations, shape catalog, health, metrics;
+//! - [`routes`] — the JSON API: submit scope jobs, poll status + live
+//!   progress, cancel jobs, fetch recommendations, shape catalog, health,
+//!   metrics;
 //! - [`cache`]  — the content-addressed **cell-level sweep cache**:
 //!   identical grid cells across customer requests are measured once, so a
 //!   repeat scoping request costs a surface fit + recommend instead of a
@@ -29,8 +30,8 @@ use crate::coordinator::{Backend, CellStore};
 use std::sync::Arc;
 
 /// Connection-handler pool size. Handlers only parse/serialize JSON and
-/// enqueue jobs (sweep compute runs on the leader thread), so a small,
-/// fixed pool suffices.
+/// enqueue jobs (sweep compute runs on the shared trial executor), so a
+/// small, fixed pool suffices.
 const HTTP_WORKERS: usize = 4;
 
 /// A running service instance: HTTP front + scoping queue + sweep cache.
@@ -48,10 +49,12 @@ impl Server {
             Some(dir) => Arc::new(SweepCache::open(dir)?),
             None => Arc::new(SweepCache::in_memory()),
         };
-        let svc = ScopingService::start_with_cache(
+        let svc = ScopingService::start_with_scheduler(
             backend,
             cfg.service.queue_cap,
             Some(Arc::clone(&cache) as Arc<dyn CellStore>),
+            cfg.service.executor_workers,
+            cfg.service.fair_share,
         );
         let state = Arc::new(ServiceState::new(svc, cache, cfg.sweep.clone()));
         let handler_state = Arc::clone(&state);

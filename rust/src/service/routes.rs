@@ -1,31 +1,35 @@
 //! Route dispatch for the scoping service's JSON API.
 //!
 //! ```text
-//! POST /v1/scope                submit a workload + SLA, get a job id
-//! GET  /v1/jobs/{id}            job status / sweep summary
-//! GET  /v1/recommendations/{id} rendered shape recommendation (job → rec)
-//! GET  /v1/shapes               cloud shape catalog
-//! GET  /healthz                 liveness + queue gauge
-//! GET  /metrics                 metrics registry (JSON; ?format=text)
+//! POST   /v1/scope                submit a workload + SLA, get a job id
+//! GET    /v1/jobs/{id}            job status / live progress / summary
+//! DELETE /v1/jobs/{id}            cancel a queued or running job
+//! GET    /v1/recommendations/{id} rendered shape recommendation (job → rec)
+//! GET    /v1/shapes               cloud shape catalog
+//! GET    /healthz                 liveness + queue/scheduler gauges
+//! GET    /metrics                 metrics registry (JSON; ?format=text)
 //! ```
 //!
 //! `POST /v1/scope` body (all keys optional; defaults fill the rest):
 //!
 //! ```json
 //! {
-//!   "sweep":    {"signals": [2,3], "memvecs": [8,16], "obs": [16,32],
-//!                "trials": 1, "seed": 9, "model": "mset2", "workers": 2,
-//!                "pilot_trials": 2, "ci_target": 0.25,
-//!                "max_trials": 8, "interpolate": true},
-//!   "workload": {"signals": 20, "memvecs": 64,
-//!                "obs_per_sec": 1.0, "train_window": 4096},
-//!   "sla":      {"headroom": 2.0, "max_train_s": 3600.0}
+//!   "sweep":     {"signals": [2,3], "memvecs": [8,16], "obs": [16,32],
+//!                 "trials": 1, "seed": 9, "model": "mset2", "workers": 2,
+//!                 "pilot_trials": 2, "ci_target": 0.25,
+//!                 "max_trials": 8, "interpolate": true},
+//!   "scheduler": {"weight": 1.0},
+//!   "workload":  {"signals": 20, "memvecs": 64,
+//!                 "obs_per_sec": 1.0, "train_window": 4096},
+//!   "sla":       {"headroom": 2.0, "max_train_s": 3600.0}
 //! }
 //! ```
 //!
 //! `ci_target > 0` enables the adaptive sweep planner
 //! ([`crate::coordinator::planner`]); omitting it keeps the exhaustive
-//! fixed-`trials` sweep. See `docs/API.md` for the full endpoint reference.
+//! fixed-`trials` sweep. `scheduler.weight` biases the job's fair share
+//! of the trial executor. See `docs/API.md` for the full endpoint
+//! reference.
 
 use crate::config;
 use crate::coordinator::jobs::{JobId, JobStatus, ScopingService};
@@ -65,6 +69,22 @@ impl ServiceState {
         &self.cache
     }
 
+    /// Worker threads in the shared trial executor.
+    pub fn executor_workers(&self) -> usize {
+        self.svc.executor_workers()
+    }
+
+    /// Whether fair job interleaving is enabled on the executor.
+    pub fn fair_share(&self) -> bool {
+        self.svc.fair_share()
+    }
+
+    /// The scoping-job service (status/progress/cancel access for
+    /// embedders and tests).
+    pub fn service(&self) -> &ScopingService {
+        &self.svc
+    }
+
     /// Top-level dispatch (the [`crate::service::http::Handler`] body).
     pub fn handle(&self, req: &Request) -> Response {
         Registry::global().inc("service.http.requests");
@@ -79,6 +99,7 @@ impl ServiceState {
             ("GET", ["v1", "shapes"]) => shapes_catalog(),
             ("POST", ["v1", "scope"]) => self.scope(req),
             ("GET", ["v1", "jobs", id]) => self.job_status(id),
+            ("DELETE", ["v1", "jobs", id]) => self.cancel_job(id),
             ("GET", ["v1", "recommendations", id]) => self.recommendation(id),
             (_, ["healthz"])
             | (_, ["metrics"])
@@ -107,6 +128,11 @@ impl ServiceState {
                 ("jobs_in_flight", Json::Num(self.svc.in_flight() as f64)),
                 ("queue_cap", Json::Num(self.svc.queue_cap() as f64)),
                 ("cached_cells", Json::Num(self.cache.len() as f64)),
+                (
+                    "executor_workers",
+                    Json::Num(self.svc.executor_workers() as f64),
+                ),
+                ("fair_share", Json::Bool(self.svc.fair_share())),
             ]),
         )
     }
@@ -136,9 +162,16 @@ impl ServiceState {
             },
             None => self.default_spec.clone(),
         };
-        if let Err(e) = spec.validate().and_then(|_| check_service_limits(&spec)) {
+        if let Err(e) = spec
+            .validate()
+            .and_then(|_| check_service_limits(&spec, self.svc.executor_workers()))
+        {
             return Response::error(422, &format!("invalid sweep spec: {e}"));
         }
+        let weight = match weight_from_json(body.get("scheduler")) {
+            Ok(w) => w,
+            Err(e) => return Response::error(422, &format!("invalid scheduler: {e}")),
+        };
         let workload = match workload_from_json(body.get("workload")) {
             Ok(w) => w,
             Err(e) => return Response::error(422, &format!("invalid workload: {e}")),
@@ -147,7 +180,7 @@ impl ServiceState {
             Ok(s) => s,
             Err(e) => return Response::error(422, &format!("invalid sla: {e}")),
         };
-        match self.svc.submit(spec) {
+        match self.svc.submit_weighted(spec, weight) {
             Ok(id) => {
                 let mut jobs = self.jobs.lock().unwrap();
                 // Drop scoping contexts for jobs the queue has evicted, so
@@ -185,6 +218,9 @@ impl ServiceState {
                     JobStatus::Running => {
                         fields.push(("status", Json::Str("running".into())))
                     }
+                    JobStatus::Cancelled => {
+                        fields.push(("status", Json::Str("cancelled".into())))
+                    }
                     JobStatus::Failed(e) => {
                         fields.push(("status", Json::Str("failed".into())));
                         fields.push(("error", Json::Str(e)));
@@ -194,8 +230,47 @@ impl ServiceState {
                         fields.push(("result", sweep_summary(&r)));
                     }
                 }
+                if let Some(p) = self.svc.progress(id) {
+                    fields.push((
+                        "progress",
+                        Json::obj(vec![
+                            ("trials_done", Json::Num(p.trials_done as f64)),
+                            ("trials_planned", Json::Num(p.trials_planned as f64)),
+                            ("cells_total", Json::Num(p.cells_total as f64)),
+                            ("cells_done", Json::Num(p.cells_done as f64)),
+                            (
+                                "cells_interpolated",
+                                Json::Num(p.cells_interpolated as f64),
+                            ),
+                        ]),
+                    ));
+                }
                 Response::json(200, &Json::obj(fields))
             }
+        }
+    }
+
+    fn cancel_job(&self, id: &str) -> Response {
+        let id: JobId = match id.parse() {
+            Ok(v) => v,
+            Err(_) => return Response::error(400, "job id must be an integer"),
+        };
+        match self.svc.cancel(id) {
+            None => Response::error(404, &format!("unknown job {id}")),
+            Some(JobStatus::Queued | JobStatus::Running) => {
+                Registry::global().inc("service.scope.cancelled");
+                Response::json(
+                    202,
+                    &Json::obj(vec![
+                        ("job_id", Json::Num(id as f64)),
+                        ("status", Json::Str("cancelling".into())),
+                    ]),
+                )
+            }
+            Some(_) => Response::error(
+                409,
+                &format!("job {id} already completed; nothing to cancel"),
+            ),
         }
     }
 
@@ -241,16 +316,22 @@ impl ServiceState {
 /// must not be able to exhaust the node's memory or threads.
 const MAX_CELLS: usize = 512;
 const MAX_TRIALS: usize = 32;
-const MAX_WORKERS: usize = 64;
+/// Bounds on the per-job fair-share weight a request may claim. The
+/// executor clamps harder than this; the service rejects instead of
+/// silently clamping.
+const MIN_WEIGHT: f64 = 1.0 / 16.0;
+const MAX_WEIGHT: f64 = 16.0;
 /// Per-cell synthesis size cap: `signals × max(obs, memvecs)` elements
 /// (f64), ~128 MB at the bound.
 const MAX_CELL_ELEMS: usize = 1 << 24;
-/// Joint cap on concurrent synthesis: `workers × cell elements` — each
-/// in-flight trial holds a few cell-sized buffers, so bounding the product
-/// (not each factor alone) is what actually bounds transient memory.
+/// Joint cap on concurrent synthesis: `executor workers × cell elements`
+/// — each in-flight trial holds a few cell-sized buffers, and the shared
+/// executor (not the client-claimed `workers` knob) decides how many of a
+/// job's trials run at once, so bounding that product is what actually
+/// bounds transient memory.
 const MAX_CONCURRENT_ELEMS: usize = 1 << 26;
 
-fn check_service_limits(spec: &SweepSpec) -> anyhow::Result<()> {
+fn check_service_limits(spec: &SweepSpec, executor_workers: usize) -> anyhow::Result<()> {
     let cells = spec.signals.len() * spec.memvecs.len() * spec.obs.len();
     anyhow::ensure!(
         cells <= MAX_CELLS,
@@ -267,11 +348,9 @@ fn check_service_limits(spec: &SweepSpec) -> anyhow::Result<()> {
         per_cell <= MAX_TRIALS,
         "trials too large: {per_cell} per cell (service max {MAX_TRIALS})"
     );
-    anyhow::ensure!(
-        spec.workers <= MAX_WORKERS,
-        "workers too large: {} (service max {MAX_WORKERS})",
-        spec.workers
-    );
+    // `spec.workers` is deliberately unchecked: in service mode the shared
+    // trial executor (not the client-claimed knob) decides how many of a
+    // job's trials run at once, so the field cannot amplify resource use.
     let max_n = spec.signals.iter().copied().max().unwrap_or(0);
     let max_m = spec.memvecs.iter().copied().max().unwrap_or(0);
     let max_obs = spec.obs.iter().copied().max().unwrap_or(0);
@@ -281,13 +360,30 @@ fn check_service_limits(spec: &SweepSpec) -> anyhow::Result<()> {
         "cell too large: {max_n} signals × {} obs/memvecs exceeds the service limit",
         max_obs.max(max_m)
     );
-    let eff_workers = spec.effective_workers();
+    let eff_workers = executor_workers.max(1);
     anyhow::ensure!(
         eff_workers.saturating_mul(elems) <= MAX_CONCURRENT_ELEMS,
-        "sweep too large: {eff_workers} workers × {elems}-element cells exceeds the \
-         service's concurrent-memory limit; reduce workers or cell size"
+        "sweep too large: {eff_workers} executor workers × {elems}-element cells exceeds \
+         the service's concurrent-memory limit; reduce the cell size"
     );
     Ok(())
+}
+
+/// Per-job fair-share weight from the optional `scheduler` request object
+/// (`1.0` — an equal share — when absent). Out-of-range weights are an
+/// error, not a silent clamp.
+fn weight_from_json(j: Option<&Json>) -> anyhow::Result<f64> {
+    let Some(j) = j else { return Ok(1.0) };
+    match req_f64(j, "weight")? {
+        None => Ok(1.0),
+        Some(w) => {
+            anyhow::ensure!(
+                w.is_finite() && (MIN_WEIGHT..=MAX_WEIGHT).contains(&w),
+                "weight must be within [{MIN_WEIGHT}, {MAX_WEIGHT}], got {w}"
+            );
+            Ok(w)
+        }
+    }
 }
 
 fn sweep_summary(r: &SweepResult) -> Json {
@@ -464,8 +560,6 @@ mod tests {
         assert!(String::from_utf8(r.body).unwrap().contains("too large"));
         let r = st.handle(&post("/v1/scope", r#"{"sweep": {"trials": 1000}}"#));
         assert_eq!(r.status, 422);
-        let r = st.handle(&post("/v1/scope", r#"{"sweep": {"workers": 10000}}"#));
-        assert_eq!(r.status, 422);
         // the adaptive planner's per-cell cap is bounded like `trials`
         let r = st.handle(&post(
             "/v1/scope",
@@ -486,6 +580,81 @@ mod tests {
         ));
         assert_eq!(r.status, 422);
         assert!(String::from_utf8(r.body).unwrap().contains("pilot_trials"));
+    }
+
+    fn delete(path: &str) -> Request {
+        Request {
+            method: "DELETE".into(),
+            path: path.to_string(),
+            query: vec![],
+            headers: vec![],
+            body: vec![],
+        }
+    }
+
+    #[test]
+    fn scheduler_weight_validated() {
+        let st = state();
+        let r = st.handle(&post("/v1/scope", r#"{"scheduler": {"weight": "fast"}}"#));
+        assert_eq!(r.status, 422);
+        let r = st.handle(&post("/v1/scope", r#"{"scheduler": {"weight": 1000}}"#));
+        assert_eq!(r.status, 422);
+        assert!(String::from_utf8(r.body).unwrap().contains("weight"));
+        let r = st.handle(&post("/v1/scope", r#"{"scheduler": {"weight": 2.0}}"#));
+        assert_eq!(r.status, 202, "in-range weights are accepted");
+    }
+
+    #[test]
+    fn cancel_route_contract() {
+        let st = state();
+        assert_eq!(st.handle(&delete("/v1/jobs/zzz")).status, 400);
+        assert_eq!(st.handle(&delete("/v1/jobs/12345")).status, 404);
+        // a completed job is 409, not a second cancellation
+        let r = st.handle(&post("/v1/scope", "{}"));
+        assert_eq!(r.status, 202);
+        let id = Json::parse(std::str::from_utf8(&r.body).unwrap())
+            .unwrap()
+            .get("job_id")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        st.svc.wait(id as u64).unwrap();
+        assert_eq!(st.handle(&delete(&format!("/v1/jobs/{id}"))).status, 409);
+    }
+
+    #[test]
+    fn job_status_carries_progress() {
+        let st = state();
+        let r = st.handle(&post("/v1/scope", "{}"));
+        assert_eq!(r.status, 202);
+        let id = Json::parse(std::str::from_utf8(&r.body).unwrap())
+            .unwrap()
+            .get("job_id")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        st.svc.wait(id as u64).unwrap();
+        let r = st.handle(&get(&format!("/v1/jobs/{id}")));
+        assert_eq!(r.status, 200);
+        let j = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        let p = j.get("progress").expect("status carries progress");
+        assert_eq!(
+            p.get("cells_done").unwrap().as_usize(),
+            p.get("cells_total").unwrap().as_usize()
+        );
+        assert_eq!(
+            p.get("trials_done").unwrap().as_usize(),
+            p.get("trials_planned").unwrap().as_usize()
+        );
+    }
+
+    #[test]
+    fn healthz_reports_scheduler() {
+        let st = state();
+        let r = st.handle(&get("/healthz"));
+        let j = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert!(j.get("executor_workers").unwrap().as_usize().unwrap() >= 1);
+        assert_eq!(j.get("fair_share").unwrap().as_bool(), Some(true));
     }
 
     #[test]

@@ -1,11 +1,22 @@
-//! Work-stealing parallel map + persistent worker pool.
+//! Work-stealing parallel map + the shared **trial executor**.
 //!
 //! `tokio`/`rayon` are unavailable offline; the sweep engine is compute-bound
-//! fan-out, so a scoped thread pool with an atomic work index covers the need.
+//! fan-out, so a scoped thread pool with an atomic work index covers the
+//! one-shot case ([`parallel_map`]) and a persistent worker pool with
+//! per-job queues covers the service case ([`TrialExecutor`]).
+//!
+//! The executor's unit of scheduling is a single submitted task (one
+//! `(cell, trial)` measurement in the coordinator). Each registered job
+//! owns a queue; workers pick the next task by **weighted fair queueing**
+//! (stride scheduling over per-job virtual time), so a small job's tasks
+//! interleave with — rather than wait behind — a giant sweep's backlog.
+//! Cancellation is cooperative: cancelling a job's [`CancelToken`] makes
+//! the executor drop that job's queued tasks at the next dispatch; tasks
+//! already running finish normally.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Run `f(i, &items[i])` over all items on `workers` threads, returning the
 /// results in input order. `f` must be `Sync` (it is shared, not cloned).
@@ -20,9 +31,11 @@ where
         return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
     let next = AtomicUsize::new(0);
-    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
-    out.resize_with(items.len(), || None);
-    let out_slots: Vec<Mutex<&mut Option<R>>> = out.iter_mut().map(Mutex::new).collect();
+    // Each slot is written by exactly one worker (the atomic index hands
+    // out every `i` once), so plain unsynchronised writes are safe — the
+    // scope join publishes them to the parent thread. A per-slot `Mutex`
+    // here would be pure overhead on the hot fan-out path.
+    let slots = SlotWriter::new(items.len());
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
@@ -31,12 +44,47 @@ where
                     break;
                 }
                 let r = f(i, &items[i]);
-                **out_slots[i].lock().unwrap() = Some(r);
+                // SAFETY: `i` came from `fetch_add`, so no other worker
+                // ever writes this slot, and the parent only reads after
+                // the scope joins every worker.
+                unsafe { slots.write(i, r) };
             });
         }
     });
-    drop(out_slots);
-    out.into_iter().map(|o| o.expect("worker missed slot")).collect()
+    slots.into_results()
+}
+
+/// Write-once result slots shared across `parallel_map` workers. Disjoint
+/// indices are written without locks; `Sync` is sound because every index
+/// is claimed by exactly one worker via an atomic counter.
+struct SlotWriter<R> {
+    slots: Vec<std::cell::UnsafeCell<Option<R>>>,
+}
+
+// SAFETY: workers only touch disjoint slots (unique `fetch_add` indices),
+// and results are read only after all writers have been joined.
+unsafe impl<R: Send> Sync for SlotWriter<R> {}
+
+impl<R> SlotWriter<R> {
+    fn new(n: usize) -> SlotWriter<R> {
+        let mut slots = Vec::with_capacity(n);
+        slots.resize_with(n, || std::cell::UnsafeCell::new(None));
+        SlotWriter { slots }
+    }
+
+    /// # Safety
+    /// `i` must be claimed by exactly one worker, and no reads may happen
+    /// concurrently with writes (the scope join is the barrier).
+    unsafe fn write(&self, i: usize, r: R) {
+        *self.slots[i].get() = Some(r);
+    }
+
+    fn into_results(self) -> Vec<R> {
+        self.slots
+            .into_iter()
+            .map(|c| c.into_inner().expect("worker missed slot"))
+            .collect()
+    }
 }
 
 /// Number of usable worker threads on this machine.
@@ -46,84 +94,359 @@ pub fn default_workers() -> usize {
         .unwrap_or(4)
 }
 
-/// A persistent FIFO job pool for the coordinator's leader/worker topology:
-/// jobs are boxed closures; results arrive on a channel as they complete.
-pub struct JobPool {
-    tx: Option<mpsc::Sender<Job>>,
-    handles: Vec<std::thread::JoinHandle<()>>,
-    /// Number of worker threads.
-    pub workers: usize,
+/// Cooperative cancellation flag shared between a job's owner and the
+/// executor. Cancelling is idempotent and purely advisory: queued tasks of
+/// a cancelled job are dropped at the executor's next dispatch, running
+/// tasks finish, and long-running owners are expected to poll
+/// [`CancelToken::is_cancelled`] between units of work.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// Fresh, uncancelled token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation (sticky; cannot be undone).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether cancellation has been requested.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
 }
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+type Task = Box<dyn FnOnce() + Send + 'static>;
 
-impl JobPool {
-    /// Spawn a pool with `workers` threads (min 1).
-    pub fn new(workers: usize) -> JobPool {
-        let workers = workers.max(1);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let handles = (0..workers)
-            .map(|_| {
-                let rx = Arc::clone(&rx);
-                std::thread::spawn(move || loop {
-                    let job = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    match job {
-                        Ok(job) => job(),
-                        Err(_) => break, // pool dropped
-                    }
+/// One job's task queue inside the executor.
+struct JobQueue {
+    id: u64,
+    /// Fair-share weight (tasks dispatched per unit of virtual time).
+    weight: f64,
+    /// Stride-scheduling virtual time: grows by `1/weight` per dispatch;
+    /// the runnable queue with the smallest value is served next.
+    vtime: f64,
+    tasks: VecDeque<Task>,
+    cancel: CancelToken,
+    /// Tasks of this job currently executing on workers.
+    running: usize,
+    /// The owning [`JobTicket`] was dropped — remove once drained.
+    closed: bool,
+}
+
+struct ExecState {
+    queues: Vec<JobQueue>,
+    next_id: u64,
+    shutdown: bool,
+    /// Monotone virtual clock: the largest virtual start time ever
+    /// dispatched. Jobs registering or re-activating are clamped to it so
+    /// an all-idle window can never hand a newcomer a huge head start
+    /// (vtime 0) over a job with accumulated virtual time.
+    vclock: f64,
+}
+
+struct ExecShared {
+    state: Mutex<ExecState>,
+    work: Condvar,
+    /// Also notified on task completion (owners waiting for drain).
+    idle: Condvar,
+    fair: bool,
+    workers: usize,
+}
+
+impl ExecShared {
+    /// Smallest virtual time among runnable queues (fair-share "now").
+    fn min_vtime(st: &ExecState) -> Option<f64> {
+        st.queues
+            .iter()
+            .filter(|q| !q.tasks.is_empty() || q.running > 0)
+            .map(|q| q.vtime)
+            .reduce(f64::min)
+    }
+
+    /// Drop queued tasks of cancelled jobs and remove dead queues. Dropped
+    /// closures release whatever they captured (result senders etc.), which
+    /// is how owners observe that queued work was reclaimed.
+    fn sweep_dead(st: &mut ExecState) {
+        for q in &mut st.queues {
+            if q.cancel.is_cancelled() && !q.tasks.is_empty() {
+                q.tasks.clear();
+            }
+        }
+        st.queues.retain(|q| {
+            let dead =
+                q.tasks.is_empty() && q.running == 0 && (q.closed || q.cancel.is_cancelled());
+            !dead
+        });
+    }
+
+    /// Index of the queue to serve next, if any task is runnable.
+    fn pick(&self, st: &ExecState) -> Option<usize> {
+        let runnable = st.queues.iter().enumerate().filter(|(_, q)| {
+            !q.tasks.is_empty() && !q.cancel.is_cancelled()
+        });
+        if self.fair {
+            // Weighted fair queueing: smallest virtual time wins; ties go
+            // to the earlier-registered job for determinism.
+            runnable
+                .min_by(|(_, a), (_, b)| {
+                    a.vtime.total_cmp(&b.vtime).then(a.id.cmp(&b.id))
                 })
+                .map(|(i, _)| i)
+        } else {
+            // FIFO across jobs: drain in registration order (the old
+            // single-leader discipline, kept as a comparison baseline).
+            runnable.min_by_key(|(_, q)| q.id).map(|(i, _)| i)
+        }
+    }
+}
+
+/// Shared work-stealing executor with per-job task queues, weighted fair
+/// interleaving across jobs, and cooperative cancellation.
+///
+/// Register a job with [`TrialExecutor::register`], submit tasks through
+/// the returned [`JobTicket`], and drop the ticket when no more tasks will
+/// be submitted. Dropping the executor drains every queued task first
+/// (graceful shutdown), matching the old `JobPool` semantics.
+pub struct TrialExecutor {
+    shared: Arc<ExecShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl TrialExecutor {
+    /// Spawn an executor with `workers` threads (min 1). `fair` selects
+    /// weighted fair interleaving across jobs; `false` falls back to
+    /// strict job-arrival FIFO (head-of-line blocking, kept for A/B
+    /// comparisons and benchmarks).
+    pub fn new(workers: usize, fair: bool) -> TrialExecutor {
+        let workers = workers.max(1);
+        let shared = Arc::new(ExecShared {
+            state: Mutex::new(ExecState {
+                queues: Vec::new(),
+                next_id: 1,
+                shutdown: false,
+                vclock: 0.0,
+            }),
+            work: Condvar::new(),
+            idle: Condvar::new(),
+            fair,
+            workers,
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("trial-exec-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn executor worker")
             })
             .collect();
-        JobPool {
-            tx: Some(tx),
-            handles,
-            workers,
+        TrialExecutor { shared, handles }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.shared.workers
+    }
+
+    /// Whether fair interleaving is enabled.
+    pub fn fair(&self) -> bool {
+        self.shared.fair
+    }
+
+    /// Register a job with the given fair-share `weight` (clamped to
+    /// `[1/16, 16]`; 1.0 = an equal share). Higher weights receive
+    /// proportionally more task dispatches while contended.
+    pub fn register(&self, weight: f64) -> JobTicket {
+        let weight = if weight.is_finite() {
+            weight.clamp(1.0 / 16.0, 16.0)
+        } else {
+            1.0
+        };
+        let cancel = CancelToken::new();
+        let mut st = self.shared.state.lock().unwrap();
+        let id = st.next_id;
+        st.next_id += 1;
+        // A job joining mid-flight starts at the scheduler's current
+        // virtual time, so it shares fairly from now on instead of being
+        // handed an unbounded catch-up burst — clamped to the monotone
+        // clock so an all-idle instant doesn't reset "now" to zero.
+        let vtime = ExecShared::min_vtime(&st).unwrap_or(0.0).max(st.vclock);
+        st.queues.push(JobQueue {
+            id,
+            weight,
+            vtime,
+            tasks: VecDeque::new(),
+            cancel: cancel.clone(),
+            running: 0,
+            closed: false,
+        });
+        JobTicket {
+            id,
+            shared: Arc::clone(&self.shared),
+            cancel,
         }
     }
 
-    /// Submit a job; its result is delivered on `result_tx`.
-    pub fn submit<R, F>(&self, f: F, result_tx: mpsc::Sender<R>)
-    where
-        R: Send + 'static,
-        F: FnOnce() -> R + Send + 'static,
-    {
-        let job: Job = Box::new(move || {
-            let r = f();
-            // Receiver may have hung up if the submitter gave up; ignore.
-            let _ = result_tx.send(r);
-        });
-        self.tx
-            .as_ref()
-            .expect("pool already shut down")
-            .send(job)
-            .expect("worker threads gone");
+    /// Drain all queued tasks and join the workers.
+    pub fn shutdown(mut self) {
+        self.stop();
     }
 
-    /// Wait for all workers to drain and exit.
-    pub fn shutdown(mut self) {
-        self.tx.take(); // close channel
+    fn stop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-impl Drop for JobPool {
+impl Drop for TrialExecutor {
     fn drop(&mut self) {
-        self.tx.take();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        self.stop();
+    }
+}
+
+fn worker_loop(shared: &ExecShared) {
+    loop {
+        let (task, qid) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                ExecShared::sweep_dead(&mut st);
+                if let Some(i) = shared.pick(&st) {
+                    let start = st.queues[i].vtime;
+                    st.vclock = st.vclock.max(start);
+                    let q = &mut st.queues[i];
+                    let task = q.tasks.pop_front().expect("picked queue non-empty");
+                    q.vtime += 1.0 / q.weight;
+                    q.running += 1;
+                    break (task, q.id);
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        // A panicking task must not kill the shared worker or strand the
+        // job's `running` count — confine the panic to the task.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+        if r.is_err() {
+            log::error!("trial executor: task of job {qid} panicked");
         }
+        let mut st = shared.state.lock().unwrap();
+        if let Some(q) = st.queues.iter_mut().find(|q| q.id == qid) {
+            q.running -= 1;
+        }
+        ExecShared::sweep_dead(&mut st);
+        drop(st);
+        shared.idle.notify_all();
+    }
+}
+
+/// Submission handle for one registered job. Dropping it marks the job
+/// finished: remaining queued tasks still run (unless cancelled), then the
+/// queue is removed.
+pub struct JobTicket {
+    id: u64,
+    shared: Arc<ExecShared>,
+    cancel: CancelToken,
+}
+
+impl JobTicket {
+    /// Queue one task for this job. Tasks submitted after cancellation are
+    /// dropped immediately.
+    pub fn submit(&self, task: impl FnOnce() + Send + 'static) {
+        if self.cancel.is_cancelled() {
+            return; // dropped, like queued tasks of a cancelled job
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        if st.shutdown {
+            return;
+        }
+        let now = ExecShared::min_vtime(&st).unwrap_or(0.0).max(st.vclock);
+        if let Some(q) = st.queues.iter_mut().find(|q| q.id == self.id) {
+            if q.tasks.is_empty() && q.running == 0 {
+                // Re-activating an idle queue: advance to the scheduler's
+                // current virtual time so banked idle credit cannot starve
+                // the other jobs with a burst.
+                q.vtime = q.vtime.max(now);
+            }
+            q.tasks.push_back(Box::new(task));
+            drop(st);
+            self.shared.work.notify_one();
+        }
+    }
+
+    /// This job's cancellation token (share it with watchers/cancellers).
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// `(queued, running)` task counts for this job right now. Also
+    /// reclaims cancelled queues on the spot, so a poller observing
+    /// `(0, 0)` after a cancellation knows every queued task was dropped
+    /// even when all workers are parked.
+    pub fn pending(&self) -> (usize, usize) {
+        let mut st = self.shared.state.lock().unwrap();
+        ExecShared::sweep_dead(&mut st);
+        st.queues
+            .iter()
+            .find(|q| q.id == self.id)
+            .map(|q| (q.tasks.len(), q.running))
+            .unwrap_or((0, 0))
+    }
+
+    /// Size of the executor this ticket belongs to (worker threads).
+    pub fn executor_workers(&self) -> usize {
+        self.shared.workers
+    }
+
+    /// Block until this job has no queued or running tasks (used by owners
+    /// draining in-flight work after a cancellation).
+    pub fn wait_idle(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            ExecShared::sweep_dead(&mut st);
+            let busy = st
+                .queues
+                .iter()
+                .find(|q| q.id == self.id)
+                .map(|q| !q.tasks.is_empty() || q.running > 0)
+                .unwrap_or(false);
+            if !busy {
+                return;
+            }
+            st = self.shared.idle.wait(st).unwrap();
+        }
+    }
+}
+
+impl Drop for JobTicket {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        if let Some(q) = st.queues.iter_mut().find(|q| q.id == self.id) {
+            q.closed = true;
+        }
+        ExecShared::sweep_dead(&mut st);
+        drop(st);
+        // Wake workers so an all-idle pool can reap the closed queue.
+        self.shared.work.notify_all();
+        self.shared.idle.notify_all();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::mpsc;
 
     #[test]
     fn parallel_map_preserves_order() {
@@ -150,7 +473,6 @@ mod tests {
     #[test]
     fn parallel_map_actually_parallel() {
         // All workers must be in-flight at once for this to finish quickly.
-        use std::sync::atomic::AtomicUsize;
         let peak = AtomicUsize::new(0);
         let live = AtomicUsize::new(0);
         let items: Vec<usize> = (0..8).collect();
@@ -164,16 +486,223 @@ mod tests {
     }
 
     #[test]
-    fn job_pool_roundtrip() {
-        let pool = JobPool::new(4);
+    fn executor_roundtrip() {
+        let exec = TrialExecutor::new(4, true);
+        let job = exec.register(1.0);
         let (tx, rx) = mpsc::channel();
         for i in 0..100usize {
-            pool.submit(move || i * i, tx.clone());
+            let tx = tx.clone();
+            job.submit(move || {
+                let _ = tx.send(i * i);
+            });
         }
         drop(tx);
         let mut got: Vec<usize> = rx.iter().collect();
         got.sort_unstable();
         assert_eq!(got, (0..100).map(|i| i * i).collect::<Vec<_>>());
-        pool.shutdown();
+        drop(job);
+        exec.shutdown();
+    }
+
+    #[test]
+    fn fair_interleaving_lets_small_job_finish_first() {
+        // One worker, a big job queued first: with fair scheduling the
+        // late-arriving small job must complete long before the big one
+        // drains — the head-of-line-blocking fix this executor exists for.
+        let exec = TrialExecutor::new(1, true);
+        let big = exec.register(1.0);
+        let (btx, brx) = mpsc::channel();
+        for i in 0..50usize {
+            let btx = btx.clone();
+            big.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                let _ = btx.send(i);
+            });
+        }
+        let small = exec.register(1.0);
+        let (stx, srx) = mpsc::channel();
+        small.submit(move || {
+            let _ = stx.send(());
+        });
+        srx.recv_timeout(std::time::Duration::from_secs(10))
+            .expect("small job starved");
+        let big_done = brx.try_iter().count();
+        assert!(
+            big_done < 50,
+            "small job must not wait for the whole big queue"
+        );
+        drop((big, small));
+        exec.shutdown();
+    }
+
+    #[test]
+    fn weights_bias_dispatch_share() {
+        // Single worker, two saturated jobs, weight 4 vs 1: by the time
+        // the light job gets its 5th dispatch, the heavy job must have
+        // received clearly more than an equal share.
+        let exec = TrialExecutor::new(1, true);
+        let heavy = exec.register(4.0);
+        let light = exec.register(1.0);
+        let heavy_done = Arc::new(AtomicUsize::new(0));
+        let (ltx, lrx) = mpsc::channel();
+        for _ in 0..200 {
+            let c = Arc::clone(&heavy_done);
+            heavy.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            });
+        }
+        for i in 0..5usize {
+            let ltx = ltx.clone();
+            let c = Arc::clone(&heavy_done);
+            light.submit(move || {
+                let _ = ltx.send((i, c.load(Ordering::SeqCst)));
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            });
+        }
+        let mut heavy_at_light5 = 0;
+        for _ in 0..5 {
+            let (_, h) = lrx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+            heavy_at_light5 = h;
+        }
+        assert!(
+            heavy_at_light5 >= 10,
+            "weight-4 job got only {heavy_at_light5} dispatches alongside 5 weight-1 ones"
+        );
+        drop((heavy, light));
+        exec.shutdown();
+    }
+
+    #[test]
+    fn cancel_reclaims_queued_tasks() {
+        let exec = TrialExecutor::new(1, true);
+        let job = exec.register(1.0);
+        let ran = Arc::new(AtomicUsize::new(0));
+        let gate = Arc::new(std::sync::Barrier::new(2));
+        {
+            let gate = Arc::clone(&gate);
+            job.submit(move || {
+                gate.wait(); // hold the only worker until cancel lands
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            });
+        }
+        for _ in 0..64 {
+            let ran = Arc::clone(&ran);
+            job.submit(move || {
+                ran.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let token = job.cancel_token();
+        token.cancel();
+        gate.wait(); // release the in-flight task only after cancellation
+        job.wait_idle();
+        assert_eq!(
+            ran.load(Ordering::SeqCst),
+            0,
+            "queued tasks of a cancelled job must be dropped, not run"
+        );
+        // Submissions after cancellation are also dropped.
+        let ran2 = Arc::clone(&ran);
+        job.submit(move || {
+            ran2.fetch_add(1, Ordering::SeqCst);
+        });
+        job.wait_idle();
+        assert_eq!(ran.load(Ordering::SeqCst), 0);
+        drop(job);
+        exec.shutdown();
+    }
+
+    #[test]
+    fn panicking_task_does_not_kill_worker_or_strand_job() {
+        let exec = TrialExecutor::new(1, true);
+        let job = exec.register(1.0);
+        job.submit(|| panic!("boom"));
+        let (tx, rx) = mpsc::channel();
+        job.submit(move || {
+            let _ = tx.send(());
+        });
+        rx.recv_timeout(std::time::Duration::from_secs(10))
+            .expect("worker must survive a panicking task");
+        job.wait_idle();
+        assert_eq!(job.pending(), (0, 0), "panicked task leaked a running slot");
+        drop(job);
+        exec.shutdown();
+    }
+
+    #[test]
+    fn late_job_does_not_start_at_virtual_time_zero() {
+        // Job A banks virtual time, goes idle; job B registers during the
+        // all-idle window. When A resubmits, B must not get thousands of
+        // dispatches of catch-up credit (the monotone vclock clamp).
+        let exec = TrialExecutor::new(1, true);
+        let a = exec.register(1.0);
+        for _ in 0..50 {
+            a.submit(|| {});
+        }
+        a.wait_idle(); // A idle with vtime ≈ 50; executor momentarily empty
+        let b = exec.register(1.0);
+        let a_done = Arc::new(AtomicUsize::new(0));
+        let (btx, brx) = mpsc::channel();
+        for _ in 0..50 {
+            let c = Arc::clone(&a_done);
+            a.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_micros(100));
+            });
+        }
+        for i in 0..5usize {
+            let btx = btx.clone();
+            let c = Arc::clone(&a_done);
+            b.submit(move || {
+                let _ = btx.send((i, c.load(Ordering::SeqCst)));
+                std::thread::sleep(std::time::Duration::from_micros(100));
+            });
+        }
+        let mut a_at_b5 = 0;
+        for _ in 0..5 {
+            let (_, done) = brx
+                .recv_timeout(std::time::Duration::from_secs(10))
+                .unwrap();
+            a_at_b5 = done;
+        }
+        assert!(
+            a_at_b5 >= 2,
+            "job A starved behind a later registrant ({a_at_b5} dispatches)"
+        );
+        drop((a, b));
+        exec.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_queued_tasks() {
+        let exec = TrialExecutor::new(2, false);
+        let job = exec.register(1.0);
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..32 {
+            let done = Arc::clone(&done);
+            job.submit(move || {
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(job);
+        exec.shutdown();
+        assert_eq!(done.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn pending_and_wait_idle_track_job_state() {
+        let exec = TrialExecutor::new(2, true);
+        let job = exec.register(1.0);
+        assert_eq!(job.pending(), (0, 0));
+        let (tx, rx) = mpsc::channel();
+        job.submit(move || {
+            let _ = tx.send(());
+        });
+        rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        job.wait_idle();
+        assert_eq!(job.pending(), (0, 0));
+        assert_eq!(job.executor_workers(), 2);
+        drop(job);
+        exec.shutdown();
     }
 }

@@ -5,8 +5,8 @@
 //! All properties run on the native backend (no artifacts required) so
 //! this suite is independent of `make artifacts`.
 
-use containerstress::coordinator::{run_sweep, Backend, SweepSpec};
-use containerstress::util::prop::{forall_res, forall};
+use containerstress::coordinator::{run_sweep, run_sweep_cached, Backend, SweepSpec};
+use containerstress::util::prop::{forall, forall_res};
 use containerstress::util::rng::Rng;
 
 /// Generate a small random sweep spec (kept tiny: each case really runs).
@@ -255,6 +255,92 @@ fn prop_aggregation_permutation_invariant() {
             if (sa.median - sb.median).abs() > 1e-12 || (sa.mean - sb.mean).abs() > 1e-12 {
                 return Err("summary changed under permutation".into());
             }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_concurrent_jobs_preserve_exhaustive_schedule() {
+    use containerstress::coordinator::jobs::ScopingService;
+    use containerstress::coordinator::CellStore;
+    use containerstress::service::cache::SweepCache;
+    use std::sync::Arc;
+    forall_res(
+        "two concurrent exhaustive jobs reproduce the deterministic per-cell schedule",
+        4,
+        |rng| {
+            let mut a = gen_spec(rng);
+            a.trials = 1 + rng.range_usize(0, 1);
+            let mut b = gen_spec(rng);
+            // Distinct root seeds keep the jobs' cache keys disjoint, so
+            // each job's stored cells are unambiguously its own.
+            b.seed = a.seed ^ 0x9E37_79B9;
+            b.trials = 1 + rng.range_usize(0, 1);
+            (a, b)
+        },
+        |(a, b)| {
+            let cache = Arc::new(SweepCache::in_memory());
+            let svc = ScopingService::start_with_cache(
+                Backend::Native,
+                8,
+                Some(Arc::clone(&cache) as Arc<dyn CellStore>),
+            );
+            let ia = svc.submit(a.clone()).map_err(|e| e.to_string())?;
+            let ib = svc.submit(b.clone()).map_err(|e| e.to_string())?;
+            let ra = svc.wait(ia).map_err(|e| e.to_string())?;
+            let rb = svc.wait(ib).map_err(|e| e.to_string())?;
+
+            // Structure matches a solo reference run: same cells, same
+            // gaps, same per-cell trial counts.
+            let solo = run_sweep(a, Backend::Native).map_err(|e| e.to_string())?;
+            if ra.gap_cells() != solo.gap_cells() {
+                return Err("gap cells differ under concurrent execution".into());
+            }
+            for (x, y) in ra.cells.iter().zip(&solo.cells) {
+                if x.key != y.key {
+                    return Err(format!("cell order differs: {:?} vs {:?}", x.key, y.key));
+                }
+                let (nx, ny) = (
+                    x.train.as_ref().map(|s| s.n),
+                    y.train.as_ref().map(|s| s.n),
+                );
+                if nx != ny {
+                    return Err(format!("cell {:?}: trial counts {nx:?} vs {ny:?}", x.key));
+                }
+            }
+
+            // Bit-identical determinism: replaying each spec against the
+            // shared store must serve every cell verbatim from what its
+            // concurrent job measured — equal summaries bit-for-bit proves
+            // the executor ran exactly the content-derived trial schedule,
+            // in trial-index order, for both jobs at once.
+            for (spec, res) in [(a, &ra), (b, &rb)] {
+                let replay = run_sweep_cached(spec, Backend::Native, Some(&*cache))
+                    .map_err(|e| e.to_string())?;
+                for (x, y) in res.cells.iter().zip(&replay.cells) {
+                    if x.key != y.key || x.violated != y.violated {
+                        return Err(format!("replay structure differs at {:?}", x.key));
+                    }
+                    if x.violated {
+                        continue;
+                    }
+                    let (xt, yt) = (x.train.as_ref().unwrap(), y.train.as_ref().unwrap());
+                    let (xs, ys) = (x.surveil.as_ref().unwrap(), y.surveil.as_ref().unwrap());
+                    if xt.n != yt.n
+                        || xt.median != yt.median
+                        || xt.mean != yt.mean
+                        || xs.median != ys.median
+                        || xs.mean != ys.mean
+                    {
+                        return Err(format!(
+                            "cell {:?}: summaries not bit-identical on replay",
+                            x.key
+                        ));
+                    }
+                }
+            }
+            svc.shutdown();
             Ok(())
         },
     );

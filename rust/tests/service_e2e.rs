@@ -11,7 +11,18 @@ use containerstress::service::Server;
 use containerstress::util::json::Json;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+/// The test harness runs `#[test]`s concurrently in one process, but the
+/// metrics [`Registry`] (and its `sweep.trials` counter) is global — every
+/// test that executes sweeps takes this lock so counter assertions see
+/// only their own trials.
+static SWEEP_LOCK: Mutex<()> = Mutex::new(());
+
+fn sweep_lock() -> std::sync::MutexGuard<'static, ()> {
+    SWEEP_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 fn request(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
     let mut stream = TcpStream::connect(addr).expect("connect");
@@ -84,6 +95,7 @@ fn submit_and_finish(addr: SocketAddr) -> u64 {
 
 #[test]
 fn scope_roundtrip_and_sweep_cache() {
+    let _guard = sweep_lock();
     let server = Server::start(&test_config(), Backend::Native).expect("server");
     let addr = server.addr();
 
@@ -130,6 +142,179 @@ fn scope_roundtrip_and_sweep_cache() {
     assert_eq!(status, 200);
     assert!(m.get("counters").unwrap().get("sweep.cache.hits").is_some());
 
+    server.shutdown();
+}
+
+/// 12 measurable cells × 3 trials on costly `obs` sizes: seconds of work,
+/// so a poller reliably catches it mid-flight even on a fast machine.
+const LARGE_SCOPE_BODY: &str = r#"{
+  "sweep": {"signals": [2, 3], "memvecs": [8, 12, 16], "obs": [4096, 8192],
+            "trials": 3, "seed": 33, "model": "mset2", "workers": 2}
+}"#;
+const LARGE_SCOPE_TRIALS: u64 = 36; // 12 cells × 3 trials
+
+/// One-cell, one-trial request: milliseconds of work.
+const SMALL_SCOPE_BODY: &str = r#"{
+  "sweep": {"signals": [2], "memvecs": [8], "obs": [16],
+            "trials": 1, "seed": 44, "model": "mset2", "workers": 1}
+}"#;
+
+fn submit(addr: SocketAddr, body: &str) -> u64 {
+    let (status, j) = request(addr, "POST", "/v1/scope", Some(body));
+    assert_eq!(status, 202, "{j}");
+    j.get("job_id").unwrap().as_f64().unwrap() as u64
+}
+
+fn job_status(addr: SocketAddr, id: u64) -> (String, Json) {
+    let (status, j) = request(addr, "GET", &format!("/v1/jobs/{id}"), None);
+    assert_eq!(status, 200, "{j}");
+    let st = j.get("status").and_then(Json::as_str).expect("status").to_string();
+    (st, j)
+}
+
+fn progress_field(j: &Json, key: &str) -> usize {
+    j.get("progress")
+        .unwrap_or_else(|| panic!("no progress in {j}"))
+        .get(key)
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| panic!("no progress.{key} in {j}"))
+}
+
+#[test]
+fn cancel_mid_sweep_keeps_partial_cells_and_stops_dispatch() {
+    let _guard = sweep_lock();
+    let server = Server::start(&test_config(), Backend::Native).expect("server");
+    let addr = server.addr();
+    let trials_at_start = Registry::global().counter("sweep.trials");
+    let id = submit(addr, LARGE_SCOPE_BODY);
+
+    // Poll until the sweep is demonstrably mid-flight, asserting progress
+    // is monotone and bounded by the plan the whole way.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut last_done = 0;
+    loop {
+        assert!(Instant::now() < deadline, "job {id} never reached 2 trials");
+        let (status, j) = job_status(addr, id);
+        assert!(
+            matches!(status.as_str(), "queued" | "running" | "done"),
+            "{j}"
+        );
+        let done = progress_field(&j, "trials_done");
+        let planned = progress_field(&j, "trials_planned");
+        assert!(done >= last_done, "progress went backwards: {j}");
+        assert!(
+            planned == 0 || done <= planned,
+            "trials_done overshot trials_planned: {j}"
+        );
+        last_done = done;
+        if done >= 2 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Cancel; the status must settle to `cancelled` (never `failed`).
+    let (status, j) = request(addr, "DELETE", &format!("/v1/jobs/{id}"), None);
+    assert_eq!(status, 202, "{j}");
+    assert_eq!(j.get("status").and_then(Json::as_str), Some("cancelling"));
+    loop {
+        assert!(Instant::now() < deadline, "job {id} never cancelled");
+        let (status, _) = job_status(addr, id);
+        match status.as_str() {
+            "cancelled" => break,
+            "running" | "queued" => std::thread::sleep(Duration::from_millis(10)),
+            other => panic!("cancel produced status {other:?}"),
+        }
+    }
+    // Queued trials were reclaimed: dispatch stops within one quantum.
+    let settled = Registry::global().counter("sweep.trials");
+    std::thread::sleep(Duration::from_millis(150));
+    assert_eq!(
+        Registry::global().counter("sweep.trials"),
+        settled,
+        "trials kept executing after the job was reported cancelled"
+    );
+    assert!(
+        settled - trials_at_start < LARGE_SCOPE_TRIALS,
+        "cancellation should have stopped the sweep early"
+    );
+    // A second DELETE is a 409 — nothing left to cancel.
+    let (status, _) = request(addr, "DELETE", &format!("/v1/jobs/{id}"), None);
+    assert_eq!(status, 409);
+
+    // The trials that did finish were flushed to the cell store...
+    let stored = server.state().cache().len();
+    assert!(stored > 0, "partial cells must be in the cache");
+
+    // ...so the identical scope resubmitted completes from that prefix
+    // with strictly fewer fresh trials than a cold run.
+    let before_resubmit = Registry::global().counter("sweep.trials");
+    let id2 = submit(addr, LARGE_SCOPE_BODY);
+    loop {
+        assert!(Instant::now() < deadline, "resubmitted job timed out");
+        let (status, j) = job_status(addr, id2);
+        match status.as_str() {
+            "done" => {
+                let r = j.get("result").expect("summary");
+                assert_eq!(r.get("cells").unwrap().as_usize(), Some(12));
+                break;
+            }
+            "queued" | "running" => std::thread::sleep(Duration::from_millis(10)),
+            other => panic!("resubmitted job status {other:?}"),
+        }
+    }
+    let fresh = Registry::global().counter("sweep.trials") - before_resubmit;
+    assert!(
+        fresh < LARGE_SCOPE_TRIALS,
+        "resubmission must reuse the cancelled job's cached trials ({fresh} fresh)"
+    );
+    assert!(
+        server.state().cache().hits() > 0,
+        "resubmission must hit the partial cells"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_jobs_interleave_small_overtakes_large() {
+    let _guard = sweep_lock();
+    let server = Server::start(&test_config(), Backend::Native).expect("server");
+    let addr = server.addr();
+    let large = submit(addr, LARGE_SCOPE_BODY);
+    let small = submit(addr, SMALL_SCOPE_BODY);
+    assert_ne!(large, small);
+
+    // The small job, submitted second, must finish while the large sweep
+    // is still in flight — the fair-scheduling acceptance criterion.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        assert!(Instant::now() < deadline, "small job timed out");
+        let (status, j) = job_status(addr, small);
+        match status.as_str() {
+            "done" => {
+                let (large_status, lj) = job_status(addr, large);
+                assert!(
+                    matches!(large_status.as_str(), "queued" | "running"),
+                    "small job did not overtake the large one: {lj}"
+                );
+                break;
+            }
+            "queued" | "running" => std::thread::sleep(Duration::from_millis(2)),
+            other => panic!("small job status {other:?}"),
+        }
+    }
+    // Cancel the large job rather than riding it out; it must settle.
+    let (status, _) = request(addr, "DELETE", &format!("/v1/jobs/{large}"), None);
+    assert_eq!(status, 202);
+    loop {
+        assert!(Instant::now() < deadline, "large job never settled");
+        let (status, _) = job_status(addr, large);
+        match status.as_str() {
+            "cancelled" => break,
+            "queued" | "running" => std::thread::sleep(Duration::from_millis(10)),
+            other => panic!("large job status {other:?}"),
+        }
+    }
     server.shutdown();
 }
 
