@@ -1,0 +1,240 @@
+//! **BENCH-fleet**: the fleet scenario engine replays from surface
+//! oracles — it must never pay for Monte Carlo trials the cache already
+//! holds.
+//!
+//! Two assertions:
+//!
+//! 1. **Oracle replay speed** — a 1000-tenant × 365-epoch workload-mode
+//!    scenario (diurnal cycles, growth, per-tenant jitter, workload drift
+//!    across the design grid) replays in **< 1 s** with **zero fresh
+//!    Monte Carlo trials**: every per-epoch cost query is answered by the
+//!    fitted surfaces or the warm cell cache.
+//! 2. **Degenerate-case fidelity** — a single-tenant, jitter-free
+//!    scenario built through the JSON spec path reproduces
+//!    `shapes::elastic::compare`'s reactive-vs-pre-scoped crossover
+//!    **bit-identically** (totals compared via `f64::to_bits`).
+//!
+//! Output: `results/BENCH_fleet.json` + `results/fleet_scenarios.csv`.
+//! `CS_BENCH_QUICK=1` is accepted (and recorded in the JSON) for CI
+//! symmetry with the other benches, but changes nothing here: the
+//! warm-up sweep is already tiny and the full-scale replay *is* the
+//! thing under test.
+
+use containerstress::bench::figs;
+use containerstress::coordinator::{run_sweep_cached, Backend, CellStore, SweepSpec};
+use containerstress::metrics::Registry;
+use containerstress::recommend::PolicyPoint;
+use containerstress::report;
+use containerstress::scenario::spec::{ArrivalSpec, DemandKind, DemandSpec, WorkloadSpec};
+use containerstress::scenario::{run_scenario, Backstop, ScenarioSpec, SurfaceOracle};
+use containerstress::service::SweepCache;
+use containerstress::shapes::elastic::{compare, ElasticPolicy, GrowthTrace};
+use containerstress::shapes::Workload;
+use containerstress::util::json::Json;
+use std::time::Instant;
+
+const TENANTS: usize = 1000;
+const EPOCHS: usize = 365;
+
+/// The oracle's measurement grid: 12 measurable cells, milliseconds per
+/// trial on the native backend. Workload drift is kept inside this box so
+/// the replay is pure surface math.
+fn oracle_sweep() -> SweepSpec {
+    SweepSpec {
+        signals: vec![2, 3],
+        memvecs: vec![8, 12, 16],
+        obs: vec![16, 32],
+        trials: 1,
+        seed: 9,
+        model: "mset2".into(),
+        workers: 0,
+        ..SweepSpec::default()
+    }
+}
+
+fn fleet_scenario() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "bench-fleet".into(),
+        seed: 11,
+        epochs: EPOCHS,
+        hours_per_epoch: 24.0,
+        arrivals: ArrivalSpec {
+            initial: 400,
+            rate_per_epoch: 2.0,
+            max_tenants: TENANTS,
+        },
+        demand: DemandSpec {
+            base: 1.0,
+            growth_per_epoch: 1.003,
+            jitter: 0.3,
+            kind: DemandKind::Diurnal {
+                amplitude: 0.4,
+                period: 7,
+            },
+        },
+        workload: Some(WorkloadSpec {
+            base: Workload {
+                n_signals: 2,
+                n_memvec: 8,
+                obs_per_sec: 400.0,
+                train_window: 32,
+            },
+            drift: containerstress::scenario::spec::WorkloadDrift {
+                signals_growth: 1.001,
+                memvecs_growth: 1.0015,
+            },
+        }),
+        ..ScenarioSpec::default()
+    }
+}
+
+/// The single-tenant degenerate scenario: constant-kind demand with zero
+/// jitter is bit-identical to `GrowthTrace::exponential`.
+fn degenerate_scenario(d0: f64, growth: f64, epochs: usize) -> ScenarioSpec {
+    let json = format!(
+        r#"{{
+          "name": "degenerate", "seed": 1, "epochs": {epochs},
+          "hours_per_epoch": 24,
+          "arrivals": {{"initial": 1, "rate_per_epoch": 0, "max_tenants": 1}},
+          "demand": {{"kind": "constant", "base": {d0},
+                      "growth_per_epoch": {growth}, "jitter": 0}},
+          "policies": [
+            {{"kind": "prescoped", "headroom": 0.8}},
+            {{"kind": "reactive"}}
+          ]
+        }}"#
+    );
+    ScenarioSpec::from_json(&Json::parse(&json).unwrap()).unwrap()
+}
+
+fn main() {
+    containerstress::util::logger::init();
+    let quick = figs::quick();
+
+    // --- warm-up: measure the oracle grid once (cold cache) -------------
+    let cache = SweepCache::in_memory();
+    let sweep = oracle_sweep();
+    let t0 = Instant::now();
+    let result = run_sweep_cached(&sweep, Backend::Native, Some(&cache)).expect("oracle sweep");
+    let warmup_s = t0.elapsed().as_secs_f64();
+    let oracle = SurfaceOracle::from_sweep(&result).expect("fit oracle");
+    println!(
+        "fleet_scenarios: oracle grid measured in {warmup_s:.3}s ({} cells cached)",
+        cache.len()
+    );
+
+    // --- assertion 1: trial-free oracle replay under 1 second ------------
+    let scenario = fleet_scenario();
+    let trials_before = Registry::global().counter("sweep.trials");
+    let backend = Backend::Native;
+    let backstop = Backstop {
+        spec: &sweep,
+        backend: &backend,
+        cache: Some(&cache as &dyn CellStore),
+    };
+    let t0 = Instant::now();
+    let outcome =
+        run_scenario(&scenario, Some(&oracle), Some(&backstop)).expect("fleet replay");
+    let replay_s = t0.elapsed().as_secs_f64();
+    let fresh_trials = Registry::global().counter("sweep.trials") - trials_before;
+    let stats = oracle.stats();
+    println!(
+        "replayed {} tenants × {} epochs × {} policies in {replay_s:.3}s \
+         ({} surface + {} memo answers, {} fresh trials)",
+        outcome.tenants,
+        outcome.epochs,
+        outcome.policies.len(),
+        stats.surface_hits,
+        stats.memo_hits,
+        fresh_trials
+    );
+    println!("{}", outcome.render());
+    assert_eq!(outcome.tenants, TENANTS, "fleet must reach full size");
+    assert_eq!(
+        fresh_trials, 0,
+        "an in-domain replay must never execute a Monte Carlo trial"
+    );
+    assert_eq!(stats.fresh_trials, 0, "oracle backstop must stay idle");
+    assert!(
+        replay_s < 1.0,
+        "1k-tenant × 365-epoch oracle replay took {replay_s:.3}s (budget 1s)"
+    );
+
+    // --- assertion 2: degenerate scenario == shapes::elastic, bitwise ----
+    let mut mismatches = 0;
+    for (d0, growth, epochs) in [(0.5, 1.04, 80), (0.3, 1.02, 200), (1.0, 1.01, 120)] {
+        let spec = degenerate_scenario(d0, growth, epochs);
+        let out = run_scenario(&spec, None, None).expect("degenerate replay");
+        let trace = GrowthTrace::exponential(d0, growth, epochs, 24.0).unwrap();
+        let (fixed, elastic) = compare(&trace, &ElasticPolicy::default());
+        let pairs = [
+            (&out.policies[0], &fixed),
+            (&out.policies[1], &elastic),
+        ];
+        for (engine, reference) in pairs {
+            if engine.total_usd.to_bits() != reference.total_usd.to_bits()
+                || engine.violation_epochs != reference.violation_epochs
+                || engine.migrations != reference.migrations
+            {
+                mismatches += 1;
+                eprintln!(
+                    "MISMATCH d0={d0} g={growth}: engine ({}, {}, {}) vs elastic \
+                     ({}, {}, {})",
+                    engine.total_usd,
+                    engine.violation_epochs,
+                    engine.migrations,
+                    reference.total_usd,
+                    reference.violation_epochs,
+                    reference.migrations
+                );
+            }
+        }
+    }
+    assert_eq!(
+        mismatches, 0,
+        "single-tenant scenarios must reproduce shapes::elastic bit-identically"
+    );
+    println!("degenerate single-tenant crossover: bit-identical to shapes::elastic");
+
+    // --- emit artifacts ---------------------------------------------------
+    let dir = std::path::Path::new("results");
+    let points: Vec<PolicyPoint> = outcome.policy_points();
+    let policies_json: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("policy", Json::Str(p.label.clone())),
+                ("total_usd", Json::Num(p.total_usd)),
+                ("violation_epochs", Json::Num(p.violation_epochs as f64)),
+                ("migrations", Json::Num(p.migrations as f64)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::Str("fleet_scenarios".into())),
+        ("quick", Json::Bool(quick)),
+        ("tenants", Json::Num(outcome.tenants as f64)),
+        ("epochs", Json::Num(outcome.epochs as f64)),
+        ("oracle_warmup_s", Json::Num(warmup_s)),
+        ("replay_s", Json::Num(replay_s)),
+        ("fresh_trials", Json::Num(fresh_trials as f64)),
+        ("surface_hits", Json::Num(stats.surface_hits as f64)),
+        ("memo_hits", Json::Num(stats.memo_hits as f64)),
+        ("policies", Json::Arr(policies_json)),
+        (
+            "pareto",
+            Json::arr_f64(&outcome.pareto.iter().map(|&i| i as f64).collect::<Vec<_>>()),
+        ),
+        ("degenerate_bit_identical", Json::Bool(true)),
+    ]);
+    report::write(dir, "BENCH_fleet.json", &json.to_pretty()).unwrap();
+    let mut csv = String::from("policy,total_usd,violation_epochs,migrations\n");
+    for p in &points {
+        csv.push_str(&format!(
+            "{},{},{},{}\n",
+            p.label, p.total_usd, p.violation_epochs, p.migrations
+        ));
+    }
+    report::write(dir, "fleet_scenarios.csv", &csv).unwrap();
+    println!("fleet_scenarios done → results/BENCH_fleet.json, results/fleet_scenarios.csv");
+}

@@ -6,6 +6,7 @@
 //! reproducible from a single file.
 
 use crate::coordinator::SweepSpec;
+use crate::scenario::ScenarioSpec;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use std::path::PathBuf;
@@ -23,6 +24,10 @@ pub struct Config {
     pub sweep: SweepSpec,
     /// `containerstress serve` settings.
     pub service: ServiceConfig,
+    /// Fleet scenario for `containerstress simulate` — from the config
+    /// file's `"scenario"` object or a `--scenario file.json` flag;
+    /// `None` makes `simulate` fall back to the built-in demo scenario.
+    pub scenario: Option<ScenarioSpec>,
 }
 
 /// `containerstress serve` settings.
@@ -150,6 +155,7 @@ impl Default for Config {
             backend: "device".into(),
             sweep: SweepSpec::default(),
             service: ServiceConfig::default(),
+            scenario: None,
         }
     }
 }
@@ -178,6 +184,11 @@ impl Config {
         }
         if let Some(s) = j.get("sweep") {
             self.sweep = sweep_spec_from_json(&self.sweep, s)?;
+        }
+        match j.get("scenario") {
+            None => {}
+            Some(Json::Null) => self.scenario = None,
+            Some(s) => self.scenario = Some(ScenarioSpec::from_json(s)?),
         }
         if let Some(s) = j.get("service") {
             // Same rule as the sweep section: a present-but-malformed key
@@ -275,6 +286,29 @@ impl Config {
                 Some(PathBuf::from(v))
             };
         }
+        if let Some(path) = args.get("scenario") {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("scenario {path}: {e}"))?;
+            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("scenario {path}: {e}"))?;
+            self.scenario = Some(ScenarioSpec::from_json(&j)?);
+        }
+        // simulate overrides: tweak the loaded scenario in place. With no
+        // scenario loaded, an override flag materialises the built-in demo
+        // first — otherwise `simulate --epochs 12` would silently run the
+        // untouched demo defaults.
+        let wants_override = args.get("epochs").is_some()
+            || args.get("tenants").is_some()
+            || args.get("scenario-seed").is_some();
+        if self.scenario.is_none() && wants_override {
+            self.scenario = Some(ScenarioSpec::default());
+        }
+        if let Some(s) = &mut self.scenario {
+            s.epochs = args.get_usize("epochs", s.epochs)?;
+            s.seed = args.get_u64("scenario-seed", s.seed)?;
+            let n = args.get_usize("tenants", s.arrivals.max_tenants)?;
+            s.arrivals.max_tenants = n;
+            s.arrivals.initial = s.arrivals.initial.min(n);
+        }
         self.validate()
     }
 
@@ -298,12 +332,15 @@ impl Config {
         self.sweep.validate()?;
         anyhow::ensure!(self.service.queue_cap >= 1, "queue_cap must be ≥ 1");
         anyhow::ensure!(!self.service.host.is_empty(), "service host must be set");
+        if let Some(s) = &self.scenario {
+            s.validate()?;
+        }
         Ok(())
     }
 
     /// Serialise back to JSON (for run provenance in results/).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             (
                 "artifact_dir",
                 Json::Str(self.artifact_dir.display().to_string()),
@@ -367,7 +404,11 @@ impl Config {
                     ("fair_share", Json::Bool(self.service.fair_share)),
                 ]),
             ),
-        ])
+        ];
+        if let Some(s) = &self.scenario {
+            fields.push(("scenario", s.to_json()));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -546,6 +587,67 @@ mod tests {
         std::fs::write(
             &path,
             r#"{"backend": "native", "service": {"executor_workers": -2}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_file(path.to_str().unwrap()).is_err());
+    }
+
+    #[test]
+    fn scenario_from_file_flag_and_overrides() {
+        // config-file "scenario" object round-trips through to_json
+        let path = std::env::temp_dir().join("cs_config_scenario.json");
+        std::fs::write(
+            &path,
+            r#"{"backend": "native",
+                "scenario": {"name": "cfg", "epochs": 40,
+                             "demand": {"kind": "steps", "step_every": 8}}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_file(path.to_str().unwrap()).unwrap();
+        let s = cfg.scenario.as_ref().expect("scenario loaded");
+        assert_eq!(s.name, "cfg");
+        assert_eq!(s.epochs, 40);
+        let path2 = std::env::temp_dir().join("cs_config_scenario2.json");
+        std::fs::write(&path2, cfg.to_json().to_pretty()).unwrap();
+        let cfg2 = Config::from_file(path2.to_str().unwrap()).unwrap();
+        assert_eq!(cfg2.scenario.as_ref().unwrap().epochs, 40);
+
+        // --scenario FILE + CLI overrides
+        let spath = std::env::temp_dir().join("cs_scenario_spec.json");
+        std::fs::write(&spath, r#"{"name": "flagged", "epochs": 30}"#).unwrap();
+        let mut cfg = Config::default();
+        cfg.apply_args(&args(&format!(
+            "simulate --backend native --scenario {} --epochs 12 \
+             --tenants 5 --scenario-seed 42",
+            spath.to_str().unwrap()
+        )))
+        .unwrap();
+        let s = cfg.scenario.unwrap();
+        assert_eq!(s.name, "flagged");
+        assert_eq!(s.epochs, 12);
+        assert_eq!(s.seed, 42);
+        assert_eq!(s.arrivals.max_tenants, 5);
+        assert!(s.arrivals.initial <= 5);
+
+        // override flags with no scenario loaded materialise the demo
+        // first (otherwise `simulate --epochs 9` would silently run the
+        // untouched defaults)
+        let mut cfg = Config::default();
+        cfg.apply_args(&args("simulate --backend native --epochs 9"))
+            .unwrap();
+        assert_eq!(cfg.scenario.unwrap().epochs, 9);
+
+        // a malformed scenario in a config file is an error
+        std::fs::write(
+            &path,
+            r#"{"backend": "native", "scenario": {"epochs": "many"}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_file(path.to_str().unwrap()).is_err());
+        // an invalid scenario fails validation
+        std::fs::write(
+            &path,
+            r#"{"backend": "native", "scenario": {"epochs": 0}}"#,
         )
         .unwrap();
         assert!(Config::from_file(path.to_str().unwrap()).is_err());

@@ -18,7 +18,12 @@ use super::sweep::{
     run_sweep_executor, Backend, Cancelled, CellStore, ProgressSnapshot, SweepProgress,
     SweepResult, SweepSpec,
 };
-use crate::util::threadpool::{CancelToken, TrialExecutor};
+use crate::scenario::fleet::{
+    run_scenario_executor, ScenarioOutcome, ScenarioProgress, ScenarioSnapshot,
+};
+use crate::scenario::oracle::{MeasureCtx, SurfaceOracle};
+use crate::scenario::spec::ScenarioSpec;
+use crate::util::threadpool::{CancelToken, JobTicket, TrialExecutor};
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -39,6 +44,8 @@ pub enum JobStatus {
     Running,
     /// Sweep finished; the result is shared until evicted.
     Done(Arc<SweepResult>),
+    /// Scenario replay finished; the outcome is shared until evicted.
+    DoneScenario(Arc<ScenarioOutcome>),
     /// Cancelled via [`ScopingService::cancel`]; trials measured before
     /// the cancellation are in the cell store.
     Cancelled,
@@ -66,6 +73,8 @@ pub struct ScopeJob {
 struct JobEntry {
     status: JobStatus,
     progress: Arc<SweepProgress>,
+    /// Present for scenario jobs only (also how they are told apart).
+    scenario: Option<Arc<ScenarioProgress>>,
     cancel: CancelToken,
 }
 
@@ -150,6 +159,102 @@ impl ScopingService {
     /// weight-2 job's trials are dispatched twice as often as a weight-1
     /// job's.
     pub fn submit_weighted(&self, spec: SweepSpec, weight: f64) -> anyhow::Result<JobId> {
+        let backend = self.backend.clone();
+        let cache = self.cache.clone();
+        self.spawn_driver(weight, None, move |ticket, progress| {
+            let result =
+                run_sweep_executor(&spec, backend, cache.as_deref(), &ticket, &progress);
+            match result {
+                Ok(r) => JobStatus::Done(Arc::new(r)),
+                Err(e) if e.is::<Cancelled>() => JobStatus::Cancelled,
+                Err(e) => JobStatus::Failed(e.to_string()),
+            }
+        })
+    }
+
+    /// Submit a fleet scenario replay with an equal fair share; it runs
+    /// as a job like any sweep (same queue cap, progress, cancellation).
+    /// See [`ScopingService::submit_scenario_weighted`].
+    pub fn submit_scenario(
+        &self,
+        scenario: ScenarioSpec,
+        sweep: Option<SweepSpec>,
+    ) -> anyhow::Result<JobId> {
+        self.submit_scenario_weighted(scenario, sweep, 1.0)
+    }
+
+    /// Submit a fleet scenario replay with an explicit fair-share weight.
+    ///
+    /// Workload-mode scenarios require `sweep`: the job first runs that
+    /// sweep through the shared executor (a warm cell cache serves it
+    /// without executing a single trial) and fits the surface oracle from
+    /// it; the same spec is the content-address template for any
+    /// out-of-domain backstop cells the replay needs. Direct-mode
+    /// scenarios may pass `sweep` purely for the backstop, or `None`.
+    /// Specs are validated here so callers get a clean error instead of a
+    /// failed job.
+    pub fn submit_scenario_weighted(
+        &self,
+        scenario: ScenarioSpec,
+        sweep: Option<SweepSpec>,
+        weight: f64,
+    ) -> anyhow::Result<JobId> {
+        scenario.validate()?;
+        if let Some(s) = &sweep {
+            s.validate()?;
+        }
+        anyhow::ensure!(
+            scenario.workload.is_none() || sweep.is_some(),
+            "workload-mode scenario needs a sweep spec to fit its oracle"
+        );
+        let backend = self.backend.clone();
+        let cache = self.cache.clone();
+        let scen_progress = Arc::new(ScenarioProgress::default());
+        let scen = Arc::clone(&scen_progress);
+        self.spawn_driver(weight, Some(scen_progress), move |ticket, sweep_progress| {
+            let run = || -> anyhow::Result<ScenarioOutcome> {
+                let oracle = match (&scenario.workload, &sweep) {
+                    (Some(_), Some(spec)) => {
+                        let result = run_sweep_executor(
+                            spec,
+                            backend.clone(),
+                            cache.as_deref(),
+                            &ticket,
+                            &sweep_progress,
+                        )?;
+                        Some(SurfaceOracle::from_sweep(&result)?)
+                    }
+                    _ => None,
+                };
+                let ctx = sweep.as_ref().map(|spec| MeasureCtx {
+                    spec,
+                    backend: &backend,
+                    cache: cache.as_deref(),
+                    ticket: &ticket,
+                });
+                run_scenario_executor(&scenario, oracle.as_ref(), ctx.as_ref(), &ticket, &scen)
+            };
+            match run() {
+                Ok(o) => JobStatus::DoneScenario(Arc::new(o)),
+                Err(e) if e.is::<Cancelled>() => JobStatus::Cancelled,
+                Err(e) => JobStatus::Failed(e.to_string()),
+            }
+        })
+    }
+
+    /// Shared driver machinery behind both job kinds: reserve a slot
+    /// under the queue cap, register an executor job, run `work` on a
+    /// named driver thread, and record its final status (evicting the
+    /// oldest completed jobs beyond the retention bound).
+    fn spawn_driver<F>(
+        &self,
+        weight: f64,
+        scenario: Option<Arc<ScenarioProgress>>,
+        work: F,
+    ) -> anyhow::Result<JobId>
+    where
+        F: FnOnce(JobTicket, Arc<SweepProgress>) -> JobStatus + Send + 'static,
+    {
         // Count + insert under one jobs lock, so concurrent submitters
         // cannot jointly overshoot the cap (check-then-act would race).
         let ticket = self.exec.register(weight);
@@ -173,14 +278,13 @@ impl ScopingService {
                 JobEntry {
                     status: JobStatus::Queued,
                     progress: Arc::clone(&progress),
+                    scenario,
                     cancel: ticket.cancel_token(),
                 },
             );
             id
         };
         let shared = Arc::clone(&self.shared);
-        let backend = self.backend.clone();
-        let cache = self.cache.clone();
         let driver = std::thread::Builder::new()
             .name(format!("scope-job-{id}"))
             .spawn(move || {
@@ -190,13 +294,7 @@ impl ScopingService {
                         e.status = JobStatus::Running;
                     }
                 }
-                let result =
-                    run_sweep_executor(&spec, backend, cache.as_deref(), &ticket, &progress);
-                let status = match result {
-                    Ok(r) => JobStatus::Done(Arc::new(r)),
-                    Err(e) if e.is::<Cancelled>() => JobStatus::Cancelled,
-                    Err(e) => JobStatus::Failed(e.to_string()),
-                };
+                let status = work(ticket, progress);
                 let mut jobs = shared.jobs.lock().unwrap();
                 if let Some(e) = jobs.get_mut(&id) {
                     e.status = status;
@@ -296,7 +394,10 @@ impl ScopingService {
     }
 
     /// Live progress snapshot of a job (available from submission until
-    /// eviction; final values remain visible after completion).
+    /// eviction; final values remain visible after completion). For
+    /// scenario jobs this covers the embedded oracle sweep (if any); the
+    /// replay itself reports through
+    /// [`ScopingService::scenario_progress`].
     pub fn progress(&self, id: JobId) -> Option<ProgressSnapshot> {
         self.shared
             .jobs
@@ -306,14 +407,49 @@ impl ScopingService {
             .map(|e| e.progress.snapshot())
     }
 
-    /// Block until a job completes; errors for failed, cancelled, or
-    /// unknown jobs.
+    /// Live replay progress of a scenario job; `None` for unknown ids
+    /// **and** for sweep jobs (which is how the service tells the two
+    /// kinds apart).
+    pub fn scenario_progress(&self, id: JobId) -> Option<ScenarioSnapshot> {
+        self.shared
+            .jobs
+            .lock()
+            .unwrap()
+            .get(&id)
+            .and_then(|e| e.scenario.as_ref().map(|p| p.snapshot()))
+    }
+
+    /// Block until a sweep job completes; errors for failed, cancelled,
+    /// unknown, or scenario jobs.
     pub fn wait(&self, id: JobId) -> anyhow::Result<Arc<SweepResult>> {
         let mut jobs = self.shared.jobs.lock().unwrap();
         loop {
             match jobs.get(&id).map(|e| &e.status) {
                 None => anyhow::bail!("unknown job {id}"),
                 Some(JobStatus::Done(r)) => return Ok(Arc::clone(r)),
+                Some(JobStatus::DoneScenario(_)) => {
+                    anyhow::bail!("job {id} is a scenario job; use wait_scenario")
+                }
+                Some(JobStatus::Cancelled) => anyhow::bail!("job {id} cancelled"),
+                Some(JobStatus::Failed(e)) => anyhow::bail!("job {id} failed: {e}"),
+                Some(_) => {
+                    jobs = self.shared.done.wait(jobs).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Block until a scenario job completes; errors for failed,
+    /// cancelled, unknown, or sweep jobs.
+    pub fn wait_scenario(&self, id: JobId) -> anyhow::Result<Arc<ScenarioOutcome>> {
+        let mut jobs = self.shared.jobs.lock().unwrap();
+        loop {
+            match jobs.get(&id).map(|e| &e.status) {
+                None => anyhow::bail!("unknown job {id}"),
+                Some(JobStatus::DoneScenario(o)) => return Ok(Arc::clone(o)),
+                Some(JobStatus::Done(_)) => {
+                    anyhow::bail!("job {id} is a sweep job; use wait")
+                }
                 Some(JobStatus::Cancelled) => anyhow::bail!("job {id} cancelled"),
                 Some(JobStatus::Failed(e)) => anyhow::bail!("job {id} failed: {e}"),
                 Some(_) => {
@@ -492,6 +628,106 @@ mod tests {
             "small job must complete while the large sweep is still running"
         );
         svc.wait(large).unwrap();
+        svc.shutdown();
+    }
+
+    fn tiny_scenario() -> ScenarioSpec {
+        use crate::scenario::spec::{ArrivalSpec, DemandKind, DemandSpec};
+        ScenarioSpec {
+            name: "jobs-test".into(),
+            epochs: 24,
+            arrivals: ArrivalSpec {
+                initial: 3,
+                rate_per_epoch: 0.2,
+                max_tenants: 6,
+            },
+            demand: DemandSpec {
+                base: 0.5,
+                growth_per_epoch: 1.02,
+                jitter: 0.1,
+                kind: DemandKind::Constant,
+            },
+            ..ScenarioSpec::default()
+        }
+    }
+
+    #[test]
+    fn scenario_job_roundtrip_with_progress() {
+        let svc = ScopingService::start(Backend::Native, 8);
+        let id = svc.submit_scenario(tiny_scenario(), None).unwrap();
+        let out = svc.wait_scenario(id).unwrap();
+        assert_eq!(out.policies.len(), 3);
+        assert!(out.tenants >= 3);
+        let p = svc.scenario_progress(id).expect("scenario progress");
+        assert_eq!(p.units_done, p.units_total);
+        assert_eq!(p.units_total, out.policies.len() * out.tenants);
+        // the wrong waiter reports a type mismatch, not a hang
+        let err = svc.wait(id).unwrap_err().to_string();
+        assert!(err.contains("scenario"), "{err}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn scenario_jobs_are_distinguishable_from_sweeps() {
+        let svc = ScopingService::start(Backend::Native, 8);
+        let sweep_id = svc.submit(tiny_spec()).unwrap();
+        svc.wait(sweep_id).unwrap();
+        assert!(svc.scenario_progress(sweep_id).is_none());
+        let err = svc.wait_scenario(sweep_id).unwrap_err().to_string();
+        assert!(err.contains("sweep job"), "{err}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn workload_scenario_needs_sweep_and_runs_with_one() {
+        let svc = ScopingService::start(Backend::Native, 8);
+        let scenario = ScenarioSpec {
+            workload: Some(crate::scenario::spec::WorkloadSpec {
+                base: crate::shapes::Workload {
+                    n_signals: 2,
+                    n_memvec: 8,
+                    obs_per_sec: 0.01,
+                    train_window: 32,
+                },
+                drift: Default::default(),
+            }),
+            ..tiny_scenario()
+        };
+        // no sweep: a clean submit-time error, not a failed job
+        let err = svc
+            .submit_scenario(scenario.clone(), None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("sweep"), "{err}");
+        // a 12-cell oracle sweep makes it run end to end
+        let sweep = SweepSpec {
+            signals: vec![2, 3],
+            memvecs: vec![8, 12, 16],
+            obs: vec![16, 32],
+            trials: 1,
+            seed: 5,
+            model: "mset2".into(),
+            workers: 2,
+            ..SweepSpec::default()
+        };
+        let id = svc.submit_scenario(scenario, Some(sweep)).unwrap();
+        let out = svc.wait_scenario(id).unwrap();
+        let oracle = out.oracle.expect("workload mode reports oracle stats");
+        assert!(oracle.surface_hits + oracle.memo_hits > 0);
+        let p = svc.progress(id).expect("sweep progress present");
+        assert_eq!(p.cells_total, 12, "embedded oracle sweep ran");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn invalid_scenario_rejected_at_submit() {
+        let svc = ScopingService::start(Backend::Native, 8);
+        let bad = ScenarioSpec {
+            epochs: 0,
+            ..tiny_scenario()
+        };
+        assert!(svc.submit_scenario(bad, None).is_err());
+        assert_eq!(svc.in_flight(), 0, "no slot may leak on rejection");
         svc.shutdown();
     }
 

@@ -13,7 +13,8 @@
 //!   surface-model cell pruning;
 //! - [`jobs`]    — the multi-job service front over the shared
 //!   [`crate::util::threadpool::TrialExecutor`] (fair scheduling, live
-//!   progress, cancellation).
+//!   progress, cancellation); carries both sweep jobs and
+//!   [`crate::scenario`] fleet-replay jobs.
 
 pub mod jobs;
 pub mod planner;

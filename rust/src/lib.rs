@@ -26,9 +26,12 @@
 //! Carlo sweep — exhaustive or adaptive via [`coordinator::planner`]) →
 //! `surface` (response-surface fit) → `recommend` (cloud-shape choice),
 //! with [`service`] wrapping the whole pipeline in a multi-tenant HTTP
-//! JSON API backed by a content-addressed cell-level sweep cache. See
-//! `docs/ARCHITECTURE.md` for the full map and `docs/API.md` for the
-//! service endpoints.
+//! JSON API backed by a content-addressed cell-level sweep cache. On top
+//! sits the [`scenario`] subsystem (`containerstress simulate`,
+//! `POST /v1/scenarios`): trace-driven fleet what-if simulation that
+//! queries the fitted surfaces as an online cost oracle instead of
+//! re-running Monte Carlo trials. See `docs/ARCHITECTURE.md` for the
+//! full map and `docs/API.md` for the service endpoints.
 //!
 //! ## Example: sweep a tiny grid and recommend a shape
 //!
@@ -69,6 +72,7 @@ pub mod mset;
 pub mod recommend;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod service;
 pub mod shapes;
 pub mod surface;

@@ -3,6 +3,7 @@
 //! ```text
 //! containerstress sweep     run a Monte Carlo cost sweep, emit surfaces
 //! containerstress scope     sweep + fit surfaces + recommend cloud shapes
+//! containerstress simulate  fleet what-if scenario replay over surface oracles
 //! containerstress serve     multi-tenant scoping service (HTTP JSON API)
 //! containerstress speedup   emit the GPU speedup surfaces (Figs. 6–8)
 //! containerstress synth     synthesize TPSS telemetry to CSV
@@ -65,6 +66,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
     match args.subcommand.as_deref() {
         Some("sweep") => cmd_sweep(args),
         Some("scope") => cmd_scope(args),
+        Some("simulate") => cmd_simulate(args),
         Some("serve") => cmd_serve(args),
         Some("speedup") => cmd_speedup(args),
         Some("synth") => cmd_synth(args),
@@ -84,18 +86,23 @@ fn print_help() {
         "containerstress — autonomous cloud-node scoping for big-data ML use cases\n\
          \n\
          subcommands:\n\
-           sweep    Monte Carlo compute-cost sweep over (signals × memvecs × obs)\n\
-           scope    sweep + response surfaces + cloud-shape recommendation\n\
-           serve    multi-tenant scoping service: HTTP JSON API + sweep cache\n\
-           speedup  GPU speedup-factor surfaces (paper Figs. 6-8)\n\
-           synth    synthesize TPSS telemetry to CSV\n\
-           detect   MSET2 + SPRT anomaly-detection demo\n\
-           shapes   print the cloud shape catalog\n\
-           elastic  pre-scoped vs autoscaled cost/violation simulation\n\
+           sweep     Monte Carlo compute-cost sweep over (signals × memvecs × obs)\n\
+           scope     sweep + response surfaces + cloud-shape recommendation\n\
+           simulate  fleet what-if scenario replay (policies × tenants × epochs)\n\
+           serve     multi-tenant scoping service: HTTP JSON API + sweep cache\n\
+           speedup   GPU speedup-factor surfaces (paper Figs. 6-8)\n\
+           synth     synthesize TPSS telemetry to CSV\n\
+           detect    MSET2 + SPRT anomaly-detection demo\n\
+           shapes    print the cloud shape catalog\n\
+           elastic   pre-scoped vs autoscaled cost/violation simulation\n\
          \n\
          common flags: --config FILE --backend device|native --signals a,b,c\n\
            --memvecs a,b,c --obs a,b,c --trials N --model mset2|aakr|ridge\n\
            --out DIR --metrics\n\
+         simulate flags: --scenario FILE.json  (scenario spec; omit for the\n\
+           built-in demo)  --epochs N  --tenants N  --scenario-seed N\n\
+           (workload-mode scenarios run the configured sweep first to fit\n\
+            the surface oracle; the serve cache-dir is reused when set)\n\
          planner flags (adaptive sweep; sweep/scope/serve):\n\
            --ci-target F     relative 95%-CI target per cell (0 = exhaustive)\n\
            --pilot-trials N  cheap pilot trials per cell (default 2)\n\
@@ -175,14 +182,82 @@ fn cmd_scope(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    use containerstress::coordinator::{run_sweep_cached, CellStore};
+    use containerstress::scenario::{run_scenario, Backstop, SurfaceOracle};
+    use containerstress::service::SweepCache;
+    let cfg = Config::resolve(args)?;
+    let spec = cfg.scenario.clone().unwrap_or_default();
+    spec.validate()?;
+    let outcome = if spec.workload.is_some() {
+        // Workload mode: run the configured sweep (served from the shared
+        // cell cache when warm), fit the surface oracle, then replay. The
+        // sweep spec doubles as the backstop template for out-of-domain
+        // cells the drifting fleet wanders into.
+        let (backend, _server) = make_backend(&cfg)?;
+        let cache = match &cfg.service.cache_dir {
+            Some(dir) => Some(SweepCache::open(dir)?),
+            None => None,
+        };
+        let cache_ref: Option<&dyn CellStore> = cache.as_ref().map(|c| c as &dyn CellStore);
+        let result = run_sweep_cached(&cfg.sweep, backend.clone(), cache_ref)?;
+        let oracle = SurfaceOracle::from_sweep(&result)?;
+        let backstop = Backstop {
+            spec: &cfg.sweep,
+            backend: &backend,
+            cache: cache_ref,
+        };
+        run_scenario(&spec, Some(&oracle), Some(&backstop))?
+    } else {
+        run_scenario(&spec, None, None)?
+    };
+    println!("{}", outcome.render());
+    // File stem from the scenario name, sanitized: the name is the first
+    // user-controlled filename component, and "../x" must not escape
+    // --out.
+    let stem: String = spec
+        .name
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+                c
+            } else {
+                '-'
+            }
+        })
+        .collect();
+    report::write(
+        &cfg.output_dir,
+        &format!("scenario_{stem}.json"),
+        &outcome.to_json().to_pretty(),
+    )?;
+    report::write(
+        &cfg.output_dir,
+        &format!("scenario_{stem}_spec.json"),
+        &spec.to_json().to_pretty(),
+    )?;
+    let mut csv = String::from("policy,epoch,usd,violating_tenants\n");
+    for p in &outcome.policies {
+        for (t, (usd, viol)) in p.usd_per_epoch.iter().zip(&p.violations_per_epoch).enumerate()
+        {
+            csv.push_str(&format!("{},{t},{usd},{viol}\n", p.label));
+        }
+    }
+    report::write(&cfg.output_dir, &format!("scenario_{stem}.csv"), &csv)?;
+    println!("wrote scenario results to {}", cfg.output_dir.display());
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = Config::resolve(args)?;
     let (backend, _device) = make_backend(&cfg)?;
     let server = service::Server::start(&cfg, backend)?;
     println!("containerstress service listening on http://{}", server.addr());
     println!("  POST   /v1/scope              submit a scoping job");
+    println!("  POST   /v1/scenarios          submit a fleet what-if scenario");
     println!("  GET    /v1/jobs/ID            job status + live progress");
-    println!("  DELETE /v1/jobs/ID            cancel a queued/running job");
+    println!("  GET    /v1/scenarios/ID       scenario status + replay progress");
+    println!("  DELETE /v1/jobs/ID | /v1/scenarios/ID   cancel a job");
     println!("  GET    /v1/recommendations/ID shape recommendation");
     println!("  GET    /v1/shapes | /healthz | /metrics[?format=text]");
     println!(
@@ -303,7 +378,7 @@ fn cmd_elastic(args: &Args) -> anyhow::Result<()> {
     let epochs = args.get_usize("epochs", 120)?;
     let d0 = args.get_f64("demand0", 0.5)?;
     let growth = args.get_f64("growth", 1.03)?;
-    let trace = GrowthTrace::exponential(d0, growth, epochs, 24.0);
+    let trace = GrowthTrace::exponential(d0, growth, epochs, 24.0)?;
     let policy = ElasticPolicy {
         scale_lag_epochs: args.get_usize("lag", 2)?,
         migration_usd: args.get_f64("migration-usd", 5.0)?,
@@ -312,7 +387,7 @@ fn cmd_elastic(args: &Args) -> anyhow::Result<()> {
     let (fixed, elastic) = compare(&trace, &policy);
     println!(
         "growth trace: {epochs} epochs × 24h, demand {d0:.2} → {:.2} core-eq ({growth}×/epoch)",
-        trace.demand.last().unwrap()
+        trace.demand().last().unwrap()
     );
     println!(
         "pre-scoped ({}):   ${:>9.2}  violations {:>3}  migrations {}",

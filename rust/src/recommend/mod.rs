@@ -128,7 +128,8 @@ pub fn recommend(
     let footprint = mset_footprint_bytes(n, m, 64, workload.train_window);
 
     let mut assessments: Vec<ShapeAssessment> = shapes::catalog()
-        .into_iter()
+        .iter()
+        .cloned()
         .map(|shape| {
             let cpu_ratio = local.eff_flops / shape.cpu_eff_flops();
             let (train_s, per_obs_s) = if shape.has_gpu() {
@@ -319,6 +320,57 @@ impl Recommendation {
     }
 }
 
+/// One simulated policy's outcome point from the fleet scenario engine
+/// ([`crate::scenario::fleet`]): the axes of the cost-vs-violations
+/// trade-off the Pareto comparison ranks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolicyPoint {
+    /// Policy label (e.g. `reactive(up=0.80 lag=2)`).
+    pub label: String,
+    /// Fleet total spend (USD).
+    pub total_usd: f64,
+    /// Tenant-epochs with demand above capacity.
+    pub violation_epochs: usize,
+    /// Shape migrations performed.
+    pub migrations: usize,
+}
+
+/// Indices of the Pareto-optimal (non-dominated) policies under
+/// (minimise cost, minimise violations): a point is dropped only when
+/// another is at most as expensive **and** at most as violating, with at
+/// least one strict improvement. Ties survive on both sides.
+pub fn pareto_front(points: &[PolicyPoint]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| {
+            !points.iter().enumerate().any(|(j, q)| {
+                j != i
+                    && q.total_usd <= points[i].total_usd
+                    && q.violation_epochs <= points[i].violation_epochs
+                    && (q.total_usd < points[i].total_usd
+                        || q.violation_epochs < points[i].violation_epochs)
+            })
+        })
+        .collect()
+}
+
+/// Choose a policy from its outcome points: the cheapest whose violation
+/// count fits `max_violation_epochs`; when none qualifies, the
+/// fewest-violations policy (cheapest on ties). `None` only for empty
+/// input.
+pub fn recommend_policy(points: &[PolicyPoint], max_violation_epochs: usize) -> Option<usize> {
+    let within = (0..points.len())
+        .filter(|&i| points[i].violation_epochs <= max_violation_epochs)
+        .min_by(|&a, &b| points[a].total_usd.total_cmp(&points[b].total_usd));
+    within.or_else(|| {
+        (0..points.len()).min_by(|&a, &b| {
+            points[a]
+                .violation_epochs
+                .cmp(&points[b].violation_epochs)
+                .then(points[a].total_usd.total_cmp(&points[b].total_usd))
+        })
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -473,6 +525,48 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("no measurable cells"), "{err}");
+    }
+
+    fn pt(label: &str, usd: f64, viol: usize) -> PolicyPoint {
+        PolicyPoint {
+            label: label.into(),
+            total_usd: usd,
+            violation_epochs: viol,
+            migrations: 0,
+        }
+    }
+
+    #[test]
+    fn pareto_front_keeps_non_dominated_points() {
+        let points = vec![
+            pt("prescoped", 1000.0, 0),  // dominated by predictive
+            pt("reactive", 400.0, 12),   // cheapest
+            pt("predictive", 600.0, 0),  // zero violations, mid cost
+            pt("worst", 1200.0, 20),     // dominated by everything
+        ];
+        let front = pareto_front(&points);
+        assert_eq!(front, vec![1, 2]);
+        // duplicates both survive (neither strictly dominates the other)
+        let twins = vec![pt("a", 5.0, 1), pt("b", 5.0, 1)];
+        assert_eq!(pareto_front(&twins), vec![0, 1]);
+        assert!(pareto_front(&[]).is_empty());
+    }
+
+    #[test]
+    fn recommend_policy_prefers_budget_then_fewest_violations() {
+        let points = vec![
+            pt("prescoped", 1000.0, 0),
+            pt("reactive", 400.0, 12),
+            pt("predictive", 600.0, 0),
+        ];
+        // zero-violation budget: cheapest clean policy wins
+        assert_eq!(recommend_policy(&points, 0), Some(2));
+        // a loose budget admits the cheap reactive policy
+        assert_eq!(recommend_policy(&points, 20), Some(1));
+        // nothing fits: fall back to fewest violations, cheaper tie
+        let dirty = vec![pt("a", 900.0, 5), pt("b", 700.0, 5), pt("c", 100.0, 9)];
+        assert_eq!(recommend_policy(&dirty, 0), Some(1));
+        assert_eq!(recommend_policy(&[], 0), None);
     }
 
     #[test]

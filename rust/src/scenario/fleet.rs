@@ -1,0 +1,748 @@
+//! The **fleet simulation engine**: replay a scenario against pluggable
+//! placement/scaling policies.
+//!
+//! The single-tenant loops here are the generalisation (and new home) of
+//! `shapes/elastic.rs`'s simulator — that module now delegates to
+//! [`run_fixed`]/[`run_reactive`], so the degenerate one-tenant scenario
+//! reproduces the paper's reactive-vs-pre-scoped crossover bit for bit.
+//! On top of them the engine adds:
+//!
+//! - a **predictive policy** ([`run_predictive`]): a what-if simulation
+//!   knows each tenant's future demand, so an oracle-driven scaler can
+//!   migrate *before* demand crosses capacity — near-elastic cost at
+//!   near-pre-scoped SLA;
+//! - **fleet replay** ([`run_scenario_executor`]): every
+//!   `(policy, tenant)` simulation is a task on the shared
+//!   [`crate::util::threadpool::TrialExecutor`], interleaving fairly with
+//!   sweep jobs, reporting live [`ScenarioProgress`], and honouring
+//!   cooperative cancellation exactly like a sweep;
+//! - a **Pareto comparison** over (total cost, SLA violations) through
+//!   [`crate::recommend::pareto_front`], plus a recommended policy.
+//!
+//! Demand is resolved on the driving thread *before* the fan-out (surface
+//! oracle queries may enqueue backstop trials on the same executor job;
+//! doing that from a worker would deadlock a 1-worker executor), so the
+//! fanned-out simulations are pure arithmetic.
+
+use crate::coordinator::sweep::Cancelled;
+use crate::metrics::Registry;
+use crate::recommend::{pareto_front, recommend_policy, PolicyPoint};
+use crate::scenario::oracle::{MeasureCtx, SurfaceOracle};
+use crate::scenario::spec::{PolicySpec, ScenarioSpec};
+use crate::scenario::trace::{build_tenants, drifted_params};
+use crate::shapes::elastic::{ElasticOutcome, ElasticPolicy, GrowthTrace};
+use crate::shapes::{capacity_core_eq, cpu_ladder, Shape};
+use crate::util::json::Json;
+use crate::util::threadpool::{JobTicket, TrialExecutor};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// Headroom the historical `shapes::elastic::compare` used to pre-scope a
+/// shape against the trace peak (`capacity ≥ peak / 0.8`).
+pub const PRESCOPE_HEADROOM: f64 = 0.8;
+
+/// Predictive oracle-driven scaling policy: consults the demand trace
+/// `horizon_epochs` ahead and migrates early enough that the provisioning
+/// lag completes before demand arrives.
+#[derive(Clone, Copy, Debug)]
+pub struct PredictivePolicy {
+    /// Epochs of lookahead (≥ the lag to avoid violations entirely).
+    pub horizon_epochs: usize,
+    /// Target peak utilisation after a move (like `scale_up_at`).
+    pub headroom: f64,
+    /// Scale down when the *forecast* utilisation drops below this.
+    pub scale_down_at: f64,
+    /// Provisioning lag in epochs (same mechanics as the reactive policy).
+    pub scale_lag_epochs: usize,
+    /// One-off cost per migration (USD).
+    pub migration_usd: f64,
+}
+
+impl Default for PredictivePolicy {
+    fn default() -> Self {
+        PredictivePolicy {
+            horizon_epochs: 3,
+            headroom: 0.8,
+            scale_down_at: 0.3,
+            scale_lag_epochs: 2,
+            migration_usd: 5.0,
+        }
+    }
+}
+
+/// One tenant × one policy simulation result: the classic
+/// [`ElasticOutcome`] plus per-epoch series for fleet aggregation.
+#[derive(Clone, Debug)]
+pub struct TenantRun {
+    /// Totals in the single-tenant simulator's own terms.
+    pub outcome: ElasticOutcome,
+    /// USD accrued per epoch (migration fees included at completion).
+    pub usd_per_epoch: Vec<f64>,
+    /// Whether demand exceeded capacity in each epoch.
+    pub violations_per_epoch: Vec<bool>,
+}
+
+/// The cheapest ladder shape whose capacity covers the trace peak at the
+/// given headroom (largest shape when nothing does) — the
+/// ContainerStress pre-scoping rule.
+pub fn prescope_shape(trace: &GrowthTrace, headroom: f64) -> &'static Shape {
+    let peak = trace.peak();
+    let ladder = cpu_ladder();
+    ladder
+        .iter()
+        .find(|s| capacity_core_eq(s) >= peak / headroom)
+        .unwrap_or_else(|| ladder.last().unwrap())
+}
+
+/// Simulate a fixed, pre-scoped shape over a demand trace.
+///
+/// The total is the single product the original `simulate_fixed` used
+/// (`usd/hr × hours × epochs`), not a per-epoch summation — keeping the
+/// delegating `shapes::elastic::simulate_fixed` bit-identical to its
+/// pre-refactor output. The per-epoch series reconciles with it to
+/// rounding (the fleet props allow 1e-9 relative).
+pub fn run_fixed(shape: &Shape, trace: &GrowthTrace) -> TenantRun {
+    let cap = capacity_core_eq(shape);
+    let epoch_usd = shape.usd_per_hour * trace.hours_per_epoch();
+    let mut violations = 0;
+    let mut usd_per_epoch = Vec::with_capacity(trace.epochs());
+    let mut violations_per_epoch = Vec::with_capacity(trace.epochs());
+    for &d in trace.demand() {
+        let violated = d > cap;
+        if violated {
+            violations += 1;
+        }
+        usd_per_epoch.push(epoch_usd);
+        violations_per_epoch.push(violated);
+    }
+    TenantRun {
+        outcome: ElasticOutcome {
+            total_usd: epoch_usd * trace.epochs() as f64,
+            violation_epochs: violations,
+            migrations: 0,
+            shape_trace: vec![shape.name; trace.epochs()],
+        },
+        usd_per_epoch,
+        violations_per_epoch,
+    }
+}
+
+/// Simulate the reactive threshold autoscaler over a demand trace
+/// (the loop absorbed verbatim from `shapes::elastic::simulate_elastic`).
+pub fn run_reactive(policy: &ElasticPolicy, trace: &GrowthTrace) -> TenantRun {
+    let ladder = cpu_ladder();
+    let mut level = 0usize;
+    let mut pending: Option<(usize, usize)> = None; // (target level, ready epoch)
+    let mut total = 0.0;
+    let mut violations = 0;
+    let mut migrations = 0;
+    let mut shape_trace = Vec::with_capacity(trace.epochs());
+    let mut usd_per_epoch = Vec::with_capacity(trace.epochs());
+    let mut violations_per_epoch = Vec::with_capacity(trace.epochs());
+    for (t, &d) in trace.demand().iter().enumerate() {
+        let mut epoch_usd = 0.0;
+        // complete a pending migration
+        if let Some((target, ready)) = pending {
+            if t >= ready {
+                level = target;
+                migrations += 1;
+                total += policy.migration_usd;
+                epoch_usd += policy.migration_usd;
+                pending = None;
+            }
+        }
+        let shape = &ladder[level];
+        let cap = capacity_core_eq(shape);
+        let util = d / cap;
+        let violated = util > 1.0;
+        if violated {
+            violations += 1;
+        }
+        // policy decisions (only when no migration is in flight)
+        if pending.is_none() {
+            if util > policy.scale_up_at && level + 1 < ladder.len() {
+                // pick the smallest level with headroom
+                let target = (level + 1..ladder.len())
+                    .find(|&l| d / capacity_core_eq(&ladder[l]) <= policy.scale_up_at)
+                    .unwrap_or(ladder.len() - 1);
+                pending = Some((target, t + policy.scale_lag_epochs));
+            } else if util < policy.scale_down_at && level > 0 {
+                let target = (0..level)
+                    .find(|&l| d / capacity_core_eq(&ladder[l]) <= policy.scale_up_at)
+                    .unwrap_or(level - 1);
+                pending = Some((target, t + 1)); // scale-down is fast
+            }
+        }
+        total += shape.usd_per_hour * trace.hours_per_epoch();
+        epoch_usd += shape.usd_per_hour * trace.hours_per_epoch();
+        shape_trace.push(shape.name);
+        usd_per_epoch.push(epoch_usd);
+        violations_per_epoch.push(violated);
+    }
+    TenantRun {
+        outcome: ElasticOutcome {
+            total_usd: total,
+            violation_epochs: violations,
+            migrations,
+            shape_trace,
+        },
+        usd_per_epoch,
+        violations_per_epoch,
+    }
+}
+
+/// Simulate the predictive scaler: same migration mechanics as the
+/// reactive policy, but decisions are driven by the demand *forecast*
+/// (`max` over the lookahead window) instead of current utilisation.
+pub fn run_predictive(policy: &PredictivePolicy, trace: &GrowthTrace) -> TenantRun {
+    let ladder = cpu_ladder();
+    let demand = trace.demand();
+    let mut level = 0usize;
+    let mut pending: Option<(usize, usize)> = None;
+    let mut total = 0.0;
+    let mut violations = 0;
+    let mut migrations = 0;
+    let mut shape_trace = Vec::with_capacity(trace.epochs());
+    let mut usd_per_epoch = Vec::with_capacity(trace.epochs());
+    let mut violations_per_epoch = Vec::with_capacity(trace.epochs());
+    for (t, &d) in demand.iter().enumerate() {
+        let mut epoch_usd = 0.0;
+        if let Some((target, ready)) = pending {
+            if t >= ready {
+                level = target;
+                migrations += 1;
+                total += policy.migration_usd;
+                epoch_usd += policy.migration_usd;
+                pending = None;
+            }
+        }
+        let shape = &ladder[level];
+        let cap = capacity_core_eq(shape);
+        let violated = d / cap > 1.0;
+        if violated {
+            violations += 1;
+        }
+        if pending.is_none() {
+            let end = (t + 1 + policy.horizon_epochs).min(demand.len());
+            let d_ahead = demand[t..end].iter().cloned().fold(0.0, f64::max);
+            let fits =
+                |l: usize| d_ahead / capacity_core_eq(&ladder[l]) <= policy.headroom;
+            if !fits(level) && level + 1 < ladder.len() {
+                let target = (level + 1..ladder.len())
+                    .find(|&l| fits(l))
+                    .unwrap_or(ladder.len() - 1);
+                pending = Some((target, t + policy.scale_lag_epochs));
+            } else if level > 0 && d_ahead / cap < policy.scale_down_at {
+                let target = (0..level).find(|&l| fits(l)).unwrap_or(level - 1);
+                pending = Some((target, t + 1));
+            }
+        }
+        total += shape.usd_per_hour * trace.hours_per_epoch();
+        epoch_usd += shape.usd_per_hour * trace.hours_per_epoch();
+        shape_trace.push(shape.name);
+        usd_per_epoch.push(epoch_usd);
+        violations_per_epoch.push(violated);
+    }
+    TenantRun {
+        outcome: ElasticOutcome {
+            total_usd: total,
+            violation_epochs: violations,
+            migrations,
+            shape_trace,
+        },
+        usd_per_epoch,
+        violations_per_epoch,
+    }
+}
+
+/// Live progress of one scenario job, updated atomically from executor
+/// workers; every counter is monotone non-decreasing.
+#[derive(Debug, Default)]
+pub struct ScenarioProgress {
+    /// Tenants synthesized for the scenario.
+    pub tenants: AtomicUsize,
+    /// `(policy, tenant)` simulations planned.
+    pub units_total: AtomicUsize,
+    /// Simulations completed.
+    pub units_done: AtomicUsize,
+}
+
+impl ScenarioProgress {
+    /// Plain-value copy for status reporting.
+    pub fn snapshot(&self) -> ScenarioSnapshot {
+        ScenarioSnapshot {
+            tenants: self.tenants.load(Ordering::SeqCst),
+            units_total: self.units_total.load(Ordering::SeqCst),
+            units_done: self.units_done.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// Plain-value snapshot of a [`ScenarioProgress`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScenarioSnapshot {
+    /// Tenants synthesized.
+    pub tenants: usize,
+    /// `(policy, tenant)` simulations planned.
+    pub units_total: usize,
+    /// Simulations completed.
+    pub units_done: usize,
+}
+
+/// Fleet-level result of one policy over the whole scenario.
+#[derive(Clone, Debug)]
+pub struct PolicyOutcome {
+    /// Policy label (see [`PolicySpec::label`]).
+    pub label: String,
+    /// Fleet total spend (USD).
+    pub total_usd: f64,
+    /// Tenant-epochs in which demand exceeded capacity.
+    pub violation_epochs: usize,
+    /// Shape migrations across the fleet.
+    pub migrations: usize,
+    /// Fleet USD accrued per epoch.
+    pub usd_per_epoch: Vec<f64>,
+    /// Number of violating tenants per epoch.
+    pub violations_per_epoch: Vec<usize>,
+}
+
+/// Complete scenario replay output.
+#[derive(Clone, Debug)]
+pub struct ScenarioOutcome {
+    /// Scenario name.
+    pub name: String,
+    /// Simulated epochs.
+    pub epochs: usize,
+    /// Hours per epoch.
+    pub hours_per_epoch: f64,
+    /// Fleet size.
+    pub tenants: usize,
+    /// One entry per policy, in spec order.
+    pub policies: Vec<PolicyOutcome>,
+    /// Indices of Pareto-optimal policies (cost vs violations).
+    pub pareto: Vec<usize>,
+    /// Recommended policy: cheapest with zero violations, else fewest
+    /// violations (cheapest on ties).
+    pub recommended: Option<usize>,
+    /// Oracle answer-source counters (workload mode only).
+    pub oracle: Option<crate::scenario::oracle::OracleSnapshot>,
+}
+
+impl ScenarioOutcome {
+    /// The per-policy cost/violation points (Pareto inputs).
+    pub fn policy_points(&self) -> Vec<PolicyPoint> {
+        self.policies
+            .iter()
+            .map(|p| PolicyPoint {
+                label: p.label.clone(),
+                total_usd: p.total_usd,
+                violation_epochs: p.violation_epochs,
+                migrations: p.migrations,
+            })
+            .collect()
+    }
+
+    /// JSON rendering (the service's scenario result payload).
+    pub fn to_json(&self) -> Json {
+        let policies: Vec<Json> = self
+            .policies
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("policy", Json::Str(p.label.clone())),
+                    ("total_usd", Json::Num(p.total_usd)),
+                    ("violation_epochs", Json::Num(p.violation_epochs as f64)),
+                    ("migrations", Json::Num(p.migrations as f64)),
+                    ("usd_per_epoch", Json::arr_f64(&p.usd_per_epoch)),
+                    (
+                        "violations_per_epoch",
+                        Json::arr_f64(
+                            &p.violations_per_epoch
+                                .iter()
+                                .map(|&v| v as f64)
+                                .collect::<Vec<_>>(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("hours_per_epoch", Json::Num(self.hours_per_epoch)),
+            ("tenants", Json::Num(self.tenants as f64)),
+            ("policies", Json::Arr(policies)),
+            (
+                "pareto",
+                Json::arr_f64(&self.pareto.iter().map(|&i| i as f64).collect::<Vec<_>>()),
+            ),
+            (
+                "recommended",
+                match self.recommended {
+                    Some(i) => Json::Str(self.policies[i].label.clone()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "oracle",
+                match &self.oracle {
+                    Some(o) => o.to_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Render the policy comparison table.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "Scenario '{}': {} tenants × {} epochs ({}h each)\n",
+            self.name, self.tenants, self.epochs, self.hours_per_epoch
+        );
+        out.push_str(&format!(
+            "{:<32} {:>12} {:>11} {:>11} {:>7}\n",
+            "policy", "total_usd", "violations", "migrations", "pareto"
+        ));
+        for (i, p) in self.policies.iter().enumerate() {
+            out.push_str(&format!(
+                "{:<32} {:>12.2} {:>11} {:>11} {:>7}{}\n",
+                p.label,
+                p.total_usd,
+                p.violation_epochs,
+                p.migrations,
+                if self.pareto.contains(&i) { "*" } else { "" },
+                if self.recommended == Some(i) {
+                    " ← recommended"
+                } else {
+                    ""
+                }
+            ));
+        }
+        if let Some(o) = &self.oracle {
+            out.push_str(&format!(
+                "Oracle: {} surface + {} memo answers, {} cells measured \
+                 ({} fresh trials), {} extrapolated\n",
+                o.surface_hits, o.memo_hits, o.measured_cells, o.fresh_trials, o.extrapolated
+            ));
+        }
+        out
+    }
+}
+
+/// Resolve every tenant's demand trace (core-equivalents). Runs on the
+/// driving thread: in workload mode each epoch consults the surface
+/// oracle, whose out-of-domain backstop may block on executor trials.
+fn resolve_demand(
+    spec: &ScenarioSpec,
+    oracle: Option<&SurfaceOracle>,
+    ctx: Option<&MeasureCtx<'_>>,
+    cancel: &crate::util::threadpool::CancelToken,
+) -> anyhow::Result<Vec<(usize, GrowthTrace)>> {
+    let tenants = build_tenants(spec);
+    let mut out = Vec::with_capacity(tenants.len());
+    for tenant in tenants {
+        if cancel.is_cancelled() {
+            return Err(Cancelled.into());
+        }
+        let demand: Vec<f64> = match (&spec.workload, oracle) {
+            (None, _) => tenant.series,
+            (Some(w), Some(oracle)) => {
+                let mut v = Vec::with_capacity(tenant.series.len());
+                for (t, &mult) in tenant.series.iter().enumerate() {
+                    let (n, m) = drifted_params(w, t);
+                    let rate = w.base.obs_per_sec * mult;
+                    v.push(oracle.demand_core_eq(n, m, rate, ctx)?);
+                }
+                v
+            }
+            (Some(_), None) => anyhow::bail!(
+                "workload-mode scenario '{}' needs a fitted surface oracle \
+                 (run a sweep first)",
+                spec.name
+            ),
+        };
+        let trace = GrowthTrace::new(demand, spec.hours_per_epoch)
+            .map_err(|e| anyhow::anyhow!("tenant {}: {e}", tenant.id))?;
+        out.push((tenant.arrival_epoch, trace));
+    }
+    Ok(out)
+}
+
+/// Replay a scenario on a caller-provided executor job: every
+/// `(policy, tenant)` simulation is a task interleaved fairly with other
+/// jobs' work; `progress` updates live; cancelling the ticket's token
+/// reclaims queued simulations and returns
+/// [`Cancelled`](crate::coordinator::Cancelled).
+pub fn run_scenario_executor(
+    spec: &ScenarioSpec,
+    oracle: Option<&SurfaceOracle>,
+    ctx: Option<&MeasureCtx<'_>>,
+    ticket: &JobTicket,
+    progress: &Arc<ScenarioProgress>,
+) -> anyhow::Result<ScenarioOutcome> {
+    spec.validate()?;
+    let cancel = ticket.cancel_token();
+    if cancel.is_cancelled() {
+        return Err(Cancelled.into());
+    }
+    Registry::global().inc("scenario.runs");
+
+    // Phase 1 (this thread): tenant synthesis + oracle demand resolution.
+    let tenants = Arc::new(resolve_demand(spec, oracle, ctx, &cancel)?);
+    let policies = Arc::new(spec.policies.clone());
+    let (np, nt) = (policies.len(), tenants.len());
+    progress.tenants.store(nt, Ordering::SeqCst);
+    progress.units_total.store(np * nt, Ordering::SeqCst);
+    Registry::global().add("scenario.tenant_sims", (np * nt) as u64);
+    log::info!(
+        "scenario '{}': {} tenants × {} epochs × {} policies",
+        spec.name,
+        nt,
+        spec.epochs,
+        np
+    );
+
+    // Phase 2: fan (policy, tenant) simulations over the shared executor.
+    let (tx, rx) = mpsc::channel::<(usize, usize, TenantRun)>();
+    for pi in 0..np {
+        for ti in 0..nt {
+            let tx = tx.clone();
+            let tenants = Arc::clone(&tenants);
+            let policies = Arc::clone(&policies);
+            let progress = Arc::clone(progress);
+            let cancel = cancel.clone();
+            ticket.submit(move || {
+                if cancel.is_cancelled() {
+                    return;
+                }
+                let (_, trace) = &tenants[ti];
+                let run = match policies[pi] {
+                    PolicySpec::PreScoped { headroom } => {
+                        run_fixed(prescope_shape(trace, headroom), trace)
+                    }
+                    PolicySpec::Reactive(p) => run_reactive(&p, trace),
+                    PolicySpec::Predictive(p) => run_predictive(&p, trace),
+                };
+                progress.units_done.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send((pi, ti, run));
+            });
+        }
+    }
+    drop(tx);
+
+    let mut slots: Vec<Vec<Option<TenantRun>>> = (0..np).map(|_| vec![None; nt]).collect();
+    loop {
+        match rx.recv_timeout(std::time::Duration::from_millis(50)) {
+            Ok((pi, ti, run)) => slots[pi][ti] = Some(run),
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if cancel.is_cancelled() && ticket.pending() == (0, 0) {
+                    while let Ok((pi, ti, run)) = rx.try_recv() {
+                        slots[pi][ti] = Some(run);
+                    }
+                    break;
+                }
+            }
+        }
+    }
+    if cancel.is_cancelled() {
+        return Err(Cancelled.into());
+    }
+
+    // Aggregate in deterministic (policy, tenant) order so fleet totals
+    // replay bit-identically under any executor interleaving.
+    let mut outcomes = Vec::with_capacity(np);
+    for (pi, runs) in slots.into_iter().enumerate() {
+        let mut total = 0.0;
+        let mut violations = 0;
+        let mut migrations = 0;
+        let mut usd = vec![0.0; spec.epochs];
+        let mut viol = vec![0usize; spec.epochs];
+        for (ti, run) in runs.into_iter().enumerate() {
+            let Some(run) = run else {
+                anyhow::bail!("scenario lost simulation results (task panicked?)");
+            };
+            let arrival = tenants[ti].0;
+            total += run.outcome.total_usd;
+            violations += run.outcome.violation_epochs;
+            migrations += run.outcome.migrations;
+            for (t, &c) in run.usd_per_epoch.iter().enumerate() {
+                usd[arrival + t] += c;
+            }
+            for (t, &v) in run.violations_per_epoch.iter().enumerate() {
+                viol[arrival + t] += v as usize;
+            }
+        }
+        outcomes.push(PolicyOutcome {
+            label: policies[pi].label(),
+            total_usd: total,
+            violation_epochs: violations,
+            migrations,
+            usd_per_epoch: usd,
+            violations_per_epoch: viol,
+        });
+    }
+
+    let points: Vec<PolicyPoint> = outcomes
+        .iter()
+        .map(|p| PolicyPoint {
+            label: p.label.clone(),
+            total_usd: p.total_usd,
+            violation_epochs: p.violation_epochs,
+            migrations: p.migrations,
+        })
+        .collect();
+    let pareto = pareto_front(&points);
+    let recommended = recommend_policy(&points, 0);
+    Ok(ScenarioOutcome {
+        name: spec.name.clone(),
+        epochs: spec.epochs,
+        hours_per_epoch: spec.hours_per_epoch,
+        tenants: nt,
+        policies: outcomes,
+        pareto,
+        recommended,
+        oracle: oracle.map(|o| o.stats()),
+    })
+}
+
+/// Standalone entry point: spins up a private executor for the fan-out
+/// (the CLI and benches). Services sharing one executor across jobs call
+/// [`run_scenario_executor`] with their own ticket instead.
+pub fn run_scenario(
+    spec: &ScenarioSpec,
+    oracle: Option<&SurfaceOracle>,
+    backstop: Option<&crate::scenario::oracle::Backstop<'_>>,
+) -> anyhow::Result<ScenarioOutcome> {
+    let exec = TrialExecutor::new(crate::util::threadpool::default_workers(), true);
+    let ticket = exec.register(1.0);
+    let progress = Arc::new(ScenarioProgress::default());
+    let ctx = backstop.map(|b| MeasureCtx {
+        spec: b.spec,
+        backend: b.backend,
+        cache: b.cache,
+        ticket: &ticket,
+    });
+    run_scenario_executor(spec, oracle, ctx.as_ref(), &ticket, &progress)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::spec::{ArrivalSpec, DemandKind, DemandSpec};
+
+    fn steps_trace() -> GrowthTrace {
+        GrowthTrace::steps(0.5, &[12, 24, 36], 48, 24.0).unwrap()
+    }
+
+    #[test]
+    fn predictive_avoids_lag_violations_at_sub_prescoped_cost() {
+        let trace = steps_trace();
+        let reactive = run_reactive(&ElasticPolicy::default(), &trace);
+        let predictive = run_predictive(
+            &PredictivePolicy {
+                horizon_epochs: 4,
+                ..PredictivePolicy::default()
+            },
+            &trace,
+        );
+        let fixed = run_fixed(prescope_shape(&trace, PRESCOPE_HEADROOM), &trace);
+        assert!(reactive.outcome.violation_epochs > 0, "reactive must lag");
+        assert_eq!(
+            predictive.outcome.violation_epochs, 0,
+            "lookahead ≥ lag must migrate before demand arrives"
+        );
+        assert!(predictive.outcome.migrations >= 3);
+        assert!(
+            predictive.outcome.total_usd < fixed.outcome.total_usd,
+            "predictive {:.2} must undercut pre-scoped {:.2}",
+            predictive.outcome.total_usd,
+            fixed.outcome.total_usd
+        );
+    }
+
+    #[test]
+    fn per_epoch_series_sum_to_totals() {
+        let trace = steps_trace();
+        for run in [
+            run_fixed(prescope_shape(&trace, 0.8), &trace),
+            run_reactive(&ElasticPolicy::default(), &trace),
+            run_predictive(&PredictivePolicy::default(), &trace),
+        ] {
+            assert_eq!(run.usd_per_epoch.len(), trace.epochs());
+            let sum: f64 = run.usd_per_epoch.iter().sum();
+            assert!(
+                (sum - run.outcome.total_usd).abs() < 1e-9 * run.outcome.total_usd.max(1.0),
+                "epoch series must reconcile with the total"
+            );
+            let v = run.violations_per_epoch.iter().filter(|&&x| x).count();
+            assert_eq!(v, run.outcome.violation_epochs);
+        }
+    }
+
+    fn tiny_scenario() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "tiny".into(),
+            epochs: 30,
+            arrivals: ArrivalSpec {
+                initial: 4,
+                rate_per_epoch: 0.3,
+                max_tenants: 8,
+            },
+            demand: DemandSpec {
+                base: 0.5,
+                growth_per_epoch: 1.02,
+                jitter: 0.2,
+                kind: DemandKind::Diurnal {
+                    amplitude: 0.3,
+                    period: 7,
+                },
+            },
+            ..ScenarioSpec::default()
+        }
+    }
+
+    #[test]
+    fn scenario_replay_structure_and_pareto() {
+        let spec = tiny_scenario();
+        let out = run_scenario(&spec, None, None).unwrap();
+        assert_eq!(out.policies.len(), spec.policies.len());
+        assert!(out.tenants >= 4);
+        for p in &out.policies {
+            assert_eq!(p.usd_per_epoch.len(), spec.epochs);
+            assert!(p.total_usd > 0.0);
+            let sum: f64 = p.usd_per_epoch.iter().sum();
+            assert!((sum - p.total_usd).abs() < 1e-9 * p.total_usd);
+        }
+        assert!(!out.pareto.is_empty(), "some policy must be non-dominated");
+        assert!(out.recommended.is_some());
+        assert!(out.oracle.is_none(), "direct mode has no oracle");
+        // render + JSON round out without panicking
+        assert!(out.render().contains("policy"));
+        assert!(out.to_json().get("pareto").is_some());
+    }
+
+    #[test]
+    fn cancelled_token_aborts_cleanly() {
+        let exec = TrialExecutor::new(2, true);
+        let ticket = exec.register(1.0);
+        ticket.cancel_token().cancel();
+        let progress = Arc::new(ScenarioProgress::default());
+        let err = run_scenario_executor(&tiny_scenario(), None, None, &ticket, &progress)
+            .unwrap_err();
+        assert!(err.is::<Cancelled>(), "{err}");
+    }
+
+    #[test]
+    fn workload_mode_without_oracle_errors() {
+        let spec = ScenarioSpec {
+            workload: Some(crate::scenario::spec::WorkloadSpec {
+                base: crate::shapes::Workload::customer_a(),
+                drift: Default::default(),
+            }),
+            ..tiny_scenario()
+        };
+        let err = run_scenario(&spec, None, None).unwrap_err().to_string();
+        assert!(err.contains("oracle"), "{err}");
+    }
+}

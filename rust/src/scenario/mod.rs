@@ -1,0 +1,53 @@
+//! **Fleet scenario engine** — trace-driven multi-tenant what-if
+//! simulation over surface oracles.
+//!
+//! The paper's introduction poses the vendor-side question ContainerStress
+//! exists to answer: *which shape do we hand each customer, and when does
+//! pre-scoping beat elastic growth?* A single fitted sweep answers it for
+//! one tenant at one point in time; this subsystem answers it for a
+//! **fleet** — hundreds of tenants arriving, growing, cycling and spiking
+//! over months — without re-running a single Monte Carlo trial the sweep
+//! cache already holds:
+//!
+//! - [`spec`]   — the JSON scenario specification: scenarios are *data*
+//!   (tenant arrival process, demand generators, workload drift, policy
+//!   list), not code;
+//! - [`trace`]  — deterministic-RNG workload generators: Poisson tenant
+//!   arrivals, exponential/step growth, diurnal cycles, flash crowds,
+//!   per-tenant jitter and workload-parameter drift over the
+//!   `(n_signals, n_memvec, n_obs)` grid;
+//! - [`oracle`] — the surface oracle: per-epoch "cost of tenant *w* on
+//!   shape *s*" queries answered from already-fitted
+//!   [`crate::surface::ResponseSurface`]s, falling back to cached sweep
+//!   cells, and only enqueueing real Monte Carlo trials (through the
+//!   shared [`crate::util::threadpool::TrialExecutor`]) for
+//!   out-of-domain queries;
+//! - [`fleet`]  — the simulation engine: replays a scenario against
+//!   pluggable placement/scaling policies (pre-scoped fixed shape,
+//!   reactive threshold autoscaler, predictive oracle-driven scaler) and
+//!   emits per-policy cost-over-time, SLA-violation counts, migration
+//!   counts, and a Pareto (cost vs violations) comparison through
+//!   [`crate::recommend`].
+//!
+//! The single-tenant elasticity simulator (`shapes::elastic`) is the
+//! degenerate case: its loops were absorbed into [`fleet`] and it now
+//! delegates, so a one-tenant scenario reproduces the paper's
+//! reactive-vs-pre-scoped crossover bit for bit.
+//!
+//! Surfaced end to end: `containerstress simulate`, the service's
+//! `POST /v1/scenarios` + `GET /v1/scenarios/{id}` (jobs on the shared
+//! executor with live progress and cancellation), and
+//! `benches/fleet_scenarios.rs`.
+
+pub mod fleet;
+pub mod oracle;
+pub mod spec;
+pub mod trace;
+
+pub use fleet::{
+    run_scenario, run_scenario_executor, PolicyOutcome, PredictivePolicy, ScenarioOutcome,
+    ScenarioProgress, ScenarioSnapshot,
+};
+pub use oracle::{Backstop, MeasureCtx, OracleSnapshot, SurfaceOracle};
+pub use spec::{ArrivalSpec, DemandKind, DemandSpec, PolicySpec, ScenarioSpec, WorkloadSpec};
+pub use trace::Tenant;

@@ -1,0 +1,432 @@
+//! The **surface oracle**: answers per-epoch "what does workload *w* cost
+//! on shape *s*?" queries without re-running Monte Carlo trials.
+//!
+//! Following the "build oracles, don't re-simulate" idea (PAPERS.md,
+//! arXiv 2308.06815), a fitted [`ResponseSurface`] *is* an exact online
+//! cost model over the measured design grid. The oracle layers three
+//! answer sources, cheapest first:
+//!
+//! 1. **surface** — queries inside the fitted grid's bounding box are a
+//!    10-coefficient polynomial evaluation (then memoised);
+//! 2. **cell store** — out-of-domain queries with a [`MeasureCtx`]
+//!    run a one-cell exhaustive sweep through the shared
+//!    [`crate::util::threadpool::TrialExecutor`]; a warm
+//!    [`CellStore`] serves the cell without executing a single trial;
+//! 3. **fresh trials** — only a genuinely new out-of-domain cell costs
+//!    real Monte Carlo measurements (which then land in the store for
+//!    every later scenario).
+//!
+//! Without a `MeasureCtx`, out-of-domain queries fall back to the
+//! power-law fit ([`ResponseSurface::fit_power_law`]), whose global
+//! exponents extrapolate safely where the quadratic's curvature would
+//! bend predictions toward zero.
+//!
+//! [`OracleSnapshot`] counts every source so benchmarks (and the
+//! `/v1/scenarios` result payload) can prove a replay was trial-free.
+
+use crate::coordinator::sweep::{run_sweep_executor, SweepProgress};
+use crate::coordinator::{Backend, CellStore, SweepResult, SweepSpec};
+use crate::recommend::LocalCalibration;
+use crate::shapes;
+use crate::surface::ResponseSurface;
+use crate::util::json::Json;
+use crate::util::threadpool::JobTicket;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Everything a backstop measurement needs: a sweep-spec template (seed,
+/// model, trial budget — the axes are replaced by the queried cell), the
+/// execution backend, the shared cell store, and the executor job the
+/// trials are billed to.
+pub struct MeasureCtx<'a> {
+    /// Template spec; `seed`/`model`/`trials` define the cell's content
+    /// address, so backstop cells are shared with ordinary sweeps.
+    pub spec: &'a SweepSpec,
+    /// Where backstop trials execute.
+    pub backend: &'a Backend,
+    /// Cell store consulted before any trial is scheduled.
+    pub cache: Option<&'a dyn CellStore>,
+    /// Executor job ticket the backstop trials run under.
+    pub ticket: &'a JobTicket,
+}
+
+/// The ticket-independent backstop configuration for standalone scenario
+/// runs ([`crate::scenario::fleet::run_scenario`] builds a [`MeasureCtx`]
+/// from it once its private executor exists).
+pub struct Backstop<'a> {
+    /// Template sweep spec (see [`MeasureCtx::spec`]).
+    pub spec: &'a SweepSpec,
+    /// Where backstop trials execute.
+    pub backend: &'a Backend,
+    /// Cell store consulted before any trial is scheduled.
+    pub cache: Option<&'a dyn CellStore>,
+}
+
+/// Largest cell the backstop will measure synchronously, as
+/// `n_signals × max(n_memvec, n_obs)` synthesis elements — the same
+/// quantity the service's per-request sweep limit bounds (~128 MB at the
+/// cap). Bigger out-of-domain queries answer by power-law extrapolation.
+pub const MAX_BACKSTOP_ELEMS: usize = 1 << 24;
+
+#[derive(Debug, Default)]
+struct OracleStats {
+    surface_hits: AtomicUsize,
+    memo_hits: AtomicUsize,
+    extrapolated: AtomicUsize,
+    measured_cells: AtomicUsize,
+    fresh_trials: AtomicUsize,
+}
+
+/// Plain-value snapshot of the oracle's answer-source counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OracleSnapshot {
+    /// In-domain queries answered by the fitted surface.
+    pub surface_hits: usize,
+    /// Queries served from the oracle's memo table.
+    pub memo_hits: usize,
+    /// Out-of-domain queries answered by power-law extrapolation.
+    pub extrapolated: usize,
+    /// Out-of-domain cells resolved through the sweep engine.
+    pub measured_cells: usize,
+    /// Fresh Monte Carlo trials those cells actually executed (0 when the
+    /// cell store already held them).
+    pub fresh_trials: usize,
+}
+
+impl OracleSnapshot {
+    /// JSON rendering for scenario results.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("surface_hits", Json::Num(self.surface_hits as f64)),
+            ("memo_hits", Json::Num(self.memo_hits as f64)),
+            ("extrapolated", Json::Num(self.extrapolated as f64)),
+            ("measured_cells", Json::Num(self.measured_cells as f64)),
+            ("fresh_trials", Json::Num(self.fresh_trials as f64)),
+        ])
+    }
+}
+
+/// Fitted per-epoch cost oracle over one sweep's response surfaces.
+pub struct SurfaceOracle {
+    train: ResponseSurface,
+    surveil: ResponseSurface,
+    train_pl: ResponseSurface,
+    surveil_pl: ResponseSurface,
+    cal: LocalCalibration,
+    lo: [usize; 3],
+    hi: [usize; 3],
+    /// Local-testbed seconds → core-equivalents conversion factor
+    /// (`cal.eff_flops / base-shape eff_flops`).
+    testbed_per_base: f64,
+    memo: Mutex<HashMap<(usize, usize, usize), (f64, f64)>>,
+    stats: OracleStats,
+}
+
+impl SurfaceOracle {
+    /// Fit an oracle from a finished sweep: quadratic surfaces for
+    /// interpolation, power-law surfaces for extrapolation, calibration
+    /// against the largest measured cell, and the grid bounding box as
+    /// the trusted domain.
+    pub fn from_sweep(result: &SweepResult) -> anyhow::Result<SurfaceOracle> {
+        let train_samples = result.samples("train");
+        let surveil_samples = result.samples("surveil");
+        anyhow::ensure!(
+            !train_samples.is_empty(),
+            "sweep has no measurable cells to fit an oracle from"
+        );
+        let fit_err = |e: anyhow::Error| {
+            anyhow::anyhow!(
+                "oracle surface fit failed ({e}); widen the sweep grid to ≥10 \
+                 measurable cells"
+            )
+        };
+        let train = ResponseSurface::fit(&train_samples).map_err(fit_err)?;
+        let surveil = ResponseSurface::fit(&surveil_samples).map_err(fit_err)?;
+        let train_pl = ResponseSurface::fit_power_law(&train_samples).map_err(fit_err)?;
+        let surveil_pl = ResponseSurface::fit_power_law(&surveil_samples).map_err(fit_err)?;
+        let spec = &result.spec;
+        let axis = |v: &[usize], name: &str| -> anyhow::Result<(usize, usize)> {
+            let lo = v.iter().min().copied();
+            let hi = v.iter().max().copied();
+            match (lo, hi) {
+                (Some(lo), Some(hi)) => Ok((lo, hi)),
+                _ => anyhow::bail!("sweep axis {name} is empty; cannot bound the oracle"),
+            }
+        };
+        let (n_lo, n_hi) = axis(&spec.signals, "signals")?;
+        let (m_lo, m_hi) = axis(&spec.memvecs, "memvecs")?;
+        let (o_lo, o_hi) = axis(&spec.obs, "obs")?;
+        let cal = LocalCalibration::from_surface(&surveil, n_hi, m_hi, o_hi);
+        let testbed_per_base = cal.eff_flops / shapes::catalog()[0].cpu_eff_flops();
+        Ok(SurfaceOracle {
+            train,
+            surveil,
+            train_pl,
+            surveil_pl,
+            cal,
+            lo: [n_lo, m_lo, o_lo],
+            hi: [n_hi, m_hi, o_hi],
+            testbed_per_base,
+            memo: Mutex::new(HashMap::new()),
+            stats: OracleStats::default(),
+        })
+    }
+
+    /// The testbed calibration behind the oracle.
+    pub fn calibration(&self) -> LocalCalibration {
+        self.cal
+    }
+
+    /// Inclusive `(lo, hi)` bounds of the trusted design-grid box.
+    pub fn domain(&self) -> ([usize; 3], [usize; 3]) {
+        (self.lo, self.hi)
+    }
+
+    /// Whether a cell lies inside the fitted grid's bounding box.
+    pub fn in_domain(&self, n: usize, m: usize, obs: usize) -> bool {
+        (self.lo[0]..=self.hi[0]).contains(&n)
+            && (self.lo[1]..=self.hi[1]).contains(&m)
+            && (self.lo[2]..=self.hi[2]).contains(&obs)
+    }
+
+    /// Answer-source counters so far.
+    pub fn stats(&self) -> OracleSnapshot {
+        OracleSnapshot {
+            surface_hits: self.stats.surface_hits.load(Ordering::SeqCst),
+            memo_hits: self.stats.memo_hits.load(Ordering::SeqCst),
+            extrapolated: self.stats.extrapolated.load(Ordering::SeqCst),
+            measured_cells: self.stats.measured_cells.load(Ordering::SeqCst),
+            fresh_trials: self.stats.fresh_trials.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Local-testbed cost of cell `(n, m, obs)`: `(train_s, surveil_s)`
+    /// where `surveil_s` streams `obs` observations. Sources, in order:
+    /// memo → fitted surface (in-domain) → cell store / fresh trials
+    /// (out-of-domain with a [`MeasureCtx`]) → power-law extrapolation.
+    pub fn local_costs(
+        &self,
+        n: usize,
+        m: usize,
+        obs: usize,
+        ctx: Option<&MeasureCtx<'_>>,
+    ) -> anyhow::Result<(f64, f64)> {
+        let key = (n, m, obs);
+        if let Some(&hit) = self.memo.lock().unwrap().get(&key) {
+            self.stats.memo_hits.fetch_add(1, Ordering::SeqCst);
+            return Ok(hit);
+        }
+        let costs = if self.in_domain(n, m, obs) {
+            self.stats.surface_hits.fetch_add(1, Ordering::SeqCst);
+            (self.train.predict(n, m, obs), self.surveil.predict(n, m, obs))
+        } else {
+            let measured = match ctx {
+                Some(ctx) => self.measure_cell(n, m, obs, ctx)?,
+                None => None,
+            };
+            match measured {
+                Some(c) => c,
+                None => {
+                    self.stats.extrapolated.fetch_add(1, Ordering::SeqCst);
+                    (
+                        self.train_pl.predict(n, m, obs),
+                        self.surveil_pl.predict(n, m, obs),
+                    )
+                }
+            }
+        };
+        self.memo.lock().unwrap().insert(key, costs);
+        Ok(costs)
+    }
+
+    /// One-cell exhaustive sweep through the shared executor; the cell
+    /// store serves warm cells with zero fresh trials. `None` (→ the
+    /// caller extrapolates instead) when the cell is a training-constraint
+    /// gap (`m < 2n` under MSET) or larger than [`MAX_BACKSTOP_ELEMS`] —
+    /// the backstop must not let one scenario's runaway workload drift
+    /// schedule arbitrarily large Monte Carlo cells the service's
+    /// per-request limits never saw.
+    fn measure_cell(
+        &self,
+        n: usize,
+        m: usize,
+        obs: usize,
+        ctx: &MeasureCtx<'_>,
+    ) -> anyhow::Result<Option<(f64, f64)>> {
+        if n.saturating_mul(m.max(obs)) > MAX_BACKSTOP_ELEMS {
+            return Ok(None);
+        }
+        let mut spec = ctx.spec.clone();
+        spec.signals = vec![n];
+        spec.memvecs = vec![m];
+        spec.obs = vec![obs];
+        spec.ci_target = 0.0; // a single cell: the exhaustive loop is right
+        if spec.is_gap(crate::coordinator::CellKey { n, m, obs }) {
+            return Ok(None);
+        }
+        let progress = Arc::new(SweepProgress::default());
+        let result =
+            run_sweep_executor(&spec, ctx.backend.clone(), ctx.cache, ctx.ticket, &progress)?;
+        let fresh = progress.trials_done.load(Ordering::SeqCst);
+        self.stats.fresh_trials.fetch_add(fresh, Ordering::SeqCst);
+        self.stats.measured_cells.fetch_add(1, Ordering::SeqCst);
+        crate::metrics::Registry::global().add("scenario.oracle.fresh_trials", fresh as u64);
+        let cell = &result.cells[0];
+        match (&cell.train, &cell.surveil) {
+            (Some(t), Some(s)) => Ok(Some((t.median, s.median))),
+            _ => Ok(None),
+        }
+    }
+
+    /// Local seconds to surveil **one** observation for an `(n, m)` model,
+    /// evaluated at the best-measured streaming window (the domain's
+    /// largest obs count).
+    pub fn per_obs_s(
+        &self,
+        n: usize,
+        m: usize,
+        ctx: Option<&MeasureCtx<'_>>,
+    ) -> anyhow::Result<f64> {
+        let window = self.hi[2];
+        let (_, surveil_s) = self.local_costs(n, m, window, ctx)?;
+        Ok(surveil_s / window as f64)
+    }
+
+    /// Core-equivalent demand of an `(n, m)` model streaming
+    /// `obs_per_sec` observations per second — the unit the fleet engine
+    /// and the shape ladder speak.
+    pub fn demand_core_eq(
+        &self,
+        n: usize,
+        m: usize,
+        obs_per_sec: f64,
+        ctx: Option<&MeasureCtx<'_>>,
+    ) -> anyhow::Result<f64> {
+        let per_obs = self.per_obs_s(n, m, ctx)?;
+        Ok(obs_per_sec * per_obs * self.testbed_per_base)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run_sweep_cached;
+    use crate::service::cache::SweepCache;
+    use crate::util::threadpool::TrialExecutor;
+
+    fn fitted_sweep(cache: Option<&dyn CellStore>) -> SweepResult {
+        let spec = SweepSpec {
+            signals: vec![2, 3],
+            memvecs: vec![8, 12, 16],
+            obs: vec![16, 32],
+            trials: 1,
+            seed: 5,
+            model: "mset2".into(),
+            workers: 2,
+            ..SweepSpec::default()
+        };
+        run_sweep_cached(&spec, Backend::Native, cache).unwrap()
+    }
+
+    #[test]
+    fn in_domain_queries_use_the_surface_and_memoise() {
+        let oracle = SurfaceOracle::from_sweep(&fitted_sweep(None)).unwrap();
+        assert!(oracle.in_domain(2, 12, 16));
+        assert!(!oracle.in_domain(2, 12, 4096));
+        let (t, s) = oracle.local_costs(2, 12, 16, None).unwrap();
+        assert!(t > 0.0 && s > 0.0);
+        let again = oracle.local_costs(2, 12, 16, None).unwrap();
+        assert_eq!((t, s), again, "memoised answer must be identical");
+        let st = oracle.stats();
+        assert_eq!(st.surface_hits, 1);
+        assert_eq!(st.memo_hits, 1);
+        assert_eq!(st.fresh_trials, 0);
+    }
+
+    #[test]
+    fn out_of_domain_without_ctx_extrapolates() {
+        let oracle = SurfaceOracle::from_sweep(&fitted_sweep(None)).unwrap();
+        let (t, s) = oracle.local_costs(2, 64, 16, None).unwrap();
+        assert!(t.is_finite() && t > 0.0 && s.is_finite() && s > 0.0);
+        assert_eq!(oracle.stats().extrapolated, 1);
+        assert_eq!(oracle.stats().measured_cells, 0);
+    }
+
+    #[test]
+    fn out_of_domain_with_ctx_measures_once_then_serves_from_cache() {
+        let cache = SweepCache::in_memory();
+        let result = fitted_sweep(Some(&cache));
+        let template = result.spec.clone();
+        let exec = TrialExecutor::new(2, true);
+        let ticket = exec.register(1.0);
+        let backend = Backend::Native;
+        {
+            let oracle = SurfaceOracle::from_sweep(&result).unwrap();
+            let ctx = MeasureCtx {
+                spec: &template,
+                backend: &backend,
+                cache: Some(&cache),
+                ticket: &ticket,
+            };
+            let (t, s) = oracle.local_costs(2, 64, 16, Some(&ctx)).unwrap();
+            assert!(t > 0.0 && s > 0.0);
+            let st = oracle.stats();
+            assert_eq!(st.measured_cells, 1);
+            assert!(st.fresh_trials > 0, "cold cell must execute real trials");
+        }
+        // A second oracle over the now-warm store: same query, zero trials.
+        let oracle = SurfaceOracle::from_sweep(&result).unwrap();
+        let ctx = MeasureCtx {
+            spec: &template,
+            backend: &backend,
+            cache: Some(&cache),
+            ticket: &ticket,
+        };
+        oracle.local_costs(2, 64, 16, Some(&ctx)).unwrap();
+        let st = oracle.stats();
+        assert_eq!(st.measured_cells, 1);
+        assert_eq!(st.fresh_trials, 0, "warm store must serve without trials");
+    }
+
+    #[test]
+    fn gap_cells_fall_back_to_extrapolation() {
+        let result = fitted_sweep(None);
+        let template = result.spec.clone();
+        let exec = TrialExecutor::new(1, true);
+        let ticket = exec.register(1.0);
+        let backend = Backend::Native;
+        let oracle = SurfaceOracle::from_sweep(&result).unwrap();
+        let ctx = MeasureCtx {
+            spec: &template,
+            backend: &backend,
+            cache: None,
+            ticket: &ticket,
+        };
+        // m < 2n and outside the grid: unmeasurable, must extrapolate
+        let (t, s) = oracle.local_costs(64, 8, 16, Some(&ctx)).unwrap();
+        assert!(t > 0.0 && s > 0.0);
+        assert_eq!(oracle.stats().measured_cells, 0);
+        assert_eq!(oracle.stats().extrapolated, 1);
+        // an oversized cell must also extrapolate, never schedule trials
+        // (one scenario must not defeat the service's resource caps)
+        let (t, s) = oracle
+            .local_costs(4096, 1 << 23, 16, Some(&ctx))
+            .unwrap();
+        assert!(t.is_finite() && t > 0.0 && s.is_finite() && s > 0.0);
+        assert_eq!(oracle.stats().measured_cells, 0);
+        assert_eq!(oracle.stats().extrapolated, 2);
+        assert_eq!(oracle.stats().fresh_trials, 0);
+    }
+
+    #[test]
+    fn demand_scales_with_rate_and_model_size() {
+        let oracle = SurfaceOracle::from_sweep(&fitted_sweep(None)).unwrap();
+        let d1 = oracle.demand_core_eq(2, 8, 1.0, None).unwrap();
+        let d10 = oracle.demand_core_eq(2, 8, 10.0, None).unwrap();
+        assert!(d1 > 0.0);
+        assert!((d10 / d1 - 10.0).abs() < 1e-9, "demand linear in rate");
+        let big = oracle.demand_core_eq(3, 16, 1.0, None).unwrap();
+        assert!(big > d1, "bigger model must demand more compute");
+    }
+}

@@ -1,0 +1,708 @@
+//! Scenario specification: **scenarios are data, not code**.
+//!
+//! A [`ScenarioSpec`] is a small JSON document describing a fleet
+//! what-if: how tenants arrive, how each tenant's demand evolves, whether
+//! demand is given directly in core-equivalents or derived from an ML
+//! workload through the surface oracle, and which placement/scaling
+//! policies to compare. The same schema is accepted by config files
+//! (`"scenario": {…}`), the `simulate` CLI verb (`--scenario file.json`),
+//! and the service's `POST /v1/scenarios` body.
+
+use crate::scenario::fleet::PredictivePolicy;
+use crate::shapes::elastic::ElasticPolicy;
+use crate::shapes::Workload;
+use crate::util::json::Json;
+
+/// Tenant arrival process.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ArrivalSpec {
+    /// Tenants already present at epoch 0.
+    pub initial: usize,
+    /// Poisson arrival rate (new tenants per epoch) after epoch 0.
+    pub rate_per_epoch: f64,
+    /// Hard cap on the fleet size; arrivals beyond it are dropped.
+    pub max_tenants: usize,
+}
+
+impl Default for ArrivalSpec {
+    fn default() -> Self {
+        ArrivalSpec {
+            initial: 20,
+            rate_per_epoch: 0.5,
+            max_tenants: 200,
+        }
+    }
+}
+
+/// Shape of one tenant's demand multiplier over its lifetime. Every kind
+/// is further scaled by the common `growth_per_epoch` drift and the
+/// per-tenant lognormal jitter of the enclosing [`DemandSpec`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DemandKind {
+    /// Flat demand (exponential growth via `growth_per_epoch`).
+    Constant,
+    /// Demand doubles every `every` epochs (the paper's step growth).
+    Steps {
+        /// Epochs between doublings.
+        every: usize,
+    },
+    /// `1 + amplitude · sin(2π·(t + phase)/period)` — weekly/daily load
+    /// cycles; each tenant gets a deterministic random phase.
+    Diurnal {
+        /// Relative swing around the mean, in `[0, 1]`.
+        amplitude: f64,
+        /// Cycle length in epochs.
+        period: usize,
+    },
+    /// Baseline 1×, spiking to `spike`× for `width` epochs every `every`
+    /// epochs (tenant-phase-offset): launch days, reprocessing bursts.
+    Flash {
+        /// Multiplier during a spike (≥ 1).
+        spike: f64,
+        /// Epochs between spike onsets.
+        every: usize,
+        /// Spike duration in epochs.
+        width: usize,
+    },
+}
+
+/// Per-tenant demand generator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DemandSpec {
+    /// Base demand: core-equivalents (direct mode) or the multiplier on
+    /// the workload's `obs_per_sec` (workload mode).
+    pub base: f64,
+    /// Multiplicative drift applied every epoch (1.0 = none).
+    pub growth_per_epoch: f64,
+    /// σ of the per-tenant lognormal size jitter (0 = identical tenants).
+    pub jitter: f64,
+    /// Temporal shape of the demand.
+    pub kind: DemandKind,
+}
+
+impl Default for DemandSpec {
+    fn default() -> Self {
+        DemandSpec {
+            base: 0.5,
+            growth_per_epoch: 1.005,
+            jitter: 0.3,
+            kind: DemandKind::Diurnal {
+                amplitude: 0.4,
+                period: 7,
+            },
+        }
+    }
+}
+
+/// Per-epoch multiplicative drift of a tenant's ML design parameters —
+/// customers widen their telemetry and grow their models over time, which
+/// moves them across the `(n_signals, n_memvec, n_obs)` cost grid.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkloadDrift {
+    /// Growth factor per epoch on `n_signals`.
+    pub signals_growth: f64,
+    /// Growth factor per epoch on `n_memvec`.
+    pub memvecs_growth: f64,
+}
+
+impl Default for WorkloadDrift {
+    fn default() -> Self {
+        WorkloadDrift {
+            signals_growth: 1.0,
+            memvecs_growth: 1.0,
+        }
+    }
+}
+
+/// Workload mode: tenants are ML use cases whose demand is derived from
+/// the surface oracle instead of given directly in core-equivalents.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadSpec {
+    /// The base workload every tenant starts from.
+    pub base: Workload,
+    /// Per-epoch drift across the design grid.
+    pub drift: WorkloadDrift,
+}
+
+/// One placement/scaling policy to evaluate.
+#[derive(Clone, Copy, Debug)]
+pub enum PolicySpec {
+    /// Fixed shape chosen up front to cover the tenant's peak demand at
+    /// the given headroom — the ContainerStress recommendation.
+    PreScoped {
+        /// Target peak utilisation of the chosen shape (e.g. 0.8).
+        headroom: f64,
+    },
+    /// Reactive threshold autoscaler (scale-up lag, migration fees).
+    Reactive(ElasticPolicy),
+    /// Predictive oracle-driven scaler: looks ahead in the demand trace
+    /// and migrates *before* demand crosses capacity.
+    Predictive(PredictivePolicy),
+}
+
+impl PolicySpec {
+    /// Short human-readable label used in reports, JSON, and CSV output
+    /// (deliberately comma-free so CSV rows never need quoting).
+    pub fn label(&self) -> String {
+        match self {
+            PolicySpec::PreScoped { headroom } => format!("prescoped(h={headroom:.2})"),
+            PolicySpec::Reactive(p) => {
+                format!("reactive(up={:.2} lag={})", p.scale_up_at, p.scale_lag_epochs)
+            }
+            PolicySpec::Predictive(p) => {
+                format!("predictive(horizon={} lag={})", p.horizon_epochs, p.scale_lag_epochs)
+            }
+        }
+    }
+}
+
+/// A complete fleet scenario.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    /// Scenario name (report/file stem).
+    pub name: String,
+    /// Root seed; tenant arrivals, phases and jitter all derive from it.
+    pub seed: u64,
+    /// Simulated epochs.
+    pub epochs: usize,
+    /// Wall-clock hours per epoch.
+    pub hours_per_epoch: f64,
+    /// Tenant arrival process.
+    pub arrivals: ArrivalSpec,
+    /// Per-tenant demand generator.
+    pub demand: DemandSpec,
+    /// `Some` switches demand to workload mode (surface-oracle derived).
+    pub workload: Option<WorkloadSpec>,
+    /// Policies to compare (at least one).
+    pub policies: Vec<PolicySpec>,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        ScenarioSpec {
+            name: "demo-fleet".into(),
+            seed: 7,
+            epochs: 180,
+            hours_per_epoch: 24.0,
+            arrivals: ArrivalSpec::default(),
+            demand: DemandSpec::default(),
+            workload: None,
+            policies: vec![
+                PolicySpec::PreScoped { headroom: 0.8 },
+                PolicySpec::Reactive(ElasticPolicy::default()),
+                PolicySpec::Predictive(PredictivePolicy::default()),
+            ],
+        }
+    }
+}
+
+impl ScenarioSpec {
+    /// Reject scenarios that cannot run (zero epochs, bad rates, empty
+    /// policy list, out-of-range policy thresholds, …) with a clean error
+    /// before any work is scheduled.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "scenario name must be non-empty");
+        anyhow::ensure!(self.epochs >= 1, "epochs must be ≥ 1");
+        anyhow::ensure!(
+            self.hours_per_epoch.is_finite() && self.hours_per_epoch > 0.0,
+            "hours_per_epoch must be finite and > 0"
+        );
+        anyhow::ensure!(self.arrivals.max_tenants >= 1, "max_tenants must be ≥ 1");
+        anyhow::ensure!(
+            self.arrivals.initial <= self.arrivals.max_tenants,
+            "initial tenants ({}) exceed max_tenants ({})",
+            self.arrivals.initial,
+            self.arrivals.max_tenants
+        );
+        anyhow::ensure!(
+            self.arrivals.rate_per_epoch.is_finite() && self.arrivals.rate_per_epoch >= 0.0,
+            "rate_per_epoch must be finite and ≥ 0"
+        );
+        let d = &self.demand;
+        anyhow::ensure!(
+            d.base.is_finite() && d.base >= 0.0,
+            "demand.base must be finite and ≥ 0"
+        );
+        anyhow::ensure!(
+            d.growth_per_epoch.is_finite() && d.growth_per_epoch > 0.0,
+            "demand.growth_per_epoch must be finite and > 0"
+        );
+        anyhow::ensure!(
+            d.jitter.is_finite() && d.jitter >= 0.0,
+            "demand.jitter must be finite and ≥ 0"
+        );
+        match d.kind {
+            DemandKind::Constant => {}
+            DemandKind::Steps { every } => {
+                anyhow::ensure!(every >= 1, "demand.step_every must be ≥ 1");
+            }
+            DemandKind::Diurnal { amplitude, period } => {
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&amplitude),
+                    "demand.amplitude must be in [0, 1]"
+                );
+                anyhow::ensure!(period >= 1, "demand.period_epochs must be ≥ 1");
+            }
+            DemandKind::Flash { spike, every, width } => {
+                anyhow::ensure!(
+                    spike.is_finite() && spike >= 1.0,
+                    "demand.spike must be finite and ≥ 1"
+                );
+                anyhow::ensure!(every >= 1, "demand.spike_every must be ≥ 1");
+                anyhow::ensure!(
+                    width >= 1 && width <= every,
+                    "demand.spike_width must be in [1, spike_every]"
+                );
+            }
+        }
+        if let Some(w) = &self.workload {
+            anyhow::ensure!(
+                w.base.n_signals >= 1 && w.base.n_memvec >= 1,
+                "workload signals/memvecs must be ≥ 1"
+            );
+            anyhow::ensure!(
+                w.base.obs_per_sec.is_finite() && w.base.obs_per_sec >= 0.0,
+                "workload.obs_per_sec must be finite and ≥ 0"
+            );
+            for (name, g) in [
+                ("signals_growth", w.drift.signals_growth),
+                ("memvecs_growth", w.drift.memvecs_growth),
+            ] {
+                anyhow::ensure!(
+                    g.is_finite() && g > 0.0,
+                    "workload.drift.{name} must be finite and > 0"
+                );
+            }
+        }
+        anyhow::ensure!(!self.policies.is_empty(), "policies must be non-empty");
+        for p in &self.policies {
+            match p {
+                PolicySpec::PreScoped { headroom } => {
+                    anyhow::ensure!(
+                        headroom.is_finite() && *headroom > 0.0 && *headroom <= 1.0,
+                        "prescoped headroom must be in (0, 1]"
+                    );
+                }
+                PolicySpec::Reactive(p) => {
+                    anyhow::ensure!(
+                        p.scale_up_at.is_finite() && p.scale_up_at > 0.0,
+                        "reactive scale_up_at must be finite and > 0"
+                    );
+                    anyhow::ensure!(
+                        p.scale_down_at.is_finite()
+                            && p.scale_down_at >= 0.0
+                            && p.scale_down_at < p.scale_up_at,
+                        "reactive scale_down_at must be in [0, scale_up_at)"
+                    );
+                    anyhow::ensure!(
+                        p.migration_usd.is_finite() && p.migration_usd >= 0.0,
+                        "reactive migration_usd must be finite and ≥ 0"
+                    );
+                }
+                PolicySpec::Predictive(p) => {
+                    anyhow::ensure!(p.horizon_epochs >= 1, "predictive horizon must be ≥ 1");
+                    anyhow::ensure!(
+                        p.headroom.is_finite() && p.headroom > 0.0 && p.headroom <= 1.0,
+                        "predictive headroom must be in (0, 1]"
+                    );
+                    anyhow::ensure!(
+                        p.scale_down_at.is_finite()
+                            && p.scale_down_at >= 0.0
+                            && p.scale_down_at < p.headroom,
+                        "predictive scale_down_at must be in [0, headroom)"
+                    );
+                    anyhow::ensure!(
+                        p.migration_usd.is_finite() && p.migration_usd >= 0.0,
+                        "predictive migration_usd must be finite and ≥ 0"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a scenario from its JSON form. Missing keys take defaults; a
+    /// present-but-malformed key is an error, never a silent fallback
+    /// (the same rule as the sweep/config parsers).
+    pub fn from_json(j: &Json) -> anyhow::Result<ScenarioSpec> {
+        anyhow::ensure!(j.as_obj().is_some(), "scenario must be a JSON object");
+        let mut s = ScenarioSpec::default();
+        if let Some(v) = j.get("name") {
+            s.name = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("scenario.name must be a string"))?
+                .to_string();
+        }
+        if let Some(v) = j.get("seed") {
+            let f = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("scenario.seed must be a number"))?;
+            anyhow::ensure!(
+                f >= 0.0 && f.fract() == 0.0 && f <= 9_007_199_254_740_992.0,
+                "scenario.seed must be a non-negative integer ≤ 2^53"
+            );
+            s.seed = f as u64;
+        }
+        if let Some(v) = opt_usize(j, "epochs", "scenario")? {
+            s.epochs = v;
+        }
+        if let Some(v) = opt_f64(j, "hours_per_epoch", "scenario")? {
+            s.hours_per_epoch = v;
+        }
+        if let Some(a) = j.get("arrivals") {
+            anyhow::ensure!(a.as_obj().is_some(), "scenario.arrivals must be an object");
+            if let Some(v) = opt_usize(a, "initial", "arrivals")? {
+                s.arrivals.initial = v;
+            }
+            if let Some(v) = opt_f64(a, "rate_per_epoch", "arrivals")? {
+                s.arrivals.rate_per_epoch = v;
+            }
+            if let Some(v) = opt_usize(a, "max_tenants", "arrivals")? {
+                s.arrivals.max_tenants = v;
+            }
+        }
+        if let Some(d) = j.get("demand") {
+            s.demand = demand_from_json(d)?;
+        }
+        match j.get("workload") {
+            None | Some(Json::Null) => {}
+            Some(w) => s.workload = Some(workload_from_json(w)?),
+        }
+        if let Some(p) = j.get("policies") {
+            let arr = p
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("scenario.policies must be an array"))?;
+            s.policies = arr.iter().map(policy_from_json).collect::<Result<_, _>>()?;
+        }
+        Ok(s)
+    }
+
+    /// Serialise to the JSON form accepted by [`ScenarioSpec::from_json`]
+    /// (run provenance, config round-trips).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("hours_per_epoch", Json::Num(self.hours_per_epoch)),
+            (
+                "arrivals",
+                Json::obj(vec![
+                    ("initial", Json::Num(self.arrivals.initial as f64)),
+                    ("rate_per_epoch", Json::Num(self.arrivals.rate_per_epoch)),
+                    ("max_tenants", Json::Num(self.arrivals.max_tenants as f64)),
+                ]),
+            ),
+            ("demand", demand_to_json(&self.demand)),
+            (
+                "policies",
+                Json::Arr(self.policies.iter().map(policy_to_json).collect()),
+            ),
+        ];
+        if let Some(w) = &self.workload {
+            fields.push(("workload", workload_to_json(w)));
+        }
+        Json::obj(fields)
+    }
+}
+
+fn opt_usize(j: &Json, key: &str, ctx: &str) -> anyhow::Result<Option<usize>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("{ctx}.{key} must be a non-negative integer")),
+    }
+}
+
+fn opt_f64(j: &Json, key: &str, ctx: &str) -> anyhow::Result<Option<f64>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("{ctx}.{key} must be a number")),
+    }
+}
+
+fn demand_from_json(d: &Json) -> anyhow::Result<DemandSpec> {
+    anyhow::ensure!(d.as_obj().is_some(), "scenario.demand must be an object");
+    let mut out = DemandSpec::default();
+    if let Some(v) = opt_f64(d, "base", "demand")? {
+        out.base = v;
+    }
+    if let Some(v) = opt_f64(d, "growth_per_epoch", "demand")? {
+        out.growth_per_epoch = v;
+    }
+    if let Some(v) = opt_f64(d, "jitter", "demand")? {
+        out.jitter = v;
+    }
+    if let Some(k) = d.get("kind") {
+        let k = k
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("demand.kind must be a string"))?;
+        out.kind = match k {
+            "constant" => DemandKind::Constant,
+            "steps" => DemandKind::Steps {
+                every: opt_usize(d, "step_every", "demand")?.unwrap_or(30),
+            },
+            "diurnal" => DemandKind::Diurnal {
+                amplitude: opt_f64(d, "amplitude", "demand")?.unwrap_or(0.4),
+                period: opt_usize(d, "period_epochs", "demand")?.unwrap_or(7),
+            },
+            "flash" => DemandKind::Flash {
+                spike: opt_f64(d, "spike", "demand")?.unwrap_or(4.0),
+                every: opt_usize(d, "spike_every", "demand")?.unwrap_or(90),
+                width: opt_usize(d, "spike_width", "demand")?.unwrap_or(2),
+            },
+            other => anyhow::bail!(
+                "demand.kind must be constant|steps|diurnal|flash, got '{other}'"
+            ),
+        };
+    }
+    Ok(out)
+}
+
+fn demand_to_json(d: &DemandSpec) -> Json {
+    let mut fields = vec![
+        ("base", Json::Num(d.base)),
+        ("growth_per_epoch", Json::Num(d.growth_per_epoch)),
+        ("jitter", Json::Num(d.jitter)),
+    ];
+    match d.kind {
+        DemandKind::Constant => fields.push(("kind", Json::Str("constant".into()))),
+        DemandKind::Steps { every } => {
+            fields.push(("kind", Json::Str("steps".into())));
+            fields.push(("step_every", Json::Num(every as f64)));
+        }
+        DemandKind::Diurnal { amplitude, period } => {
+            fields.push(("kind", Json::Str("diurnal".into())));
+            fields.push(("amplitude", Json::Num(amplitude)));
+            fields.push(("period_epochs", Json::Num(period as f64)));
+        }
+        DemandKind::Flash { spike, every, width } => {
+            fields.push(("kind", Json::Str("flash".into())));
+            fields.push(("spike", Json::Num(spike)));
+            fields.push(("spike_every", Json::Num(every as f64)));
+            fields.push(("spike_width", Json::Num(width as f64)));
+        }
+    }
+    Json::obj(fields)
+}
+
+fn workload_from_json(w: &Json) -> anyhow::Result<WorkloadSpec> {
+    anyhow::ensure!(w.as_obj().is_some(), "scenario.workload must be an object");
+    let mut base = Workload::customer_a();
+    if let Some(v) = opt_usize(w, "signals", "workload")? {
+        base.n_signals = v;
+    }
+    if let Some(v) = opt_usize(w, "memvecs", "workload")? {
+        base.n_memvec = v;
+    }
+    if let Some(v) = opt_f64(w, "obs_per_sec", "workload")? {
+        base.obs_per_sec = v;
+    }
+    if let Some(v) = opt_usize(w, "train_window", "workload")? {
+        base.train_window = v;
+    }
+    let mut drift = WorkloadDrift::default();
+    if let Some(d) = w.get("drift") {
+        anyhow::ensure!(d.as_obj().is_some(), "workload.drift must be an object");
+        if let Some(v) = opt_f64(d, "signals_growth", "drift")? {
+            drift.signals_growth = v;
+        }
+        if let Some(v) = opt_f64(d, "memvecs_growth", "drift")? {
+            drift.memvecs_growth = v;
+        }
+    }
+    Ok(WorkloadSpec { base, drift })
+}
+
+fn workload_to_json(w: &WorkloadSpec) -> Json {
+    Json::obj(vec![
+        ("signals", Json::Num(w.base.n_signals as f64)),
+        ("memvecs", Json::Num(w.base.n_memvec as f64)),
+        ("obs_per_sec", Json::Num(w.base.obs_per_sec)),
+        ("train_window", Json::Num(w.base.train_window as f64)),
+        (
+            "drift",
+            Json::obj(vec![
+                ("signals_growth", Json::Num(w.drift.signals_growth)),
+                ("memvecs_growth", Json::Num(w.drift.memvecs_growth)),
+            ]),
+        ),
+    ])
+}
+
+fn policy_from_json(p: &Json) -> anyhow::Result<PolicySpec> {
+    anyhow::ensure!(p.as_obj().is_some(), "each policy must be an object");
+    let kind = p
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("policy.kind must be a string"))?;
+    match kind {
+        "prescoped" => Ok(PolicySpec::PreScoped {
+            headroom: opt_f64(p, "headroom", "policy")?.unwrap_or(0.8),
+        }),
+        "reactive" => {
+            let d = ElasticPolicy::default();
+            Ok(PolicySpec::Reactive(ElasticPolicy {
+                scale_up_at: opt_f64(p, "scale_up_at", "policy")?.unwrap_or(d.scale_up_at),
+                scale_down_at: opt_f64(p, "scale_down_at", "policy")?
+                    .unwrap_or(d.scale_down_at),
+                scale_lag_epochs: opt_usize(p, "scale_lag_epochs", "policy")?
+                    .unwrap_or(d.scale_lag_epochs),
+                migration_usd: opt_f64(p, "migration_usd", "policy")?
+                    .unwrap_or(d.migration_usd),
+            }))
+        }
+        "predictive" => {
+            let d = PredictivePolicy::default();
+            Ok(PolicySpec::Predictive(PredictivePolicy {
+                horizon_epochs: opt_usize(p, "horizon_epochs", "policy")?
+                    .unwrap_or(d.horizon_epochs),
+                headroom: opt_f64(p, "headroom", "policy")?.unwrap_or(d.headroom),
+                scale_down_at: opt_f64(p, "scale_down_at", "policy")?
+                    .unwrap_or(d.scale_down_at),
+                scale_lag_epochs: opt_usize(p, "scale_lag_epochs", "policy")?
+                    .unwrap_or(d.scale_lag_epochs),
+                migration_usd: opt_f64(p, "migration_usd", "policy")?
+                    .unwrap_or(d.migration_usd),
+            }))
+        }
+        other => anyhow::bail!(
+            "policy.kind must be prescoped|reactive|predictive, got '{other}'"
+        ),
+    }
+}
+
+fn policy_to_json(p: &PolicySpec) -> Json {
+    match p {
+        PolicySpec::PreScoped { headroom } => Json::obj(vec![
+            ("kind", Json::Str("prescoped".into())),
+            ("headroom", Json::Num(*headroom)),
+        ]),
+        PolicySpec::Reactive(p) => Json::obj(vec![
+            ("kind", Json::Str("reactive".into())),
+            ("scale_up_at", Json::Num(p.scale_up_at)),
+            ("scale_down_at", Json::Num(p.scale_down_at)),
+            ("scale_lag_epochs", Json::Num(p.scale_lag_epochs as f64)),
+            ("migration_usd", Json::Num(p.migration_usd)),
+        ]),
+        PolicySpec::Predictive(p) => Json::obj(vec![
+            ("kind", Json::Str("predictive".into())),
+            ("horizon_epochs", Json::Num(p.horizon_epochs as f64)),
+            ("headroom", Json::Num(p.headroom)),
+            ("scale_down_at", Json::Num(p.scale_down_at)),
+            ("scale_lag_epochs", Json::Num(p.scale_lag_epochs as f64)),
+            ("migration_usd", Json::Num(p.migration_usd)),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates_and_roundtrips() {
+        let spec = ScenarioSpec::default();
+        spec.validate().unwrap();
+        let j = spec.to_json();
+        let back = ScenarioSpec::from_json(&j).unwrap();
+        back.validate().unwrap();
+        assert_eq!(back.name, spec.name);
+        assert_eq!(back.epochs, spec.epochs);
+        assert_eq!(back.demand, spec.demand);
+        assert_eq!(back.arrivals, spec.arrivals);
+        assert_eq!(back.policies.len(), spec.policies.len());
+        // the round-trip is a fixed point of the JSON encoding
+        assert_eq!(back.to_json(), j);
+    }
+
+    #[test]
+    fn parses_every_demand_kind_and_policy() {
+        let j = Json::parse(
+            r#"{
+              "name": "full", "seed": 3, "epochs": 50, "hours_per_epoch": 12,
+              "arrivals": {"initial": 5, "rate_per_epoch": 1.5, "max_tenants": 40},
+              "demand": {"kind": "flash", "base": 1.0, "spike": 6.0,
+                         "spike_every": 10, "spike_width": 2, "jitter": 0.1},
+              "workload": {"signals": 4, "memvecs": 16, "obs_per_sec": 2.0,
+                           "train_window": 64,
+                           "drift": {"signals_growth": 1.001, "memvecs_growth": 1.002}},
+              "policies": [
+                {"kind": "prescoped", "headroom": 0.7},
+                {"kind": "reactive", "scale_up_at": 0.9, "scale_lag_epochs": 3},
+                {"kind": "predictive", "horizon_epochs": 5}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let s = ScenarioSpec::from_json(&j).unwrap();
+        s.validate().unwrap();
+        assert_eq!(s.epochs, 50);
+        assert!(matches!(s.demand.kind, DemandKind::Flash { width: 2, .. }));
+        let w = s.workload.unwrap();
+        assert_eq!(w.base.n_memvec, 16);
+        assert!((w.drift.memvecs_growth - 1.002).abs() < 1e-12);
+        assert_eq!(s.policies.len(), 3);
+        assert!(s.policies[2].label().contains("predictive"));
+        // diurnal + steps parse too
+        let j = Json::parse(
+            r#"{"demand": {"kind": "diurnal", "amplitude": 0.2, "period_epochs": 14}}"#,
+        )
+        .unwrap();
+        let s = ScenarioSpec::from_json(&j).unwrap();
+        assert!(matches!(
+            s.demand.kind,
+            DemandKind::Diurnal { period: 14, .. }
+        ));
+        let j = Json::parse(r#"{"demand": {"kind": "steps", "step_every": 9}}"#).unwrap();
+        let s = ScenarioSpec::from_json(&j).unwrap();
+        assert!(matches!(s.demand.kind, DemandKind::Steps { every: 9 }));
+    }
+
+    #[test]
+    fn malformed_keys_are_errors_not_defaults() {
+        for bad in [
+            r#"{"epochs": "many"}"#,
+            r#"{"demand": {"kind": "sawtooth"}}"#,
+            r#"{"demand": {"base": "big"}}"#,
+            r#"{"policies": [{"kind": "magic"}]}"#,
+            r#"{"policies": "all"}"#,
+            r#"{"arrivals": {"initial": -1}}"#,
+            r#"{"workload": {"drift": {"signals_growth": "fast"}}}"#,
+            r#"{"seed": 1.5}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ScenarioSpec::from_json(&j).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn validation_catches_bad_specs() {
+        let mut s = ScenarioSpec {
+            epochs: 0,
+            ..ScenarioSpec::default()
+        };
+        assert!(s.validate().is_err());
+        s.epochs = 10;
+        s.policies.clear();
+        assert!(s.validate().is_err());
+        s.policies = vec![PolicySpec::PreScoped { headroom: 1.5 }];
+        assert!(s.validate().is_err());
+        s.policies = vec![PolicySpec::PreScoped { headroom: 0.8 }];
+        s.demand.kind = DemandKind::Flash {
+            spike: 2.0,
+            every: 4,
+            width: 9,
+        };
+        assert!(s.validate().is_err(), "spike wider than its period");
+        s.demand.kind = DemandKind::Constant;
+        s.arrivals.initial = 99;
+        s.arrivals.max_tenants = 10;
+        assert!(s.validate().is_err());
+    }
+}

@@ -1,0 +1,306 @@
+//! Deterministic workload-trace generators: tenant arrivals and per-tenant
+//! demand series.
+//!
+//! Everything derives from the scenario's root seed through tagged
+//! [`Rng::fork`]s, so a scenario replays bit-identically: same arrivals,
+//! same phases, same jitter — independent of thread count or scheduling
+//! (the same invariant the sweep engine holds for trial seeds).
+//!
+//! Demand value of tenant `i` at epoch `t` since its arrival:
+//!
+//! ```text
+//! d_i(t) = base · growth^t · kind_factor(t + phase_i) · jitter_i
+//! ```
+//!
+//! In direct mode `d_i(t)` is core-equivalent demand; in workload mode it
+//! multiplies the workload's `obs_per_sec` before the surface oracle
+//! converts observations/second into core-equivalents.
+
+use crate::scenario::spec::{DemandKind, ScenarioSpec, WorkloadSpec};
+use crate::util::fnv1a;
+use crate::util::rng::Rng;
+
+/// One synthesized tenant: when it arrived and its raw demand-multiplier
+/// series (one value per epoch from `arrival_epoch` to the scenario end).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tenant {
+    /// Stable tenant index (also its RNG tag).
+    pub id: usize,
+    /// Epoch the tenant joins the fleet.
+    pub arrival_epoch: usize,
+    /// Demand multiplier per lived epoch (`epochs - arrival_epoch` values).
+    pub series: Vec<f64>,
+}
+
+/// Sample a Poisson count (Knuth's product-of-uniforms; exact for the
+/// small per-epoch rates scenarios use).
+fn poisson(rng: &mut Rng, rate: f64) -> usize {
+    if rate <= 0.0 {
+        return 0;
+    }
+    let l = (-rate).exp();
+    let mut k = 0usize;
+    let mut p = 1.0;
+    loop {
+        p *= rng.f64();
+        if p <= l {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+/// Arrival epoch per tenant: `initial` tenants at epoch 0, then Poisson
+/// arrivals each epoch, truncated at `max_tenants`.
+pub fn arrival_epochs(spec: &ScenarioSpec) -> Vec<usize> {
+    let mut rng = Rng::new(spec.seed).fork(fnv1a(b"scenario.arrivals"));
+    let cap = spec.arrivals.max_tenants;
+    let mut arrivals = vec![0usize; spec.arrivals.initial.min(cap)];
+    for epoch in 1..spec.epochs {
+        if arrivals.len() >= cap {
+            break;
+        }
+        let k = poisson(&mut rng, spec.arrivals.rate_per_epoch);
+        for _ in 0..k {
+            if arrivals.len() >= cap {
+                break;
+            }
+            arrivals.push(epoch);
+        }
+    }
+    arrivals
+}
+
+/// The demand-multiplier series of tenant `id` over `len` epochs.
+pub fn demand_series(spec: &ScenarioSpec, id: usize, len: usize) -> Vec<f64> {
+    let mut rng = Rng::new(spec.seed).fork(fnv1a(b"scenario.tenant").wrapping_add(id as u64));
+    let d = &spec.demand;
+    // Per-tenant size jitter (lognormal; exp(0·g) = 1 exactly when off).
+    let scale = (d.jitter * rng.gauss()).exp();
+    // Per-tenant phase offset for cyclic kinds.
+    let phase = match d.kind {
+        DemandKind::Diurnal { period, .. } => rng.range_usize(0, period),
+        DemandKind::Flash { every, .. } => rng.range_usize(0, every),
+        _ => 0,
+    };
+    (0..len)
+        .map(|t| {
+            let factor = match d.kind {
+                DemandKind::Constant => 1.0,
+                DemandKind::Steps { every } => 2f64.powi((t / every) as i32),
+                DemandKind::Diurnal { amplitude, period } => {
+                    let angle = 2.0 * std::f64::consts::PI * ((t + phase) as f64)
+                        / (period as f64);
+                    (1.0 + amplitude * angle.sin()).max(0.0)
+                }
+                DemandKind::Flash { spike, every, width } => {
+                    if (t + phase) % every < width {
+                        spike
+                    } else {
+                        1.0
+                    }
+                }
+            };
+            d.base * d.growth_per_epoch.powi(t as i32) * factor * scale
+        })
+        .collect()
+}
+
+/// Synthesize the whole fleet for a scenario.
+pub fn build_tenants(spec: &ScenarioSpec) -> Vec<Tenant> {
+    arrival_epochs(spec)
+        .into_iter()
+        .enumerate()
+        .map(|(id, arrival_epoch)| Tenant {
+            id,
+            arrival_epoch,
+            series: demand_series(spec, id, spec.epochs - arrival_epoch),
+        })
+        .collect()
+}
+
+/// Ceiling on a drifted design parameter: far beyond any measurable cell,
+/// but small enough that the `f64 → usize` cast cannot saturate and the
+/// sweep engine's `2 * n` gap arithmetic cannot overflow when a runaway
+/// geometric drift (e.g. `×2` per epoch) is simulated.
+pub const DRIFT_CEILING: usize = 1 << 20;
+
+/// Tenant `id`'s drifted ML design parameters at epoch `t` since arrival:
+/// the base workload's `(n_signals, n_memvec)` scaled by the per-epoch
+/// drift factors, rounded to the integer grid, clamped to
+/// `[1, DRIFT_CEILING]`.
+pub fn drifted_params(w: &WorkloadSpec, t: usize) -> (usize, usize) {
+    let clamp = |x: f64| (x.round().min(DRIFT_CEILING as f64) as usize).max(1);
+    let n = (w.base.n_signals as f64) * w.drift.signals_growth.powi(t as i32);
+    let m = (w.base.n_memvec as f64) * w.drift.memvecs_growth.powi(t as i32);
+    (clamp(n), clamp(m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::spec::{ArrivalSpec, DemandSpec};
+    use crate::shapes::Workload;
+
+    fn spec() -> ScenarioSpec {
+        ScenarioSpec {
+            epochs: 60,
+            arrivals: ArrivalSpec {
+                initial: 5,
+                rate_per_epoch: 0.8,
+                max_tenants: 30,
+            },
+            ..ScenarioSpec::default()
+        }
+    }
+
+    #[test]
+    fn arrivals_deterministic_capped_and_ordered() {
+        let s = spec();
+        let a = arrival_epochs(&s);
+        let b = arrival_epochs(&s);
+        assert_eq!(a, b, "arrivals must replay bit-identically");
+        assert!(a.len() <= s.arrivals.max_tenants);
+        assert!(a.len() >= s.arrivals.initial);
+        assert!(a.iter().take(5).all(|&e| e == 0), "initial tenants at epoch 0");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "arrivals sorted by epoch");
+        assert!(a.iter().all(|&e| e < s.epochs));
+        // a different seed produces a different fleet
+        let other = arrival_epochs(&ScenarioSpec { seed: 99, ..s });
+        assert_ne!(a, other);
+    }
+
+    #[test]
+    fn series_deterministic_and_nonnegative_all_kinds() {
+        for kind in [
+            DemandKind::Constant,
+            DemandKind::Steps { every: 10 },
+            DemandKind::Diurnal {
+                amplitude: 0.9,
+                period: 7,
+            },
+            DemandKind::Flash {
+                spike: 5.0,
+                every: 12,
+                width: 2,
+            },
+        ] {
+            let s = ScenarioSpec {
+                demand: DemandSpec {
+                    base: 0.5,
+                    growth_per_epoch: 1.01,
+                    jitter: 0.2,
+                    kind,
+                },
+                ..spec()
+            };
+            let a = demand_series(&s, 3, 60);
+            assert_eq!(a, demand_series(&s, 3, 60));
+            assert!(a.iter().all(|v| v.is_finite() && *v >= 0.0), "{kind:?}");
+            assert_ne!(a, demand_series(&s, 4, 60), "tenants differ");
+        }
+    }
+
+    #[test]
+    fn degenerate_constant_matches_exponential_bitwise() {
+        // jitter 0 + constant kind must reproduce GrowthTrace::exponential
+        // exactly — the fleet engine's bit-identity bridge to
+        // shapes::elastic.
+        let s = ScenarioSpec {
+            demand: DemandSpec {
+                base: 0.5,
+                growth_per_epoch: 1.04,
+                jitter: 0.0,
+                kind: DemandKind::Constant,
+            },
+            ..spec()
+        };
+        let series = demand_series(&s, 0, 80);
+        let reference = crate::shapes::elastic::GrowthTrace::exponential(0.5, 1.04, 80, 24.0)
+            .unwrap();
+        assert_eq!(series, reference.demand());
+    }
+
+    #[test]
+    fn flash_spikes_and_diurnal_cycles_present() {
+        let s = ScenarioSpec {
+            demand: DemandSpec {
+                base: 1.0,
+                growth_per_epoch: 1.0,
+                jitter: 0.0,
+                kind: DemandKind::Flash {
+                    spike: 4.0,
+                    every: 10,
+                    width: 2,
+                },
+            },
+            ..spec()
+        };
+        let v = demand_series(&s, 1, 60);
+        let spikes = v.iter().filter(|&&x| x == 4.0).count();
+        assert_eq!(spikes, 12, "2-wide spike every 10 epochs over 60");
+        let s = ScenarioSpec {
+            demand: DemandSpec {
+                base: 1.0,
+                growth_per_epoch: 1.0,
+                jitter: 0.0,
+                kind: DemandKind::Diurnal {
+                    amplitude: 0.5,
+                    period: 7,
+                },
+            },
+            ..spec()
+        };
+        let v = demand_series(&s, 1, 70);
+        let (lo, hi) = v
+            .iter()
+            .fold((f64::MAX, f64::MIN), |(lo, hi), &x| (lo.min(x), hi.max(x)));
+        assert!(hi > 1.2 && lo < 0.8, "cycle must swing around the mean");
+    }
+
+    #[test]
+    fn drift_moves_across_the_grid() {
+        let w = WorkloadSpec {
+            base: Workload {
+                n_signals: 8,
+                n_memvec: 32,
+                obs_per_sec: 1.0,
+                train_window: 256,
+            },
+            drift: crate::scenario::spec::WorkloadDrift {
+                signals_growth: 1.01,
+                memvecs_growth: 1.02,
+            },
+        };
+        assert_eq!(drifted_params(&w, 0), (8, 32));
+        let (n, m) = drifted_params(&w, 100);
+        assert!(n > 8 && m > 32);
+        // no-drift default is the identity
+        let w0 = WorkloadSpec {
+            drift: Default::default(),
+            ..w
+        };
+        assert_eq!(drifted_params(&w0, 500), (8, 32));
+        // runaway geometric drift clamps at the ceiling instead of
+        // saturating the cast / overflowing gap arithmetic downstream
+        let runaway = WorkloadSpec {
+            drift: crate::scenario::spec::WorkloadDrift {
+                signals_growth: 2.0,
+                memvecs_growth: 2.0,
+            },
+            ..w
+        };
+        assert_eq!(drifted_params(&runaway, 500), (DRIFT_CEILING, DRIFT_CEILING));
+    }
+
+    #[test]
+    fn build_tenants_assembles_fleet() {
+        let s = spec();
+        let fleet = build_tenants(&s);
+        assert!(fleet.len() >= 5);
+        for t in &fleet {
+            assert_eq!(t.series.len(), s.epochs - t.arrival_epoch);
+        }
+        assert_eq!(fleet, build_tenants(&s));
+    }
+}

@@ -8,9 +8,9 @@
 //! stack is available offline:
 //!
 //! - [`http`]   — minimal HTTP/1.1 server core (parse, dispatch, respond);
-//! - [`routes`] — the JSON API: submit scope jobs, poll status + live
-//!   progress, cancel jobs, fetch recommendations, shape catalog, health,
-//!   metrics;
+//! - [`routes`] — the JSON API: submit scope jobs and fleet scenarios,
+//!   poll status + live progress, cancel jobs, fetch recommendations,
+//!   shape catalog, health, metrics;
 //! - [`cache`]  — the content-addressed **cell-level sweep cache**:
 //!   identical grid cells across customer requests are measured once, so a
 //!   repeat scoping request costs a surface fit + recommend instead of a

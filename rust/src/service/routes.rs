@@ -2,8 +2,11 @@
 //!
 //! ```text
 //! POST   /v1/scope                submit a workload + SLA, get a job id
+//! POST   /v1/scenarios            submit a fleet what-if scenario replay
 //! GET    /v1/jobs/{id}            job status / live progress / summary
+//! GET    /v1/scenarios/{id}       scenario status / replay progress / outcome
 //! DELETE /v1/jobs/{id}            cancel a queued or running job
+//! DELETE /v1/scenarios/{id}       cancel a queued or running scenario
 //! GET    /v1/recommendations/{id} rendered shape recommendation (job → rec)
 //! GET    /v1/shapes               cloud shape catalog
 //! GET    /healthz                 liveness + queue/scheduler gauges
@@ -36,6 +39,7 @@ use crate::coordinator::jobs::{JobId, JobStatus, ScopingService};
 use crate::coordinator::{SweepResult, SweepSpec};
 use crate::metrics::Registry;
 use crate::recommend::{recommend_from_sweep, Sla};
+use crate::scenario::ScenarioSpec;
 use crate::service::cache::SweepCache;
 use crate::service::http::{Request, Response};
 use crate::shapes::{self, Workload};
@@ -98,14 +102,20 @@ impl ServiceState {
             ("GET", ["metrics"]) => metrics(req),
             ("GET", ["v1", "shapes"]) => shapes_catalog(),
             ("POST", ["v1", "scope"]) => self.scope(req),
+            ("POST", ["v1", "scenarios"]) => self.scenario_submit(req),
             ("GET", ["v1", "jobs", id]) => self.job_status(id),
-            ("DELETE", ["v1", "jobs", id]) => self.cancel_job(id),
+            ("GET", ["v1", "scenarios", id]) => self.scenario_status(id),
+            ("DELETE", ["v1", "jobs", id]) | ("DELETE", ["v1", "scenarios", id]) => {
+                self.cancel_job(id)
+            }
             ("GET", ["v1", "recommendations", id]) => self.recommendation(id),
             (_, ["healthz"])
             | (_, ["metrics"])
             | (_, ["v1", "shapes"])
             | (_, ["v1", "scope"])
+            | (_, ["v1", "scenarios"])
             | (_, ["v1", "jobs", _])
+            | (_, ["v1", "scenarios", _])
             | (_, ["v1", "recommendations", _]) => {
                 Response::error(405, "method not allowed on this route")
             }
@@ -229,6 +239,11 @@ impl ServiceState {
                         fields.push(("status", Json::Str("done".into())));
                         fields.push(("result", sweep_summary(&r)));
                     }
+                    JobStatus::DoneScenario(o) => {
+                        // full outcome lives at GET /v1/scenarios/{id}
+                        fields.push(("status", Json::Str("done".into())));
+                        fields.push(("scenario", Json::Str(o.name.clone())));
+                    }
                 }
                 if let Some(p) = self.svc.progress(id) {
                     fields.push((
@@ -250,6 +265,137 @@ impl ServiceState {
         }
     }
 
+    /// `POST /v1/scenarios`: body `{"scenario": {…}, "sweep": {…},
+    /// "scheduler": {…}}`. The `scenario` object is required; `sweep`
+    /// overlays the server's default spec and is mandatory semantics-wise
+    /// only for workload-mode scenarios (where it feeds the oracle) — the
+    /// server fills it with its default spec when omitted there.
+    fn scenario_submit(&self, req: &Request) -> Response {
+        let body = match req.body_str() {
+            Ok(t) if !t.trim().is_empty() => match Json::parse(t) {
+                Ok(j) => j,
+                Err(e) => return Response::error(400, &format!("invalid JSON body: {e}")),
+            },
+            Ok(_) => return Response::error(400, "body must carry a scenario object"),
+            Err(e) => return Response::error(400, &e.to_string()),
+        };
+        if body.as_obj().is_none() {
+            return Response::error(400, "body must be a JSON object");
+        }
+        let Some(sj) = body.get("scenario") else {
+            return Response::error(422, "missing 'scenario' object");
+        };
+        let scenario = match ScenarioSpec::from_json(sj) {
+            Ok(s) => s,
+            Err(e) => return Response::error(422, &format!("invalid scenario: {e}")),
+        };
+        if let Err(e) = scenario
+            .validate()
+            .and_then(|_| check_scenario_limits(&scenario))
+        {
+            return Response::error(422, &format!("invalid scenario: {e}"));
+        }
+        // Sweep spec: explicit overlay wins; workload mode falls back to
+        // the server's default grid (the oracle needs *some* sweep).
+        let sweep = match body.get("sweep") {
+            Some(s) => match config::sweep_spec_from_json(&self.default_spec, s) {
+                Ok(spec) => Some(spec),
+                Err(e) => return Response::error(422, &format!("invalid sweep spec: {e}")),
+            },
+            None if scenario.workload.is_some() => Some(self.default_spec.clone()),
+            None => None,
+        };
+        if let Some(spec) = &sweep {
+            if let Err(e) = spec
+                .validate()
+                .and_then(|_| check_service_limits(spec, self.svc.executor_workers()))
+            {
+                return Response::error(422, &format!("invalid sweep spec: {e}"));
+            }
+        }
+        let weight = match weight_from_json(body.get("scheduler")) {
+            Ok(w) => w,
+            Err(e) => return Response::error(422, &format!("invalid scheduler: {e}")),
+        };
+        match self.svc.submit_scenario_weighted(scenario, sweep, weight) {
+            Ok(id) => {
+                Registry::global().inc("service.scenario.submitted");
+                Response::json(
+                    202,
+                    &Json::obj(vec![
+                        ("job_id", Json::Num(id as f64)),
+                        ("status", Json::Str("queued".into())),
+                    ]),
+                )
+            }
+            Err(e) => {
+                Registry::global().inc("service.scenario.rejected");
+                let msg = e.to_string();
+                if msg.contains("saturated") {
+                    Response::error(429, &msg)
+                } else {
+                    Response::error(422, &msg)
+                }
+            }
+        }
+    }
+
+    /// `GET /v1/scenarios/{id}`: status + live replay progress (plus the
+    /// embedded oracle sweep's progress) and, once done, the full
+    /// [`crate::scenario::ScenarioOutcome`] JSON.
+    fn scenario_status(&self, id: &str) -> Response {
+        let id: JobId = match id.parse() {
+            Ok(v) => v,
+            Err(_) => return Response::error(400, "job id must be an integer"),
+        };
+        let Some(status) = self.svc.status(id) else {
+            return Response::error(404, &format!("unknown job {id}"));
+        };
+        let Some(sp) = self.svc.scenario_progress(id) else {
+            return Response::error(
+                404,
+                &format!("job {id} is not a scenario job (see GET /v1/jobs/{id})"),
+            );
+        };
+        let mut fields = vec![("job_id", Json::Num(id as f64))];
+        match status {
+            JobStatus::Queued => fields.push(("status", Json::Str("queued".into()))),
+            JobStatus::Running => fields.push(("status", Json::Str("running".into()))),
+            JobStatus::Cancelled => fields.push(("status", Json::Str("cancelled".into()))),
+            JobStatus::Failed(e) => {
+                fields.push(("status", Json::Str("failed".into())));
+                fields.push(("error", Json::Str(e)));
+            }
+            JobStatus::DoneScenario(o) => {
+                fields.push(("status", Json::Str("done".into())));
+                fields.push(("result", o.to_json()));
+            }
+            JobStatus::Done(_) => {
+                // unreachable in practice: scenario ids never carry sweep
+                // results; report it honestly rather than panicking.
+                fields.push(("status", Json::Str("done".into())));
+            }
+        }
+        let mut progress = vec![
+            ("tenants", Json::Num(sp.tenants as f64)),
+            ("units_total", Json::Num(sp.units_total as f64)),
+            ("units_done", Json::Num(sp.units_done as f64)),
+        ];
+        if let Some(p) = self.svc.progress(id) {
+            progress.push((
+                "sweep",
+                Json::obj(vec![
+                    ("trials_done", Json::Num(p.trials_done as f64)),
+                    ("trials_planned", Json::Num(p.trials_planned as f64)),
+                    ("cells_total", Json::Num(p.cells_total as f64)),
+                    ("cells_done", Json::Num(p.cells_done as f64)),
+                ]),
+            ));
+        }
+        fields.push(("progress", Json::obj(progress)));
+        Response::json(200, &Json::obj(fields))
+    }
+
     fn cancel_job(&self, id: &str) -> Response {
         let id: JobId = match id.parse() {
             Ok(v) => v,
@@ -258,7 +404,13 @@ impl ServiceState {
         match self.svc.cancel(id) {
             None => Response::error(404, &format!("unknown job {id}")),
             Some(JobStatus::Queued | JobStatus::Running) => {
-                Registry::global().inc("service.scope.cancelled");
+                // both DELETE routes land here; attribute the metric to
+                // the job's actual kind
+                if self.svc.scenario_progress(id).is_some() {
+                    Registry::global().inc("service.scenario.cancelled");
+                } else {
+                    Registry::global().inc("service.scope.cancelled");
+                }
                 Response::json(
                     202,
                     &Json::obj(vec![
@@ -284,6 +436,12 @@ impl ServiceState {
             Some(JobStatus::Done(r)) => r,
             Some(JobStatus::Failed(e)) => {
                 return Response::error(409, &format!("job {id} failed: {e}"))
+            }
+            Some(JobStatus::DoneScenario(_)) => {
+                return Response::error(
+                    409,
+                    &format!("job {id} is a scenario job; see GET /v1/scenarios/{id}"),
+                )
             }
             Some(_) => {
                 return Response::error(409, &format!("job {id} is not complete yet"))
@@ -330,6 +488,41 @@ const MAX_CELL_ELEMS: usize = 1 << 24;
 /// job's trials run at once, so bounding that product is what actually
 /// bounds transient memory.
 const MAX_CONCURRENT_ELEMS: usize = 1 << 26;
+
+/// Per-request bounds on client-supplied scenarios: fleet size × epochs
+/// drives both CPU (simulation steps) and memory (per-epoch series), so
+/// one request must not be able to monopolise the node.
+const MAX_SCENARIO_EPOCHS: usize = 4096;
+const MAX_SCENARIO_TENANTS: usize = 4096;
+const MAX_SCENARIO_POLICIES: usize = 8;
+/// Cap on `max_tenants × epochs` (simulation units per policy); ~2M units
+/// replay in well under a second in release builds.
+const MAX_SCENARIO_UNITS: usize = 1 << 21;
+
+fn check_scenario_limits(s: &ScenarioSpec) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        s.epochs <= MAX_SCENARIO_EPOCHS,
+        "scenario too large: {} epochs (service max {MAX_SCENARIO_EPOCHS})",
+        s.epochs
+    );
+    anyhow::ensure!(
+        s.arrivals.max_tenants <= MAX_SCENARIO_TENANTS,
+        "scenario too large: {} tenants (service max {MAX_SCENARIO_TENANTS})",
+        s.arrivals.max_tenants
+    );
+    anyhow::ensure!(
+        s.policies.len() <= MAX_SCENARIO_POLICIES,
+        "scenario too large: {} policies (service max {MAX_SCENARIO_POLICIES})",
+        s.policies.len()
+    );
+    let units = s.arrivals.max_tenants.saturating_mul(s.epochs);
+    anyhow::ensure!(
+        units <= MAX_SCENARIO_UNITS,
+        "scenario too large: {units} tenant-epochs per policy \
+         (service max {MAX_SCENARIO_UNITS})"
+    );
+    Ok(())
+}
 
 fn check_service_limits(spec: &SweepSpec, executor_workers: usize) -> anyhow::Result<()> {
     let cells = spec.signals.len() * spec.memvecs.len() * spec.obs.len();
@@ -469,7 +662,7 @@ fn metrics(req: &Request) -> Response {
 
 fn shapes_catalog() -> Response {
     let shapes: Vec<Json> = shapes::catalog()
-        .into_iter()
+        .iter()
         .map(|s| {
             Json::obj(vec![
                 ("name", Json::Str(s.name.to_string())),
@@ -645,6 +838,101 @@ mod tests {
         assert_eq!(
             p.get("trials_done").unwrap().as_usize(),
             p.get("trials_planned").unwrap().as_usize()
+        );
+    }
+
+    #[test]
+    fn scenario_submit_validation() {
+        let st = state();
+        // no body / missing scenario object
+        assert_eq!(st.handle(&post("/v1/scenarios", "")).status, 400);
+        assert_eq!(st.handle(&post("/v1/scenarios", "[1]")).status, 400);
+        assert_eq!(st.handle(&post("/v1/scenarios", "{}")).status, 422);
+        // malformed scenario fields
+        let r = st.handle(&post(
+            "/v1/scenarios",
+            r#"{"scenario": {"demand": {"kind": "sawtooth"}}}"#,
+        ));
+        assert_eq!(r.status, 422);
+        // resource limits: fleet × epochs bounded
+        let r = st.handle(&post(
+            "/v1/scenarios",
+            r#"{"scenario": {"epochs": 4000,
+                 "arrivals": {"initial": 1, "max_tenants": 4000}}}"#,
+        ));
+        assert_eq!(r.status, 422);
+        assert!(String::from_utf8(r.body).unwrap().contains("too large"));
+        // bad embedded sweep is rejected up front
+        let r = st.handle(&post(
+            "/v1/scenarios",
+            r#"{"scenario": {"epochs": 10}, "sweep": {"signals": []}}"#,
+        ));
+        assert_eq!(r.status, 422);
+        // method guard
+        assert_eq!(st.handle(&get("/v1/scenarios")).status, 405);
+    }
+
+    #[test]
+    fn scenario_roundtrip_and_status_routes() {
+        let st = state();
+        let body = r#"{"scenario": {
+            "name": "route-test", "epochs": 20,
+            "arrivals": {"initial": 3, "rate_per_epoch": 0.0, "max_tenants": 3},
+            "demand": {"kind": "constant", "base": 0.5,
+                       "growth_per_epoch": 1.01, "jitter": 0.0}
+        }}"#;
+        let r = st.handle(&post("/v1/scenarios", body));
+        assert_eq!(r.status, 202, "{:?}", String::from_utf8(r.body));
+        let id = Json::parse(std::str::from_utf8(&r.body).unwrap())
+            .unwrap()
+            .get("job_id")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        st.svc.wait_scenario(id as u64).unwrap();
+        let r = st.handle(&get(&format!("/v1/scenarios/{id}")));
+        assert_eq!(r.status, 200);
+        let j = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("done"));
+        let result = j.get("result").expect("done scenarios carry the outcome");
+        assert_eq!(
+            result.get("policies").unwrap().as_arr().unwrap().len(),
+            3,
+            "default policy set"
+        );
+        assert!(result.get("recommended").unwrap().as_str().is_some());
+        let p = j.get("progress").expect("progress present");
+        assert_eq!(
+            p.get("units_done").unwrap().as_usize(),
+            p.get("units_total").unwrap().as_usize()
+        );
+        // the generic jobs route sees it too, pointing at the scenario
+        let r = st.handle(&get(&format!("/v1/jobs/{id}")));
+        assert_eq!(r.status, 200);
+        let j = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(j.get("scenario").and_then(Json::as_str), Some("route-test"));
+        // a finished scenario cannot be cancelled
+        assert_eq!(st.handle(&delete(&format!("/v1/scenarios/{id}"))).status, 409);
+        // unknown / non-scenario ids
+        assert_eq!(st.handle(&get("/v1/scenarios/99999")).status, 404);
+        let r = st.handle(&post("/v1/scope", "{}"));
+        assert_eq!(r.status, 202);
+        let sweep_id = Json::parse(std::str::from_utf8(&r.body).unwrap())
+            .unwrap()
+            .get("job_id")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        st.svc.wait(sweep_id as u64).unwrap();
+        assert_eq!(
+            st.handle(&get(&format!("/v1/scenarios/{sweep_id}"))).status,
+            404,
+            "sweep jobs are not scenarios"
+        );
+        // recommendations route redirects scenario jobs
+        assert_eq!(
+            st.handle(&get(&format!("/v1/recommendations/{id}"))).status,
+            409
         );
     }
 

@@ -1,4 +1,4 @@
-//! Elasticity simulator.
+//! Elasticity simulator — single-tenant front of the fleet engine.
 //!
 //! The paper's introduction motivates ContainerStress with exactly this
 //! trade-off: *"Ideally, it would be nice to let a customer start small and
@@ -13,32 +13,93 @@
 //! paying a scale-up lag (SLA violations while saturated) and a migration
 //! cost (retraining/transfer) on every step. Output: cost-over-time,
 //! violation counts, and the crossover where pre-scoping wins.
+//!
+//! The simulation loops themselves live in [`crate::scenario::fleet`],
+//! which generalises them from one tenant to trace-driven fleets with
+//! pluggable policies; this module keeps the original single-tenant API
+//! (and its semantics, bit for bit) as thin wrappers over that engine.
 
-use super::{catalog, Shape};
+use super::Shape;
+use crate::scenario::fleet;
 
 /// Workload intensity over time: per-epoch demand expressed as the
 /// *fraction of a reference shape's capacity* (1 core-equivalent unit).
-#[derive(Clone, Debug)]
+///
+/// Validated at construction: every epoch demand must be finite and
+/// non-negative, and the epoch length positive — a `NaN` smuggled into a
+/// trace would otherwise silently disable every utilisation comparison
+/// downstream (`NaN > cap` is `false`, so violations vanish).
+#[derive(Clone, Debug, PartialEq)]
 pub struct GrowthTrace {
-    /// Demand per epoch, in core-equivalents.
-    pub demand: Vec<f64>,
-    /// Wall-clock hours per epoch.
-    pub hours_per_epoch: f64,
+    /// Demand per epoch, in core-equivalents (validated).
+    demand: Vec<f64>,
+    /// Wall-clock hours per epoch (validated).
+    hours_per_epoch: f64,
+}
+
+/// Why a [`GrowthTrace`] was rejected at construction.
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum TraceError {
+    /// The demand vector was empty.
+    #[error("growth trace has no epochs")]
+    Empty,
+    /// `hours_per_epoch` was non-finite or not positive.
+    #[error("hours_per_epoch must be finite and > 0, got {0}")]
+    BadHours(f64),
+    /// An epoch's demand was `NaN`, infinite, or negative.
+    #[error("demand at epoch {epoch} must be finite and ≥ 0, got {value}")]
+    BadDemand {
+        /// Index of the offending epoch.
+        epoch: usize,
+        /// The rejected demand value.
+        value: f64,
+    },
 }
 
 impl GrowthTrace {
+    /// Validated constructor: rejects empty traces, non-positive epoch
+    /// lengths, and `NaN`/infinite/negative demand values with a typed
+    /// error instead of silently accepting them.
+    pub fn new(demand: Vec<f64>, hours_per_epoch: f64) -> Result<GrowthTrace, TraceError> {
+        if demand.is_empty() {
+            return Err(TraceError::Empty);
+        }
+        if !hours_per_epoch.is_finite() || hours_per_epoch <= 0.0 {
+            return Err(TraceError::BadHours(hours_per_epoch));
+        }
+        for (epoch, &value) in demand.iter().enumerate() {
+            if !value.is_finite() || value < 0.0 {
+                return Err(TraceError::BadDemand { epoch, value });
+            }
+        }
+        Ok(GrowthTrace {
+            demand,
+            hours_per_epoch,
+        })
+    }
+
     /// Exponential customer growth: `d0 · g^t` for `epochs` epochs.
-    pub fn exponential(d0: f64, growth_per_epoch: f64, epochs: usize, hours: f64) -> Self {
-        GrowthTrace {
-            demand: (0..epochs)
+    pub fn exponential(
+        d0: f64,
+        growth_per_epoch: f64,
+        epochs: usize,
+        hours: f64,
+    ) -> Result<GrowthTrace, TraceError> {
+        GrowthTrace::new(
+            (0..epochs)
                 .map(|t| d0 * growth_per_epoch.powi(t as i32))
                 .collect(),
-            hours_per_epoch: hours,
-        }
+            hours,
+        )
     }
 
     /// Step growth: demand doubles at each given epoch index.
-    pub fn steps(d0: f64, step_epochs: &[usize], epochs: usize, hours: f64) -> Self {
+    pub fn steps(
+        d0: f64,
+        step_epochs: &[usize],
+        epochs: usize,
+        hours: f64,
+    ) -> Result<GrowthTrace, TraceError> {
         let mut demand = Vec::with_capacity(epochs);
         let mut d = d0;
         for t in 0..epochs {
@@ -47,10 +108,27 @@ impl GrowthTrace {
             }
             demand.push(d);
         }
-        GrowthTrace {
-            demand,
-            hours_per_epoch: hours,
-        }
+        GrowthTrace::new(demand, hours)
+    }
+
+    /// Demand per epoch, in core-equivalents.
+    pub fn demand(&self) -> &[f64] {
+        &self.demand
+    }
+
+    /// Wall-clock hours per epoch.
+    pub fn hours_per_epoch(&self) -> f64 {
+        self.hours_per_epoch
+    }
+
+    /// Number of epochs in the trace.
+    pub fn epochs(&self) -> usize {
+        self.demand.len()
+    }
+
+    /// Largest epoch demand (0.0 for an all-zero trace).
+    pub fn peak(&self) -> f64 {
+        self.demand.iter().cloned().fold(0.0, f64::max)
     }
 }
 
@@ -92,100 +170,23 @@ pub struct ElasticOutcome {
     pub shape_trace: Vec<&'static str>,
 }
 
-/// Capacity of a shape in core-equivalents (relative to a 1-core VM).
-fn capacity(shape: &Shape) -> f64 {
-    let base = catalog()[0].cpu_eff_flops();
-    shape.cpu_eff_flops() / base
-}
-
-/// CPU-shape ladder sorted by capacity.
-fn ladder() -> Vec<Shape> {
-    let mut v: Vec<Shape> = catalog().into_iter().filter(|s| !s.has_gpu()).collect();
-    v.sort_by(|a, b| capacity(a).partial_cmp(&capacity(b)).unwrap());
-    v
-}
-
 /// Simulate a fixed, pre-scoped shape over the trace.
 pub fn simulate_fixed(shape: &Shape, trace: &GrowthTrace) -> ElasticOutcome {
-    let cap = capacity(shape);
-    let mut violations = 0;
-    for &d in &trace.demand {
-        if d > cap {
-            violations += 1;
-        }
-    }
-    ElasticOutcome {
-        total_usd: shape.usd_per_hour * trace.hours_per_epoch * trace.demand.len() as f64,
-        violation_epochs: violations,
-        migrations: 0,
-        shape_trace: vec![shape.name; trace.demand.len()],
-    }
+    fleet::run_fixed(shape, trace).outcome
 }
 
 /// Simulate the reactive autoscaler over the trace.
 pub fn simulate_elastic(policy: &ElasticPolicy, trace: &GrowthTrace) -> ElasticOutcome {
-    let ladder = ladder();
-    let mut level = 0usize;
-    let mut pending: Option<(usize, usize)> = None; // (target level, ready epoch)
-    let mut total = 0.0;
-    let mut violations = 0;
-    let mut migrations = 0;
-    let mut shape_trace = Vec::with_capacity(trace.demand.len());
-    for (t, &d) in trace.demand.iter().enumerate() {
-        // complete a pending migration
-        if let Some((target, ready)) = pending {
-            if t >= ready {
-                level = target;
-                migrations += 1;
-                total += policy.migration_usd;
-                pending = None;
-            }
-        }
-        let shape = &ladder[level];
-        let cap = capacity(shape);
-        let util = d / cap;
-        if util > 1.0 {
-            violations += 1;
-        }
-        // policy decisions (only when no migration is in flight)
-        if pending.is_none() {
-            if util > policy.scale_up_at && level + 1 < ladder.len() {
-                // pick the smallest level with headroom
-                let target = (level + 1..ladder.len())
-                    .find(|&l| d / capacity(&ladder[l]) <= policy.scale_up_at)
-                    .unwrap_or(ladder.len() - 1);
-                pending = Some((target, t + policy.scale_lag_epochs));
-            } else if util < policy.scale_down_at && level > 0 {
-                let target = (0..level)
-                    .find(|&l| d / capacity(&ladder[l]) <= policy.scale_up_at)
-                    .unwrap_or(level - 1);
-                pending = Some((target, t + 1)); // scale-down is fast
-            }
-        }
-        total += shape.usd_per_hour * trace.hours_per_epoch;
-        shape_trace.push(shape.name);
-    }
-    ElasticOutcome {
-        total_usd: total,
-        violation_epochs: violations,
-        migrations,
-        shape_trace,
-    }
+    fleet::run_reactive(policy, trace).outcome
 }
 
 /// Side-by-side comparison used by reports: returns (fixed, elastic) for a
 /// pre-scoped shape chosen to cover the trace's *final* demand — the
 /// ContainerStress recommendation.
 pub fn compare(trace: &GrowthTrace, policy: &ElasticPolicy) -> (ElasticOutcome, ElasticOutcome) {
-    let peak = trace.demand.iter().cloned().fold(0.0, f64::max);
-    let ladder = ladder();
-    let scoped = ladder
-        .iter()
-        .find(|s| capacity(s) >= peak / 0.8)
-        .unwrap_or_else(|| ladder.last().unwrap())
-        .clone();
+    let scoped = fleet::prescope_shape(trace, fleet::PRESCOPE_HEADROOM);
     (
-        simulate_fixed(&scoped, trace),
+        simulate_fixed(scoped, trace),
         simulate_elastic(policy, trace),
     )
 }
@@ -197,7 +198,7 @@ mod tests {
     #[test]
     fn fixed_shape_covering_peak_never_violates() {
         // growth kept inside the catalog's largest CPU shape (~35 core-eq)
-        let trace = GrowthTrace::exponential(0.5, 1.04, 80, 24.0);
+        let trace = GrowthTrace::exponential(0.5, 1.04, 80, 24.0).unwrap();
         let (fixed, _) = compare(&trace, &ElasticPolicy::default());
         assert_eq!(fixed.violation_epochs, 0);
         assert_eq!(fixed.migrations, 0);
@@ -207,7 +208,7 @@ mod tests {
     fn elastic_violates_during_scale_lag() {
         // Paper's point: elasticity "is not as smooth" — a fast-growing
         // workload outruns the scale-up lag and takes SLA hits.
-        let trace = GrowthTrace::steps(0.5, &[10, 20, 30], 60, 24.0);
+        let trace = GrowthTrace::steps(0.5, &[10, 20, 30], 60, 24.0).unwrap();
         let elastic = simulate_elastic(&ElasticPolicy::default(), &trace);
         assert!(
             elastic.violation_epochs > 0,
@@ -220,7 +221,7 @@ mod tests {
     fn elastic_cheaper_for_slow_growth() {
         // A workload that stays small for most of its life: paying for the
         // peak-scoped shape the whole time costs more.
-        let trace = GrowthTrace::exponential(0.3, 1.02, 200, 24.0);
+        let trace = GrowthTrace::exponential(0.3, 1.02, 200, 24.0).unwrap();
         let (fixed, elastic) = compare(&trace, &ElasticPolicy::default());
         assert!(
             elastic.total_usd < fixed.total_usd,
@@ -232,7 +233,7 @@ mod tests {
 
     #[test]
     fn fixed_wins_on_violations_elastic_on_cost() {
-        let trace = GrowthTrace::steps(0.4, &[5, 15, 25], 50, 24.0);
+        let trace = GrowthTrace::steps(0.4, &[5, 15, 25], 50, 24.0).unwrap();
         let (fixed, elastic) = compare(&trace, &ElasticPolicy::default());
         assert_eq!(fixed.violation_epochs, 0);
         assert!(elastic.violation_epochs > 0);
@@ -243,10 +244,7 @@ mod tests {
     fn scale_down_happens() {
         let mut demand = vec![8.0; 20];
         demand.extend(vec![0.5; 40]);
-        let trace = GrowthTrace {
-            demand,
-            hours_per_epoch: 24.0,
-        };
+        let trace = GrowthTrace::new(demand, 24.0).unwrap();
         let elastic = simulate_elastic(&ElasticPolicy::default(), &trace);
         let last = elastic.shape_trace.last().unwrap();
         let first_big = elastic.shape_trace[5];
@@ -255,9 +253,34 @@ mod tests {
 
     #[test]
     fn trace_generators() {
-        let e = GrowthTrace::exponential(1.0, 2.0, 4, 1.0);
-        assert_eq!(e.demand, vec![1.0, 2.0, 4.0, 8.0]);
-        let s = GrowthTrace::steps(1.0, &[2], 4, 1.0);
-        assert_eq!(s.demand, vec![1.0, 1.0, 2.0, 2.0]);
+        let e = GrowthTrace::exponential(1.0, 2.0, 4, 1.0).unwrap();
+        assert_eq!(e.demand(), &[1.0, 2.0, 4.0, 8.0]);
+        let s = GrowthTrace::steps(1.0, &[2], 4, 1.0).unwrap();
+        assert_eq!(s.demand(), &[1.0, 1.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn trace_validation_rejects_bad_demand() {
+        assert_eq!(GrowthTrace::new(vec![], 24.0), Err(TraceError::Empty));
+        assert_eq!(
+            GrowthTrace::new(vec![1.0], 0.0),
+            Err(TraceError::BadHours(0.0))
+        );
+        assert!(matches!(
+            GrowthTrace::new(vec![1.0, f64::NAN], 24.0),
+            Err(TraceError::BadDemand { epoch: 1, .. })
+        ));
+        assert_eq!(
+            GrowthTrace::new(vec![0.5, -0.1], 24.0),
+            Err(TraceError::BadDemand {
+                epoch: 1,
+                value: -0.1
+            })
+        );
+        // constructor paths validate too: a NaN seed demand is caught
+        assert!(GrowthTrace::exponential(f64::NAN, 1.1, 4, 24.0).is_err());
+        assert!(GrowthTrace::steps(1.0, &[1], 4, f64::INFINITY).is_err());
+        // zero demand is allowed (an idle tenant is a valid scenario)
+        assert!(GrowthTrace::new(vec![0.0; 4], 24.0).is_ok());
     }
 }

@@ -62,33 +62,59 @@ impl Shape {
 }
 
 /// 2019-era Oracle-cloud-like catalog (Intel Xeon Platinum "Standard2"
-/// CPU shapes; "GPU3" = V100 shapes).
-pub fn catalog() -> Vec<Shape> {
-    let xeon = |cores| CpuSpec {
-        cores,
-        clock_ghz: 2.0,
-        // AVX-512 peak is 64 f32 FLOP/cycle; sustained dense-kernel reality
-        // is far lower — 8 keeps the model honest for mixed workloads.
-        flops_per_cycle: 8.0,
-    };
-    vec![
-        Shape { name: "VM.Standard2.1",  cpu: xeon(1),  mem_gb: 15.0,  gpus: 0, usd_per_hour: 0.0638 },
-        Shape { name: "VM.Standard2.2",  cpu: xeon(2),  mem_gb: 30.0,  gpus: 0, usd_per_hour: 0.1276 },
-        Shape { name: "VM.Standard2.4",  cpu: xeon(4),  mem_gb: 60.0,  gpus: 0, usd_per_hour: 0.2552 },
-        Shape { name: "VM.Standard2.8",  cpu: xeon(8),  mem_gb: 120.0, gpus: 0, usd_per_hour: 0.5104 },
-        Shape { name: "VM.Standard2.16", cpu: xeon(16), mem_gb: 240.0, gpus: 0, usd_per_hour: 1.0208 },
-        Shape { name: "VM.Standard2.24", cpu: xeon(24), mem_gb: 320.0, gpus: 0, usd_per_hour: 1.5312 },
-        Shape { name: "BM.Standard2.52", cpu: xeon(52), mem_gb: 768.0, gpus: 0, usd_per_hour: 3.3176 },
-        Shape { name: "VM.GPU3.1", cpu: xeon(6),  mem_gb: 90.0,  gpus: 1, usd_per_hour: 2.95 },
-        Shape { name: "VM.GPU3.2", cpu: xeon(12), mem_gb: 180.0, gpus: 2, usd_per_hour: 5.90 },
-        Shape { name: "VM.GPU3.4", cpu: xeon(24), mem_gb: 360.0, gpus: 4, usd_per_hour: 11.80 },
-        Shape { name: "BM.GPU3.8", cpu: xeon(52), mem_gb: 768.0, gpus: 8, usd_per_hour: 23.60 },
-    ]
+/// CPU shapes; "GPU3" = V100 shapes). Built once and cached in a
+/// [`std::sync::OnceLock`]: the catalog is consulted from per-trial hot
+/// paths (capacity lookups, recommendation assessment, elasticity
+/// simulation), where rebuilding the `Vec` on every call was pure waste.
+pub fn catalog() -> &'static [Shape] {
+    static CATALOG: std::sync::OnceLock<Vec<Shape>> = std::sync::OnceLock::new();
+    CATALOG.get_or_init(|| {
+        let xeon = |cores| CpuSpec {
+            cores,
+            clock_ghz: 2.0,
+            // AVX-512 peak is 64 f32 FLOP/cycle; sustained dense-kernel
+            // reality is far lower — 8 keeps the model honest for mixed
+            // workloads.
+            flops_per_cycle: 8.0,
+        };
+        vec![
+            Shape { name: "VM.Standard2.1",  cpu: xeon(1),  mem_gb: 15.0,  gpus: 0, usd_per_hour: 0.0638 },
+            Shape { name: "VM.Standard2.2",  cpu: xeon(2),  mem_gb: 30.0,  gpus: 0, usd_per_hour: 0.1276 },
+            Shape { name: "VM.Standard2.4",  cpu: xeon(4),  mem_gb: 60.0,  gpus: 0, usd_per_hour: 0.2552 },
+            Shape { name: "VM.Standard2.8",  cpu: xeon(8),  mem_gb: 120.0, gpus: 0, usd_per_hour: 0.5104 },
+            Shape { name: "VM.Standard2.16", cpu: xeon(16), mem_gb: 240.0, gpus: 0, usd_per_hour: 1.0208 },
+            Shape { name: "VM.Standard2.24", cpu: xeon(24), mem_gb: 320.0, gpus: 0, usd_per_hour: 1.5312 },
+            Shape { name: "BM.Standard2.52", cpu: xeon(52), mem_gb: 768.0, gpus: 0, usd_per_hour: 3.3176 },
+            Shape { name: "VM.GPU3.1", cpu: xeon(6),  mem_gb: 90.0,  gpus: 1, usd_per_hour: 2.95 },
+            Shape { name: "VM.GPU3.2", cpu: xeon(12), mem_gb: 180.0, gpus: 2, usd_per_hour: 5.90 },
+            Shape { name: "VM.GPU3.4", cpu: xeon(24), mem_gb: 360.0, gpus: 4, usd_per_hour: 11.80 },
+            Shape { name: "BM.GPU3.8", cpu: xeon(52), mem_gb: 768.0, gpus: 8, usd_per_hour: 23.60 },
+        ]
+    })
 }
 
 /// Find a shape by name.
 pub fn by_name(name: &str) -> Option<Shape> {
-    catalog().into_iter().find(|s| s.name == name)
+    catalog().iter().find(|s| s.name == name).cloned()
+}
+
+/// Capacity of a shape in core-equivalents, relative to the catalog's
+/// 1-core reference shape — the demand unit of the elasticity and fleet
+/// scenario simulators.
+pub fn capacity_core_eq(shape: &Shape) -> f64 {
+    let base = catalog()[0].cpu_eff_flops();
+    shape.cpu_eff_flops() / base
+}
+
+/// CPU-only shape ladder sorted by capacity ascending — the migration
+/// path autoscaling policies climb. Cached like [`catalog`].
+pub fn cpu_ladder() -> &'static [Shape] {
+    static LADDER: std::sync::OnceLock<Vec<Shape>> = std::sync::OnceLock::new();
+    LADDER.get_or_init(|| {
+        let mut v: Vec<Shape> = catalog().iter().filter(|s| !s.has_gpu()).cloned().collect();
+        v.sort_by(|a, b| capacity_core_eq(a).partial_cmp(&capacity_core_eq(b)).unwrap());
+        v
+    })
 }
 
 /// MSET2 container memory-footprint model (bytes): memory matrix D, trained
@@ -149,7 +175,7 @@ mod tests {
     fn catalog_is_consistent() {
         let shapes = catalog();
         assert!(shapes.len() >= 10);
-        for s in &shapes {
+        for s in shapes {
             assert!(s.cpu.cores > 0 && s.mem_gb > 0.0 && s.usd_per_hour > 0.0);
         }
         // price strictly increases with cores within the Standard2 family
@@ -196,5 +222,25 @@ mod tests {
     fn by_name_lookup() {
         assert!(by_name("BM.GPU3.8").unwrap().has_gpu());
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn catalog_is_cached_static() {
+        // OnceLock: repeated calls hand out the same allocation — the
+        // per-trial hot paths must not rebuild the catalog.
+        assert!(std::ptr::eq(catalog(), catalog()));
+        assert!(std::ptr::eq(cpu_ladder(), cpu_ladder()));
+    }
+
+    #[test]
+    fn ladder_is_cpu_only_and_sorted() {
+        let ladder = cpu_ladder();
+        assert!(ladder.len() >= 5);
+        assert!(ladder.iter().all(|s| !s.has_gpu()));
+        assert!((capacity_core_eq(&ladder[0]) - 1.0).abs() < 1e-12);
+        for w in ladder.windows(2) {
+            assert!(capacity_core_eq(&w[1]) > capacity_core_eq(&w[0]));
+            assert!(w[1].usd_per_hour > w[0].usd_per_hour, "price follows capacity");
+        }
     }
 }

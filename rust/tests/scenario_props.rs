@@ -1,0 +1,260 @@
+//! Property tests over fleet-scenario-engine invariants, using the
+//! in-repo property harness (`util::prop`): conservation laws the ISSUE
+//! demands — cost monotone in demand, a zero-demand fleet costs exactly
+//! the idle floor, identical seeds replay bit-identically — plus the
+//! degenerate single-tenant equivalence with `shapes::elastic`.
+
+use containerstress::scenario::spec::{
+    ArrivalSpec, DemandKind, DemandSpec, PolicySpec, ScenarioSpec,
+};
+use containerstress::scenario::{run_scenario, ScenarioOutcome};
+use containerstress::shapes::elastic::{compare, ElasticPolicy, GrowthTrace};
+use containerstress::shapes::{capacity_core_eq, cpu_ladder};
+use containerstress::util::prop::{forall, forall_res};
+use containerstress::util::rng::Rng;
+
+/// Small random scenario (kept tiny: every case really replays).
+fn gen_scenario(rng: &mut Rng) -> ScenarioSpec {
+    let kinds = [
+        DemandKind::Constant,
+        DemandKind::Steps { every: 5 + rng.range_usize(0, 10) },
+        DemandKind::Diurnal {
+            amplitude: 0.2 + 0.6 * rng.f64(),
+            period: 3 + rng.range_usize(0, 10),
+        },
+        DemandKind::Flash {
+            spike: 2.0 + 3.0 * rng.f64(),
+            every: 8 + rng.range_usize(0, 8),
+            width: 1 + rng.range_usize(0, 3),
+        },
+    ];
+    ScenarioSpec {
+        name: "prop".into(),
+        seed: rng.next_u64(),
+        epochs: 10 + rng.range_usize(0, 30),
+        hours_per_epoch: 24.0,
+        arrivals: ArrivalSpec {
+            initial: 1 + rng.range_usize(0, 4),
+            rate_per_epoch: rng.f64(),
+            max_tenants: 6 + rng.range_usize(0, 6),
+        },
+        demand: DemandSpec {
+            base: 0.2 + rng.f64(),
+            growth_per_epoch: 1.0 + 0.03 * rng.f64(),
+            jitter: 0.3 * rng.f64(),
+            kind: kinds[rng.range_usize(0, kinds.len())],
+        },
+        workload: None,
+        ..ScenarioSpec::default()
+    }
+}
+
+fn bit_eq(a: &ScenarioOutcome, b: &ScenarioOutcome) -> Result<(), String> {
+    if a.tenants != b.tenants {
+        return Err(format!("tenant counts differ: {} vs {}", a.tenants, b.tenants));
+    }
+    for (pa, pb) in a.policies.iter().zip(&b.policies) {
+        if pa.total_usd.to_bits() != pb.total_usd.to_bits() {
+            return Err(format!(
+                "policy '{}': totals not bit-identical ({} vs {})",
+                pa.label, pa.total_usd, pb.total_usd
+            ));
+        }
+        if pa.violation_epochs != pb.violation_epochs || pa.migrations != pb.migrations {
+            return Err(format!("policy '{}': counters differ", pa.label));
+        }
+        let usd_eq = pa
+            .usd_per_epoch
+            .iter()
+            .zip(&pb.usd_per_epoch)
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+        if !usd_eq || pa.violations_per_epoch != pb.violations_per_epoch {
+            return Err(format!("policy '{}': per-epoch series differ", pa.label));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_identical_seed_replays_bit_identically() {
+    forall_res(
+        "same spec ⇒ bit-identical policy traces (any executor interleaving)",
+        8,
+        gen_scenario,
+        |spec| {
+            let a = run_scenario(spec, None, None).map_err(|e| e.to_string())?;
+            let b = run_scenario(spec, None, None).map_err(|e| e.to_string())?;
+            bit_eq(&a, &b)
+        },
+    );
+}
+
+#[test]
+fn prop_zero_demand_costs_exactly_the_idle_floor() {
+    forall_res(
+        "zero-demand fleet: smallest shape × lived epochs, no violations",
+        8,
+        |rng| {
+            let mut s = gen_scenario(rng);
+            s.demand.base = 0.0;
+            s
+        },
+        |spec| {
+            let out = run_scenario(spec, None, None).map_err(|e| e.to_string())?;
+            // idle floor: every tenant sits on the cheapest ladder shape
+            // for exactly the epochs it lives
+            let smallest = &cpu_ladder()[0];
+            let per_epoch = smallest.usd_per_hour * spec.hours_per_epoch;
+            for p in &out.policies {
+                if p.violation_epochs != 0 {
+                    return Err(format!("policy '{}' violated at zero demand", p.label));
+                }
+                if p.migrations != 0 {
+                    return Err(format!("policy '{}' migrated at zero demand", p.label));
+                }
+                // tenant-epochs actually lived = total / per_epoch
+                let tenant_epochs = (p.total_usd / per_epoch).round();
+                let rel = (p.total_usd - tenant_epochs * per_epoch).abs()
+                    / p.total_usd.max(1e-9);
+                if rel > 1e-9 {
+                    return Err(format!(
+                        "policy '{}': {} is not a multiple of the idle floor {}",
+                        p.label, p.total_usd, per_epoch
+                    ));
+                }
+                if tenant_epochs < out.tenants as f64
+                    || tenant_epochs > (out.tenants * spec.epochs) as f64
+                {
+                    return Err(format!(
+                        "policy '{}': {tenant_epochs} tenant-epochs outside fleet bounds",
+                        p.label
+                    ));
+                }
+            }
+            // all policies agree exactly at the idle floor
+            let t0 = out.policies[0].total_usd;
+            if !out
+                .policies
+                .iter()
+                .all(|p| (p.total_usd - t0).abs() < 1e-9 * t0.max(1.0))
+            {
+                return Err("policies disagree on the idle floor".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_prescoped_cost_monotone_in_demand() {
+    forall_res(
+        "scaling every tenant's demand up cannot reduce pre-scoped cost",
+        8,
+        |rng| {
+            let mut s = gen_scenario(rng);
+            s.policies = vec![PolicySpec::PreScoped { headroom: 0.8 }];
+            let k = 1.0 + 3.0 * rng.f64();
+            (s, k)
+        },
+        |(spec, k)| {
+            let base = run_scenario(spec, None, None).map_err(|e| e.to_string())?;
+            let mut scaled = spec.clone();
+            scaled.demand.base = spec.demand.base * k;
+            let up = run_scenario(&scaled, None, None).map_err(|e| e.to_string())?;
+            let (a, b) = (base.policies[0].total_usd, up.policies[0].total_usd);
+            if b < a {
+                return Err(format!("×{k:.2} demand made the fleet cheaper: {a} → {b}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_degenerate_single_tenant_matches_elastic_bitwise() {
+    forall_res(
+        "1-tenant constant-growth scenario == shapes::elastic::compare",
+        10,
+        |rng| {
+            let d0 = 0.2 + rng.f64();
+            let growth = 1.0 + 0.04 * rng.f64();
+            let epochs = 20 + rng.range_usize(0, 120);
+            (d0, growth, epochs)
+        },
+        |&(d0, growth, epochs)| {
+            let spec = ScenarioSpec {
+                name: "degenerate".into(),
+                seed: 1,
+                epochs,
+                hours_per_epoch: 24.0,
+                arrivals: ArrivalSpec {
+                    initial: 1,
+                    rate_per_epoch: 0.0,
+                    max_tenants: 1,
+                },
+                demand: DemandSpec {
+                    base: d0,
+                    growth_per_epoch: growth,
+                    jitter: 0.0,
+                    kind: DemandKind::Constant,
+                },
+                workload: None,
+                policies: vec![
+                    PolicySpec::PreScoped { headroom: 0.8 },
+                    PolicySpec::Reactive(ElasticPolicy::default()),
+                ],
+            };
+            let out = run_scenario(&spec, None, None).map_err(|e| e.to_string())?;
+            let trace = GrowthTrace::exponential(d0, growth, epochs, 24.0)
+                .map_err(|e| e.to_string())?;
+            let (fixed, elastic) = compare(&trace, &ElasticPolicy::default());
+            for (engine, reference, name) in [
+                (&out.policies[0], &fixed, "prescoped"),
+                (&out.policies[1], &elastic, "reactive"),
+            ] {
+                if engine.total_usd.to_bits() != reference.total_usd.to_bits() {
+                    return Err(format!(
+                        "{name}: engine {} != elastic {} (not bit-identical)",
+                        engine.total_usd, reference.total_usd
+                    ));
+                }
+                if engine.violation_epochs != reference.violation_epochs
+                    || engine.migrations != reference.migrations
+                {
+                    return Err(format!("{name}: violation/migration counters differ"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fleet_totals_reconcile_with_series() {
+    forall(
+        "fleet per-epoch series sum to the policy total",
+        8,
+        gen_scenario,
+        |spec| {
+            let out = run_scenario(spec, None, None).unwrap();
+            out.policies.iter().all(|p| {
+                let sum: f64 = p.usd_per_epoch.iter().sum();
+                p.usd_per_epoch.len() == spec.epochs
+                    && (sum - p.total_usd).abs() < 1e-6 * p.total_usd.max(1.0)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_capacity_ladder_supports_engine_invariants() {
+    // The engine's correctness leans on a sorted ladder with positive
+    // capacities; pin that here so a future catalog edit cannot silently
+    // break the policies.
+    let ladder = cpu_ladder();
+    assert!(ladder.len() >= 2);
+    for w in ladder.windows(2) {
+        assert!(capacity_core_eq(&w[0]) < capacity_core_eq(&w[1]));
+    }
+    assert!(ladder.iter().all(|s| capacity_core_eq(s) > 0.0));
+}

@@ -318,6 +318,130 @@ fn concurrent_jobs_interleave_small_overtakes_large() {
     server.shutdown();
 }
 
+/// Direct-mode fleet scenario: 20 tenants × 36 epochs × 3 policies —
+/// milliseconds of simulation, no sweep needed.
+const SCENARIO_BODY: &str = r#"{
+  "scenario": {
+    "name": "e2e-fleet", "seed": 4, "epochs": 36,
+    "arrivals": {"initial": 12, "rate_per_epoch": 0.5, "max_tenants": 20},
+    "demand": {"kind": "diurnal", "base": 0.6, "amplitude": 0.4,
+               "period_epochs": 7, "growth_per_epoch": 1.01, "jitter": 0.2}
+  }
+}"#;
+
+/// Workload-mode scenario whose embedded oracle sweep is seconds of work
+/// (costly obs axis) — slow enough to cancel mid-flight.
+const SLOW_SCENARIO_BODY: &str = r#"{
+  "scenario": {
+    "name": "e2e-cancel", "seed": 6, "epochs": 30,
+    "arrivals": {"initial": 5, "rate_per_epoch": 0.0, "max_tenants": 5},
+    "demand": {"kind": "constant", "base": 1.0,
+               "growth_per_epoch": 1.0, "jitter": 0.0},
+    "workload": {"signals": 2, "memvecs": 8, "obs_per_sec": 10.0,
+                 "train_window": 32}
+  },
+  "sweep": {"signals": [2, 3], "memvecs": [8, 12, 16], "obs": [4096, 8192],
+            "trials": 3, "seed": 35, "model": "mset2", "workers": 2}
+}"#;
+
+#[test]
+fn scenario_roundtrip_with_live_progress() {
+    let _guard = sweep_lock();
+    let server = Server::start(&test_config(), Backend::Native).expect("server");
+    let addr = server.addr();
+    let (status, j) = request(addr, "POST", "/v1/scenarios", Some(SCENARIO_BODY));
+    assert_eq!(status, 202, "{j}");
+    let id = j.get("job_id").unwrap().as_f64().unwrap() as u64;
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut last_done = 0;
+    loop {
+        assert!(Instant::now() < deadline, "scenario {id} timed out");
+        let (status, j) = request(addr, "GET", &format!("/v1/scenarios/{id}"), None);
+        assert_eq!(status, 200, "{j}");
+        let p = j.get("progress").expect("progress always present");
+        let done = p.get("units_done").and_then(Json::as_usize).unwrap();
+        let total = p.get("units_total").and_then(Json::as_usize).unwrap();
+        assert!(done >= last_done, "progress went backwards: {j}");
+        assert!(total == 0 || done <= total, "{j}");
+        last_done = done;
+        match j.get("status").and_then(Json::as_str) {
+            Some("done") => {
+                let r = j.get("result").expect("done scenarios carry the outcome");
+                let policies = r.get("policies").unwrap().as_arr().unwrap();
+                assert_eq!(policies.len(), 3, "default policy set");
+                for p in policies {
+                    assert!(p.get("total_usd").unwrap().as_f64().unwrap() > 0.0);
+                    assert_eq!(
+                        p.get("usd_per_epoch").unwrap().as_arr().unwrap().len(),
+                        36
+                    );
+                }
+                assert!(!r.get("pareto").unwrap().as_arr().unwrap().is_empty());
+                assert!(r.get("recommended").unwrap().as_str().is_some());
+                assert_eq!(done, total, "progress must settle at completion");
+                break;
+            }
+            Some("failed") => panic!("scenario failed: {j}"),
+            Some("queued" | "running") => std::thread::sleep(Duration::from_millis(5)),
+            other => panic!("bad status {other:?}: {j}"),
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn scenario_cancellation_honours_delete_like_sweep_jobs() {
+    let _guard = sweep_lock();
+    let server = Server::start(&test_config(), Backend::Native).expect("server");
+    let addr = server.addr();
+    let (status, j) = request(addr, "POST", "/v1/scenarios", Some(SLOW_SCENARIO_BODY));
+    assert_eq!(status, 202, "{j}");
+    let id = j.get("job_id").unwrap().as_f64().unwrap() as u64;
+
+    // Wait until the embedded oracle sweep is demonstrably mid-flight.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        assert!(Instant::now() < deadline, "scenario {id} never started");
+        let (status, j) = request(addr, "GET", &format!("/v1/scenarios/{id}"), None);
+        assert_eq!(status, 200, "{j}");
+        let trials = j
+            .get("progress")
+            .and_then(|p| p.get("sweep"))
+            .and_then(|s| s.get("trials_done"))
+            .and_then(Json::as_usize)
+            .unwrap_or(0);
+        if trials >= 2 {
+            break;
+        }
+        match j.get("status").and_then(Json::as_str) {
+            Some("done") => panic!("slow scenario finished before it could be cancelled"),
+            Some("failed") => panic!("scenario failed: {j}"),
+            _ => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    let (status, j) = request(addr, "DELETE", &format!("/v1/scenarios/{id}"), None);
+    assert_eq!(status, 202, "{j}");
+    assert_eq!(j.get("status").and_then(Json::as_str), Some("cancelling"));
+    loop {
+        assert!(Instant::now() < deadline, "scenario {id} never cancelled");
+        let (_, j) = request(addr, "GET", &format!("/v1/scenarios/{id}"), None);
+        match j.get("status").and_then(Json::as_str) {
+            Some("cancelled") => break,
+            Some("running" | "queued") => std::thread::sleep(Duration::from_millis(10)),
+            other => panic!("cancel produced status {other:?}"),
+        }
+    }
+    // A second DELETE is a 409, and the trials that did finish were
+    // flushed to the cell store for the next job to reuse.
+    let (status, _) = request(addr, "DELETE", &format!("/v1/scenarios/{id}"), None);
+    assert_eq!(status, 409);
+    assert!(
+        !server.state().cache().is_empty(),
+        "partial oracle-sweep cells must be in the cache"
+    );
+    server.shutdown();
+}
+
 #[test]
 fn service_rejects_bad_requests() {
     let server = Server::start(&test_config(), Backend::Native).expect("server");
