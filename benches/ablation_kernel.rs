@@ -6,6 +6,9 @@
 //!
 //! - `direct`  — naive per-pair Euclidean loop (the pre-GPU formulation);
 //! - `gram`    — ‖a‖²+‖b‖²−2aᵀb via matmul (the kernel's formulation);
+//! - `blocked` — the same expansion fused into the blocked
+//!   `linalg::kernel` core (the production `sim_cross` path; see
+//!   `benches/kernel_hotpath.rs` for its gated speedups);
 //! - `device`  — the full AOT surveillance graph through PJRT (includes
 //!   the same formulation compiled by XLA).
 //!
@@ -13,7 +16,7 @@
 
 use containerstress::bench::{figs, table, write_csv, Bencher};
 use containerstress::linalg::Mat;
-use containerstress::mset::{sim_cross, sim_cross_gram};
+use containerstress::mset::{sim_cross, sim_cross_gram, sim_cross_ref};
 use containerstress::util::rng::Rng;
 
 fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
@@ -36,17 +39,22 @@ fn main() {
         let x = random_mat(bsz, n, 2);
         let units = (m * bsz) as f64;
         let m1 = b.run_with_units(&format!("direct_m{m}_n{n}"), units, || {
-            sim_cross(&d, &x)
+            sim_cross_ref(&d, &x)
         });
         let m2 = b.run_with_units(&format!("gram_m{m}_n{n}"), units, || {
             sim_cross_gram(&d, &x)
         });
+        let m3 = b.run_with_units(&format!("blocked_m{m}_n{n}"), units, || {
+            sim_cross(&d, &x)
+        });
         println!(
-            "m={m} n={n}: gram is {:.2}× the direct formulation",
-            m1.stats.median / m2.stats.median
+            "m={m} n={n}: gram is {:.2}×, blocked is {:.2}× the direct formulation",
+            m1.stats.median / m2.stats.median,
+            m1.stats.median / m3.stats.median
         );
         ms.push(m1);
         ms.push(m2);
+        ms.push(m3);
     }
 
     // device path at matching bucket shapes (if artifacts present)

@@ -1,0 +1,251 @@
+//! **BENCH-kernel**: reference vs blocked kernel core on the native MSET
+//! trial hot path (§II.D).
+//!
+//! Three gates, enforced with asserts so CI catches regressions:
+//!
+//! 1. **Accuracy** — the blocked `sim_cross`/`sim_matrix` kernels agree
+//!    with the per-pair reference implementations to ≤ 1e-10 at every
+//!    grid size (they are designed to be far closer; see
+//!    `linalg::kernel`'s bit-stability contract).
+//! 2. **Kernel speedup** — blocked `sim_cross` + Gram (`sim_matrix`)
+//!    combined are ≥ 3× the reference formulations at n = 1024.
+//! 3. **End-to-end** — a full native MSET2 trial (synthesize → scale →
+//!    select → train → surveil) on the production kernel stack is
+//!    ≥ 1.5× a twin trial built from the naive reference kernels.
+//!
+//! Output: `results/BENCH_kernel.json` + `results/kernel_hotpath.csv`
+//! (the README perf table is sourced from the JSON). `CS_BENCH_QUICK=1`
+//! shortens the measuring windows but keeps every asserted point.
+
+use containerstress::bench::{black_box, figs, table, write_csv, Bencher, Measurement};
+use containerstress::linalg::{eigh, kernel, Mat};
+use containerstress::models::{MsetPlugin, PrognosticModel};
+use containerstress::mset::{
+    select_memory, sim_cross_ref, sim_matrix_ref, Scaler, RIDGE_REL,
+};
+use containerstress::report;
+use containerstress::tpss::{synthesize, TpssConfig};
+use containerstress::util::json::Json;
+use containerstress::util::rng::Rng;
+
+fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let mut m = Mat::zeros(rows, cols);
+    rng.fill_gauss(&mut m.data);
+    m
+}
+
+/// The pre-blocked `reg_pinv`: eigendecomposition plus the naive
+/// `V·diag(1/(w+λ))·Vᵀ` triple-loop reconstruction.
+fn reg_pinv_ref(a: &Mat, lambda: f64) -> Mat {
+    let (w, v) = eigh(a);
+    let n = a.rows;
+    let floor = 1e-12 * w.iter().fold(0.0f64, |m, &x| m.max(x.abs())).max(1e-12);
+    let mut out = Mat::zeros(n, n);
+    for k in 0..n {
+        let d = 1.0 / (w[k] + lambda).max(floor);
+        for i in 0..n {
+            let vik = v[(i, k)] * d;
+            if vik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out[(i, j)] += vik * v[(j, k)];
+            }
+        }
+    }
+    out
+}
+
+/// One native MSET2 trial on the naive reference kernels: the exact
+/// pre-blocked pipeline, sharing synthesis/scaling/selection with the
+/// production twin so only the kernel stack differs.
+fn reference_trial(n: usize, m: usize, obs: usize, seed: u64) -> Mat {
+    let train_ds = synthesize(&TpssConfig::sized(n, obs.max(m)), seed);
+    let probe_ds = synthesize(&TpssConfig::sized(n, obs), seed ^ 0x5EED);
+    let scaler = Scaler::fit(&train_ds.data);
+    let xs = scaler.transform(&train_ds.data);
+    let idx = select_memory(&xs, m);
+    let mut d = Mat::zeros(m, n);
+    for (r, &i) in idx.iter().enumerate() {
+        d.row_mut(r).copy_from_slice(xs.row(i));
+    }
+    // train: S = sim(D, D), G = (S + λI)⁻¹
+    let mut s = sim_matrix_ref(&d);
+    let trace: f64 = (0..m).map(|i| s[(i, i)]).sum();
+    let lambda = RIDGE_REL * trace / m as f64;
+    for i in 0..m {
+        s[(i, i)] += lambda;
+    }
+    let g = reg_pinv_ref(&s, 0.0);
+    // surveil: X̂ = (G·K)ᵀ·D over the naive kernels
+    let probe = scaler.transform(&probe_ds.data);
+    let k = sim_cross_ref(&d, &probe);
+    let w = kernel::reference::matmul(&g, &k);
+    kernel::reference::matmul(&w.transpose(), &d)
+}
+
+/// The production twin: the same trial through `models::MsetPlugin`
+/// (blocked kernels + workspace arena), returning X̂ for the accuracy
+/// cross-check.
+fn production_trial(n: usize, m: usize, obs: usize, seed: u64) -> Mat {
+    let train_ds = synthesize(&TpssConfig::sized(n, obs.max(m)), seed);
+    let probe_ds = synthesize(&TpssConfig::sized(n, obs), seed ^ 0x5EED);
+    let mut plugin = MsetPlugin::default();
+    plugin.fit(&train_ds.data, m).expect("fit");
+    plugin.estimate(&probe_ds.data).xhat
+}
+
+fn main() {
+    containerstress::util::logger::init();
+    let quick = figs::quick();
+    let b = if quick {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+
+    const MAX_KERNEL_DIFF: f64 = 1e-10;
+    const MIN_KERNEL_SPEEDUP: f64 = 3.0; // sim_cross + Gram at n = 1024
+    const MIN_E2E_SPEEDUP: f64 = 1.5; // full native trial
+
+    let sizes: &[usize] = if quick {
+        &[64, 256, 1024]
+    } else {
+        &[64, 128, 256, 512, 1024]
+    };
+
+    let mut ms: Vec<Measurement> = Vec::new();
+    let mut size_rows: Vec<Json> = Vec::new();
+    let mut speedup_at_1024 = 0.0;
+    for &n in sizes {
+        // memory-vector and chunk axes capped like the paper's grid
+        let m = n.min(256);
+        let bsz = n.min(256);
+        let d = random_mat(m, n, 1);
+        let x = random_mat(bsz, n, 2);
+
+        // accuracy gates first (one evaluation each)
+        let cross_diff = containerstress::mset::sim_cross(&d, &x).max_abs_diff(&sim_cross_ref(&d, &x));
+        let gram_diff = containerstress::mset::sim_matrix(&d).max_abs_diff(&sim_matrix_ref(&d));
+        assert!(
+            cross_diff <= MAX_KERNEL_DIFF,
+            "n={n}: blocked sim_cross diverged from reference by {cross_diff}"
+        );
+        assert!(
+            gram_diff <= MAX_KERNEL_DIFF,
+            "n={n}: blocked sim_matrix diverged from reference by {gram_diff}"
+        );
+
+        let units = (m * bsz) as f64;
+        let rc = b.run_with_units(&format!("ref_sim_cross_n{n}"), units, || {
+            sim_cross_ref(&d, &x)
+        });
+        let bc = b.run_with_units(&format!("blk_sim_cross_n{n}"), units, || {
+            containerstress::mset::sim_cross(&d, &x)
+        });
+        let gunits = (m * m) as f64 / 2.0;
+        let rg = b.run_with_units(&format!("ref_gram_n{n}"), gunits, || sim_matrix_ref(&d));
+        let bg = b.run_with_units(&format!("blk_gram_n{n}"), gunits, || {
+            containerstress::mset::sim_matrix(&d)
+        });
+
+        let cross_speedup = rc.stats.median / bc.stats.median;
+        let gram_speedup = rg.stats.median / bg.stats.median;
+        let combined =
+            (rc.stats.median + rg.stats.median) / (bc.stats.median + bg.stats.median);
+        println!(
+            "n={n} (m={m}, B={bsz}): sim_cross {cross_speedup:.2}×, gram {gram_speedup:.2}×, \
+             combined {combined:.2}× (diffs {cross_diff:.2e}/{gram_diff:.2e})"
+        );
+        if n == 1024 {
+            speedup_at_1024 = combined;
+        }
+        size_rows.push(Json::obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("m", Json::Num(m as f64)),
+            ("b", Json::Num(bsz as f64)),
+            ("ref_sim_cross_s", Json::Num(rc.stats.median)),
+            ("blk_sim_cross_s", Json::Num(bc.stats.median)),
+            ("ref_gram_s", Json::Num(rg.stats.median)),
+            ("blk_gram_s", Json::Num(bg.stats.median)),
+            ("speedup_sim_cross", Json::Num(cross_speedup)),
+            ("speedup_gram", Json::Num(gram_speedup)),
+            ("speedup_combined", Json::Num(combined)),
+            ("max_diff_sim_cross", Json::Num(cross_diff)),
+            ("max_diff_gram", Json::Num(gram_diff)),
+        ]));
+        ms.extend([rc, bc, rg, bg]);
+    }
+    assert!(
+        speedup_at_1024 >= MIN_KERNEL_SPEEDUP,
+        "blocked sim_cross+Gram at n=1024 is only {speedup_at_1024:.2}× the reference \
+         (floor {MIN_KERNEL_SPEEDUP}×)"
+    );
+
+    // --- end-to-end native trial -----------------------------------------
+    // A surveillance-heavy cell, mirroring the native run_trial body.
+    let (tn, tm, tobs) = (32usize, 64usize, 4096usize);
+    let xhat_ref = reference_trial(tn, tm, tobs, 7);
+    let xhat_new = production_trial(tn, tm, tobs, 7);
+    let e2e_diff = xhat_ref.max_abs_diff(&xhat_new);
+    assert!(
+        e2e_diff < 1e-7,
+        "production trial estimate diverged from the reference pipeline: {e2e_diff}"
+    );
+    let rt = b.run(&format!("ref_trial_n{tn}_m{tm}_obs{tobs}"), || {
+        black_box(reference_trial(tn, tm, tobs, 7))
+    });
+    let pt = b.run(&format!("blk_trial_n{tn}_m{tm}_obs{tobs}"), || {
+        black_box(production_trial(tn, tm, tobs, 7))
+    });
+    let e2e_speedup = rt.stats.median / pt.stats.median;
+    println!(
+        "end-to-end native trial (n={tn}, m={tm}, obs={tobs}): {:.3}s → {:.3}s = {e2e_speedup:.2}× \
+         (estimate diff {e2e_diff:.2e})",
+        rt.stats.median, pt.stats.median
+    );
+    assert!(
+        e2e_speedup >= MIN_E2E_SPEEDUP,
+        "end-to-end native trial is only {e2e_speedup:.2}× the reference pipeline \
+         (floor {MIN_E2E_SPEEDUP}×)"
+    );
+    ms.push(rt);
+    ms.push(pt);
+
+    // --- emit artifacts ---------------------------------------------------
+    let json = Json::obj(vec![
+        ("bench", Json::Str("kernel_hotpath".into())),
+        ("quick", Json::Bool(quick)),
+        ("sizes", Json::Arr(size_rows)),
+        (
+            "e2e",
+            Json::obj(vec![
+                ("n", Json::Num(tn as f64)),
+                ("m", Json::Num(tm as f64)),
+                ("obs", Json::Num(tobs as f64)),
+                (
+                    "ref_trial_s",
+                    Json::Num(ms[ms.len() - 2].stats.median),
+                ),
+                ("blk_trial_s", Json::Num(ms[ms.len() - 1].stats.median)),
+                ("speedup", Json::Num(e2e_speedup)),
+                ("estimate_diff", Json::Num(e2e_diff)),
+            ]),
+        ),
+        (
+            "asserted",
+            Json::obj(vec![
+                ("max_kernel_diff", Json::Num(MAX_KERNEL_DIFF)),
+                ("min_kernel_speedup_n1024", Json::Num(MIN_KERNEL_SPEEDUP)),
+                ("min_e2e_speedup", Json::Num(MIN_E2E_SPEEDUP)),
+                ("kernel_speedup_n1024", Json::Num(speedup_at_1024)),
+            ]),
+        ),
+    ]);
+    let dir = std::path::Path::new("results");
+    report::write(dir, "BENCH_kernel.json", &json.to_pretty()).unwrap();
+    println!("{}", table(&ms));
+    write_csv("results/kernel_hotpath.csv", &ms).unwrap();
+    println!("kernel_hotpath done → results/BENCH_kernel.json, results/kernel_hotpath.csv");
+}

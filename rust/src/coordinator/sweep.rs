@@ -18,6 +18,11 @@
 //! one slow cell never holds up aggregation (or the cache write) of the
 //! others. Device executions still serialise on the dedicated PJRT thread
 //! (see `runtime`), so measured execution times stay contention-free.
+//! Native trials run their numeric pipeline on the executing worker's
+//! thread-local [`crate::linalg::Workspace`] arena — the long-lived
+//! executor threads keep kernel scratch warm across trials (trimmed to a
+//! bounded footprint after each one), so steady-state trials stay off
+//! the allocator entirely.
 //!
 //! The fixed-`trials` schedule here is the paper-faithful *exhaustive*
 //! mode. Setting [`SweepSpec::ci_target`] hands the same grid to the
@@ -551,6 +556,11 @@ pub(crate) fn submit_trial(
             return; // dequeued just before the reclaim swept it
         }
         let r = run_trial(&backend, &model, key, seed);
+        // The native numeric pipeline runs on this worker's thread-local
+        // kernel workspace (zero steady-state allocations); keep the
+        // arena warm for the next trial but bound what a huge cell can
+        // leave pinned per worker.
+        crate::linalg::workspace::trim_thread(crate::linalg::workspace::DEFAULT_RETAIN_ELEMS);
         Registry::global().inc("sweep.trials");
         progress.trials_done.fetch_add(1, Ordering::SeqCst);
         let _ = tx.send((slot, t, r));

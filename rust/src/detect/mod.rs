@@ -87,13 +87,13 @@ impl Sprt {
     /// Build from healthy-window residuals (used to estimate σ per signal).
     pub fn from_healthy(resid: &Mat, cfg: SprtConfig) -> Sprt {
         let n = resid.cols;
+        let rows = resid.rows as f64;
         let mut sigma = vec![0.0; n];
-        for j in 0..n {
-            let col = resid.col(j);
-            let mean = col.iter().sum::<f64>() / col.len() as f64;
-            let var =
-                col.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / col.len() as f64;
-            sigma[j] = var.sqrt().max(1e-9);
+        for (j, s) in sigma.iter_mut().enumerate() {
+            // two streaming passes over the column iterator — no copy
+            let mean = resid.col(j).sum::<f64>() / rows;
+            let var = resid.col(j).map(|x| (x - mean) * (x - mean)).sum::<f64>() / rows;
+            *s = var.sqrt().max(1e-9);
         }
         Sprt {
             cfg,

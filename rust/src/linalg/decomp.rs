@@ -1,7 +1,19 @@
 //! Matrix decompositions: Cholesky, QR least squares, symmetric Jacobi
 //! eigendecomposition, and the regularised pseudo-inverse MSET training uses.
+//!
+//! The Jacobi rotations and the pseudo-inverse reconstruction sit on the
+//! native MSET training hot path (`reg_pinv` runs once per trial), so both
+//! have allocation-free `_into` variants fed from a
+//! [`super::workspace::Workspace`], the rotations stream contiguous row
+//! slices instead of per-element indexed access (same arithmetic, same
+//! op order — eigenvalues are bit-identical to the index-based loop), and
+//! the reconstruction `V·diag(d)·Vᵀ` runs through the blocked
+//! [`super::kernel::syrk_into`] — which also makes the returned inverse
+//! *exactly* symmetric.
 
+use super::kernel;
 use super::mat::Mat;
+use super::workspace::Workspace;
 
 /// Cholesky factor `L` with `L Lᵀ = A` for symmetric positive-definite `A`.
 /// Returns `None` if a pivot drops below `eps` (not SPD).
@@ -78,94 +90,160 @@ pub fn lstsq(a: &Mat, b: &[f64]) -> Vec<f64> {
 /// Symmetric eigendecomposition by cyclic Jacobi rotations.
 /// Returns `(eigenvalues, V)` with `A = V diag(w) Vᵀ`, eigenvalues ascending.
 pub fn eigh(a: &Mat) -> (Vec<f64>, Mat) {
+    Workspace::with(|ws| {
+        let mut w = Vec::new();
+        let mut v = Mat::zeros(0, 0);
+        eigh_into(a, &mut w, &mut v, ws);
+        (w, v)
+    })
+}
+
+/// [`eigh`] writing into caller-owned outputs, with all internal scratch
+/// (the working copy, the sort permutation, the column-permuted
+/// eigenvectors) checked out of `ws` — zero heap allocations once warm.
+pub fn eigh_into(a: &Mat, w: &mut Vec<f64>, v: &mut Mat, ws: &mut Workspace) {
     assert_eq!(a.rows, a.cols, "eigh: square required");
     let n = a.rows;
-    let mut m = a.clone();
-    let mut v = Mat::eye(n);
+    let mut mb = ws.take_f64(n * n);
+    mb.copy_from_slice(&a.data);
+    v.reshape(n, n);
+    v.data.fill(0.0);
+    for i in 0..n {
+        v.data[i * n + i] = 1.0;
+    }
+    let vd = &mut v.data;
     let max_sweeps = 64;
     for _sweep in 0..max_sweeps {
-        // off-diagonal Frobenius norm
+        // off-diagonal Frobenius norm (upper triangle, contiguous rows)
         let mut off = 0.0;
         for i in 0..n {
-            for j in i + 1..n {
-                off += m[(i, j)] * m[(i, j)];
+            for &x in &mb[i * n + i + 1..(i + 1) * n] {
+                off += x * x;
             }
         }
-        if off.sqrt() < 1e-12 * (1.0 + m.norm()) {
+        let norm = mb.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if off.sqrt() < 1e-12 * (1.0 + norm) {
             break;
         }
         for p in 0..n {
             for q in p + 1..n {
-                let apq = m[(p, q)];
+                let apq = mb[p * n + q];
                 if apq.abs() < 1e-300 {
                     continue;
                 }
-                let app = m[(p, p)];
-                let aqq = m[(q, q)];
+                let app = mb[p * n + p];
+                let aqq = mb[q * n + q];
                 let theta = 0.5 * (aqq - app) / apq;
                 let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
                 let c = 1.0 / (t * t + 1.0).sqrt();
                 let s = t * c;
-                // rotate rows/cols p,q of m
-                for k in 0..n {
-                    let mkp = m[(k, p)];
-                    let mkq = m[(k, q)];
-                    m[(k, p)] = c * mkp - s * mkq;
-                    m[(k, q)] = s * mkp + c * mkq;
+                // columns p,q rotated row-wise: contiguous chunks instead
+                // of strided indexed access (identical op order)
+                for row in mb.chunks_exact_mut(n) {
+                    let mkp = row[p];
+                    let mkq = row[q];
+                    row[p] = c * mkp - s * mkq;
+                    row[q] = s * mkp + c * mkq;
                 }
-                for k in 0..n {
-                    let mpk = m[(p, k)];
-                    let mqk = m[(q, k)];
-                    m[(p, k)] = c * mpk - s * mqk;
-                    m[(q, k)] = s * mpk + c * mqk;
+                // rows p,q (p < q): two disjoint contiguous slices
+                let (head, tail) = mb.split_at_mut(q * n);
+                let rp = &mut head[p * n..p * n + n];
+                let rq = &mut tail[..n];
+                for (mp, mq) in rp.iter_mut().zip(rq.iter_mut()) {
+                    let mpk = *mp;
+                    let mqk = *mq;
+                    *mp = c * mpk - s * mqk;
+                    *mq = s * mpk + c * mqk;
                 }
-                // accumulate eigenvectors
-                for k in 0..n {
-                    let vkp = v[(k, p)];
-                    let vkq = v[(k, q)];
-                    v[(k, p)] = c * vkp - s * vkq;
-                    v[(k, q)] = s * vkp + c * vkq;
+                // eigenvector columns p,q, row-wise like the columns above
+                for row in vd.chunks_exact_mut(n) {
+                    let vkp = row[p];
+                    let vkq = row[q];
+                    row[p] = c * vkp - s * vkq;
+                    row[q] = s * vkp + c * vkq;
                 }
             }
         }
     }
-    let mut w: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    w.clear();
+    w.extend((0..n).map(|i| mb[i * n + i]));
     // sort ascending, permute V columns to match
-    let mut order: Vec<usize> = (0..n).collect();
+    let mut order = ws.take_idx(n);
+    for (i, o) in order.iter_mut().enumerate() {
+        *o = i;
+    }
     order.sort_by(|&i, &j| w[i].partial_cmp(&w[j]).unwrap());
-    let wv: Vec<f64> = order.iter().map(|&i| w[i]).collect();
-    let mut vs = Mat::zeros(n, n);
+    let mut vperm = ws.take_f64(n * n);
     for (new_c, &old_c) in order.iter().enumerate() {
         for r in 0..n {
-            vs[(r, new_c)] = v[(r, old_c)];
+            vperm[r * n + new_c] = vd[r * n + old_c];
         }
     }
-    w = wv;
-    (w, vs)
+    vd.copy_from_slice(&vperm);
+    let mut wsorted = ws.take_f64(n);
+    for (slot, &i) in order.iter().enumerate() {
+        wsorted[slot] = w[i];
+    }
+    w.copy_from_slice(&wsorted);
+    ws.give_f64(wsorted);
+    ws.give_f64(vperm);
+    ws.give_idx(order);
+    ws.give_f64(mb);
 }
 
 /// Regularised symmetric pseudo-inverse: `(A + λI)⁻¹` computed through the
 /// eigendecomposition with an eigenvalue floor — the same construction the
 /// paper applies to the MSET similarity matrix via cuSOLVER.
 pub fn reg_pinv(a: &Mat, lambda: f64) -> Mat {
-    let (w, v) = eigh(a);
+    Workspace::with(|ws| {
+        let mut out = Mat::zeros(0, 0);
+        reg_pinv_into(&mut out, a, lambda, ws);
+        out
+    })
+}
+
+/// [`reg_pinv`] writing into a caller-owned matrix with workspace-backed
+/// scratch. The reconstruction `V·diag(1/(w+λ))·Vᵀ` is factored as
+/// `W'·W'ᵀ` with `W' = V·diag(√·)` and runs through the blocked
+/// [`kernel::syrk_into`] — half the naive flops, and the result is
+/// *exactly* symmetric (the surveillance path exploits this).
+pub fn reg_pinv_into(out: &mut Mat, a: &Mat, lambda: f64, ws: &mut Workspace) {
     let n = a.rows;
+    if n == 0 {
+        out.reshape(0, 0);
+        return;
+    }
+    let mut w = ws.take_f64(0);
+    let mut v = Mat {
+        rows: 0,
+        cols: 0,
+        data: ws.take_f64(0),
+    };
+    eigh_into(a, &mut w, &mut v, ws);
     let floor = 1e-12 * w.iter().fold(0.0f64, |m, &x| m.max(x.abs())).max(1e-12);
-    let mut out = Mat::zeros(n, n);
-    // out = V diag(1/(w+λ)) Vᵀ
-    for k in 0..n {
-        let d = 1.0 / (w[k] + lambda).max(floor);
-        for i in 0..n {
-            let vik = v[(i, k)] * d;
-            if vik == 0.0 {
-                continue;
-            }
-            for j in 0..n {
-                out[(i, j)] += vik * v[(j, k)];
-            }
+    let mut dsq = ws.take_f64(n);
+    for (d, &wk) in dsq.iter_mut().zip(w.iter()) {
+        *d = (1.0 / (wk + lambda).max(floor)).sqrt();
+    }
+    let mut scaled = Mat {
+        rows: n,
+        cols: n,
+        data: ws.take_f64(n * n),
+    };
+    for (srow, vrow) in scaled
+        .data
+        .chunks_exact_mut(n)
+        .zip(v.data.chunks_exact(n))
+    {
+        for ((s, &vv), &d) in srow.iter_mut().zip(vrow).zip(dsq.iter()) {
+            *s = vv * d;
         }
     }
-    out
+    kernel::syrk_into(out, &scaled);
+    ws.give_f64(scaled.data);
+    ws.give_f64(dsq);
+    ws.give_f64(v.data);
+    ws.give_f64(w);
 }
 
 #[cfg(test)]
@@ -258,6 +336,33 @@ mod tests {
         let inv = reg_pinv(&a, 0.0);
         let eye = a.matmul(&inv);
         assert!(eye.max_abs_diff(&Mat::eye(6)) < 1e-7);
+    }
+
+    #[test]
+    fn reg_pinv_exactly_symmetric() {
+        // the syrk-based reconstruction mirrors its lower triangle, so the
+        // inverse is symmetric to the bit — surveil relies on this.
+        let mut rng = Rng::new(9);
+        let a = random_spd(7, &mut rng);
+        let p = reg_pinv(&a, 1e-3);
+        for i in 0..7 {
+            for j in 0..7 {
+                assert_eq!(p[(i, j)].to_bits(), p[(j, i)].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn eigh_into_matches_eigh() {
+        let mut rng = Rng::new(10);
+        let a = random_spd(9, &mut rng);
+        let (w1, v1) = eigh(&a);
+        let mut ws = crate::linalg::Workspace::new();
+        let mut w2 = Vec::new();
+        let mut v2 = Mat::zeros(0, 0);
+        eigh_into(&a, &mut w2, &mut v2, &mut ws);
+        assert_eq!(w1, w2);
+        assert_eq!(v1, v2);
     }
 
     #[test]

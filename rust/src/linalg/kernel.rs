@@ -1,0 +1,471 @@
+//! Cache-blocked, register-tiled kernel core for the native numeric hot
+//! path (the paper's §II.D hot-spot, re-thought for CPU the way the L1
+//! Pallas kernel re-thinks it for the MXU).
+//!
+//! Everything here is built on one micro-kernel: a 4×4 register tile of
+//! `C = A·Bᵀ` over row-major operands, unrolled into 16 independent
+//! accumulators (the "4-accumulator unroll" along each of the two tile
+//! axes). The other entry points reduce to it:
+//!
+//! - [`matmul_into`] (`A·B`) packs a transposed copy of `B` (the packed
+//!   B panel) so the micro-kernel streams both operands contiguously;
+//! - [`matmul_nt_into`] (`A·Bᵀ`) and [`syrk_into`] (`A·Aᵀ`) need no
+//!   packing at all — row-major rows *are* the panels;
+//! - [`dist2_cross_into`] / [`dist2_sym_into`] fuse the squared-distance
+//!   expansion ‖a−b‖² = ‖a‖² + ‖b‖² − 2a·b over the same core — the
+//!   exact formulation the L1 kernel uses on the MXU.
+//!
+//! ## Bit-stability contract
+//!
+//! The `k` (reduction) dimension is never split: every output element is
+//! one register accumulator fed in ascending `k` order, so each element's
+//! floating-point op sequence is **identical to the naive sequential dot
+//! product** (`rustc` does not contract `a*b + c` into FMA, and no
+//! reduction is reassociated). Consequences the rest of the crate relies
+//! on:
+//!
+//! - blocked results match the [`reference`] implementations bit for bit
+//!   (the 1e-12 property bounds in `tests/kernel_props.rs` are slack);
+//! - [`dist2_sym_into`] reads row norms off the Gram diagonal, and
+//!   [`dist2_cross_into`]'s separate norm pass performs the same op
+//!   sequence — so `sim_cross(d, d)` equals `sim_matrix(d)` *exactly*,
+//!   diagonal included (`x + x − 2x ≡ 0` in IEEE arithmetic);
+//! - zero-padding the `k` dimension appends exact `+0.0` terms to the
+//!   tail of each accumulation, leaving every result bit-identical —
+//!   the invariant the bucket router's padded executions rely on.
+//!
+//! Cache behaviour: tiles walk `i` then `j` with full-`k` panels. Panels
+//! are contiguous rows (packed for the `A·B` case), so the reduction
+//! streams sequentially and hardware prefetch covers the paper grid's
+//! shapes (`n ≤ 1024` ⇒ a 4-row panel is ≤ 32 KiB). `benches/
+//! kernel_hotpath.rs` gates the resulting speedups and emits
+//! `BENCH_kernel.json`.
+
+use super::mat::Mat;
+use super::workspace::Workspace;
+
+/// Register-tile rows (A-side unroll).
+const MR: usize = 4;
+/// Register-tile columns (B-side unroll — the 4 accumulators per A row).
+const NR: usize = 4;
+
+/// One `ib×jb` tile (`ib, jb ≤ 4`) of `C = A·Bᵀ` into `out` (row stride
+/// `ld`). Full tiles run the 16-accumulator micro-kernel; edge tiles fall
+/// back to scalar dots with the same ascending-`k` accumulation order.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn tile_nt(
+    out: &mut [f64],
+    ld: usize,
+    a: &[f64],
+    b: &[f64],
+    k: usize,
+    i0: usize,
+    ib: usize,
+    j0: usize,
+    jb: usize,
+) {
+    if ib == MR && jb == NR {
+        let a0 = &a[i0 * k..][..k];
+        let a1 = &a[(i0 + 1) * k..][..k];
+        let a2 = &a[(i0 + 2) * k..][..k];
+        let a3 = &a[(i0 + 3) * k..][..k];
+        let b0 = &b[j0 * k..][..k];
+        let b1 = &b[(j0 + 1) * k..][..k];
+        let b2 = &b[(j0 + 2) * k..][..k];
+        let b3 = &b[(j0 + 3) * k..][..k];
+        let mut c = [[0.0f64; NR]; MR];
+        for t in 0..k {
+            let av = [a0[t], a1[t], a2[t], a3[t]];
+            let bv = [b0[t], b1[t], b2[t], b3[t]];
+            for (cr, &ar) in c.iter_mut().zip(av.iter()) {
+                for (cc, &bc) in cr.iter_mut().zip(bv.iter()) {
+                    *cc += ar * bc;
+                }
+            }
+        }
+        for (r, cr) in c.iter().enumerate() {
+            out[(i0 + r) * ld + j0..][..NR].copy_from_slice(cr);
+        }
+    } else {
+        for r in 0..ib {
+            let ar = &a[(i0 + r) * k..][..k];
+            for s in 0..jb {
+                let br = &b[(j0 + s) * k..][..k];
+                let mut acc = 0.0;
+                for (x, y) in ar.iter().zip(br.iter()) {
+                    acc += x * y;
+                }
+                out[(i0 + r) * ld + j0 + s] = acc;
+            }
+        }
+    }
+}
+
+/// `out[m×n] = A[m×k] · B[n×k]ᵀ`, all row-major, `out` overwritten.
+/// The workhorse: both operands stream their rows contiguously, so no
+/// packing is needed.
+pub fn gemm_nt(out: &mut [f64], a: &[f64], b: &[f64], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * k, "gemm_nt: A buffer size");
+    assert_eq!(b.len(), n * k, "gemm_nt: B buffer size");
+    assert_eq!(out.len(), m * n, "gemm_nt: C buffer size");
+    if k == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let mut i0 = 0;
+    while i0 < m {
+        let ib = (m - i0).min(MR);
+        let mut j0 = 0;
+        while j0 < n {
+            let jb = (n - j0).min(NR);
+            tile_nt(out, n, a, b, k, i0, ib, j0, jb);
+            j0 += jb;
+        }
+        i0 += ib;
+    }
+}
+
+/// Blocked transpose: `dst[c·rows + r] = src[r·cols + c]`. Used to build
+/// the packed B panels for [`matmul_into`] and by `Mat::transpose`.
+pub fn pack_transpose(dst: &mut [f64], src: &[f64], rows: usize, cols: usize) {
+    assert_eq!(src.len(), rows * cols, "pack_transpose: src size");
+    assert_eq!(dst.len(), rows * cols, "pack_transpose: dst size");
+    const BLK: usize = 32;
+    for r0 in (0..rows).step_by(BLK) {
+        let r1 = (r0 + BLK).min(rows);
+        for c0 in (0..cols).step_by(BLK) {
+            let c1 = (c0 + BLK).min(cols);
+            for r in r0..r1 {
+                for c in c0..c1 {
+                    dst[c * rows + r] = src[r * cols + c];
+                }
+            }
+        }
+    }
+}
+
+/// `out = A·B` (the general product): packs `Bᵀ` into workspace scratch,
+/// then runs the [`gemm_nt`] core. Element-for-element bit-identical to
+/// the naive i-k-j reference (see the module docs).
+pub fn matmul_into(out: &mut Mat, a: &Mat, b: &Mat, ws: &mut Workspace) {
+    assert_eq!(a.cols, b.rows, "matmul dims");
+    let mut bt = ws.take_f64(b.rows * b.cols);
+    pack_transpose(&mut bt, &b.data, b.rows, b.cols);
+    out.reshape(a.rows, b.cols);
+    gemm_nt(&mut out.data, &a.data, &bt, a.rows, b.cols, a.cols);
+    ws.give_f64(bt);
+}
+
+/// `out = A·Bᵀ` with both operands row-major — no packing needed.
+pub fn matmul_nt_into(out: &mut Mat, a: &Mat, b: &Mat, ws: &mut Workspace) {
+    let _ = ws; // same signature as the other entry points
+    assert_eq!(a.cols, b.cols, "matmul_nt dims");
+    out.reshape(a.rows, b.rows);
+    gemm_nt(&mut out.data, &a.data, &b.data, a.rows, b.rows, a.cols);
+}
+
+/// `out = Aᵀ·B` (`A: k×m`, `B: k×n`): packs both transposes, then runs
+/// the core. Used by the MLP gradient products.
+pub fn matmul_tn_into(out: &mut Mat, a: &Mat, b: &Mat, ws: &mut Workspace) {
+    assert_eq!(a.rows, b.rows, "matmul_tn dims");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut at = ws.take_f64(k * m);
+    let mut bt = ws.take_f64(k * n);
+    pack_transpose(&mut at, &a.data, k, m);
+    pack_transpose(&mut bt, &b.data, k, n);
+    out.reshape(m, n);
+    gemm_nt(&mut out.data, &at, &bt, m, n, k);
+    ws.give_f64(bt);
+    ws.give_f64(at);
+}
+
+/// Symmetric rank-k product `out = A·Aᵀ` (`A: m×k`): only the lower
+/// triangle is computed (half the tile work of [`gemm_nt`]), then
+/// mirrored — so the result is *exactly* symmetric.
+pub fn syrk_into(out: &mut Mat, a: &Mat) {
+    let m = a.rows;
+    let k = a.cols;
+    out.reshape(m, m);
+    if k == 0 {
+        out.data.fill(0.0);
+        return;
+    }
+    let data = &mut out.data;
+    let src = &a.data;
+    let mut i0 = 0;
+    while i0 < m {
+        let ib = (m - i0).min(MR);
+        let mut j0 = 0;
+        while j0 < i0 + ib {
+            let jb = (m - j0).min(NR);
+            if ib == MR && jb == NR && j0 + NR <= i0 {
+                // tile strictly below the diagonal: full micro-kernel
+                tile_nt(data, m, src, src, k, i0, ib, j0, jb);
+            } else {
+                // diagonal-crossing or edge tile: scalar dots, lower only
+                for r in i0..i0 + ib {
+                    let ar = &src[r * k..][..k];
+                    let hi = (j0 + jb).min(r + 1);
+                    for s in j0..hi {
+                        let br = &src[s * k..][..k];
+                        let mut acc = 0.0;
+                        for (x, y) in ar.iter().zip(br.iter()) {
+                            acc += x * y;
+                        }
+                        data[r * m + s] = acc;
+                    }
+                }
+            }
+            j0 += jb;
+        }
+        i0 += ib;
+    }
+    // mirror the lower triangle up
+    for i in 0..m {
+        for j in i + 1..m {
+            data[i * m + j] = data[j * m + i];
+        }
+    }
+}
+
+/// Per-row squared norms `out[i] = ‖A[i]‖²`, accumulated in ascending
+/// column order — the same op sequence as the [`syrk_into`] diagonal, so
+/// the two are bit-interchangeable (see the module docs).
+pub fn row_norms2(a: &Mat, out: &mut [f64]) {
+    assert_eq!(out.len(), a.rows, "row_norms2: output size");
+    if a.cols == 0 {
+        out.fill(0.0);
+        return;
+    }
+    for (o, row) in out.iter_mut().zip(a.data.chunks_exact(a.cols)) {
+        let mut acc = 0.0;
+        for &v in row {
+            acc += v * v;
+        }
+        *o = acc;
+    }
+}
+
+/// Pairwise squared distances `out[i][j] = max(‖a_i‖² + ‖b_j‖² −
+/// 2·a_i·b_j, 0)` between the rows of `a` (`m×k`) and `b` (`n×k`),
+/// computed over the blocked Gram core. The clamp absorbs the expansion's
+/// cancellation so downstream `sqrt` never sees a negative.
+pub fn dist2_cross_into(out: &mut Mat, a: &Mat, b: &Mat, ws: &mut Workspace) {
+    assert_eq!(a.cols, b.cols, "dist2_cross: column mismatch");
+    let (m, n) = (a.rows, b.rows);
+    out.reshape(m, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    gemm_nt(&mut out.data, &a.data, &b.data, m, n, a.cols);
+    let mut na = ws.take_f64(m);
+    let mut nb = ws.take_f64(n);
+    row_norms2(a, &mut na);
+    row_norms2(b, &mut nb);
+    for (row, &nai) in out.data.chunks_exact_mut(n).zip(na.iter()) {
+        for (v, &nbj) in row.iter_mut().zip(nb.iter()) {
+            *v = (nai + nbj - 2.0 * *v).max(0.0);
+        }
+    }
+    ws.give_f64(nb);
+    ws.give_f64(na);
+}
+
+/// Symmetric pairwise squared distances between the rows of `a`: the
+/// Gram matrix comes from [`syrk_into`] (half the work, exact symmetry),
+/// row norms are read off its diagonal, and the diagonal distance is
+/// exactly `0.0`. Bit-identical to [`dist2_cross_into`]`(a, a)`.
+pub fn dist2_sym_into(out: &mut Mat, a: &Mat, ws: &mut Workspace) {
+    let m = a.rows;
+    syrk_into(out, a);
+    if m == 0 {
+        return;
+    }
+    let mut nrm = ws.take_f64(m);
+    for (i, v) in nrm.iter_mut().enumerate() {
+        *v = out.data[i * m + i];
+    }
+    for (i, row) in out.data.chunks_exact_mut(m).enumerate() {
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = if i == j {
+                0.0
+            } else {
+                (nrm[i] + nrm[j] - 2.0 * *v).max(0.0)
+            };
+        }
+    }
+    ws.give_f64(nrm);
+}
+
+/// Naive single-accumulator references the blocked kernels are validated
+/// against — by `tests/kernel_props.rs` (≤ 1e-12 across random shapes)
+/// and by `benches/kernel_hotpath.rs` (≤ 1e-10 plus the asserted
+/// speedups). Kept `pub` so benches and tests share one oracle.
+pub mod reference {
+    use super::Mat;
+
+    /// Naive i-k-j `A·B` (per-element ascending-`k` accumulation).
+    pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+        assert_eq!(a.cols, b.rows, "matmul dims");
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for k in 0..a.cols {
+                let av = a[(i, k)];
+                for j in 0..b.cols {
+                    out[(i, j)] += av * b[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Naive `A·Bᵀ`.
+    pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+        assert_eq!(a.cols, b.cols, "matmul_nt dims");
+        let mut out = Mat::zeros(a.rows, b.rows);
+        for i in 0..a.rows {
+            for j in 0..b.rows {
+                let mut acc = 0.0;
+                for (x, y) in a.row(i).iter().zip(b.row(j).iter()) {
+                    acc += x * y;
+                }
+                out[(i, j)] = acc;
+            }
+        }
+        out
+    }
+
+    /// Naive `A·Aᵀ`.
+    pub fn syrk(a: &Mat) -> Mat {
+        matmul_nt(a, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_gauss(&mut m.data);
+        m
+    }
+
+    #[test]
+    fn gemm_nt_matches_reference_bitwise() {
+        let a = random_mat(13, 17, 1);
+        let b = random_mat(9, 17, 2);
+        let mut out = Mat::zeros(13, 9);
+        gemm_nt(&mut out.data, &a.data, &b.data, 13, 9, 17);
+        let r = reference::matmul_nt(&a, &b);
+        assert_eq!(out, r, "blocked gemm must be bit-identical to naive");
+    }
+
+    #[test]
+    fn matmul_into_matches_reference_bitwise() {
+        let mut ws = Workspace::new();
+        let a = random_mat(11, 7, 3);
+        let b = random_mat(7, 15, 4);
+        let mut out = Mat::zeros(0, 0);
+        matmul_into(&mut out, &a, &b, &mut ws);
+        assert_eq!(out, reference::matmul(&a, &b));
+    }
+
+    #[test]
+    fn matmul_tn_matches_transposed_reference() {
+        let mut ws = Workspace::new();
+        let a = random_mat(12, 5, 5);
+        let b = random_mat(12, 6, 6);
+        let mut out = Mat::zeros(0, 0);
+        matmul_tn_into(&mut out, &a, &b, &mut ws);
+        let r = reference::matmul(&a.transpose(), &b);
+        assert!(out.max_abs_diff(&r) < 1e-12);
+    }
+
+    #[test]
+    fn syrk_symmetric_and_matches_reference() {
+        let a = random_mat(10, 6, 7);
+        let mut out = Mat::zeros(0, 0);
+        syrk_into(&mut out, &a);
+        let r = reference::syrk(&a);
+        assert_eq!(out, r, "syrk must be bit-identical to naive A·Aᵀ");
+        for i in 0..10 {
+            for j in 0..10 {
+                assert_eq!(out[(i, j)].to_bits(), out[(j, i)].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn dist2_sym_equals_dist2_cross_bitwise() {
+        let mut ws = Workspace::new();
+        let a = random_mat(9, 5, 8);
+        let mut sym = Mat::zeros(0, 0);
+        let mut cross = Mat::zeros(0, 0);
+        dist2_sym_into(&mut sym, &a, &mut ws);
+        dist2_cross_into(&mut cross, &a, &a, &mut ws);
+        assert_eq!(sym, cross);
+        for i in 0..9 {
+            assert_eq!(sym[(i, i)], 0.0);
+        }
+    }
+
+    #[test]
+    fn dist2_matches_direct_distance() {
+        let mut ws = Workspace::new();
+        let a = random_mat(8, 6, 9);
+        let b = random_mat(5, 6, 10);
+        let mut d2 = Mat::zeros(0, 0);
+        dist2_cross_into(&mut d2, &a, &b, &mut ws);
+        for i in 0..8 {
+            for j in 0..5 {
+                let direct: f64 = a
+                    .row(i)
+                    .iter()
+                    .zip(b.row(j))
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum();
+                assert!((d2[(i, j)] - direct).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_shapes_are_handled() {
+        let mut ws = Workspace::new();
+        let a = Mat::zeros(3, 0);
+        let b = Mat::zeros(0, 4);
+        let mut out = Mat::zeros(0, 0);
+        matmul_into(&mut out, &a, &b, &mut ws);
+        assert_eq!((out.rows, out.cols), (3, 4));
+        assert!(out.data.iter().all(|&v| v == 0.0));
+        let mut d2 = Mat::zeros(0, 0);
+        dist2_cross_into(&mut d2, &Mat::zeros(0, 3), &Mat::zeros(2, 3), &mut ws);
+        assert_eq!((d2.rows, d2.cols), (0, 2));
+    }
+
+    #[test]
+    fn padding_k_is_exact() {
+        // appending zero columns appends exact +0.0 terms — results are
+        // bit-identical (the bucket-router invariant).
+        let mut ws = Workspace::new();
+        let a = random_mat(6, 5, 11);
+        let b = random_mat(7, 5, 12);
+        let mut ap = Mat::zeros(6, 9);
+        let mut bp = Mat::zeros(7, 9);
+        for r in 0..6 {
+            ap.row_mut(r)[..5].copy_from_slice(a.row(r));
+        }
+        for r in 0..7 {
+            bp.row_mut(r)[..5].copy_from_slice(b.row(r));
+        }
+        let mut d2 = Mat::zeros(0, 0);
+        let mut d2p = Mat::zeros(0, 0);
+        dist2_cross_into(&mut d2, &a, &b, &mut ws);
+        dist2_cross_into(&mut d2p, &ap, &bp, &mut ws);
+        assert_eq!(d2, d2p);
+    }
+}

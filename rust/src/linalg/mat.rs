@@ -1,10 +1,14 @@
 //! Dense row-major `f64` matrix used throughout the L3 analysis code
 //! (TPSS shaping, response-surface fitting, the native MSET oracle).
 //!
-//! This is intentionally small: the *hot* numerical path runs inside the
-//! AOT-compiled XLA executables; this type backs data preparation and
-//! verification, where clarity beats peak FLOPs.
+//! The type stays intentionally small; the compute-heavy products
+//! ([`Mat::matmul`], [`Mat::transpose`]) delegate to the blocked
+//! [`super::kernel`] core, and `_into` variants there let hot callers
+//! reuse buffers through a [`super::workspace::Workspace`] instead of
+//! allocating per call.
 
+use super::kernel;
+use super::workspace::Workspace;
 use std::ops::{Index, IndexMut};
 
 /// Dense row-major matrix.
@@ -67,40 +71,60 @@ impl Mat {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// Column `c`, copied out.
-    pub fn col(&self, c: usize) -> Vec<f64> {
-        (0..self.rows).map(|r| self[(r, c)]).collect()
+    /// Column `c`, top to bottom, as an iterator — no per-column
+    /// allocation. Use [`Mat::col_into`] when a contiguous slice is
+    /// needed, or `.collect::<Vec<_>>()` for a one-off copy.
+    pub fn col(&self, c: usize) -> impl Iterator<Item = f64> + '_ {
+        assert!(c < self.cols || self.rows == 0, "column {c} out of bounds");
+        self.data
+            .get(c..)
+            .unwrap_or(&[])
+            .iter()
+            .step_by(self.cols.max(1))
+            .copied()
     }
 
-    /// Transposed copy.
+    /// Write column `c` into a caller-owned buffer (cleared first), so
+    /// repeated extraction reuses one allocation.
+    pub fn col_into(&self, c: usize, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(self.col(c));
+    }
+
+    /// Re-shape in place to `rows × cols`, resizing the backing buffer.
+    /// Existing elements are **not** rearranged — this is for `_into`
+    /// output parameters whose every element is about to be overwritten.
+    pub fn reshape(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Transposed copy (blocked; see [`Mat::transpose_into`]).
     pub fn transpose(&self) -> Mat {
-        let mut t = Mat::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                t[(c, r)] = self[(r, c)];
-            }
-        }
+        let mut t = Mat::zeros(0, 0);
+        self.transpose_into(&mut t);
         t
     }
 
-    /// `self * other`, blocked i-k-j loop order (cache friendly).
+    /// Blocked transpose into a caller-owned matrix.
+    pub fn transpose_into(&self, out: &mut Mat) {
+        out.reshape(self.cols, self.rows);
+        kernel::pack_transpose(&mut out.data, &self.data, self.rows, self.cols);
+    }
+
+    /// `self * other` through the blocked [`super::kernel`] core (packed
+    /// Bᵀ panels, 4×4 register tiles). Per-element accumulation order is
+    /// the plain ascending-`k` dot product, so results match the naive
+    /// triple loop bit for bit. Hot callers should prefer
+    /// [`kernel::matmul_into`] with an explicit workspace.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul dims");
-        let mut out = Mat::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            let orow = out.row_mut(i);
-            for (k, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = other.row(k);
-                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
-                    *o += a * b;
-                }
-            }
-        }
-        out
+        Workspace::with(|ws| {
+            let mut out = Mat::zeros(0, 0);
+            kernel::matmul_into(&mut out, self, other, ws);
+            out
+        })
     }
 
     /// Matrix–vector product.
@@ -243,5 +267,25 @@ mod tests {
         let a = Mat::zeros(2, 3);
         let b = Mat::zeros(2, 3);
         a.matmul(&b);
+    }
+
+    #[test]
+    fn col_iterates_and_copies() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!(a.col(1).collect::<Vec<_>>(), vec![2.0, 4.0, 6.0]);
+        let mut buf = vec![9.0; 10];
+        a.col_into(0, &mut buf);
+        assert_eq!(buf, vec![1.0, 3.0, 5.0]);
+        // empty matrix: no panic, no elements
+        assert_eq!(Mat::zeros(0, 0).col(0).count(), 0);
+    }
+
+    #[test]
+    fn reshape_resizes_buffer() {
+        let mut a = Mat::zeros(2, 2);
+        a.reshape(3, 4);
+        assert_eq!((a.rows, a.cols, a.data.len()), (3, 4, 12));
+        a.reshape(1, 2);
+        assert_eq!((a.rows, a.cols, a.data.len()), (1, 2, 2));
     }
 }

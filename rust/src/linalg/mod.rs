@@ -1,9 +1,25 @@
 //! Small dense linear algebra substrate (no external BLAS available
 //! offline). Backs TPSS cross-correlation shaping, response-surface fitting
-//! and the native MSET2 oracle. The production hot path runs inside XLA.
+//! and the native MSET2 oracle.
+//!
+//! Layered in three pieces:
+//!
+//! - [`mat`] — the row-major `Mat` container and its convenience ops;
+//! - [`kernel`] — the cache-blocked, register-tiled compute core
+//!   (`gemm_nt` / packed-panel `matmul` / `syrk` / fused squared-distance
+//!   kernels) plus naive [`kernel::reference`] oracles;
+//! - [`workspace`] — the per-thread scratch arena that makes the kernel
+//!   `_into` entry points allocation-free in steady state.
+//!
+//! See `docs/ARCHITECTURE.md` §"Kernel core" for the blocking scheme and
+//! the bit-stability contract, and `benches/kernel_hotpath.rs` for the
+//! gated speedups (`BENCH_kernel.json`).
 
 pub mod decomp;
+pub mod kernel;
 pub mod mat;
+pub mod workspace;
 
-pub use decomp::{cholesky, eigh, lstsq, reg_pinv, solve_spd};
+pub use decomp::{cholesky, eigh, eigh_into, lstsq, reg_pinv, reg_pinv_into, solve_spd};
 pub use mat::Mat;
+pub use workspace::Workspace;

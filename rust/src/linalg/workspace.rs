@@ -1,0 +1,209 @@
+//! Reusable scratch-buffer arena for the blocked kernel core.
+//!
+//! Every step of the native MSET trial hot path — similarity products,
+//! packed GEMM panels, eigendecomposition scratch, scaled probe windows —
+//! needs short-lived working memory of trial-dependent size. Allocating it
+//! fresh on every call (what the naive `linalg::Mat` pipeline did) puts
+//! `malloc`/`free` on the §II.D hot spot and defeats cache reuse across
+//! the thousands of trials a sweep schedules.
+//!
+//! A [`Workspace`] is a small pool of previously used buffers: kernels
+//! check buffers out with [`Workspace::take_f64`], use them, and return
+//! them with [`Workspace::give_f64`]. Once the pool is warm, a
+//! steady-state trial performs **zero heap allocations** inside the
+//! kernel core — buffers keep their capacity across checkouts (`Vec`
+//! never shrinks on `resize`), so a worker that measures the same cell
+//! shape repeatedly touches the allocator exactly once.
+//!
+//! ## Ownership model
+//!
+//! One arena per worker thread, checked out through the thread-local
+//! [`Workspace::with`]. The shared `TrialExecutor` runs each `(cell,
+//! trial)` task on a long-lived worker thread, so the thread-local arena
+//! *is* the per-worker arena — no plumbing through the executor API is
+//! needed, and two workers never contend on a buffer. The sweep engine
+//! bounds per-worker retention between trials via [`trim_thread`].
+//!
+//! `with` is re-entrancy safe: if a caller inside a checkout calls `with`
+//! again (which the kernel entry points are structured to avoid — they
+//! thread `&mut Workspace` down instead), the nested scope receives a
+//! fresh temporary arena rather than panicking on the `RefCell`.
+
+use std::cell::RefCell;
+
+/// Default per-thread retention cap passed to [`trim_thread`] by the
+/// sweep engine between trials: 2²⁰ `f64` elements (8 MiB) per worker.
+pub const DEFAULT_RETAIN_ELEMS: usize = 1 << 20;
+
+/// A pool of reusable scratch buffers (see the module docs).
+#[derive(Debug, Default)]
+pub struct Workspace {
+    f64_pool: Vec<Vec<f64>>,
+    idx_pool: Vec<Vec<usize>>,
+}
+
+thread_local! {
+    static THREAD_WS: RefCell<Workspace> = RefCell::new(Workspace::new());
+}
+
+impl Workspace {
+    /// Empty arena (no buffers retained yet).
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Check out an `f64` buffer of exactly `len` elements. **Contents
+    /// are unspecified** — callers must overwrite every element they
+    /// read (use [`Workspace::take_f64_zeroed`] otherwise). Return the
+    /// buffer with [`Workspace::give_f64`] when done so the next
+    /// checkout reuses its capacity.
+    pub fn take_f64(&mut self, len: usize) -> Vec<f64> {
+        let mut v = self.f64_pool.pop().unwrap_or_default();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Like [`Workspace::take_f64`] but every element is `0.0`.
+    pub fn take_f64_zeroed(&mut self, len: usize) -> Vec<f64> {
+        let mut v = self.take_f64(len);
+        v.fill(0.0);
+        v
+    }
+
+    /// Return an `f64` buffer to the pool.
+    pub fn give_f64(&mut self, v: Vec<f64>) {
+        if v.capacity() > 0 {
+            self.f64_pool.push(v);
+        }
+    }
+
+    /// Check out an index buffer of exactly `len` elements (contents
+    /// unspecified, like [`Workspace::take_f64`]).
+    pub fn take_idx(&mut self, len: usize) -> Vec<usize> {
+        let mut v = self.idx_pool.pop().unwrap_or_default();
+        v.resize(len, 0);
+        v
+    }
+
+    /// Return an index buffer to the pool.
+    pub fn give_idx(&mut self, v: Vec<usize>) {
+        if v.capacity() > 0 {
+            self.idx_pool.push(v);
+        }
+    }
+
+    /// Total `f64`-equivalent elements currently retained by the pool
+    /// (index buffers counted at one element each).
+    pub fn retained_elems(&self) -> usize {
+        self.f64_pool.iter().map(|v| v.capacity()).sum::<usize>()
+            + self.idx_pool.iter().map(|v| v.capacity()).sum::<usize>()
+    }
+
+    /// Drop pooled buffers (largest first) until at most `max_elems`
+    /// elements stay retained. Bounds a long-lived worker's footprint
+    /// after it has measured an unusually large cell.
+    pub fn trim(&mut self, max_elems: usize) {
+        self.f64_pool.sort_by_key(|v| v.capacity());
+        self.idx_pool.sort_by_key(|v| v.capacity());
+        while self.retained_elems() > max_elems {
+            // Pop the largest of either pool; both are sorted ascending.
+            let f = self.f64_pool.last().map_or(0, |v| v.capacity());
+            let i = self.idx_pool.last().map_or(0, |v| v.capacity());
+            if f == 0 && i == 0 {
+                break;
+            }
+            if f >= i {
+                self.f64_pool.pop();
+            } else {
+                self.idx_pool.pop();
+            }
+        }
+    }
+
+    /// Run `f` with this thread's arena. Nested calls (discouraged —
+    /// kernel internals thread `&mut Workspace` instead) fall back to a
+    /// fresh temporary arena rather than panicking.
+    pub fn with<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
+        THREAD_WS.with(|cell| match cell.try_borrow_mut() {
+            Ok(mut ws) => f(&mut ws),
+            Err(_) => f(&mut Workspace::new()),
+        })
+    }
+}
+
+/// Trim the *current thread's* arena to `max_elems` retained elements —
+/// called by the sweep engine after each trial so executor workers keep a
+/// warm (but bounded) pool between trials.
+pub fn trim_thread(max_elems: usize) {
+    THREAD_WS.with(|cell| {
+        if let Ok(mut ws) = cell.try_borrow_mut() {
+            ws.trim(max_elems);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_give_reuses_capacity() {
+        let mut ws = Workspace::new();
+        let mut v = ws.take_f64(100);
+        v[0] = 3.0;
+        let cap = v.capacity();
+        let ptr = v.as_ptr();
+        ws.give_f64(v);
+        let v2 = ws.take_f64(50);
+        assert_eq!(v2.len(), 50);
+        assert_eq!(v2.capacity(), cap, "capacity must be retained");
+        assert_eq!(v2.as_ptr(), ptr, "same buffer must be reused");
+    }
+
+    #[test]
+    fn take_zeroed_is_zero() {
+        let mut ws = Workspace::new();
+        let mut v = ws.take_f64(8);
+        v.fill(7.0);
+        ws.give_f64(v);
+        let v = ws.take_f64_zeroed(8);
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn trim_bounds_retention() {
+        let mut ws = Workspace::new();
+        let a = ws.take_f64(1000);
+        let b = ws.take_f64(10);
+        ws.give_f64(a);
+        ws.give_f64(b);
+        assert!(ws.retained_elems() >= 1010);
+        ws.trim(100);
+        assert!(ws.retained_elems() <= 100);
+        // trimming to zero empties the pool entirely
+        ws.trim(0);
+        assert_eq!(ws.retained_elems(), 0);
+    }
+
+    #[test]
+    fn with_is_reentrant() {
+        let out = Workspace::with(|ws| {
+            let v = ws.take_f64(4);
+            // nested checkout must not panic
+            let inner = Workspace::with(|ws2| ws2.take_f64(2).len());
+            ws.give_f64(v);
+            inner
+        });
+        assert_eq!(out, 2);
+    }
+
+    #[test]
+    fn idx_pool_roundtrip() {
+        let mut ws = Workspace::new();
+        let mut v = ws.take_idx(5);
+        v[4] = 9;
+        ws.give_idx(v);
+        let v = ws.take_idx(3);
+        assert_eq!(v.len(), 3);
+    }
+}

@@ -20,7 +20,7 @@ pub mod svr;
 pub use nn::MlpPlugin;
 pub use svr::SvrPlugin;
 
-use crate::linalg::{solve_spd, Mat};
+use crate::linalg::{kernel, solve_spd, Mat, Workspace};
 use crate::mset::{self, Estimate, MsetModel, Scaler};
 
 /// A trainable prognostic estimator of sensor state.
@@ -118,30 +118,36 @@ impl PrognosticModel for AakrPlugin {
 
     fn estimate(&self, x: &Mat) -> Estimate {
         let d = self.d.as_ref().expect("fit first");
-        let xs = self.scaler.as_ref().unwrap().transform(x);
-        // K = sim(D, X) : m × B, weights normalised per observation column.
-        let k = mset::sim_cross(d, &xs);
-        let b = xs.rows;
-        let m = d.rows;
-        let mut xhat = Mat::zeros(b, xs.cols);
-        for col in 0..b {
-            let mut wsum = 0.0;
-            for row in 0..m {
-                wsum += k[(row, col)];
-            }
-            let inv = 1.0 / wsum.max(1e-12);
-            for row in 0..m {
-                let w = k[(row, col)] * inv;
-                if w == 0.0 {
-                    continue;
+        Workspace::with(|ws| {
+            let mut xs = Mat {
+                rows: 0,
+                cols: 0,
+                data: ws.take_f64(0),
+            };
+            self.scaler.as_ref().unwrap().transform_into(x, &mut xs);
+            // Kᵀ = sim(X, D) : B × m — each observation's weight row is
+            // contiguous, so normalisation and the weighted sum both
+            // stream; X̂ = norm(Kᵀ)·D is one blocked product.
+            let mut kt = Mat {
+                rows: 0,
+                cols: 0,
+                data: ws.take_f64(0),
+            };
+            mset::sim_cross_t_into(&mut kt, &xs, d, d.cols, ws);
+            for wrow in kt.data.chunks_exact_mut(d.rows.max(1)) {
+                let wsum: f64 = wrow.iter().sum();
+                let inv = 1.0 / wsum.max(1e-12);
+                for w in wrow.iter_mut() {
+                    *w *= inv;
                 }
-                for (j, &dv) in d.row(row).iter().enumerate() {
-                    xhat[(col, j)] += w * dv;
-                }
             }
-        }
-        let resid = xs.sub(&xhat);
-        Estimate { xhat, resid }
+            let mut xhat = Mat::zeros(0, 0);
+            kernel::matmul_into(&mut xhat, &kt, d, ws);
+            let resid = xs.sub(&xhat);
+            ws.give_f64(kt.data);
+            ws.give_f64(xs.data);
+            Estimate { xhat, resid }
+        })
     }
 
     fn train_flops(&self, n: usize, m: usize) -> f64 {
@@ -188,10 +194,21 @@ impl PrognosticModel for RidgePlugin {
         let scaler = Scaler::fit(x_train);
         let xs = scaler.transform(x_train);
         let n = xs.cols;
-        // Gram matrix XᵀX once, then per-signal system with the target
-        // column/row zeroed out.
-        let xt = xs.transpose();
-        let gram = xt.matmul(&xs);
+        // Gram matrix XᵀX once (a blocked syrk over Xᵀ — exactly
+        // symmetric), then per-signal system with the target column/row
+        // zeroed out.
+        let gram = Workspace::with(|ws| {
+            let mut xt = Mat {
+                rows: 0,
+                cols: 0,
+                data: ws.take_f64(0),
+            };
+            xs.transpose_into(&mut xt);
+            let mut gram = Mat::zeros(0, 0);
+            kernel::syrk_into(&mut gram, &xt);
+            ws.give_f64(xt.data);
+            gram
+        });
         let mut coef = Mat::zeros(n, n);
         for j in 0..n {
             // A = gram over features != j (+ αI), b = Xᵀ x_j over same
@@ -219,8 +236,13 @@ impl PrognosticModel for RidgePlugin {
     fn estimate(&self, x: &Mat) -> Estimate {
         let coef = self.coef.as_ref().expect("fit first");
         let xs = self.scaler.as_ref().unwrap().transform(x);
-        // X̂ = X · Cᵀ (row-major obs × n)
-        let xhat = xs.matmul(&coef.transpose());
+        // X̂ = X · Cᵀ — an NT product over row-major operands, so the
+        // blocked kernel needs neither a transposed copy nor packing.
+        let xhat = Workspace::with(|ws| {
+            let mut xhat = Mat::zeros(0, 0);
+            kernel::matmul_nt_into(&mut xhat, &xs, coef, ws);
+            xhat
+        });
         let resid = xs.sub(&xhat);
         Estimate { xhat, resid }
     }

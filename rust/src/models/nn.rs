@@ -10,7 +10,7 @@
 //! studies.
 
 use super::PrognosticModel;
-use crate::linalg::Mat;
+use crate::linalg::{kernel, Mat, Workspace};
 use crate::mset::{Estimate, Scaler};
 use crate::util::rng::Rng;
 
@@ -62,25 +62,34 @@ impl MlpPlugin {
 
     /// Forward pass for a batch (rows = observations, scaled units).
     fn forward(&self, xs: &Mat) -> (Mat, Mat) {
+        Workspace::with(|ws| {
+            let mut hid = Mat::zeros(0, 0);
+            let mut out = Mat::zeros(0, 0);
+            self.forward_ws(xs, &mut hid, &mut out, ws);
+            (hid, out)
+        })
+    }
+
+    /// [`MlpPlugin::forward`] into caller-owned buffers: both layer
+    /// products are NT kernels over row-major weights (no transposed
+    /// copies), so a reused `hid`/`out` makes the pass allocation-free.
+    fn forward_ws(&self, xs: &Mat, hid: &mut Mat, out: &mut Mat, ws: &mut Workspace) {
         let w1 = self.w1.as_ref().unwrap();
         let w2 = self.w2.as_ref().unwrap();
         // hidden = tanh(X W1ᵀ + b1)
-        let mut hid = xs.matmul(&w1.transpose());
-        for r in 0..hid.rows {
-            let row = hid.row_mut(r);
-            for (j, v) in row.iter_mut().enumerate() {
-                *v = (*v + self.b1[j]).tanh();
+        kernel::matmul_nt_into(hid, xs, w1, ws);
+        for row in hid.data.chunks_exact_mut(hid.cols.max(1)) {
+            for (v, &b) in row.iter_mut().zip(&self.b1) {
+                *v = (*v + b).tanh();
             }
         }
         // out = H W2ᵀ + b2
-        let mut out = hid.matmul(&w2.transpose());
-        for r in 0..out.rows {
-            let row = out.row_mut(r);
-            for (j, v) in row.iter_mut().enumerate() {
-                *v += self.b2[j];
+        kernel::matmul_nt_into(out, hid, w2, ws);
+        for row in out.data.chunks_exact_mut(out.cols.max(1)) {
+            for (v, &b) in row.iter_mut().zip(&self.b2) {
+                *v += b;
             }
         }
-        (hid, out)
     }
 }
 
@@ -118,58 +127,73 @@ impl PrognosticModel for MlpPlugin {
         let mut vb2 = vec![0.0; n];
         let t = xs.rows;
         let mut order: Vec<usize> = (0..t).collect();
-        for _epoch in 0..self.epochs {
-            rng.shuffle(&mut order);
-            for chunk in order.chunks(self.batch) {
-                let b = chunk.len();
-                let mut xb = Mat::zeros(b, n);
-                for (r, &i) in chunk.iter().enumerate() {
-                    xb.row_mut(r).copy_from_slice(xs.row(i));
-                }
-                let (hid, out) = self.forward(&xb);
-                // dL/dout = 2(out − x)/b   (MSE)
-                let mut dout = out.sub(&xb);
-                for v in dout.data.iter_mut() {
-                    *v *= 2.0 / b as f64;
-                }
-                // grads
-                let w2g = dout.transpose().matmul(&hid); // (n × h)
-                let db2: Vec<f64> = (0..n).map(|j| dout.col(j).iter().sum()).collect();
-                // dhid = dout W2 ⊙ (1 − hid²)
-                let mut dhid = dout.matmul(self.w2.as_ref().unwrap()); // (b × h)
-                for r in 0..b {
-                    for j in 0..h {
-                        let hv = hid[(r, j)];
-                        dhid[(r, j)] *= 1.0 - hv * hv;
+        // Mini-batch scratch hoisted out of the loop and the kernel
+        // workspace held for the whole fit: the SGD inner loop runs
+        // allocation-free after the first batch.
+        let mut xb = Mat::zeros(0, 0);
+        let mut hid = Mat::zeros(0, 0);
+        let mut out = Mat::zeros(0, 0);
+        let mut w1g = Mat::zeros(0, 0);
+        let mut w2g = Mat::zeros(0, 0);
+        let mut dhid = Mat::zeros(0, 0);
+        let mut db1 = vec![0.0; h];
+        let mut db2 = vec![0.0; n];
+        Workspace::with(|ws| {
+            for _epoch in 0..self.epochs {
+                rng.shuffle(&mut order);
+                for chunk in order.chunks(self.batch) {
+                    let b = chunk.len();
+                    xb.reshape(b, n);
+                    for (r, &i) in chunk.iter().enumerate() {
+                        xb.row_mut(r).copy_from_slice(xs.row(i));
+                    }
+                    self.forward_ws(&xb, &mut hid, &mut out, ws);
+                    // dL/dout = 2(out − x)/b   (MSE), folded into `out`
+                    let dout = &mut out;
+                    let scale = 2.0 / b as f64;
+                    for (v, &x) in dout.data.iter_mut().zip(&xb.data) {
+                        *v = (*v - x) * scale;
+                    }
+                    // grads
+                    kernel::matmul_tn_into(&mut w2g, dout, &hid, ws); // n × h
+                    for (s, j) in db2.iter_mut().zip(0..n) {
+                        *s = dout.col(j).sum();
+                    }
+                    // dhid = dout W2 ⊙ (1 − hid²)
+                    kernel::matmul_into(&mut dhid, dout, self.w2.as_ref().unwrap(), ws);
+                    for (dv, &hv) in dhid.data.iter_mut().zip(&hid.data) {
+                        *dv *= 1.0 - hv * hv;
+                    }
+                    kernel::matmul_tn_into(&mut w1g, &dhid, &xb, ws); // h × n
+                    for (s, j) in db1.iter_mut().zip(0..h) {
+                        *s = dhid.col(j).sum();
+                    }
+                    // momentum SGD
+                    let w1 = self.w1.as_mut().unwrap();
+                    let w2 = self.w2.as_mut().unwrap();
+                    for (v, g) in vw1.data.iter_mut().zip(&w1g.data) {
+                        *v = self.momentum * *v - self.lr * g;
+                    }
+                    for (w, v) in w1.data.iter_mut().zip(&vw1.data) {
+                        *w += v;
+                    }
+                    for (v, g) in vw2.data.iter_mut().zip(&w2g.data) {
+                        *v = self.momentum * *v - self.lr * g;
+                    }
+                    for (w, v) in w2.data.iter_mut().zip(&vw2.data) {
+                        *w += v;
+                    }
+                    for (vb, (b1, &g)) in vb1.iter_mut().zip(self.b1.iter_mut().zip(&db1)) {
+                        *vb = self.momentum * *vb - self.lr * g;
+                        *b1 += *vb;
+                    }
+                    for (vb, (b2, &g)) in vb2.iter_mut().zip(self.b2.iter_mut().zip(&db2)) {
+                        *vb = self.momentum * *vb - self.lr * g;
+                        *b2 += *vb;
                     }
                 }
-                let w1g = dhid.transpose().matmul(&xb); // (h × n)
-                let db1: Vec<f64> = (0..h).map(|j| dhid.col(j).iter().sum()).collect();
-                // momentum SGD
-                let w1 = self.w1.as_mut().unwrap();
-                let w2 = self.w2.as_mut().unwrap();
-                for (v, g) in vw1.data.iter_mut().zip(&w1g.data) {
-                    *v = self.momentum * *v - self.lr * g;
-                }
-                for (w, v) in w1.data.iter_mut().zip(&vw1.data) {
-                    *w += v;
-                }
-                for (v, g) in vw2.data.iter_mut().zip(&w2g.data) {
-                    *v = self.momentum * *v - self.lr * g;
-                }
-                for (w, v) in w2.data.iter_mut().zip(&vw2.data) {
-                    *w += v;
-                }
-                for j in 0..h {
-                    vb1[j] = self.momentum * vb1[j] - self.lr * db1[j];
-                    self.b1[j] += vb1[j];
-                }
-                for j in 0..n {
-                    vb2[j] = self.momentum * vb2[j] - self.lr * db2[j];
-                    self.b2[j] += vb2[j];
-                }
             }
-        }
+        });
         Ok(())
     }
 

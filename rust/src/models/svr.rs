@@ -12,7 +12,7 @@
 //! `k(a,b) = exp(−‖a−b‖² / (2γ²n))`.
 
 use super::PrognosticModel;
-use crate::linalg::{reg_pinv, Mat};
+use crate::linalg::{kernel, reg_pinv, Mat, Workspace};
 use crate::mset::{select_memory, Estimate, Scaler};
 
 /// Least-squares SVM / kernel ridge auto-associative estimator.
@@ -87,26 +87,34 @@ impl PrognosticModel for SvrPlugin {
     fn estimate(&self, x: &Mat) -> Estimate {
         let d = self.d.as_ref().expect("fit first");
         let a = self.a.as_ref().unwrap();
-        let xs = self.scaler.as_ref().unwrap().transform(x);
-        let n = xs.cols;
-        let m = d.rows;
-        let mut xhat = Mat::zeros(xs.rows, n);
-        for r in 0..xs.rows {
-            // k(x) against all memory vectors, then x̂ = Aᵀ k
-            let xr = xs.row(r);
-            let kx: Vec<f64> = (0..m).map(|i| self.kernel(d.row(i), xr, n)).collect();
-            let row = xhat.row_mut(r);
-            for (i, &kv) in kx.iter().enumerate() {
-                if kv == 0.0 {
-                    continue;
-                }
-                for (j, o) in row.iter_mut().enumerate() {
-                    *o += kv * a[(i, j)];
-                }
+        Workspace::with(|ws| {
+            let mut xs = Mat {
+                rows: 0,
+                cols: 0,
+                data: ws.take_f64(0),
+            };
+            self.scaler.as_ref().unwrap().transform_into(x, &mut xs);
+            let n = xs.cols;
+            // Kernel rows k(x_r, D) over the blocked squared-distance
+            // core (Gram expansion), then x̂ = K·A as one blocked
+            // product — same shape as the MSET surveillance pipeline.
+            let mut kx = Mat {
+                rows: 0,
+                cols: 0,
+                data: ws.take_f64(0),
+            };
+            kernel::dist2_cross_into(&mut kx, &xs, d, ws);
+            let denom = 2.0 * self.gamma * self.gamma * n as f64;
+            for v in kx.data.iter_mut() {
+                *v = (-*v / denom).exp();
             }
-        }
-        let resid = xs.sub(&xhat);
-        Estimate { xhat, resid }
+            let mut xhat = Mat::zeros(0, 0);
+            kernel::matmul_into(&mut xhat, &kx, a, ws);
+            let resid = xs.sub(&xhat);
+            ws.give_f64(kx.data);
+            ws.give_f64(xs.data);
+            Estimate { xhat, resid }
+        })
     }
 
     fn train_flops(&self, n: usize, m: usize) -> f64 {

@@ -20,10 +20,13 @@
 pub mod select;
 pub mod similarity;
 
-use crate::linalg::{reg_pinv, Mat};
+use crate::linalg::{kernel, reg_pinv_into, Mat, Workspace};
 
 pub use select::select_memory;
-pub use similarity::{sim, sim_cross, sim_cross_gram, sim_matrix, GAMMA};
+pub use similarity::{
+    sim, sim_cross, sim_cross_gram, sim_cross_into, sim_cross_ref, sim_cross_t_into,
+    sim_matrix, sim_matrix_into, sim_matrix_ref, GAMMA,
+};
 
 /// Per-signal affine scaler (z-score using training statistics).
 #[derive(Clone, Debug)]
@@ -64,15 +67,33 @@ impl Scaler {
 
     /// Standardise `x` column-wise with the fitted statistics.
     pub fn transform(&self, x: &Mat) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        self.transform_into(x, &mut out);
+        out
+    }
+
+    /// [`Scaler::transform`] into a caller-owned matrix — the streaming
+    /// hot path standardises every probe chunk, so reusing one buffer
+    /// keeps the allocator off the §II.D loop.
+    pub fn transform_into(&self, x: &Mat, out: &mut Mat) {
         assert_eq!(x.cols, self.mean.len());
-        let mut out = x.clone();
-        for r in 0..out.rows {
-            let row = out.row_mut(r);
-            for j in 0..row.len() {
-                row[j] = (row[j] - self.mean[j]) / self.std[j];
+        out.reshape(x.rows, x.cols);
+        if x.cols == 0 {
+            return;
+        }
+        for (orow, xrow) in out
+            .data
+            .chunks_exact_mut(x.cols)
+            .zip(x.data.chunks_exact(x.cols))
+        {
+            for ((o, &v), (&m, &s)) in orow
+                .iter_mut()
+                .zip(xrow)
+                .zip(self.mean.iter().zip(&self.std))
+            {
+                *o = (v - m) / s;
             }
         }
-        out
     }
 
     /// Undo scaling (for reporting estimates in engineering units).
@@ -138,17 +159,32 @@ pub fn train(x_train: &Mat, m: usize) -> anyhow::Result<MsetModel> {
 
 /// Build `G = (S + λI)⁻¹` from an already-selected memory matrix (scaled).
 /// Exposed separately so the device path can reuse the exact same D.
+///
+/// Runs entirely on the blocked kernel core with workspace-backed
+/// scratch: once a worker's arena is warm, the only allocation left is
+/// the returned `G` itself.
 pub fn train_from_memory(d: &Mat) -> (Mat, f64) {
-    let s = sim_matrix(d);
-    let m = s.rows;
-    let trace: f64 = (0..m).map(|i| s[(i, i)]).sum();
-    let lambda = RIDGE_REL * trace / m as f64;
-    let mut s_reg = s;
-    for i in 0..m {
-        s_reg[(i, i)] += lambda;
-    }
-    // reg_pinv applies the eigenvalue floor; λ already added on the diagonal.
-    (reg_pinv(&s_reg, 0.0), lambda)
+    Workspace::with(|ws| {
+        let m = d.rows;
+        let mut s = Mat {
+            rows: 0,
+            cols: 0,
+            data: ws.take_f64(0),
+        };
+        sim_matrix_into(&mut s, d, ws);
+        let trace: f64 = (0..m).map(|i| s[(i, i)]).sum();
+        let lambda = RIDGE_REL * trace / m as f64;
+        for i in 0..m {
+            s[(i, i)] += lambda;
+        }
+        // reg_pinv applies the eigenvalue floor; λ already added on the
+        // diagonal. The syrk-based reconstruction makes G exactly
+        // symmetric, which `surveil_scaled` exploits.
+        let mut g = Mat::zeros(0, 0);
+        reg_pinv_into(&mut g, &s, 0.0, ws);
+        ws.give_f64(s.data);
+        (g, lambda)
+    })
 }
 
 /// Surveillance result for a chunk of observations.
@@ -158,6 +194,16 @@ pub struct Estimate {
     pub xhat: Mat,
     /// Residuals `x − x̂` (scaled units).
     pub resid: Mat,
+}
+
+impl Default for Estimate {
+    /// Empty estimate — a reusable output slot for the `_into` APIs.
+    fn default() -> Estimate {
+        Estimate {
+            xhat: Mat::zeros(0, 0),
+            resid: Mat::zeros(0, 0),
+        }
+    }
 }
 
 impl MsetModel {
@@ -173,22 +219,68 @@ impl MsetModel {
 
     /// Estimate a chunk of raw observations (rows = observations).
     pub fn surveil(&self, x_raw: &Mat) -> Estimate {
-        let xs = self.scaler.transform(x_raw);
-        self.surveil_scaled(&xs)
+        Workspace::with(|ws| {
+            let mut xs = Mat {
+                rows: 0,
+                cols: 0,
+                data: ws.take_f64(0),
+            };
+            self.scaler.transform_into(x_raw, &mut xs);
+            let mut est = Estimate::default();
+            self.surveil_scaled_ws(&xs, &mut est, ws);
+            ws.give_f64(xs.data);
+            est
+        })
     }
 
     /// Estimate a chunk already in scaled units — the exact computation the
     /// L2 graph performs on device.
     pub fn surveil_scaled(&self, xs: &Mat) -> Estimate {
+        let mut est = Estimate::default();
+        self.surveil_scaled_into(xs, &mut est);
+        est
+    }
+
+    /// [`MsetModel::surveil_scaled`] into a caller-owned [`Estimate`]:
+    /// with a warm workspace and a reused `out`, the steady-state chunk
+    /// loop performs zero heap allocations.
+    pub fn surveil_scaled_into(&self, xs: &Mat, out: &mut Estimate) {
+        Workspace::with(|ws| self.surveil_scaled_ws(xs, out, ws));
+    }
+
+    /// Core surveillance pipeline on the blocked kernel core. Computes
+    /// `Kᵀ = sim(X, D)` (`B × m`, each observation's weights contiguous),
+    /// `W = Kᵀ·Gᵀ` (`= (G·K)ᵀ`, a no-packing NT product), and
+    /// `X̂ = W·D` — the same arithmetic as the classical
+    /// `(G·K)ᵀ·D` formulation, element for element.
+    fn surveil_scaled_ws(&self, xs: &Mat, out: &mut Estimate, ws: &mut Workspace) {
         assert_eq!(xs.cols, self.d.cols, "signal count mismatch");
-        // K = sim(D, X) : m × B
-        let k = sim_cross(&self.d, xs);
-        // W = G K : m × B
-        let w = self.g.matmul(&k);
-        // X̂ = Wᵀ · D : B × n   (D is m×n row-major)
-        let xhat = w.transpose().matmul(&self.d);
-        let resid = xs.sub(&xhat);
-        Estimate { xhat, resid }
+        let n = self.d.cols;
+        let mut kt = Mat {
+            rows: 0,
+            cols: 0,
+            data: ws.take_f64(0),
+        };
+        sim_cross_t_into(&mut kt, xs, &self.d, n, ws);
+        let mut w = Mat {
+            rows: 0,
+            cols: 0,
+            data: ws.take_f64(0),
+        };
+        kernel::matmul_nt_into(&mut w, &kt, &self.g, ws);
+        kernel::matmul_into(&mut out.xhat, &w, &self.d, ws);
+        out.resid.reshape(xs.rows, n);
+        for ((r, &x), &h) in out
+            .resid
+            .data
+            .iter_mut()
+            .zip(xs.data.iter())
+            .zip(out.xhat.data.iter())
+        {
+            *r = x - h;
+        }
+        ws.give_f64(w.data);
+        ws.give_f64(kt.data);
     }
 }
 
@@ -207,7 +299,7 @@ mod tests {
         let sc = Scaler::fit(&x);
         let xs = sc.transform(&x);
         for j in 0..4 {
-            let col = xs.col(j);
+            let col: Vec<f64> = xs.col(j).collect();
             let m = crate::tpss::stats::moments(&col);
             assert!(m.mean.abs() < 1e-10);
             assert!((m.var - 1.0).abs() < 1e-8);
@@ -284,5 +376,39 @@ mod tests {
         let model = train(&x, 12).unwrap();
         let gt = model.g.transpose();
         assert!(model.g.max_abs_diff(&gt) < 1e-8);
+    }
+
+    #[test]
+    fn surveil_matches_classical_formulation() {
+        // the blocked Kᵀ·Gᵀ·D pipeline must agree with the textbook
+        // (G·K)ᵀ·D chain built from the reference kernels.
+        let x = train_set(5, 400, 11);
+        let model = train(&x, 32).unwrap();
+        let probe = train_set(5, 64, 12);
+        let xs = model.scaler.transform(&probe);
+        let est = model.surveil_scaled(&xs);
+        let k = sim_cross_ref(&model.d, &xs);
+        let w = model.g.matmul(&k);
+        let xhat = w.transpose().matmul(&model.d);
+        assert!(
+            est.xhat.max_abs_diff(&xhat) < 1e-9,
+            "pipeline diverged: {}",
+            est.xhat.max_abs_diff(&xhat)
+        );
+    }
+
+    #[test]
+    fn surveil_scaled_into_reuses_output() {
+        let x = train_set(4, 300, 13);
+        let model = train(&x, 24).unwrap();
+        let mut est = Estimate::default();
+        for rows in [50, 7, 31] {
+            let probe = train_set(4, rows, 14);
+            let xs = model.scaler.transform(&probe);
+            model.surveil_scaled_into(&xs, &mut est);
+            let fresh = model.surveil_scaled(&xs);
+            assert_eq!(est.xhat, fresh.xhat);
+            assert_eq!(est.resid, fresh.resid);
+        }
     }
 }

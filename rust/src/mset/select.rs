@@ -113,7 +113,7 @@ mod tests {
         let xs = random_mat(300, 4, 2);
         let idx = select_memory(&xs, 32);
         for j in 0..4 {
-            let col = xs.col(j);
+            let col: Vec<f64> = xs.col(j).collect();
             let lo = (0..300)
                 .min_by(|&a, &b| col[a].partial_cmp(&col[b]).unwrap())
                 .unwrap();

@@ -12,8 +12,19 @@
 //! bandwidth is independent of the signal count — which is what lets the
 //! bucket router zero-pad the signal dimension without changing results
 //! (padding contributes 0 to the squared distance).
+//!
+//! The production entry points ([`sim_matrix`], [`sim_cross`] and their
+//! `_into` variants) compute ‖a−b‖² via the ‖a‖² + ‖b‖² − 2a·b expansion
+//! over the blocked [`crate::linalg::kernel`] GEMM core — the exact
+//! formulation the L1 Pallas kernel uses on the MXU. The pre-blocked
+//! per-pair loops survive as [`sim_matrix_ref`]/[`sim_cross_ref`], the
+//! oracles the property tests and `benches/kernel_hotpath.rs` gate the
+//! blocked path against. By the kernel core's bit-stability contract,
+//! `sim_cross(d, d)` equals `sim_matrix(d)` *exactly* (unit diagonal
+//! included), and zero-padding the signal dimension leaves every
+//! similarity bit-identical.
 
-use crate::linalg::Mat;
+use crate::linalg::{kernel, Mat, Workspace};
 
 /// Kernel bandwidth γ (dimensionless).
 pub const GAMMA: f64 = 0.5;
@@ -31,10 +42,80 @@ pub fn sim(a: &[f64], b: &[f64], n_real: usize) -> f64 {
     1.0 / (1.0 + d2.sqrt() / (GAMMA * (n_real as f64).sqrt()))
 }
 
+/// Shared epilogue: squared distance (already clamped ≥ 0) → similarity.
+#[inline]
+fn sim_of_dist2(d2: f64, bw: f64) -> f64 {
+    1.0 / (1.0 + d2.sqrt() / bw)
+}
+
+/// Similarity bandwidth γ·√n for an unpadded signal count.
+#[inline]
+fn bandwidth(n_real: usize) -> f64 {
+    GAMMA * (n_real as f64).sqrt()
+}
+
 /// Symmetric similarity matrix `S[i][j] = s(D[i], D[j])` for a memory
-/// matrix stored rows-as-vectors (`m × n`). Exploits symmetry (half the
-/// evaluations of the naive loop — see the `ablation_kernel` bench).
+/// matrix stored rows-as-vectors (`m × n`), via the blocked Gram core
+/// (see [`sim_matrix_into`]).
 pub fn sim_matrix(d: &Mat) -> Mat {
+    Workspace::with(|ws| {
+        let mut s = Mat::zeros(0, 0);
+        sim_matrix_into(&mut s, d, ws);
+        s
+    })
+}
+
+/// [`sim_matrix`] into a caller-owned matrix: one blocked `syrk` for the
+/// Gram half-product (norms come off its diagonal), then the similarity
+/// epilogue in place. Exactly symmetric, diagonal exactly 1, and
+/// bit-identical to [`sim_cross_into`]`(d, d)`.
+pub fn sim_matrix_into(s: &mut Mat, d: &Mat, ws: &mut Workspace) {
+    kernel::dist2_sym_into(s, d, ws);
+    let bw = bandwidth(d.cols);
+    for v in s.data.iter_mut() {
+        *v = sim_of_dist2(*v, bw);
+    }
+}
+
+/// Cross similarity `K[i][b] = s(D[i], X[b])` between memory vectors
+/// (`m × n`) and an observation chunk (`B × n`). Result is `m × B`.
+pub fn sim_cross(d: &Mat, x: &Mat) -> Mat {
+    Workspace::with(|ws| {
+        let mut k = Mat::zeros(0, 0);
+        sim_cross_into(&mut k, d, x, d.cols, ws);
+        k
+    })
+}
+
+/// [`sim_cross`] into a caller-owned matrix over the blocked Gram core.
+/// `n_real` is the unpadded signal count for bandwidth normalisation
+/// (pass `d.cols` when nothing is padded) — zero-padded columns leave the
+/// result bit-identical, the invariant the bucket router relies on.
+pub fn sim_cross_into(k: &mut Mat, d: &Mat, x: &Mat, n_real: usize, ws: &mut Workspace) {
+    assert_eq!(d.cols, x.cols, "signal count mismatch");
+    kernel::dist2_cross_into(k, d, x, ws);
+    let bw = bandwidth(n_real);
+    for v in k.data.iter_mut() {
+        *v = sim_of_dist2(*v, bw);
+    }
+}
+
+/// Transposed cross similarity `Kᵀ[b][i] = s(X[b], D[i])` (`B × m`) —
+/// the layout the streaming estimate wants (each observation's weight
+/// row is contiguous). Bit-identical to transposing [`sim_cross_into`].
+pub fn sim_cross_t_into(kt: &mut Mat, x: &Mat, d: &Mat, n_real: usize, ws: &mut Workspace) {
+    assert_eq!(d.cols, x.cols, "signal count mismatch");
+    kernel::dist2_cross_into(kt, x, d, ws);
+    let bw = bandwidth(n_real);
+    for v in kt.data.iter_mut() {
+        *v = sim_of_dist2(*v, bw);
+    }
+}
+
+/// Reference [`sim_matrix`]: per-pair [`sim`] loops exploiting symmetry —
+/// the pre-blocked implementation, kept as the oracle for the property
+/// tests and the `kernel_hotpath` bench.
+pub fn sim_matrix_ref(d: &Mat) -> Mat {
     let m = d.rows;
     let n = d.cols;
     let mut s = Mat::zeros(m, m);
@@ -49,9 +130,10 @@ pub fn sim_matrix(d: &Mat) -> Mat {
     s
 }
 
-/// Cross similarity `K[i][b] = s(D[i], X[b])` between memory vectors
-/// (`m × n`) and an observation chunk (`B × n`). Result is `m × B`.
-pub fn sim_cross(d: &Mat, x: &Mat) -> Mat {
+/// Reference [`sim_cross`]: the naive per-pair Euclidean loop (the
+/// paper's pre-GPU formulation), kept as the oracle for the property
+/// tests and the `kernel_hotpath` bench.
+pub fn sim_cross_ref(d: &Mat, x: &Mat) -> Mat {
     assert_eq!(d.cols, x.cols, "signal count mismatch");
     let m = d.rows;
     let b = x.rows;
@@ -67,9 +149,10 @@ pub fn sim_cross(d: &Mat, x: &Mat) -> Mat {
 }
 
 /// Gram-trick variant of [`sim_cross`] — computes ‖a−b‖² as
-/// ‖a‖² + ‖b‖² − 2aᵀb with a matmul, the exact formulation the L1 Pallas
-/// kernel uses on the MXU. Kept here for the kernel ablation bench and as
-/// a second oracle for the Python kernel.
+/// ‖a‖² + ‖b‖² − 2aᵀb with a matmul. Historically the "fast"
+/// formulation; the production path now fuses the same expansion into
+/// the blocked kernel core ([`sim_cross_into`]). Kept for the kernel
+/// ablation bench and as a second oracle for the Python kernel.
 pub fn sim_cross_gram(d: &Mat, x: &Mat) -> Mat {
     assert_eq!(d.cols, x.cols);
     let m = d.rows;
@@ -149,10 +232,30 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matches_reference() {
+        let d = random_mat(23, 9, 5);
+        let x = random_mat(14, 9, 6);
+        let k = sim_cross(&d, &x);
+        let kr = sim_cross_ref(&d, &x);
+        assert!(
+            k.max_abs_diff(&kr) < 1e-12,
+            "blocked sim_cross diverged: {}",
+            k.max_abs_diff(&kr)
+        );
+        let s = sim_matrix(&d);
+        let sr = sim_matrix_ref(&d);
+        assert!(
+            s.max_abs_diff(&sr) < 1e-12,
+            "blocked sim_matrix diverged: {}",
+            s.max_abs_diff(&sr)
+        );
+    }
+
+    #[test]
     fn gram_trick_matches_direct() {
         let d = random_mat(20, 7, 2);
         let x = random_mat(13, 7, 3);
-        let direct = sim_cross(&d, &x);
+        let direct = sim_cross_ref(&d, &x);
         let gram = sim_cross_gram(&d, &x);
         assert!(
             direct.max_abs_diff(&gram) < 1e-9,
@@ -163,9 +266,25 @@ mod tests {
 
     #[test]
     fn sim_cross_against_sim_matrix() {
+        // bit-identical, not merely close: both run the same Gram core
+        // and read norms from the same accumulation sequence.
         let d = random_mat(8, 3, 4);
         let k = sim_cross(&d, &d);
         let s = sim_matrix(&d);
-        assert!(k.max_abs_diff(&s) < 1e-12);
+        assert_eq!(k, s);
+    }
+
+    #[test]
+    fn transposed_variant_matches() {
+        let d = random_mat(12, 5, 7);
+        let x = random_mat(9, 5, 8);
+        let k = sim_cross(&d, &x);
+        let mut kt = Mat::zeros(0, 0);
+        Workspace::with(|ws| sim_cross_t_into(&mut kt, &x, &d, d.cols, ws));
+        for i in 0..12 {
+            for j in 0..9 {
+                assert_eq!(k[(i, j)].to_bits(), kt[(j, i)].to_bits());
+            }
+        }
     }
 }

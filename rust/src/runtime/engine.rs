@@ -11,29 +11,38 @@
 
 use super::manifest::{ArtifactMeta, Manifest};
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// A host-side tensor (f32, row-major) that can cross thread boundaries.
+///
+/// The element buffer is behind an `Arc`, so `clone` is O(1): sessions
+/// resubmit the same padded `D`/mask/bandwidth tensors on every
+/// `train()`/`bind` call, and those used to deep-copy ~1 MB of padding
+/// at the largest bucket each time.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
     /// Dimensions (row-major).
     pub shape: Vec<usize>,
-    /// Flat row-major element buffer.
-    pub data: Vec<f32>,
+    /// Flat row-major element buffer (shared; cheap to clone).
+    pub data: Arc<Vec<f32>>,
 }
 
 impl Tensor {
     /// Tensor from a shape and a matching flat buffer.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data");
-        Tensor { shape, data }
+        Tensor {
+            shape,
+            data: Arc::new(data),
+        }
     }
 
     /// Rank-1 single-element tensor (scalar inputs to HLO programs).
     pub fn scalar1(v: f32) -> Tensor {
         Tensor {
             shape: vec![1],
-            data: vec![v],
+            data: Arc::new(vec![v]),
         }
     }
 }
@@ -67,7 +76,7 @@ struct BoundSession {
 }
 
 fn tensor_to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
-    let lit = xla::Literal::vec1(&t.data);
+    let lit = xla::Literal::vec1(t.data.as_slice());
     let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
     lit.reshape(&dims)
         .map_err(|e| anyhow::anyhow!("reshape input: {e}"))
@@ -174,7 +183,7 @@ impl Engine {
             .iter()
             .map(|t| {
                 self.client
-                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                    .buffer_from_host_buffer::<f32>(t.data.as_slice(), &t.shape, None)
                     .map_err(|e| anyhow::anyhow!("upload bound input: {e}"))
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
@@ -225,7 +234,7 @@ impl Engine {
             .iter()
             .map(|t| {
                 self.client
-                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                    .buffer_from_host_buffer::<f32>(t.data.as_slice(), &t.shape, None)
                     .map_err(|e| anyhow::anyhow!("upload tail input: {e}"))
             })
             .collect::<anyhow::Result<Vec<_>>>()?;

@@ -93,7 +93,12 @@ impl DeviceServer {
                 while let Ok(req) = rx.recv() {
                     match req {
                         Request::Exec { id, inputs, reply } => {
-                            let _ = reply.send(engine.exec(&id, &inputs));
+                            let res = engine.exec(&id, &inputs);
+                            // Release input buffers before replying so a
+                            // caller holding an Arc clone can reclaim them
+                            // the moment the reply arrives.
+                            drop(inputs);
+                            let _ = reply.send(res);
                         }
                         Request::Bind {
                             session,
@@ -108,7 +113,13 @@ impl DeviceServer {
                             tail,
                             reply,
                         } => {
-                            let _ = reply.send(engine.exec_bound(session, &tail));
+                            let res = engine.exec_bound(session, &tail);
+                            // Drop the tail tensors before the reply: the
+                            // streaming chunk loop recovers its staging
+                            // buffer via `Arc::try_unwrap` as soon as this
+                            // send unblocks it.
+                            drop(tail);
+                            let _ = reply.send(res);
                         }
                         Request::Unbind { session } => {
                             engine.unbind(session);

@@ -57,6 +57,65 @@ impl PhaseCost {
     }
 }
 
+/// Stream a scaled window through a bound surveillance session in
+/// `chunk`-row slices. One reusable slice buffer and one f32 staging
+/// buffer serve every chunk (no per-chunk `Mat::zeros`), and device
+/// outputs are unpadded straight into the result matrices. Shared by
+/// [`DeviceMset`] and [`DeviceAakr`].
+fn stream_surveil(
+    handle: &DeviceHandle,
+    session: u64,
+    xs: &Mat,
+    chunk: usize,
+    bucket_n: usize,
+    n_real: usize,
+) -> anyhow::Result<(Mat, Mat, PhaseCost)> {
+    let mut cost = PhaseCost::default();
+    let mut xhat = Mat::zeros(xs.rows, xs.cols);
+    let mut resid = Mat::zeros(xs.rows, xs.cols);
+    let mut slice = Mat::zeros(0, 0);
+    let mut staging = Vec::new();
+    let mut row = 0;
+    while row < xs.rows {
+        let take = (xs.rows - row).min(chunk);
+        // Reshape (never growing past the first chunk) and refill the
+        // slice buffer, then pad to (chunk × bucket_n) in the staging
+        // buffer; `Tensor::new` takes ownership, so the payload itself
+        // is the only per-chunk allocation left.
+        slice.reshape(take, xs.cols);
+        for r in 0..take {
+            slice.row_mut(r).copy_from_slice(xs.row(row + r));
+        }
+        router::pad_mat_f32_into(&slice, chunk, bucket_n, &mut staging);
+        let x_pad = Tensor::new(vec![chunk, bucket_n], std::mem::take(&mut staging));
+        let r = handle.exec_bound(session, vec![x_pad.clone()])?;
+        cost.add(&r);
+        // The device loop drops its tensor clone *before* sending the
+        // reply (see runtime/mod.rs), so by the time exec_bound returns
+        // this Arc is unique again and the staging buffer is recovered
+        // for the next chunk (falls back to a fresh Vec otherwise).
+        staging = std::sync::Arc::try_unwrap(x_pad.data).unwrap_or_default();
+        router::unpad_rows_f32_into(
+            r.outputs[0].data.as_slice(),
+            bucket_n,
+            take,
+            n_real,
+            &mut xhat,
+            row,
+        );
+        router::unpad_rows_f32_into(
+            r.outputs[1].data.as_slice(),
+            bucket_n,
+            take,
+            n_real,
+            &mut resid,
+            row,
+        );
+        row += take;
+    }
+    Ok((xhat, resid, cost))
+}
+
 impl DeviceMset {
     /// Create a session for `(n_real, m_real)` from a scaled memory matrix
     /// (`m_real × n_real`, e.g. selected by [`crate::mset::select_memory`]).
@@ -101,13 +160,20 @@ impl DeviceMset {
     /// Run the training graph; returns the real-block `G` and phase cost.
     pub fn train(&mut self) -> anyhow::Result<(Mat, PhaseCost)> {
         let mut cost = PhaseCost::default();
+        // Tensor buffers are Arc-shared, so these clones are O(1) — no
+        // re-copy of the padded D/mask/bw payloads per train() call.
         let r = self.handle.exec(
             &self.train_id(),
             vec![self.d_pad.clone(), self.mask.clone(), self.bw.clone()],
         )?;
         cost.add(&r);
         let g_pad = r.outputs.into_iter().next().expect("train emits G");
-        let g = router::unpad_mat_f32(&g_pad.data, self.bucket.m, self.m_real, self.m_real);
+        let g = router::unpad_mat_f32(
+            g_pad.data.as_slice(),
+            self.bucket.m,
+            self.m_real,
+            self.m_real,
+        );
         // Bind the surveillance prefix once: D, G, mask, bw stay marshaled
         // on the device thread for every subsequent chunk.
         if let Some(old) = self.surveil_session.take() {
@@ -135,42 +201,14 @@ impl DeviceMset {
         let session = self
             .surveil_session
             .ok_or_else(|| anyhow::anyhow!("call train() before surveil()"))?;
-        let mut cost = PhaseCost::default();
-        let mut xhat = Mat::zeros(xs.rows, xs.cols);
-        let mut resid = Mat::zeros(xs.rows, xs.cols);
-        let mut row = 0;
-        while row < xs.rows {
-            let take = (xs.rows - row).min(self.chunk);
-            // Slice rows [row, row+take) then pad to (chunk × bucket.n).
-            let mut slice = Mat::zeros(take, xs.cols);
-            for r in 0..take {
-                slice.row_mut(r).copy_from_slice(xs.row(row + r));
-            }
-            let x_pad = Tensor::new(
-                vec![self.chunk, self.bucket.n],
-                router::pad_mat_f32(&slice, self.chunk, self.bucket.n),
-            );
-            let r = self.handle.exec_bound(session, vec![x_pad])?;
-            cost.add(&r);
-            let xh = router::unpad_mat_f32(
-                &r.outputs[0].data,
-                self.bucket.n,
-                take,
-                self.n_real,
-            );
-            let rs = router::unpad_mat_f32(
-                &r.outputs[1].data,
-                self.bucket.n,
-                take,
-                self.n_real,
-            );
-            for i in 0..take {
-                xhat.row_mut(row + i).copy_from_slice(xh.row(i));
-                resid.row_mut(row + i).copy_from_slice(rs.row(i));
-            }
-            row += take;
-        }
-        Ok((xhat, resid, cost))
+        stream_surveil(
+            &self.handle,
+            session,
+            xs,
+            self.chunk,
+            self.bucket.n,
+            self.n_real,
+        )
     }
 }
 
@@ -226,40 +264,13 @@ impl DeviceAakr {
     /// Stream a scaled window through the AAKR graph.
     pub fn surveil(&self, xs: &Mat) -> anyhow::Result<(Mat, Mat, PhaseCost)> {
         anyhow::ensure!(xs.cols == self.n_real, "signal count mismatch");
-        let mut cost = PhaseCost::default();
-        let mut xhat = Mat::zeros(xs.rows, xs.cols);
-        let mut resid = Mat::zeros(xs.rows, xs.cols);
-        let mut row = 0;
-        while row < xs.rows {
-            let take = (xs.rows - row).min(self.chunk);
-            let mut slice = Mat::zeros(take, xs.cols);
-            for r in 0..take {
-                slice.row_mut(r).copy_from_slice(xs.row(row + r));
-            }
-            let x_pad = Tensor::new(
-                vec![self.chunk, self.bucket.n],
-                router::pad_mat_f32(&slice, self.chunk, self.bucket.n),
-            );
-            let r = self.handle.exec_bound(self.session, vec![x_pad])?;
-            cost.add(&r);
-            let xh = router::unpad_mat_f32(
-                &r.outputs[0].data,
-                self.bucket.n,
-                take,
-                self.n_real,
-            );
-            let rs = router::unpad_mat_f32(
-                &r.outputs[1].data,
-                self.bucket.n,
-                take,
-                self.n_real,
-            );
-            for i in 0..take {
-                xhat.row_mut(row + i).copy_from_slice(xh.row(i));
-                resid.row_mut(row + i).copy_from_slice(rs.row(i));
-            }
-            row += take;
-        }
-        Ok((xhat, resid, cost))
+        stream_surveil(
+            &self.handle,
+            self.session,
+            xs,
+            self.chunk,
+            self.bucket.n,
+            self.n_real,
+        )
     }
 }

@@ -30,8 +30,17 @@ pub fn pick_bucket(buckets: &[(usize, usize)], n_real: usize, m_real: usize) -> 
 
 /// Zero-pad a matrix (rows × cols) to (rows_to × cols_to), row-major f32.
 pub fn pad_mat_f32(x: &Mat, rows_to: usize, cols_to: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    pad_mat_f32_into(x, rows_to, cols_to, &mut out);
+    out
+}
+
+/// [`pad_mat_f32`] into a caller-owned buffer, so streaming loops reuse
+/// one staging allocation per session instead of one per chunk.
+pub fn pad_mat_f32_into(x: &Mat, rows_to: usize, cols_to: usize, out: &mut Vec<f32>) {
     assert!(x.rows <= rows_to && x.cols <= cols_to, "pad smaller than data");
-    let mut out = vec![0.0f32; rows_to * cols_to];
+    out.clear();
+    out.resize(rows_to * cols_to, 0.0);
     for r in 0..x.rows {
         let src = x.row(r);
         let dst = &mut out[r * cols_to..r * cols_to + x.cols];
@@ -39,19 +48,35 @@ pub fn pad_mat_f32(x: &Mat, rows_to: usize, cols_to: usize) -> Vec<f32> {
             *d = s as f32;
         }
     }
-    out
 }
 
 /// Extract the top-left (rows × cols) block from a padded row-major buffer.
 pub fn unpad_mat_f32(data: &[f32], padded_cols: usize, rows: usize, cols: usize) -> Mat {
-    assert!(data.len() >= rows * padded_cols);
     let mut out = Mat::zeros(rows, cols);
+    unpad_rows_f32_into(data, padded_cols, rows, cols, &mut out, 0);
+    out
+}
+
+/// Copy the top-left (rows × cols) block of a padded row-major buffer
+/// into `out` starting at row `row0` — lets the streaming surveillance
+/// loop land device chunks directly in the result matrix instead of
+/// materialising an intermediate per chunk.
+pub fn unpad_rows_f32_into(
+    data: &[f32],
+    padded_cols: usize,
+    rows: usize,
+    cols: usize,
+    out: &mut Mat,
+    row0: usize,
+) {
+    assert!(data.len() >= rows * padded_cols);
+    assert!(cols <= padded_cols && cols <= out.cols && row0 + rows <= out.rows);
     for r in 0..rows {
-        for c in 0..cols {
-            out[(r, c)] = data[r * padded_cols + c] as f64;
+        let src = &data[r * padded_cols..r * padded_cols + cols];
+        for (d, &s) in out.row_mut(row0 + r)[..cols].iter_mut().zip(src.iter()) {
+            *d = s as f64;
         }
     }
-    out
 }
 
 /// Memory-vector mask: 1.0 for the first `m_real` slots, 0.0 for padding.
@@ -127,6 +152,25 @@ mod tests {
         assert_eq!(padded[8 * 4 - 1], 0.0);
         let back = unpad_mat_f32(&padded, 4, 5, 3);
         assert!(x.max_abs_diff(&back) < 1e-6);
+    }
+
+    #[test]
+    fn into_variants_match_allocating() {
+        let mut rng = Rng::new(2);
+        let mut x = Mat::zeros(4, 3);
+        rng.fill_gauss(&mut x.data);
+        let mut buf = vec![7.0f32; 3]; // stale contents must be cleared
+        pad_mat_f32_into(&x, 6, 5, &mut buf);
+        assert_eq!(buf, pad_mat_f32(&x, 6, 5));
+        // unpad into an offset row window
+        let mut out = Mat::zeros(10, 3);
+        unpad_rows_f32_into(&buf, 5, 4, 3, &mut out, 2);
+        let whole = unpad_mat_f32(&buf, 5, 4, 3);
+        for r in 0..4 {
+            assert_eq!(out.row(r + 2), whole.row(r));
+        }
+        assert!(out.row(0).iter().all(|&v| v == 0.0));
+        assert!(out.row(9).iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -191,13 +191,16 @@ pub fn synthesize(cfg: &TpssConfig, seed: u64) -> Dataset {
     let phi = cfg.ar_coeff;
     let innov_sd = (1.0 - phi * phi).sqrt();
     let mut state = vec![0.0f64; n];
+    // innovation scratch allocated once and reused by every AR step —
+    // the loop below runs t + 64 times per synthesized trial
+    let mut z = vec![0.0f64; n];
     // burn-in so the chain forgets the zero start
     for _ in 0..64 {
-        step_ar(&mut state, phi, innov_sd, &chol, &mut rng);
+        step_ar(&mut state, phi, innov_sd, &chol, &mut rng, &mut z);
     }
     let mut sto = Mat::zeros(t, n);
     for i in 0..t {
-        step_ar(&mut state, phi, innov_sd, &chol, &mut rng);
+        step_ar(&mut state, phi, innov_sd, &chol, &mut rng, &mut z);
         for j in 0..n {
             sto[(i, j)] = shaper.apply(state[j]);
         }
@@ -218,16 +221,23 @@ pub fn synthesize(cfg: &TpssConfig, seed: u64) -> Dataset {
     }
 }
 
-fn step_ar(state: &mut [f64], phi: f64, innov_sd: f64, chol: &Mat, rng: &mut Rng) {
-    let n = state.len();
+/// One AR(1) step. `z` is caller-owned innovation scratch (same length as
+/// `state`), refilled here in draw order — reusing it keeps the
+/// synthesis loop allocation-free without changing a single RNG draw.
+fn step_ar(state: &mut [f64], phi: f64, innov_sd: f64, chol: &Mat, rng: &mut Rng, z: &mut [f64]) {
+    debug_assert_eq!(state.len(), z.len());
     // correlated innovations: e = L z
-    let z: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
-    for j in 0..n {
+    for zi in z.iter_mut() {
+        *zi = rng.gauss();
+    }
+    for (j, s) in state.iter_mut().enumerate() {
+        // lower-triangular row of the Cholesky factor, contiguous
+        let lrow = &chol.data[j * chol.cols..j * chol.cols + j + 1];
         let mut e = 0.0;
-        for k in 0..=j {
-            e += chol[(j, k)] * z[k];
+        for (&l, &zk) in lrow.iter().zip(z.iter()) {
+            e += l * zk;
         }
-        state[j] = phi * state[j] + innov_sd * e;
+        *s = phi * *s + innov_sd * e;
     }
 }
 
@@ -318,7 +328,7 @@ mod tests {
         let cfg = big_cfg();
         let ds = synthesize(&cfg, 7);
         for j in 0..cfg.n_signals {
-            let col = ds.data.col(j);
+            let col: Vec<f64> = ds.data.col(j).collect();
             let m = moments(&col);
             assert!((m.mean - cfg.level).abs() < 0.15, "mean={}", m.mean);
             assert!(
@@ -334,7 +344,7 @@ mod tests {
         let cfg = big_cfg();
         let ds = synthesize(&cfg, 11);
         for j in 0..cfg.n_signals {
-            let col = ds.data.col(j);
+            let col: Vec<f64> = ds.data.col(j).collect();
             let r1 = autocorr(&col, 1);
             // Fleishman shaping perturbs autocorrelation slightly.
             assert!(
@@ -353,7 +363,9 @@ mod tests {
         let mut cnt = 0;
         for a in 0..cfg.n_signals {
             for b in a + 1..cfg.n_signals {
-                sum += pearson(&ds.data.col(a), &ds.data.col(b));
+                let ca: Vec<f64> = ds.data.col(a).collect();
+                let cb: Vec<f64> = ds.data.col(b).collect();
+                sum += pearson(&ca, &cb);
                 cnt += 1;
             }
         }
@@ -379,7 +391,8 @@ mod tests {
         };
         let ds = synthesize(&cfg, 5);
         for j in 0..cfg.n_signals {
-            let m = moments(&ds.data.col(j));
+            let col: Vec<f64> = ds.data.col(j).collect();
+            let m = moments(&col);
             assert!((m.skewness - 0.7).abs() < 0.15, "skew={}", m.skewness);
             assert!((m.kurtosis - 4.5).abs() < 0.5, "kurt={}", m.kurtosis);
         }
@@ -398,7 +411,8 @@ mod tests {
                 ..TpssConfig::default()
             };
             let ds = synthesize(&cfg, 3);
-            autocorr(&ds.data.col(0), 1)
+            let col: Vec<f64> = ds.data.col(0).collect();
+            autocorr(&col, 1)
         };
         let thermal = mk(Archetype::Thermal);
         let electrical = mk(Archetype::Electrical);

@@ -1,0 +1,248 @@
+//! Property tests for the blocked `linalg::kernel` core: every `_into`
+//! kernel must match its naive single-accumulator reference within 1e-12
+//! across random shapes — including the zero-padded-signal case the
+//! bucket router relies on. (The kernels are designed to be *bit*-stable
+//! against the references — ascending-`k` accumulation, no FMA
+//! contraction — so 1e-12 is slack; several properties assert exact
+//! equality where the design guarantees it.)
+
+use containerstress::linalg::kernel::{
+    self, dist2_cross_into, matmul_into, matmul_nt_into, matmul_tn_into, syrk_into,
+};
+use containerstress::linalg::{Mat, Workspace};
+use containerstress::mset::{
+    sim_cross, sim_cross_ref, sim_cross_t_into, sim_matrix, sim_matrix_ref, Scaler,
+};
+use containerstress::util::prop::forall_res;
+use containerstress::util::rng::Rng;
+
+fn random_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    let mut m = Mat::zeros(rows, cols);
+    rng.fill_gauss(&mut m.data);
+    m
+}
+
+/// Append `pad` zero columns (the bucket router's signal padding).
+fn pad_cols(m: &Mat, pad: usize) -> Mat {
+    let mut out = Mat::zeros(m.rows, m.cols + pad);
+    for r in 0..m.rows {
+        out.row_mut(r)[..m.cols].copy_from_slice(m.row(r));
+    }
+    out
+}
+
+fn close(a: &Mat, b: &Mat, tol: f64, what: &str) -> Result<(), String> {
+    if (a.rows, a.cols) != (b.rows, b.cols) {
+        return Err(format!(
+            "{what}: shape ({},{}) vs ({},{})",
+            a.rows, a.cols, b.rows, b.cols
+        ));
+    }
+    let d = a.max_abs_diff(b);
+    if d > tol {
+        return Err(format!("{what}: max abs diff {d} > {tol}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_matmul_matches_naive_reference() {
+    forall_res(
+        "blocked matmul == naive matmul",
+        200,
+        |rng| {
+            let m = rng.range_usize(1, 18);
+            let k = rng.range_usize(1, 18);
+            let n = rng.range_usize(1, 18);
+            let a = random_mat(rng, m, k);
+            let b = random_mat(rng, k, n);
+            (a, b)
+        },
+        |(a, b)| {
+            let mut ws = Workspace::new();
+            let mut out = Mat::zeros(0, 0);
+            matmul_into(&mut out, a, b, &mut ws);
+            close(&out, &kernel::reference::matmul(a, b), 1e-12, "matmul")?;
+            // Mat::matmul routes through the same kernel
+            close(&a.matmul(b), &out, 0.0, "Mat::matmul")
+        },
+    );
+}
+
+#[test]
+fn prop_nt_tn_syrk_match_references() {
+    forall_res(
+        "NT/TN/syrk variants == naive references",
+        200,
+        |rng| {
+            let m = rng.range_usize(1, 16);
+            let k = rng.range_usize(1, 16);
+            let n = rng.range_usize(1, 16);
+            (random_mat(rng, m, k), random_mat(rng, n, k), random_mat(rng, m, n))
+        },
+        |(a, b, c)| {
+            let mut ws = Workspace::new();
+            let mut out = Mat::zeros(0, 0);
+            matmul_nt_into(&mut out, a, b, &mut ws);
+            close(&out, &kernel::reference::matmul_nt(a, b), 1e-12, "NT")?;
+
+            // TN: aᵀ·c with a: m×k ⇒ use c: m×n ⇒ k×n result
+            matmul_tn_into(&mut out, a, c, &mut ws);
+            close(
+                &out,
+                &kernel::reference::matmul(&a.transpose(), c),
+                1e-12,
+                "TN",
+            )?;
+
+            syrk_into(&mut out, a);
+            close(&out, &kernel::reference::syrk(a), 1e-12, "syrk")?;
+            for i in 0..out.rows {
+                for j in 0..out.cols {
+                    if out[(i, j)].to_bits() != out[(j, i)].to_bits() {
+                        return Err(format!("syrk not exactly symmetric at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sim_kernels_match_reference_and_padding() {
+    forall_res(
+        "blocked similarity == per-pair reference (padded and not)",
+        150,
+        |rng| {
+            // n ≥ 4 keeps random gaussian rows well-separated, so the
+            // Gram expansion's cancellation stays far below 1e-12.
+            let m = rng.range_usize(1, 20);
+            let b = rng.range_usize(1, 20);
+            let n = rng.range_usize(4, 16);
+            let pad = rng.range_usize(0, 6);
+            (random_mat(rng, m, n), random_mat(rng, b, n), pad)
+        },
+        |(d, x, pad)| {
+            let kr = sim_cross_ref(d, x);
+            close(&sim_cross(d, x), &kr, 1e-12, "sim_cross")?;
+            let sr = sim_matrix_ref(d);
+            close(&sim_matrix(d), &sr, 1e-12, "sim_matrix")?;
+
+            // zero-padded signal dimension with n_real fixed: the result
+            // must be bit-identical to the unpadded blocked kernel (the
+            // bucket-router invariant).
+            let dp = pad_cols(d, *pad);
+            let xp = pad_cols(x, *pad);
+            let unpadded = sim_cross(d, x);
+            let mut padded = Mat::zeros(0, 0);
+            Workspace::with(|ws| {
+                containerstress::mset::sim_cross_into(&mut padded, &dp, &xp, d.cols, ws)
+            });
+            close(&padded, &unpadded, 0.0, "padded sim_cross")?;
+            close(&padded, &kr, 1e-12, "padded sim_cross vs reference")
+        },
+    );
+}
+
+#[test]
+fn prop_sim_cross_self_equals_sim_matrix_bitwise() {
+    forall_res(
+        "sim_cross(d, d) == sim_matrix(d), bit for bit",
+        100,
+        |rng| {
+            let m = rng.range_usize(1, 24);
+            let n = rng.range_usize(1, 12);
+            random_mat(rng, m, n)
+        },
+        |d| {
+            let k = sim_cross(d, d);
+            let s = sim_matrix(d);
+            for i in 0..d.rows {
+                for j in 0..d.rows {
+                    if k[(i, j)].to_bits() != s[(i, j)].to_bits() {
+                        return Err(format!(
+                            "mismatch at ({i},{j}): {} vs {}",
+                            k[(i, j)],
+                            s[(i, j)]
+                        ));
+                    }
+                }
+                if s[(i, i)] != 1.0 {
+                    return Err(format!("diag ({i}) = {} != 1", s[(i, i)]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dist2_padding_bit_identical() {
+    forall_res(
+        "squared distances ignore zero-padded columns exactly",
+        100,
+        |rng| {
+            let m = rng.range_usize(1, 12);
+            let b = rng.range_usize(1, 12);
+            let n = rng.range_usize(1, 10);
+            let pad = rng.range_usize(1, 8);
+            (random_mat(rng, m, n), random_mat(rng, b, n), pad)
+        },
+        |(a, x, pad)| {
+            let mut ws = Workspace::new();
+            let mut plain = Mat::zeros(0, 0);
+            let mut padded = Mat::zeros(0, 0);
+            dist2_cross_into(&mut plain, a, x, &mut ws);
+            dist2_cross_into(&mut padded, &pad_cols(a, *pad), &pad_cols(x, *pad), &mut ws);
+            close(&padded, &plain, 0.0, "dist2 padding")
+        },
+    );
+}
+
+#[test]
+fn prop_scaler_transform_into_matches_transform() {
+    forall_res(
+        "transform_into == transform",
+        100,
+        |rng| {
+            let rows = rng.range_usize(2, 40);
+            let cols = rng.range_usize(1, 8);
+            random_mat(rng, rows, cols)
+        },
+        |x| {
+            let sc = Scaler::fit(x);
+            let a = sc.transform(x);
+            let mut b = Mat::zeros(3, 3); // stale shape must be overwritten
+            sc.transform_into(x, &mut b);
+            close(&a, &b, 0.0, "transform")
+        },
+    );
+}
+
+#[test]
+fn prop_transposed_sim_cross_matches() {
+    forall_res(
+        "sim_cross_t == sim_crossᵀ bitwise",
+        100,
+        |rng| {
+            let m = rng.range_usize(1, 16);
+            let b = rng.range_usize(1, 16);
+            let n = rng.range_usize(1, 10);
+            (random_mat(rng, m, n), random_mat(rng, b, n))
+        },
+        |(d, x)| {
+            let k = sim_cross(d, x);
+            let mut kt = Mat::zeros(0, 0);
+            Workspace::with(|ws| sim_cross_t_into(&mut kt, x, d, d.cols, ws));
+            for i in 0..d.rows {
+                for j in 0..x.rows {
+                    if k[(i, j)].to_bits() != kt[(j, i)].to_bits() {
+                        return Err(format!("mismatch at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
