@@ -1,0 +1,149 @@
+//! **BENCH-obs**: flight-recorder overhead on the native trial hot path.
+//!
+//! The observability layer must be effectively free: every hot-path
+//! instrumentation point is a thread-local read plus a branch when no
+//! recorder is installed, and a clock read plus a ring push when one is.
+//! Two gates, enforced with asserts so CI catches regressions:
+//!
+//! 1. **End-to-end overhead** — an instrumented native sweep (recorder
+//!    installed on the driving thread, spans recorded per trial phase)
+//!    is ≤ 5% slower than a telemetry-disabled twin of the same sweep.
+//! 2. **Non-vacuity** — the instrumented twin really records spans (a
+//!    timeline with train/surveil phases), so gate 1 measures live
+//!    instrumentation, not a dead branch.
+//!
+//! Micro costs (span push, disabled-path probe) are reported unasserted.
+//!
+//! Output: `results/BENCH_obs.json` + `results/obs_overhead.csv`.
+//! `CS_BENCH_QUICK=1` shortens the measuring windows but keeps every
+//! asserted point.
+
+use containerstress::bench::{black_box, figs, table, write_csv, Bencher, Measurement};
+use containerstress::coordinator::{run_sweep, Backend, SweepSpec};
+use containerstress::obs::{self, FlightRecorder};
+use containerstress::report;
+use containerstress::util::json::Json;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One surveillance-heavy cell, a few trials: seconds-scale per sweep in
+/// full mode, tens of milliseconds in quick mode — long enough that the
+/// per-trial span pushes (microseconds) are measurable only if they are
+/// actually expensive.
+fn hotpath_spec(quick: bool) -> SweepSpec {
+    SweepSpec {
+        signals: vec![8],
+        memvecs: vec![32],
+        obs: vec![if quick { 1024 } else { 4096 }],
+        trials: 2,
+        seed: 11,
+        workers: 2,
+        ..SweepSpec::default()
+    }
+}
+
+fn main() {
+    containerstress::util::logger::init();
+    let quick = figs::quick();
+    let b = if quick {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+
+    const MAX_OVERHEAD_RATIO: f64 = 1.05; // instrumented / disabled medians
+
+    let spec = hotpath_spec(quick);
+
+    // Non-vacuity first: one instrumented sweep must produce a real
+    // timeline (per-trial train/surveil spans) through the same plumbing
+    // the service uses — otherwise the overhead gate measures nothing.
+    let probe = Arc::new(FlightRecorder::new("bench-obs"));
+    {
+        let _g = obs::install(Some(Arc::clone(&probe)));
+        run_sweep(&spec, Backend::Native).expect("probe sweep");
+    }
+    let spans = probe.snapshot();
+    assert!(
+        spans.iter().any(|s| s.phase == "train") && spans.iter().any(|s| s.phase == "surveil"),
+        "instrumented sweep recorded no train/surveil spans — overhead gate would be vacuous"
+    );
+
+    // --- the twin sweeps --------------------------------------------------
+    let disabled = b.run("sweep_telemetry_disabled", || {
+        // No recorder on this thread: every instrumentation point is the
+        // thread-local read + branch that plain CLI sweeps pay.
+        black_box(run_sweep(&spec, Backend::Native).expect("sweep"))
+    });
+    let instrumented = b.run("sweep_telemetry_instrumented", || {
+        let rec = Arc::new(FlightRecorder::new("bench-obs"));
+        let _g = obs::install(Some(rec));
+        black_box(run_sweep(&spec, Backend::Native).expect("sweep"))
+    });
+    let overhead_ratio = instrumented.stats.median / disabled.stats.median;
+    println!(
+        "native sweep: disabled {:.4}s, instrumented {:.4}s → ratio {overhead_ratio:.4} \
+         (ceiling {MAX_OVERHEAD_RATIO})",
+        disabled.stats.median, instrumented.stats.median
+    );
+    assert!(
+        overhead_ratio <= MAX_OVERHEAD_RATIO,
+        "flight-recorder instrumentation costs {:.1}% on the native trial hot path \
+         (budget 5%)",
+        (overhead_ratio - 1.0) * 100.0
+    );
+
+    // --- micro costs (reported, not asserted) -----------------------------
+    let rec = FlightRecorder::new("micro");
+    let t0 = Instant::now();
+    let push = b.run_with_units("span_push", 1.0, || {
+        rec.push(
+            "trial",
+            "train",
+            t0,
+            t0 + Duration::from_micros(5),
+            Duration::ZERO,
+            String::new(),
+        )
+    });
+    let probe_off = b.run_with_units("current_when_disabled", 1.0, || black_box(obs::current()));
+
+    // --- emit artifacts ---------------------------------------------------
+    let json = Json::obj(vec![
+        ("bench", Json::Str("obs_overhead".into())),
+        ("quick", Json::Bool(quick)),
+        (
+            "sweep",
+            Json::obj(vec![
+                ("n", Json::Num(spec.signals[0] as f64)),
+                ("m", Json::Num(spec.memvecs[0] as f64)),
+                ("obs", Json::Num(spec.obs[0] as f64)),
+                ("trials", Json::Num(spec.trials as f64)),
+                ("disabled_s", Json::Num(disabled.stats.median)),
+                ("instrumented_s", Json::Num(instrumented.stats.median)),
+                ("overhead_ratio", Json::Num(overhead_ratio)),
+            ]),
+        ),
+        (
+            "micro",
+            Json::obj(vec![
+                ("span_push_s", Json::Num(push.stats.median)),
+                ("current_probe_s", Json::Num(probe_off.stats.median)),
+                ("probe_spans_recorded", Json::Num(spans.len() as f64)),
+            ]),
+        ),
+        (
+            "asserted",
+            Json::obj(vec![
+                ("max_overhead_ratio", Json::Num(MAX_OVERHEAD_RATIO)),
+                ("overhead_ratio", Json::Num(overhead_ratio)),
+            ]),
+        ),
+    ]);
+    let ms: Vec<Measurement> = vec![disabled, instrumented, push, probe_off];
+    let dir = std::path::Path::new("results");
+    report::write(dir, "BENCH_obs.json", &json.to_pretty()).unwrap();
+    println!("{}", table(&ms));
+    write_csv("results/obs_overhead.csv", &ms).unwrap();
+    println!("obs_overhead done → results/BENCH_obs.json, results/obs_overhead.csv");
+}

@@ -48,6 +48,9 @@ pub struct ServiceConfig {
     /// strict job-arrival FIFO, the old single-leader discipline, kept for
     /// A/B comparisons.
     pub fair_share: bool,
+    /// Emit one HTTP access-log line per request (method, path, status,
+    /// latency, request ID) on the `http.access` log target.
+    pub access_log: bool,
 }
 
 impl Default for ServiceConfig {
@@ -59,6 +62,7 @@ impl Default for ServiceConfig {
             cache_dir: Some(PathBuf::from("results/sweep_cache")),
             executor_workers: 0,
             fair_share: true,
+            access_log: false,
         }
     }
 }
@@ -220,6 +224,11 @@ impl Config {
                     anyhow::anyhow!("service.fair_share must be a boolean")
                 })?;
             }
+            if let Some(v) = s.get("access_log") {
+                self.service.access_log = v.as_bool().ok_or_else(|| {
+                    anyhow::anyhow!("service.access_log must be a boolean")
+                })?;
+            }
             match s.get("cache_dir") {
                 None => {}
                 Some(Json::Null) => self.service.cache_dir = None,
@@ -277,6 +286,13 @@ impl Config {
                 "true" | "yes" | "on" => true,
                 "false" | "no" | "off" => false,
                 _ => anyhow::bail!("--fair-share expects true|false, got '{v}'"),
+            };
+        }
+        if let Some(v) = args.get("access-log") {
+            self.service.access_log = match v {
+                "true" | "yes" | "on" => true,
+                "false" | "no" | "off" => false,
+                _ => anyhow::bail!("--access-log expects true|false, got '{v}'"),
             };
         }
         if let Some(v) = args.get("cache-dir") {
@@ -402,6 +418,7 @@ impl Config {
                         Json::Num(self.service.executor_workers as f64),
                     ),
                     ("fair_share", Json::Bool(self.service.fair_share)),
+                    ("access_log", Json::Bool(self.service.access_log)),
                 ]),
             ),
         ];
@@ -561,12 +578,14 @@ mod tests {
         let mut cfg = Config::default();
         assert_eq!(cfg.service.executor_workers, 0);
         assert!(cfg.service.fair_share);
+        assert!(!cfg.service.access_log);
         cfg.apply_args(&args(
-            "serve --executor-workers 6 --fair-share false --backend native",
+            "serve --executor-workers 6 --fair-share false --access-log on --backend native",
         ))
         .unwrap();
         assert_eq!(cfg.service.executor_workers, 6);
         assert!(!cfg.service.fair_share);
+        assert!(cfg.service.access_log);
 
         // file roundtrip keeps both scheduler knobs
         let path = std::env::temp_dir().join("cs_config_sched.json");
@@ -574,10 +593,13 @@ mod tests {
         let cfg2 = Config::from_file(path.to_str().unwrap()).unwrap();
         assert_eq!(cfg2.service.executor_workers, 6);
         assert!(!cfg2.service.fair_share);
+        assert!(cfg2.service.access_log);
 
         // malformed knobs are errors, not silent defaults
         let mut bad = Config::default();
         assert!(bad.apply_args(&args("serve --fair-share maybe")).is_err());
+        let mut bad = Config::default();
+        assert!(bad.apply_args(&args("serve --access-log maybe")).is_err());
         std::fs::write(
             &path,
             r#"{"backend": "native", "service": {"fair_share": "yes"}}"#,

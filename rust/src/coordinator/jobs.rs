@@ -18,14 +18,18 @@ use super::sweep::{
     run_sweep_executor, Backend, Cancelled, CellStore, ProgressSnapshot, SweepProgress,
     SweepResult, SweepSpec,
 };
+use crate::metrics::Registry;
+use crate::obs::{self, FlightRecorder};
 use crate::scenario::fleet::{
     run_scenario_executor, ScenarioOutcome, ScenarioProgress, ScenarioSnapshot,
 };
 use crate::scenario::oracle::{MeasureCtx, SurfaceOracle};
 use crate::scenario::spec::ScenarioSpec;
-use crate::util::threadpool::{CancelToken, JobTicket, TrialExecutor};
+use crate::util::json::Json;
+use crate::util::threadpool::{CancelToken, ExecutorStats, JobTicket, TrialExecutor};
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 /// Job identifier.
 pub type JobId = u64;
@@ -76,6 +80,8 @@ struct JobEntry {
     /// Present for scenario jobs only (also how they are told apart).
     scenario: Option<Arc<ScenarioProgress>>,
     cancel: CancelToken,
+    /// Per-job span ring buffer, served by `GET /v1/jobs/{id}/trace`.
+    recorder: Arc<FlightRecorder>,
 }
 
 struct Shared {
@@ -159,9 +165,21 @@ impl ScopingService {
     /// weight-2 job's trials are dispatched twice as often as a weight-1
     /// job's.
     pub fn submit_weighted(&self, spec: SweepSpec, weight: f64) -> anyhow::Result<JobId> {
+        self.submit_traced(spec, weight, None)
+    }
+
+    /// [`ScopingService::submit_weighted`] with an explicit trace ID
+    /// (usually the HTTP request's `x-request-id`) stamped on the job's
+    /// flight recorder so `/trace` timelines correlate with client logs.
+    pub fn submit_traced(
+        &self,
+        spec: SweepSpec,
+        weight: f64,
+        trace_id: Option<String>,
+    ) -> anyhow::Result<JobId> {
         let backend = self.backend.clone();
         let cache = self.cache.clone();
-        self.spawn_driver(weight, None, move |ticket, progress| {
+        self.spawn_driver(weight, None, trace_id, move |ticket, progress| {
             let result =
                 run_sweep_executor(&spec, backend, cache.as_deref(), &ticket, &progress);
             match result {
@@ -199,6 +217,19 @@ impl ScopingService {
         sweep: Option<SweepSpec>,
         weight: f64,
     ) -> anyhow::Result<JobId> {
+        self.submit_scenario_traced(scenario, sweep, weight, None)
+    }
+
+    /// [`ScopingService::submit_scenario_weighted`] with an explicit trace
+    /// ID stamped on the job's flight recorder (see
+    /// [`ScopingService::submit_traced`]).
+    pub fn submit_scenario_traced(
+        &self,
+        scenario: ScenarioSpec,
+        sweep: Option<SweepSpec>,
+        weight: f64,
+        trace_id: Option<String>,
+    ) -> anyhow::Result<JobId> {
         scenario.validate()?;
         if let Some(s) = &sweep {
             s.validate()?;
@@ -211,7 +242,7 @@ impl ScopingService {
         let cache = self.cache.clone();
         let scen_progress = Arc::new(ScenarioProgress::default());
         let scen = Arc::clone(&scen_progress);
-        self.spawn_driver(weight, Some(scen_progress), move |ticket, sweep_progress| {
+        self.spawn_driver(weight, Some(scen_progress), trace_id, move |ticket, sweep_progress| {
             let run = || -> anyhow::Result<ScenarioOutcome> {
                 let oracle = match (&scenario.workload, &sweep) {
                     (Some(_), Some(spec)) => {
@@ -250,6 +281,7 @@ impl ScopingService {
         &self,
         weight: f64,
         scenario: Option<Arc<ScenarioProgress>>,
+        trace_id: Option<String>,
         work: F,
     ) -> anyhow::Result<JobId>
     where
@@ -259,6 +291,10 @@ impl ScopingService {
         // cannot jointly overshoot the cap (check-then-act would race).
         let ticket = self.exec.register(weight);
         let progress = Arc::new(SweepProgress::default());
+        let recorder = Arc::new(FlightRecorder::new(
+            trace_id.unwrap_or_else(obs::mint_trace_id),
+        ));
+        let submitted = Instant::now();
         let id = {
             let mut jobs = self.shared.jobs.lock().unwrap();
             let in_flight = jobs.values().filter(|e| e.status.in_flight()).count();
@@ -280,6 +316,7 @@ impl ScopingService {
                     progress: Arc::clone(&progress),
                     scenario,
                     cancel: ticket.cancel_token(),
+                    recorder: Arc::clone(&recorder),
                 },
             );
             id
@@ -288,13 +325,23 @@ impl ScopingService {
         let driver = std::thread::Builder::new()
             .name(format!("scope-job-{id}"))
             .spawn(move || {
+                let started = Instant::now();
+                let queue_wait = started.saturating_duration_since(submitted);
                 {
                     let mut jobs = shared.jobs.lock().unwrap();
                     if let Some(e) = jobs.get_mut(&id) {
                         e.status = JobStatus::Running;
                     }
                 }
+                // Install the recorder on the driver thread so planner
+                // rounds (and anything else on this thread) see it via
+                // `obs::current()`; dispatch points clone it into executor
+                // task closures themselves.
+                let _obs_guard = obs::install(Some(Arc::clone(&recorder)));
                 let status = work(ticket, progress);
+                let ended = Instant::now();
+                recorder.push("job", "run", started, ended, queue_wait, format!("job={id}"));
+                Registry::global().time("service.job_seconds", ended - started);
                 let mut jobs = shared.jobs.lock().unwrap();
                 if let Some(e) = jobs.get_mut(&id) {
                     e.status = status;
@@ -419,6 +466,41 @@ impl ScopingService {
             .and_then(|e| e.scenario.as_ref().map(|p| p.snapshot()))
     }
 
+    /// Ordered span timeline of a job's flight recorder (`None` for
+    /// unknown ids). Available from submission until eviction — completed
+    /// jobs keep their timeline until they age out of
+    /// [`COMPLETED_RETAIN`].
+    pub fn trace(&self, id: JobId) -> Option<Json> {
+        self.shared
+            .jobs
+            .lock()
+            .unwrap()
+            .get(&id)
+            .map(|e| e.recorder.to_json())
+    }
+
+    /// In-flight jobs split by class: `(sweep, scenario)`. Feeds the
+    /// `service.jobs.in_flight.*` gauges at metrics-scrape time.
+    pub fn in_flight_by_class(&self) -> (usize, usize) {
+        let jobs = self.shared.jobs.lock().unwrap();
+        let mut sweeps = 0;
+        let mut scenarios = 0;
+        for e in jobs.values().filter(|e| e.status.in_flight()) {
+            if e.scenario.is_some() {
+                scenarios += 1;
+            } else {
+                sweeps += 1;
+            }
+        }
+        (sweeps, scenarios)
+    }
+
+    /// Point-in-time snapshot of the shared trial executor (queue depth,
+    /// busy workers, registered jobs). Feeds the `executor.*` gauges.
+    pub fn executor_stats(&self) -> ExecutorStats {
+        self.exec.stats()
+    }
+
     /// Block until a sweep job completes; errors for failed, cancelled,
     /// unknown, or scenario jobs.
     pub fn wait(&self, id: JobId) -> anyhow::Result<Arc<SweepResult>> {
@@ -511,6 +593,50 @@ mod tests {
         let id = svc.submit(tiny_spec()).unwrap();
         let res = svc.wait(id).unwrap();
         assert_eq!(res.cells.len(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn traced_job_records_ordered_spans_under_callers_id() {
+        let svc = ScopingService::start(Backend::Native, 8);
+        let id = svc
+            .submit_traced(tiny_spec(), 1.0, Some("req-abc123".into()))
+            .unwrap();
+        svc.wait(id).unwrap();
+        let trace = svc.trace(id).expect("trace available after completion");
+        assert_eq!(
+            trace.get("trace_id").and_then(Json::as_str),
+            Some("req-abc123")
+        );
+        let spans = trace.get("spans").and_then(Json::as_arr).unwrap();
+        assert!(!spans.is_empty(), "completed job must have spans");
+        let starts: Vec<f64> = spans
+            .iter()
+            .map(|s| s.get("start_us").and_then(Json::as_f64).unwrap())
+            .collect();
+        assert!(starts.windows(2).all(|w| w[0] <= w[1]), "timeline ordered");
+        // per-trial phases and the job envelope are both present
+        let phases: Vec<&str> = spans
+            .iter()
+            .map(|s| s.get("phase").and_then(Json::as_str).unwrap())
+            .collect();
+        assert!(phases.contains(&"train"), "{phases:?}");
+        assert!(phases.contains(&"surveil"), "{phases:?}");
+        assert!(phases.contains(&"run"), "{phases:?}");
+        assert!(svc.trace(999).is_none());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn in_flight_by_class_splits_sweeps_and_scenarios() {
+        let svc = ScopingService::start(Backend::Native, 8);
+        assert_eq!(svc.in_flight_by_class(), (0, 0));
+        let stats = svc.executor_stats();
+        assert!(stats.workers >= 1);
+        assert_eq!(stats.running, 0);
+        let id = svc.submit(tiny_spec()).unwrap();
+        svc.wait(id).unwrap();
+        assert_eq!(svc.in_flight_by_class(), (0, 0));
         svc.shutdown();
     }
 

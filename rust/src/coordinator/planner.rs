@@ -45,7 +45,7 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Two-sided normal multiplier for the ~95% confidence interval behind the
 /// planner's convergence test.
@@ -361,13 +361,29 @@ pub(crate) fn run_adaptive(
     let mut dispatches = 0usize;
     let mut starved_rounds = 0usize;
 
+    // The job driver thread runs this loop, so the job's flight recorder
+    // (if any) is in the thread-local; planner phases record driver-side
+    // spans while the per-trial spans come from the executor tasks.
+    let recorder = crate::obs::current();
+
     // Pilot: bring every cell up to `pilot` trials (cache counts for free).
+    let pilot_t0 = Instant::now();
     for (i, s) in states.iter_mut().enumerate() {
         if s.trials() < pilot {
             pilot_gap += 1;
             outstanding +=
                 dispatch_trials(s, i, pilot, spec, &backend, ticket, &tx, progress, &cancel);
         }
+    }
+    if let Some(rec) = &recorder {
+        rec.push(
+            "planner",
+            "pilot",
+            pilot_t0,
+            Instant::now(),
+            Duration::ZERO,
+            format!("cells={} scheduled={pilot_gap} outstanding={outstanding}", states.len()),
+        );
     }
     log::info!(
         "planner pilot: {} cells ({} scheduled up to {pilot} trials, {} cached trials), \
@@ -402,7 +418,18 @@ pub(crate) fn run_adaptive(
             // The whole grid has pilot data: fit the surfaces once, accept
             // predictable cells, then release the parked cells to the heap.
             prune_done = true;
+            let prune_t0 = Instant::now();
             let pruned = prune_by_surface(&mut states, target);
+            if let Some(rec) = &recorder {
+                rec.push(
+                    "planner",
+                    "prune",
+                    prune_t0,
+                    Instant::now(),
+                    Duration::ZERO,
+                    format!("pruned={pruned} parked={}", parked.len()),
+                );
+            }
             if pruned > 0 {
                 log::info!("planner: {pruned} cells accepted via surface interpolation");
             }
@@ -419,6 +446,8 @@ pub(crate) fn run_adaptive(
         }
         // Top-ups: widest relative CI first, while the window has room.
         if prune_done {
+            let round_t0 = Instant::now();
+            let dispatches_before = dispatches;
             while outstanding < window {
                 let Some((_, Reverse(i))) = heap.pop() else { break };
                 let s = &mut states[i];
@@ -436,6 +465,21 @@ pub(crate) fn run_adaptive(
                 outstanding +=
                     dispatch_trials(s, i, goal, spec, &backend, ticket, &tx, progress, &cancel);
                 dispatches += 1;
+            }
+            if dispatches > dispatches_before {
+                if let Some(rec) = &recorder {
+                    rec.push(
+                        "planner",
+                        "round",
+                        round_t0,
+                        Instant::now(),
+                        Duration::ZERO,
+                        format!(
+                            "dispatches={} outstanding={outstanding}",
+                            dispatches - dispatches_before
+                        ),
+                    );
+                }
             }
         }
         if outstanding == 0 && heap.is_empty() && parked.is_empty() && pilot_gap == 0 {

@@ -48,7 +48,7 @@ use crate::util::Summary;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Sentinel error the sweep engine returns when its job's cancellation
 /// token fires mid-run. Callers downcast (`err.is::<Cancelled>()`) to
@@ -551,10 +551,19 @@ pub(crate) fn submit_trial(
     let model = spec.model.clone();
     let progress = Arc::clone(progress);
     let cancel = cancel.clone();
+    // Span plumbing: the submitting thread (the job driver) carries the
+    // job's flight recorder in its thread-local; move the Arc into the
+    // closure so spans recorded on whichever executor worker runs the
+    // trial still land in the right job's ring. `None` (plain CLI sweeps,
+    // benches) keeps the hot path span-free.
+    let recorder = crate::obs::current();
+    let enqueued = Instant::now();
     ticket.submit(move || {
         if cancel.is_cancelled() {
             return; // dequeued just before the reclaim swept it
         }
+        let started = Instant::now();
+        let queue_wait = started.saturating_duration_since(enqueued);
         let r = run_trial(&backend, &model, key, seed);
         // The native numeric pipeline runs on this worker's thread-local
         // kernel workspace (zero steady-state allocations); keep the
@@ -562,7 +571,28 @@ pub(crate) fn submit_trial(
         // leave pinned per worker.
         crate::linalg::workspace::trim_thread(crate::linalg::workspace::DEFAULT_RETAIN_ELEMS);
         Registry::global().inc("sweep.trials");
+        Registry::global().time("sweep.trial_seconds", started.elapsed());
+        Registry::global().time("executor.queue_wait_seconds", queue_wait);
         progress.trials_done.fetch_add(1, Ordering::SeqCst);
+        if let Some(rec) = &recorder {
+            let ended = Instant::now();
+            let meta = format!("cell={}/{}/{} trial={t}", key.n, key.m, key.obs);
+            match &r {
+                Ok(cost) => {
+                    // Split the run window at the measured train/surveil
+                    // boundary: queue wait is charged to the train span
+                    // (the task's wait), the surveil span follows on.
+                    let split = started
+                        + Duration::from_secs_f64(cost.train_s.clamp(0.0, 1e9));
+                    let split = split.min(ended);
+                    rec.push("trial", "train", started, split, queue_wait, meta.clone());
+                    rec.push("trial", "surveil", split, ended, Duration::ZERO, meta);
+                }
+                Err(_) => {
+                    rec.push("trial", "error", started, ended, queue_wait, meta);
+                }
+            }
+        }
         let _ = tx.send((slot, t, r));
     });
 }

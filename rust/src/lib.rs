@@ -69,6 +69,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod models;
 pub mod mset;
+pub mod obs;
 pub mod recommend;
 pub mod report;
 pub mod runtime;

@@ -111,10 +111,12 @@ fn print_help() {
          serve flags:  --host H --port P --queue-cap N --cache-dir DIR|none\n\
            --executor-workers N  shared trial-executor threads (0 = auto)\n\
            --fair-share B        fair job interleaving on|off (default on)\n\
+           --access-log B        per-request HTTP access log (default off)\n\
          \n\
          serve API:    POST /v1/scope  GET /v1/jobs/ID  DELETE /v1/jobs/ID\n\
+                       GET /v1/jobs/ID/trace  GET /v1/scenarios/ID/trace\n\
                        GET /v1/recommendations/ID  GET /v1/shapes  GET /healthz\n\
-                       GET /metrics[?format=text]"
+                       GET /metrics[?format=json|text|prometheus]"
     );
 }
 
@@ -256,14 +258,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     println!("  POST   /v1/scope              submit a scoping job");
     println!("  POST   /v1/scenarios          submit a fleet what-if scenario");
     println!("  GET    /v1/jobs/ID            job status + live progress");
+    println!("  GET    /v1/jobs/ID/trace      span timeline (flight recorder)");
     println!("  GET    /v1/scenarios/ID       scenario status + replay progress");
+    println!("  GET    /v1/scenarios/ID/trace scenario span timeline");
     println!("  DELETE /v1/jobs/ID | /v1/scenarios/ID   cancel a job");
     println!("  GET    /v1/recommendations/ID shape recommendation");
-    println!("  GET    /v1/shapes | /healthz | /metrics[?format=text]");
+    println!("  GET    /v1/shapes | /healthz | /metrics[?format=json|text|prometheus]");
     println!(
-        "scheduler: {} executor workers, fair_share={}",
+        "scheduler: {} executor workers, fair_share={}, access_log={}",
         server.state().executor_workers(),
-        server.state().fair_share()
+        server.state().fair_share(),
+        cfg.service.access_log
     );
     match &cfg.service.cache_dir {
         Some(d) => println!(

@@ -1,0 +1,305 @@
+//! Log-bucketed bounded histogram (HDR-style).
+//!
+//! Fixed memory regardless of how many observations are recorded: values
+//! land in geometrically spaced buckets (8 per octave) spanning
+//! [`Histogram::MIN_TRACKED`] .. [`Histogram::MAX_TRACKED`], with one
+//! underflow and one overflow bucket catching everything outside. Count,
+//! sum, sum-of-squares, min and max are tracked exactly, so `mean`/`std`
+//! are exact while quantiles are approximate: a bucket spans a 2^(1/8)
+//! ratio, its geometric midpoint is within 2^(1/16) − 1 ≈ 4.4% of any
+//! value inside it, so reported quantiles carry **≤ 5% relative error**
+//! for in-range values (exact `min`/`max` clamp the tails).
+//!
+//! Histograms are mergeable (same fixed layout everywhere), which is what
+//! lets per-shard registries or checkpointed snapshots be combined without
+//! replaying raw samples.
+
+use crate::util::Summary;
+
+/// Sub-buckets per power of two (bucket width ratio = 2^(1/8) ≈ 1.09).
+const SUB_PER_OCTAVE: usize = 8;
+/// Octaves covered between the smallest and largest tracked value.
+const OCTAVES: usize = 60;
+/// Log-spaced buckets, excluding the underflow/overflow catch-alls.
+const LOG_BUCKETS: usize = SUB_PER_OCTAVE * OCTAVES;
+/// Total bucket slots: underflow + log region + overflow.
+const TOTAL_BUCKETS: usize = LOG_BUCKETS + 2;
+
+/// Bounded log-bucketed histogram; see the module docs for the error
+/// contract.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// `counts[0]` = underflow (v < MIN_TRACKED, incl. zero/negative),
+    /// `counts[1..=LOG_BUCKETS]` = log region, last slot = overflow.
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// Smallest value resolved by the log region (1 ns when recording
+    /// seconds). Anything below — including zero and negatives — lands in
+    /// the underflow bucket but still counts toward `n`/`sum`/`min`.
+    pub const MIN_TRACKED: f64 = 1e-9;
+
+    /// Upper edge of the log region: `MIN_TRACKED · 2^60` ≈ 1.15e9.
+    /// Larger values land in the overflow bucket (exact `max` is kept).
+    pub const MAX_TRACKED: f64 = Self::MIN_TRACKED * (1u64 << OCTAVES) as f64;
+
+    /// Fixed number of bucket slots — the memory bound: one `u64` each,
+    /// independent of how many observations are recorded.
+    pub const BUCKETS: usize = TOTAL_BUCKETS;
+
+    /// Empty histogram (fixed allocation up front).
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: vec![0; TOTAL_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Bucket slot for a value.
+    fn index_of(v: f64) -> usize {
+        if v.is_nan() || v < Self::MIN_TRACKED {
+            // NaN and anything below the resolved range → underflow.
+            return 0;
+        }
+        let idx = ((v / Self::MIN_TRACKED).log2() * SUB_PER_OCTAVE as f64).floor();
+        if idx >= LOG_BUCKETS as f64 {
+            TOTAL_BUCKETS - 1
+        } else {
+            // idx ≥ 0 because v ≥ MIN_TRACKED.
+            idx as usize + 1
+        }
+    }
+
+    /// Upper bound of a log-region slot (1-based within the log region).
+    fn upper_bound(slot: usize) -> f64 {
+        Self::MIN_TRACKED * (slot as f64 / SUB_PER_OCTAVE as f64).exp2()
+    }
+
+    /// Representative value reported for a slot: the geometric midpoint of
+    /// its bounds (which is what bounds quantile error at ≤ 5%).
+    fn representative(&self, slot: usize) -> f64 {
+        let rep = if slot == 0 {
+            self.min
+        } else if slot == TOTAL_BUCKETS - 1 {
+            self.max
+        } else {
+            Self::MIN_TRACKED * ((slot as f64 - 0.5) / SUB_PER_OCTAVE as f64).exp2()
+        };
+        // Exact extremes clamp the tails so a quantile never leaves the
+        // observed range.
+        rep.clamp(self.min, self.max)
+    }
+
+    /// Record one observation. NaN is treated as an underflow observation
+    /// of value 0 (it cannot perturb `min`/`max`/`sum`).
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_nan() { 0.0 } else { v };
+        self.counts[Self::index_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all recorded observations (exact).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Smallest recorded observation (exact); `None` when empty.
+    pub fn min(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.min)
+    }
+
+    /// Largest recorded observation (exact); `None` when empty.
+    pub fn max(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.max)
+    }
+
+    /// Fold another histogram into this one (same fixed layout always).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Approximate quantile (`q` in [0, 1]); `None` when empty. Error is
+    /// ≤ 5% relative for in-range values (see module docs).
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (slot, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Some(self.representative(slot));
+            }
+        }
+        Some(self.max)
+    }
+
+    /// [`Summary`]-shaped digest: `n`/`mean`/`std`/`min`/`max` exact,
+    /// quantiles approximate per the module error contract. `None` when
+    /// empty.
+    pub fn summary(&self) -> Option<Summary> {
+        if self.count == 0 {
+            return None;
+        }
+        let n = self.count as f64;
+        let mean = self.sum / n;
+        let var = (self.sum_sq / n - mean * mean).max(0.0);
+        Some(Summary {
+            n: self.count as usize,
+            mean,
+            std: var.sqrt(),
+            min: self.min,
+            p25: self.quantile(0.25).unwrap_or(self.min),
+            median: self.quantile(0.5).unwrap_or(self.min),
+            p75: self.quantile(0.75).unwrap_or(self.min),
+            max: self.max,
+        })
+    }
+
+    /// Cumulative non-empty buckets as `(upper_bound, cumulative_count)`
+    /// pairs with strictly increasing bounds — the Prometheus `le` series
+    /// (the renderer appends the `+Inf` bucket). Overflow observations
+    /// appear only in `+Inf`, i.e. in the final cumulative count.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (slot, &c) in self.counts.iter().enumerate().take(TOTAL_BUCKETS - 1) {
+            cum += c;
+            if c > 0 {
+                let le = if slot == 0 {
+                    Self::MIN_TRACKED
+                } else {
+                    Self::upper_bound(slot)
+                };
+                out.push((le, cum));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_fields_and_bounded_layout() {
+        let mut h = Histogram::new();
+        assert!(h.summary().is_none());
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.sum() - 500.5).abs() < 1e-9);
+        assert_eq!(h.min(), Some(1e-3));
+        assert_eq!(h.max(), Some(1.0));
+        // memory bound: the layout never grows with observations
+        assert_eq!(h.counts.len(), Histogram::BUCKETS);
+    }
+
+    #[test]
+    fn quantiles_within_documented_error() {
+        let mut h = Histogram::new();
+        for i in 1..=10_000 {
+            h.record(i as f64 * 1e-4); // uniform on (0, 1]
+        }
+        for (q, exact) in [(0.25, 0.25), (0.5, 0.5), (0.75, 0.75), (0.99, 0.99)] {
+            let got = h.quantile(q).unwrap();
+            let rel = (got - exact).abs() / exact;
+            assert!(rel <= 0.05, "q={q}: got {got}, exact {exact}, rel {rel}");
+        }
+    }
+
+    #[test]
+    fn underflow_overflow_and_nan() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(f64::NAN);
+        h.record(1e12);
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.min(), Some(-3.0));
+        assert_eq!(h.max(), Some(1e12));
+        // quantiles stay inside the observed range
+        let q = h.quantile(0.99).unwrap();
+        assert!((-3.0..=1e12).contains(&q));
+    }
+
+    #[test]
+    fn merge_matches_combined_recording() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut both = Histogram::new();
+        for i in 0..500 {
+            let v = 1e-3 * (1.0 + (i % 97) as f64);
+            a.record(v);
+            both.record(v);
+        }
+        for i in 0..300 {
+            let v = 2e-2 * (1.0 + (i % 53) as f64);
+            b.record(v);
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.counts, both.counts);
+        assert_eq!(a.quantile(0.5), both.quantile(0.5));
+        let (sa, sb) = (a.summary().unwrap(), both.summary().unwrap());
+        assert!((sa.mean - sb.mean).abs() < 1e-12);
+        assert!((sa.std - sb.std).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotonic() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        h.record(1e12); // overflow: only visible via +Inf
+        let buckets = h.cumulative_buckets();
+        assert!(!buckets.is_empty());
+        for w in buckets.windows(2) {
+            assert!(w[0].0 < w[1].0, "le bounds must increase");
+            assert!(w[0].1 <= w[1].1, "cumulative counts must not decrease");
+        }
+        // the last cumulative count excludes the overflow observation
+        assert_eq!(buckets.last().unwrap().1, 100);
+    }
+}

@@ -1,8 +1,20 @@
-//! Runtime metrics: counters and timing histograms with text/JSON export.
+//! Runtime metrics: counters, gauges, and **bounded** latency histograms
+//! with text/JSON/Prometheus export.
 //!
-//! The coordinator and runtime record device calls, cache hits, trial
-//! counts and per-phase timings here; `containerstress … --metrics` dumps
-//! the registry at exit.
+//! The coordinator, executor, and service record device calls, cache hits,
+//! trial counts, per-phase timings and HTTP latencies here;
+//! `containerstress … --metrics` dumps the registry at exit and
+//! `GET /metrics` serves it live (`?format=json|text|prometheus`).
+//!
+//! Histograms are log-bucketed with fixed memory ([`Histogram`]): a
+//! long-lived `serve` process can record samples forever without growing —
+//! the unbounded `Vec<f64>` store this replaced is gone. Quantiles carry
+//! ≤ 5% relative error (documented on [`Histogram`]); counts, sums, means,
+//! min/max are exact. See `docs/API.md` for the metric catalog.
+
+mod histogram;
+
+pub use histogram::Histogram;
 
 use crate::util::json::Json;
 use crate::util::Summary;
@@ -14,7 +26,8 @@ use std::time::Duration;
 #[derive(Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, u64>>,
-    samples: Mutex<BTreeMap<String, Vec<f64>>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
 }
 
 impl Registry {
@@ -49,14 +62,27 @@ impl Registry {
         self.sample(name, d.as_secs_f64());
     }
 
-    /// Record one observation of a sampled statistic.
+    /// Record one observation into the bounded histogram under `name`.
     pub fn sample(&self, name: &str, v: f64) {
-        self.samples
-            .lock()
-            .unwrap()
-            .entry(name.to_string())
-            .or_default()
-            .push(v);
+        let mut hs = self.histograms.lock().unwrap();
+        match hs.get_mut(name) {
+            Some(h) => h.record(v),
+            None => {
+                let mut h = Histogram::new();
+                h.record(v);
+                hs.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    /// Set a gauge to an instantaneous value (last write wins).
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), v);
+    }
+
+    /// Current value of a gauge, if ever set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(name).copied()
     }
 
     /// Current value of a counter (0 if never touched).
@@ -69,14 +95,21 @@ impl Registry {
             .unwrap_or(0)
     }
 
+    /// Snapshot of the histogram under `name`, if any samples were
+    /// recorded (a clone — cheap and fixed-size, usable for merging).
+    pub fn histogram(&self, name: &str) -> Option<Histogram> {
+        self.histograms.lock().unwrap().get(name).cloned()
+    }
+
     /// Summary statistics of a sampled series, if any were recorded.
+    /// `n`/`mean`/`std`/`min`/`max` are exact; quantiles carry the
+    /// [`Histogram`] error bound (≤ 5% relative).
     pub fn summary(&self, name: &str) -> Option<Summary> {
-        self.samples
+        self.histograms
             .lock()
             .unwrap()
             .get(name)
-            .filter(|v| !v.is_empty())
-            .map(|v| Summary::of(v))
+            .and_then(Histogram::summary)
     }
 
     /// Human-readable dump.
@@ -85,11 +118,11 @@ impl Registry {
         for (k, v) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("{k}: {v}\n"));
         }
-        for (k, v) in self.samples.lock().unwrap().iter() {
-            if v.is_empty() {
-                continue;
-            }
-            let s = Summary::of(v);
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{k}: {v:.3}\n"));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            let Some(s) = h.summary() else { continue };
             out.push_str(&format!(
                 "{k}: n={} median={:.3e}s mean={:.3e}s p75={:.3e}s\n",
                 s.n, s.median, s.mean, s.p75
@@ -98,18 +131,19 @@ impl Registry {
         out
     }
 
-    /// JSON export (counters + summaries).
+    /// JSON export (counters + gauges + histogram summaries).
     pub fn to_json(&self) -> Json {
         let mut counters = BTreeMap::new();
         for (k, v) in self.counters.lock().unwrap().iter() {
             counters.insert(k.clone(), Json::Num(*v as f64));
         }
+        let mut gauges = BTreeMap::new();
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            gauges.insert(k.clone(), Json::Num(*v));
+        }
         let mut samples = BTreeMap::new();
-        for (k, v) in self.samples.lock().unwrap().iter() {
-            if v.is_empty() {
-                continue;
-            }
-            let s = Summary::of(v);
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            let Some(s) = h.summary() else { continue };
             samples.insert(
                 k.clone(),
                 Json::obj(vec![
@@ -118,20 +152,77 @@ impl Registry {
                     ("mean", Json::Num(s.mean)),
                     ("min", Json::Num(s.min)),
                     ("max", Json::Num(s.max)),
+                    ("p95", Json::Num(h.quantile(0.95).unwrap_or(s.max))),
                 ]),
             );
         }
         Json::obj(vec![
             ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
             ("timers", Json::Obj(samples)),
         ])
+    }
+
+    /// Prometheus text-exposition rendering (format version 0.0.4):
+    /// counters as `<name>_total`, gauges as-is, histograms with
+    /// cumulative `_bucket{le=…}` series plus `_sum`/`_count`. Metric
+    /// names are sanitized to `[a-zA-Z0-9_:]` (dots become underscores).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            let name = promify(k);
+            out.push_str(&format!("# TYPE {name}_total counter\n"));
+            out.push_str(&format!("{name}_total {v}\n"));
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            let name = promify(k);
+            out.push_str(&format!("# TYPE {name} gauge\n"));
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            if h.count() == 0 {
+                continue;
+            }
+            let name = promify(k);
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            for (le, cum) in h.cumulative_buckets() {
+                out.push_str(&format!("{name}_bucket{{le=\"{le:e}\"}} {cum}\n"));
+            }
+            out.push_str(&format!(
+                "{name}_bucket{{le=\"+Inf\"}} {}\n",
+                h.count()
+            ));
+            out.push_str(&format!("{name}_sum {}\n", h.sum()));
+            out.push_str(&format!("{name}_count {}\n", h.count()));
+        }
+        out
     }
 
     /// Reset everything (tests).
     pub fn clear(&self) {
         self.counters.lock().unwrap().clear();
-        self.samples.lock().unwrap().clear();
+        self.histograms.lock().unwrap().clear();
+        self.gauges.lock().unwrap().clear();
     }
+}
+
+/// Sanitize a metric name for Prometheus: every character outside
+/// `[a-zA-Z0-9_:]` becomes `_`, and a leading digit gets a `_` prefix.
+fn promify(name: &str) -> String {
+    let mut s: String = name
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect();
+    if s.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        s.insert(0, '_');
+    }
+    s
 }
 
 #[cfg(test)]
@@ -156,8 +247,21 @@ mod tests {
         }
         let s = r.summary("lat").unwrap();
         assert_eq!(s.n, 5);
-        assert_eq!(s.median, 3.0);
+        assert_eq!(s.mean, 3.0); // exact
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        // quantiles are approximate: within the documented 5% bound
+        assert!((s.median - 3.0).abs() <= 0.05 * 3.0, "median {}", s.median);
         assert!(r.summary("none").is_none());
+    }
+
+    #[test]
+    fn gauges_last_write_wins() {
+        let r = Registry::new();
+        assert!(r.gauge("depth").is_none());
+        r.set_gauge("depth", 4.0);
+        r.set_gauge("depth", 7.0);
+        assert_eq!(r.gauge("depth"), Some(7.0));
     }
 
     #[test]
@@ -165,11 +269,41 @@ mod tests {
         let r = Registry::new();
         r.inc("calls");
         r.time("t", Duration::from_millis(5));
+        r.set_gauge("g", 2.5);
         let text = r.render();
         assert!(text.contains("calls: 1"));
+        assert!(text.contains("g: 2.500"));
         let j = r.to_json();
         assert!(j.get("counters").unwrap().get("calls").is_some());
         assert!(j.get("timers").unwrap().get("t").is_some());
+        assert!(j.get("gauges").unwrap().get("g").is_some());
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed() {
+        let r = Registry::new();
+        r.add("sweep.trials", 9);
+        r.set_gauge("executor.queue_depth", 3.0);
+        for i in 1..=100 {
+            r.sample("service.http.request_seconds", i as f64 * 1e-3);
+        }
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE sweep_trials_total counter"));
+        assert!(text.contains("sweep_trials_total 9"));
+        assert!(text.contains("# TYPE executor_queue_depth gauge"));
+        assert!(text.contains("executor_queue_depth 3"));
+        assert!(text.contains("# TYPE service_http_request_seconds histogram"));
+        assert!(text.contains("service_http_request_seconds_count 100"));
+        assert!(text.contains("le=\"+Inf\"} 100"));
+        // every bucket line has a le label and the series is cumulative
+        let cums: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("service_http_request_seconds_bucket"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse::<u64>().unwrap())
+            .collect();
+        assert!(cums.len() >= 2);
+        assert!(cums.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*cums.last().unwrap(), 100);
     }
 
     #[test]

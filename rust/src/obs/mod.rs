@@ -1,0 +1,333 @@
+//! Structured-span observability: per-job flight recorders, trace IDs,
+//! and process-level telemetry switches.
+//!
+//! Each scoping/scenario job owns a [`FlightRecorder`] — a fixed-capacity
+//! ring buffer of [`SpanRecord`]s. Instrumentation points across the
+//! pipeline (job driver → planner rounds → executor trial tasks →
+//! per-trial train/surveil phases → scenario units) push spans into the
+//! recorder of the job they belong to; `GET /v1/jobs/{id}/trace` serves
+//! the ordered timeline with queue-wait vs. run-time per span.
+//!
+//! Propagation uses two complementary mechanisms:
+//! - a **thread-local current recorder** ([`install`] / [`current`]),
+//!   set by the job driver thread for code that runs on that thread
+//!   (planner rounds, demand resolution, the job span itself), and
+//! - **explicit capture**: dispatch points grab `current()` once and move
+//!   the `Arc` into task closures, so spans recorded on executor worker
+//!   threads still land in the right job's recorder.
+//!
+//! When no recorder is installed (plain CLI sweeps, the telemetry-disabled
+//! bench twin) every instrumentation point is a thread-local read plus a
+//! branch — the overhead budget is enforced by `benches/obs_overhead.rs`
+//! (≤ 5% on the native trial hot path).
+
+use crate::util::fnv1a;
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Default ring capacity per job: enough for every phase of a typical
+/// adaptive sweep (hundreds of trials) while bounding memory at
+/// `capacity × sizeof(SpanRecord)` regardless of job size.
+pub const DEFAULT_SPAN_CAPACITY: usize = 512;
+
+/// One completed span: a named phase of work inside a job, with offsets
+/// in microseconds from the owning recorder's epoch (job submission).
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Component that produced the span (`"job"`, `"planner"`, `"trial"`,
+    /// `"scenario"`, …).
+    pub name: &'static str,
+    /// Phase within the component (`"run"`, `"train"`, `"surveil"`,
+    /// `"round"`, …).
+    pub phase: &'static str,
+    /// Work start, µs since the recorder epoch (after any queue wait).
+    pub start_us: u64,
+    /// Work end, µs since the recorder epoch.
+    pub end_us: u64,
+    /// Time spent queued before work started, µs (0 when the span never
+    /// waited in an executor queue).
+    pub queue_us: u64,
+    /// Free-form context, e.g. `"cell=4/8/32 trial=1"`.
+    pub meta: String,
+}
+
+impl SpanRecord {
+    /// Run time (end − start) in µs.
+    pub fn run_us(&self) -> u64 {
+        self.end_us.saturating_sub(self.start_us)
+    }
+
+    /// JSON object for the `/trace` endpoints.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.to_string())),
+            ("phase", Json::Str(self.phase.to_string())),
+            ("start_us", Json::Num(self.start_us as f64)),
+            ("end_us", Json::Num(self.end_us as f64)),
+            ("queue_us", Json::Num(self.queue_us as f64)),
+            ("run_us", Json::Num(self.run_us() as f64)),
+            ("meta", Json::Str(self.meta.clone())),
+        ])
+    }
+}
+
+struct Ring {
+    spans: VecDeque<SpanRecord>,
+    dropped: u64,
+}
+
+/// Fixed-capacity per-job span ring buffer ("flight recorder").
+///
+/// Memory is bounded by construction: once `capacity` spans are held, the
+/// oldest span is evicted per push and counted in `dropped`, so the
+/// recorder keeps the most recent window of a very long job.
+pub struct FlightRecorder {
+    epoch: Instant,
+    trace_id: String,
+    capacity: usize,
+    inner: Mutex<Ring>,
+}
+
+impl FlightRecorder {
+    /// Recorder with the default capacity; `trace_id` is the request's
+    /// correlation ID (inbound `x-request-id` or a minted one).
+    pub fn new(trace_id: impl Into<String>) -> FlightRecorder {
+        FlightRecorder::with_capacity(trace_id, DEFAULT_SPAN_CAPACITY)
+    }
+
+    /// Recorder with an explicit ring capacity (min 1).
+    pub fn with_capacity(trace_id: impl Into<String>, capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            epoch: Instant::now(),
+            trace_id: trace_id.into(),
+            capacity: capacity.max(1),
+            inner: Mutex::new(Ring {
+                spans: VecDeque::new(),
+                dropped: 0,
+            }),
+        }
+    }
+
+    /// Correlation ID this recorder was created with.
+    pub fn trace_id(&self) -> &str {
+        &self.trace_id
+    }
+
+    /// Ring capacity (the memory bound, in spans).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Spans evicted so far because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Microseconds between the recorder epoch and `at` (0 if earlier).
+    pub fn offset_us(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Record a completed span from raw instants. `queue` is the time the
+    /// work sat in an executor queue before `start`.
+    pub fn push(
+        &self,
+        name: &'static str,
+        phase: &'static str,
+        start: Instant,
+        end: Instant,
+        queue: Duration,
+        meta: String,
+    ) {
+        self.record(SpanRecord {
+            name,
+            phase,
+            start_us: self.offset_us(start),
+            end_us: self.offset_us(end),
+            queue_us: queue.as_micros() as u64,
+            meta,
+        });
+    }
+
+    /// Record a pre-built span, evicting the oldest entry when full.
+    pub fn record(&self, span: SpanRecord) {
+        let mut ring = self.inner.lock().unwrap();
+        if ring.spans.len() >= self.capacity {
+            ring.spans.pop_front();
+            ring.dropped += 1;
+        }
+        ring.spans.push_back(span);
+    }
+
+    /// Spans ordered by start offset (stable for equal starts).
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let mut v: Vec<SpanRecord> = self.inner.lock().unwrap().spans.iter().cloned().collect();
+        v.sort_by_key(|s| s.start_us);
+        v
+    }
+
+    /// Full timeline as JSON for the `/trace` endpoints.
+    pub fn to_json(&self) -> Json {
+        let spans = self.snapshot();
+        Json::obj(vec![
+            ("trace_id", Json::Str(self.trace_id.clone())),
+            ("capacity", Json::Num(self.capacity as f64)),
+            (
+                "dropped",
+                Json::Num(self.inner.lock().unwrap().dropped as f64),
+            ),
+            (
+                "spans",
+                Json::Arr(spans.iter().map(SpanRecord::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Arc<FlightRecorder>>> = const { RefCell::new(None) };
+}
+
+/// Recorder installed on this thread, if any (cheap: a thread-local read).
+pub fn current() -> Option<Arc<FlightRecorder>> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// Install `rec` as this thread's current recorder for the guard's
+/// lifetime; the previous recorder (usually `None`) is restored on drop,
+/// including on unwind.
+pub fn install(rec: Option<Arc<FlightRecorder>>) -> CurrentGuard {
+    let prev = CURRENT.with(|c| c.replace(rec));
+    CurrentGuard { prev }
+}
+
+/// RAII guard returned by [`install`]; restores the previous recorder.
+pub struct CurrentGuard {
+    prev: Option<Arc<FlightRecorder>>,
+}
+
+impl Drop for CurrentGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CURRENT.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+/// Mint a 16-hex-digit trace ID: FNV-1a over wall-clock nanos and a
+/// process-wide sequence number (unique within a process, collision-safe
+/// enough across restarts for log correlation).
+pub fn mint_trace_id() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let nanos = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default()
+        .as_nanos() as u64;
+    let mut bytes = [0u8; 16];
+    bytes[..8].copy_from_slice(&nanos.to_le_bytes());
+    bytes[8..].copy_from_slice(&seq.to_le_bytes());
+    format!("{:016x}", fnv1a(&bytes))
+}
+
+static ACCESS_LOG: AtomicBool = AtomicBool::new(false);
+
+/// Turn HTTP access logging on/off (`containerstress serve --access-log`).
+pub fn set_access_log(on: bool) {
+    ACCESS_LOG.store(on, Ordering::Relaxed);
+}
+
+/// Whether per-request HTTP access-log lines are emitted.
+pub fn access_log_enabled() -> bool {
+    ACCESS_LOG.load(Ordering::Relaxed)
+}
+
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Anchor the process-start instant (first caller wins; `logger::init`
+/// calls this at boot so `/healthz` uptime covers the whole process).
+pub fn touch_process_start() {
+    START.get_or_init(Instant::now);
+}
+
+/// Seconds since the process-start anchor.
+pub fn uptime_s() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_bounds_and_orders_spans() {
+        let rec = FlightRecorder::with_capacity("t-1", 4);
+        let t0 = Instant::now();
+        for i in 0..6u64 {
+            rec.record(SpanRecord {
+                name: "trial",
+                phase: "train",
+                start_us: 100 - i * 10, // reversed starts: snapshot must sort
+                end_us: 200,
+                queue_us: i,
+                meta: format!("i={i}"),
+            });
+        }
+        assert_eq!(rec.capacity(), 4);
+        assert_eq!(rec.dropped(), 2);
+        let spans = rec.snapshot();
+        assert_eq!(spans.len(), 4);
+        assert!(spans.windows(2).all(|w| w[0].start_us <= w[1].start_us));
+        assert!(rec.offset_us(t0) < 1_000_000);
+        let j = rec.to_json();
+        assert_eq!(j.get("trace_id").and_then(Json::as_str), Some("t-1"));
+        assert_eq!(j.get("spans").and_then(Json::as_arr).unwrap().len(), 4);
+    }
+
+    #[test]
+    fn install_guard_restores_previous() {
+        assert!(current().is_none());
+        let rec = Arc::new(FlightRecorder::new("outer"));
+        {
+            let _g = install(Some(rec.clone()));
+            assert_eq!(current().unwrap().trace_id(), "outer");
+            {
+                let inner = Arc::new(FlightRecorder::new("inner"));
+                let _g2 = install(Some(inner));
+                assert_eq!(current().unwrap().trace_id(), "inner");
+            }
+            assert_eq!(current().unwrap().trace_id(), "outer");
+        }
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn trace_ids_are_distinct_hex() {
+        let a = mint_trace_id();
+        let b = mint_trace_id();
+        assert_ne!(a, b);
+        assert_eq!(a.len(), 16);
+        assert!(a.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn span_run_time_and_queue_wait() {
+        let rec = FlightRecorder::new("t");
+        let start = Instant::now();
+        let end = start + Duration::from_millis(3);
+        rec.push(
+            "trial",
+            "surveil",
+            start,
+            end,
+            Duration::from_millis(7),
+            String::new(),
+        );
+        let s = &rec.snapshot()[0];
+        assert_eq!(s.queue_us, 7_000);
+        assert!((2_000..=4_000).contains(&s.run_us()), "run {}", s.run_us());
+    }
+}

@@ -36,6 +36,7 @@ use crate::util::json::Json;
 use crate::util::threadpool::{JobTicket, TrialExecutor};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 /// Headroom the historical `shapes::elastic::compare` used to pre-scope a
 /// shape against the trace peak (`capacity ≥ peak / 0.8`).
@@ -486,9 +487,23 @@ pub fn run_scenario_executor(
         return Err(Cancelled.into());
     }
     Registry::global().inc("scenario.runs");
+    // Runs on the job's driver thread, so the thread-local recorder (if
+    // any) is this job's; clones of the Arc ride into unit closures below.
+    let recorder = crate::obs::current();
 
     // Phase 1 (this thread): tenant synthesis + oracle demand resolution.
+    let resolve_t0 = Instant::now();
     let tenants = Arc::new(resolve_demand(spec, oracle, ctx, &cancel)?);
+    if let Some(rec) = &recorder {
+        rec.push(
+            "scenario",
+            "resolve",
+            resolve_t0,
+            Instant::now(),
+            Duration::ZERO,
+            format!("tenants={} epochs={}", tenants.len(), spec.epochs),
+        );
+    }
     let policies = Arc::new(spec.policies.clone());
     let (np, nt) = (policies.len(), tenants.len());
     progress.tenants.store(nt, Ordering::SeqCst);
@@ -511,10 +526,14 @@ pub fn run_scenario_executor(
             let policies = Arc::clone(&policies);
             let progress = Arc::clone(progress);
             let cancel = cancel.clone();
+            let recorder = recorder.clone();
+            let enqueued = Instant::now();
             ticket.submit(move || {
                 if cancel.is_cancelled() {
                     return;
                 }
+                let started = Instant::now();
+                let queue_wait = started.saturating_duration_since(enqueued);
                 let (_, trace) = &tenants[ti];
                 let run = match policies[pi] {
                     PolicySpec::PreScoped { headroom } => {
@@ -523,6 +542,14 @@ pub fn run_scenario_executor(
                     PolicySpec::Reactive(p) => run_reactive(&p, trace),
                     PolicySpec::Predictive(p) => run_predictive(&p, trace),
                 };
+                if let Some(rec) = &recorder {
+                    let meta = format!(
+                        "policy={} tenant={ti} epochs={}",
+                        policies[pi].label(),
+                        trace.epochs()
+                    );
+                    rec.push("scenario", "unit", started, Instant::now(), queue_wait, meta);
+                }
                 progress.units_done.fetch_add(1, Ordering::SeqCst);
                 let _ = tx.send((pi, ti, run));
             });

@@ -219,6 +219,16 @@ impl SweepCache {
         self.len() == 0
     }
 
+    /// Approximate resident bytes of the cached measurements (per-trial
+    /// f64 timings; keys and map overhead excluded). Feeds the
+    /// `cache.bytes` gauge at metrics-scrape time.
+    pub fn bytes(&self) -> usize {
+        let map = self.map.lock().unwrap();
+        map.values()
+            .map(|c| (c.train_s.len() + c.surveil_s.len()) * std::mem::size_of::<f64>())
+            .sum()
+    }
+
     /// Lookup hits since this instance was created.
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
@@ -317,6 +327,8 @@ mod tests {
         c.put(key(4, 8, 32), costs());
         assert_eq!(c.get(&key(4, 8, 32)), Some(costs()));
         assert_eq!((c.hits(), c.misses(), c.len()), (1, 1, 1));
+        // 4 stored f64 timings (2 train + 2 surveil)
+        assert_eq!(c.bytes(), 4 * std::mem::size_of::<f64>());
         // any key component change is a different address
         assert!(c.get(&key(4, 8, 64)).is_none());
         let other = CacheKey {

@@ -11,6 +11,7 @@
 //! - bodies bounded by `Content-Length` (no chunked transfer encoding);
 //! - no percent-decoding — all structured data travels in JSON bodies.
 
+use crate::metrics::Registry;
 use crate::util::json::Json;
 use crate::util::threadpool::TrialExecutor;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -63,6 +64,25 @@ impl Request {
     /// Body as UTF-8 (errors on invalid encodings).
     pub fn body_str(&self) -> anyhow::Result<&str> {
         std::str::from_utf8(&self.body).map_err(|_| anyhow::anyhow!("body is not valid UTF-8"))
+    }
+
+    /// First header value for `name` (header names are stored
+    /// lower-cased; pass `name` in lower case).
+    pub fn header_get(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// The request's correlation ID: the first non-empty `x-request-id`
+    /// header. The connection handler mints one when the client sent
+    /// none, so handlers always observe `Some`.
+    pub fn request_id(&self) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, v)| k == "x-request-id" && !v.trim().is_empty())
+            .map(|(_, v)| v.as_str())
     }
 }
 
@@ -118,8 +138,20 @@ impl Response {
     }
 
     fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        self.write_with_request_id(stream, None)
+    }
+
+    fn write_with_request_id(
+        &self,
+        stream: &mut TcpStream,
+        request_id: Option<&str>,
+    ) -> std::io::Result<()> {
+        let rid = match request_id {
+            Some(id) => format!("x-request-id: {id}\r\n"),
+            None => String::new(),
+        };
         let head = format!(
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{rid}Connection: close\r\n\r\n",
             self.status,
             Response::reason(self.status),
             self.content_type,
@@ -250,11 +282,47 @@ pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync + 'static>;
 
 fn handle_connection(mut stream: TcpStream, handler: Handler) {
     let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
-    let resp = match read_request(&mut stream) {
-        Ok(req) => (*handler)(&req),
-        Err(e) => Response::error(400, &format!("bad request: {e}")),
+    let t0 = std::time::Instant::now();
+    let (resp, request_id, line) = match read_request(&mut stream) {
+        Ok(mut req) => {
+            // Honour the caller's correlation ID; mint one otherwise and
+            // inject it so handlers observe the same ID the access log
+            // and response header carry.
+            let rid = match req.request_id() {
+                Some(id) => id.to_string(),
+                None => {
+                    let id = crate::obs::mint_trace_id();
+                    req.headers.push(("x-request-id".to_string(), id.clone()));
+                    id
+                }
+            };
+            let line = format!("{} {}", req.method, req.path);
+            ((*handler)(&req), rid, line)
+        }
+        Err(e) => (
+            Response::error(400, &format!("bad request: {e}")),
+            crate::obs::mint_trace_id(),
+            "<unparsed>".to_string(),
+        ),
     };
-    if let Err(e) = resp.write_to(&mut stream) {
+    let elapsed = t0.elapsed();
+    let reg = Registry::global();
+    reg.time("service.http.request_seconds", elapsed);
+    reg.inc(match resp.status / 100 {
+        2 => "service.http.responses.2xx",
+        4 => "service.http.responses.4xx",
+        5 => "service.http.responses.5xx",
+        _ => "service.http.responses.other",
+    });
+    if crate::obs::access_log_enabled() {
+        log::info!(
+            target: "http.access",
+            "{line} {} {:.3}ms id={request_id}",
+            resp.status,
+            elapsed.as_secs_f64() * 1e3
+        );
+    }
+    if let Err(e) = resp.write_with_request_id(&mut stream, Some(&request_id)) {
         log::debug!("http: response write failed: {e}");
     }
 }
@@ -290,6 +358,7 @@ impl HttpServer {
                             if pending.load(Ordering::SeqCst) >= MAX_PENDING_CONNS {
                                 // Shed load instead of buffering sockets
                                 // without bound behind a busy pool.
+                                Registry::global().inc("service.http.responses.5xx");
                                 let _ = Response::error(503, "server busy; retry later")
                                     .write_to(&mut stream);
                                 continue;
@@ -415,6 +484,23 @@ mod tests {
             "GET / HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n",
         );
         assert!(out.starts_with("HTTP/1.1 400 "), "{out}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn request_id_is_honoured_or_minted_and_echoed() {
+        let server = echo_server();
+        let out = raw_roundtrip(
+            server.addr(),
+            "GET / HTTP/1.1\r\nHost: t\r\nX-Request-Id: my-id-7\r\n\r\n",
+        );
+        assert!(out.contains("x-request-id: my-id-7"), "{out}");
+        let out = raw_roundtrip(server.addr(), "GET / HTTP/1.1\r\nHost: t\r\n\r\n");
+        let rid = out
+            .lines()
+            .find_map(|l| l.strip_prefix("x-request-id: "))
+            .expect("minted id echoed");
+        assert!(!rid.trim().is_empty(), "{out}");
         server.shutdown();
     }
 

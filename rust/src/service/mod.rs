@@ -45,6 +45,8 @@ impl Server {
     /// port — use [`Server::addr`] for the real one). The sweep cache is
     /// disk-backed at `cfg.service.cache_dir`, or memory-only when `None`.
     pub fn start(cfg: &Config, backend: Backend) -> anyhow::Result<Server> {
+        crate::obs::touch_process_start();
+        crate::obs::set_access_log(cfg.service.access_log);
         let cache = match &cfg.service.cache_dir {
             Some(dir) => Arc::new(SweepCache::open(dir)?),
             None => Arc::new(SweepCache::in_memory()),

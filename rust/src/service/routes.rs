@@ -4,13 +4,16 @@
 //! POST   /v1/scope                submit a workload + SLA, get a job id
 //! POST   /v1/scenarios            submit a fleet what-if scenario replay
 //! GET    /v1/jobs/{id}            job status / live progress / summary
+//! GET    /v1/jobs/{id}/trace      ordered span timeline (flight recorder)
 //! GET    /v1/scenarios/{id}       scenario status / replay progress / outcome
+//! GET    /v1/scenarios/{id}/trace scenario span timeline (flight recorder)
 //! DELETE /v1/jobs/{id}            cancel a queued or running job
 //! DELETE /v1/scenarios/{id}       cancel a queued or running scenario
 //! GET    /v1/recommendations/{id} rendered shape recommendation (job → rec)
 //! GET    /v1/shapes               cloud shape catalog
-//! GET    /healthz                 liveness + queue/scheduler gauges
-//! GET    /metrics                 metrics registry (JSON; ?format=text)
+//! GET    /healthz                 liveness + uptime + queue/scheduler gauges
+//! GET    /metrics                 metrics registry
+//!                                 (?format=json|text|prometheus; json default)
 //! ```
 //!
 //! `POST /v1/scope` body (all keys optional; defaults fill the rest):
@@ -99,12 +102,14 @@ impl ServiceState {
             .collect();
         let resp = match (req.method.as_str(), segs.as_slice()) {
             ("GET", ["healthz"]) => self.healthz(),
-            ("GET", ["metrics"]) => metrics(req),
+            ("GET", ["metrics"]) => self.metrics(req),
             ("GET", ["v1", "shapes"]) => shapes_catalog(),
             ("POST", ["v1", "scope"]) => self.scope(req),
             ("POST", ["v1", "scenarios"]) => self.scenario_submit(req),
             ("GET", ["v1", "jobs", id]) => self.job_status(id),
+            ("GET", ["v1", "jobs", id, "trace"]) => self.job_trace(id),
             ("GET", ["v1", "scenarios", id]) => self.scenario_status(id),
+            ("GET", ["v1", "scenarios", id, "trace"]) => self.scenario_trace(id),
             ("DELETE", ["v1", "jobs", id]) | ("DELETE", ["v1", "scenarios", id]) => {
                 self.cancel_job(id)
             }
@@ -115,7 +120,9 @@ impl ServiceState {
             | (_, ["v1", "scope"])
             | (_, ["v1", "scenarios"])
             | (_, ["v1", "jobs", _])
+            | (_, ["v1", "jobs", _, "trace"])
             | (_, ["v1", "scenarios", _])
+            | (_, ["v1", "scenarios", _, "trace"])
             | (_, ["v1", "recommendations", _]) => {
                 Response::error(405, "method not allowed on this route")
             }
@@ -135,6 +142,8 @@ impl ServiceState {
             200,
             &Json::obj(vec![
                 ("status", Json::Str("ok".into())),
+                ("version", Json::Str(env!("CARGO_PKG_VERSION").into())),
+                ("uptime_s", Json::Num(crate::obs::uptime_s())),
                 ("jobs_in_flight", Json::Num(self.svc.in_flight() as f64)),
                 ("queue_cap", Json::Num(self.svc.queue_cap() as f64)),
                 ("cached_cells", Json::Num(self.cache.len() as f64)),
@@ -145,6 +154,66 @@ impl ServiceState {
                 ("fair_share", Json::Bool(self.svc.fair_share())),
             ]),
         )
+    }
+
+    /// `GET /metrics`: the global registry. Gauges are computed here, at
+    /// scrape time, from live service state — nothing on the trial hot
+    /// path pays for them.
+    fn metrics(&self, req: &Request) -> Response {
+        let reg = Registry::global();
+        let stats = self.svc.executor_stats();
+        reg.set_gauge("executor.queue_depth", stats.queued as f64);
+        reg.set_gauge("executor.busy_workers", stats.running as f64);
+        reg.set_gauge("executor.busy_fraction", stats.busy_fraction());
+        reg.set_gauge("executor.jobs", stats.jobs as f64);
+        reg.set_gauge("executor.workers", stats.workers as f64);
+        reg.set_gauge("cache.entries", self.cache.len() as f64);
+        reg.set_gauge("cache.bytes", self.cache.bytes() as f64);
+        let (sweeps, scenarios) = self.svc.in_flight_by_class();
+        reg.set_gauge("service.jobs.in_flight.sweep", sweeps as f64);
+        reg.set_gauge("service.jobs.in_flight.scenario", scenarios as f64);
+        match req.query_get("format") {
+            None | Some("json") => Response::json(200, &reg.to_json()),
+            Some("text") => Response::text(200, reg.render()),
+            Some("prometheus") => Response::text(200, reg.render_prometheus()),
+            Some(other) => Response::error(
+                400,
+                &format!("unknown format '{other}' (expected json|text|prometheus)"),
+            ),
+        }
+    }
+
+    /// `GET /v1/jobs/{id}/trace`: the job's flight-recorder timeline.
+    fn job_trace(&self, id: &str) -> Response {
+        let id: JobId = match id.parse() {
+            Ok(v) => v,
+            Err(_) => return Response::error(400, "job id must be an integer"),
+        };
+        match self.svc.trace(id) {
+            None => Response::error(404, &format!("unknown job {id}")),
+            Some(mut t) => {
+                if let Json::Obj(m) = &mut t {
+                    m.insert("job_id".into(), Json::Num(id as f64));
+                }
+                Response::json(200, &t)
+            }
+        }
+    }
+
+    /// `GET /v1/scenarios/{id}/trace`: like the jobs route, but 404s for
+    /// sweep jobs (mirroring `GET /v1/scenarios/{id}`).
+    fn scenario_trace(&self, id: &str) -> Response {
+        let jid: JobId = match id.parse() {
+            Ok(v) => v,
+            Err(_) => return Response::error(400, "job id must be an integer"),
+        };
+        if self.svc.status(jid).is_some() && self.svc.scenario_progress(jid).is_none() {
+            return Response::error(
+                404,
+                &format!("job {jid} is not a scenario job (see GET /v1/jobs/{jid}/trace)"),
+            );
+        }
+        self.job_trace(id)
     }
 
     fn scope(&self, req: &Request) -> Response {
@@ -190,7 +259,8 @@ impl ServiceState {
             Ok(s) => s,
             Err(e) => return Response::error(422, &format!("invalid sla: {e}")),
         };
-        match self.svc.submit_weighted(spec, weight) {
+        let trace_id = req.request_id().map(String::from);
+        match self.svc.submit_traced(spec, weight, trace_id) {
             Ok(id) => {
                 let mut jobs = self.jobs.lock().unwrap();
                 // Drop scoping contexts for jobs the queue has evicted, so
@@ -317,7 +387,11 @@ impl ServiceState {
             Ok(w) => w,
             Err(e) => return Response::error(422, &format!("invalid scheduler: {e}")),
         };
-        match self.svc.submit_scenario_weighted(scenario, sweep, weight) {
+        let trace_id = req.request_id().map(String::from);
+        match self
+            .svc
+            .submit_scenario_traced(scenario, sweep, weight, trace_id)
+        {
             Ok(id) => {
                 Registry::global().inc("service.scenario.submitted");
                 Response::json(
@@ -651,15 +725,6 @@ fn sla_from_json(j: Option<&Json>) -> anyhow::Result<Sla> {
     Ok(sla)
 }
 
-fn metrics(req: &Request) -> Response {
-    let reg = Registry::global();
-    if req.query_get("format") == Some("text") {
-        Response::text(200, reg.render())
-    } else {
-        Response::json(200, &reg.to_json())
-    }
-}
-
 fn shapes_catalog() -> Response {
     let shapes: Vec<Json> = shapes::catalog()
         .iter()
@@ -946,15 +1011,83 @@ mod tests {
     }
 
     #[test]
-    fn metrics_renders_both_formats() {
+    fn metrics_renders_all_formats_and_rejects_unknown() {
         let st = state();
         let r = st.handle(&get("/metrics"));
         assert_eq!(r.status, 200);
         assert!(Json::parse(std::str::from_utf8(&r.body).unwrap()).is_ok());
-        let mut req = get("/metrics");
-        req.query.push(("format".into(), "text".into()));
-        let r = st.handle(&req);
+        let with_format = |f: &str| {
+            let mut req = get("/metrics");
+            req.query.push(("format".into(), f.into()));
+            st.handle(&req)
+        };
+        let r = with_format("text");
         assert_eq!(r.content_type, "text/plain; charset=utf-8");
         assert!(String::from_utf8(r.body).unwrap().contains("metrics"));
+        let r = with_format("json");
+        assert_eq!(r.status, 200);
+        let r = with_format("prometheus");
+        assert_eq!(r.status, 200);
+        let text = String::from_utf8(r.body).unwrap();
+        assert!(text.contains("# TYPE"), "{text}");
+        assert!(text.contains("executor_queue_depth"), "{text}");
+        let r = with_format("xml");
+        assert_eq!(r.status, 400);
+        assert!(String::from_utf8(r.body).unwrap().contains("xml"));
+    }
+
+    #[test]
+    fn metrics_scrape_sets_live_gauges() {
+        let st = state();
+        let r = st.handle(&get("/metrics"));
+        let j = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        let gauges = j.get("gauges").expect("gauges object present");
+        for key in [
+            "executor.queue_depth",
+            "executor.workers",
+            "cache.entries",
+            "cache.bytes",
+            "service.jobs.in_flight.sweep",
+            "service.jobs.in_flight.scenario",
+        ] {
+            assert!(gauges.get(key).is_some(), "missing gauge {key}");
+        }
+        assert!(gauges.get("executor.workers").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn healthz_reports_uptime_and_version() {
+        let st = state();
+        let r = st.handle(&get("/healthz"));
+        let j = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert!(j.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(
+            j.get("version").and_then(Json::as_str),
+            Some(env!("CARGO_PKG_VERSION"))
+        );
+    }
+
+    #[test]
+    fn trace_routes_serve_timelines_and_guard_kinds() {
+        let st = state();
+        assert_eq!(st.handle(&get("/v1/jobs/zzz/trace")).status, 400);
+        assert_eq!(st.handle(&get("/v1/jobs/12345/trace")).status, 404);
+        assert_eq!(st.handle(&post("/v1/jobs/1/trace", "")).status, 405);
+        let r = st.handle(&post("/v1/scope", "{}"));
+        assert_eq!(r.status, 202);
+        let id = Json::parse(std::str::from_utf8(&r.body).unwrap())
+            .unwrap()
+            .get("job_id")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        st.svc.wait(id as u64).unwrap();
+        let r = st.handle(&get(&format!("/v1/jobs/{id}/trace")));
+        assert_eq!(r.status, 200);
+        let j = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert!(j.get("trace_id").and_then(Json::as_str).is_some());
+        assert!(!j.get("spans").unwrap().as_arr().unwrap().is_empty());
+        // a sweep job is not served by the scenario trace route
+        assert_eq!(st.handle(&get(&format!("/v1/scenarios/{id}/trace"))).status, 404);
     }
 }

@@ -1,14 +1,17 @@
 //! Tiny stderr logger backing the `log` facade.
 //!
-//! Level comes from `CONTAINERSTRESS_LOG` (error|warn|info|debug|trace),
-//! defaulting to `info`.
+//! Level comes from `CONTAINERSTRESS_LOG`
+//! (`off|error|warn|info|debug|trace`), defaulting to `info`; an
+//! unrecognized value warns once instead of silently meaning `info`.
+//! Lines carry absolute UTC wall-clock timestamps
+//! (`[2026-08-07T12:34:56.789Z INFO  target] …`) so service logs can be
+//! correlated across processes and hosts — the old relative-to-boot
+//! seconds were meaningless outside a single run.
 
 use log::{Level, LevelFilter, Metadata, Record};
-use std::time::Instant;
+use std::time::{SystemTime, UNIX_EPOCH};
 
-struct StderrLogger {
-    start: Instant,
-}
+struct StderrLogger;
 
 impl log::Log for StderrLogger {
     fn enabled(&self, metadata: &Metadata) -> bool {
@@ -19,7 +22,6 @@ impl log::Log for StderrLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let t = self.start.elapsed().as_secs_f64();
         let lvl = match record.level() {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
@@ -27,38 +29,95 @@ impl log::Log for StderrLogger {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
-        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+        eprintln!(
+            "[{} {lvl} {}] {}",
+            utc_timestamp(SystemTime::now()),
+            record.target(),
+            record.args()
+        );
     }
 
     fn flush(&self) {}
+}
+
+/// Gregorian civil date from days since 1970-01-01 (Howard Hinnant's
+/// `civil_from_days`, valid far beyond any plausible log timestamp).
+fn civil_from_days(days: i64) -> (i64, u32, u32) {
+    let z = days + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = z - era * 146_097; // [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = (if mp < 10 { mp + 3 } else { mp - 9 }) as u32;
+    (y + i64::from(m <= 2), m, d)
+}
+
+/// RFC 3339 UTC timestamp with millisecond precision.
+fn utc_timestamp(t: SystemTime) -> String {
+    let d = t.duration_since(UNIX_EPOCH).unwrap_or_default();
+    let secs = d.as_secs();
+    let (year, month, day) = civil_from_days((secs / 86_400) as i64);
+    let tod = secs % 86_400;
+    format!(
+        "{year:04}-{month:02}-{day:02}T{:02}:{:02}:{:02}.{:03}Z",
+        tod / 3600,
+        (tod % 3600) / 60,
+        tod % 60,
+        d.subsec_millis()
+    )
 }
 
 /// Install the logger (idempotent).
 pub fn init() {
     static INIT: std::sync::Once = std::sync::Once::new();
     INIT.call_once(|| {
-        let level = match std::env::var("CONTAINERSTRESS_LOG").as_deref() {
-            Ok("error") => LevelFilter::Error,
-            Ok("warn") => LevelFilter::Warn,
-            Ok("debug") => LevelFilter::Debug,
-            Ok("trace") => LevelFilter::Trace,
-            _ => LevelFilter::Info,
+        crate::obs::touch_process_start();
+        let raw = std::env::var("CONTAINERSTRESS_LOG");
+        let (level, unrecognized) = match raw.as_deref() {
+            Ok("off") => (LevelFilter::Off, None),
+            Ok("error") => (LevelFilter::Error, None),
+            Ok("warn") => (LevelFilter::Warn, None),
+            Ok("info") | Err(_) => (LevelFilter::Info, None),
+            Ok("debug") => (LevelFilter::Debug, None),
+            Ok("trace") => (LevelFilter::Trace, None),
+            Ok(other) => (LevelFilter::Info, Some(other.to_string())),
         };
-        let logger = Box::new(StderrLogger {
-            start: Instant::now(),
-        });
-        if log::set_boxed_logger(logger).is_ok() {
+        if log::set_boxed_logger(Box::new(StderrLogger)).is_ok() {
             log::set_max_level(level);
+            if let Some(bad) = unrecognized {
+                log::warn!(
+                    "unrecognized CONTAINERSTRESS_LOG level '{bad}', defaulting to info \
+                     (expected off|error|warn|info|debug|trace)"
+                );
+            }
         }
     });
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+    use std::time::Duration;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logger smoke test");
+    }
+
+    #[test]
+    fn utc_timestamps_are_absolute() {
+        let at = |secs: u64| utc_timestamp(UNIX_EPOCH + Duration::from_secs(secs));
+        assert_eq!(at(0), "1970-01-01T00:00:00.000Z");
+        assert_eq!(at(1_456_704_000), "2016-02-29T00:00:00.000Z"); // leap day
+        assert_eq!(at(1_583_020_800), "2020-03-01T00:00:00.000Z");
+        assert_eq!(
+            utc_timestamp(UNIX_EPOCH + Duration::from_millis(86_399_999)),
+            "1970-01-01T23:59:59.999Z"
+        );
     }
 }

@@ -204,6 +204,30 @@ impl ExecShared {
     }
 }
 
+/// Point-in-time view of the executor's scheduling state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecutorStats {
+    /// Tasks sitting in job queues, not yet dispatched.
+    pub queued: usize,
+    /// Tasks currently executing on workers.
+    pub running: usize,
+    /// Registered job queues still alive (queued, running, or open).
+    pub jobs: usize,
+    /// Worker threads in the pool.
+    pub workers: usize,
+}
+
+impl ExecutorStats {
+    /// Fraction of workers currently executing a task, in [0, 1].
+    pub fn busy_fraction(&self) -> f64 {
+        if self.workers == 0 {
+            0.0
+        } else {
+            self.running as f64 / self.workers as f64
+        }
+    }
+}
+
 /// Shared work-stealing executor with per-job task queues, weighted fair
 /// interleaving across jobs, and cooperative cancellation.
 ///
@@ -255,6 +279,21 @@ impl TrialExecutor {
     /// Whether fair interleaving is enabled.
     pub fn fair(&self) -> bool {
         self.shared.fair
+    }
+
+    /// Instantaneous scheduler snapshot (drives the `executor.*` gauges
+    /// served by `GET /metrics`): queue depth, busy workers, and live job
+    /// queues under one lock, so the numbers are mutually consistent.
+    pub fn stats(&self) -> ExecutorStats {
+        let st = self.shared.state.lock().unwrap();
+        let queued = st.queues.iter().map(|q| q.tasks.len()).sum();
+        let running = st.queues.iter().map(|q| q.running).sum();
+        ExecutorStats {
+            queued,
+            running,
+            jobs: st.queues.len(),
+            workers: self.shared.workers,
+        }
     }
 
     /// Register a job with the given fair-share `weight` (clamped to
@@ -687,6 +726,38 @@ mod tests {
         drop(job);
         exec.shutdown();
         assert_eq!(done.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn stats_snapshot_tracks_queue_depth_and_busy_workers() {
+        let exec = TrialExecutor::new(2, true);
+        let s = exec.stats();
+        assert_eq!((s.queued, s.running, s.jobs, s.workers), (0, 0, 0, 2));
+        assert_eq!(s.busy_fraction(), 0.0);
+        let job = exec.register(1.0);
+        let gate = Arc::new(std::sync::Barrier::new(2));
+        {
+            let gate = Arc::clone(&gate);
+            job.submit(move || {
+                gate.wait();
+            });
+        }
+        // wait (bounded) for the task to occupy a worker
+        let t0 = std::time::Instant::now();
+        while exec.stats().running < 1 {
+            assert!(t0.elapsed().as_secs() < 10, "task never started");
+            std::thread::yield_now();
+        }
+        let s = exec.stats();
+        assert_eq!(s.running, 1);
+        assert_eq!(s.jobs, 1);
+        assert!((s.busy_fraction() - 0.5).abs() < 1e-12);
+        gate.wait();
+        job.wait_idle();
+        let s = exec.stats();
+        assert_eq!((s.queued, s.running), (0, 0));
+        drop(job);
+        exec.shutdown();
     }
 
     #[test]

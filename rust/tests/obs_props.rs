@@ -1,0 +1,179 @@
+//! Observability substrate properties: the metrics [`Registry`] under
+//! concurrent hammering, [`Histogram`] merge/quantile contracts over
+//! generated distributions, and the fixed-memory bounds that let a
+//! long-lived `serve` process record telemetry forever.
+
+use containerstress::metrics::{Histogram, Registry};
+use containerstress::obs::FlightRecorder;
+
+/// Deterministic LCG (no rand crate offline) → uniform f64 in (0, 1].
+struct Lcg(u64);
+
+impl Lcg {
+    fn next_f64(&mut self) -> f64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        ((self.0 >> 11) as f64 + 1.0) / (1u64 << 53) as f64
+    }
+}
+
+/// Empirical quantile of a sorted sample, matching the histogram's
+/// rank convention (`ceil(q·n)`, 1-based).
+fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+    let rank = ((q * sorted.len() as f64).ceil() as usize).max(1);
+    sorted[rank - 1]
+}
+
+#[test]
+fn registry_survives_concurrent_hammering_with_exact_totals() {
+    let r = Registry::new();
+    const THREADS: usize = 8;
+    const OPS: usize = 10_000;
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let r = &r;
+            s.spawn(move || {
+                for i in 0..OPS {
+                    r.inc("ops");
+                    r.add("bulk", 2);
+                    r.sample("lat", (1 + (i % 997)) as f64 * 1e-6);
+                    r.set_gauge("depth", t as f64);
+                }
+            });
+        }
+    });
+    assert_eq!(r.counter("ops"), (THREADS * OPS) as u64);
+    assert_eq!(r.counter("bulk"), 2 * (THREADS * OPS) as u64);
+    let h = r.histogram("lat").expect("samples recorded");
+    assert_eq!(h.count(), (THREADS * OPS) as u64, "no sample may be lost");
+    let g = r.gauge("depth").expect("gauge set");
+    assert!(
+        (0.0..THREADS as f64).contains(&g),
+        "last write came from a thread"
+    );
+    // The exposition formats must stay coherent mid/after contention.
+    let prom = r.render_prometheus();
+    assert!(prom.contains("ops_total 80000"));
+    assert!(prom.contains("lat_count 80000"));
+}
+
+#[test]
+fn registry_memory_is_bounded_under_sustained_sampling() {
+    let r = Registry::new();
+    // A long-lived service records HTTP latencies forever; the histogram
+    // layout must stay at its fixed slot count no matter the volume.
+    let mut rng = Lcg(7);
+    for _ in 0..200_000 {
+        r.sample("service.http.request_seconds", rng.next_f64() * 10.0);
+    }
+    let h = r.histogram("service.http.request_seconds").unwrap();
+    assert_eq!(h.count(), 200_000);
+    // Non-empty buckets can never exceed the fixed layout, and the
+    // cumulative series the Prometheus renderer walks is bounded too.
+    assert!(h.cumulative_buckets().len() <= Histogram::BUCKETS);
+    // A clone (what `Registry::histogram` hands out) costs the same fixed
+    // layout — merging snapshots cannot grow it either.
+    let mut merged = Histogram::new();
+    for _ in 0..16 {
+        merged.merge(&h);
+    }
+    assert_eq!(merged.count(), 16 * 200_000);
+    assert!(merged.cumulative_buckets().len() <= Histogram::BUCKETS);
+}
+
+#[test]
+fn histogram_merge_equals_combined_recording_across_shards() {
+    // Property: recording a stream into S shards and merging is
+    // indistinguishable (counts, sums, quantiles) from one histogram.
+    let mut rng = Lcg(42);
+    let mut shards: Vec<Histogram> = (0..5).map(|_| Histogram::new()).collect();
+    let mut combined = Histogram::new();
+    let mut values = Vec::new();
+    for i in 0..50_000 {
+        // Log-uniform across ~9 decades: exercises many octaves.
+        let v = 1e-8 * (10f64).powf(rng.next_f64() * 9.0);
+        shards[i % 5].record(v);
+        combined.record(v);
+        values.push(v);
+    }
+    let mut merged = Histogram::new();
+    for s in &shards {
+        merged.merge(s);
+    }
+    assert_eq!(merged.count(), combined.count());
+    assert!((merged.sum() - combined.sum()).abs() <= 1e-9 * combined.sum());
+    assert_eq!(merged.min(), combined.min());
+    assert_eq!(merged.max(), combined.max());
+    for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99] {
+        assert_eq!(merged.quantile(q), combined.quantile(q), "q={q}");
+    }
+    // And both honour the documented ≤5% bound against the raw sample.
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for q in [0.1, 0.5, 0.9] {
+        let exact = exact_quantile(&values, q);
+        let got = merged.quantile(q).unwrap();
+        let rel = (got - exact).abs() / exact;
+        assert!(rel <= 0.05, "q={q}: got {got:e}, exact {exact:e}, rel {rel}");
+    }
+}
+
+#[test]
+fn quantile_error_bound_holds_across_distributions() {
+    // Uniform, heavy-tailed (u²), and microsecond-scale latency shapes.
+    let shapes: [(&str, fn(f64) -> f64); 3] = [
+        ("uniform", |u| u),
+        ("heavy-tail", |u| u * u * 100.0),
+        ("micro-latency", |u| 1e-6 * (1.0 + 50.0 * u)),
+    ];
+    for (label, f) in shapes {
+        let mut rng = Lcg(1234);
+        let mut h = Histogram::new();
+        let mut values = Vec::new();
+        for _ in 0..20_000 {
+            let v = f(rng.next_f64());
+            h.record(v);
+            values.push(v);
+        }
+        values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.05, 0.25, 0.5, 0.75, 0.95, 0.99] {
+            let exact = exact_quantile(&values, q);
+            let got = h.quantile(q).unwrap();
+            let rel = (got - exact).abs() / exact;
+            assert!(
+                rel <= 0.05,
+                "{label} q={q}: got {got:e}, exact {exact:e}, rel {rel}"
+            );
+        }
+    }
+}
+
+#[test]
+fn flight_recorder_ring_is_bounded_under_sustained_load() {
+    use std::time::{Duration, Instant};
+    let rec = FlightRecorder::with_capacity("load", 256);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let rec = &rec;
+            s.spawn(move || {
+                for i in 0..5_000u64 {
+                    rec.push(
+                        "trial",
+                        "train",
+                        t0 + Duration::from_micros(i),
+                        t0 + Duration::from_micros(i + 5),
+                        Duration::ZERO,
+                        String::new(),
+                    );
+                }
+            });
+        }
+    });
+    // 20 000 pushes through a 256-slot ring: bounded, nothing unaccounted.
+    let spans = rec.snapshot();
+    assert_eq!(spans.len(), 256, "ring must hold exactly its capacity");
+    assert_eq!(rec.dropped(), 20_000 - 256);
+    assert!(spans.windows(2).all(|w| w[0].start_us <= w[1].start_us));
+}

@@ -442,6 +442,96 @@ fn scenario_cancellation_honours_delete_like_sweep_jobs() {
     server.shutdown();
 }
 
+/// Raw roundtrip carrying an `x-request-id` header; returns the full
+/// response text (status line + headers + body) for header assertions.
+fn raw_request_with_id(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    rid: &str,
+) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let body = body.unwrap_or("");
+    let raw = format!(
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nx-request-id: {rid}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(raw.as_bytes()).expect("send");
+    let mut out = String::new();
+    stream.read_to_string(&mut out).expect("recv");
+    out
+}
+
+#[test]
+fn trace_timeline_is_ordered_and_carries_request_id() {
+    let _guard = sweep_lock();
+    let server = Server::start(&test_config(), Backend::Native).expect("server");
+    let addr = server.addr();
+
+    // Submit under an explicit correlation ID; the response echoes it.
+    let out =
+        raw_request_with_id(addr, "POST", "/v1/scope", Some(SMALL_SCOPE_BODY), "e2e-trace-42");
+    assert!(out.starts_with("HTTP/1.1 202 "), "{out}");
+    assert!(out.contains("x-request-id: e2e-trace-42"), "{out}");
+    let payload = out.split("\r\n\r\n").nth(1).unwrap();
+    let id = Json::parse(payload)
+        .unwrap()
+        .get("job_id")
+        .unwrap()
+        .as_f64()
+        .unwrap() as u64;
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        assert!(Instant::now() < deadline, "job {id} timed out");
+        let (st, _) = job_status(addr, id);
+        match st.as_str() {
+            "done" => break,
+            "queued" | "running" => std::thread::sleep(Duration::from_millis(5)),
+            other => panic!("job status {other:?}"),
+        }
+    }
+
+    // The flight-recorder timeline: keyed by the caller's ID, non-empty,
+    // ordered by start offset, with per-phase queue-wait vs run-time.
+    let (status, t) = request(addr, "GET", &format!("/v1/jobs/{id}/trace"), None);
+    assert_eq!(status, 200, "{t}");
+    assert_eq!(t.get("trace_id").and_then(Json::as_str), Some("e2e-trace-42"));
+    let spans = t.get("spans").unwrap().as_arr().unwrap();
+    assert!(!spans.is_empty(), "completed job must carry spans");
+    let mut prev = 0.0;
+    let mut phases = Vec::new();
+    for s in spans {
+        let start = s.get("start_us").unwrap().as_f64().unwrap();
+        let end = s.get("end_us").unwrap().as_f64().unwrap();
+        assert!(start >= prev, "timeline out of order: {t}");
+        assert!(end >= start, "span ends before it starts: {t}");
+        assert!(s.get("queue_us").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(s.get("run_us").unwrap().as_f64().unwrap() >= 0.0);
+        phases.push(s.get("phase").and_then(Json::as_str).unwrap().to_string());
+        prev = start;
+    }
+    for want in ["train", "surveil", "run"] {
+        assert!(phases.iter().any(|p| p == want), "missing {want}: {phases:?}");
+    }
+
+    // Scenario trace route refuses sweep jobs; Prometheus exposition and
+    // the unknown-format guard answer over the wire as well.
+    let (status, _) = request(addr, "GET", &format!("/v1/scenarios/{id}/trace"), None);
+    assert_eq!(status, 404);
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let scrape = b"GET /metrics?format=prometheus HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n";
+    stream.write_all(scrape).unwrap();
+    let mut prom = String::new();
+    stream.read_to_string(&mut prom).unwrap();
+    assert!(prom.starts_with("HTTP/1.1 200 "), "{prom}");
+    assert!(prom.contains("# TYPE"), "{prom}");
+    let (status, _) = request(addr, "GET", "/metrics?format=csv", None);
+    assert_eq!(status, 400);
+
+    server.shutdown();
+}
+
 #[test]
 fn service_rejects_bad_requests() {
     let server = Server::start(&test_config(), Backend::Native).expect("server");
