@@ -51,6 +51,15 @@ pub struct ServiceConfig {
     /// Emit one HTTP access-log line per request (method, path, status,
     /// latency, request ID) on the `http.access` log target.
     pub access_log: bool,
+    /// HTTP/1.1 keep-alive: serve multiple (pipelined) requests per
+    /// connection. Off reverts to the one-shot `Connection: close` model.
+    pub keep_alive: bool,
+    /// Requests served on one connection before the server closes it
+    /// (bounds per-connection resource lifetime under keep-alive).
+    pub keep_alive_max_requests: usize,
+    /// Heartbeat cadence (ms) on idle `/events` streams, keeping slow
+    /// jobs distinguishable from dead connections.
+    pub stream_heartbeat_ms: u64,
 }
 
 impl Default for ServiceConfig {
@@ -63,6 +72,9 @@ impl Default for ServiceConfig {
             executor_workers: 0,
             fair_share: true,
             access_log: false,
+            keep_alive: true,
+            keep_alive_max_requests: 1024,
+            stream_heartbeat_ms: 1000,
         }
     }
 }
@@ -229,6 +241,26 @@ impl Config {
                     anyhow::anyhow!("service.access_log must be a boolean")
                 })?;
             }
+            if let Some(v) = s.get("keep_alive") {
+                self.service.keep_alive = v.as_bool().ok_or_else(|| {
+                    anyhow::anyhow!("service.keep_alive must be a boolean")
+                })?;
+            }
+            if let Some(v) = s.get("keep_alive_max_requests") {
+                self.service.keep_alive_max_requests = v.as_usize().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "service.keep_alive_max_requests must be a non-negative integer"
+                    )
+                })?;
+            }
+            if let Some(v) = s.get("stream_heartbeat_ms") {
+                self.service.stream_heartbeat_ms =
+                    v.as_usize().map(|n| n as u64).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "service.stream_heartbeat_ms must be a non-negative integer"
+                        )
+                    })?;
+            }
             match s.get("cache_dir") {
                 None => {}
                 Some(Json::Null) => self.service.cache_dir = None,
@@ -295,6 +327,21 @@ impl Config {
                 _ => anyhow::bail!("--access-log expects true|false, got '{v}'"),
             };
         }
+        if let Some(v) = args.get("keep-alive") {
+            self.service.keep_alive = match v {
+                "true" | "yes" | "on" => true,
+                "false" | "no" | "off" => false,
+                _ => anyhow::bail!("--keep-alive expects true|false, got '{v}'"),
+            };
+        }
+        self.service.keep_alive_max_requests = args.get_usize(
+            "keep-alive-max-requests",
+            self.service.keep_alive_max_requests,
+        )?;
+        self.service.stream_heartbeat_ms = args.get_u64(
+            "stream-heartbeat-ms",
+            self.service.stream_heartbeat_ms,
+        )?;
         if let Some(v) = args.get("cache-dir") {
             self.service.cache_dir = if v == "none" || v.is_empty() {
                 None
@@ -348,6 +395,14 @@ impl Config {
         self.sweep.validate()?;
         anyhow::ensure!(self.service.queue_cap >= 1, "queue_cap must be ≥ 1");
         anyhow::ensure!(!self.service.host.is_empty(), "service host must be set");
+        anyhow::ensure!(
+            self.service.keep_alive_max_requests >= 1,
+            "keep_alive_max_requests must be ≥ 1"
+        );
+        anyhow::ensure!(
+            self.service.stream_heartbeat_ms >= 1,
+            "stream_heartbeat_ms must be ≥ 1"
+        );
         if let Some(s) = &self.scenario {
             s.validate()?;
         }
@@ -419,6 +474,15 @@ impl Config {
                     ),
                     ("fair_share", Json::Bool(self.service.fair_share)),
                     ("access_log", Json::Bool(self.service.access_log)),
+                    ("keep_alive", Json::Bool(self.service.keep_alive)),
+                    (
+                        "keep_alive_max_requests",
+                        Json::Num(self.service.keep_alive_max_requests as f64),
+                    ),
+                    (
+                        "stream_heartbeat_ms",
+                        Json::Num(self.service.stream_heartbeat_ms as f64),
+                    ),
                 ]),
             ),
         ];
@@ -609,6 +673,54 @@ mod tests {
         std::fs::write(
             &path,
             r#"{"backend": "native", "service": {"executor_workers": -2}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_file(path.to_str().unwrap()).is_err());
+    }
+
+    #[test]
+    fn wire_knobs_from_flags_file_and_roundtrip() {
+        let mut cfg = Config::default();
+        assert!(cfg.service.keep_alive);
+        assert_eq!(cfg.service.keep_alive_max_requests, 1024);
+        assert_eq!(cfg.service.stream_heartbeat_ms, 1000);
+        cfg.apply_args(&args(
+            "serve --keep-alive off --keep-alive-max-requests 8 \
+             --stream-heartbeat-ms 250 --backend native",
+        ))
+        .unwrap();
+        assert!(!cfg.service.keep_alive);
+        assert_eq!(cfg.service.keep_alive_max_requests, 8);
+        assert_eq!(cfg.service.stream_heartbeat_ms, 250);
+
+        // file roundtrip keeps every wire knob
+        let path = std::env::temp_dir().join("cs_config_wire.json");
+        std::fs::write(&path, cfg.to_json().to_pretty()).unwrap();
+        let cfg2 = Config::from_file(path.to_str().unwrap()).unwrap();
+        assert!(!cfg2.service.keep_alive);
+        assert_eq!(cfg2.service.keep_alive_max_requests, 8);
+        assert_eq!(cfg2.service.stream_heartbeat_ms, 250);
+
+        // malformed knobs are errors, not silent defaults
+        let mut bad = Config::default();
+        assert!(bad.apply_args(&args("serve --keep-alive maybe")).is_err());
+        let mut bad = Config::default();
+        assert!(bad
+            .apply_args(&args("serve --keep-alive-max-requests 0"))
+            .is_err());
+        let mut bad = Config::default();
+        assert!(bad
+            .apply_args(&args("serve --stream-heartbeat-ms 0"))
+            .is_err());
+        std::fs::write(
+            &path,
+            r#"{"backend": "native", "service": {"keep_alive": "yes"}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_file(path.to_str().unwrap()).is_err());
+        std::fs::write(
+            &path,
+            r#"{"backend": "native", "service": {"stream_heartbeat_ms": "fast"}}"#,
         )
         .unwrap();
         assert!(Config::from_file(path.to_str().unwrap()).is_err());

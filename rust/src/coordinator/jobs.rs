@@ -19,7 +19,7 @@ use super::sweep::{
     SweepResult, SweepSpec,
 };
 use crate::metrics::Registry;
-use crate::obs::{self, FlightRecorder};
+use crate::obs::{self, EventBus, FlightRecorder};
 use crate::scenario::fleet::{
     run_scenario_executor, ScenarioOutcome, ScenarioProgress, ScenarioSnapshot,
 };
@@ -82,6 +82,9 @@ struct JobEntry {
     cancel: CancelToken,
     /// Per-job span ring buffer, served by `GET /v1/jobs/{id}/trace`.
     recorder: Arc<FlightRecorder>,
+    /// Per-job live event bus, served by `GET /v1/jobs/{id}/events`;
+    /// closed (with a terminal summary in its history) when the job ends.
+    events: Arc<EventBus>,
 }
 
 struct Shared {
@@ -294,6 +297,15 @@ impl ScopingService {
         let recorder = Arc::new(FlightRecorder::new(
             trace_id.unwrap_or_else(obs::mint_trace_id),
         ));
+        // One bus per job: sweep cell retirements and scenario unit
+        // completions publish to it; the driver closes it with a terminal
+        // summary, so late `/events` subscribers replay the full story.
+        let events = Arc::new(EventBus::new());
+        progress.attach_events(Arc::clone(&events));
+        if let Some(s) = &scenario {
+            s.attach_events(Arc::clone(&events));
+        }
+        let scen_progress = scenario.clone();
         let submitted = Instant::now();
         let id = {
             let mut jobs = self.shared.jobs.lock().unwrap();
@@ -317,6 +329,7 @@ impl ScopingService {
                     scenario,
                     cancel: ticket.cancel_token(),
                     recorder: Arc::clone(&recorder),
+                    events: Arc::clone(&events),
                 },
             );
             id
@@ -338,13 +351,13 @@ impl ScopingService {
                 // `obs::current()`; dispatch points clone it into executor
                 // task closures themselves.
                 let _obs_guard = obs::install(Some(Arc::clone(&recorder)));
-                let status = work(ticket, progress);
+                let status = work(ticket, Arc::clone(&progress));
                 let ended = Instant::now();
                 recorder.push("job", "run", started, ended, queue_wait, format!("job={id}"));
                 Registry::global().time("service.job_seconds", ended - started);
                 let mut jobs = shared.jobs.lock().unwrap();
                 if let Some(e) = jobs.get_mut(&id) {
-                    e.status = status;
+                    e.status = status.clone();
                 }
                 // Evict the oldest completed entries beyond the retention
                 // bound (ids are monotonic → oldest = min).
@@ -360,6 +373,35 @@ impl ScopingService {
                     }
                 }
                 drop(jobs);
+                // Terminal summary: published after the status flip (a
+                // poller woken by the event observes the final status) and
+                // before close(), so late subscribers still replay it from
+                // the bus history.
+                let (state, error) = match &status {
+                    JobStatus::Done(_) | JobStatus::DoneScenario(_) => ("done", None),
+                    JobStatus::Cancelled => ("cancelled", None),
+                    JobStatus::Failed(e) => ("failed", Some(e.clone())),
+                    JobStatus::Queued | JobStatus::Running => ("running", None),
+                };
+                let p = progress.snapshot();
+                let mut fields = vec![
+                    ("event", Json::Str("summary".to_string())),
+                    ("job", Json::Num(id as f64)),
+                    ("status", Json::Str(state.to_string())),
+                    ("trials_done", Json::Num(p.trials_done as f64)),
+                    ("cells_done", Json::Num(p.cells_done as f64)),
+                    ("cells_total", Json::Num(p.cells_total as f64)),
+                ];
+                if let Some(s) = &scen_progress {
+                    let sp = s.snapshot();
+                    fields.push(("units_done", Json::Num(sp.units_done as f64)));
+                    fields.push(("units_total", Json::Num(sp.units_total as f64)));
+                }
+                if let Some(e) = error {
+                    fields.push(("error", Json::Str(e)));
+                }
+                events.publish_json(&Json::obj(fields));
+                events.close();
                 shared.done.notify_all();
             });
         match driver {
@@ -464,6 +506,31 @@ impl ScopingService {
             .unwrap()
             .get(&id)
             .and_then(|e| e.scenario.as_ref().map(|p| p.snapshot()))
+    }
+
+    /// The job's flight recorder (`None` for unknown ids) — lets the
+    /// service layer record wire-level spans (e.g. an `/events` stream's
+    /// lifetime) into the job's own timeline.
+    pub fn recorder(&self, id: JobId) -> Option<Arc<FlightRecorder>> {
+        self.shared
+            .jobs
+            .lock()
+            .unwrap()
+            .get(&id)
+            .map(|e| Arc::clone(&e.recorder))
+    }
+
+    /// Live event bus of a job (`None` for unknown ids). Subscribing to
+    /// a completed job's bus replays its retained event history — always
+    /// ending with the terminal `summary` event — and delivers nothing
+    /// live (the bus is closed).
+    pub fn events(&self, id: JobId) -> Option<Arc<EventBus>> {
+        self.shared
+            .jobs
+            .lock()
+            .unwrap()
+            .get(&id)
+            .map(|e| Arc::clone(&e.events))
     }
 
     /// Ordered span timeline of a job's flight recorder (`None` for
@@ -624,6 +691,38 @@ mod tests {
         assert!(phases.contains(&"surveil"), "{phases:?}");
         assert!(phases.contains(&"run"), "{phases:?}");
         assert!(svc.trace(999).is_none());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn job_event_bus_ends_with_matching_summary() {
+        let svc = ScopingService::start(Backend::Native, 8);
+        let id = svc.submit(tiny_spec()).unwrap();
+        svc.wait(id).unwrap();
+        let bus = svc.events(id).expect("bus available after completion");
+        let (replay, live) = bus.subscribe();
+        assert!(live.is_none(), "completed job's bus must be closed");
+        let last = Json::parse(&replay.last().expect("history non-empty").line).unwrap();
+        assert_eq!(last.get("event").and_then(Json::as_str), Some("summary"));
+        assert_eq!(last.get("status").and_then(Json::as_str), Some("done"));
+        let p = svc.progress(id).unwrap();
+        assert_eq!(
+            last.get("cells_done").and_then(Json::as_f64),
+            Some(p.cells_done as f64)
+        );
+        // every cell retirement was published ahead of the summary
+        let cells = replay
+            .iter()
+            .filter(|e| {
+                Json::parse(&e.line)
+                    .ok()
+                    .and_then(|j| j.get("event").and_then(Json::as_str).map(str::to_string))
+                    .as_deref()
+                    == Some("cell")
+            })
+            .count();
+        assert_eq!(cells, p.cells_total);
+        assert!(svc.events(999).is_none());
         svc.shutdown();
     }
 

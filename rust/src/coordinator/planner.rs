@@ -173,6 +173,7 @@ fn retire(
         progress.cells_interpolated.fetch_add(1, Ordering::SeqCst);
     }
     progress.cells_done.fetch_add(1, Ordering::SeqCst);
+    progress.emit_cell(s.key, if s.interpolated { "interpolated" } else { "measured" });
 }
 
 /// Submit trials `scheduled..goal` of cell `i` to the executor; returns
@@ -321,6 +322,7 @@ pub(crate) fn run_adaptive(
     for &key in &keys {
         if spec.is_gap(key) {
             gaps += 1;
+            progress.emit_cell(key, "gap");
             continue;
         }
         let mut costs = CellCosts::default();

@@ -37,6 +37,8 @@
 use crate::linalg::Mat;
 use crate::metrics::Registry;
 use crate::models;
+use crate::obs::EventBus;
+use crate::util::json::Json;
 use crate::mset;
 use crate::runtime::mset::{DeviceAakr, DeviceMset};
 use crate::runtime::DeviceHandle;
@@ -47,7 +49,7 @@ use crate::util::threadpool::{CancelToken, JobTicket, TrialExecutor};
 use crate::util::Summary;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Sentinel error the sweep engine returns when its job's cancellation
@@ -75,9 +77,52 @@ pub struct SweepProgress {
     pub cells_done: AtomicUsize,
     /// Cells accepted at pilot precision by the planner's surface model.
     pub cells_interpolated: AtomicUsize,
+    /// Live event sink for `/events` streams; attached once by the job
+    /// layer before the sweep starts (absent for library callers, which
+    /// keeps the hot path free of any publishing cost).
+    events: OnceLock<Arc<EventBus>>,
 }
 
 impl SweepProgress {
+    /// Attach the live event bus cell retirements publish to. At most one
+    /// bus per progress; later calls are no-ops.
+    pub fn attach_events(&self, bus: Arc<EventBus>) {
+        let _ = self.events.set(bus);
+    }
+
+    /// The attached live event bus, if any.
+    pub fn event_bus(&self) -> Option<&Arc<EventBus>> {
+        self.events.get()
+    }
+
+    /// Publish a cell-retirement event to the attached bus (no-op
+    /// without one). `source` says how the cell's summary was obtained:
+    /// `"measured"`, `"cached"`, `"interpolated"`, or `"gap"`.
+    pub fn emit_cell(&self, key: CellKey, source: &str) {
+        if let Some(bus) = self.events.get() {
+            bus.publish_json(&Json::obj(vec![
+                ("event", Json::Str("cell".to_string())),
+                (
+                    "cell",
+                    Json::Str(format!("{}/{}/{}", key.n, key.m, key.obs)),
+                ),
+                ("source", Json::Str(source.to_string())),
+                (
+                    "cells_done",
+                    Json::Num(self.cells_done.load(Ordering::SeqCst) as f64),
+                ),
+                (
+                    "cells_total",
+                    Json::Num(self.cells_total.load(Ordering::SeqCst) as f64),
+                ),
+                (
+                    "trials_done",
+                    Json::Num(self.trials_done.load(Ordering::SeqCst) as f64),
+                ),
+            ]));
+        }
+    }
+
     /// Plain-value copy for status reporting (each field is read
     /// atomically; the set is only loosely consistent, which is fine for
     /// a progress gauge).
@@ -626,6 +671,7 @@ fn run_exhaustive_streaming(
         if spec.is_gap(key) {
             cells[i] = Some(gap_measure(key));
             progress.cells_done.fetch_add(1, Ordering::SeqCst);
+            progress.emit_cell(key, "gap");
             continue;
         }
         let mut costs = CellCosts::default();
@@ -639,6 +685,7 @@ fn run_exhaustive_streaming(
         if have >= spec.trials {
             cells[i] = Some(measure_of(key, &costs));
             progress.cells_done.fetch_add(1, Ordering::SeqCst);
+            progress.emit_cell(key, "cached");
             continue;
         }
         let fresh_n = spec.trials - have;
@@ -705,6 +752,7 @@ fn run_exhaustive_streaming(
                     }
                     cells[i] = Some(measure_of(acc.key, &acc.costs));
                     progress.cells_done.fetch_add(1, Ordering::SeqCst);
+                    progress.emit_cell(acc.key, "measured");
                 }
             }
             Err(e) => {

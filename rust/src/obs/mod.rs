@@ -26,7 +26,7 @@ use crate::util::json::Json;
 use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 /// Default ring capacity per job: enough for every phase of a typical
@@ -233,6 +233,129 @@ pub fn mint_trace_id() -> String {
     format!("{:016x}", fnv1a(&bytes))
 }
 
+/// Default bounded event history retained per [`EventBus`] for replay to
+/// late subscribers.
+pub const DEFAULT_EVENT_HISTORY: usize = 256;
+
+/// One published progress event: a pre-serialised compact JSON object (one
+/// NDJSON line, newline excluded) plus its per-bus sequence number.
+#[derive(Clone, Debug)]
+pub struct BusEvent {
+    /// Monotone per-bus sequence number, starting at 0.
+    pub seq: u64,
+    /// Compact JSON object text.
+    pub line: Arc<str>,
+}
+
+#[derive(Debug)]
+struct BusInner {
+    history: VecDeque<BusEvent>,
+    subscribers: Vec<mpsc::Sender<BusEvent>>,
+    next_seq: u64,
+    dropped: u64,
+    closed: bool,
+}
+
+/// Per-job progress event bus feeding the `/events` streaming endpoints.
+///
+/// Publishers (planner cell retirements, exhaustive-sweep retirements,
+/// scenario units, the job driver's terminal summary) push serialised JSON
+/// lines; each subscriber gets a bounded history replay plus a live
+/// channel. Memory is bounded: the history ring keeps the most recent
+/// [`DEFAULT_EVENT_HISTORY`] events (older ones are counted in
+/// `dropped`), and a subscriber that goes away is pruned on the next
+/// publish. After [`EventBus::close`] the live channels disconnect and
+/// late subscribers see history only — which always includes the terminal
+/// event, since it is published last.
+#[derive(Debug)]
+pub struct EventBus {
+    capacity: usize,
+    inner: Mutex<BusInner>,
+}
+
+impl Default for EventBus {
+    fn default() -> Self {
+        EventBus::new()
+    }
+}
+
+impl EventBus {
+    /// Bus with the default history capacity.
+    pub fn new() -> EventBus {
+        EventBus::with_capacity(DEFAULT_EVENT_HISTORY)
+    }
+
+    /// Bus with an explicit history capacity (min 1).
+    pub fn with_capacity(capacity: usize) -> EventBus {
+        EventBus {
+            capacity: capacity.max(1),
+            inner: Mutex::new(BusInner {
+                history: VecDeque::new(),
+                subscribers: Vec::new(),
+                next_seq: 0,
+                dropped: 0,
+                closed: false,
+            }),
+        }
+    }
+
+    /// Publish one pre-serialised event line (ignored after close).
+    pub fn publish(&self, line: String) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return;
+        }
+        let ev = BusEvent {
+            seq: inner.next_seq,
+            line: Arc::from(line.as_str()),
+        };
+        inner.next_seq += 1;
+        if inner.history.len() >= self.capacity {
+            inner.history.pop_front();
+            inner.dropped += 1;
+        }
+        inner.history.push_back(ev.clone());
+        inner.subscribers.retain(|tx| tx.send(ev.clone()).is_ok());
+    }
+
+    /// Publish a JSON object as a compact event line.
+    pub fn publish_json(&self, v: &Json) {
+        self.publish(v.to_string());
+    }
+
+    /// Close the bus: live subscriber channels disconnect (after draining
+    /// already-sent events) and further publishes are ignored.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        inner.subscribers.clear();
+    }
+
+    /// Whether [`EventBus::close`] has been called.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Events evicted from the history ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Subscribe: returns the retained history for replay and, while the
+    /// bus is open, a live receiver for subsequent events. `None` means
+    /// the bus already closed and the history is complete.
+    pub fn subscribe(&self) -> (Vec<BusEvent>, Option<mpsc::Receiver<BusEvent>>) {
+        let mut inner = self.inner.lock().unwrap();
+        let replay: Vec<BusEvent> = inner.history.iter().cloned().collect();
+        if inner.closed {
+            return (replay, None);
+        }
+        let (tx, rx) = mpsc::channel();
+        inner.subscribers.push(tx);
+        (replay, Some(rx))
+    }
+}
+
 static ACCESS_LOG: AtomicBool = AtomicBool::new(false);
 
 /// Turn HTTP access logging on/off (`containerstress serve --access-log`).
@@ -311,6 +434,44 @@ mod tests {
         assert_ne!(a, b);
         assert_eq!(a.len(), 16);
         assert!(a.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn event_bus_replays_then_streams_live() {
+        let bus = EventBus::new();
+        bus.publish("{\"seq\":\"a\"}".to_string());
+        let (replay, rx) = bus.subscribe();
+        let rx = rx.expect("bus open");
+        assert_eq!(replay.len(), 1);
+        assert_eq!(&*replay[0].line, "{\"seq\":\"a\"}");
+        bus.publish("{\"seq\":\"b\"}".to_string());
+        let live = rx.recv().unwrap();
+        assert_eq!(live.seq, 1);
+        assert_eq!(&*live.line, "{\"seq\":\"b\"}");
+        bus.publish("terminal".to_string());
+        bus.close();
+        // Already-sent events drain; then the channel disconnects.
+        assert_eq!(&*rx.recv().unwrap().line, "terminal");
+        assert!(rx.recv().is_err());
+        // Late subscriber: history only, terminal event included.
+        let (replay, rx) = bus.subscribe();
+        assert!(rx.is_none());
+        assert_eq!(&*replay.last().unwrap().line, "terminal");
+    }
+
+    #[test]
+    fn event_bus_history_is_bounded() {
+        let bus = EventBus::with_capacity(2);
+        for i in 0..5 {
+            bus.publish(format!("e{i}"));
+        }
+        assert_eq!(bus.dropped(), 3);
+        let (replay, _rx) = bus.subscribe();
+        assert_eq!(
+            replay.iter().map(|e| e.line.to_string()).collect::<Vec<_>>(),
+            vec!["e3", "e4"]
+        );
+        assert_eq!(replay[0].seq, 3);
     }
 
     #[test]

@@ -58,27 +58,36 @@ pub fn sensitivity_table(result: &SweepResult, phase: &str) -> anyhow::Result<St
 /// each cell actually ran (uniform in exhaustive mode, per-cell under the
 /// planner).
 pub fn sweep_csv(result: &SweepResult) -> String {
-    let mut out = String::from(
-        "n_signals,n_memvec,n_obs,violated,interpolated,train_median_s,train_iqr_s,surveil_median_s,surveil_iqr_s,trials\n",
-    );
+    let mut out = String::from(sweep_csv_header());
     for c in &result.cells {
-        let fmt = |s: &Option<crate::util::Summary>| match s {
-            Some(s) => format!("{},{}", s.median, s.p75 - s.p25),
-            None => ",".to_string(),
-        };
-        out.push_str(&format!(
-            "{},{},{},{},{},{},{},{}\n",
-            c.key.n,
-            c.key.m,
-            c.key.obs,
-            c.violated,
-            c.interpolated,
-            fmt(&c.train),
-            fmt(&c.surveil),
-            c.train.as_ref().map(|s| s.n).unwrap_or(0),
-        ));
+        out.push_str(&sweep_csv_row(c));
     }
     out
+}
+
+/// The [`sweep_csv`] header line (with trailing newline). Split out so the
+/// service can stream the CSV row-by-row without materialising it.
+pub fn sweep_csv_header() -> &'static str {
+    "n_signals,n_memvec,n_obs,violated,interpolated,train_median_s,train_iqr_s,surveil_median_s,surveil_iqr_s,trials\n"
+}
+
+/// One [`sweep_csv`] data row (with trailing newline) for a single cell.
+pub fn sweep_csv_row(c: &crate::coordinator::CellMeasure) -> String {
+    let fmt = |s: &Option<crate::util::Summary>| match s {
+        Some(s) => format!("{},{}", s.median, s.p75 - s.p25),
+        None => ",".to_string(),
+    };
+    format!(
+        "{},{},{},{},{},{},{},{}\n",
+        c.key.n,
+        c.key.m,
+        c.key.obs,
+        c.violated,
+        c.interpolated,
+        fmt(&c.train),
+        fmt(&c.surveil),
+        c.train.as_ref().map(|s| s.n).unwrap_or(0),
+    )
 }
 
 #[cfg(test)]

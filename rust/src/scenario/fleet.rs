@@ -34,8 +34,9 @@ use crate::shapes::elastic::{ElasticOutcome, ElasticPolicy, GrowthTrace};
 use crate::shapes::{capacity_core_eq, cpu_ladder, Shape};
 use crate::util::json::Json;
 use crate::util::threadpool::{JobTicket, TrialExecutor};
+use crate::obs::EventBus;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Headroom the historical `shapes::elastic::compare` used to pre-scope a
@@ -266,9 +267,45 @@ pub struct ScenarioProgress {
     pub units_total: AtomicUsize,
     /// Simulations completed.
     pub units_done: AtomicUsize,
+    /// Live event sink for `/events` streams; attached once by the job
+    /// layer (absent for library callers).
+    events: OnceLock<Arc<EventBus>>,
 }
 
 impl ScenarioProgress {
+    /// Attach the live event bus unit completions publish to. At most one
+    /// bus per progress; later calls are no-ops.
+    pub fn attach_events(&self, bus: Arc<EventBus>) {
+        let _ = self.events.set(bus);
+    }
+
+    /// The attached live event bus, if any.
+    pub fn event_bus(&self) -> Option<&Arc<EventBus>> {
+        self.events.get()
+    }
+
+    /// Publish a `(policy, tenant)` unit-completion event to the attached
+    /// bus (no-op without one). `epochs` is the simulated epoch count the
+    /// unit replayed.
+    pub fn emit_unit(&self, policy: &str, tenant: usize, epochs: usize) {
+        if let Some(bus) = self.events.get() {
+            bus.publish_json(&Json::obj(vec![
+                ("event", Json::Str("unit".to_string())),
+                ("policy", Json::Str(policy.to_string())),
+                ("tenant", Json::Num(tenant as f64)),
+                ("epochs", Json::Num(epochs as f64)),
+                (
+                    "units_done",
+                    Json::Num(self.units_done.load(Ordering::SeqCst) as f64),
+                ),
+                (
+                    "units_total",
+                    Json::Num(self.units_total.load(Ordering::SeqCst) as f64),
+                ),
+            ]));
+        }
+    }
+
     /// Plain-value copy for status reporting.
     pub fn snapshot(&self) -> ScenarioSnapshot {
         ScenarioSnapshot {
@@ -551,6 +588,7 @@ pub fn run_scenario_executor(
                     rec.push("scenario", "unit", started, Instant::now(), queue_wait, meta);
                 }
                 progress.units_done.fetch_add(1, Ordering::SeqCst);
+                progress.emit_unit(&policies[pi].label(), ti, trace.epochs());
                 let _ = tx.send((pi, ti, run));
             });
         }

@@ -1,36 +1,57 @@
 //! Dependency-free HTTP/1.1 server core.
 //!
 //! `hyper`/`axum` are unavailable in the offline build environment; the
-//! service's needs are small — parse a request, dispatch to a handler,
-//! write a JSON response — so a std `TcpListener` accept loop fanning
-//! connections out over [`crate::util::threadpool::TrialExecutor`] covers
-//! them (one registered job holds the connection queue).
+//! service's needs are small — parse requests, dispatch to a handler,
+//! write JSON or streamed responses — so a std `TcpListener` accept loop
+//! fanning connections out over
+//! [`crate::util::threadpool::TrialExecutor`] covers them (one registered
+//! job holds the connection queue).
 //!
 //! Protocol subset (documented, deliberate):
-//! - one request per connection (`Connection: close` on every response);
-//! - bodies bounded by `Content-Length` (no chunked transfer encoding);
+//! - HTTP/1.1 keep-alive with pipelining: one persistent buffered reader
+//!   per connection parses requests back-to-back off the socket, so bytes
+//!   of a pipelined next request buffered behind the current one are never
+//!   lost. `Connection: close`, HTTP/1.0 without `keep-alive`, a
+//!   per-connection request cap, or any framing error closes.
+//! - bodies arrive either buffered under `Content-Length` or as
+//!   `Transfer-Encoding: chunked`, which is decoded incrementally and fed
+//!   straight through [`crate::util::json::stream`] — the raw bytes are
+//!   never materialised, only the parsed [`Json`] value, under the same
+//!   total-size budget.
+//! - requests carrying *both* `Content-Length` and chunked transfer
+//!   encoding (or conflicting duplicate `Content-Length` values) are
+//!   rejected with 400: ambiguous framing is the classic
+//!   request-smuggling vector.
+//! - responses are either a buffered body with `Content-Length` or a
+//!   [`BodyStream`] written with chunked transfer encoding (NDJSON/SSE
+//!   event feeds, row-streamed CSV); a client disconnect mid-stream fails
+//!   cleanly — the producer is dropped, the pending-connection slot is
+//!   freed, and the outcome is access-logged.
 //! - no percent-decoding — all structured data travels in JSON bodies.
 
 use crate::metrics::Registry;
-use crate::util::json::Json;
+use crate::util::json::{stream, Json};
 use crate::util::threadpool::TrialExecutor;
+use std::fmt;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-/// Largest accepted request body.
+/// Largest accepted request body (buffered or cumulative chunked).
 const MAX_BODY_BYTES: usize = 1 << 20;
-/// Largest accepted request line + headers, in bytes (caps `read_line`
-/// growth — a client streaming garbage without newlines hits EOF here).
-const MAX_HEAD_BYTES: u64 = 8 << 10;
-/// Largest accepted header count.
+/// Largest accepted request line + headers, in bytes.
+const MAX_HEAD_BYTES: usize = 8 << 10;
+/// Largest accepted header count (and chunked-trailer line count).
 const MAX_HEADERS: usize = 64;
-/// Per-read socket timeout.
+/// Per-read socket timeout; also the keep-alive idle timeout while
+/// waiting for the next request on a persistent connection.
 const READ_TIMEOUT: Duration = Duration::from_secs(10);
+/// Per-write socket timeout (a stalled reader cannot pin a worker).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 /// Whole-request deadline (defeats byte-at-a-time trickle within the
-/// per-read timeout).
+/// per-read timeout). Applies per request, not per connection.
 const REQUEST_DEADLINE: Duration = Duration::from_secs(30);
 /// Connections admitted concurrently (handling + queued for a pool
 /// thread); beyond this the accept loop answers 503 and closes rather
@@ -48,8 +69,15 @@ pub struct Request {
     pub query: Vec<(String, String)>,
     /// Lower-cased header names with trimmed values.
     pub headers: Vec<(String, String)>,
-    /// Raw body bytes.
+    /// Raw body bytes (empty for chunked uploads, which are parsed
+    /// incrementally into [`Request::body_json`] instead).
     pub body: Vec<u8>,
+    /// Body parsed incrementally while a chunked upload was decoded; the
+    /// raw bytes were never materialised.
+    pub body_json: Option<Json>,
+    /// True when the request line declared HTTP/1.1 (HTTP/1.0 defaults to
+    /// `Connection: close` semantics).
+    pub http11: bool,
 }
 
 impl Request {
@@ -64,6 +92,15 @@ impl Request {
     /// Body as UTF-8 (errors on invalid encodings).
     pub fn body_str(&self) -> anyhow::Result<&str> {
         std::str::from_utf8(&self.body).map_err(|_| anyhow::anyhow!("body is not valid UTF-8"))
+    }
+
+    /// The body as JSON: the incrementally parsed value for chunked
+    /// uploads, otherwise the buffered bytes parsed in batch.
+    pub fn json_body(&self) -> anyhow::Result<Json> {
+        if let Some(j) = &self.body_json {
+            return Ok(j.clone());
+        }
+        Json::parse(self.body_str()?).map_err(|e| anyhow::anyhow!("{e}"))
     }
 
     /// First header value for `name` (header names are stored
@@ -84,17 +121,80 @@ impl Request {
             .find(|(k, v)| k == "x-request-id" && !v.trim().is_empty())
             .map(|(_, v)| v.as_str())
     }
+
+    /// Whether this request asks the connection to close afterwards
+    /// (explicit `Connection: close`, or HTTP/1.0 without `keep-alive`).
+    fn wants_close(&self) -> bool {
+        let conn = self.header_get("connection").unwrap_or("");
+        let has = |tok: &str| conn.split(',').any(|t| t.trim().eq_ignore_ascii_case(tok));
+        if has("close") {
+            return true;
+        }
+        !self.http11 && !has("keep-alive")
+    }
 }
 
-/// A response ready to serialize.
-#[derive(Debug)]
+/// Producer side of a chunked (streamed) response body.
+///
+/// [`Response`] writes each returned chunk as one HTTP chunk frame and
+/// terminates the stream on `Ok(None)`. An `Err` aborts the connection
+/// without the final zero-length frame, so the client observes
+/// truncation rather than a silently complete body. Implementations are
+/// dropped as soon as the stream ends for any reason (including a client
+/// disconnect mid-body), so `Drop` is the place to release resources
+/// such as event-bus subscriptions.
+pub trait BodyStream: Send {
+    /// Produce the next chunk; `Ok(None)` ends the stream cleanly.
+    /// Empty chunks are skipped (a zero-length HTTP chunk would
+    /// terminate the encoding early).
+    fn next_chunk(&mut self) -> std::io::Result<Option<Vec<u8>>>;
+}
+
+/// Adapts any chunk iterator into a [`BodyStream`] (row-streamed CSV,
+/// pre-framed NDJSON segments, …).
+pub struct IterBody {
+    iter: Box<dyn Iterator<Item = Vec<u8>> + Send>,
+}
+
+impl IterBody {
+    /// Wrap `iter`; each item becomes one chunk.
+    pub fn new(iter: impl Iterator<Item = Vec<u8>> + Send + 'static) -> IterBody {
+        IterBody {
+            iter: Box::new(iter),
+        }
+    }
+}
+
+impl BodyStream for IterBody {
+    fn next_chunk(&mut self) -> std::io::Result<Option<Vec<u8>>> {
+        Ok(self.iter.next())
+    }
+}
+
+/// A response ready to serialize: either a buffered body (written with
+/// `Content-Length`) or a streamed one (written with
+/// `Transfer-Encoding: chunked`).
 pub struct Response {
     /// HTTP status code.
     pub status: u16,
     /// `Content-Type` header value.
     pub content_type: &'static str,
-    /// Raw body bytes.
+    /// Raw body bytes (ignored when `stream` is set).
     pub body: Vec<u8>,
+    /// Streamed body producer; `Some` switches the writer to chunked
+    /// transfer encoding.
+    pub stream: Option<Box<dyn BodyStream>>,
+}
+
+impl fmt::Debug for Response {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Response")
+            .field("status", &self.status)
+            .field("content_type", &self.content_type)
+            .field("body", &self.body)
+            .field("stream", &self.stream.as_ref().map(|_| "<BodyStream>"))
+            .finish()
+    }
 }
 
 impl Response {
@@ -104,6 +204,7 @@ impl Response {
             status,
             content_type: "application/json",
             body: body.to_string().into_bytes(),
+            stream: None,
         }
     }
 
@@ -113,6 +214,17 @@ impl Response {
             status,
             content_type: "text/plain; charset=utf-8",
             body: body.into().into_bytes(),
+            stream: None,
+        }
+    }
+
+    /// Streamed 200 response written with chunked transfer encoding.
+    pub fn streamed(content_type: &'static str, stream: Box<dyn BodyStream>) -> Response {
+        Response {
+            status: 200,
+            content_type,
+            body: Vec::new(),
+            stream: Some(stream),
         }
     }
 
@@ -137,21 +249,10 @@ impl Response {
         }
     }
 
+    /// One-shot close-mode write (accept-loop load shedding).
     fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
-        self.write_with_request_id(stream, None)
-    }
-
-    fn write_with_request_id(
-        &self,
-        stream: &mut TcpStream,
-        request_id: Option<&str>,
-    ) -> std::io::Result<()> {
-        let rid = match request_id {
-            Some(id) => format!("x-request-id: {id}\r\n"),
-            None => String::new(),
-        };
         let head = format!(
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{rid}Connection: close\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
             self.status,
             Response::reason(self.status),
             self.content_type,
@@ -161,21 +262,80 @@ impl Response {
         stream.write_all(&self.body)?;
         stream.flush()
     }
+
+    /// Write the response with keep-alive-aware framing. Returns the body
+    /// bytes written. Consumes `self.stream` when present; an `Err`
+    /// mid-stream means framing is broken and the connection must close.
+    fn write_framed(
+        &mut self,
+        w: &mut dyn Write,
+        request_id: Option<&str>,
+        keep_alive: bool,
+    ) -> std::io::Result<u64> {
+        let rid = match request_id {
+            Some(id) => format!("x-request-id: {id}\r\n"),
+            None => String::new(),
+        };
+        let conn = if keep_alive { "keep-alive" } else { "close" };
+        match self.stream.take() {
+            None => {
+                let head = format!(
+                    "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{rid}Connection: {conn}\r\n\r\n",
+                    self.status,
+                    Response::reason(self.status),
+                    self.content_type,
+                    self.body.len()
+                );
+                w.write_all(head.as_bytes())?;
+                w.write_all(&self.body)?;
+                w.flush()?;
+                Ok(self.body.len() as u64)
+            }
+            Some(mut body) => {
+                let head = format!(
+                    "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\n{rid}Connection: {conn}\r\n\r\n",
+                    self.status,
+                    Response::reason(self.status),
+                    self.content_type,
+                );
+                w.write_all(head.as_bytes())?;
+                let mut total = 0u64;
+                loop {
+                    match body.next_chunk()? {
+                        Some(chunk) => {
+                            if chunk.is_empty() {
+                                continue;
+                            }
+                            write!(w, "{:x}\r\n", chunk.len())?;
+                            w.write_all(&chunk)?;
+                            w.write_all(b"\r\n")?;
+                            w.flush()?;
+                            total += chunk.len() as u64;
+                        }
+                        None => {
+                            w.write_all(b"0\r\n\r\n")?;
+                            w.flush()?;
+                            return Ok(total);
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// A `Read` over a borrowed `TcpStream` that enforces an absolute deadline:
 /// every read gets a socket timeout of `min(remaining, READ_TIMEOUT)`, so a
 /// byte-at-a-time trickle cannot hold a handler thread past the deadline.
+/// The deadline is re-armed per request by the connection loop.
 struct DeadlineStream<'a> {
     stream: &'a TcpStream,
-    deadline: std::time::Instant,
+    deadline: Instant,
 }
 
 impl Read for DeadlineStream<'_> {
     fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
-        let remaining = self
-            .deadline
-            .saturating_duration_since(std::time::Instant::now());
+        let remaining = self.deadline.saturating_duration_since(Instant::now());
         if remaining.is_zero() {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::TimedOut,
@@ -188,73 +348,256 @@ impl Read for DeadlineStream<'_> {
     }
 }
 
-fn read_request(stream: &mut TcpStream) -> anyhow::Result<Request> {
-    let deadline = std::time::Instant::now() + REQUEST_DEADLINE;
-    // The head (request line + headers) is read through a hard byte cap;
-    // the body allowance is added only after Content-Length is validated.
-    let mut reader = BufReader::new(Read::take(
-        DeadlineStream {
-            stream: &*stream,
-            deadline,
-        },
-        MAX_HEAD_BYTES,
-    ));
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
+/// Why a request could not be read off the connection.
+enum ReadError {
+    /// Clean end between requests: EOF before any request bytes, or the
+    /// keep-alive idle timeout elapsed. Close silently.
+    Idle,
+    /// Protocol violation worth a 400 before closing.
+    Bad(String),
+}
+
+impl From<anyhow::Error> for ReadError {
+    fn from(e: anyhow::Error) -> ReadError {
+        ReadError::Bad(e.to_string())
+    }
+}
+
+impl From<std::io::Error> for ReadError {
+    fn from(e: std::io::Error) -> ReadError {
+        ReadError::Bad(e.to_string())
+    }
+}
+
+/// Read one LF-terminated line without ever buffering more than `cap`
+/// bytes, returning it with the trailing `\r?\n` stripped. `Ok(None)`
+/// means EOF arrived before any byte of the line.
+fn read_line_bounded(r: &mut impl BufRead, cap: usize) -> std::io::Result<Option<String>> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let (done, used) = {
+            let buf = r.fill_buf()?;
+            if buf.is_empty() {
+                if line.is_empty() {
+                    return Ok(None);
+                }
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof mid-line",
+                ));
+            }
+            match buf.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    line.extend_from_slice(&buf[..i]);
+                    (true, i + 1)
+                }
+                None => {
+                    line.extend_from_slice(buf);
+                    (false, buf.len())
+                }
+            }
+        };
+        r.consume(used);
+        if line.len() > cap {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "line too long",
+            ));
+        }
+        if done {
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            return String::from_utf8(line)
+                .map(Some)
+                .map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidData, "non-utf8 line"));
+        }
+    }
+}
+
+/// Decode a `Transfer-Encoding: chunked` body off `reader`, feeding every
+/// data byte through the incremental JSON parser so the raw body is never
+/// materialised. Returns the parsed value (`None` for an empty body).
+fn read_chunked_json(
+    reader: &mut BufReader<DeadlineStream<'_>>,
+) -> Result<Option<Json>, ReadError> {
+    let limits = stream::Limits {
+        max_depth: 256,
+        max_token_bytes: MAX_BODY_BYTES,
+    };
+    let mut parser = stream::StreamParser::new(limits);
+    let mut builder = stream::ValueBuilder::new();
+    let mut events = Vec::new();
+    let mut total = 0usize;
+    let mut feed = |parser: &mut stream::StreamParser,
+                    builder: &mut stream::ValueBuilder,
+                    events: &mut Vec<stream::Event>,
+                    bytes: &[u8]|
+     -> Result<(), ReadError> {
+        parser
+            .feed(bytes, events)
+            .map_err(|e| ReadError::Bad(format!("chunked body: {e}")))?;
+        for ev in events.drain(..) {
+            builder
+                .on_event(ev)
+                .map_err(|e| ReadError::Bad(format!("chunked body: {e}")))?;
+        }
+        Ok(())
+    };
+    loop {
+        let size_line = read_line_bounded(reader, 128)?
+            .ok_or_else(|| ReadError::Bad("eof in chunk size".to_string()))?;
+        let hex = size_line.split(';').next().unwrap_or("").trim();
+        let size = usize::from_str_radix(hex, 16)
+            .map_err(|_| ReadError::Bad(format!("bad chunk size '{hex}'")))?;
+        if size == 0 {
+            // Trailer section: bounded header-shaped lines up to a blank.
+            for _ in 0..=MAX_HEADERS {
+                match read_line_bounded(reader, 1 << 10)? {
+                    Some(l) if l.is_empty() => {
+                        if total == 0 {
+                            return Ok(None);
+                        }
+                        let mut events = Vec::new();
+                        parser
+                            .finish(&mut events)
+                            .map_err(|e| ReadError::Bad(format!("chunked body: {e}")))?;
+                        for ev in events.drain(..) {
+                            builder
+                                .on_event(ev)
+                                .map_err(|e| ReadError::Bad(format!("chunked body: {e}")))?;
+                        }
+                        return builder
+                            .take()
+                            .map(Some)
+                            .ok_or_else(|| ReadError::Bad("chunked body: incomplete".to_string()));
+                    }
+                    Some(_) => continue,
+                    None => return Err(ReadError::Bad("eof in trailers".to_string())),
+                }
+            }
+            return Err(ReadError::Bad("too many trailer lines".to_string()));
+        }
+        total = total
+            .checked_add(size)
+            .filter(|&t| t <= MAX_BODY_BYTES)
+            .ok_or_else(|| ReadError::Bad(format!("chunked body too large (> {MAX_BODY_BYTES})")))?;
+        // Stream the chunk data through the parser in bounded slices.
+        let mut remaining = size;
+        let mut scratch = [0u8; 8 << 10];
+        while remaining > 0 {
+            let n = remaining.min(scratch.len());
+            reader.read_exact(&mut scratch[..n])?;
+            feed(&mut parser, &mut builder, &mut events, &scratch[..n])?;
+            remaining -= n;
+        }
+        let mut crlf = [0u8; 2];
+        reader.read_exact(&mut crlf)?;
+        if &crlf != b"\r\n" {
+            return Err(ReadError::Bad("missing chunk terminator".to_string()));
+        }
+    }
+}
+
+/// Parse one request off the persistent connection reader. Pipelined
+/// bytes already buffered in `reader` are consumed before the socket is
+/// touched again, so back-to-back requests written in one segment are
+/// each served in order.
+fn read_request(reader: &mut BufReader<DeadlineStream<'_>>) -> Result<Request, ReadError> {
+    let line = match read_line_bounded(reader, MAX_HEAD_BYTES) {
+        Ok(Some(l)) => l,
+        // EOF or idle timeout between requests: normal keep-alive end.
+        Ok(None) => return Err(ReadError::Idle),
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::WouldBlock
+                    | std::io::ErrorKind::ConnectionReset
+            ) =>
+        {
+            return Err(ReadError::Idle)
+        }
+        Err(e) => return Err(ReadError::Bad(e.to_string())),
+    };
+    let mut head_bytes = line.len();
     let mut parts = line.split_whitespace();
     let method = parts
         .next()
-        .ok_or_else(|| anyhow::anyhow!("empty request line"))?
+        .filter(|m| !m.is_empty())
+        .ok_or_else(|| ReadError::Bad("empty request line".to_string()))?
         .to_string();
     let target = parts
         .next()
-        .ok_or_else(|| anyhow::anyhow!("missing request target"))?
+        .ok_or_else(|| ReadError::Bad("missing request target".to_string()))?
         .to_string();
     let version = parts.next().unwrap_or("");
-    anyhow::ensure!(
-        version.starts_with("HTTP/1."),
-        "unsupported protocol '{version}'"
-    );
+    if !version.starts_with("HTTP/1.") {
+        return Err(ReadError::Bad(format!("unsupported protocol '{version}'")));
+    }
+    let http11 = version == "HTTP/1.1";
 
-    let mut headers = Vec::new();
-    let mut content_len = 0usize;
+    let mut headers: Vec<(String, String)> = Vec::new();
+    let mut content_len: Option<usize> = None;
+    let mut chunked = false;
     loop {
-        anyhow::ensure!(
-            std::time::Instant::now() < deadline,
-            "request deadline exceeded"
-        );
-        let mut h = String::new();
-        let n = reader.read_line(&mut h)?;
-        anyhow::ensure!(n > 0, "unexpected eof in headers (or head too large)");
-        let h = h.trim_end();
+        let h = read_line_bounded(reader, MAX_HEAD_BYTES)?
+            .ok_or_else(|| ReadError::Bad("unexpected eof in headers".to_string()))?;
+        head_bytes += h.len() + 2;
+        if head_bytes > MAX_HEAD_BYTES {
+            return Err(ReadError::Bad("request head too large".to_string()));
+        }
         if h.is_empty() {
             break;
         }
         let (k, v) = h
             .split_once(':')
-            .ok_or_else(|| anyhow::anyhow!("malformed header line"))?;
+            .ok_or_else(|| ReadError::Bad("malformed header line".to_string()))?;
         let k = k.trim().to_ascii_lowercase();
         let v = v.trim().to_string();
         if k == "content-length" {
-            content_len = v
+            let n: usize = v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("bad content-length '{v}'"))?;
+                .map_err(|_| ReadError::Bad(format!("bad content-length '{v}'")))?;
+            // Conflicting duplicate Content-Length headers are the other
+            // classic smuggling vector; identical repeats are tolerated.
+            if content_len.is_some_and(|prev| prev != n) {
+                return Err(ReadError::Bad(
+                    "conflicting content-length headers".to_string(),
+                ));
+            }
+            content_len = Some(n);
+        }
+        if k == "transfer-encoding" {
+            if !v.trim().eq_ignore_ascii_case("chunked") {
+                return Err(ReadError::Bad(format!("unsupported transfer-encoding '{v}'")));
+            }
+            chunked = true;
         }
         headers.push((k, v));
-        anyhow::ensure!(headers.len() <= MAX_HEADERS, "too many headers");
+        if headers.len() > MAX_HEADERS {
+            return Err(ReadError::Bad("too many headers".to_string()));
+        }
     }
-    anyhow::ensure!(
-        content_len <= MAX_BODY_BYTES,
-        "body too large ({content_len} bytes)"
-    );
-    anyhow::ensure!(
-        std::time::Instant::now() < deadline,
-        "request deadline exceeded"
-    );
-    // Extend the read cap to cover exactly the declared body.
-    reader.get_mut().set_limit(content_len as u64);
-    let mut body = vec![0u8; content_len];
-    reader.read_exact(&mut body)?;
+    // Request-smuggling guard: a message with both framings is ambiguous
+    // (RFC 9112 §6.3) — reject instead of picking one.
+    if chunked && content_len.is_some() {
+        return Err(ReadError::Bad(
+            "both content-length and transfer-encoding present".to_string(),
+        ));
+    }
+
+    let (body, body_json) = if chunked {
+        (Vec::new(), read_chunked_json(reader)?)
+    } else {
+        let n = content_len.unwrap_or(0);
+        if n > MAX_BODY_BYTES {
+            return Err(ReadError::Bad(format!("body too large ({n} bytes)")));
+        }
+        let mut body = vec![0u8; n];
+        reader.read_exact(&mut body)?;
+        (body, None)
+    };
 
     let (path, query_raw) = match target.split_once('?') {
         Some((p, q)) => (p.to_string(), q),
@@ -274,56 +617,118 @@ fn read_request(stream: &mut TcpStream) -> anyhow::Result<Request> {
         query,
         headers,
         body,
+        body_json,
+        http11,
     })
 }
 
 /// Connection handler signature: pure request → response.
 pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync + 'static>;
 
-fn handle_connection(mut stream: TcpStream, handler: Handler) {
-    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
-    let t0 = std::time::Instant::now();
-    let (resp, request_id, line) = match read_request(&mut stream) {
-        Ok(mut req) => {
-            // Honour the caller's correlation ID; mint one otherwise and
-            // inject it so handlers observe the same ID the access log
-            // and response header carry.
-            let rid = match req.request_id() {
-                Some(id) => id.to_string(),
-                None => {
-                    let id = crate::obs::mint_trace_id();
-                    req.headers.push(("x-request-id".to_string(), id.clone()));
-                    id
-                }
-            };
-            let line = format!("{} {}", req.method, req.path);
-            ((*handler)(&req), rid, line)
+/// Connection-handling options.
+#[derive(Clone, Copy, Debug)]
+pub struct HttpOptions {
+    /// Keep connections open between requests (HTTP/1.1 persistent
+    /// connections). When false every response carries
+    /// `Connection: close`, restoring the pre-streaming one-shot model.
+    pub keep_alive: bool,
+    /// Requests served per connection before the server forces a close
+    /// (bounds how long one client can pin a worker).
+    pub max_requests_per_conn: usize,
+}
+
+impl Default for HttpOptions {
+    fn default() -> Self {
+        HttpOptions {
+            keep_alive: true,
+            max_requests_per_conn: 1024,
         }
-        Err(e) => (
-            Response::error(400, &format!("bad request: {e}")),
-            crate::obs::mint_trace_id(),
-            "<unparsed>".to_string(),
-        ),
-    };
-    let elapsed = t0.elapsed();
-    let reg = Registry::global();
-    reg.time("service.http.request_seconds", elapsed);
-    reg.inc(match resp.status / 100 {
-        2 => "service.http.responses.2xx",
-        4 => "service.http.responses.4xx",
-        5 => "service.http.responses.5xx",
-        _ => "service.http.responses.other",
-    });
-    if crate::obs::access_log_enabled() {
-        log::info!(
-            target: "http.access",
-            "{line} {} {:.3}ms id={request_id}",
-            resp.status,
-            elapsed.as_secs_f64() * 1e3
-        );
     }
-    if let Err(e) = resp.write_with_request_id(&mut stream, Some(&request_id)) {
-        log::debug!("http: response write failed: {e}");
+}
+
+/// Serve requests off one connection until it closes.
+fn handle_connection(stream: TcpStream, handler: Handler, opts: HttpOptions) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::with_capacity(
+        8 << 10,
+        DeadlineStream {
+            stream: &stream,
+            deadline: Instant::now() + REQUEST_DEADLINE,
+        },
+    );
+    let mut served = 0usize;
+    loop {
+        reader.get_mut().deadline = Instant::now() + REQUEST_DEADLINE;
+        let t0 = Instant::now();
+        let (mut resp, request_id, line, keep) = match read_request(&mut reader) {
+            Ok(mut req) => {
+                served += 1;
+                // Honour the caller's correlation ID; mint one otherwise
+                // and inject it so handlers observe the same ID the
+                // access log and response header carry.
+                let rid = match req.request_id() {
+                    Some(id) => id.to_string(),
+                    None => {
+                        let id = crate::obs::mint_trace_id();
+                        req.headers.push(("x-request-id".to_string(), id.clone()));
+                        id
+                    }
+                };
+                let line = format!("{} {}", req.method, req.path);
+                let keep = opts.keep_alive
+                    && served < opts.max_requests_per_conn
+                    && !req.wants_close();
+                ((*handler)(&req), rid, line, keep)
+            }
+            Err(ReadError::Idle) => return,
+            Err(ReadError::Bad(e)) => (
+                Response::error(400, &format!("bad request: {e}")),
+                crate::obs::mint_trace_id(),
+                "<unparsed>".to_string(),
+                // Framing is unreliable after a parse error; never reuse.
+                false,
+            ),
+        };
+        let streamed = resp.stream.is_some();
+        let status = resp.status;
+        let wrote = resp.write_framed(&mut (&stream), Some(&request_id), keep);
+        let elapsed = t0.elapsed();
+        let reg = Registry::global();
+        reg.time("service.http.request_seconds", elapsed);
+        reg.inc(match status / 100 {
+            2 => "service.http.responses.2xx",
+            4 => "service.http.responses.4xx",
+            5 => "service.http.responses.5xx",
+            _ => "service.http.responses.other",
+        });
+        if streamed {
+            reg.inc("service.http.streams");
+        }
+        if crate::obs::access_log_enabled() {
+            let outcome = match &wrote {
+                Ok(bytes) => format!("{bytes}b"),
+                Err(e) => format!("aborted: {e}"),
+            };
+            log::info!(
+                target: "http.access",
+                "{line} {status} {:.3}ms {}{outcome} id={request_id}",
+                elapsed.as_secs_f64() * 1e3,
+                if streamed { "streamed " } else { "" },
+            );
+        }
+        match wrote {
+            Ok(_) if keep => continue,
+            Ok(_) => return,
+            Err(e) => {
+                // Client disconnect mid-body (or a producer failure): the
+                // stream producer has already been dropped by
+                // write_framed, so subscriptions are released; close.
+                log::debug!("http: response write failed: {e}");
+                return;
+            }
+        }
     }
 }
 
@@ -335,9 +740,19 @@ pub struct HttpServer {
 }
 
 impl HttpServer {
+    /// Bind with default [`HttpOptions`] (keep-alive on).
+    pub fn bind(addr: &str, workers: usize, handler: Handler) -> anyhow::Result<HttpServer> {
+        HttpServer::bind_with(addr, workers, handler, HttpOptions::default())
+    }
+
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and serve
     /// connections on `workers` pool threads until shutdown/drop.
-    pub fn bind(addr: &str, workers: usize, handler: Handler) -> anyhow::Result<HttpServer> {
+    pub fn bind_with(
+        addr: &str,
+        workers: usize,
+        handler: Handler,
+        opts: HttpOptions,
+    ) -> anyhow::Result<HttpServer> {
         let listener =
             TcpListener::bind(addr).map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
         let local = listener.local_addr()?;
@@ -371,7 +786,7 @@ impl HttpServer {
                                 // pool worker or leak its pending slot.
                                 let r = std::panic::catch_unwind(
                                     std::panic::AssertUnwindSafe(move || {
-                                        handle_connection(stream, h)
+                                        handle_connection(stream, h, opts)
                                     }),
                                 );
                                 if r.is_err() {
@@ -425,9 +840,14 @@ impl Drop for HttpServer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
 
     fn echo_server() -> HttpServer {
         let handler: Handler = Arc::new(|req: &Request| {
+            let body = match &req.body_json {
+                Some(j) => j.to_string(),
+                None => req.body_str().unwrap_or("").to_string(),
+            };
             Response::json(
                 200,
                 &Json::obj(vec![
@@ -437,10 +857,8 @@ mod tests {
                         "q",
                         Json::Str(req.query_get("q").unwrap_or("").to_string()),
                     ),
-                    (
-                        "body",
-                        Json::Str(req.body_str().unwrap_or("").to_string()),
-                    ),
+                    ("body", Json::Str(body)),
+                    ("chunked", Json::Bool(req.body_json.is_some())),
                 ]),
             )
         });
@@ -455,12 +873,34 @@ mod tests {
         out
     }
 
+    /// Read one Content-Length-framed response off a keep-alive
+    /// connection, returning (head, body).
+    fn read_framed_response(r: &mut BufReader<&TcpStream>) -> (String, String) {
+        let mut head = String::new();
+        let mut content_len = 0usize;
+        loop {
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length: ") {
+                content_len = v.trim().parse().unwrap();
+            }
+            let done = line == "\r\n";
+            head.push_str(&line);
+            if done {
+                break;
+            }
+        }
+        let mut body = vec![0u8; content_len];
+        r.read_exact(&mut body).unwrap();
+        (head, String::from_utf8(body).unwrap())
+    }
+
     #[test]
     fn parses_and_echoes_request() {
         let server = echo_server();
         let body = r#"{"x":1}"#;
         let raw = format!(
-            "POST /v1/echo?q=7 HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            "POST /v1/echo?q=7 HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
             body.len()
         );
         let out = raw_roundtrip(server.addr(), &raw);
@@ -492,10 +932,13 @@ mod tests {
         let server = echo_server();
         let out = raw_roundtrip(
             server.addr(),
-            "GET / HTTP/1.1\r\nHost: t\r\nX-Request-Id: my-id-7\r\n\r\n",
+            "GET / HTTP/1.1\r\nHost: t\r\nX-Request-Id: my-id-7\r\nConnection: close\r\n\r\n",
         );
         assert!(out.contains("x-request-id: my-id-7"), "{out}");
-        let out = raw_roundtrip(server.addr(), "GET / HTTP/1.1\r\nHost: t\r\n\r\n");
+        let out = raw_roundtrip(
+            server.addr(),
+            "GET / HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+        );
         let rid = out
             .lines()
             .find_map(|l| l.strip_prefix("x-request-id: "))
@@ -511,7 +954,8 @@ mod tests {
         std::thread::scope(|scope| {
             for i in 0..8 {
                 scope.spawn(move || {
-                    let raw = format!("GET /c/{i} HTTP/1.1\r\nHost: t\r\n\r\n");
+                    let raw =
+                        format!("GET /c/{i} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
                     let out = raw_roundtrip(addr, &raw);
                     assert!(out.contains(&format!("/c/{i}")), "{out}");
                 });
@@ -526,5 +970,178 @@ mod tests {
         let t0 = std::time::Instant::now();
         server.shutdown();
         assert!(t0.elapsed() < Duration::from_secs(5), "shutdown hung");
+    }
+
+    #[test]
+    fn keep_alive_serves_pipelined_requests() {
+        let server = echo_server();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        // Two requests written back-to-back in one segment (pipelined),
+        // then a third after the first responses arrive.
+        (&stream)
+            .write_all(
+                b"GET /a HTTP/1.1\r\nHost: t\r\n\r\nGET /b HTTP/1.1\r\nHost: t\r\n\r\n",
+            )
+            .unwrap();
+        let mut r = BufReader::new(&stream);
+        let (head_a, body_a) = read_framed_response(&mut r);
+        assert!(head_a.starts_with("HTTP/1.1 200 OK"), "{head_a}");
+        assert!(head_a.contains("Connection: keep-alive"), "{head_a}");
+        assert!(body_a.contains("\"/a\""), "{body_a}");
+        let (_, body_b) = read_framed_response(&mut r);
+        assert!(body_b.contains("\"/b\""), "{body_b}");
+        (&stream)
+            .write_all(b"GET /c HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+            .unwrap();
+        let (head_c, body_c) = read_framed_response(&mut r);
+        assert!(head_c.contains("Connection: close"), "{head_c}");
+        assert!(body_c.contains("\"/c\""), "{body_c}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let server = echo_server();
+        let out = raw_roundtrip(server.addr(), "GET /x HTTP/1.0\r\nHost: t\r\n\r\n");
+        assert!(out.contains("Connection: close"), "{out}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn smuggling_ambiguous_framing_rejected() {
+        let server = echo_server();
+        // Content-Length + Transfer-Encoding: chunked → ambiguous → 400.
+        let out = raw_roundtrip(
+            server.addr(),
+            "POST /v1/echo HTTP/1.1\r\nHost: t\r\nContent-Length: 5\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n",
+        );
+        assert!(out.starts_with("HTTP/1.1 400 "), "{out}");
+        assert!(out.contains("transfer-encoding"), "{out}");
+        // Conflicting duplicate Content-Length values → 400.
+        let out = raw_roundtrip(
+            server.addr(),
+            "POST /v1/echo HTTP/1.1\r\nHost: t\r\nContent-Length: 3\r\nContent-Length: 4\r\n\r\nabcd",
+        );
+        assert!(out.starts_with("HTTP/1.1 400 "), "{out}");
+        // Unknown transfer encodings → 400 rather than misframed reads.
+        let out = raw_roundtrip(
+            server.addr(),
+            "POST /v1/echo HTTP/1.1\r\nHost: t\r\nTransfer-Encoding: gzip\r\n\r\n",
+        );
+        assert!(out.starts_with("HTTP/1.1 400 "), "{out}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn chunked_request_body_is_stream_parsed() {
+        let server = echo_server();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        // Body {"x":[1,2]} split across three chunks at awkward points.
+        (&stream)
+            .write_all(
+                b"POST /v1/echo HTTP/1.1\r\nHost: t\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n4\r\n{\"x\"\r\n5\r\n:[1,2\r\n2\r\n]}\r\n0\r\n\r\n",
+            )
+            .unwrap();
+        let mut out = String::new();
+        (&stream).read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200 OK"), "{out}");
+        let payload = out.split("\r\n\r\n").nth(1).unwrap();
+        let j = Json::parse(payload).unwrap();
+        assert_eq!(j.get("chunked").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("body").unwrap().as_str(), Some(r#"{"x":[1,2]}"#));
+        server.shutdown();
+    }
+
+    #[test]
+    fn chunked_request_invalid_json_rejected() {
+        let server = echo_server();
+        let out = raw_roundtrip(
+            server.addr(),
+            "POST /v1/echo HTTP/1.1\r\nHost: t\r\nTransfer-Encoding: chunked\r\n\r\n3\r\n{{{\r\n0\r\n\r\n",
+        );
+        assert!(out.starts_with("HTTP/1.1 400 "), "{out}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn streamed_response_uses_chunked_encoding() {
+        let handler: Handler = Arc::new(|_req: &Request| {
+            let rows = (0..3).map(|i| format!("row{i}\n").into_bytes());
+            Response::streamed("text/plain; charset=utf-8", Box::new(IterBody::new(rows)))
+        });
+        let server = HttpServer::bind("127.0.0.1:0", 2, handler).unwrap();
+        let out = raw_roundtrip(
+            server.addr(),
+            "GET /rows HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+        );
+        assert!(out.contains("Transfer-Encoding: chunked"), "{out}");
+        for part in ["5\r\nrow0\n\r\n", "5\r\nrow1\n\r\n", "5\r\nrow2\n\r\n", "0\r\n\r\n"] {
+            assert!(out.contains(part), "missing {part:?} in {out}");
+        }
+        server.shutdown();
+    }
+
+    /// Mid-body client disconnect: the producer must be dropped (resources
+    /// released) and the worker slot freed for the next connection.
+    #[test]
+    fn client_disconnect_mid_stream_fails_cleanly() {
+        struct Endless {
+            dropped: Arc<AtomicBool>,
+        }
+        impl BodyStream for Endless {
+            fn next_chunk(&mut self) -> std::io::Result<Option<Vec<u8>>> {
+                std::thread::sleep(Duration::from_millis(1));
+                Ok(Some(vec![b'x'; 1 << 10]))
+            }
+        }
+        impl Drop for Endless {
+            fn drop(&mut self) {
+                self.dropped.store(true, Ordering::SeqCst);
+            }
+        }
+        let dropped = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&dropped);
+        let hits = Arc::new(Mutex::new(0usize));
+        let hits2 = Arc::clone(&hits);
+        let handler: Handler = Arc::new(move |req: &Request| {
+            *hits2.lock().unwrap() += 1;
+            if req.path == "/stream" {
+                Response::streamed(
+                    "application/x-ndjson",
+                    Box::new(Endless {
+                        dropped: Arc::clone(&flag),
+                    }),
+                )
+            } else {
+                Response::text(200, "ok")
+            }
+        });
+        let server = HttpServer::bind("127.0.0.1:0", 2, handler).unwrap();
+        {
+            let stream = TcpStream::connect(server.addr()).unwrap();
+            (&stream)
+                .write_all(b"GET /stream HTTP/1.1\r\nHost: t\r\n\r\n")
+                .unwrap();
+            let mut first = [0u8; 256];
+            let n = (&stream).read(&mut first).unwrap();
+            assert!(n > 0, "no stream bytes arrived");
+            // Drop the connection mid-body.
+        }
+        let t0 = Instant::now();
+        while !dropped.load(Ordering::SeqCst) {
+            assert!(
+                t0.elapsed() < Duration::from_secs(15),
+                "stream producer never dropped after client disconnect"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // The server must still serve fresh connections afterwards.
+        let out = raw_roundtrip(
+            server.addr(),
+            "GET /ok HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+        );
+        assert!(out.starts_with("HTTP/1.1 200 OK"), "{out}");
+        assert!(*hits.lock().unwrap() >= 2);
+        server.shutdown();
     }
 }

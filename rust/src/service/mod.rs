@@ -21,7 +21,7 @@ pub mod http;
 pub mod routes;
 
 pub use cache::{CacheKey, CellCosts, SweepCache};
-pub use http::{Handler, HttpServer, Request, Response};
+pub use http::{Handler, HttpOptions, HttpServer, Request, Response};
 pub use routes::ServiceState;
 
 use crate::config::Config;
@@ -58,11 +58,19 @@ impl Server {
             cfg.service.executor_workers,
             cfg.service.fair_share,
         );
-        let state = Arc::new(ServiceState::new(svc, cache, cfg.sweep.clone()));
+        let state = Arc::new(
+            ServiceState::new(svc, cache, cfg.sweep.clone()).with_stream_heartbeat(
+                std::time::Duration::from_millis(cfg.service.stream_heartbeat_ms),
+            ),
+        );
         let handler_state = Arc::clone(&state);
         let handler: Handler = Arc::new(move |req| handler_state.handle(req));
         let addr = format!("{}:{}", cfg.service.host, cfg.service.port);
-        let http = HttpServer::bind(&addr, HTTP_WORKERS, handler)?;
+        let opts = HttpOptions {
+            keep_alive: cfg.service.keep_alive,
+            max_requests_per_conn: cfg.service.keep_alive_max_requests,
+        };
+        let http = HttpServer::bind_with(&addr, HTTP_WORKERS, handler, opts)?;
         log::info!("scoping service listening on http://{}", http.addr());
         Ok(Server { http, state })
     }

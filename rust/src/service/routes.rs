@@ -4,8 +4,12 @@
 //! POST   /v1/scope                submit a workload + SLA, get a job id
 //! POST   /v1/scenarios            submit a fleet what-if scenario replay
 //! GET    /v1/jobs/{id}            job status / live progress / summary
+//! GET    /v1/jobs/{id}/events     live progress stream
+//!                                 (?format=ndjson|sse; ndjson default)
 //! GET    /v1/jobs/{id}/trace      ordered span timeline (flight recorder)
+//! GET    /v1/jobs/{id}/sweep.csv  per-cell measurement CSV, streamed row-by-row
 //! GET    /v1/scenarios/{id}       scenario status / replay progress / outcome
+//! GET    /v1/scenarios/{id}/events live replay progress stream (NDJSON/SSE)
 //! GET    /v1/scenarios/{id}/trace scenario span timeline (flight recorder)
 //! DELETE /v1/jobs/{id}            cancel a queued or running job
 //! DELETE /v1/scenarios/{id}       cancel a queued or running scenario
@@ -15,6 +19,15 @@
 //! GET    /metrics                 metrics registry
 //!                                 (?format=json|text|prometheus; json default)
 //! ```
+//!
+//! The `/events` endpoints stream each job's live event bus (cell
+//! retirements, scenario unit completions, a terminal `summary`) as
+//! NDJSON — one compact JSON object per line — or, with `?format=sse`,
+//! as Server-Sent Events. Subscribing replays the bus's bounded history
+//! first, so a late subscriber still sees the whole story of a small job;
+//! the stream ends after the terminal event. Heartbeats (a blank NDJSON
+//! line / an SSE comment) keep idle streams alive through proxies and
+//! surface client disconnects.
 //!
 //! `POST /v1/scope` body (all keys optional; defaults fill the rest):
 //!
@@ -41,14 +54,21 @@ use crate::config;
 use crate::coordinator::jobs::{JobId, JobStatus, ScopingService};
 use crate::coordinator::{SweepResult, SweepSpec};
 use crate::metrics::Registry;
+use crate::obs::{BusEvent, FlightRecorder};
 use crate::recommend::{recommend_from_sweep, Sla};
+use crate::report;
 use crate::scenario::ScenarioSpec;
 use crate::service::cache::SweepCache;
-use crate::service::http::{Request, Response};
+use crate::service::http::{BodyStream, IterBody, Request, Response};
 use crate::shapes::{self, Workload};
-use crate::util::json::Json;
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use crate::util::json::{stream::StreamEmitter, Json};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Default heartbeat cadence on idle `/events` streams (see
+/// [`crate::config::ServiceConfig::stream_heartbeat_ms`]).
+pub const DEFAULT_STREAM_HEARTBEAT: Duration = Duration::from_millis(1000);
 
 /// Shared state behind every connection handler: the scoping job queue,
 /// the sweep cache, and the per-job scoping context needed to turn a
@@ -58,6 +78,8 @@ pub struct ServiceState {
     cache: Arc<SweepCache>,
     default_spec: SweepSpec,
     jobs: Mutex<HashMap<JobId, (Workload, Sla)>>,
+    /// Heartbeat cadence on idle `/events` streams.
+    heartbeat: Duration,
 }
 
 impl ServiceState {
@@ -68,7 +90,14 @@ impl ServiceState {
             cache,
             default_spec,
             jobs: Mutex::new(HashMap::new()),
+            heartbeat: DEFAULT_STREAM_HEARTBEAT,
         }
+    }
+
+    /// Override the heartbeat cadence on idle `/events` streams.
+    pub fn with_stream_heartbeat(mut self, heartbeat: Duration) -> Self {
+        self.heartbeat = heartbeat.max(Duration::from_millis(10));
+        self
     }
 
     /// The shared cell-level sweep cache.
@@ -107,8 +136,11 @@ impl ServiceState {
             ("POST", ["v1", "scope"]) => self.scope(req),
             ("POST", ["v1", "scenarios"]) => self.scenario_submit(req),
             ("GET", ["v1", "jobs", id]) => self.job_status(id),
+            ("GET", ["v1", "jobs", id, "events"]) => self.job_events(id, req),
             ("GET", ["v1", "jobs", id, "trace"]) => self.job_trace(id),
+            ("GET", ["v1", "jobs", id, "sweep.csv"]) => self.job_sweep_csv(id),
             ("GET", ["v1", "scenarios", id]) => self.scenario_status(id),
+            ("GET", ["v1", "scenarios", id, "events"]) => self.scenario_events(id, req),
             ("GET", ["v1", "scenarios", id, "trace"]) => self.scenario_trace(id),
             ("DELETE", ["v1", "jobs", id]) | ("DELETE", ["v1", "scenarios", id]) => {
                 self.cancel_job(id)
@@ -120,8 +152,11 @@ impl ServiceState {
             | (_, ["v1", "scope"])
             | (_, ["v1", "scenarios"])
             | (_, ["v1", "jobs", _])
+            | (_, ["v1", "jobs", _, "events"])
             | (_, ["v1", "jobs", _, "trace"])
+            | (_, ["v1", "jobs", _, "sweep.csv"])
             | (_, ["v1", "scenarios", _])
+            | (_, ["v1", "scenarios", _, "events"])
             | (_, ["v1", "scenarios", _, "trace"])
             | (_, ["v1", "recommendations", _]) => {
                 Response::error(405, "method not allowed on this route")
@@ -200,6 +235,98 @@ impl ServiceState {
         }
     }
 
+    /// `GET /v1/jobs/{id}/events`: live progress stream. Replays the
+    /// job's event history, then follows the bus live (cell retirements,
+    /// unit completions, the terminal `summary`) until the job ends.
+    /// NDJSON by default; `?format=sse` switches to Server-Sent Events.
+    fn job_events(&self, id: &str, req: &Request) -> Response {
+        let jid: JobId = match id.parse() {
+            Ok(v) => v,
+            Err(_) => return Response::error(400, "job id must be an integer"),
+        };
+        let sse = match req.query_get("format") {
+            None | Some("ndjson") => false,
+            Some("sse") => true,
+            Some(other) => {
+                return Response::error(
+                    400,
+                    &format!("unknown format '{other}' (expected ndjson|sse)"),
+                )
+            }
+        };
+        let Some(bus) = self.svc.events(jid) else {
+            return Response::error(404, &format!("unknown job {jid}"));
+        };
+        let (replay, live) = bus.subscribe();
+        let body = EventStreamBody {
+            replay: replay.into(),
+            rx: live,
+            sse,
+            heartbeat: self.heartbeat,
+            recorder: self.svc.recorder(jid),
+            started: Instant::now(),
+            delivered: 0,
+            meta: format!(
+                "job={jid} rid={}",
+                req.request_id().unwrap_or("-")
+            ),
+        };
+        Response::streamed(
+            if sse {
+                "text/event-stream"
+            } else {
+                "application/x-ndjson"
+            },
+            Box::new(body),
+        )
+    }
+
+    /// `GET /v1/scenarios/{id}/events`: like the jobs route, but 404s for
+    /// sweep jobs (mirroring `GET /v1/scenarios/{id}`).
+    fn scenario_events(&self, id: &str, req: &Request) -> Response {
+        let jid: JobId = match id.parse() {
+            Ok(v) => v,
+            Err(_) => return Response::error(400, "job id must be an integer"),
+        };
+        if self.svc.status(jid).is_some() && self.svc.scenario_progress(jid).is_none() {
+            return Response::error(
+                404,
+                &format!("job {jid} is not a scenario job (see GET /v1/jobs/{jid}/events)"),
+            );
+        }
+        self.job_events(id, req)
+    }
+
+    /// `GET /v1/jobs/{id}/sweep.csv`: the per-cell measurement CSV of a
+    /// completed sweep, streamed one row per chunk so even a maximal grid
+    /// is never materialised as a single body buffer.
+    fn job_sweep_csv(&self, id: &str) -> Response {
+        let jid: JobId = match id.parse() {
+            Ok(v) => v,
+            Err(_) => return Response::error(400, "job id must be an integer"),
+        };
+        let result = match self.svc.status(jid) {
+            None => return Response::error(404, &format!("unknown job {jid}")),
+            Some(JobStatus::Done(r)) => r,
+            Some(JobStatus::DoneScenario(_)) => {
+                return Response::error(
+                    409,
+                    &format!("job {jid} is a scenario job; see GET /v1/scenarios/{jid}"),
+                )
+            }
+            Some(JobStatus::Failed(e)) => {
+                return Response::error(409, &format!("job {jid} failed: {e}"))
+            }
+            Some(_) => {
+                return Response::error(409, &format!("job {jid} is not complete yet"))
+            }
+        };
+        let n = result.cells.len();
+        let rows = std::iter::once(report::sweep_csv_header().as_bytes().to_vec())
+            .chain((0..n).map(move |i| report::sweep_csv_row(&result.cells[i]).into_bytes()));
+        Response::streamed("text/csv; charset=utf-8", Box::new(IterBody::new(rows)))
+    }
+
     /// `GET /v1/scenarios/{id}/trace`: like the jobs route, but 404s for
     /// sweep jobs (mirroring `GET /v1/scenarios/{id}`).
     fn scenario_trace(&self, id: &str) -> Response {
@@ -217,14 +344,10 @@ impl ServiceState {
     }
 
     fn scope(&self, req: &Request) -> Response {
-        let body = if req.body.is_empty() {
+        let body = if req.body.is_empty() && req.body_json.is_none() {
             Json::obj(vec![])
         } else {
-            let text = match req.body_str() {
-                Ok(t) => t,
-                Err(e) => return Response::error(400, &e.to_string()),
-            };
-            match Json::parse(text) {
+            match req.json_body() {
                 Ok(j) => j,
                 Err(e) => return Response::error(400, &format!("invalid JSON body: {e}")),
             }
@@ -341,13 +464,14 @@ impl ServiceState {
     /// only for workload-mode scenarios (where it feeds the oracle) — the
     /// server fills it with its default spec when omitted there.
     fn scenario_submit(&self, req: &Request) -> Response {
-        let body = match req.body_str() {
-            Ok(t) if !t.trim().is_empty() => match Json::parse(t) {
-                Ok(j) => j,
-                Err(e) => return Response::error(400, &format!("invalid JSON body: {e}")),
-            },
-            Ok(_) => return Response::error(400, "body must carry a scenario object"),
-            Err(e) => return Response::error(400, &e.to_string()),
+        if req.body_json.is_none()
+            && req.body_str().map(|t| t.trim().is_empty()).unwrap_or(false)
+        {
+            return Response::error(400, "body must carry a scenario object");
+        }
+        let body = match req.json_body() {
+            Ok(j) => j,
+            Err(e) => return Response::error(400, &format!("invalid JSON body: {e}")),
         };
         if body.as_obj().is_none() {
             return Response::error(400, "body must be a JSON object");
@@ -536,9 +660,120 @@ impl ServiceState {
                     m.insert("job_id".into(), Json::Num(id as f64));
                     m.insert("rendered".into(), Json::Str(rec.render()));
                 }
-                Response::json(200, &j)
+                stream_json_object(j)
             }
             Err(e) => Response::error(500, &format!("recommendation failed: {e}")),
+        }
+    }
+}
+
+/// Stream a top-level JSON object one member per HTTP chunk via
+/// [`StreamEmitter`], so a large rendered report is never materialised as
+/// one contiguous body buffer. Non-object values fall back to a buffered
+/// [`Response::json`].
+fn stream_json_object(value: Json) -> Response {
+    let Json::Obj(map) = value else {
+        return Response::json(200, &value);
+    };
+    let mut em = StreamEmitter::new();
+    em.begin_obj();
+    let mut entries = map.into_iter();
+    let mut done = false;
+    let chunks = std::iter::from_fn(move || {
+        if done {
+            return None;
+        }
+        match entries.next() {
+            Some((k, v)) => {
+                em.key(&k);
+                em.value(&v);
+            }
+            None => {
+                em.end_obj();
+                done = true;
+            }
+        }
+        Some(em.take().into_bytes())
+    });
+    Response::streamed("application/json", Box::new(IterBody::new(chunks)))
+}
+
+/// [`BodyStream`] over a job's [`EventBus`](crate::obs::EventBus):
+/// replays buffered history, then follows the live feed until the bus
+/// closes (the job published its terminal `summary`). Quiet periods emit
+/// keep-alive frames so proxies and clients can distinguish a slow job
+/// from a dead connection.
+struct EventStreamBody {
+    /// History snapshot still to deliver (drained front-first).
+    replay: VecDeque<BusEvent>,
+    /// Live receiver; `None` once the bus has disconnected.
+    rx: Option<mpsc::Receiver<BusEvent>>,
+    /// Server-Sent Events framing instead of NDJSON.
+    sse: bool,
+    /// Idle gap after which a keep-alive frame is emitted.
+    heartbeat: Duration,
+    /// The job's flight recorder; the stream's lifetime is pushed as an
+    /// `http/stream` span on drop so streamed responses appear in the
+    /// same trace as the work they observed.
+    recorder: Option<Arc<FlightRecorder>>,
+    started: Instant,
+    delivered: u64,
+    meta: String,
+}
+
+impl EventStreamBody {
+    /// Frame one bus event for the negotiated wire format.
+    fn frame(&mut self, ev: &BusEvent) -> Vec<u8> {
+        self.delivered += 1;
+        if self.sse {
+            format!("id: {}\ndata: {}\n\n", ev.seq, ev.line).into_bytes()
+        } else {
+            format!("{}\n", ev.line).into_bytes()
+        }
+    }
+
+    /// Keep-alive frame: an SSE comment, or a bare newline for NDJSON
+    /// (blank lines are ignored by NDJSON consumers).
+    fn heartbeat_frame(&self) -> Vec<u8> {
+        if self.sse {
+            b": keep-alive\n\n".to_vec()
+        } else {
+            b"\n".to_vec()
+        }
+    }
+}
+
+impl BodyStream for EventStreamBody {
+    fn next_chunk(&mut self) -> std::io::Result<Option<Vec<u8>>> {
+        if let Some(ev) = self.replay.pop_front() {
+            return Ok(Some(self.frame(&ev)));
+        }
+        let recv = match &self.rx {
+            None => return Ok(None),
+            Some(rx) => rx.recv_timeout(self.heartbeat),
+        };
+        match recv {
+            Ok(ev) => Ok(Some(self.frame(&ev))),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(Some(self.heartbeat_frame())),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                self.rx = None;
+                Ok(None)
+            }
+        }
+    }
+}
+
+impl Drop for EventStreamBody {
+    fn drop(&mut self) {
+        if let Some(rec) = &self.recorder {
+            rec.push(
+                "http",
+                "stream",
+                self.started,
+                Instant::now(),
+                Duration::ZERO,
+                format!("{} events={}", self.meta, self.delivered),
+            );
         }
     }
 }
@@ -762,6 +997,8 @@ mod tests {
             query: vec![],
             headers: vec![],
             body: vec![],
+            body_json: None,
+            http11: true,
         }
     }
 
@@ -772,7 +1009,21 @@ mod tests {
             query: vec![],
             headers: vec![],
             body: body.as_bytes().to_vec(),
+            body_json: None,
+            http11: true,
         }
+    }
+
+    /// Collect a response body to completion: the buffered bytes, or the
+    /// streamed chunks drained and concatenated.
+    fn drain(r: Response) -> Vec<u8> {
+        let mut out = r.body;
+        if let Some(mut s) = r.stream {
+            while let Some(chunk) = s.next_chunk().unwrap() {
+                out.extend_from_slice(&chunk);
+            }
+        }
+        out
     }
 
     #[test]
@@ -847,6 +1098,8 @@ mod tests {
             query: vec![],
             headers: vec![],
             body: vec![],
+            body_json: None,
+            http11: true,
         }
     }
 
@@ -1089,5 +1342,145 @@ mod tests {
         assert!(!j.get("spans").unwrap().as_arr().unwrap().is_empty());
         // a sweep job is not served by the scenario trace route
         assert_eq!(st.handle(&get(&format!("/v1/scenarios/{id}/trace"))).status, 404);
+    }
+
+    fn submit_job(st: &ServiceState, body: &str) -> usize {
+        let r = st.handle(&post("/v1/scope", body));
+        assert_eq!(r.status, 202, "{:?}", String::from_utf8(r.body));
+        Json::parse(std::str::from_utf8(&r.body).unwrap())
+            .unwrap()
+            .get("job_id")
+            .unwrap()
+            .as_usize()
+            .unwrap()
+    }
+
+    #[test]
+    fn events_route_streams_ndjson_until_summary() {
+        let st = state();
+        let id = submit_job(&st, "{}");
+        // subscribe while the job may still be running: drain() follows the
+        // live feed and returns only once the bus closes after the summary
+        let r = st.handle(&get(&format!("/v1/jobs/{id}/events")));
+        assert_eq!(r.status, 200);
+        assert_eq!(r.content_type, "application/x-ndjson");
+        assert!(r.stream.is_some(), "events are streamed, not buffered");
+        let text = String::from_utf8(drain(r)).unwrap();
+        let lines: Vec<&str> = text.lines().filter(|l| !l.is_empty()).collect();
+        for l in &lines {
+            Json::parse(l).expect("every event line is a standalone JSON doc");
+        }
+        let last = Json::parse(lines.last().unwrap()).unwrap();
+        assert_eq!(last.get("event").and_then(Json::as_str), Some("summary"));
+        assert_eq!(last.get("status").and_then(Json::as_str), Some("done"));
+        let cells_total = last.get("cells_total").unwrap().as_usize().unwrap();
+        let cells = lines
+            .iter()
+            .filter(|l| {
+                Json::parse(l).unwrap().get("event").and_then(Json::as_str) == Some("cell")
+            })
+            .count();
+        assert_eq!(cells, cells_total, "one cell event per grid cell");
+    }
+
+    #[test]
+    fn events_route_sse_format_and_validation() {
+        let st = state();
+        let id = submit_job(&st, "{}");
+        st.svc.wait(id as u64).unwrap();
+        let mut req = get(&format!("/v1/jobs/{id}/events"));
+        req.query.push(("format".into(), "sse".into()));
+        let r = st.handle(&req);
+        assert_eq!(r.status, 200);
+        assert_eq!(r.content_type, "text/event-stream");
+        let text = String::from_utf8(drain(r)).unwrap();
+        assert!(text.contains("data: {"), "{text}");
+        assert!(text.lines().any(|l| l.starts_with("id: ")));
+        let mut req = get(&format!("/v1/jobs/{id}/events"));
+        req.query.push(("format".into(), "xml".into()));
+        assert_eq!(st.handle(&req).status, 400);
+        assert_eq!(st.handle(&get("/v1/jobs/zzz/events")).status, 400);
+        assert_eq!(st.handle(&get("/v1/jobs/99999/events")).status, 404);
+        let r = st.handle(&post(&format!("/v1/jobs/{id}/events"), ""));
+        assert_eq!(r.status, 405);
+    }
+
+    #[test]
+    fn sweep_csv_route_streams_rows() {
+        let st = state();
+        let id = submit_job(&st, "{}");
+        st.svc.wait(id as u64).unwrap();
+        let r = st.handle(&get(&format!("/v1/jobs/{id}/sweep.csv")));
+        assert_eq!(r.status, 200);
+        assert!(r.stream.is_some(), "CSV is streamed row-by-row");
+        let text = String::from_utf8(drain(r)).unwrap();
+        let Some(JobStatus::Done(result)) = st.svc.status(id as u64) else {
+            panic!("job should be done");
+        };
+        assert_eq!(text, report::sweep_csv(&result));
+        assert_eq!(st.handle(&get("/v1/jobs/99999/sweep.csv")).status, 404);
+        assert_eq!(st.handle(&get("/v1/jobs/zzz/sweep.csv")).status, 400);
+    }
+
+    #[test]
+    fn scenario_events_route_guards_and_streams() {
+        let st = state();
+        // sweep jobs are not served by the scenario events route
+        let id = submit_job(&st, "{}");
+        st.svc.wait(id as u64).unwrap();
+        assert_eq!(
+            st.handle(&get(&format!("/v1/scenarios/{id}/events"))).status,
+            404
+        );
+        let body = r#"{"scenario": {
+            "name": "ev-test", "epochs": 10,
+            "arrivals": {"initial": 2, "rate_per_epoch": 0.0, "max_tenants": 2},
+            "demand": {"kind": "constant", "base": 0.5,
+                       "growth_per_epoch": 1.01, "jitter": 0.0}
+        }}"#;
+        let r = st.handle(&post("/v1/scenarios", body));
+        assert_eq!(r.status, 202, "{:?}", String::from_utf8(r.body));
+        let sid = Json::parse(std::str::from_utf8(&r.body).unwrap())
+            .unwrap()
+            .get("job_id")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        let r = st.handle(&get(&format!("/v1/scenarios/{sid}/events")));
+        assert_eq!(r.status, 200);
+        let text = String::from_utf8(drain(r)).unwrap();
+        let lines: Vec<&str> = text.lines().filter(|l| !l.is_empty()).collect();
+        assert!(
+            lines.iter().any(|l| l.contains("\"event\":\"unit\"")),
+            "scenario streams unit completions: {text}"
+        );
+        let last = Json::parse(lines.last().unwrap()).unwrap();
+        assert_eq!(last.get("event").and_then(Json::as_str), Some("summary"));
+        assert!(
+            last.get("units_done").is_some(),
+            "scenario summaries carry unit progress"
+        );
+        // the sweep CSV route refuses scenario jobs
+        st.svc.wait_scenario(sid as u64).unwrap();
+        assert_eq!(
+            st.handle(&get(&format!("/v1/jobs/{sid}/sweep.csv"))).status,
+            409
+        );
+    }
+
+    #[test]
+    fn recommendation_streams_valid_json() {
+        let st = state();
+        let id = submit_job(&st, "{}");
+        st.svc.wait(id as u64).unwrap();
+        let r = st.handle(&get(&format!("/v1/recommendations/{id}")));
+        assert_eq!(r.status, 200);
+        assert!(r.stream.is_some(), "recommendation body is streamed");
+        let text = String::from_utf8(drain(r)).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("job_id").unwrap().as_usize(), Some(id));
+        assert!(j.get("rendered").and_then(Json::as_str).is_some());
+        // streamed emission is byte-identical to batch serialisation
+        assert_eq!(text, j.to_string());
     }
 }

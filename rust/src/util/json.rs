@@ -155,7 +155,7 @@ impl Json {
         s
     }
 
-    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+    pub(crate) fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
@@ -213,7 +213,7 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
     }
 }
 
-fn write_num(out: &mut String, x: f64) {
+pub(crate) fn write_num(out: &mut String, x: f64) {
     if x.is_nan() || x.is_infinite() {
         // JSON has no NaN/Inf; encode as null like most tolerant writers.
         out.push_str("null");
@@ -224,7 +224,7 @@ fn write_num(out: &mut String, x: f64) {
     }
 }
 
-fn write_str(out: &mut String, s: &str) {
+pub(crate) fn write_str(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -429,6 +429,821 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Event-based incremental JSON parsing and emission.
+///
+/// The batch [`Json::parse`] / [`Json::to_string`] pair materialises whole
+/// documents; this submodule provides the streaming counterparts the HTTP
+/// layer feeds straight from the socket: a push [`StreamParser`] that
+/// consumes input split at arbitrary chunk boundaries and emits structural
+/// [`Event`]s with bounded per-connection memory, a [`ValueBuilder`] that
+/// reassembles those events into a [`Json`] tree (equivalent to the batch
+/// parser on every input — fuzzed in `tests/json_fuzz.rs`), and a
+/// [`StreamEmitter`] whose concatenated output is byte-identical to
+/// [`Json::to_string`] without ever holding the full document.
+pub mod stream {
+    use super::{write_num, write_str, Json, JsonError};
+    use std::collections::BTreeMap;
+
+    /// One structural event produced by [`StreamParser`].
+    #[derive(Clone, Debug, PartialEq)]
+    pub enum Event {
+        /// `null`.
+        Null,
+        /// `true` / `false`.
+        Bool(bool),
+        /// A complete number token.
+        Num(f64),
+        /// A complete string value (keys are [`Event::Key`] instead).
+        Str(String),
+        /// `[` — an array opens.
+        ArrStart,
+        /// `]` — the innermost array closes.
+        ArrEnd,
+        /// `{` — an object opens.
+        ObjStart,
+        /// An object member key; the member value's events follow.
+        Key(String),
+        /// `}` — the innermost object closes.
+        ObjEnd,
+    }
+
+    /// Per-connection resource limits for a [`StreamParser`].
+    ///
+    /// Parser state is one [`Ctx`] byte per nesting level plus the bytes of
+    /// the single in-progress token, so total memory is bounded by
+    /// `max_depth + max_token_bytes` regardless of document size.
+    #[derive(Clone, Copy, Debug)]
+    pub struct Limits {
+        /// Maximum container nesting depth.
+        pub max_depth: usize,
+        /// Maximum bytes buffered for one token (string or number).
+        pub max_token_bytes: usize,
+    }
+
+    impl Default for Limits {
+        fn default() -> Self {
+            Limits {
+                max_depth: 256,
+                max_token_bytes: 1 << 20,
+            }
+        }
+    }
+
+    impl Limits {
+        /// Permissive limits for harnesses comparing against the recursive
+        /// batch parser, chosen so the limits never bind on small inputs.
+        pub fn lenient() -> Self {
+            Limits {
+                max_depth: 1 << 16,
+                max_token_bytes: 1 << 24,
+            }
+        }
+    }
+
+    /// Container kind on the parser stack.
+    #[derive(Clone, Copy, Debug, PartialEq)]
+    enum Ctx {
+        Arr,
+        Obj,
+    }
+
+    /// What the grammar expects next, between tokens.
+    #[derive(Clone, Copy, Debug, PartialEq)]
+    enum Phase {
+        /// A value must come next (top level, after `[`-comma, after `:`).
+        Value,
+        /// Directly after `[`: a value or `]`.
+        FirstValueOrEnd,
+        /// Directly after `{`: a key or `}`.
+        FirstKeyOrEnd,
+        /// After `,` inside an object: a key.
+        Key,
+        /// Between an object key and its value.
+        Colon,
+        /// After a member/element: `,` or the container's closer.
+        CommaOrEnd,
+        /// Top-level value finished; only trailing whitespace is legal.
+        Done,
+    }
+
+    /// Position inside a number token, mirroring the batch parser's
+    /// positional greedy grammar (`-? digits* ('.' digits*)? ([eE] [+-]?
+    /// digits*)?`) so both parsers cut the token at the same byte.
+    #[derive(Clone, Copy, Debug)]
+    enum NumPos {
+        Int,
+        Frac,
+        ExpMark,
+        Exp,
+    }
+
+    /// Escape-sequence progress inside a string token.
+    #[derive(Clone, Copy, Debug)]
+    enum Esc {
+        None,
+        Start,
+        Hex { hex: [u8; 4], n: usize },
+    }
+
+    /// In-progress token spanning chunk boundaries.
+    #[derive(Debug)]
+    enum Token {
+        None,
+        Lit { want: &'static [u8], got: usize },
+        Num { buf: String, pos: NumPos },
+        Str { buf: Vec<u8>, key: bool, esc: Esc },
+    }
+
+    fn num_step(pos: NumPos, b: u8) -> Option<NumPos> {
+        match pos {
+            NumPos::Int => match b {
+                b'0'..=b'9' => Some(NumPos::Int),
+                b'.' => Some(NumPos::Frac),
+                b'e' | b'E' => Some(NumPos::ExpMark),
+                _ => None,
+            },
+            NumPos::Frac => match b {
+                b'0'..=b'9' => Some(NumPos::Frac),
+                b'e' | b'E' => Some(NumPos::ExpMark),
+                _ => None,
+            },
+            NumPos::ExpMark => match b {
+                b'+' | b'-' | b'0'..=b'9' => Some(NumPos::Exp),
+                _ => None,
+            },
+            NumPos::Exp => match b {
+                b'0'..=b'9' => Some(NumPos::Exp),
+                _ => None,
+            },
+        }
+    }
+
+    /// Feed-by-chunk JSON parser emitting [`Event`]s.
+    ///
+    /// Call [`StreamParser::feed`] with each arriving chunk (boundaries may
+    /// fall anywhere, including inside tokens, escapes and `\u` hex digits)
+    /// and [`StreamParser::finish`] at end of input. The accepted language
+    /// and resulting values are identical to [`Json::parse`]; inputs the
+    /// batch parser rejects are rejected here too (byte offsets and
+    /// messages may differ).
+    #[derive(Debug)]
+    pub struct StreamParser {
+        limits: Limits,
+        stack: Vec<Ctx>,
+        phase: Phase,
+        token: Token,
+        offset: usize,
+        failed: bool,
+    }
+
+    impl StreamParser {
+        /// New parser enforcing `limits`.
+        pub fn new(limits: Limits) -> Self {
+            StreamParser {
+                limits,
+                stack: Vec::new(),
+                phase: Phase::Value,
+                token: Token::None,
+                offset: 0,
+                failed: false,
+            }
+        }
+
+        fn fail(&mut self, msg: &str) -> JsonError {
+            self.failed = true;
+            JsonError {
+                offset: self.offset,
+                msg: msg.to_string(),
+            }
+        }
+
+        /// Bytes currently buffered for the in-progress token — the
+        /// parser's only input-proportional state, bounded by
+        /// [`Limits::max_token_bytes`].
+        pub fn buffered_bytes(&self) -> usize {
+            match &self.token {
+                Token::Str { buf, .. } => buf.len(),
+                Token::Num { buf, .. } => buf.len(),
+                _ => 0,
+            }
+        }
+
+        /// Current container nesting depth.
+        pub fn depth(&self) -> usize {
+            self.stack.len()
+        }
+
+        /// True once a complete top-level value has been parsed (trailing
+        /// whitespace may still follow).
+        pub fn is_done(&self) -> bool {
+            !self.failed && self.phase == Phase::Done && matches!(self.token, Token::None)
+        }
+
+        /// Consume one chunk, appending events to `out`. Errors are sticky:
+        /// once a feed fails, the parser stays failed.
+        pub fn feed(&mut self, chunk: &[u8], out: &mut Vec<Event>) -> Result<(), JsonError> {
+            if self.failed {
+                return Err(JsonError {
+                    offset: self.offset,
+                    msg: "parser already failed".into(),
+                });
+            }
+            let mut i = 0;
+            while i < chunk.len() {
+                if self.step(chunk[i], out)? {
+                    i += 1;
+                    self.offset += 1;
+                }
+            }
+            Ok(())
+        }
+
+        /// Signal end of input: closes a pending number token and verifies
+        /// exactly one complete top-level value was seen.
+        pub fn finish(&mut self, out: &mut Vec<Event>) -> Result<(), JsonError> {
+            if self.failed {
+                return Err(JsonError {
+                    offset: self.offset,
+                    msg: "parser already failed".into(),
+                });
+            }
+            match std::mem::replace(&mut self.token, Token::None) {
+                Token::None => {}
+                Token::Num { buf, .. } => self.close_number(&buf, out)?,
+                Token::Str { .. } => return Err(self.fail("unterminated string")),
+                Token::Lit { .. } => return Err(self.fail("truncated literal")),
+            }
+            if self.phase != Phase::Done {
+                return Err(self.fail("unexpected end of input"));
+            }
+            Ok(())
+        }
+
+        /// Process one byte; `Ok(false)` means the byte closed a number
+        /// token and must be re-processed structurally.
+        fn step(&mut self, b: u8, out: &mut Vec<Event>) -> Result<bool, JsonError> {
+            match std::mem::replace(&mut self.token, Token::None) {
+                Token::None => self.structural(b, out).map(|()| true),
+                Token::Lit { want, got } => {
+                    if want[got] != b {
+                        return Err(self.fail("invalid literal"));
+                    }
+                    let got = got + 1;
+                    if got == want.len() {
+                        out.push(match want[0] {
+                            b'n' => Event::Null,
+                            b't' => Event::Bool(true),
+                            _ => Event::Bool(false),
+                        });
+                        self.value_done();
+                    } else {
+                        self.token = Token::Lit { want, got };
+                    }
+                    Ok(true)
+                }
+                Token::Num { mut buf, pos } => match num_step(pos, b) {
+                    Some(next) => {
+                        if buf.len() >= self.limits.max_token_bytes {
+                            return Err(self.fail("number token exceeds limit"));
+                        }
+                        buf.push(b as char);
+                        self.token = Token::Num { buf, pos: next };
+                        Ok(true)
+                    }
+                    None => {
+                        self.close_number(&buf, out)?;
+                        Ok(false)
+                    }
+                },
+                Token::Str { mut buf, key, esc } => {
+                    match esc {
+                        Esc::Start => {
+                            let mapped: u8 = match b {
+                                b'"' => b'"',
+                                b'\\' => b'\\',
+                                b'/' => b'/',
+                                b'n' => b'\n',
+                                b't' => b'\t',
+                                b'r' => b'\r',
+                                b'b' => 0x08,
+                                b'f' => 0x0c,
+                                b'u' => {
+                                    self.token = Token::Str {
+                                        buf,
+                                        key,
+                                        esc: Esc::Hex { hex: [0; 4], n: 0 },
+                                    };
+                                    return Ok(true);
+                                }
+                                _ => return Err(self.fail("bad escape")),
+                            };
+                            if buf.len() >= self.limits.max_token_bytes {
+                                return Err(self.fail("string token exceeds limit"));
+                            }
+                            buf.push(mapped);
+                            self.token = Token::Str {
+                                buf,
+                                key,
+                                esc: Esc::None,
+                            };
+                            Ok(true)
+                        }
+                        Esc::Hex { mut hex, n } => {
+                            hex[n] = b;
+                            let n = n + 1;
+                            if n < 4 {
+                                self.token = Token::Str {
+                                    buf,
+                                    key,
+                                    esc: Esc::Hex { hex, n },
+                                };
+                                return Ok(true);
+                            }
+                            let cp = match std::str::from_utf8(&hex) {
+                                Ok(h) => u32::from_str_radix(h, 16).ok(),
+                                Err(_) => None,
+                            };
+                            let Some(cp) = cp else {
+                                return Err(self.fail("bad \\u escape"));
+                            };
+                            // Lone surrogates become U+FFFD, matching the
+                            // batch parser.
+                            let c = char::from_u32(cp).unwrap_or('\u{fffd}');
+                            if buf.len() + c.len_utf8() > self.limits.max_token_bytes {
+                                return Err(self.fail("string token exceeds limit"));
+                            }
+                            let mut tmp = [0u8; 4];
+                            buf.extend_from_slice(c.encode_utf8(&mut tmp).as_bytes());
+                            self.token = Token::Str {
+                                buf,
+                                key,
+                                esc: Esc::None,
+                            };
+                            Ok(true)
+                        }
+                        Esc::None => match b {
+                            b'"' => {
+                                let s = match String::from_utf8(buf) {
+                                    Ok(s) => s,
+                                    Err(_) => return Err(self.fail("invalid utf-8")),
+                                };
+                                if key {
+                                    out.push(Event::Key(s));
+                                    self.phase = Phase::Colon;
+                                } else {
+                                    out.push(Event::Str(s));
+                                    self.value_done();
+                                }
+                                Ok(true)
+                            }
+                            b'\\' => {
+                                self.token = Token::Str {
+                                    buf,
+                                    key,
+                                    esc: Esc::Start,
+                                };
+                                Ok(true)
+                            }
+                            _ => {
+                                if buf.len() >= self.limits.max_token_bytes {
+                                    return Err(self.fail("string token exceeds limit"));
+                                }
+                                buf.push(b);
+                                self.token = Token::Str {
+                                    buf,
+                                    key,
+                                    esc: Esc::None,
+                                };
+                                Ok(true)
+                            }
+                        },
+                    }
+                }
+            }
+        }
+
+        fn close_number(&mut self, buf: &str, out: &mut Vec<Event>) -> Result<(), JsonError> {
+            match buf.parse::<f64>() {
+                Ok(x) => {
+                    out.push(Event::Num(x));
+                    self.value_done();
+                    Ok(())
+                }
+                Err(_) => Err(self.fail("bad number")),
+            }
+        }
+
+        fn value_done(&mut self) {
+            self.token = Token::None;
+            self.phase = if self.stack.is_empty() {
+                Phase::Done
+            } else {
+                Phase::CommaOrEnd
+            };
+        }
+
+        /// Dispatch a byte arriving between tokens.
+        fn structural(&mut self, b: u8, out: &mut Vec<Event>) -> Result<(), JsonError> {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                return Ok(());
+            }
+            match self.phase {
+                Phase::Value | Phase::FirstValueOrEnd => {
+                    if self.phase == Phase::FirstValueOrEnd && b == b']' {
+                        self.stack.pop();
+                        out.push(Event::ArrEnd);
+                        self.value_done();
+                        return Ok(());
+                    }
+                    self.begin_value(b, out)
+                }
+                Phase::FirstKeyOrEnd => match b {
+                    b'"' => {
+                        self.token = Token::Str {
+                            buf: Vec::new(),
+                            key: true,
+                            esc: Esc::None,
+                        };
+                        Ok(())
+                    }
+                    b'}' => {
+                        self.stack.pop();
+                        out.push(Event::ObjEnd);
+                        self.value_done();
+                        Ok(())
+                    }
+                    _ => Err(self.fail("expected '\"' or '}'")),
+                },
+                Phase::Key => match b {
+                    b'"' => {
+                        self.token = Token::Str {
+                            buf: Vec::new(),
+                            key: true,
+                            esc: Esc::None,
+                        };
+                        Ok(())
+                    }
+                    _ => Err(self.fail("expected '\"'")),
+                },
+                Phase::Colon => match b {
+                    b':' => {
+                        self.phase = Phase::Value;
+                        Ok(())
+                    }
+                    _ => Err(self.fail("expected ':'")),
+                },
+                Phase::CommaOrEnd => {
+                    let Some(&ctx) = self.stack.last() else {
+                        return Err(self.fail("parser state error"));
+                    };
+                    match (ctx, b) {
+                        (Ctx::Arr, b',') => {
+                            self.phase = Phase::Value;
+                            Ok(())
+                        }
+                        (Ctx::Obj, b',') => {
+                            self.phase = Phase::Key;
+                            Ok(())
+                        }
+                        (Ctx::Arr, b']') | (Ctx::Obj, b'}') => {
+                            self.stack.pop();
+                            out.push(if ctx == Ctx::Arr {
+                                Event::ArrEnd
+                            } else {
+                                Event::ObjEnd
+                            });
+                            self.value_done();
+                            Ok(())
+                        }
+                        (Ctx::Arr, _) => Err(self.fail("expected ',' or ']'")),
+                        (Ctx::Obj, _) => Err(self.fail("expected ',' or '}'")),
+                    }
+                }
+                Phase::Done => Err(self.fail("trailing data")),
+            }
+        }
+
+        /// Start a value from its first byte.
+        fn begin_value(&mut self, b: u8, out: &mut Vec<Event>) -> Result<(), JsonError> {
+            match b {
+                b'n' => {
+                    self.token = Token::Lit {
+                        want: b"null",
+                        got: 1,
+                    };
+                    Ok(())
+                }
+                b't' => {
+                    self.token = Token::Lit {
+                        want: b"true",
+                        got: 1,
+                    };
+                    Ok(())
+                }
+                b'f' => {
+                    self.token = Token::Lit {
+                        want: b"false",
+                        got: 1,
+                    };
+                    Ok(())
+                }
+                b'"' => {
+                    self.token = Token::Str {
+                        buf: Vec::new(),
+                        key: false,
+                        esc: Esc::None,
+                    };
+                    Ok(())
+                }
+                b'-' | b'0'..=b'9' => {
+                    self.token = Token::Num {
+                        buf: (b as char).to_string(),
+                        pos: NumPos::Int,
+                    };
+                    Ok(())
+                }
+                b'[' | b'{' => {
+                    if self.stack.len() >= self.limits.max_depth {
+                        return Err(self.fail("nesting depth exceeds limit"));
+                    }
+                    if b == b'[' {
+                        self.stack.push(Ctx::Arr);
+                        out.push(Event::ArrStart);
+                        self.phase = Phase::FirstValueOrEnd;
+                    } else {
+                        self.stack.push(Ctx::Obj);
+                        out.push(Event::ObjStart);
+                        self.phase = Phase::FirstKeyOrEnd;
+                    }
+                    Ok(())
+                }
+                _ => Err(self.fail("unexpected character")),
+            }
+        }
+    }
+
+    /// Partially built container on the [`ValueBuilder`] stack.
+    #[derive(Debug)]
+    enum Partial {
+        Arr(Vec<Json>),
+        Obj(BTreeMap<String, Json>, Option<String>),
+    }
+
+    /// Reassembles a [`StreamParser`] event sequence into a [`Json`] tree,
+    /// with the batch parser's last-wins semantics for duplicate keys.
+    #[derive(Debug, Default)]
+    pub struct ValueBuilder {
+        stack: Vec<Partial>,
+        root: Option<Json>,
+    }
+
+    impl ValueBuilder {
+        /// Empty builder.
+        pub fn new() -> Self {
+            ValueBuilder::default()
+        }
+
+        /// Apply the next event. Event sequences produced by a
+        /// [`StreamParser`] never error here; the checks guard misuse.
+        pub fn on_event(&mut self, ev: Event) -> Result<(), JsonError> {
+            let bad = || JsonError {
+                offset: 0,
+                msg: "malformed event sequence".into(),
+            };
+            match ev {
+                Event::ArrStart => {
+                    self.stack.push(Partial::Arr(Vec::new()));
+                    Ok(())
+                }
+                Event::ObjStart => {
+                    self.stack.push(Partial::Obj(BTreeMap::new(), None));
+                    Ok(())
+                }
+                Event::Key(k) => match self.stack.last_mut() {
+                    Some(Partial::Obj(_, pending @ None)) => {
+                        *pending = Some(k);
+                        Ok(())
+                    }
+                    _ => Err(bad()),
+                },
+                Event::ArrEnd => match self.stack.pop() {
+                    Some(Partial::Arr(v)) => self.attach(Json::Arr(v)),
+                    _ => Err(bad()),
+                },
+                Event::ObjEnd => match self.stack.pop() {
+                    Some(Partial::Obj(m, None)) => self.attach(Json::Obj(m)),
+                    _ => Err(bad()),
+                },
+                Event::Null => self.attach(Json::Null),
+                Event::Bool(b) => self.attach(Json::Bool(b)),
+                Event::Num(x) => self.attach(Json::Num(x)),
+                Event::Str(s) => self.attach(Json::Str(s)),
+            }
+        }
+
+        fn attach(&mut self, v: Json) -> Result<(), JsonError> {
+            match self.stack.last_mut() {
+                Some(Partial::Arr(items)) => {
+                    items.push(v);
+                    Ok(())
+                }
+                Some(Partial::Obj(m, pending)) => match pending.take() {
+                    Some(k) => {
+                        m.insert(k, v);
+                        Ok(())
+                    }
+                    None => Err(JsonError {
+                        offset: 0,
+                        msg: "value without key".into(),
+                    }),
+                },
+                None => {
+                    if self.root.is_some() {
+                        return Err(JsonError {
+                            offset: 0,
+                            msg: "multiple top-level values".into(),
+                        });
+                    }
+                    self.root = Some(v);
+                    Ok(())
+                }
+            }
+        }
+
+        /// The finished tree, if a complete top-level value was assembled.
+        pub fn take(&mut self) -> Option<Json> {
+            if self.stack.is_empty() {
+                self.root.take()
+            } else {
+                None
+            }
+        }
+    }
+
+    /// Parse a document delivered as chunks through the incremental
+    /// pipeline, returning the same tree [`Json::parse`] would.
+    pub fn parse_chunks(chunks: &[&[u8]], limits: Limits) -> Result<Json, JsonError> {
+        let mut p = StreamParser::new(limits);
+        let mut b = ValueBuilder::new();
+        let mut evs = Vec::new();
+        for c in chunks {
+            p.feed(c, &mut evs)?;
+            for e in evs.drain(..) {
+                b.on_event(e)?;
+            }
+        }
+        p.finish(&mut evs)?;
+        for e in evs.drain(..) {
+            b.on_event(e)?;
+        }
+        b.take().ok_or_else(|| JsonError {
+            offset: 0,
+            msg: "incomplete document".into(),
+        })
+    }
+
+    /// Comma/colon bookkeeping for one open container in the emitter.
+    #[derive(Debug)]
+    struct EmitFrame {
+        ctx: Ctx,
+        count: usize,
+    }
+
+    /// Incremental JSON writer whose concatenated output is byte-identical
+    /// to [`Json::to_string`] of the equivalent materialised tree.
+    ///
+    /// Interleave structural calls with [`StreamEmitter::take`] to drain
+    /// the buffer, so a large document is never resident at once.
+    #[derive(Debug, Default)]
+    pub struct StreamEmitter {
+        out: String,
+        stack: Vec<EmitFrame>,
+        after_key: bool,
+    }
+
+    impl StreamEmitter {
+        /// Empty emitter.
+        pub fn new() -> Self {
+            StreamEmitter::default()
+        }
+
+        fn pre_value(&mut self) {
+            if self.after_key {
+                self.after_key = false;
+                return;
+            }
+            let comma = match self.stack.last_mut() {
+                Some(f) => {
+                    f.count += 1;
+                    f.count > 1
+                }
+                None => false,
+            };
+            if comma {
+                self.out.push(',');
+            }
+        }
+
+        /// Emit an object member key (the member value must follow).
+        pub fn key(&mut self, k: &str) {
+            debug_assert!(!self.after_key, "key() twice without a value");
+            let comma = match self.stack.last_mut() {
+                Some(f) => {
+                    f.count += 1;
+                    f.count > 1
+                }
+                None => false,
+            };
+            if comma {
+                self.out.push(',');
+            }
+            write_str(&mut self.out, k);
+            self.out.push(':');
+            self.after_key = true;
+        }
+
+        /// Emit `null`.
+        pub fn push_null(&mut self) {
+            self.pre_value();
+            self.out.push_str("null");
+        }
+
+        /// Emit a boolean.
+        pub fn push_bool(&mut self, b: bool) {
+            self.pre_value();
+            self.out.push_str(if b { "true" } else { "false" });
+        }
+
+        /// Emit a number with [`Json::to_string`] formatting.
+        pub fn push_num(&mut self, x: f64) {
+            self.pre_value();
+            write_num(&mut self.out, x);
+        }
+
+        /// Emit a string with [`Json::to_string`] escaping.
+        pub fn push_str(&mut self, s: &str) {
+            self.pre_value();
+            write_str(&mut self.out, s);
+        }
+
+        /// Emit a whole materialised subtree in compact form.
+        pub fn value(&mut self, v: &Json) {
+            self.pre_value();
+            v.write(&mut self.out, None, 0);
+        }
+
+        /// Open an array.
+        pub fn begin_arr(&mut self) {
+            self.pre_value();
+            self.out.push('[');
+            self.stack.push(EmitFrame {
+                ctx: Ctx::Arr,
+                count: 0,
+            });
+        }
+
+        /// Close the innermost array.
+        pub fn end_arr(&mut self) {
+            debug_assert!(matches!(self.stack.last(), Some(f) if f.ctx == Ctx::Arr));
+            self.stack.pop();
+            self.out.push(']');
+        }
+
+        /// Open an object.
+        pub fn begin_obj(&mut self) {
+            self.pre_value();
+            self.out.push('{');
+            self.stack.push(EmitFrame {
+                ctx: Ctx::Obj,
+                count: 0,
+            });
+        }
+
+        /// Close the innermost object.
+        pub fn end_obj(&mut self) {
+            debug_assert!(!self.after_key, "object closed after dangling key");
+            debug_assert!(matches!(self.stack.last(), Some(f) if f.ctx == Ctx::Obj));
+            self.stack.pop();
+            self.out.push('}');
+        }
+
+        /// Drain the buffered output accumulated since the last take.
+        pub fn take(&mut self) -> String {
+            std::mem::take(&mut self.out)
+        }
+
+        /// Bytes currently buffered (un-taken).
+        pub fn buffered(&self) -> usize {
+            self.out.len()
+        }
+
+        /// Current container nesting depth.
+        pub fn depth(&self) -> usize {
+            self.stack.len()
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -488,5 +1303,156 @@ mod tests {
         assert_eq!(Json::Num(8.0).as_usize(), Some(8));
         assert_eq!(Json::Num(-1.0).as_usize(), None);
         assert_eq!(Json::Num(1.5).as_usize(), None);
+    }
+
+    /// Incremental parse at every two-part split must agree with the batch
+    /// parser: same value on success, error on the same inputs.
+    fn assert_stream_equiv(src: &str) {
+        let batch = Json::parse(src);
+        let bytes = src.as_bytes();
+        for cut in 0..=bytes.len() {
+            let got = stream::parse_chunks(
+                &[&bytes[..cut], &bytes[cut..]],
+                stream::Limits::lenient(),
+            );
+            match (&batch, &got) {
+                (Ok(b), Ok(g)) => assert_eq!(b, g, "split at {cut} of {src:?}"),
+                (Err(_), Err(_)) => {}
+                (b, g) => panic!("split at {cut} of {src:?}: batch={b:?} stream={g:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn stream_matches_batch_on_documents() {
+        for src in [
+            "null",
+            " true ",
+            "-12.5e2",
+            "007",
+            "1.",
+            "-.5",
+            r#""a\nbA✓c""#,
+            "[]",
+            "{}",
+            "[1,2,[3,{\"a\":null}],false]",
+            r#"{"name":"mset2_train","shapes":[8,16,32],"pi":3.25,"ok":true,"none":null}"#,
+            r#"{"a":1,"a":2}"#,
+        ] {
+            assert_stream_equiv(src);
+        }
+    }
+
+    #[test]
+    fn stream_rejects_what_batch_rejects() {
+        for src in [
+            "", "  ", "{", "[1,]", "12 34", r#"{"a" 1}"#, "-", "1e+", "nul", "nullx",
+            r#""abc"#, r#""\x""#, r#""\u12"#, "[1 2]", "{,}", "[1,2,],", "tru e",
+        ] {
+            assert_stream_equiv(src);
+        }
+    }
+
+    #[test]
+    fn stream_depth_limit_binds() {
+        let deep = "[".repeat(10) + &"]".repeat(10);
+        let limits = stream::Limits {
+            max_depth: 4,
+            max_token_bytes: 1 << 10,
+        };
+        assert!(stream::parse_chunks(&[deep.as_bytes()], limits).is_err());
+        let ok = "[".repeat(4) + &"]".repeat(4);
+        assert!(stream::parse_chunks(&[ok.as_bytes()], limits).is_ok());
+    }
+
+    #[test]
+    fn stream_token_limit_bounds_memory() {
+        let limits = stream::Limits {
+            max_depth: 8,
+            max_token_bytes: 16,
+        };
+        let mut p = stream::StreamParser::new(limits);
+        let mut evs = Vec::new();
+        let long = format!("\"{}\"", "x".repeat(64));
+        let err = p
+            .feed(long.as_bytes(), &mut evs)
+            .expect_err("token cap must bind");
+        assert!(err.msg.contains("exceeds limit"));
+        assert!(p.buffered_bytes() <= 16 + 4);
+    }
+
+    #[test]
+    fn emitter_matches_to_string() {
+        fn drive(e: &mut stream::StreamEmitter, v: &Json, out: &mut String) {
+            match v {
+                Json::Null => e.push_null(),
+                Json::Bool(b) => e.push_bool(*b),
+                Json::Num(x) => e.push_num(*x),
+                Json::Str(s) => e.push_str(s),
+                Json::Arr(items) => {
+                    e.begin_arr();
+                    for it in items {
+                        drive(e, it, out);
+                        out.push_str(&e.take()); // drain mid-document
+                    }
+                    e.end_arr();
+                }
+                Json::Obj(m) => {
+                    e.begin_obj();
+                    for (k, v) in m {
+                        e.key(k);
+                        drive(e, v, out);
+                    }
+                    e.end_obj();
+                }
+            }
+        }
+        let v = Json::parse(
+            r#"{"a":[1,2,{"b":"c\nd"},[],{}],"e":-0.5,"f":null,"g":true,"h":"⚡"}"#,
+        )
+        .unwrap();
+        let mut e = stream::StreamEmitter::new();
+        let mut out = String::new();
+        drive(&mut e, &v, &mut out);
+        out.push_str(&e.take());
+        assert_eq!(out, v.to_string());
+        assert_eq!(e.depth(), 0);
+        assert_eq!(e.buffered(), 0);
+    }
+
+    #[test]
+    fn emitter_value_subtree_matches() {
+        let v = Json::parse(r#"{"rows":[[1,2],[3,4]],"n":2}"#).unwrap();
+        let mut e = stream::StreamEmitter::new();
+        e.begin_obj();
+        e.key("n");
+        e.value(v.get("n").unwrap());
+        e.key("rows");
+        e.value(v.get("rows").unwrap());
+        e.end_obj();
+        assert_eq!(e.take(), v.to_string());
+    }
+
+    #[test]
+    fn stream_events_carry_structure() {
+        use stream::Event;
+        let mut p = stream::StreamParser::new(stream::Limits::default());
+        let mut evs = Vec::new();
+        p.feed(br#"{"k":[1,"s"#, &mut evs).unwrap();
+        p.feed(br#""]}"#, &mut evs).unwrap();
+        p.finish(&mut evs).unwrap();
+        assert_eq!(
+            evs,
+            vec![
+                Event::ObjStart,
+                Event::Key("k".into()),
+                Event::ArrStart,
+                Event::Num(1.0),
+                Event::Str("s".into()),
+                Event::ArrEnd,
+                Event::ObjEnd,
+            ]
+        );
+        assert!(p.is_done());
     }
 }

@@ -1,0 +1,394 @@
+//! Deterministic fuzz harness for the incremental JSON wire layer.
+//!
+//! A seeded corpus of valid and malformed documents is mutated with
+//! byte-level edits (insert/delete/replace/duplicate/truncate/splice) and
+//! every resulting input is pushed through [`StreamParser`]:
+//!
+//! - **no panics** — every parse runs under `catch_unwind`;
+//! - **bounded memory** — `buffered_bytes()` never exceeds the token
+//!   limit and `depth()` never exceeds the nesting limit;
+//! - **incremental ≡ batch** — the streaming parser accepts exactly the
+//!   same documents as [`Json::parse`] and yields the same value;
+//! - **chunking invariance** — re-feeding the same bytes split at every
+//!   (sampled) chunk boundary, and byte-at-a-time for short inputs,
+//!   produces the same value-or-error outcome as a single feed.
+//!
+//! The run is deterministic: `CS_FUZZ_SEED` picks the mutation stream
+//! (default fixed) and `CS_FUZZ_ITERS` scales the iteration count (CI runs
+//! a larger budget than the default `cargo test`). On failure the harness
+//! greedily minimises the input and writes it to
+//! `results/json_fuzz_min.bin` so CI can upload it as an artifact.
+
+use containerstress::util::json::stream::{Limits, StreamParser, ValueBuilder};
+use containerstress::util::json::Json;
+use containerstress::util::rng::Rng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Default per-`cargo test` iteration budget; CI raises it via env.
+const DEFAULT_ITERS: usize = 1500;
+
+fn iters() -> usize {
+    std::env::var("CS_FUZZ_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_ITERS)
+}
+
+fn seed() -> u64 {
+    std::env::var("CS_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xF477_C0DE)
+}
+
+/// Seed corpus: small valid documents, every token kind, boundary-hostile
+/// escapes, and a spread of malformed inputs the parser must reject
+/// without panicking.
+fn corpus() -> Vec<Vec<u8>> {
+    let seeds: &[&str] = &[
+        // valid
+        "null",
+        "true",
+        "false",
+        "0",
+        "-0",
+        "42",
+        "-17",
+        "123.456",
+        "1e9",
+        "-2.5E-3",
+        "6.02e+23",
+        "\"\"",
+        "\"abc\"",
+        "\"a\\\"b\\\\c\\/d\\n\\t\\r\\f\\b\"",
+        "\"\\u00e9\\u0418\\u4e2d\"",
+        "\"\\ud83d\\ude00\"",
+        "[]",
+        "[1]",
+        "[1,2,3]",
+        "[[],[[]],[1,[2,[3]]]]",
+        "{}",
+        "{\"a\":1}",
+        "{\"a\":{\"b\":{\"c\":[null,true,\"x\"]}},\"d\":-1.5e2}",
+        " { \"k\" : [ 1 , 2 ] } ",
+        "{\"dup\":1,\"dup\":2}",
+        // malformed
+        "",
+        "   ",
+        "{",
+        "}",
+        "[",
+        "]",
+        "[1,",
+        "[1,]",
+        "{\"a\"}",
+        "{\"a\":}",
+        "{\"a\":1,}",
+        "{1:2}",
+        "[1 2]",
+        "01",
+        "+1",
+        "--1",
+        "1..2",
+        "1e",
+        "1e+",
+        ".5",
+        "-",
+        "tru",
+        "truee",
+        "nul",
+        "falsey",
+        "\"unterminated",
+        "\"bad\\escape\"",
+        "\"\\u12\"",
+        "\"\\ud800\"",
+        "[1,2] trailing",
+        "null null",
+    ];
+    let mut out: Vec<Vec<u8>> = seeds.iter().map(|s| s.as_bytes().to_vec()).collect();
+    // a couple of non-UTF-8 inputs: must be rejected, never panic
+    out.push(vec![0xff, 0xfe, b'1']);
+    out.push(vec![b'"', 0xc3, b'"']);
+    out
+}
+
+/// Bytes mutations are biased toward, so edits tend to stay JSON-shaped.
+const ALPHABET: &[u8] = b"{}[],:\"\\0123456789.eE+-truefalsn u\t\n\r ";
+
+fn mutate(rng: &mut Rng, base: &[u8], corpus: &[Vec<u8>]) -> Vec<u8> {
+    let mut v = base.to_vec();
+    for _ in 0..1 + rng.below(4) {
+        let pick = |rng: &mut Rng| {
+            if rng.below(4) == 0 {
+                rng.below(256) as u8
+            } else {
+                ALPHABET[rng.range_usize(0, ALPHABET.len())]
+            }
+        };
+        match rng.below(6) {
+            0 => {
+                let at = rng.range_usize(0, v.len() + 1);
+                let b = pick(rng);
+                v.insert(at, b);
+            }
+            1 if !v.is_empty() => {
+                v.remove(rng.range_usize(0, v.len()));
+            }
+            2 if !v.is_empty() => {
+                let at = rng.range_usize(0, v.len());
+                v[at] = pick(rng);
+            }
+            3 if !v.is_empty() => {
+                // duplicate a random slice in place
+                let a = rng.range_usize(0, v.len());
+                let b = rng.range_usize(a, v.len().min(a + 16) + 1);
+                let slice = v[a..b].to_vec();
+                let at = rng.range_usize(0, v.len() + 1);
+                v.splice(at..at, slice);
+            }
+            4 if !v.is_empty() => {
+                v.truncate(rng.range_usize(0, v.len() + 1));
+            }
+            _ => {
+                // splice a fragment of another corpus entry
+                let other = &corpus[rng.range_usize(0, corpus.len())];
+                if !other.is_empty() {
+                    let a = rng.range_usize(0, other.len());
+                    let b = rng.range_usize(a, other.len().min(a + 16) + 1);
+                    let at = rng.range_usize(0, v.len() + 1);
+                    v.splice(at..at, other[a..b].iter().copied());
+                }
+            }
+        }
+        if v.len() > 4096 {
+            v.truncate(4096);
+        }
+    }
+    v
+}
+
+/// Incremental parse with the memory-bound assertions inlined: returns the
+/// value, or `Err(())` for any reject (offsets/messages are not compared —
+/// only accept/reject and the value must match the batch parser).
+fn incremental(chunks: &[&[u8]], limits: Limits) -> Result<Json, ()> {
+    let mut parser = StreamParser::new(limits);
+    let mut builder = ValueBuilder::new();
+    let mut events = Vec::new();
+    for chunk in chunks {
+        if parser.feed(chunk, &mut events).is_err() {
+            return Err(());
+        }
+        assert!(
+            parser.buffered_bytes() <= limits.max_token_bytes,
+            "token buffer exceeded its limit: {} > {}",
+            parser.buffered_bytes(),
+            limits.max_token_bytes
+        );
+        assert!(
+            parser.depth() <= limits.max_depth,
+            "nesting exceeded its limit: {} > {}",
+            parser.depth(),
+            limits.max_depth
+        );
+        for ev in events.drain(..) {
+            if builder.on_event(ev).is_err() {
+                return Err(());
+            }
+        }
+    }
+    if parser.finish(&mut events).is_err() {
+        return Err(());
+    }
+    for ev in events.drain(..) {
+        if builder.on_event(ev).is_err() {
+            return Err(());
+        }
+    }
+    builder.take().ok_or(())
+}
+
+/// The full per-input check. Panics (with context) on any violation.
+fn check_input(input: &[u8]) {
+    let limits = Limits::lenient();
+    let whole = catch_unwind(AssertUnwindSafe(|| incremental(&[input], limits)))
+        .unwrap_or_else(|_| {
+            panic!(
+                "streaming parser panicked on {:?}",
+                String::from_utf8_lossy(input)
+            )
+        });
+
+    // incremental ≡ batch (UTF-8 inputs only — the batch parser takes &str)
+    if let Ok(text) = std::str::from_utf8(input) {
+        match (Json::parse(text), &whole) {
+            (Ok(b), Ok(s)) => assert_eq!(
+                &b, s,
+                "batch and streaming values differ for {text:?}"
+            ),
+            (Ok(_), Err(())) => panic!("batch accepts, streaming rejects: {text:?}"),
+            (Err(_), Ok(_)) => panic!("batch rejects, streaming accepts: {text:?}"),
+            (Err(_), Err(())) => {}
+        }
+    } else {
+        assert!(whole.is_err(), "non-UTF-8 input must be rejected");
+    }
+
+    // chunking invariance: every (sampled) 2-part split ...
+    let n = input.len();
+    let step = (n / 64).max(1);
+    let mut at = 1;
+    while at < n {
+        let split = incremental(&[&input[..at], &input[at..]], limits);
+        assert_eq!(
+            split, whole,
+            "outcome changed when split at byte {at} of {:?}",
+            String::from_utf8_lossy(input)
+        );
+        at += step;
+    }
+    // ... and byte-at-a-time for short inputs
+    if n > 0 && n <= 64 {
+        let singles: Vec<&[u8]> = input.chunks(1).collect();
+        assert_eq!(
+            incremental(&singles, limits),
+            whole,
+            "outcome changed when fed byte-at-a-time: {:?}",
+            String::from_utf8_lossy(input)
+        );
+    }
+}
+
+/// Run `check_input` and capture a failure instead of unwinding, so the
+/// driver can minimise before reporting.
+fn failure(input: &[u8]) -> Option<String> {
+    catch_unwind(AssertUnwindSafe(|| check_input(input)))
+        .err()
+        .map(|e| {
+            e.downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "non-string panic payload".into())
+        })
+}
+
+/// Greedy minimisation: repeatedly drop slices while the input still
+/// fails. Runs with a silent panic hook so the search doesn't spam stderr.
+fn minimise(input: &[u8]) -> Vec<u8> {
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let mut cur = input.to_vec();
+    let mut window = (cur.len() / 2).max(1);
+    while window >= 1 {
+        let mut progressed = false;
+        let mut at = 0;
+        while at < cur.len() {
+            let mut candidate = cur.clone();
+            candidate.drain(at..(at + window).min(candidate.len()));
+            if failure(&candidate).is_some() {
+                cur = candidate;
+                progressed = true;
+            } else {
+                at += window;
+            }
+        }
+        if !progressed {
+            if window == 1 {
+                break;
+            }
+            window /= 2;
+        }
+    }
+    std::panic::set_hook(prev_hook);
+    cur
+}
+
+/// Persist a failing input for CI artifact upload (best-effort).
+fn report(original: &[u8], minimised: &[u8], msg: &str) {
+    let _ = std::fs::create_dir_all("results");
+    let _ = std::fs::write("results/json_fuzz_min.bin", minimised);
+    let _ = std::fs::write(
+        "results/json_fuzz_min.txt",
+        format!(
+            "seed: {}\nfailure: {}\noriginal ({} bytes): {:?}\nminimised ({} bytes): {:?}\n",
+            seed(),
+            msg,
+            original.len(),
+            String::from_utf8_lossy(original),
+            minimised.len(),
+            String::from_utf8_lossy(minimised),
+        ),
+    );
+}
+
+#[test]
+fn fuzz_corpus_and_mutations() {
+    let corpus = corpus();
+    // the unmutated corpus first: these must always hold
+    for entry in &corpus {
+        if let Some(msg) = failure(entry) {
+            let min = minimise(entry);
+            report(entry, &min, &msg);
+            panic!(
+                "corpus input failed ({} bytes minimised to {}, \
+                 written to results/json_fuzz_min.bin): {msg}",
+                entry.len(),
+                min.len()
+            );
+        }
+    }
+    // then the seeded mutation stream
+    let mut rng = Rng::new(seed());
+    for i in 0..iters() {
+        let base = &corpus[rng.range_usize(0, corpus.len())];
+        let input = mutate(&mut rng, base, &corpus);
+        if let Some(msg) = failure(&input) {
+            let min = minimise(&input);
+            report(&input, &min, &msg);
+            panic!(
+                "fuzz iteration {i} (seed {}) failed; input minimised \
+                 {} → {} bytes, written to results/json_fuzz_min.bin: {msg}",
+                seed(),
+                input.len(),
+                min.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn deep_nesting_is_rejected_with_bounded_state() {
+    // 10k opens against the default 256-depth limit: must error (not
+    // recurse or grow without bound) and the bound must hold throughout.
+    let input = vec![b'['; 10_000];
+    let limits = Limits::default();
+    let mut parser = StreamParser::new(limits);
+    let mut events = Vec::new();
+    let r = parser.feed(&input, &mut events);
+    assert!(r.is_err(), "depth limit must reject 10k nested arrays");
+    assert!(parser.depth() <= limits.max_depth);
+}
+
+#[test]
+fn oversized_token_is_rejected_with_bounded_buffer() {
+    // A 3 MB string against the default 1 MB token limit, fed in 8 KB
+    // chunks like the HTTP layer does: the buffer must never outgrow the
+    // limit even though the token spans hundreds of chunks.
+    let mut input = vec![b'"'];
+    input.extend(std::iter::repeat(b'x').take(3 << 20));
+    input.push(b'"');
+    let limits = Limits::default();
+    let mut parser = StreamParser::new(limits);
+    let mut events = Vec::new();
+    let mut rejected = false;
+    for chunk in input.chunks(8 << 10) {
+        if parser.feed(chunk, &mut events).is_err() {
+            rejected = true;
+            break;
+        }
+        assert!(
+            parser.buffered_bytes() <= limits.max_token_bytes,
+            "token buffer exceeded its limit mid-stream"
+        );
+    }
+    assert!(rejected, "token limit must reject a 3 MB string");
+}

@@ -1,0 +1,190 @@
+//! Property tests for the streaming JSON wire layer
+//! (`util::json::stream`), driven by the in-repo `util::prop` harness:
+//!
+//! - **emitter ≡ batch**: [`StreamEmitter`] output, drained at random
+//!   points, is byte-identical to [`Json::to_string`] of the same tree;
+//! - **emit → parse roundtrip**: what the emitter writes, both parsers
+//!   read back to the original tree;
+//! - **chunking invariance**: [`StreamParser`] reassembles the same tree
+//!   from any chunking of the serialised bytes, including byte-at-a-time.
+//!
+//! Replay failures with `CONTAINERSTRESS_PROP_SEED=<seed>`.
+
+use containerstress::util::json::stream::{parse_chunks, Limits, StreamEmitter};
+use containerstress::util::json::Json;
+use containerstress::util::prop::forall_res;
+use containerstress::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Characters chosen to exercise every escape path: quotes, backslashes,
+/// control characters, multi-byte UTF-8, and an astral-plane code point
+/// (surrogate-pair escapes on the wire).
+const STRING_ALPHABET: &[char] = &[
+    'a', 'b', 'z', '0', ' ', '"', '\\', '/', '\n', '\t', '\r', '\u{0}', '\u{1f}', 'é', 'И',
+    '中', '😀',
+];
+
+fn gen_string(rng: &mut Rng) -> String {
+    let len = rng.range_usize(0, 12);
+    (0..len)
+        .map(|_| STRING_ALPHABET[rng.range_usize(0, STRING_ALPHABET.len())])
+        .collect()
+}
+
+/// Finite numbers only (JSON has no NaN/Inf); mixes integers, decimals
+/// and large/small magnitudes so formatting is exercised broadly.
+fn gen_num(rng: &mut Rng) -> f64 {
+    match rng.below(5) {
+        0 => rng.below(1000) as f64,
+        1 => -(rng.below(1000) as f64),
+        2 => rng.below(1 << 20) as f64 / 1024.0,
+        3 => rng.below(1000) as f64 * 1e12,
+        _ => -(rng.below(1_000_000) as f64) * 1e-9,
+    }
+}
+
+fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+    let max = if depth == 0 { 4 } else { 6 };
+    match rng.below(max) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num(gen_num(rng)),
+        3 => Json::Str(gen_string(rng)),
+        4 => {
+            let n = rng.range_usize(0, 5);
+            Json::Arr((0..n).map(|_| gen_json(rng, depth - 1)).collect())
+        }
+        _ => {
+            let n = rng.range_usize(0, 5);
+            let mut m = BTreeMap::new();
+            for _ in 0..n {
+                m.insert(gen_string(rng), gen_json(rng, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+/// Walk `v` through the emitter's structural API, draining the buffer at
+/// pseudo-random points to prove drains never corrupt the byte stream.
+fn emit_tree(em: &mut StreamEmitter, v: &Json, rng: &mut Rng, out: &mut String) {
+    match v {
+        Json::Null => em.push_null(),
+        Json::Bool(b) => em.push_bool(*b),
+        Json::Num(x) => em.push_num(*x),
+        Json::Str(s) => em.push_str(s),
+        Json::Arr(items) => {
+            em.begin_arr();
+            for item in items {
+                emit_tree(em, item, rng, out);
+            }
+            em.end_arr();
+        }
+        Json::Obj(m) => {
+            em.begin_obj();
+            for (k, val) in m {
+                em.key(k);
+                emit_tree(em, val, rng, out);
+            }
+            em.end_obj();
+        }
+    }
+    if rng.below(3) == 0 {
+        out.push_str(&em.take());
+    }
+}
+
+/// Split `bytes` at `cuts` random boundaries (possibly duplicated — empty
+/// chunks are legal on the wire and must be no-ops).
+fn random_chunks<'a>(bytes: &'a [u8], rng: &mut Rng) -> Vec<&'a [u8]> {
+    if bytes.is_empty() {
+        return vec![bytes];
+    }
+    let mut cuts: Vec<usize> = (0..rng.range_usize(0, 8))
+        .map(|_| rng.range_usize(0, bytes.len() + 1))
+        .collect();
+    cuts.push(0);
+    cuts.push(bytes.len());
+    cuts.sort_unstable();
+    cuts.windows(2).map(|w| &bytes[w[0]..w[1]]).collect()
+}
+
+#[test]
+fn emitter_is_byte_identical_to_batch_serialisation() {
+    forall_res(
+        "StreamEmitter ≡ Json::to_string",
+        300,
+        |rng| {
+            let tree = gen_json(rng, 4);
+            (tree, rng.next_u64())
+        },
+        |(tree, drain_seed)| {
+            let mut em = StreamEmitter::new();
+            let mut drains = Rng::new(*drain_seed);
+            let mut out = String::new();
+            emit_tree(&mut em, tree, &mut drains, &mut out);
+            out.push_str(&em.take());
+            let batch = tree.to_string();
+            if out != batch {
+                return Err(format!("emitter: {out:?}\nbatch:   {batch:?}"));
+            }
+            if em.depth() != 0 || em.buffered() != 0 {
+                return Err("emitter not drained/balanced at end".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn emit_then_parse_roundtrips() {
+    forall_res(
+        "emit → parse roundtrip",
+        300,
+        |rng| gen_json(rng, 4),
+        |tree| {
+            let wire = tree.to_string();
+            let batch = Json::parse(&wire)
+                .map_err(|e| format!("batch parser rejected emitter output: {e}"))?;
+            if &batch != tree {
+                return Err(format!("batch roundtrip changed value: {wire:?}"));
+            }
+            let streamed = parse_chunks(&[wire.as_bytes()], Limits::lenient())
+                .map_err(|e| format!("stream parser rejected emitter output: {e}"))?;
+            if &streamed != tree {
+                return Err(format!("stream roundtrip changed value: {wire:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn reassembly_is_invariant_under_arbitrary_chunking() {
+    forall_res(
+        "chunking invariance",
+        300,
+        |rng| {
+            let tree = gen_json(rng, 4);
+            (tree, rng.next_u64())
+        },
+        |(tree, chunk_seed)| {
+            let wire = tree.to_string();
+            let bytes = wire.as_bytes();
+            let mut rng = Rng::new(*chunk_seed);
+            let chunks = random_chunks(bytes, &mut rng);
+            let got = parse_chunks(&chunks, Limits::lenient())
+                .map_err(|e| format!("rejected under chunking {chunks:?}: {e}"))?;
+            if &got != tree {
+                return Err("random chunking changed the parsed value".into());
+            }
+            let singles: Vec<&[u8]> = bytes.chunks(1).collect();
+            let got = parse_chunks(&singles, Limits::lenient())
+                .map_err(|e| format!("rejected byte-at-a-time: {e}"))?;
+            if &got != tree {
+                return Err("byte-at-a-time chunking changed the parsed value".into());
+            }
+            Ok(())
+        },
+    );
+}

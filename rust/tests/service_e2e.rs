@@ -9,7 +9,7 @@ use containerstress::coordinator::Backend;
 use containerstress::metrics::Registry;
 use containerstress::service::Server;
 use containerstress::util::json::Json;
-use std::io::{Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -529,6 +529,248 @@ fn trace_timeline_is_ordered_and_carries_request_id() {
     let (status, _) = request(addr, "GET", "/metrics?format=csv", None);
     assert_eq!(status, 400);
 
+    server.shutdown();
+}
+
+/// A persistent HTTP/1.1 client connection: framed response reading
+/// (`Content-Length` and chunked transfer encoding) so many requests can
+/// share one socket — the `request()` helper above closes per call.
+struct Conn {
+    reader: BufReader<TcpStream>,
+}
+
+impl Conn {
+    fn connect(addr: SocketAddr) -> Conn {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(120)))
+            .unwrap();
+        Conn {
+            reader: BufReader::new(stream),
+        }
+    }
+
+    /// Write one request (no `Connection: close` — the connection is
+    /// meant to survive). `extra` carries additional header lines, each
+    /// `\r\n`-terminated.
+    fn send(&mut self, method: &str, path: &str, body: Option<&str>, extra: &str) {
+        let body = body.unwrap_or("");
+        let raw = format!(
+            "{method} {path} HTTP/1.1\r\nHost: localhost\r\n{extra}Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        self.reader
+            .get_mut()
+            .write_all(raw.as_bytes())
+            .expect("send");
+    }
+
+    /// Status line + headers (names lower-cased) of the next response.
+    fn read_head(&mut self) -> (u16, Vec<(String, String)>) {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("status line");
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("bad status line: {line:?}"));
+        let mut headers = Vec::new();
+        loop {
+            let mut h = String::new();
+            self.reader.read_line(&mut h).expect("header");
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+            }
+        }
+        (status, headers)
+    }
+
+    /// One complete framed response; chunked bodies are drained in full.
+    fn read_response(&mut self) -> (u16, Vec<(String, String)>, Vec<u8>) {
+        let (status, headers) = self.read_head();
+        let chunked = headers
+            .iter()
+            .any(|(k, v)| k == "transfer-encoding" && v == "chunked");
+        let mut body = Vec::new();
+        if chunked {
+            while let Some(chunk) = self.read_chunk() {
+                body.extend_from_slice(&chunk);
+            }
+        } else {
+            let len: usize = headers
+                .iter()
+                .find(|(k, _)| k == "content-length")
+                .and_then(|(_, v)| v.parse().ok())
+                .expect("content-length header");
+            body.resize(len, 0);
+            self.reader.read_exact(&mut body).expect("body");
+        }
+        (status, headers, body)
+    }
+
+    /// Next frame of a chunked body; `None` on the terminating 0-chunk.
+    fn read_chunk(&mut self) -> Option<Vec<u8>> {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("chunk size");
+        let size = usize::from_str_radix(line.trim(), 16)
+            .unwrap_or_else(|_| panic!("bad chunk size line {line:?}"));
+        let mut crlf = [0u8; 2];
+        if size == 0 {
+            self.reader.read_exact(&mut crlf).expect("final crlf");
+            return None;
+        }
+        let mut chunk = vec![0u8; size];
+        self.reader.read_exact(&mut chunk).expect("chunk data");
+        self.reader.read_exact(&mut crlf).expect("chunk crlf");
+        Some(chunk)
+    }
+}
+
+fn body_json(body: &[u8]) -> Json {
+    Json::parse(std::str::from_utf8(body).expect("utf-8 body"))
+        .unwrap_or_else(|e| panic!("bad body ({e}): {:?}", String::from_utf8_lossy(body)))
+}
+
+#[test]
+fn keep_alive_connection_serves_pipelined_requests() {
+    let _guard = sweep_lock();
+    let server = Server::start(&test_config(), Backend::Native).expect("server");
+    let addr = server.addr();
+    let mut conn = Conn::connect(addr);
+
+    // Genuinely pipelined: both requests written before either response
+    // is read; the server answers in order on the same socket.
+    conn.send("GET", "/healthz", None, "");
+    conn.send("GET", "/v1/shapes", None, "");
+    let (status, _, body) = conn.read_response();
+    assert_eq!(status, 200);
+    assert_eq!(
+        body_json(&body).get("status").and_then(Json::as_str),
+        Some("ok")
+    );
+    let (status, _, body) = conn.read_response();
+    assert_eq!(status, 200);
+    assert!(body_json(&body).get("shapes").unwrap().as_arr().unwrap().len() >= 10);
+
+    // scope → poll → cancel → poll-to-cancelled, all on the same socket
+    conn.send("POST", "/v1/scope", Some(LARGE_SCOPE_BODY), "");
+    let (status, _, body) = conn.read_response();
+    assert_eq!(status, 202, "{:?}", String::from_utf8_lossy(&body));
+    let id = body_json(&body).get("job_id").unwrap().as_f64().unwrap() as u64;
+
+    conn.send("GET", &format!("/v1/jobs/{id}"), None, "");
+    let (status, _, body) = conn.read_response();
+    assert_eq!(status, 200);
+    assert!(matches!(
+        body_json(&body).get("status").and_then(Json::as_str),
+        Some("queued" | "running")
+    ));
+
+    conn.send("DELETE", &format!("/v1/jobs/{id}"), None, "");
+    let (status, _, _) = conn.read_response();
+    assert_eq!(status, 202);
+
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        assert!(Instant::now() < deadline, "job {id} never cancelled");
+        conn.send("GET", &format!("/v1/jobs/{id}"), None, "");
+        let (status, _, body) = conn.read_response();
+        assert_eq!(status, 200);
+        match body_json(&body).get("status").and_then(Json::as_str) {
+            Some("cancelled") => break,
+            Some("queued" | "running") => std::thread::sleep(Duration::from_millis(10)),
+            other => panic!("cancel produced status {other:?}"),
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn events_stream_is_live_and_matches_final_summary() {
+    let _guard = sweep_lock();
+    let server = Server::start(&test_config(), Backend::Native).expect("server");
+    let addr = server.addr();
+    let id = submit(addr, LARGE_SCOPE_BODY);
+
+    let mut conn = Conn::connect(addr);
+    conn.send(
+        "GET",
+        &format!("/v1/jobs/{id}/events"),
+        None,
+        "x-request-id: e2e-stream-7\r\n",
+    );
+    let (status, headers) = conn.read_head();
+    assert_eq!(status, 200);
+    let header = |name: &str| {
+        headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    };
+    assert_eq!(header("transfer-encoding"), Some("chunked"));
+    assert_eq!(header("content-type"), Some("application/x-ndjson"));
+    assert_eq!(
+        header("x-request-id"),
+        Some("e2e-stream-7"),
+        "stream must carry the caller's correlation ID"
+    );
+
+    // Read until the first event line arrives, then prove the job is
+    // still in flight — the stream is live, not a post-hoc replay.
+    let mut text = String::new();
+    let first = loop {
+        let chunk = conn.read_chunk().expect("stream ended before any event");
+        text.push_str(std::str::from_utf8(&chunk).expect("utf-8 event"));
+        if let Some(line) = text.lines().find(|l| !l.trim().is_empty()) {
+            break Json::parse(line).unwrap_or_else(|e| panic!("bad event ({e}): {line}"));
+        }
+    };
+    assert_eq!(first.get("event").and_then(Json::as_str), Some("cell"));
+    let (st, _) = job_status(addr, id);
+    assert!(
+        matches!(st.as_str(), "queued" | "running"),
+        "events must arrive before the job completes (job already {st})"
+    );
+
+    // Drain to the terminal summary (the stream ends itself).
+    while let Some(chunk) = conn.read_chunk() {
+        text.push_str(std::str::from_utf8(&chunk).expect("utf-8 event"));
+    }
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    let last = Json::parse(lines.last().unwrap()).unwrap();
+    assert_eq!(last.get("event").and_then(Json::as_str), Some("summary"));
+    assert_eq!(last.get("status").and_then(Json::as_str), Some("done"));
+    assert_eq!(last.get("job").unwrap().as_usize(), Some(id as usize));
+
+    // The terminal event agrees with the polled job state.
+    let (st, j) = job_status(addr, id);
+    assert_eq!(st, "done");
+    assert_eq!(
+        last.get("trials_done").unwrap().as_usize(),
+        Some(progress_field(&j, "trials_done"))
+    );
+    assert_eq!(
+        last.get("cells_done").unwrap().as_usize(),
+        Some(progress_field(&j, "cells_done"))
+    );
+    let cell_events = lines
+        .iter()
+        .filter(|l| Json::parse(l).unwrap().get("event").and_then(Json::as_str) == Some("cell"))
+        .count();
+    assert_eq!(cell_events, progress_field(&j, "cells_total"));
+
+    // The connection survives the stream: one more request on it.
+    conn.send("GET", &format!("/v1/jobs/{id}"), None, "");
+    let (status, _, body) = conn.read_response();
+    assert_eq!(status, 200);
+    assert_eq!(
+        body_json(&body).get("status").and_then(Json::as_str),
+        Some("done")
+    );
     server.shutdown();
 }
 
