@@ -89,7 +89,8 @@ fn main() {
             grid_local.set(r, c, t / t_gpu);
         }
     }
-    let local_eff = accel::calibrate_cpu_eff(&measured);
+    let local_eff = accel::calibrate_cpu_eff(&measured)
+        .expect("at least one measured (flops, seconds) training cell");
     println!(
         "local testbed effective training throughput: {:.2} GFLOP/s (XLA CPU, multithreaded)",
         local_eff / 1e9

@@ -85,7 +85,8 @@ fn main() {
             measured.push((flops, t));
         }
     }
-    let local_eff = accel::calibrate_cpu_eff(&measured);
+    let local_eff = accel::calibrate_cpu_eff(&measured)
+        .expect("at least one measured (flops, seconds) surveillance cell");
     println!(
         "local testbed effective surveillance throughput at n={n}: {:.2} GFLOP/s",
         local_eff / 1e9

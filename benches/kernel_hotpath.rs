@@ -1,24 +1,35 @@
-//! **BENCH-kernel**: reference vs blocked kernel core on the native MSET
-//! trial hot path (§II.D).
+//! **BENCH-kernel**: reference vs blocked vs SIMD kernel tiers on the
+//! native MSET trial hot path (§II.D).
 //!
-//! Three gates, enforced with asserts so CI catches regressions:
+//! Four gates, enforced with asserts so CI catches regressions:
 //!
 //! 1. **Accuracy** — the blocked `sim_cross`/`sim_matrix` kernels agree
 //!    with the per-pair reference implementations to ≤ 1e-10 at every
-//!    grid size (they are designed to be far closer; see
-//!    `linalg::kernel`'s bit-stability contract).
+//!    grid size (the scalar tier is designed to be far closer; see
+//!    `linalg::kernel`'s bit-stability contract), and so does the SIMD
+//!    tier when one exists (tolerance mode).
 //! 2. **Kernel speedup** — blocked `sim_cross` + Gram (`sim_matrix`)
 //!    combined are ≥ 3× the reference formulations at n = 1024.
-//! 3. **End-to-end** — a full native MSET2 trial (synthesize → scale →
+//! 3. **SIMD speedup** — when a vector tier is detected (AVX2+FMA or
+//!    NEON), SIMD `sim_cross` + Gram combined are ≥ 2× the scalar
+//!    blocked tier at n = 1024. Without one the floor is skipped with a
+//!    logged notice; `CONTAINERSTRESS_KERNEL=simd` + no vector tier
+//!    skips the whole bench the same way (for the CI SIMD-forced step).
+//! 4. **End-to-end** — a full native MSET2 trial (synthesize → scale →
 //!    select → train → surveil) on the production kernel stack is
 //!    ≥ 1.5× a twin trial built from the naive reference kernels.
+//!
+//! A final calibration pass measures effective CPU GFLOP/s per backend
+//! from full `MsetPlugin` fit/estimate cells; the `"calibration"` rows
+//! it emits are what `accel::measured_cpu_ref()` feeds into `recommend`.
 //!
 //! Output: `results/BENCH_kernel.json` + `results/kernel_hotpath.csv`
 //! (the README perf table is sourced from the JSON). `CS_BENCH_QUICK=1`
 //! shortens the measuring windows but keeps every asserted point.
 
+use containerstress::accel;
 use containerstress::bench::{black_box, figs, table, write_csv, Bencher, Measurement};
-use containerstress::linalg::{eigh, kernel, Mat};
+use containerstress::linalg::{eigh, kernel, simd, Mat};
 use containerstress::models::{MsetPlugin, PrognosticModel};
 use containerstress::mset::{
     select_memory, sim_cross_ref, sim_matrix_ref, Scaler, RIDGE_REL,
@@ -107,7 +118,27 @@ fn main() {
 
     const MAX_KERNEL_DIFF: f64 = 1e-10;
     const MIN_KERNEL_SPEEDUP: f64 = 3.0; // sim_cross + Gram at n = 1024
+    const MIN_SIMD_SPEEDUP: f64 = 2.0; // SIMD vs scalar blocked at n = 1024
     const MIN_E2E_SPEEDUP: f64 = 1.5; // full native trial
+
+    // CI's SIMD-forced variant sets CONTAINERSTRESS_KERNEL=simd; on a
+    // host without a vector tier that run has nothing to measure, so it
+    // skips cleanly instead of degrading to a duplicate scalar run.
+    let simd_tier = simd::detect();
+    let forced_simd = std::env::var(simd::ENV_KNOB)
+        .map(|v| v.trim().eq_ignore_ascii_case("simd"))
+        .unwrap_or(false);
+    if forced_simd && simd_tier.is_none() {
+        println!(
+            "kernel_hotpath: {}=simd requested but this host has no SIMD tier \
+             (need AVX2+FMA on x86_64 or NEON on aarch64); skipping bench",
+            simd::ENV_KNOB
+        );
+        return;
+    }
+    // Pin the scalar tier for the baseline sections regardless of the env
+    // knob; the SIMD sections below switch tiers explicitly.
+    simd::install(simd::BackendRequest::Scalar, "bench").expect("scalar install cannot fail");
 
     let sizes: &[usize] = if quick {
         &[64, 256, 1024]
@@ -118,6 +149,9 @@ fn main() {
     let mut ms: Vec<Measurement> = Vec::new();
     let mut size_rows: Vec<Json> = Vec::new();
     let mut speedup_at_1024 = 0.0;
+    // (n, m, bsz, blocked sim_cross median, blocked Gram median) per size,
+    // for the SIMD-vs-scalar-blocked comparison below
+    let mut scalar_blk: Vec<(usize, usize, usize, f64, f64)> = Vec::new();
     for &n in sizes {
         // memory-vector and chunk axes capped like the paper's grid
         let m = n.min(256);
@@ -161,10 +195,12 @@ fn main() {
         if n == 1024 {
             speedup_at_1024 = combined;
         }
+        scalar_blk.push((n, m, bsz, bc.stats.median, bg.stats.median));
         size_rows.push(Json::obj(vec![
             ("n", Json::Num(n as f64)),
             ("m", Json::Num(m as f64)),
             ("b", Json::Num(bsz as f64)),
+            ("backend", Json::Str("scalar".into())),
             ("ref_sim_cross_s", Json::Num(rc.stats.median)),
             ("blk_sim_cross_s", Json::Num(bc.stats.median)),
             ("ref_gram_s", Json::Num(rg.stats.median)),
@@ -182,6 +218,79 @@ fn main() {
         "blocked sim_cross+Gram at n=1024 is only {speedup_at_1024:.2}× the reference \
          (floor {MIN_KERNEL_SPEEDUP}×)"
     );
+
+    // --- SIMD tier vs scalar blocked --------------------------------------
+    let mut simd_speedup_at_1024 = 0.0;
+    match simd_tier {
+        None => println!(
+            "no SIMD tier on this host (need AVX2+FMA on x86_64 or NEON on aarch64); \
+             skipping SIMD floors"
+        ),
+        Some(tier) => {
+            simd::install(simd::BackendRequest::Simd, "bench").expect("detected tier installs");
+            for &(n, m, bsz, blk_cross_s, blk_gram_s) in &scalar_blk {
+                let d = random_mat(m, n, 1);
+                let x = random_mat(bsz, n, 2);
+                // tolerance-mode accuracy gate: same ≤ 1e-10 bound vs the
+                // naive references as the scalar tier
+                let cross_diff = containerstress::mset::sim_cross(&d, &x)
+                    .max_abs_diff(&sim_cross_ref(&d, &x));
+                let gram_diff =
+                    containerstress::mset::sim_matrix(&d).max_abs_diff(&sim_matrix_ref(&d));
+                assert!(
+                    cross_diff <= MAX_KERNEL_DIFF,
+                    "n={n}: SIMD sim_cross diverged from reference by {cross_diff}"
+                );
+                assert!(
+                    gram_diff <= MAX_KERNEL_DIFF,
+                    "n={n}: SIMD sim_matrix diverged from reference by {gram_diff}"
+                );
+                let units = (m * bsz) as f64;
+                let sc = b.run_with_units(&format!("simd_sim_cross_n{n}"), units, || {
+                    containerstress::mset::sim_cross(&d, &x)
+                });
+                let gunits = (m * m) as f64 / 2.0;
+                let sg = b.run_with_units(&format!("simd_gram_n{n}"), gunits, || {
+                    containerstress::mset::sim_matrix(&d)
+                });
+                let cross_speedup = blk_cross_s / sc.stats.median;
+                let gram_speedup = blk_gram_s / sg.stats.median;
+                let combined =
+                    (blk_cross_s + blk_gram_s) / (sc.stats.median + sg.stats.median);
+                println!(
+                    "n={n} [{}]: sim_cross {cross_speedup:.2}×, gram {gram_speedup:.2}× vs \
+                     scalar blocked, combined {combined:.2}× (diffs {cross_diff:.2e}/{gram_diff:.2e})",
+                    tier.isa()
+                );
+                if n == 1024 {
+                    simd_speedup_at_1024 = combined;
+                }
+                size_rows.push(Json::obj(vec![
+                    ("n", Json::Num(n as f64)),
+                    ("m", Json::Num(m as f64)),
+                    ("b", Json::Num(bsz as f64)),
+                    ("backend", Json::Str(tier.isa().into())),
+                    ("simd_sim_cross_s", Json::Num(sc.stats.median)),
+                    ("simd_gram_s", Json::Num(sg.stats.median)),
+                    ("speedup_sim_cross_vs_blk", Json::Num(cross_speedup)),
+                    ("speedup_gram_vs_blk", Json::Num(gram_speedup)),
+                    ("speedup_combined_vs_blk", Json::Num(combined)),
+                    ("max_diff_sim_cross", Json::Num(cross_diff)),
+                    ("max_diff_gram", Json::Num(gram_diff)),
+                ]));
+                ms.extend([sc, sg]);
+            }
+            assert!(
+                simd_speedup_at_1024 >= MIN_SIMD_SPEEDUP,
+                "SIMD ({}) sim_cross+Gram at n=1024 is only {simd_speedup_at_1024:.2}× the \
+                 scalar blocked tier (floor {MIN_SIMD_SPEEDUP}×)",
+                tier.isa()
+            );
+            // back to the deterministic scalar tier for the e2e floor
+            simd::install(simd::BackendRequest::Scalar, "bench")
+                .expect("scalar install cannot fail");
+        }
+    }
 
     // --- end-to-end native trial -----------------------------------------
     // A surveillance-heavy cell, mirroring the native run_trial body.
@@ -210,8 +319,64 @@ fn main() {
         "end-to-end native trial is only {e2e_speedup:.2}× the reference pipeline \
          (floor {MIN_E2E_SPEEDUP}×)"
     );
+    let (ref_trial_s, blk_trial_s) = (rt.stats.median, pt.stats.median);
     ms.push(rt);
     ms.push(pt);
+
+    // --- measured CPU calibration -----------------------------------------
+    // Effective CPU GFLOP/s per backend from full `MsetPlugin` fit/estimate
+    // cells; the emitted rows are what `accel::measured_cpu_ref()` hands to
+    // `recommend` in place of the paper-anchored analytic CpuRef.
+    let cal_cells: &[(usize, usize, usize)] = &[(32, 128, 2048), (64, 256, 4096)];
+    let mut cal_rows: Vec<Json> = Vec::new();
+    let mut cal_backends = vec![(simd::BackendRequest::Scalar, "scalar")];
+    if let Some(tier) = simd_tier {
+        cal_backends.push((simd::BackendRequest::Simd, tier.isa()));
+    }
+    for &(req, isa) in &cal_backends {
+        simd::install(req, "bench").expect("calibration tier installs");
+        let mut train_cells: Vec<(f64, f64)> = Vec::new();
+        let mut surveil_cells: Vec<(f64, f64)> = Vec::new();
+        for &(n, m, obs) in cal_cells {
+            let train_ds = synthesize(&TpssConfig::sized(n, obs.max(2 * m)), 21);
+            let probe_ds = synthesize(&TpssConfig::sized(n, obs), 22);
+            let fit = b.run(&format!("cal_fit_{isa}_n{n}_m{m}"), || {
+                let mut p = MsetPlugin::default();
+                p.fit(&train_ds.data, m).expect("fit");
+                black_box(p)
+            });
+            let mut plugin = MsetPlugin::default();
+            plugin.fit(&train_ds.data, m).expect("fit");
+            let est = b.run(&format!("cal_est_{isa}_n{n}_obs{obs}"), || {
+                black_box(plugin.estimate(&probe_ds.data))
+            });
+            train_cells.push((
+                accel::total_flops(&accel::train_routines(n, m)),
+                fit.stats.median,
+            ));
+            surveil_cells.push((
+                accel::total_flops(&accel::surveil_routines(n, m, obs, accel::GPU_CHUNK)),
+                est.stats.median,
+            ));
+            ms.push(fit);
+            ms.push(est);
+        }
+        let train_eff =
+            accel::calibrate_cpu_eff(&train_cells).expect("measured training cells");
+        let surveil_eff =
+            accel::calibrate_cpu_eff(&surveil_cells).expect("measured surveillance cells");
+        println!(
+            "calibration [{isa}]: train {:.2} GFLOP/s, surveil {:.2} GFLOP/s",
+            train_eff / 1e9,
+            surveil_eff / 1e9
+        );
+        cal_rows.push(Json::obj(vec![
+            ("backend", Json::Str(isa.into())),
+            ("train_eff_flops", Json::Num(train_eff)),
+            ("surveil_eff_flops", Json::Num(surveil_eff)),
+        ]));
+    }
+    simd::install(simd::BackendRequest::Scalar, "bench").expect("scalar install cannot fail");
 
     // --- emit artifacts ---------------------------------------------------
     let json = Json::obj(vec![
@@ -224,15 +389,13 @@ fn main() {
                 ("n", Json::Num(tn as f64)),
                 ("m", Json::Num(tm as f64)),
                 ("obs", Json::Num(tobs as f64)),
-                (
-                    "ref_trial_s",
-                    Json::Num(ms[ms.len() - 2].stats.median),
-                ),
-                ("blk_trial_s", Json::Num(ms[ms.len() - 1].stats.median)),
+                ("ref_trial_s", Json::Num(ref_trial_s)),
+                ("blk_trial_s", Json::Num(blk_trial_s)),
                 ("speedup", Json::Num(e2e_speedup)),
                 ("estimate_diff", Json::Num(e2e_diff)),
             ]),
         ),
+        ("calibration", Json::Arr(cal_rows)),
         (
             "asserted",
             Json::obj(vec![
@@ -240,6 +403,29 @@ fn main() {
                 ("min_kernel_speedup_n1024", Json::Num(MIN_KERNEL_SPEEDUP)),
                 ("min_e2e_speedup", Json::Num(MIN_E2E_SPEEDUP)),
                 ("kernel_speedup_n1024", Json::Num(speedup_at_1024)),
+                (
+                    "simd_backend",
+                    match simd_tier {
+                        Some(t) => Json::Str(t.isa().into()),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "min_simd_speedup_n1024",
+                    if simd_tier.is_some() {
+                        Json::Num(MIN_SIMD_SPEEDUP)
+                    } else {
+                        Json::Null
+                    },
+                ),
+                (
+                    "simd_speedup_n1024",
+                    if simd_tier.is_some() {
+                        Json::Num(simd_speedup_at_1024)
+                    } else {
+                        Json::Null
+                    },
+                ),
             ]),
         ),
     ]);

@@ -18,9 +18,20 @@
 //! paper's published anchors** (≈200× at the smallest training cell,
 //! ≈1500× at the largest; ≈5000× surveillance at 64 signals, ≈9000× at
 //! 1024) and then *held fixed* across the whole grid — the figures are
-//! reproduced by the model's structure, not per-cell fitting. The measured
-//! local CPU cost can substitute for the analytic CPU term via
-//! [`calibrate_cpu_eff`] (used by the ablation bench).
+//! reproduced by the model's structure, not per-cell fitting.
+//!
+//! ## Measured CPU calibration
+//!
+//! The analytic [`CpuRef`] is the documented *fallback*. When
+//! `benches/kernel_hotpath.rs` has emitted per-backend calibration rows
+//! (measured MSET train/surveil throughput on this testbed, keyed by the
+//! kernel-backend ISA label), [`measured_cpu_ref`] loads the row matching
+//! the *active* kernel backend from `BENCH_kernel.json` (path overridable
+//! via [`CALIBRATION_ENV`]) and the recommendation engine substitutes it
+//! for the paper-era reference — so quoted CPU-vs-GPU speedups and
+//! dollars-per-trial reflect what this machine actually sustains, with
+//! provenance reported alongside. [`calibrate_cpu_eff`] fits the
+//! effective rate from raw `(flops, seconds)` pairs.
 
 /// Routine classes with distinct attainable-efficiency behaviour.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -218,15 +229,121 @@ pub fn speedup_surveil(n: usize, m: usize, n_obs: usize, gpu: &GpuSpec, cpu: &Cp
 /// Fit an effective CPU FLOP rate from measured (flops, seconds) pairs —
 /// the median ratio. Lets benches anchor the CPU term to *this* testbed
 /// instead of the paper-era reference.
-pub fn calibrate_cpu_eff(measured: &[(f64, f64)]) -> f64 {
-    assert!(!measured.is_empty());
+///
+/// Returns `None` when no usable pair remains — empty input, non-positive
+/// flops or seconds, or non-finite ratios (all of which used to panic via
+/// an out-of-bounds index or `partial_cmp().unwrap()`) — so callers fall
+/// back to the paper-anchored analytic model instead of crashing.
+pub fn calibrate_cpu_eff(measured: &[(f64, f64)]) -> Option<f64> {
     let mut ratios: Vec<f64> = measured
         .iter()
-        .filter(|&&(_, s)| s > 0.0)
+        .filter(|&&(f, s)| f > 0.0 && s > 0.0)
         .map(|&(f, s)| f / s)
+        .filter(|r| r.is_finite())
         .collect();
-    ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    ratios[ratios.len() / 2]
+    if ratios.is_empty() {
+        return None;
+    }
+    ratios.sort_by(|a, b| a.total_cmp(b));
+    Some(ratios[ratios.len() / 2])
+}
+
+// ------------------------------------------------------- measured CpuRef
+
+/// Env var overriding where [`measured_cpu_ref`] looks for calibration
+/// rows (default: `results/BENCH_kernel.json` under the working dir).
+pub const CALIBRATION_ENV: &str = "CONTAINERSTRESS_CALIBRATION";
+
+/// Provenance of the [`CpuRef`] a recommendation's cost figures used.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CpuRefSource {
+    /// The paper-anchored analytic reference ([`CpuRef::xeon_platinum`]).
+    PaperAnalytic,
+    /// Calibrated from this testbed's measured kernel throughput rows,
+    /// tagged with the kernel-backend ISA label they were measured under.
+    Measured(&'static str),
+}
+
+impl CpuRefSource {
+    /// Human-readable provenance label: `"paper-analytic"` or
+    /// `"measured:<backend>"`.
+    pub fn label(self) -> String {
+        match self {
+            Self::PaperAnalytic => "paper-analytic".to_string(),
+            Self::Measured(b) => format!("measured:{b}"),
+        }
+    }
+}
+
+/// A [`CpuRef`] calibrated from this testbed's measured throughput.
+#[derive(Debug, Clone)]
+pub struct MeasuredCpu {
+    /// The calibrated reference rates.
+    pub cpu: CpuRef,
+    /// Kernel backend the rows were measured under.
+    pub backend: &'static str,
+    /// File the calibration rows were read from.
+    pub path: std::path::PathBuf,
+}
+
+/// Intern a backend label from parsed JSON so provenance stays `Copy`.
+fn intern_backend(s: &str) -> &'static str {
+    match s {
+        "scalar" => "scalar",
+        "avx2_fma" => "avx2_fma",
+        "neon" => "neon",
+        _ => "measured",
+    }
+}
+
+/// Parse measured per-backend calibration rows from a `BENCH_kernel.json`
+/// trajectory file: a top-level `"calibration"` array of
+/// `{"backend", "train_eff_flops", "surveil_eff_flops"}` objects. Picks
+/// the entry matching `prefer_isa`, falling back to the `"scalar"` entry
+/// (a scalar measurement is still a real measurement of this machine).
+/// Returns `None` — never an error — when the file is missing,
+/// unparsable, or holds no finite positive rates, so callers degrade to
+/// the analytic model.
+pub fn load_calibration(path: &std::path::Path, prefer_isa: &str) -> Option<MeasuredCpu> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let json = crate::util::json::Json::parse(&text).ok()?;
+    let rows = json.get("calibration")?.as_arr()?;
+    let pick = |isa: &str| -> Option<CpuRef> {
+        rows.iter().find_map(|row| {
+            if row.get("backend")?.as_str()? != isa {
+                return None;
+            }
+            let train = row.get("train_eff_flops")?.as_f64()?;
+            let surveil = row.get("surveil_eff_flops")?.as_f64()?;
+            (train.is_finite() && train > 0.0 && surveil.is_finite() && surveil > 0.0).then_some(
+                CpuRef {
+                    train_eff_flops: train,
+                    surveil_eff_flops: surveil,
+                },
+            )
+        })
+    };
+    let (cpu, backend) = pick(prefer_isa)
+        .map(|c| (c, prefer_isa))
+        .or_else(|| pick("scalar").map(|c| (c, "scalar")))?;
+    Some(MeasuredCpu {
+        cpu,
+        backend: intern_backend(backend),
+        path: path.to_path_buf(),
+    })
+}
+
+/// The measured CPU reference for the **active** kernel backend, if
+/// calibration rows exist: honours [`CALIBRATION_ENV`] when set, else
+/// reads `results/BENCH_kernel.json` relative to the working directory.
+/// `None` means "use the paper-anchored analytic model".
+pub fn measured_cpu_ref() -> Option<MeasuredCpu> {
+    let path = match std::env::var(CALIBRATION_ENV) {
+        Ok(p) if !p.trim().is_empty() => std::path::PathBuf::from(p),
+        _ => std::path::PathBuf::from("results/BENCH_kernel.json"),
+    };
+    let isa = crate::linalg::simd::active().isa();
+    load_calibration(&path, isa)
 }
 
 #[cfg(test)]
@@ -326,7 +443,53 @@ mod tests {
                 (f, f / eff)
             })
             .collect();
-        let got = calibrate_cpu_eff(&measured);
+        let got = calibrate_cpu_eff(&measured).expect("valid pairs calibrate");
         assert!((got - eff).abs() / eff < 1e-9);
+    }
+
+    #[test]
+    fn calibration_empty_input_is_none_not_panic() {
+        // used to index ratios[0] out of bounds
+        assert_eq!(calibrate_cpu_eff(&[]), None);
+        // all pairs filtered (zero/negative time or flops) — same regression
+        assert_eq!(calibrate_cpu_eff(&[(1e9, 0.0), (0.0, 1.0), (-1.0, 2.0)]), None);
+    }
+
+    #[test]
+    fn calibration_filters_non_finite_ratios() {
+        // used to panic in partial_cmp(..).unwrap() when a NaN ratio
+        // reached the sort
+        let nan = f64::NAN;
+        let got = calibrate_cpu_eff(&[(nan, 1.0), (f64::INFINITY, 1.0), (2.0e9, 1.0)]);
+        assert_eq!(got, Some(2.0e9));
+        assert_eq!(calibrate_cpu_eff(&[(nan, 1.0), (f64::INFINITY, 1.0)]), None);
+    }
+
+    #[test]
+    fn load_calibration_prefers_isa_then_scalar_then_analytic() {
+        let dir = std::env::temp_dir().join(format!("cs-accel-cal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_kernel.json");
+        std::fs::write(
+            &path,
+            r#"{"calibration": [
+                {"backend": "scalar", "train_eff_flops": 6.0e9, "surveil_eff_flops": 5.5e9},
+                {"backend": "avx2_fma", "train_eff_flops": 1.8e10, "surveil_eff_flops": 1.6e10},
+                {"backend": "broken", "train_eff_flops": -1.0, "surveil_eff_flops": 0.0}
+            ]}"#,
+        )
+        .unwrap();
+        let got = load_calibration(&path, "avx2_fma").expect("avx2 row present");
+        assert_eq!(got.backend, "avx2_fma");
+        assert!((got.cpu.train_eff_flops - 1.8e10).abs() < 1.0);
+        // unmeasured ISA falls back to the scalar row
+        let got = load_calibration(&path, "neon").expect("scalar fallback");
+        assert_eq!(got.backend, "scalar");
+        assert!((got.cpu.surveil_eff_flops - 5.5e9).abs() < 1.0);
+        // invalid rows never calibrate; missing files degrade to None
+        std::fs::write(&path, r#"{"calibration": [{"backend": "scalar"}]}"#).unwrap();
+        assert!(load_calibration(&path, "scalar").is_none());
+        assert!(load_calibration(&dir.join("absent.json"), "scalar").is_none());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

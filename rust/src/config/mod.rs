@@ -20,6 +20,11 @@ pub struct Config {
     pub output_dir: PathBuf,
     /// Execution backend: "device" | "native".
     pub backend: String,
+    /// Kernel compute tier for the native hot path: "scalar" | "simd" |
+    /// "auto" (see `linalg::simd`). `None` inherits the
+    /// `CONTAINERSTRESS_KERNEL` env knob, defaulting to the bit-exact
+    /// scalar tier.
+    pub kernel_backend: Option<String>,
     /// Sweep grid, trial budget, and adaptive-planner knobs.
     pub sweep: SweepSpec,
     /// `containerstress serve` settings.
@@ -169,6 +174,7 @@ impl Default for Config {
             artifact_dir: crate::runtime::default_artifact_dir(),
             output_dir: PathBuf::from("results"),
             backend: "device".into(),
+            kernel_backend: None,
             sweep: SweepSpec::default(),
             service: ServiceConfig::default(),
             scenario: None,
@@ -197,6 +203,19 @@ impl Config {
         }
         if let Some(v) = j.get("backend").and_then(Json::as_str) {
             self.backend = v.to_string();
+        }
+        match j.get("kernel_backend") {
+            None => {}
+            Some(Json::Null) => self.kernel_backend = None,
+            Some(v) => {
+                self.kernel_backend = Some(
+                    v.as_str()
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("kernel_backend must be a string or null")
+                        })?
+                        .to_string(),
+                )
+            }
         }
         if let Some(s) = j.get("sweep") {
             self.sweep = sweep_spec_from_json(&self.sweep, s)?;
@@ -286,6 +305,9 @@ impl Config {
         }
         if let Some(v) = args.get("backend") {
             self.backend = v.to_string();
+        }
+        if let Some(v) = args.get("kernel-backend") {
+            self.kernel_backend = Some(v.to_string());
         }
         if let Some(v) = args.get("model") {
             self.sweep.model = v.to_string();
@@ -392,6 +414,15 @@ impl Config {
             "backend must be 'device' or 'native', got '{}'",
             self.backend
         );
+        if let Some(kb) = &self.kernel_backend {
+            // Validate the spelling only — whether a SIMD tier exists is a
+            // property of the host, checked at install time (main), so a
+            // config file stays portable across machines.
+            anyhow::ensure!(
+                crate::linalg::simd::BackendRequest::parse(kb).is_some(),
+                "kernel_backend must be 'scalar', 'simd' or 'auto', got '{kb}'"
+            );
+        }
         self.sweep.validate()?;
         anyhow::ensure!(self.service.queue_cap >= 1, "queue_cap must be ≥ 1");
         anyhow::ensure!(!self.service.host.is_empty(), "service host must be set");
@@ -486,6 +517,9 @@ impl Config {
                 ]),
             ),
         ];
+        if let Some(kb) = &self.kernel_backend {
+            fields.push(("kernel_backend", Json::Str(kb.clone())));
+        }
         if let Some(s) = &self.scenario {
             fields.push(("scenario", s.to_json()));
         }
@@ -721,6 +755,54 @@ mod tests {
         std::fs::write(
             &path,
             r#"{"backend": "native", "service": {"stream_heartbeat_ms": "fast"}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_file(path.to_str().unwrap()).is_err());
+    }
+
+    #[test]
+    fn kernel_backend_knob_from_flags_file_and_roundtrip() {
+        let mut cfg = Config::default();
+        assert_eq!(cfg.kernel_backend, None);
+        cfg.apply_args(&args("sweep --kernel-backend auto --backend native"))
+            .unwrap();
+        assert_eq!(cfg.kernel_backend.as_deref(), Some("auto"));
+
+        // file roundtrip keeps the knob; null clears it
+        let path = std::env::temp_dir().join("cs_config_kernel.json");
+        std::fs::write(&path, cfg.to_json().to_pretty()).unwrap();
+        let cfg2 = Config::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg2.kernel_backend.as_deref(), Some("auto"));
+        std::fs::write(
+            &path,
+            r#"{"backend": "native", "kernel_backend": null}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            Config::from_file(path.to_str().unwrap())
+                .unwrap()
+                .kernel_backend,
+            None
+        );
+
+        // spelling is validated host-independently: "simd" is accepted by
+        // the config layer even on machines without a vector tier (the
+        // install step in main reports the hardware error)
+        let mut cfg3 = Config::default();
+        cfg3.apply_args(&args("sweep --kernel-backend simd --backend native"))
+            .unwrap();
+        assert_eq!(cfg3.kernel_backend.as_deref(), Some("simd"));
+
+        // malformed knobs are errors, not silent defaults
+        let mut bad = Config::default();
+        let err = bad
+            .apply_args(&args("sweep --kernel-backend warp --backend native"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("kernel_backend"), "{err}");
+        std::fs::write(
+            &path,
+            r#"{"backend": "native", "kernel_backend": 7}"#,
         )
         .unwrap();
         assert!(Config::from_file(path.to_str().unwrap()).is_err());

@@ -40,8 +40,21 @@
 //! shapes (`n ≤ 1024` ⇒ a 4-row panel is ≤ 32 KiB). `benches/
 //! kernel_hotpath.rs` gates the resulting speedups and emits
 //! `BENCH_kernel.json`.
+//!
+//! ## The SIMD tier
+//!
+//! The hot entry points ([`gemm_nt`], [`syrk_into`], [`row_norms2`], and
+//! the `dist2_*` epilogues) consult [`simd::active`](super::simd::active)
+//! once per call (a cached atomic load) and route to the explicit-SIMD
+//! tier in [`super::simd`] when one was opted into via `--kernel-backend`
+//! / `CONTAINERSTRESS_KERNEL`. That tier runs in **tolerance mode** —
+//! ≤ 1e-10 agreement with the references instead of bit-identity — while
+//! preserving the cross-kernel exact invariants above; see the `simd`
+//! module docs for the precise contract. The scalar blocked code below is
+//! the default and keeps the bit-stability contract intact.
 
 use super::mat::Mat;
+use super::simd;
 use super::workspace::Workspace;
 
 /// Register-tile rows (A-side unroll).
@@ -111,6 +124,11 @@ pub fn gemm_nt(out: &mut [f64], a: &[f64], b: &[f64], m: usize, n: usize, k: usi
     assert_eq!(out.len(), m * n, "gemm_nt: C buffer size");
     if k == 0 {
         out.fill(0.0);
+        return;
+    }
+    let backend = simd::active();
+    if backend.is_simd() {
+        simd::gemm_nt(out, a, b, m, n, k, backend);
         return;
     }
     let mut i0 = 0;
@@ -193,33 +211,38 @@ pub fn syrk_into(out: &mut Mat, a: &Mat) {
     }
     let data = &mut out.data;
     let src = &a.data;
-    let mut i0 = 0;
-    while i0 < m {
-        let ib = (m - i0).min(MR);
-        let mut j0 = 0;
-        while j0 < i0 + ib {
-            let jb = (m - j0).min(NR);
-            if ib == MR && jb == NR && j0 + NR <= i0 {
-                // tile strictly below the diagonal: full micro-kernel
-                tile_nt(data, m, src, src, k, i0, ib, j0, jb);
-            } else {
-                // diagonal-crossing or edge tile: scalar dots, lower only
-                for r in i0..i0 + ib {
-                    let ar = &src[r * k..][..k];
-                    let hi = (j0 + jb).min(r + 1);
-                    for s in j0..hi {
-                        let br = &src[s * k..][..k];
-                        let mut acc = 0.0;
-                        for (x, y) in ar.iter().zip(br.iter()) {
-                            acc += x * y;
+    let backend = simd::active();
+    if backend.is_simd() {
+        simd::syrk_lower(data, src, m, k, backend);
+    } else {
+        let mut i0 = 0;
+        while i0 < m {
+            let ib = (m - i0).min(MR);
+            let mut j0 = 0;
+            while j0 < i0 + ib {
+                let jb = (m - j0).min(NR);
+                if ib == MR && jb == NR && j0 + NR <= i0 {
+                    // tile strictly below the diagonal: full micro-kernel
+                    tile_nt(data, m, src, src, k, i0, ib, j0, jb);
+                } else {
+                    // diagonal-crossing or edge tile: scalar dots, lower only
+                    for r in i0..i0 + ib {
+                        let ar = &src[r * k..][..k];
+                        let hi = (j0 + jb).min(r + 1);
+                        for s in j0..hi {
+                            let br = &src[s * k..][..k];
+                            let mut acc = 0.0;
+                            for (x, y) in ar.iter().zip(br.iter()) {
+                                acc += x * y;
+                            }
+                            data[r * m + s] = acc;
                         }
-                        data[r * m + s] = acc;
                     }
                 }
+                j0 += jb;
             }
-            j0 += jb;
+            i0 += ib;
         }
-        i0 += ib;
     }
     // mirror the lower triangle up
     for i in 0..m {
@@ -236,6 +259,11 @@ pub fn row_norms2(a: &Mat, out: &mut [f64]) {
     assert_eq!(out.len(), a.rows, "row_norms2: output size");
     if a.cols == 0 {
         out.fill(0.0);
+        return;
+    }
+    let backend = simd::active();
+    if backend.is_simd() {
+        simd::row_norms2(&a.data, a.rows, a.cols, out, backend);
         return;
     }
     for (o, row) in out.iter_mut().zip(a.data.chunks_exact(a.cols)) {
@@ -263,9 +291,14 @@ pub fn dist2_cross_into(out: &mut Mat, a: &Mat, b: &Mat, ws: &mut Workspace) {
     let mut nb = ws.take_f64(n);
     row_norms2(a, &mut na);
     row_norms2(b, &mut nb);
+    let backend = simd::active();
     for (row, &nai) in out.data.chunks_exact_mut(n).zip(na.iter()) {
-        for (v, &nbj) in row.iter_mut().zip(nb.iter()) {
-            *v = (nai + nbj - 2.0 * *v).max(0.0);
+        if backend.is_simd() {
+            simd::dist2_epilogue(row, nai, &nb, backend);
+        } else {
+            for (v, &nbj) in row.iter_mut().zip(nb.iter()) {
+                *v = (nai + nbj - 2.0 * *v).max(0.0);
+            }
         }
     }
     ws.give_f64(nb);
@@ -286,13 +319,22 @@ pub fn dist2_sym_into(out: &mut Mat, a: &Mat, ws: &mut Workspace) {
     for (i, v) in nrm.iter_mut().enumerate() {
         *v = out.data[i * m + i];
     }
+    let backend = simd::active();
     for (i, row) in out.data.chunks_exact_mut(m).enumerate() {
-        for (j, v) in row.iter_mut().enumerate() {
-            *v = if i == j {
-                0.0
-            } else {
-                (nrm[i] + nrm[j] - 2.0 * *v).max(0.0)
-            };
+        if backend.is_simd() {
+            // the epilogue already yields +0.0 on the diagonal
+            // (x + x − 2x ≡ 0, clamped); the store keeps the scalar
+            // tier's explicit-zero contract byte for byte
+            simd::dist2_epilogue(row, nrm[i], &nrm, backend);
+            row[i] = 0.0;
+        } else {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = if i == j {
+                    0.0
+                } else {
+                    (nrm[i] + nrm[j] - 2.0 * *v).max(0.0)
+                };
+            }
         }
     }
     ws.give_f64(nrm);

@@ -8,6 +8,10 @@
 //! - [`kernel`] — the cache-blocked, register-tiled compute core
 //!   (`gemm_nt` / packed-panel `matmul` / `syrk` / fused squared-distance
 //!   kernels) plus naive [`kernel::reference`] oracles;
+//! - [`simd`] — the runtime-dispatched explicit-SIMD tier (AVX2+FMA /
+//!   NEON) the kernel core routes to when opted in via `--kernel-backend`
+//!   or `CONTAINERSTRESS_KERNEL`; documented tolerance mode, scalar stays
+//!   the bit-identical default;
 //! - [`workspace`] — the per-thread scratch arena that makes the kernel
 //!   `_into` entry points allocation-free in steady state.
 //!
@@ -18,6 +22,7 @@
 pub mod decomp;
 pub mod kernel;
 pub mod mat;
+pub mod simd;
 pub mod workspace;
 
 pub use decomp::{cholesky, eigh, eigh_into, lstsq, reg_pinv, reg_pinv_into, solve_spd};

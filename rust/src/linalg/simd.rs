@@ -1,0 +1,915 @@
+//! Runtime-dispatched explicit-SIMD tier for the [`kernel`](super::kernel)
+//! hot loops: AVX2+FMA (`std::arch::x86_64`) and NEON
+//! (`std::arch::aarch64`) micro-kernels behind a one-time dispatch
+//! decision, with the scalar blocked tier as the bit-identical default.
+//!
+//! ## Dispatch
+//!
+//! The active backend is a process-wide decision cached in an atomic.
+//! Precedence (highest first):
+//!
+//! 1. [`install`] — called by `main` for the `--kernel-backend` flag /
+//!    `kernel_backend` config key (source `"config"`), or by tests;
+//! 2. the `CONTAINERSTRESS_KERNEL` env knob ([`ENV_KNOB`]), read lazily
+//!    on the first [`active`] call (source `"env"`);
+//! 3. the default: scalar (source `"default"`).
+//!
+//! Requests are `scalar` (force the exact tier), `simd` (force the
+//! vector tier; [`install`] errors with [`SimdUnavailable`] if the host
+//! has neither AVX2+FMA nor NEON), or `auto` (vector tier if available,
+//! scalar otherwise). The decision plus its provenance is readable via
+//! [`dispatch_info`] and surfaced in `/healthz` and `/metrics`.
+//!
+//! ## Tolerance mode, and what stays exact
+//!
+//! The SIMD tier computes every dot product as `LANES` independent lane
+//! partial sums (FMA-contracted), horizontally reduced in a fixed order,
+//! plus an ordered `mul_add` scalar tail — a *different* op sequence from
+//! the scalar tier's single ascending-`k` accumulator, so SIMD results
+//! agree with the naive reference only to a documented tolerance
+//! (≤ 1e-10 across the property-test shapes; see `tests/simd_props.rs`).
+//!
+//! Crucially, the SIMD tier is *internally* bit-consistent: every output
+//! element — full register tile, edge row, `syrk` diagonal crossing, or
+//! `row_norms2` entry — is produced by the **same** lane-partition +
+//! horizontal-sum + tail sequence. So the cross-kernel exact invariants
+//! the rest of the crate relies on survive under SIMD:
+//!
+//! - `dist2_sym` equals `dist2_cross(a, a)` bit for bit (norms read off
+//!   the Gram diagonal perform the same op sequence as the norm pass);
+//! - `sim_cross(d, d)` equals `sim_matrix(d)` bit for bit;
+//! - diagonal distances are exactly `0.0` (`x + x − 2x ≡ 0`).
+//!
+//! What does *not* survive: bit-identity with the scalar/naive reference,
+//! and bit-exactness under `k` zero-padding (padding changes the lane
+//! partition). Anything that depends on those — trial seeds, cached
+//! sweep cells, the exhaustive paper schedules — must run the scalar
+//! default, which is why SIMD is strictly opt-in.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+/// Environment knob consulted on first use when no explicit [`install`]
+/// has happened: `scalar` | `simd` | `auto`.
+pub const ENV_KNOB: &str = "CONTAINERSTRESS_KERNEL";
+
+/// What the user asked for (flag, config key, env knob, or default).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendRequest {
+    /// Force the scalar blocked tier (bit-identical to the naive
+    /// reference; the default).
+    Scalar,
+    /// Force the vector tier; an error if the host supports none.
+    Simd,
+    /// Vector tier when available, scalar otherwise.
+    Auto,
+}
+
+impl BackendRequest {
+    /// Parse a knob value (case-insensitive, surrounding whitespace
+    /// ignored). Returns `None` for anything but `scalar`/`simd`/`auto`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Self::Scalar),
+            "simd" => Some(Self::Simd),
+            "auto" => Some(Self::Auto),
+            _ => None,
+        }
+    }
+
+    /// Canonical knob spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Scalar => "scalar",
+            Self::Simd => "simd",
+            Self::Auto => "auto",
+        }
+    }
+}
+
+/// The tier actually executing kernel calls after dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActiveBackend {
+    /// Scalar blocked kernels (exact mode).
+    Scalar,
+    /// AVX2 + FMA micro-kernels (tolerance mode), x86-64 only.
+    Avx2Fma,
+    /// NEON micro-kernels (tolerance mode), aarch64 only.
+    Neon,
+}
+
+impl ActiveBackend {
+    /// Stable ISA label used in bench rows, `/healthz`, and metrics.
+    pub fn isa(self) -> &'static str {
+        match self {
+            Self::Scalar => "scalar",
+            Self::Avx2Fma => "avx2_fma",
+            Self::Neon => "neon",
+        }
+    }
+
+    /// Whether this is a vector tier (tolerance mode).
+    pub fn is_simd(self) -> bool {
+        !matches!(self, Self::Scalar)
+    }
+
+    /// Numerical contract label: `"exact"` (bit-identical to the naive
+    /// reference) or `"tolerance"` (≤ 1e-10 agreement; see module docs).
+    pub fn mode(self) -> &'static str {
+        if self.is_simd() {
+            "tolerance"
+        } else {
+            "exact"
+        }
+    }
+}
+
+/// The dispatch decision plus its provenance, for `/healthz` reporting.
+#[derive(Debug, Clone, Copy)]
+pub struct DispatchInfo {
+    /// What was requested.
+    pub requested: BackendRequest,
+    /// Where the request came from: `"config"`, `"env"`, `"default"`,
+    /// `"env-fallback"` (env asked for `simd` on a host without it), or
+    /// a test/bench-supplied label.
+    pub source: &'static str,
+    /// The tier that actually runs.
+    pub active: ActiveBackend,
+}
+
+/// Error returned by [`install`] when `simd` is explicitly requested but
+/// no vector tier exists for this host.
+#[derive(Debug, Clone, Copy, thiserror::Error)]
+#[error("no SIMD kernel tier available on this host (need AVX2+FMA on x86_64 or NEON on aarch64)")]
+pub struct SimdUnavailable;
+
+// 0 = not yet decided, then 1 + ActiveBackend discriminant.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+static INFO: Mutex<Option<DispatchInfo>> = Mutex::new(None);
+
+fn code(b: ActiveBackend) -> u8 {
+    match b {
+        ActiveBackend::Scalar => 1,
+        ActiveBackend::Avx2Fma => 2,
+        ActiveBackend::Neon => 3,
+    }
+}
+
+/// Probe the host for a vector tier: AVX2+FMA on x86-64 (runtime CPUID
+/// check), NEON on aarch64 (baseline, always present), `None` elsewhere.
+pub fn detect() -> Option<ActiveBackend> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+        {
+            Some(ActiveBackend::Avx2Fma)
+        } else {
+            None
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Some(ActiveBackend::Neon)
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        None
+    }
+}
+
+/// Resolve a request against the host: `Scalar` always succeeds, `Simd`
+/// requires a detected tier, `Auto` degrades to scalar.
+pub fn resolve(req: BackendRequest) -> Result<ActiveBackend, SimdUnavailable> {
+    match req {
+        BackendRequest::Scalar => Ok(ActiveBackend::Scalar),
+        BackendRequest::Simd => detect().ok_or(SimdUnavailable),
+        BackendRequest::Auto => Ok(detect().unwrap_or(ActiveBackend::Scalar)),
+    }
+}
+
+/// Install a dispatch decision process-wide (overrides any earlier one).
+/// `source` labels the provenance for [`dispatch_info`].
+pub fn install(req: BackendRequest, source: &'static str) -> Result<DispatchInfo, SimdUnavailable> {
+    let active = resolve(req)?;
+    let info = DispatchInfo {
+        requested: req,
+        source,
+        active,
+    };
+    *INFO.lock().unwrap() = Some(info);
+    ACTIVE.store(code(active), Ordering::Release);
+    Ok(info)
+}
+
+/// The currently active backend. On first call without a prior
+/// [`install`], reads [`ENV_KNOB`] and caches the decision; afterwards
+/// this is a single atomic load (safe for the kernel hot path).
+pub fn active() -> ActiveBackend {
+    match ACTIVE.load(Ordering::Acquire) {
+        1 => ActiveBackend::Scalar,
+        2 => ActiveBackend::Avx2Fma,
+        3 => ActiveBackend::Neon,
+        _ => init_from_env(),
+    }
+}
+
+/// Force the env-knob initialisation path (normally triggered lazily by
+/// the first [`active`] call). Invalid values and `simd` requests on
+/// hosts without a vector tier degrade to scalar with a logged warning —
+/// a service must come up even if the knob is wrong.
+pub fn init_from_env() -> ActiveBackend {
+    let (req, source) = match std::env::var(ENV_KNOB) {
+        Ok(v) if !v.trim().is_empty() => match BackendRequest::parse(&v) {
+            Some(r) => (r, "env"),
+            None => {
+                log::warn!("{ENV_KNOB}={v:?} is not one of scalar|simd|auto; using scalar");
+                (BackendRequest::Scalar, "default")
+            }
+        },
+        _ => (BackendRequest::Scalar, "default"),
+    };
+    match install(req, source) {
+        Ok(info) => info.active,
+        Err(SimdUnavailable) => {
+            log::warn!("{ENV_KNOB}=simd requested but this host has no SIMD tier; using scalar");
+            install(BackendRequest::Scalar, "env-fallback")
+                .expect("scalar install cannot fail")
+                .active
+        }
+    }
+}
+
+/// The dispatch decision plus provenance (initialising from the env on
+/// first use, like [`active`]).
+pub fn dispatch_info() -> DispatchInfo {
+    let _ = active();
+    INFO.lock()
+        .unwrap()
+        .expect("dispatch info recorded by install()")
+}
+
+/// Clear the cached dispatch decision so the next [`active`] call
+/// re-runs [`init_from_env`]. Escape hatch for the dispatch-roundtrip
+/// tests; production code never calls this.
+pub fn reset_for_tests() {
+    *INFO.lock().unwrap() = None;
+    ACTIVE.store(0, Ordering::Release);
+}
+
+// ---------------------------------------------------------------------------
+// Safe dispatchers. Each takes the backend explicitly so tests and benches
+// can compare tiers directly without touching the process-wide decision;
+// `kernel.rs` passes `active()`. The `_ =>` arms are the scalar fallback
+// (single-accumulator naive dots) so every dispatcher is total on every
+// target — `kernel.rs` only routes here when `is_simd()`, so the fallback
+// is exercised by tests, not the production scalar path.
+// ---------------------------------------------------------------------------
+
+/// `out[m×n] = A[m×k]·B[n×k]ᵀ`, row-major, via the active tier's
+/// micro-kernel (4-row × 2-column register tiles of `LANES`-wide FMA
+/// chains; edge rows/columns use the same vector dot per element).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt(
+    out: &mut [f64],
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    n: usize,
+    k: usize,
+    backend: ActiveBackend,
+) {
+    assert_eq!(a.len(), m * k, "simd gemm_nt: A buffer size");
+    assert_eq!(b.len(), n * k, "simd gemm_nt: B buffer size");
+    assert_eq!(out.len(), m * n, "simd gemm_nt: C buffer size");
+    if k == 0 {
+        out.fill(0.0);
+        return;
+    }
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        ActiveBackend::Avx2Fma => unsafe { avx2::gemm_nt(out, a, b, m, n, k) },
+        #[cfg(target_arch = "aarch64")]
+        ActiveBackend::Neon => unsafe { neon::gemm_nt(out, a, b, m, n, k) },
+        _ => {
+            for i in 0..m {
+                let ar = &a[i * k..][..k];
+                for j in 0..n {
+                    let br = &b[j * k..][..k];
+                    out[i * n + j] = scalar_dot(ar, br);
+                }
+            }
+        }
+    }
+}
+
+/// Lower triangle (inclusive diagonal) of `A·Aᵀ` (`A: m×k`) into `out`
+/// (`m×m`); entries strictly above the diagonal are left untouched — the
+/// caller mirrors. Diagonal entries perform the exact op sequence of
+/// [`row_norms2`], so norms can be read off the Gram diagonal bit-safely.
+pub fn syrk_lower(out: &mut [f64], a: &[f64], m: usize, k: usize, backend: ActiveBackend) {
+    assert_eq!(a.len(), m * k, "simd syrk_lower: A buffer size");
+    assert_eq!(out.len(), m * m, "simd syrk_lower: C buffer size");
+    if k == 0 {
+        out.fill(0.0);
+        return;
+    }
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        ActiveBackend::Avx2Fma => unsafe { avx2::syrk_lower(out, a, m, k) },
+        #[cfg(target_arch = "aarch64")]
+        ActiveBackend::Neon => unsafe { neon::syrk_lower(out, a, m, k) },
+        _ => {
+            for r in 0..m {
+                let ar = &a[r * k..][..k];
+                for s in 0..=r {
+                    out[r * m + s] = scalar_dot(ar, &a[s * k..][..k]);
+                }
+            }
+        }
+    }
+}
+
+/// Per-row squared norms `out[i] = ‖row_i‖²` over a `rows×cols`
+/// row-major buffer — the same vector dot as the [`syrk_lower`] diagonal.
+pub fn row_norms2(a: &[f64], rows: usize, cols: usize, out: &mut [f64], backend: ActiveBackend) {
+    assert_eq!(a.len(), rows * cols, "simd row_norms2: input size");
+    assert_eq!(out.len(), rows, "simd row_norms2: output size");
+    if cols == 0 {
+        out.fill(0.0);
+        return;
+    }
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        ActiveBackend::Avx2Fma => unsafe { avx2::row_norms2(a, cols, out) },
+        #[cfg(target_arch = "aarch64")]
+        ActiveBackend::Neon => unsafe { neon::row_norms2(a, cols, out) },
+        _ => {
+            for (o, row) in out.iter_mut().zip(a.chunks_exact(cols)) {
+                *o = scalar_dot(row, row);
+            }
+        }
+    }
+}
+
+/// Fused squared-distance epilogue over one Gram row:
+/// `row[j] = max(nai + nb[j] − 2·row[j], 0)`. Add/sub/mul are exact IEEE
+/// ops in the same order as the scalar epilogue, so this is bit-identical
+/// to it — only the dot products upstream are in tolerance mode.
+pub fn dist2_epilogue(row: &mut [f64], nai: f64, nb: &[f64], backend: ActiveBackend) {
+    assert_eq!(row.len(), nb.len(), "simd dist2_epilogue: row/norm size");
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        ActiveBackend::Avx2Fma => unsafe { avx2::dist2_epilogue(row, nai, nb) },
+        #[cfg(target_arch = "aarch64")]
+        ActiveBackend::Neon => unsafe { neon::dist2_epilogue(row, nai, nb) },
+        _ => {
+            for (v, &nbj) in row.iter_mut().zip(nb.iter()) {
+                *v = (nai + nbj - 2.0 * *v).max(0.0);
+            }
+        }
+    }
+}
+
+/// Ascending-order single-accumulator dot — the scalar fallback's (and
+/// the scalar tier's) op sequence.
+fn scalar_dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        acc += x * y;
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2+FMA micro-kernels. Every output element is the identical
+    //! sequence: 4 lane partial sums over `k & !3` (FMA), horizontal
+    //! reduction `(l0+l2)+(l1+l3)`, then an ordered `mul_add` tail.
+    use core::arch::x86_64::*;
+
+    const LANES: usize = 4;
+
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v); // l0, l1
+        let hi = _mm256_extractf128_pd::<1>(v); // l2, l3
+        let s = _mm_add_pd(lo, hi); // l0+l2, l1+l3
+        _mm_cvtsd_f64(_mm_add_sd(s, _mm_unpackhi_pd(s, s)))
+    }
+
+    /// The canonical vector dot: lane partials + fixed hsum + ordered
+    /// scalar tail. Every other element producer matches this bitwise.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn dot(a: *const f64, b: *const f64, k: usize) -> f64 {
+        let kv = k & !(LANES - 1);
+        let mut acc = _mm256_setzero_pd();
+        let mut t = 0;
+        while t < kv {
+            acc = _mm256_fmadd_pd(_mm256_loadu_pd(a.add(t)), _mm256_loadu_pd(b.add(t)), acc);
+            t += LANES;
+        }
+        let mut s = hsum(acc);
+        while t < k {
+            s = (*a.add(t)).mul_add(*b.add(t), s);
+            t += 1;
+        }
+        s
+    }
+
+    /// 4 A-rows × 2 B-rows register tile: 8 independent FMA accumulator
+    /// chains (throughput-bound, unlike a lone latency-bound dot). Each
+    /// element finishes with the same hsum + tail as [`dot`].
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn tile4x2(
+        out: *mut f64,
+        ld: usize,
+        a: *const f64,
+        b: *const f64,
+        k: usize,
+        i0: usize,
+        j0: usize,
+    ) {
+        let a0 = a.add(i0 * k);
+        let a1 = a.add((i0 + 1) * k);
+        let a2 = a.add((i0 + 2) * k);
+        let a3 = a.add((i0 + 3) * k);
+        let b0 = b.add(j0 * k);
+        let b1 = b.add((j0 + 1) * k);
+        let kv = k & !(LANES - 1);
+        let mut c00 = _mm256_setzero_pd();
+        let mut c01 = _mm256_setzero_pd();
+        let mut c10 = _mm256_setzero_pd();
+        let mut c11 = _mm256_setzero_pd();
+        let mut c20 = _mm256_setzero_pd();
+        let mut c21 = _mm256_setzero_pd();
+        let mut c30 = _mm256_setzero_pd();
+        let mut c31 = _mm256_setzero_pd();
+        let mut t = 0;
+        while t < kv {
+            let bv0 = _mm256_loadu_pd(b0.add(t));
+            let bv1 = _mm256_loadu_pd(b1.add(t));
+            let av0 = _mm256_loadu_pd(a0.add(t));
+            c00 = _mm256_fmadd_pd(av0, bv0, c00);
+            c01 = _mm256_fmadd_pd(av0, bv1, c01);
+            let av1 = _mm256_loadu_pd(a1.add(t));
+            c10 = _mm256_fmadd_pd(av1, bv0, c10);
+            c11 = _mm256_fmadd_pd(av1, bv1, c11);
+            let av2 = _mm256_loadu_pd(a2.add(t));
+            c20 = _mm256_fmadd_pd(av2, bv0, c20);
+            c21 = _mm256_fmadd_pd(av2, bv1, c21);
+            let av3 = _mm256_loadu_pd(a3.add(t));
+            c30 = _mm256_fmadd_pd(av3, bv0, c30);
+            c31 = _mm256_fmadd_pd(av3, bv1, c31);
+            t += LANES;
+        }
+        let rows = [a0, a1, a2, a3];
+        let cols = [b0, b1];
+        let accs = [[c00, c01], [c10, c11], [c20, c21], [c30, c31]];
+        for (r, (ar, cr)) in rows.iter().zip(accs.iter()).enumerate() {
+            for (c, (bc, acc)) in cols.iter().zip(cr.iter()).enumerate() {
+                let mut s = hsum(*acc);
+                let mut u = kv;
+                while u < k {
+                    s = (*ar.add(u)).mul_add(*bc.add(u), s);
+                    u += 1;
+                }
+                *out.add((i0 + r) * ld + j0 + c) = s;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gemm_nt(out: &mut [f64], a: &[f64], b: &[f64], m: usize, n: usize, k: usize) {
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut i0 = 0;
+        while i0 + 4 <= m {
+            let mut j0 = 0;
+            while j0 + 2 <= n {
+                tile4x2(op, n, ap, bp, k, i0, j0);
+                j0 += 2;
+            }
+            while j0 < n {
+                for r in 0..4 {
+                    *op.add((i0 + r) * n + j0) = dot(ap.add((i0 + r) * k), bp.add(j0 * k), k);
+                }
+                j0 += 1;
+            }
+            i0 += 4;
+        }
+        while i0 < m {
+            for j in 0..n {
+                *op.add(i0 * n + j) = dot(ap.add(i0 * k), bp.add(j * k), k);
+            }
+            i0 += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn syrk_lower(out: &mut [f64], a: &[f64], m: usize, k: usize) {
+        let ap = a.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut i0 = 0;
+        while i0 + 4 <= m {
+            let mut j0 = 0;
+            // full tile strictly in the lower triangle: both columns
+            // (j0, j0+1) at or below the tile's topmost row i0
+            while j0 < i0 {
+                tile4x2(op, m, ap, ap, k, i0, j0);
+                j0 += 2;
+            }
+            // diagonal-crossing remainder: per-element vector dots
+            for r in i0..i0 + 4 {
+                for s in j0..=r {
+                    *op.add(r * m + s) = dot(ap.add(r * k), ap.add(s * k), k);
+                }
+            }
+            i0 += 4;
+        }
+        for r in i0..m {
+            for s in 0..=r {
+                *op.add(r * m + s) = dot(ap.add(r * k), ap.add(s * k), k);
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn row_norms2(a: &[f64], cols: usize, out: &mut [f64]) {
+        let ap = a.as_ptr();
+        for (i, o) in out.iter_mut().enumerate() {
+            let r = ap.add(i * cols);
+            *o = dot(r, r, cols);
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dist2_epilogue(row: &mut [f64], nai: f64, nb: &[f64]) {
+        let n = row.len();
+        let nv = n & !(LANES - 1);
+        let na = _mm256_set1_pd(nai);
+        let two = _mm256_set1_pd(2.0);
+        let zero = _mm256_setzero_pd();
+        let rp = row.as_mut_ptr();
+        let nbp = nb.as_ptr();
+        let mut j = 0;
+        while j < nv {
+            let v = _mm256_loadu_pd(rp.add(j));
+            let nbv = _mm256_loadu_pd(nbp.add(j));
+            let x = _mm256_sub_pd(_mm256_add_pd(na, nbv), _mm256_mul_pd(two, v));
+            _mm256_storeu_pd(rp.add(j), _mm256_max_pd(x, zero));
+            j += LANES;
+        }
+        while j < n {
+            let v = *rp.add(j);
+            *rp.add(j) = (nai + *nbp.add(j) - 2.0 * v).max(0.0);
+            j += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON micro-kernels — same structure as the AVX2 module with
+    //! 2-wide lanes: partial sums over `k & !1` (`vfmaq_f64`), horizontal
+    //! reduction `lane0 + lane1`, ordered `mul_add` tail.
+    use core::arch::aarch64::*;
+
+    const LANES: usize = 2;
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn hsum(v: float64x2_t) -> f64 {
+        vgetq_lane_f64::<0>(v) + vgetq_lane_f64::<1>(v)
+    }
+
+    /// The canonical vector dot; see the AVX2 twin for the contract.
+    #[target_feature(enable = "neon")]
+    unsafe fn dot(a: *const f64, b: *const f64, k: usize) -> f64 {
+        let kv = k & !(LANES - 1);
+        let mut acc = vdupq_n_f64(0.0);
+        let mut t = 0;
+        while t < kv {
+            acc = vfmaq_f64(acc, vld1q_f64(a.add(t)), vld1q_f64(b.add(t)));
+            t += LANES;
+        }
+        let mut s = hsum(acc);
+        while t < k {
+            s = (*a.add(t)).mul_add(*b.add(t), s);
+            t += 1;
+        }
+        s
+    }
+
+    /// 4×2 register tile, 8 independent FMA chains; elements finish with
+    /// the same hsum + tail as [`dot`].
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    unsafe fn tile4x2(
+        out: *mut f64,
+        ld: usize,
+        a: *const f64,
+        b: *const f64,
+        k: usize,
+        i0: usize,
+        j0: usize,
+    ) {
+        let a0 = a.add(i0 * k);
+        let a1 = a.add((i0 + 1) * k);
+        let a2 = a.add((i0 + 2) * k);
+        let a3 = a.add((i0 + 3) * k);
+        let b0 = b.add(j0 * k);
+        let b1 = b.add((j0 + 1) * k);
+        let kv = k & !(LANES - 1);
+        let mut c00 = vdupq_n_f64(0.0);
+        let mut c01 = vdupq_n_f64(0.0);
+        let mut c10 = vdupq_n_f64(0.0);
+        let mut c11 = vdupq_n_f64(0.0);
+        let mut c20 = vdupq_n_f64(0.0);
+        let mut c21 = vdupq_n_f64(0.0);
+        let mut c30 = vdupq_n_f64(0.0);
+        let mut c31 = vdupq_n_f64(0.0);
+        let mut t = 0;
+        while t < kv {
+            let bv0 = vld1q_f64(b0.add(t));
+            let bv1 = vld1q_f64(b1.add(t));
+            let av0 = vld1q_f64(a0.add(t));
+            c00 = vfmaq_f64(c00, av0, bv0);
+            c01 = vfmaq_f64(c01, av0, bv1);
+            let av1 = vld1q_f64(a1.add(t));
+            c10 = vfmaq_f64(c10, av1, bv0);
+            c11 = vfmaq_f64(c11, av1, bv1);
+            let av2 = vld1q_f64(a2.add(t));
+            c20 = vfmaq_f64(c20, av2, bv0);
+            c21 = vfmaq_f64(c21, av2, bv1);
+            let av3 = vld1q_f64(a3.add(t));
+            c30 = vfmaq_f64(c30, av3, bv0);
+            c31 = vfmaq_f64(c31, av3, bv1);
+            t += LANES;
+        }
+        let rows = [a0, a1, a2, a3];
+        let cols = [b0, b1];
+        let accs = [[c00, c01], [c10, c11], [c20, c21], [c30, c31]];
+        for (r, (ar, cr)) in rows.iter().zip(accs.iter()).enumerate() {
+            for (c, (bc, acc)) in cols.iter().zip(cr.iter()).enumerate() {
+                let mut s = hsum(*acc);
+                let mut u = kv;
+                while u < k {
+                    s = (*ar.add(u)).mul_add(*bc.add(u), s);
+                    u += 1;
+                }
+                *out.add((i0 + r) * ld + j0 + c) = s;
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gemm_nt(out: &mut [f64], a: &[f64], b: &[f64], m: usize, n: usize, k: usize) {
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut i0 = 0;
+        while i0 + 4 <= m {
+            let mut j0 = 0;
+            while j0 + 2 <= n {
+                tile4x2(op, n, ap, bp, k, i0, j0);
+                j0 += 2;
+            }
+            while j0 < n {
+                for r in 0..4 {
+                    *op.add((i0 + r) * n + j0) = dot(ap.add((i0 + r) * k), bp.add(j0 * k), k);
+                }
+                j0 += 1;
+            }
+            i0 += 4;
+        }
+        while i0 < m {
+            for j in 0..n {
+                *op.add(i0 * n + j) = dot(ap.add(i0 * k), bp.add(j * k), k);
+            }
+            i0 += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn syrk_lower(out: &mut [f64], a: &[f64], m: usize, k: usize) {
+        let ap = a.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut i0 = 0;
+        while i0 + 4 <= m {
+            let mut j0 = 0;
+            while j0 < i0 {
+                tile4x2(op, m, ap, ap, k, i0, j0);
+                j0 += 2;
+            }
+            for r in i0..i0 + 4 {
+                for s in j0..=r {
+                    *op.add(r * m + s) = dot(ap.add(r * k), ap.add(s * k), k);
+                }
+            }
+            i0 += 4;
+        }
+        for r in i0..m {
+            for s in 0..=r {
+                *op.add(r * m + s) = dot(ap.add(r * k), ap.add(s * k), k);
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn row_norms2(a: &[f64], cols: usize, out: &mut [f64]) {
+        let ap = a.as_ptr();
+        for (i, o) in out.iter_mut().enumerate() {
+            let r = ap.add(i * cols);
+            *o = dot(r, r, cols);
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dist2_epilogue(row: &mut [f64], nai: f64, nb: &[f64]) {
+        let n = row.len();
+        let nv = n & !(LANES - 1);
+        let na = vdupq_n_f64(nai);
+        let two = vdupq_n_f64(2.0);
+        let zero = vdupq_n_f64(0.0);
+        let rp = row.as_mut_ptr();
+        let nbp = nb.as_ptr();
+        let mut j = 0;
+        while j < nv {
+            let v = vld1q_f64(rp.add(j));
+            let nbv = vld1q_f64(nbp.add(j));
+            let x = vsubq_f64(vaddq_f64(na, nbv), vmulq_f64(two, v));
+            vst1q_f64(rp.add(j), vmaxnmq_f64(x, zero));
+            j += LANES;
+        }
+        while j < n {
+            let v = *rp.add(j);
+            *rp.add(j) = (nai + *nbp.add(j) - 2.0 * v).max(0.0);
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Direct-call tests only: nothing here mutates the process-wide
+    // dispatch, so this module is safe to run in the multi-threaded test
+    // binary. Global-flip coverage lives in `tests/simd_props.rs`.
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_gauss(&mut v);
+        v
+    }
+
+    #[test]
+    fn request_parse_roundtrip() {
+        for req in [
+            BackendRequest::Scalar,
+            BackendRequest::Simd,
+            BackendRequest::Auto,
+        ] {
+            assert_eq!(BackendRequest::parse(req.as_str()), Some(req));
+            assert_eq!(
+                BackendRequest::parse(&format!("  {}  ", req.as_str().to_uppercase())),
+                Some(req)
+            );
+        }
+        assert_eq!(BackendRequest::parse("warp"), None);
+        assert_eq!(BackendRequest::parse(""), None);
+    }
+
+    #[test]
+    fn backend_labels_are_consistent() {
+        assert_eq!(ActiveBackend::Scalar.mode(), "exact");
+        assert!(!ActiveBackend::Scalar.is_simd());
+        for b in [ActiveBackend::Avx2Fma, ActiveBackend::Neon] {
+            assert!(b.is_simd());
+            assert_eq!(b.mode(), "tolerance");
+        }
+        assert_eq!(ActiveBackend::Avx2Fma.isa(), "avx2_fma");
+        assert_eq!(ActiveBackend::Neon.isa(), "neon");
+    }
+
+    #[test]
+    fn resolve_honours_detection() {
+        assert_eq!(
+            resolve(BackendRequest::Scalar).unwrap(),
+            ActiveBackend::Scalar
+        );
+        match detect() {
+            Some(b) => {
+                assert!(b.is_simd());
+                assert_eq!(resolve(BackendRequest::Simd).unwrap(), b);
+                assert_eq!(resolve(BackendRequest::Auto).unwrap(), b);
+            }
+            None => {
+                assert!(resolve(BackendRequest::Simd).is_err());
+                assert_eq!(
+                    resolve(BackendRequest::Auto).unwrap(),
+                    ActiveBackend::Scalar
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_fallback_dispatch_matches_naive() {
+        let (m, n, k) = (5, 3, 7);
+        let a = randv(m * k, 1);
+        let b = randv(n * k, 2);
+        let mut out = vec![0.0; m * n];
+        gemm_nt(&mut out, &a, &b, m, n, k, ActiveBackend::Scalar);
+        for i in 0..m {
+            for j in 0..n {
+                assert_eq!(out[i * n + j], scalar_dot(&a[i * k..][..k], &b[j * k..][..k]));
+            }
+        }
+    }
+
+    #[test]
+    fn simd_gemm_close_to_scalar_and_tile_matches_dot_bitwise() {
+        let Some(be) = detect() else { return };
+        // m=9, n=5 exercises full 4×2 tiles, the odd column, and edge rows
+        let (m, n, k) = (9, 5, 23);
+        let a = randv(m * k, 3);
+        let b = randv(n * k, 4);
+        let mut out = vec![0.0; m * n];
+        gemm_nt(&mut out, &a, &b, m, n, k, be);
+        let mut sc = vec![0.0; m * n];
+        gemm_nt(&mut sc, &a, &b, m, n, k, ActiveBackend::Scalar);
+        for (x, y) in out.iter().zip(sc.iter()) {
+            assert!((x - y).abs() <= 1e-10, "tolerance-mode bound: {x} vs {y}");
+        }
+        // internal bit-consistency: every tile element equals the 1×1
+        // (pure-dot) path bitwise
+        for i in 0..m {
+            for j in 0..n {
+                let mut one = [0.0];
+                gemm_nt(&mut one, &a[i * k..][..k], &b[j * k..][..k], 1, 1, k, be);
+                assert_eq!(
+                    out[i * n + j].to_bits(),
+                    one[0].to_bits(),
+                    "tile/edge element ({i},{j}) must match the vector dot bitwise"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_syrk_diag_matches_row_norms_bitwise() {
+        let Some(be) = detect() else { return };
+        let (m, k) = (11, 17);
+        let a = randv(m * k, 5);
+        let mut gram = vec![0.0; m * m];
+        syrk_lower(&mut gram, &a, m, k, be);
+        let mut norms = vec![0.0; m];
+        row_norms2(&a, m, k, &mut norms, be);
+        for i in 0..m {
+            assert_eq!(gram[i * m + i].to_bits(), norms[i].to_bits());
+        }
+        // lower triangle agrees with the full gemm (same dot sequence)
+        let mut full = vec![0.0; m * m];
+        gemm_nt(&mut full, &a, &a, m, m, k, be);
+        for i in 0..m {
+            for j in 0..=i {
+                assert_eq!(gram[i * m + j].to_bits(), full[i * m + j].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn dist2_epilogue_bit_identical_across_backends() {
+        let nb = randv(7, 6).iter().map(|v| v * v).collect::<Vec<_>>();
+        let base = randv(7, 7);
+        for be in [detect().unwrap_or(ActiveBackend::Scalar), ActiveBackend::Scalar] {
+            let mut row = base.clone();
+            dist2_epilogue(&mut row, 1.25, &nb, be);
+            let mut expect = base.clone();
+            for (v, &nbj) in expect.iter_mut().zip(nb.iter()) {
+                *v = (1.25 + nbj - 2.0 * *v).max(0.0);
+            }
+            for (x, y) in row.iter().zip(expect.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "epilogue is exact on every tier");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_k_and_empty_shapes() {
+        let mut out = vec![1.0; 6];
+        gemm_nt(&mut out, &[], &[], 2, 3, 0, ActiveBackend::Scalar);
+        assert!(out.iter().all(|&v| v == 0.0));
+        let mut gram = vec![1.0; 4];
+        syrk_lower(&mut gram, &[], 2, 0, ActiveBackend::Scalar);
+        assert!(gram.iter().all(|&v| v == 0.0));
+        let mut norms = vec![1.0; 3];
+        row_norms2(&[], 3, 0, &mut norms, ActiveBackend::Scalar);
+        assert!(norms.iter().all(|&v| v == 0.0));
+    }
+}

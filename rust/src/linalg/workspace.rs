@@ -28,6 +28,11 @@
 //! again (which the kernel entry points are structured to avoid — they
 //! thread `&mut Workspace` down instead), the nested scope receives a
 //! fresh temporary arena rather than panicking on the `RefCell`.
+//!
+//! The arena is kernel-backend-agnostic: the explicit-SIMD tier
+//! (`linalg::simd`) uses unaligned vector loads/stores (`loadu` /
+//! `vld1q`), so checked-out buffers need no special alignment and the
+//! same pool serves the scalar and vector tiers interchangeably.
 
 use std::cell::RefCell;
 

@@ -12,7 +12,8 @@
 //! ```
 //!
 //! Flags: `--config file.json` plus per-key overrides (see `config`),
-//! `--backend device|native`, `--metrics` to dump the metrics registry.
+//! `--backend device|native`, `--kernel-backend scalar|simd|auto` (linalg
+//! kernel tier), `--metrics` to dump the metrics registry.
 //! `--ci-target F` (with `--pilot-trials`, `--max-trials`,
 //! `--interpolate`) switches `sweep`/`scope`/`serve` from the exhaustive
 //! fixed-trials loop to the adaptive sweep planner.
@@ -22,6 +23,7 @@
 
 use containerstress::accel::{self, CpuRef, GpuSpec};
 use containerstress::config::Config;
+use containerstress::linalg::simd;
 use containerstress::coordinator::{run_sweep, Backend};
 use containerstress::detect::{Sprt, SprtConfig};
 use containerstress::metrics::Registry;
@@ -51,7 +53,34 @@ fn main() {
     std::process::exit(code);
 }
 
+/// Pin the linalg kernel tier before any trial work runs. An explicit
+/// `kernel_backend` config key / `--kernel-backend` flag wins over the
+/// `CONTAINERSTRESS_KERNEL` env knob; requesting `simd` on a host without
+/// a vector tier is a hard error here (the config asked for it by name),
+/// whereas the env knob degrades to scalar with a warning.
+fn install_kernel_backend(cfg: &Config) -> anyhow::Result<()> {
+    let info = match &cfg.kernel_backend {
+        Some(s) => {
+            // Spelling was validated by `Config::validate`; availability
+            // is checked here, at install time on the actual host.
+            let req = simd::BackendRequest::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("invalid kernel_backend '{s}'"))?;
+            simd::install(req, "config")?
+        }
+        None => simd::dispatch_info(),
+    };
+    log::info!(
+        "kernel backend: {} ({} mode; requested '{}' via {})",
+        info.active.isa(),
+        info.active.mode(),
+        info.requested.as_str(),
+        info.source
+    );
+    Ok(())
+}
+
 fn make_backend(cfg: &Config) -> anyhow::Result<(Backend, Option<DeviceServer>)> {
+    install_kernel_backend(cfg)?;
     match cfg.backend.as_str() {
         "native" => Ok((Backend::Native, None)),
         _ => {
@@ -99,6 +128,9 @@ fn print_help() {
          common flags: --config FILE --backend device|native --signals a,b,c\n\
            --memvecs a,b,c --obs a,b,c --trials N --model mset2|aakr|ridge\n\
            --out DIR --metrics\n\
+           --kernel-backend scalar|simd|auto   linalg kernel tier (default\n\
+             scalar = bit-exact; simd = AVX2/NEON tolerance mode, errors if\n\
+             unavailable; auto = simd when detected; env CONTAINERSTRESS_KERNEL)\n\
          simulate flags: --scenario FILE.json  (scenario spec; omit for the\n\
            built-in demo)  --epochs N  --tenants N  --scenario-seed N\n\
            (workload-mode scenarios run the configured sweep first to fit\n\
@@ -269,6 +301,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         server.state().executor_workers(),
         server.state().fair_share(),
         cfg.service.access_log
+    );
+    let kd = simd::dispatch_info();
+    println!(
+        "kernel backend: {} ({} mode; requested '{}' via {})",
+        kd.active.isa(),
+        kd.active.mode(),
+        kd.requested.as_str(),
+        kd.source
     );
     match &cfg.service.cache_dir {
         Some(d) => println!(

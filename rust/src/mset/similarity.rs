@@ -23,6 +23,16 @@
 //! `sim_cross(d, d)` equals `sim_matrix(d)` *exactly* (unit diagonal
 //! included), and zero-padding the signal dimension leaves every
 //! similarity bit-identical.
+//!
+//! Under the opt-in SIMD kernel tier (`--kernel-backend simd`, see
+//! [`crate::linalg::simd`]) the dot products underneath run in
+//! *tolerance mode*: similarities agree with the references to ≤ 1e-10
+//! rather than bit-for-bit, and padding invariance holds to the same
+//! tolerance. The cross-entry-point identities survive exactly even
+//! then — `sim_cross(d, d)` still equals `sim_matrix(d)` bitwise and the
+//! diagonal stays exactly 1 — because both entry points share one
+//! internally bit-consistent dot sequence. The scalar default keeps
+//! every bit-exact guarantee above.
 
 use crate::linalg::{kernel, Mat, Workspace};
 

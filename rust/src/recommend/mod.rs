@@ -7,7 +7,7 @@
 //! GPU shapes using the [`crate::accel`] speedup model — automating the
 //! trial-and-error consulting loop the paper's introduction describes.
 
-use crate::accel::{self, CpuRef, GpuSpec};
+use crate::accel::{self, CpuRef, CpuRefSource, GpuSpec};
 use crate::coordinator::SweepResult;
 use crate::shapes::{self, mset_footprint_bytes, Shape, Workload};
 use crate::surface::ResponseSurface;
@@ -78,26 +78,49 @@ pub struct Recommendation {
     /// Sweep provenance when built by [`recommend_from_sweep`]; `None` for
     /// recommendations built directly from externally fitted surfaces.
     pub basis: Option<SurfaceBasis>,
+    /// The calibration the cost figures were computed against (local
+    /// testbed throughput plus the CPU reference and its provenance).
+    pub calibration: Option<LocalCalibration>,
 }
 
 /// Effective throughput of the local testbed implied by the measured
-/// surfaces (FLOP/s), used to translate measured seconds to shape seconds.
+/// surfaces (FLOP/s), used to translate measured seconds to shape seconds
+/// — plus the CPU reference the GPU speedup model is quoted against and
+/// where that reference came from (paper-anchored analytic constants, or
+/// this testbed's measured kernel throughput via
+/// [`accel::measured_cpu_ref`]).
 #[derive(Clone, Copy, Debug)]
 pub struct LocalCalibration {
     /// Effective throughput of the measuring host (FLOP/s).
     pub eff_flops: f64,
+    /// CPU reference for the GPU speedup/cost model.
+    pub cpu_ref: CpuRef,
+    /// Provenance of `cpu_ref`.
+    pub cpu_ref_source: CpuRefSource,
 }
 
 impl LocalCalibration {
     /// Derive from a surveillance surface: predicted cost of a reference
-    /// cell divided into its FLOP count.
+    /// cell divided into its FLOP count. The CPU reference starts as the
+    /// paper-anchored analytic model; [`LocalCalibration::with_measured`]
+    /// substitutes a measured one.
     pub fn from_surface(surf: &ResponseSurface, n: usize, m: usize, obs: usize) -> Self {
         let secs = surf.predict(n, m, obs).max(1e-12);
         let flops =
             accel::total_flops(&accel::surveil_routines(n, m, obs, accel::GPU_CHUNK));
         LocalCalibration {
             eff_flops: flops / secs,
+            cpu_ref: CpuRef::xeon_platinum(),
+            cpu_ref_source: CpuRefSource::PaperAnalytic,
         }
+    }
+
+    /// Substitute a CPU reference calibrated from this testbed's measured
+    /// kernel throughput (see [`accel::measured_cpu_ref`]).
+    pub fn with_measured(mut self, measured: &accel::MeasuredCpu) -> Self {
+        self.cpu_ref = measured.cpu;
+        self.cpu_ref_source = CpuRefSource::Measured(measured.backend);
+        self
     }
 }
 
@@ -124,7 +147,7 @@ pub fn recommend(
     let per_obs_local_s = surveil_window_s / window as f64;
 
     let gpu_spec = GpuSpec::v100();
-    let cpu_ref = CpuRef::xeon_platinum();
+    let cpu_ref = local.cpu_ref;
     let footprint = mset_footprint_bytes(n, m, 64, workload.train_window);
 
     let mut assessments: Vec<ShapeAssessment> = shapes::catalog()
@@ -175,6 +198,7 @@ pub fn recommend(
         assessments,
         chosen,
         basis: None,
+        calibration: Some(local),
     }
 }
 
@@ -220,7 +244,21 @@ pub fn recommend_from_sweep(
         (Some(&n), Some(&m), Some(&obs)) => (n, m, obs),
         _ => anyhow::bail!("sweep axes are empty; cannot calibrate a recommendation"),
     };
-    let cal = LocalCalibration::from_surface(&surveil_surf, ref_n, ref_m, ref_obs);
+    let mut cal = LocalCalibration::from_surface(&surveil_surf, ref_n, ref_m, ref_obs);
+    // Honest cost quoting: when the kernel bench has emitted measured
+    // per-backend throughput rows for this testbed, anchor the GPU
+    // speedup model's CPU term to them instead of the paper-era analytic
+    // reference (which stays the documented fallback).
+    if let Some(measured) = accel::measured_cpu_ref() {
+        log::info!(
+            "cpu reference: measured {} calibration from {} (train {:.2} GFLOP/s, surveil {:.2} GFLOP/s)",
+            measured.backend,
+            measured.path.display(),
+            measured.cpu.train_eff_flops / 1e9,
+            measured.cpu.surveil_eff_flops / 1e9
+        );
+        cal = cal.with_measured(&measured);
+    }
     let mut rec = recommend(workload, &train_surf, &surveil_surf, cal, sla);
     rec.basis = Some(basis);
     Ok(rec)
@@ -279,6 +317,21 @@ impl Recommendation {
                     None => Json::Null,
                 },
             ),
+            (
+                "calibration",
+                match self.calibration {
+                    Some(c) => Json::obj(vec![
+                        ("cpu_ref_source", Json::Str(c.cpu_ref_source.label())),
+                        ("local_eff_flops", Json::Num(c.eff_flops)),
+                        ("cpu_train_eff_flops", Json::Num(c.cpu_ref.train_eff_flops)),
+                        (
+                            "cpu_surveil_eff_flops",
+                            Json::Num(c.cpu_ref.surveil_eff_flops),
+                        ),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
             ("assessments", Json::Arr(assessments)),
         ])
     }
@@ -297,6 +350,16 @@ impl Recommendation {
             out.push_str(&format!(
                 "Surfaces: {} measured + {} interpolated cells ({} constraint gaps)\n",
                 b.measured, b.interpolated, b.gaps
+            ));
+        }
+        if let Some(c) = self.calibration {
+            out.push_str(&format!(
+                "CPU reference: {} (train {:.2} GFLOP/s, surveil {:.2} GFLOP/s); \
+                 local testbed {:.2} GFLOP/s\n",
+                c.cpu_ref_source.label(),
+                c.cpu_ref.train_eff_flops / 1e9,
+                c.cpu_ref.surveil_eff_flops / 1e9,
+                c.eff_flops / 1e9
             ));
         }
         out.push_str(&format!(
@@ -473,6 +536,49 @@ mod tests {
         // round-trips through the writer/parser
         let j2 = Json::parse(&j.to_string()).unwrap();
         assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn calibration_provenance_is_reported() {
+        let (ts, ss, cal) = surfaces();
+        assert_eq!(cal.cpu_ref_source, CpuRefSource::PaperAnalytic);
+        let rec = recommend(&Workload::customer_a(), &ts, &ss, cal, &Sla::default());
+        let j = rec.to_json();
+        let c = j.get("calibration").unwrap();
+        assert_eq!(
+            c.get("cpu_ref_source").unwrap().as_str(),
+            Some("paper-analytic")
+        );
+        assert!(c.get("cpu_train_eff_flops").unwrap().as_f64().unwrap() > 0.0);
+        assert!(rec.render().contains("CPU reference: paper-analytic"));
+
+        // substituting a measured CpuRef changes provenance and the rates
+        let measured = accel::MeasuredCpu {
+            cpu: CpuRef {
+                train_eff_flops: 7.5e9,
+                surveil_eff_flops: 6.5e9,
+            },
+            backend: "avx2_fma",
+            path: std::path::PathBuf::from("results/BENCH_kernel.json"),
+        };
+        let cal2 = cal.with_measured(&measured);
+        assert_eq!(cal2.cpu_ref_source, CpuRefSource::Measured("avx2_fma"));
+        let rec2 = recommend(&Workload::customer_a(), &ts, &ss, cal2, &Sla::default());
+        let j2 = rec2.to_json();
+        let c2 = j2.get("calibration").unwrap();
+        assert_eq!(
+            c2.get("cpu_ref_source").unwrap().as_str(),
+            Some("measured:avx2_fma")
+        );
+        assert_eq!(
+            c2.get("cpu_train_eff_flops").unwrap().as_f64(),
+            Some(7.5e9)
+        );
+        // the CPU reference cancels in GPU absolute cost (t_ref / speedup):
+        // feasibility must not churn when only the quote provenance changes
+        for (a, b) in rec.assessments.iter().zip(rec2.assessments.iter()) {
+            assert_eq!(a.feasible, b.feasible, "shape {}", a.shape.name);
+        }
     }
 
     #[test]

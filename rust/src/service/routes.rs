@@ -173,6 +173,7 @@ impl ServiceState {
     }
 
     fn healthz(&self) -> Response {
+        let kd = crate::linalg::simd::dispatch_info();
         Response::json(
             200,
             &Json::obj(vec![
@@ -187,6 +188,19 @@ impl ServiceState {
                     Json::Num(self.svc.executor_workers() as f64),
                 ),
                 ("fair_share", Json::Bool(self.svc.fair_share())),
+                ("kernel_backend", Json::Str(kd.active.isa().into())),
+                (
+                    "kernel_dispatch",
+                    Json::obj(vec![
+                        ("requested", Json::Str(kd.requested.as_str().into())),
+                        ("source", Json::Str(kd.source.into())),
+                        ("mode", Json::Str(kd.active.mode().into())),
+                        (
+                            "simd_available",
+                            Json::Bool(crate::linalg::simd::detect().is_some()),
+                        ),
+                    ]),
+                ),
             ]),
         )
     }
@@ -207,10 +221,27 @@ impl ServiceState {
         let (sweeps, scenarios) = self.svc.in_flight_by_class();
         reg.set_gauge("service.jobs.in_flight.sweep", sweeps as f64);
         reg.set_gauge("service.jobs.in_flight.scenario", scenarios as f64);
+        let kd = crate::linalg::simd::dispatch_info();
+        reg.set_gauge(
+            "kernel.simd_active",
+            if kd.active.is_simd() { 1.0 } else { 0.0 },
+        );
         match req.query_get("format") {
             None | Some("json") => Response::json(200, &reg.to_json()),
             Some("text") => Response::text(200, reg.render()),
-            Some("prometheus") => Response::text(200, reg.render_prometheus()),
+            Some("prometheus") => {
+                // Prometheus info-metric idiom: constant-1 gauge whose
+                // labels carry the dispatch decision.
+                let mut body = reg.render_prometheus();
+                body.push_str("# HELP kernel_backend_info active linalg kernel tier\n");
+                body.push_str("# TYPE kernel_backend_info gauge\n");
+                body.push_str(&format!(
+                    "kernel_backend_info{{kernel_backend=\"{}\",mode=\"{}\"}} 1\n",
+                    kd.active.isa(),
+                    kd.active.mode()
+                ));
+                Response::text(200, body)
+            }
             Some(other) => Response::error(
                 400,
                 &format!("unknown format '{other}' (expected json|text|prometheus)"),
@@ -1261,6 +1292,24 @@ mod tests {
         let j = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
         assert!(j.get("executor_workers").unwrap().as_usize().unwrap() >= 1);
         assert_eq!(j.get("fair_share").unwrap().as_bool(), Some(true));
+        // kernel dispatch reporting is self-consistent with the live
+        // decision (the active tier depends on host + env, not the test)
+        let kd = crate::linalg::simd::dispatch_info();
+        assert_eq!(
+            j.get("kernel_backend").and_then(Json::as_str),
+            Some(kd.active.isa())
+        );
+        let disp = j.get("kernel_dispatch").expect("kernel_dispatch object");
+        assert_eq!(disp.get("mode").and_then(Json::as_str), Some(kd.active.mode()));
+        assert_eq!(
+            disp.get("requested").and_then(Json::as_str),
+            Some(kd.requested.as_str())
+        );
+        assert_eq!(disp.get("source").and_then(Json::as_str), Some(kd.source));
+        assert_eq!(
+            disp.get("simd_available").and_then(Json::as_bool),
+            Some(crate::linalg::simd::detect().is_some())
+        );
     }
 
     #[test]
@@ -1284,6 +1333,13 @@ mod tests {
         let text = String::from_utf8(r.body).unwrap();
         assert!(text.contains("# TYPE"), "{text}");
         assert!(text.contains("executor_queue_depth"), "{text}");
+        let kd = crate::linalg::simd::dispatch_info();
+        let info_line = format!(
+            "kernel_backend_info{{kernel_backend=\"{}\",mode=\"{}\"}} 1",
+            kd.active.isa(),
+            kd.active.mode()
+        );
+        assert!(text.contains(&info_line), "{text}");
         let r = with_format("xml");
         assert_eq!(r.status, 400);
         assert!(String::from_utf8(r.body).unwrap().contains("xml"));
@@ -1302,10 +1358,18 @@ mod tests {
             "cache.bytes",
             "service.jobs.in_flight.sweep",
             "service.jobs.in_flight.scenario",
+            "kernel.simd_active",
         ] {
             assert!(gauges.get(key).is_some(), "missing gauge {key}");
         }
         assert!(gauges.get("executor.workers").unwrap().as_f64().unwrap() >= 1.0);
+        let simd_active = gauges.get("kernel.simd_active").unwrap().as_f64().unwrap();
+        let expect = if crate::linalg::simd::dispatch_info().active.is_simd() {
+            1.0
+        } else {
+            0.0
+        };
+        assert_eq!(simd_active, expect);
     }
 
     #[test]

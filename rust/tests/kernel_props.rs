@@ -5,11 +5,18 @@
 //! against the references — ascending-`k` accumulation, no FMA
 //! contraction — so 1e-12 is slack; several properties assert exact
 //! equality where the design guarantees it.)
+//!
+//! The exact-bit properties pin the scalar tier first (a stray
+//! `CONTAINERSTRESS_KERNEL=simd` in the environment must not flip the
+//! process-wide dispatch under them). The SIMD tier is covered by
+//! direct-call tolerance properties at the bottom — explicit backend
+//! argument, no global dispatch mutation — plus the dispatch-roundtrip
+//! tests in `tests/simd_props.rs`.
 
 use containerstress::linalg::kernel::{
     self, dist2_cross_into, matmul_into, matmul_nt_into, matmul_tn_into, syrk_into,
 };
-use containerstress::linalg::{Mat, Workspace};
+use containerstress::linalg::{simd, Mat, Workspace};
 use containerstress::mset::{
     sim_cross, sim_cross_ref, sim_cross_t_into, sim_matrix, sim_matrix_ref, Scaler,
 };
@@ -31,6 +38,12 @@ fn pad_cols(m: &Mat, pad: usize) -> Mat {
     out
 }
 
+/// Pin the scalar tier so the exact-bit assertions below hold regardless
+/// of the `CONTAINERSTRESS_KERNEL` env knob.
+fn pin_scalar() {
+    simd::install(simd::BackendRequest::Scalar, "test").expect("scalar install cannot fail");
+}
+
 fn close(a: &Mat, b: &Mat, tol: f64, what: &str) -> Result<(), String> {
     if (a.rows, a.cols) != (b.rows, b.cols) {
         return Err(format!(
@@ -47,6 +60,7 @@ fn close(a: &Mat, b: &Mat, tol: f64, what: &str) -> Result<(), String> {
 
 #[test]
 fn prop_matmul_matches_naive_reference() {
+    pin_scalar();
     forall_res(
         "blocked matmul == naive matmul",
         200,
@@ -71,6 +85,7 @@ fn prop_matmul_matches_naive_reference() {
 
 #[test]
 fn prop_nt_tn_syrk_match_references() {
+    pin_scalar();
     forall_res(
         "NT/TN/syrk variants == naive references",
         200,
@@ -111,6 +126,7 @@ fn prop_nt_tn_syrk_match_references() {
 
 #[test]
 fn prop_sim_kernels_match_reference_and_padding() {
+    pin_scalar();
     forall_res(
         "blocked similarity == per-pair reference (padded and not)",
         150,
@@ -147,6 +163,7 @@ fn prop_sim_kernels_match_reference_and_padding() {
 
 #[test]
 fn prop_sim_cross_self_equals_sim_matrix_bitwise() {
+    pin_scalar();
     forall_res(
         "sim_cross(d, d) == sim_matrix(d), bit for bit",
         100,
@@ -179,6 +196,7 @@ fn prop_sim_cross_self_equals_sim_matrix_bitwise() {
 
 #[test]
 fn prop_dist2_padding_bit_identical() {
+    pin_scalar();
     forall_res(
         "squared distances ignore zero-padded columns exactly",
         100,
@@ -202,6 +220,7 @@ fn prop_dist2_padding_bit_identical() {
 
 #[test]
 fn prop_scaler_transform_into_matches_transform() {
+    pin_scalar();
     forall_res(
         "transform_into == transform",
         100,
@@ -222,6 +241,7 @@ fn prop_scaler_transform_into_matches_transform() {
 
 #[test]
 fn prop_transposed_sim_cross_matches() {
+    pin_scalar();
     forall_res(
         "sim_cross_t == sim_crossᵀ bitwise",
         100,
@@ -240,6 +260,153 @@ fn prop_transposed_sim_cross_matches() {
                     if k[(i, j)].to_bits() != kt[(j, i)].to_bits() {
                         return Err(format!("mismatch at ({i},{j})"));
                     }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// --- SIMD tier (direct-call: explicit backend, no dispatch mutation) ------
+
+/// The SIMD tier's documented tolerance vs the naive references (the
+/// scalar tier's exact-bit contract is asserted above under `pin_scalar`).
+const SIMD_TOL: f64 = 1e-10;
+
+fn max_slice_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .fold(0.0f64, |acc, (x, y)| acc.max((x - y).abs()))
+}
+
+#[test]
+fn prop_simd_kernels_within_tolerance_of_references() {
+    let Some(tier) = simd::detect() else {
+        eprintln!("kernel_props: no SIMD tier on this host; skipping SIMD tolerance properties");
+        return;
+    };
+    forall_res(
+        "SIMD gemm_nt/syrk/row_norms within 1e-10 of naive references",
+        150,
+        |rng| {
+            // k spans well past the 4-lane (AVX2) / 2-lane (NEON) boundary
+            // so vector-body + scalar-tail remainders are exercised every
+            // run; small m/n hit the 4×2-tile edge rows and odd columns.
+            let m = rng.range_usize(1, 24);
+            let n = rng.range_usize(1, 24);
+            let k = rng.range_usize(1, 40);
+            (random_mat(rng, m, k), random_mat(rng, n, k))
+        },
+        |(a, b)| {
+            let (m, n, k) = (a.rows, b.rows, a.cols);
+            let mut out = vec![0.0f64; m * n];
+            simd::gemm_nt(&mut out, &a.data, &b.data, m, n, k, tier);
+            let r = kernel::reference::matmul_nt(a, b);
+            let d = max_slice_diff(&out, &r.data);
+            if d > SIMD_TOL {
+                return Err(format!("gemm_nt: max abs diff {d} > {SIMD_TOL}"));
+            }
+
+            let mut s = vec![0.0f64; m * m];
+            simd::syrk_lower(&mut s, &a.data, m, k, tier);
+            let sr = kernel::reference::syrk(a);
+            for i in 0..m {
+                for j in 0..=i {
+                    let d = (s[i * m + j] - sr[(i, j)]).abs();
+                    if d > SIMD_TOL {
+                        return Err(format!("syrk_lower ({i},{j}): diff {d} > {SIMD_TOL}"));
+                    }
+                }
+            }
+
+            let mut nrm = vec![0.0f64; m];
+            simd::row_norms2(&a.data, m, k, &mut nrm, tier);
+            for (i, &v) in nrm.iter().enumerate() {
+                // syrk's diagonal and row_norms2 run the same vector-dot
+                // op sequence → bit-identical even in tolerance mode
+                if v.to_bits() != s[i * m + i].to_bits() {
+                    return Err(format!(
+                        "row_norms2[{i}] = {v} != syrk diag {} bitwise",
+                        s[i * m + i]
+                    ));
+                }
+                let naive: f64 = a.row(i).iter().map(|&x| x * x).sum();
+                if (v - naive).abs() > SIMD_TOL {
+                    return Err(format!("row_norms2[{i}]: diff vs naive > {SIMD_TOL}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simd_zero_padded_tail_within_tolerance() {
+    let Some(tier) = simd::detect() else {
+        eprintln!("kernel_props: no SIMD tier on this host; skipping SIMD padding property");
+        return;
+    };
+    forall_res(
+        "SIMD gemm_nt over zero-padded k within 1e-10 of unpadded",
+        100,
+        |rng| {
+            // Padding shifts data between the vector body and the scalar
+            // tail, so unlike the scalar tier this is tolerance, not
+            // bit-identity (the padding columns themselves contribute 0).
+            let m = rng.range_usize(1, 16);
+            let n = rng.range_usize(1, 16);
+            let k = rng.range_usize(1, 12);
+            let pad = rng.range_usize(1, 9);
+            (random_mat(rng, m, k), random_mat(rng, n, k), pad)
+        },
+        |(a, b, pad)| {
+            let (m, n, k) = (a.rows, b.rows, a.cols);
+            let mut plain = vec![0.0f64; m * n];
+            simd::gemm_nt(&mut plain, &a.data, &b.data, m, n, k, tier);
+            let ap = pad_cols(a, *pad);
+            let bp = pad_cols(b, *pad);
+            let mut padded = vec![0.0f64; m * n];
+            simd::gemm_nt(&mut padded, &ap.data, &bp.data, m, n, k + pad, tier);
+            let d = max_slice_diff(&plain, &padded);
+            if d > SIMD_TOL {
+                return Err(format!("padded gemm_nt: max abs diff {d} > {SIMD_TOL}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simd_dist2_epilogue_bit_identical() {
+    let Some(tier) = simd::detect() else {
+        eprintln!("kernel_props: no SIMD tier on this host; skipping epilogue property");
+        return;
+    };
+    forall_res(
+        "dist2 epilogue is bit-identical across tiers",
+        100,
+        |rng| {
+            // The epilogue is add/sub/mul/max only — no FMA — so the SIMD
+            // form must agree with the scalar form bit for bit.
+            let n = rng.range_usize(1, 33);
+            let mut row = vec![0.0f64; n];
+            rng.fill_gauss(&mut row);
+            let mut nb = vec![0.0f64; n];
+            rng.fill_gauss(&mut nb);
+            for v in &mut nb {
+                *v = v.abs();
+            }
+            let nai = nb[0] + 0.5;
+            (row, nb, nai)
+        },
+        |(row, nb, nai)| {
+            let mut simd_row = row.clone();
+            simd::dist2_epilogue(&mut simd_row, *nai, nb, tier);
+            let mut scalar_row = row.clone();
+            simd::dist2_epilogue(&mut scalar_row, *nai, nb, simd::ActiveBackend::Scalar);
+            for (j, (a, b)) in simd_row.iter().zip(&scalar_row).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("epilogue[{j}]: {a} vs {b} differ bitwise"));
                 }
             }
             Ok(())

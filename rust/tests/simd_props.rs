@@ -1,0 +1,168 @@
+//! Dispatch-level tests for the SIMD kernel tier: the env-knob roundtrip
+//! and whole-pipeline invariants with the SIMD tier *installed*
+//! process-wide (unlike `tests/kernel_props.rs`, whose SIMD coverage is
+//! direct-call only).
+//!
+//! These tests mutate the process-wide dispatch decision and the
+//! `CONTAINERSTRESS_KERNEL` env var, so they live in their own test
+//! binary and serialize on a mutex — cargo's in-process test threads must
+//! not observe each other's tier flips.
+
+use containerstress::linalg::kernel::{dist2_cross_into, dist2_sym_into};
+use containerstress::linalg::{simd, Mat, Workspace};
+use containerstress::mset::{sim_cross, sim_matrix};
+use containerstress::util::rng::Rng;
+use std::sync::Mutex;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    // a failed sibling test poisons the mutex; the guard itself is fine
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn random_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    let mut m = Mat::zeros(rows, cols);
+    rng.fill_gauss(&mut m.data);
+    m
+}
+
+/// Leave the process in the documented default state on the way out.
+fn restore() {
+    std::env::remove_var(simd::ENV_KNOB);
+    simd::install(simd::BackendRequest::Scalar, "test").expect("scalar install cannot fail");
+}
+
+#[test]
+fn env_knob_roundtrip() {
+    let _g = lock();
+
+    // unset → scalar via "default"
+    std::env::remove_var(simd::ENV_KNOB);
+    simd::reset_for_tests();
+    assert_eq!(simd::active(), simd::ActiveBackend::Scalar);
+    let info = simd::dispatch_info();
+    assert_eq!(info.requested, simd::BackendRequest::Scalar);
+    assert_eq!(info.source, "default");
+
+    // explicit scalar → scalar via "env"
+    std::env::set_var(simd::ENV_KNOB, "scalar");
+    simd::reset_for_tests();
+    assert_eq!(simd::active(), simd::ActiveBackend::Scalar);
+    assert_eq!(simd::dispatch_info().source, "env");
+
+    // auto → the detected tier when present, else scalar; never an error
+    std::env::set_var(simd::ENV_KNOB, "auto");
+    simd::reset_for_tests();
+    let auto_active = simd::active();
+    assert_eq!(auto_active, simd::detect().unwrap_or(simd::ActiveBackend::Scalar));
+    assert_eq!(simd::dispatch_info().source, "env");
+
+    // simd → the detected tier, or a warned scalar fallback (the service
+    // must come up even when the knob over-asks)
+    std::env::set_var(simd::ENV_KNOB, "SIMD"); // case-insensitive
+    simd::reset_for_tests();
+    match simd::detect() {
+        Some(tier) => {
+            assert_eq!(simd::active(), tier);
+            assert_eq!(simd::dispatch_info().source, "env");
+        }
+        None => {
+            assert_eq!(simd::active(), simd::ActiveBackend::Scalar);
+            assert_eq!(simd::dispatch_info().source, "env-fallback");
+        }
+    }
+
+    // garbage → scalar with a warning, never a crash
+    std::env::set_var(simd::ENV_KNOB, "warp");
+    simd::reset_for_tests();
+    assert_eq!(simd::active(), simd::ActiveBackend::Scalar);
+    assert_eq!(simd::dispatch_info().source, "default");
+
+    restore();
+}
+
+#[test]
+fn explicit_simd_install_errors_without_hardware() {
+    let _g = lock();
+    match simd::detect() {
+        Some(tier) => {
+            let info = simd::install(simd::BackendRequest::Simd, "test").expect("tier detected");
+            assert_eq!(info.active, tier);
+            assert!(info.active.is_simd());
+            assert_eq!(info.active.mode(), "tolerance");
+        }
+        None => {
+            assert!(simd::install(simd::BackendRequest::Simd, "test").is_err());
+        }
+    }
+    restore();
+}
+
+#[test]
+fn installed_simd_pipeline_matches_scalar_and_keeps_exact_invariants() {
+    let _g = lock();
+    let Some(tier) = simd::detect() else {
+        println!("simd_props: no SIMD tier on this host; skipping installed-pipeline test");
+        restore();
+        return;
+    };
+
+    let mut rng = Rng::new(42);
+    let d = random_mat(&mut rng, 37, 11); // odd shapes: tile edges + tails
+    let x = random_mat(&mut rng, 23, 11);
+
+    simd::install(simd::BackendRequest::Scalar, "test").expect("scalar install cannot fail");
+    let k_scalar = sim_cross(&d, &x);
+    let s_scalar = sim_matrix(&d);
+
+    simd::install(simd::BackendRequest::Simd, "test").expect("tier detected");
+    assert_eq!(simd::active(), tier);
+    let k_simd = sim_cross(&d, &x);
+    let s_simd = sim_matrix(&d);
+
+    // tolerance mode: ≤ 1e-10 against the scalar tier
+    assert!(
+        k_simd.max_abs_diff(&k_scalar) <= 1e-10,
+        "sim_cross diverged: {}",
+        k_simd.max_abs_diff(&k_scalar)
+    );
+    assert!(
+        s_simd.max_abs_diff(&s_scalar) <= 1e-10,
+        "sim_matrix diverged: {}",
+        s_simd.max_abs_diff(&s_scalar)
+    );
+
+    // exact invariants that survive under the SIMD tier: self-similarity
+    // equals the Gram path bit for bit, and the diagonal is exactly 1
+    let k_self = sim_cross(&d, &d);
+    for i in 0..d.rows {
+        for j in 0..d.rows {
+            assert_eq!(
+                k_self[(i, j)].to_bits(),
+                s_simd[(i, j)].to_bits(),
+                "sim_cross(d,d) != sim_matrix(d) at ({i},{j}) under SIMD"
+            );
+        }
+        assert_eq!(s_simd[(i, i)], 1.0, "diag ({i}) not exactly 1 under SIMD");
+    }
+
+    // dist2_sym == dist2_cross(a, a) bitwise, zero diagonal
+    let mut ws = Workspace::new();
+    let mut sym = Mat::zeros(0, 0);
+    let mut cross = Mat::zeros(0, 0);
+    dist2_sym_into(&mut sym, &d, &mut ws);
+    dist2_cross_into(&mut cross, &d, &d, &mut ws);
+    for i in 0..d.rows {
+        for j in 0..d.rows {
+            assert_eq!(
+                sym[(i, j)].to_bits(),
+                cross[(i, j)].to_bits(),
+                "dist2_sym != dist2_cross(a,a) at ({i},{j}) under SIMD"
+            );
+        }
+        assert_eq!(sym[(i, i)], 0.0, "dist2 diag ({i}) not exactly 0 under SIMD");
+    }
+
+    restore();
+}
