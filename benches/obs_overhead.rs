@@ -11,6 +11,9 @@
 //! 2. **Non-vacuity** — the instrumented twin really records spans (a
 //!    timeline with train/surveil phases), so gate 1 measures live
 //!    instrumentation, not a dead branch.
+//! 3. **Journal overhead** — a third twin with the durable telemetry
+//!    journal attached (every retired span serialized + appended,
+//!    fsync=never) stays under the same ≤ 5% ceiling.
 //!
 //! Micro costs (span push, disabled-path probe) are reported unasserted.
 //!
@@ -20,6 +23,7 @@
 
 use containerstress::bench::{black_box, figs, table, write_csv, Bencher, Measurement};
 use containerstress::coordinator::{run_sweep, Backend, SweepSpec};
+use containerstress::obs::journal::{Journal, JournalConfig};
 use containerstress::obs::{self, FlightRecorder};
 use containerstress::report;
 use containerstress::util::json::Json;
@@ -93,6 +97,38 @@ fn main() {
         (overhead_ratio - 1.0) * 100.0
     );
 
+    // --- journal-enabled twin ---------------------------------------------
+    // Same instrumented sweep, but with the global sink's durable journal
+    // attached: each retired span is serialized and appended (buffered
+    // writes, fsync=never — the production default).
+    let jdir = std::env::temp_dir().join(format!("cs-bench-journal-{}", std::process::id()));
+    let journal =
+        Arc::new(Journal::open(JournalConfig::new(jdir.clone())).expect("open bench journal"));
+    obs::sink().set_journal(Some(Arc::clone(&journal)));
+    let journal_on = b.run("sweep_telemetry_journaled", || {
+        let rec = Arc::new(FlightRecorder::new("bench-obs"));
+        let _g = obs::install(Some(rec));
+        black_box(run_sweep(&spec, Backend::Native).expect("sweep"))
+    });
+    obs::sink().set_journal(None);
+    journal.flush();
+    assert!(
+        journal.appended() > 0,
+        "journaled twin appended no records — journal gate would be vacuous"
+    );
+    let _ = std::fs::remove_dir_all(&jdir);
+    let journal_ratio = journal_on.stats.median / disabled.stats.median;
+    println!(
+        "native sweep with journal: {:.4}s → ratio {journal_ratio:.4} \
+         (ceiling {MAX_OVERHEAD_RATIO})",
+        journal_on.stats.median
+    );
+    assert!(
+        journal_ratio <= MAX_OVERHEAD_RATIO,
+        "journal-enabled telemetry costs {:.1}% on the native trial hot path (budget 5%)",
+        (journal_ratio - 1.0) * 100.0
+    );
+
     // --- micro costs (reported, not asserted) -----------------------------
     let rec = FlightRecorder::new("micro");
     let t0 = Instant::now();
@@ -121,7 +157,9 @@ fn main() {
                 ("trials", Json::Num(spec.trials as f64)),
                 ("disabled_s", Json::Num(disabled.stats.median)),
                 ("instrumented_s", Json::Num(instrumented.stats.median)),
+                ("journal_on_s", Json::Num(journal_on.stats.median)),
                 ("overhead_ratio", Json::Num(overhead_ratio)),
+                ("journal_overhead_ratio", Json::Num(journal_ratio)),
             ]),
         ),
         (
@@ -137,10 +175,11 @@ fn main() {
             Json::obj(vec![
                 ("max_overhead_ratio", Json::Num(MAX_OVERHEAD_RATIO)),
                 ("overhead_ratio", Json::Num(overhead_ratio)),
+                ("journal_on", Json::Num(journal_ratio)),
             ]),
         ),
     ]);
-    let ms: Vec<Measurement> = vec![disabled, instrumented, push, probe_off];
+    let ms: Vec<Measurement> = vec![disabled, instrumented, journal_on, push, probe_off];
     let dir = std::path::Path::new("results");
     report::write(dir, "BENCH_obs.json", &json.to_pretty()).unwrap();
     println!("{}", table(&ms));

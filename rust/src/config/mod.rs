@@ -6,6 +6,8 @@
 //! reproducible from a single file.
 
 use crate::coordinator::SweepSpec;
+use crate::obs::journal::FsyncPolicy;
+use crate::obs::slo::{SloObjective, SloSettings};
 use crate::scenario::ScenarioSpec;
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -65,6 +67,20 @@ pub struct ServiceConfig {
     /// Heartbeat cadence (ms) on idle `/events` streams, keeping slow
     /// jobs distinguishable from dead connections.
     pub stream_heartbeat_ms: u64,
+    /// SLO objectives + burn-rate windows (`service.slo` / `--slo`); no
+    /// objectives = engine disabled.
+    pub slo: SloSettings,
+    /// Telemetry-journal directory; `None` disables the journal.
+    pub journal_dir: Option<PathBuf>,
+    /// Journal file rotation threshold, bytes.
+    pub journal_max_file_bytes: u64,
+    /// Journal whole-directory disk cap, bytes (oldest files deleted).
+    pub journal_max_total_bytes: u64,
+    /// Journal durability policy (`never` | `rotate` | `always`).
+    pub journal_fsync: FsyncPolicy,
+    /// Cadence (ms) of periodic metric/SLO snapshot frames written to
+    /// the journal.
+    pub journal_snapshot_ms: u64,
 }
 
 impl Default for ServiceConfig {
@@ -80,6 +96,12 @@ impl Default for ServiceConfig {
             keep_alive: true,
             keep_alive_max_requests: 1024,
             stream_heartbeat_ms: 1000,
+            slo: SloSettings::default(),
+            journal_dir: None,
+            journal_max_file_bytes: crate::obs::journal::DEFAULT_MAX_FILE_BYTES,
+            journal_max_total_bytes: crate::obs::journal::DEFAULT_MAX_TOTAL_BYTES,
+            journal_fsync: FsyncPolicy::Never,
+            journal_snapshot_ms: 5000,
         }
     }
 }
@@ -291,6 +313,50 @@ impl Config {
                     anyhow::bail!("service.cache_dir must be a string or null")
                 }
             }
+            if let Some(v) = s.get("slo") {
+                self.service.slo = SloSettings::from_json(&self.service.slo, v)?;
+            }
+            match s.get("journal_dir") {
+                None => {}
+                Some(Json::Null) => self.service.journal_dir = None,
+                Some(Json::Str(v)) if v == "none" || v.is_empty() => {
+                    self.service.journal_dir = None
+                }
+                Some(Json::Str(v)) => self.service.journal_dir = Some(PathBuf::from(v)),
+                Some(_) => {
+                    anyhow::bail!("service.journal_dir must be a string or null")
+                }
+            }
+            if let Some(v) = s.get("journal_max_file_bytes") {
+                self.service.journal_max_file_bytes =
+                    v.as_usize().map(|n| n as u64).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "service.journal_max_file_bytes must be a non-negative integer"
+                        )
+                    })?;
+            }
+            if let Some(v) = s.get("journal_max_total_bytes") {
+                self.service.journal_max_total_bytes =
+                    v.as_usize().map(|n| n as u64).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "service.journal_max_total_bytes must be a non-negative integer"
+                        )
+                    })?;
+            }
+            if let Some(v) = s.get("journal_fsync") {
+                let v = v.as_str().ok_or_else(|| {
+                    anyhow::anyhow!("service.journal_fsync must be a string")
+                })?;
+                self.service.journal_fsync = FsyncPolicy::parse(v)?;
+            }
+            if let Some(v) = s.get("journal_snapshot_ms") {
+                self.service.journal_snapshot_ms =
+                    v.as_usize().map(|n| n as u64).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "service.journal_snapshot_ms must be a non-negative integer"
+                        )
+                    })?;
+            }
         }
         Ok(())
     }
@@ -371,6 +437,41 @@ impl Config {
                 Some(PathBuf::from(v))
             };
         }
+        if let Some(v) = args.get("slo") {
+            // `--slo ""` clears the objectives; otherwise the flag list
+            // replaces whatever a config file declared.
+            self.service.slo.objectives = if v.is_empty() {
+                Vec::new()
+            } else {
+                v.split(',')
+                    .map(SloObjective::parse_flag)
+                    .collect::<anyhow::Result<Vec<_>>>()?
+            };
+        }
+        self.service.slo.window_s = args.get_u64("slo-window-s", self.service.slo.window_s)?;
+        self.service.slo.tick_ms = args.get_u64("slo-tick-ms", self.service.slo.tick_ms)?;
+        if let Some(v) = args.get("journal-dir") {
+            self.service.journal_dir = if v == "none" || v.is_empty() {
+                None
+            } else {
+                Some(PathBuf::from(v))
+            };
+        }
+        self.service.journal_max_file_bytes = args.get_u64(
+            "journal-max-file-bytes",
+            self.service.journal_max_file_bytes,
+        )?;
+        self.service.journal_max_total_bytes = args.get_u64(
+            "journal-max-total-bytes",
+            self.service.journal_max_total_bytes,
+        )?;
+        if let Some(v) = args.get("journal-fsync") {
+            self.service.journal_fsync = FsyncPolicy::parse(v)?;
+        }
+        self.service.journal_snapshot_ms = args.get_u64(
+            "journal-snapshot-ms",
+            self.service.journal_snapshot_ms,
+        )?;
         if let Some(path) = args.get("scenario") {
             let text = std::fs::read_to_string(path)
                 .map_err(|e| anyhow::anyhow!("scenario {path}: {e}"))?;
@@ -433,6 +534,19 @@ impl Config {
         anyhow::ensure!(
             self.service.stream_heartbeat_ms >= 1,
             "stream_heartbeat_ms must be ≥ 1"
+        );
+        self.service.slo.validate()?;
+        anyhow::ensure!(
+            self.service.journal_max_file_bytes >= 1024,
+            "journal_max_file_bytes must be ≥ 1024"
+        );
+        anyhow::ensure!(
+            self.service.journal_max_total_bytes >= self.service.journal_max_file_bytes,
+            "journal_max_total_bytes must be ≥ journal_max_file_bytes"
+        );
+        anyhow::ensure!(
+            self.service.journal_snapshot_ms >= 1,
+            "journal_snapshot_ms must be ≥ 1"
         );
         if let Some(s) = &self.scenario {
             s.validate()?;
@@ -513,6 +627,30 @@ impl Config {
                     (
                         "stream_heartbeat_ms",
                         Json::Num(self.service.stream_heartbeat_ms as f64),
+                    ),
+                    ("slo", self.service.slo.to_json()),
+                    (
+                        "journal_dir",
+                        match &self.service.journal_dir {
+                            Some(d) => Json::Str(d.display().to_string()),
+                            None => Json::Null,
+                        },
+                    ),
+                    (
+                        "journal_max_file_bytes",
+                        Json::Num(self.service.journal_max_file_bytes as f64),
+                    ),
+                    (
+                        "journal_max_total_bytes",
+                        Json::Num(self.service.journal_max_total_bytes as f64),
+                    ),
+                    (
+                        "journal_fsync",
+                        Json::Str(self.service.journal_fsync.as_str().to_string()),
+                    ),
+                    (
+                        "journal_snapshot_ms",
+                        Json::Num(self.service.journal_snapshot_ms as f64),
                     ),
                 ]),
             ),
@@ -755,6 +893,74 @@ mod tests {
         std::fs::write(
             &path,
             r#"{"backend": "native", "service": {"stream_heartbeat_ms": "fast"}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_file(path.to_str().unwrap()).is_err());
+    }
+
+    #[test]
+    fn ops_plane_knobs_from_flags_file_and_roundtrip() {
+        let mut cfg = Config::default();
+        assert!(cfg.service.slo.objectives.is_empty());
+        assert_eq!(cfg.service.journal_dir, None);
+        cfg.apply_args(&args(
+            "serve --slo all:250:0.99:0.999,scope:500:0.95:0.99 --slo-window-s 60 \
+             --slo-tick-ms 50 --journal-dir /tmp/cs-journal --journal-max-file-bytes 4096 \
+             --journal-max-total-bytes 16384 --journal-fsync rotate \
+             --journal-snapshot-ms 100 --backend native",
+        ))
+        .unwrap();
+        assert_eq!(cfg.service.slo.objectives.len(), 2);
+        assert_eq!(cfg.service.slo.objectives[1].route, "scope");
+        assert_eq!(cfg.service.slo.window_s, 60);
+        assert_eq!(cfg.service.slo.tick_ms, 50);
+        assert_eq!(
+            cfg.service.journal_dir.as_deref(),
+            Some(std::path::Path::new("/tmp/cs-journal"))
+        );
+        assert_eq!(cfg.service.journal_max_file_bytes, 4096);
+        assert_eq!(cfg.service.journal_max_total_bytes, 16384);
+        assert_eq!(cfg.service.journal_fsync, FsyncPolicy::Rotate);
+        assert_eq!(cfg.service.journal_snapshot_ms, 100);
+
+        // file roundtrip keeps every ops-plane knob
+        let path = std::env::temp_dir().join("cs_config_ops.json");
+        std::fs::write(&path, cfg.to_json().to_pretty()).unwrap();
+        let cfg2 = Config::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg2.service.slo, cfg.service.slo);
+        assert_eq!(cfg2.service.journal_dir, cfg.service.journal_dir);
+        assert_eq!(cfg2.service.journal_max_file_bytes, 4096);
+        assert_eq!(cfg2.service.journal_fsync, FsyncPolicy::Rotate);
+        assert_eq!(cfg2.service.journal_snapshot_ms, 100);
+
+        // `--slo ""` / `--journal-dir none` clear file-configured state
+        let mut cfg3 = Config::from_file(path.to_str().unwrap()).unwrap();
+        let clear = ["serve", "--slo", "", "--journal-dir", "none", "--backend", "native"];
+        cfg3.apply_args(&Args::parse(clear.iter().map(|s| s.to_string())))
+            .unwrap();
+        assert!(cfg3.service.slo.objectives.is_empty());
+        assert_eq!(cfg3.service.journal_dir, None);
+
+        // malformed knobs are errors, not silent defaults
+        let mut bad = Config::default();
+        assert!(bad.apply_args(&args("serve --slo all:250:0.99")).is_err());
+        let mut bad = Config::default();
+        assert!(bad
+            .apply_args(&args("serve --journal-fsync eventually"))
+            .is_err());
+        let mut bad = Config::default();
+        assert!(bad
+            .apply_args(&args("serve --journal-max-file-bytes 10"))
+            .is_err());
+        std::fs::write(
+            &path,
+            r#"{"backend": "native", "service": {"slo": {"objectives": [{"route": "all"}]}}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_file(path.to_str().unwrap()).is_err());
+        std::fs::write(
+            &path,
+            r#"{"backend": "native", "service": {"journal_fsync": "eventually"}}"#,
         )
         .unwrap();
         assert!(Config::from_file(path.to_str().unwrap()).is_err());

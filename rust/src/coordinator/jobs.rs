@@ -171,18 +171,20 @@ impl ScopingService {
         self.submit_traced(spec, weight, None)
     }
 
-    /// [`ScopingService::submit_weighted`] with an explicit trace ID
-    /// (usually the HTTP request's `x-request-id`) stamped on the job's
-    /// flight recorder so `/trace` timelines correlate with client logs.
+    /// [`ScopingService::submit_weighted`] with an explicit trace context
+    /// (usually parsed from the HTTP request's `traceparent` or
+    /// `x-request-id` header) stamped on the job's flight recorder, so
+    /// `/trace` timelines correlate with client logs and the job's root
+    /// span parents under the submitting request's span.
     pub fn submit_traced(
         &self,
         spec: SweepSpec,
         weight: f64,
-        trace_id: Option<String>,
+        ctx: Option<obs::TraceContext>,
     ) -> anyhow::Result<JobId> {
         let backend = self.backend.clone();
         let cache = self.cache.clone();
-        self.spawn_driver(weight, None, trace_id, move |ticket, progress| {
+        self.spawn_driver(weight, None, ctx, move |ticket, progress| {
             let result =
                 run_sweep_executor(&spec, backend, cache.as_deref(), &ticket, &progress);
             match result {
@@ -224,14 +226,14 @@ impl ScopingService {
     }
 
     /// [`ScopingService::submit_scenario_weighted`] with an explicit trace
-    /// ID stamped on the job's flight recorder (see
+    /// context stamped on the job's flight recorder (see
     /// [`ScopingService::submit_traced`]).
     pub fn submit_scenario_traced(
         &self,
         scenario: ScenarioSpec,
         sweep: Option<SweepSpec>,
         weight: f64,
-        trace_id: Option<String>,
+        ctx: Option<obs::TraceContext>,
     ) -> anyhow::Result<JobId> {
         scenario.validate()?;
         if let Some(s) = &sweep {
@@ -245,7 +247,7 @@ impl ScopingService {
         let cache = self.cache.clone();
         let scen_progress = Arc::new(ScenarioProgress::default());
         let scen = Arc::clone(&scen_progress);
-        self.spawn_driver(weight, Some(scen_progress), trace_id, move |ticket, sweep_progress| {
+        self.spawn_driver(weight, Some(scen_progress), ctx, move |ticket, sweep_progress| {
             let run = || -> anyhow::Result<ScenarioOutcome> {
                 let oracle = match (&scenario.workload, &sweep) {
                     (Some(_), Some(spec)) => {
@@ -284,7 +286,7 @@ impl ScopingService {
         &self,
         weight: f64,
         scenario: Option<Arc<ScenarioProgress>>,
-        trace_id: Option<String>,
+        ctx: Option<obs::TraceContext>,
         work: F,
     ) -> anyhow::Result<JobId>
     where
@@ -294,9 +296,9 @@ impl ScopingService {
         // cannot jointly overshoot the cap (check-then-act would race).
         let ticket = self.exec.register(weight);
         let progress = Arc::new(SweepProgress::default());
-        let recorder = Arc::new(FlightRecorder::new(
-            trace_id.unwrap_or_else(obs::mint_trace_id),
-        ));
+        let recorder = Arc::new(FlightRecorder::from_context(ctx.unwrap_or_else(|| {
+            obs::TraceContext::from_id(obs::mint_trace_id())
+        })));
         // One bus per job: sweep cell retirements and scenario unit
         // completions publish to it; the driver closes it with a terminal
         // summary, so late `/events` subscribers replay the full story.
@@ -346,6 +348,12 @@ impl ScopingService {
                         e.status = JobStatus::Running;
                     }
                 }
+                // Per-job progress gauges: live from the Running flip,
+                // final values at completion, removed when the entry is
+                // evicted from retention (see below) so the registry does
+                // not accumulate stale series forever.
+                Registry::global().set_gauge(&format!("service.job.{id}.trials_done"), 0.0);
+                Registry::global().set_gauge(&format!("service.job.{id}.cells_done"), 0.0);
                 // Install the recorder on the driver thread so planner
                 // rounds (and anything else on this thread) see it via
                 // `obs::current()`; dispatch points clone it into executor
@@ -353,8 +361,19 @@ impl ScopingService {
                 let _obs_guard = obs::install(Some(Arc::clone(&recorder)));
                 let status = work(ticket, Arc::clone(&progress));
                 let ended = Instant::now();
-                recorder.push("job", "run", started, ended, queue_wait, format!("job={id}"));
+                // The trace-root envelope: carries the recorder's root
+                // span id and parents under the propagated request span.
+                recorder.push_root("job", "run", started, ended, queue_wait, format!("job={id}"));
                 Registry::global().time("service.job_seconds", ended - started);
+                let snap = progress.snapshot();
+                Registry::global().set_gauge(
+                    &format!("service.job.{id}.trials_done"),
+                    snap.trials_done as f64,
+                );
+                Registry::global().set_gauge(
+                    &format!("service.job.{id}.cells_done"),
+                    snap.cells_done as f64,
+                );
                 let mut jobs = shared.jobs.lock().unwrap();
                 if let Some(e) = jobs.get_mut(&id) {
                     e.status = status.clone();
@@ -370,6 +389,11 @@ impl ScopingService {
                     completed.sort_unstable();
                     for id in &completed[..completed.len() - COMPLETED_RETAIN] {
                         jobs.remove(id);
+                        // Drop the evicted job's gauges with it — a gauge
+                        // whose owner no longer answers `/v1/jobs/{id}`
+                        // is stale data, not history.
+                        Registry::global()
+                            .remove_gauges_prefixed(&format!("service.job.{id}."));
                     }
                 }
                 drop(jobs);
@@ -666,9 +690,11 @@ mod tests {
     #[test]
     fn traced_job_records_ordered_spans_under_callers_id() {
         let svc = ScopingService::start(Backend::Native, 8);
-        let id = svc
-            .submit_traced(tiny_spec(), 1.0, Some("req-abc123".into()))
-            .unwrap();
+        let ctx = obs::TraceContext {
+            trace_id: "req-abc123".into(),
+            parent_span: 0x42,
+        };
+        let id = svc.submit_traced(tiny_spec(), 1.0, Some(ctx)).unwrap();
         svc.wait(id).unwrap();
         let trace = svc.trace(id).expect("trace available after completion");
         assert_eq!(
@@ -690,6 +716,15 @@ mod tests {
         assert!(phases.contains(&"train"), "{phases:?}");
         assert!(phases.contains(&"surveil"), "{phases:?}");
         assert!(phases.contains(&"run"), "{phases:?}");
+        // The envelope span parents under the caller-propagated span id.
+        let run = spans
+            .iter()
+            .find(|s| s.get("phase").and_then(Json::as_str) == Some("run"))
+            .unwrap();
+        assert_eq!(
+            run.get("parent_id").and_then(Json::as_str),
+            Some("0000000000000042")
+        );
         assert!(svc.trace(999).is_none());
         svc.shutdown();
     }
@@ -794,14 +829,34 @@ mod tests {
     #[test]
     fn completed_jobs_are_evicted_beyond_retention() {
         let svc = ScopingService::start(Backend::Native, 8);
-        let total = COMPLETED_RETAIN + 2;
+        // Enough jobs that ids 1..=60 fall out of retention. The gauge
+        // assertions below use id 42: high enough that no other test's
+        // service (each restarts ids at 1, but submits only a handful of
+        // jobs) touches the same global-registry series concurrently.
+        let total = COMPLETED_RETAIN + 60;
         let mut last = 0;
         for _ in 0..total {
             last = svc.submit(tiny_spec()).unwrap();
             svc.wait(last).unwrap();
         }
         assert!(svc.status(1).is_none(), "oldest job must be evicted");
+        assert!(svc.status(42).is_none(), "job 42 must be evicted");
         assert!(svc.status(last).is_some(), "newest job must be retained");
+        // Eviction drops the job's per-job gauges with it; retained jobs
+        // keep their final values.
+        let reg = Registry::global();
+        assert!(
+            reg.gauge("service.job.42.trials_done").is_none(),
+            "evicted job's gauges must be removed"
+        );
+        assert!(
+            reg.gauge("service.job.42.cells_done").is_none(),
+            "evicted job's gauges must be removed"
+        );
+        assert!(
+            reg.gauge(&format!("service.job.{last}.trials_done")).is_some(),
+            "retained job's gauges must survive"
+        );
         svc.shutdown();
     }
 

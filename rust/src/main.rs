@@ -9,6 +9,7 @@
 //! containerstress synth     synthesize TPSS telemetry to CSV
 //! containerstress detect    run MSET2+SPRT anomaly detection demo
 //! containerstress shapes    print the cloud shape catalog
+//! containerstress obs       summarize a serve telemetry journal offline
 //! ```
 //!
 //! Flags: `--config file.json` plus per-key overrides (see `config`),
@@ -102,6 +103,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         Some("detect") => cmd_detect(args),
         Some("shapes") => cmd_shapes(),
         Some("elastic") => cmd_elastic(args),
+        Some("obs") => cmd_obs(args),
         Some(other) => anyhow::bail!("unknown subcommand '{other}' (see --help)"),
         None => {
             print_help();
@@ -124,6 +126,8 @@ fn print_help() {
            detect    MSET2 + SPRT anomaly-detection demo\n\
            shapes    print the cloud shape catalog\n\
            elastic   pre-scoped vs autoscaled cost/violation simulation\n\
+           obs       offline journal summaries: obs top|slo|grep --trace-id ID\n\
+                     --journal DIR  (a serve --journal-dir)\n\
          \n\
          common flags: --config FILE --backend device|native --signals a,b,c\n\
            --memvecs a,b,c --obs a,b,c --trials N --model mset2|aakr|ridge\n\
@@ -144,11 +148,19 @@ fn print_help() {
            --executor-workers N  shared trial-executor threads (0 = auto)\n\
            --fair-share B        fair job interleaving on|off (default on)\n\
            --access-log B        per-request HTTP access log (default off)\n\
+         serve ops-plane flags:\n\
+           --slo R:MS:LT:ET,...  latency/error objectives per route class\n\
+             (route 'all', latency ms, latency target, error target;\n\
+              empty string clears)  --slo-window-s S  --slo-tick-ms MS\n\
+           --journal-dir DIR|none     durable telemetry journal (NDJSON)\n\
+           --journal-max-file-bytes N --journal-max-total-bytes N\n\
+           --journal-fsync never|rotate|always  --journal-snapshot-ms MS\n\
          \n\
          serve API:    POST /v1/scope  GET /v1/jobs/ID  DELETE /v1/jobs/ID\n\
                        GET /v1/jobs/ID/trace  GET /v1/scenarios/ID/trace\n\
                        GET /v1/recommendations/ID  GET /v1/shapes  GET /healthz\n\
-                       GET /metrics[?format=json|text|prometheus]"
+                       GET /metrics[?format=json|text|prometheus]\n\
+                       GET /v1/slo  GET /metrics/stream  GET /v1/trace/stream"
     );
 }
 
@@ -295,6 +307,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     println!("  GET    /v1/scenarios/ID/trace scenario span timeline");
     println!("  DELETE /v1/jobs/ID | /v1/scenarios/ID   cancel a job");
     println!("  GET    /v1/recommendations/ID shape recommendation");
+    println!("  GET    /v1/slo                SLO burn-rate status");
+    println!("  GET    /metrics/stream        live metric deltas (NDJSON/SSE)");
+    println!("  GET    /v1/trace/stream       retired-span firehose (NDJSON/SSE)");
     println!("  GET    /v1/shapes | /healthz | /metrics[?format=json|text|prometheus]");
     println!(
         "scheduler: {} executor workers, fair_share={}, access_log={}",
@@ -318,7 +333,129 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         ),
         None => println!("sweep cache: in-memory only"),
     }
+    match &cfg.service.journal_dir {
+        Some(d) => println!(
+            "telemetry journal: {} (fsync={}, snapshot every {}ms)",
+            d.display(),
+            cfg.service.journal_fsync.as_str(),
+            cfg.service.journal_snapshot_ms
+        ),
+        None => println!("telemetry journal: disabled"),
+    }
+    if cfg.service.slo.enabled() {
+        println!(
+            "slo engine: {} objectives over {}s windows (tick {}ms)",
+            cfg.service.slo.objectives.len(),
+            cfg.service.slo.window_s,
+            cfg.service.slo.tick_ms
+        );
+    }
     server.join();
+    Ok(())
+}
+
+/// `containerstress obs` — offline summaries over a `serve --journal-dir`
+/// telemetry journal (no server needed; reads the NDJSON files directly,
+/// tolerating a torn tail from a crashed process):
+///
+/// ```text
+/// obs top  --journal DIR            span tallies + latest metric snapshot
+/// obs slo  --journal DIR            latest journalled SLO evaluation
+/// obs grep --journal DIR --trace-id ID   one trace's spans, as NDJSON
+/// ```
+fn cmd_obs(args: &Args) -> anyhow::Result<()> {
+    use containerstress::obs::journal;
+    use containerstress::util::json::Json;
+    let verb = args.positional.first().map(String::as_str).unwrap_or("top");
+    let dir = std::path::PathBuf::from(args.get_or("journal", "results/journal"));
+    let records = journal::read_records(&dir)?;
+    anyhow::ensure!(
+        !records.is_empty(),
+        "no journal records under {} (expected files from serve --journal-dir)",
+        dir.display()
+    );
+    match verb {
+        "top" => {
+            let mut spans = 0usize;
+            let mut metric_frames = 0usize;
+            let mut slo_frames = 0usize;
+            let mut by_kind: std::collections::BTreeMap<String, usize> = Default::default();
+            let mut last_metrics = None;
+            for r in &records {
+                match r.get("kind").and_then(Json::as_str) {
+                    Some("span") => {
+                        spans += 1;
+                        let key = format!(
+                            "{}/{}",
+                            r.get("name").and_then(Json::as_str).unwrap_or("?"),
+                            r.get("phase").and_then(Json::as_str).unwrap_or("?")
+                        );
+                        *by_kind.entry(key).or_insert(0) += 1;
+                    }
+                    Some("metrics") => {
+                        metric_frames += 1;
+                        last_metrics = Some(r);
+                    }
+                    Some("slo") => slo_frames += 1,
+                    _ => {}
+                }
+            }
+            println!(
+                "journal {}: {} records ({spans} spans, {metric_frames} metric frames, \
+                 {slo_frames} slo frames)",
+                dir.display(),
+                records.len()
+            );
+            let mut kinds: Vec<(String, usize)> = by_kind.into_iter().collect();
+            kinds.sort_by(|a, b| b.1.cmp(&a.1));
+            println!("top span kinds:");
+            for (name, n) in kinds.iter().take(10) {
+                println!("  {n:>8}  {name}");
+            }
+            if let Some(counters) = last_metrics
+                .and_then(|r| r.get("metrics"))
+                .and_then(|m| m.get("counters"))
+                .and_then(Json::as_obj)
+            {
+                let mut top: Vec<(&String, f64)> = counters
+                    .iter()
+                    .filter_map(|(k, v)| v.as_f64().map(|x| (k, x)))
+                    .collect();
+                top.sort_by(|a, b| b.1.total_cmp(&a.1));
+                println!("top counters (latest snapshot):");
+                for (k, v) in top.iter().take(15) {
+                    println!("  {v:>12.0}  {k}");
+                }
+            }
+        }
+        "slo" => {
+            let last = records
+                .iter()
+                .rev()
+                .find(|r| r.get("kind").and_then(Json::as_str) == Some("slo"))
+                .ok_or_else(|| {
+                    anyhow::anyhow!("journal has no slo frames (serve ran without --slo?)")
+                })?;
+            println!("{}", last.get("slo").unwrap_or(last).to_pretty());
+        }
+        "grep" => {
+            let id = args
+                .get("trace-id")
+                .ok_or_else(|| anyhow::anyhow!("obs grep requires --trace-id ID"))?;
+            let mut n = 0usize;
+            for r in &records {
+                if r.get("kind").and_then(Json::as_str) == Some("span")
+                    && r.get("trace_id").and_then(Json::as_str) == Some(id)
+                {
+                    println!("{r}");
+                    n += 1;
+                }
+            }
+            anyhow::ensure!(n > 0, "no spans for trace '{id}' in {}", dir.display());
+            eprintln!("{n} spans for trace {id}");
+        }
+        other => anyhow::bail!("unknown obs verb '{other}' (expected top|slo|grep)"),
+    }
     Ok(())
 }
 

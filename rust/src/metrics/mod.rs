@@ -85,6 +85,18 @@ impl Registry {
         self.gauges.lock().unwrap().get(name).copied()
     }
 
+    /// Drop every gauge whose name starts with `prefix`, returning how
+    /// many were removed. Used by the job registry to reap per-job gauges
+    /// when the owning job is evicted from retention — without this a
+    /// long-running service leaks one gauge family per completed job into
+    /// `/metrics` forever.
+    pub fn remove_gauges_prefixed(&self, prefix: &str) -> usize {
+        let mut gauges = self.gauges.lock().unwrap();
+        let before = gauges.len();
+        gauges.retain(|k, _| !k.starts_with(prefix));
+        before - gauges.len()
+    }
+
     /// Current value of a counter (0 if never touched).
     pub fn counter(&self, name: &str) -> u64 {
         self.counters
@@ -206,6 +218,24 @@ impl Registry {
     }
 }
 
+/// Escape a Prometheus label **value** per the text exposition format:
+/// backslash, double quote, and newline must be written as `\\`, `\"`,
+/// and `\n` respectively or the line is unparseable by scrapers. Every
+/// label value interpolated into an exposition line (including hand-built
+/// info metrics like `kernel_backend_info`) must pass through here.
+pub fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// Sanitize a metric name for Prometheus: every character outside
 /// `[a-zA-Z0-9_:]` becomes `_`, and a leading digit gets a `_` prefix.
 fn promify(name: &str) -> String {
@@ -304,6 +334,127 @@ mod tests {
         assert!(cums.len() >= 2);
         assert!(cums.windows(2).all(|w| w[0] <= w[1]));
         assert_eq!(*cums.last().unwrap(), 100);
+    }
+
+    /// Strict per-line validator for the Prometheus text exposition
+    /// format (the subset this crate emits): `# TYPE <name> <kind>`
+    /// comments, then `<name>[{label="value",…}] <number>` samples with
+    /// metric names in `[a-zA-Z_:][a-zA-Z0-9_:]*` and label values fully
+    /// escaped (no raw `"` or `\` or newline inside the quotes).
+    fn check_prometheus_line(line: &str) {
+        fn valid_name(s: &str) -> bool {
+            !s.is_empty()
+                && !s.starts_with(|c: char| c.is_ascii_digit())
+                && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split(' ');
+            let name = parts.next().unwrap_or("");
+            let kind = parts.next().unwrap_or("");
+            assert!(valid_name(name), "bad metric name in TYPE line: {line:?}");
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "bad TYPE kind: {line:?}"
+            );
+            assert!(parts.next().is_none(), "trailing junk in TYPE line: {line:?}");
+            return;
+        }
+        let (series, value) = line.rsplit_once(' ').expect("sample line has a value");
+        assert!(
+            value.parse::<f64>().is_ok() || value == "+Inf" || value == "-Inf" || value == "NaN",
+            "unparseable sample value in {line:?}"
+        );
+        let name = match series.split_once('{') {
+            None => series,
+            Some((name, labels)) => {
+                let labels = labels.strip_suffix('}').expect("labels close with }");
+                for pair in split_label_pairs(labels) {
+                    let (k, v) = pair.split_once('=').expect("label is key=value");
+                    assert!(valid_name(k), "bad label name in {line:?}");
+                    let v = v
+                        .strip_prefix('"')
+                        .and_then(|v| v.strip_suffix('"'))
+                        .expect("label value is quoted");
+                    // inside the quotes: every `"` and `\` must be escaped
+                    let mut chars = v.chars();
+                    while let Some(c) = chars.next() {
+                        match c {
+                            '"' => panic!("unescaped quote in label value: {line:?}"),
+                            '\n' => panic!("raw newline in label value: {line:?}"),
+                            '\\' => {
+                                let e = chars.next().expect("dangling backslash");
+                                assert!(
+                                    matches!(e, '\\' | '"' | 'n'),
+                                    "bad escape \\{e} in {line:?}"
+                                );
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+                name
+            }
+        };
+        assert!(valid_name(name), "bad metric name in sample line: {line:?}");
+    }
+
+    /// Split `k1="v1",k2="v2"` on commas that sit outside quoted values.
+    fn split_label_pairs(labels: &str) -> Vec<&str> {
+        let mut pairs = Vec::new();
+        let (mut start, mut in_quotes, mut escaped) = (0usize, false, false);
+        for (i, c) in labels.char_indices() {
+            match c {
+                _ if escaped => escaped = false,
+                '\\' if in_quotes => escaped = true,
+                '"' => in_quotes = !in_quotes,
+                ',' if !in_quotes => {
+                    pairs.push(&labels[start..i]);
+                    start = i + 1;
+                }
+                _ => {}
+            }
+        }
+        pairs.push(&labels[start..]);
+        pairs
+    }
+
+    #[test]
+    fn prometheus_exposition_passes_strict_line_checker() {
+        let r = Registry::new();
+        r.add("sweep.trials", 3);
+        r.set_gauge("executor.queue_depth", 2.0);
+        r.set_gauge("9starts.with-digit", 1.0);
+        for i in 1..=20 {
+            r.sample("service.http.request_seconds", i as f64 * 1e-3);
+        }
+        for line in r.render_prometheus().lines() {
+            check_prometheus_line(line);
+        }
+        // the checker also accepts labelled info-style lines…
+        check_prometheus_line("kernel_backend_info{kernel_backend=\"simd\",mode=\"forced\"} 1");
+        // …and rejects unescaped values (escape_label_value makes them safe)
+        let hostile = "a\\b\"c\nd";
+        let escaped = escape_label_value(hostile);
+        assert_eq!(escaped, "a\\\\b\\\"c\\nd");
+        check_prometheus_line(&format!("info{{v=\"{escaped}\"}} 1"));
+        let raw = std::panic::catch_unwind(|| {
+            check_prometheus_line("info{v=\"raw\"quote\"} 1");
+        });
+        assert!(raw.is_err(), "checker must reject unescaped quotes");
+    }
+
+    #[test]
+    fn gauges_are_removable_by_prefix() {
+        let r = Registry::new();
+        r.set_gauge("service.job.7.trials_done", 4.0);
+        r.set_gauge("service.job.7.cells_done", 2.0);
+        r.set_gauge("service.job.71.trials_done", 9.0);
+        r.set_gauge("executor.queue_depth", 1.0);
+        assert_eq!(r.remove_gauges_prefixed("service.job.7."), 2);
+        assert!(r.gauge("service.job.7.trials_done").is_none());
+        assert_eq!(r.gauge("service.job.71.trials_done"), Some(9.0));
+        assert_eq!(r.gauge("executor.queue_depth"), Some(1.0));
+        assert_eq!(r.remove_gauges_prefixed("service.job.7."), 0);
     }
 
     #[test]

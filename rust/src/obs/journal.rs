@@ -1,0 +1,505 @@
+//! Durable telemetry journal: append-only, size-rotated NDJSON files of
+//! retired spans and periodic metric/SLO snapshots.
+//!
+//! The journal is the crash-surviving half of the ops plane: per-job
+//! flight-recorder rings and the metrics registry die with the process,
+//! but every record appended here can be re-read after a restart (or on
+//! another machine) by `containerstress obs` and the tests.
+//!
+//! **Format.** One compact JSON object per line. Every record is
+//! self-describing via its `kind` field (`"span"`, `"metrics"`, `"slo"`)
+//! and carries a wall-clock `ts_ms`. Files are named
+//! `telemetry.<seq>.ndjson` with a monotone sequence number; rotation
+//! starts a new file once the active one exceeds `max_file_bytes`, and
+//! the oldest files are deleted to keep the directory under
+//! `max_total_bytes` — disk use is bounded by configuration, never by
+//! uptime.
+//!
+//! **Crash tolerance.** A crash mid-write leaves a torn tail: a partial
+//! last line, or a complete line of garbage. [`Journal::open`] recovers
+//! by truncating trailing bytes until the last line parses as JSON, then
+//! resumes appending — readers never see the torn record, and the intact
+//! prefix is preserved byte-for-byte.
+//!
+//! **Durability knob.** `fsync` selects how eagerly the OS is asked to
+//! persist: [`FsyncPolicy::Never`] (buffered writes only, cheapest),
+//! [`FsyncPolicy::Rotate`] (fsync when sealing a file — at most one
+//! file's worth of records at risk), [`FsyncPolicy::Always`] (fsync per
+//! append — every acknowledged record survives power loss).
+
+use crate::util::json::Json;
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Default per-file rotation threshold (8 MiB).
+pub const DEFAULT_MAX_FILE_BYTES: u64 = 8 << 20;
+
+/// Default whole-directory disk cap (64 MiB).
+pub const DEFAULT_MAX_TOTAL_BYTES: u64 = 64 << 20;
+
+const FILE_PREFIX: &str = "telemetry.";
+const FILE_SUFFIX: &str = ".ndjson";
+
+/// How eagerly journal writes are flushed to stable storage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FsyncPolicy {
+    /// Buffered writes only; the OS flushes at its leisure. Cheapest —
+    /// the obs-overhead bench gate runs with this policy.
+    #[default]
+    Never,
+    /// `fsync` when a file is sealed at rotation: at most one active
+    /// file's worth of records is at risk on power loss.
+    Rotate,
+    /// `fsync` after every append: every acknowledged record is durable.
+    Always,
+}
+
+impl FsyncPolicy {
+    /// Parse the config/CLI spelling (`never` | `rotate` | `always`).
+    pub fn parse(s: &str) -> anyhow::Result<FsyncPolicy> {
+        match s {
+            "never" => Ok(FsyncPolicy::Never),
+            "rotate" => Ok(FsyncPolicy::Rotate),
+            "always" => Ok(FsyncPolicy::Always),
+            other => anyhow::bail!("unknown fsync policy {other:?} (never|rotate|always)"),
+        }
+    }
+
+    /// Canonical spelling for config round-trips.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FsyncPolicy::Never => "never",
+            FsyncPolicy::Rotate => "rotate",
+            FsyncPolicy::Always => "always",
+        }
+    }
+}
+
+/// Journal location and bounds.
+#[derive(Clone, Debug)]
+pub struct JournalConfig {
+    /// Directory holding the `telemetry.<seq>.ndjson` files (created on
+    /// open).
+    pub dir: PathBuf,
+    /// Rotation threshold: a file exceeding this is sealed and a new
+    /// sequence number started.
+    pub max_file_bytes: u64,
+    /// Whole-directory cap: oldest sealed files are deleted to stay
+    /// under it.
+    pub max_total_bytes: u64,
+    /// Durability policy.
+    pub fsync: FsyncPolicy,
+}
+
+impl JournalConfig {
+    /// Config with default bounds and [`FsyncPolicy::Never`].
+    pub fn new(dir: impl Into<PathBuf>) -> JournalConfig {
+        JournalConfig {
+            dir: dir.into(),
+            max_file_bytes: DEFAULT_MAX_FILE_BYTES,
+            max_total_bytes: DEFAULT_MAX_TOTAL_BYTES,
+            fsync: FsyncPolicy::Never,
+        }
+    }
+}
+
+struct Writer {
+    file: BufWriter<File>,
+    /// Bytes in the active file (including the recovered prefix).
+    written: u64,
+    seq: u64,
+}
+
+/// Append-only, size-rotated NDJSON telemetry journal (see the module
+/// docs for format, rotation, and recovery semantics).
+pub struct Journal {
+    cfg: JournalConfig,
+    inner: Mutex<Writer>,
+    appended: AtomicU64,
+    errors: AtomicU64,
+}
+
+impl Journal {
+    /// Open (or create) the journal in `cfg.dir`, recovering any torn
+    /// tail left by a crash and resuming the highest existing sequence
+    /// number.
+    pub fn open(cfg: JournalConfig) -> anyhow::Result<Journal> {
+        anyhow::ensure!(cfg.max_file_bytes >= 1024, "journal max_file_bytes must be >= 1024");
+        anyhow::ensure!(
+            cfg.max_total_bytes >= cfg.max_file_bytes,
+            "journal max_total_bytes must be >= max_file_bytes"
+        );
+        fs::create_dir_all(&cfg.dir)?;
+        let files = list_files(&cfg.dir)?;
+        let (seq, written) = match files.last() {
+            None => (1, 0),
+            Some((seq, path)) => {
+                let valid = recover_torn_tail(path)?;
+                (*seq, valid)
+            }
+        };
+        let path = file_path(&cfg.dir, seq);
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        let journal = Journal {
+            cfg,
+            inner: Mutex::new(Writer {
+                file: BufWriter::new(file),
+                written,
+                seq,
+            }),
+            appended: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        };
+        journal.enforce_total_cap();
+        Ok(journal)
+    }
+
+    /// Directory the journal writes into.
+    pub fn dir(&self) -> &Path {
+        &self.cfg.dir
+    }
+
+    /// Records successfully appended since open.
+    pub fn appended(&self) -> u64 {
+        self.appended.load(Ordering::Relaxed)
+    }
+
+    /// Append errors since open (each is also logged; appends never
+    /// panic the caller — telemetry must not take the service down).
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Append one record as a compact NDJSON line. Errors are counted
+    /// and logged, never propagated: span retirement happens on executor
+    /// hot paths that must not fail because a disk did.
+    pub fn append(&self, frame: &Json) {
+        let mut line = frame.to_string();
+        line.push('\n');
+        let mut w = self.inner.lock().unwrap();
+        if let Err(e) = self.append_locked(&mut w, line.as_bytes()) {
+            drop(w);
+            if self.errors.fetch_add(1, Ordering::Relaxed) == 0 {
+                log::warn!("telemetry journal append failed (further errors counted): {e}");
+            }
+        } else {
+            self.appended.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn append_locked(&self, w: &mut Writer, line: &[u8]) -> std::io::Result<()> {
+        w.file.write_all(line)?;
+        w.written += line.len() as u64;
+        if self.cfg.fsync == FsyncPolicy::Always {
+            w.file.flush()?;
+            w.file.get_ref().sync_data()?;
+        }
+        if w.written >= self.cfg.max_file_bytes {
+            self.rotate_locked(w)?;
+        }
+        Ok(())
+    }
+
+    fn rotate_locked(&self, w: &mut Writer) -> std::io::Result<()> {
+        w.file.flush()?;
+        if self.cfg.fsync != FsyncPolicy::Never {
+            w.file.get_ref().sync_data()?;
+        }
+        w.seq += 1;
+        let path = file_path(&self.cfg.dir, w.seq);
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        w.file = BufWriter::new(file);
+        w.written = 0;
+        self.enforce_total_cap();
+        Ok(())
+    }
+
+    /// Delete the oldest sealed files until the directory fits the total
+    /// cap; the active file is never deleted.
+    fn enforce_total_cap(&self) {
+        let Ok(files) = list_files(&self.cfg.dir) else {
+            return;
+        };
+        let sizes: Vec<(u64, PathBuf, u64)> = files
+            .into_iter()
+            .map(|(seq, p)| {
+                let len = fs::metadata(&p).map(|m| m.len()).unwrap_or(0);
+                (seq, p, len)
+            })
+            .collect();
+        let mut total: u64 = sizes.iter().map(|(_, _, len)| len).sum();
+        for (i, (_, path, len)) in sizes.iter().enumerate() {
+            // keep at least the newest (active) file
+            if total <= self.cfg.max_total_bytes || i + 1 == sizes.len() {
+                break;
+            }
+            if fs::remove_file(path).is_ok() {
+                total = total.saturating_sub(*len);
+            }
+        }
+    }
+
+    /// Flush buffered records to the OS (called at service shutdown and
+    /// by [`Drop`]).
+    pub fn flush(&self) {
+        let mut w = self.inner.lock().unwrap();
+        let _ = w.file.flush();
+        if self.cfg.fsync != FsyncPolicy::Never {
+            let _ = w.file.get_ref().sync_data();
+        }
+    }
+}
+
+impl Drop for Journal {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+fn file_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("{FILE_PREFIX}{seq:08}{FILE_SUFFIX}"))
+}
+
+/// Journal files in `dir`, sorted by ascending sequence number.
+pub fn list_files(dir: &Path) -> anyhow::Result<Vec<(u64, PathBuf)>> {
+    let mut files = Vec::new();
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(files),
+        Err(e) => return Err(e.into()),
+    };
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(seq) = name
+            .strip_prefix(FILE_PREFIX)
+            .and_then(|s| s.strip_suffix(FILE_SUFFIX))
+            .and_then(|s| s.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        files.push((seq, entry.path()));
+    }
+    files.sort_unstable_by_key(|(seq, _)| *seq);
+    Ok(files)
+}
+
+/// Read every record across the journal's files in append order,
+/// tolerating a torn tail (trailing unparseable lines of the newest file
+/// are skipped, mirroring what [`Journal::open`] would truncate).
+pub fn read_records(dir: &Path) -> anyhow::Result<Vec<Json>> {
+    let mut out = Vec::new();
+    for (_, path) in list_files(dir)? {
+        let text = fs::read_to_string(&path)?;
+        for line in text.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            if let Ok(j) = Json::parse(line) {
+                out.push(j);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Truncate `path` to its longest prefix of whole, parseable NDJSON
+/// lines and return that length. A file ending cleanly is untouched.
+fn recover_torn_tail(path: &Path) -> anyhow::Result<u64> {
+    let bytes = fs::read(path)?;
+    let valid = valid_prefix_len(&bytes);
+    if valid < bytes.len() as u64 {
+        log::warn!(
+            "telemetry journal {}: recovering torn tail ({} bytes truncated)",
+            path.display(),
+            bytes.len() as u64 - valid
+        );
+        let f = OpenOptions::new().write(true).open(path)?;
+        f.set_len(valid)?;
+        f.sync_data()?;
+    }
+    Ok(valid)
+}
+
+/// Length of the longest prefix of `bytes` consisting of complete,
+/// newline-terminated lines whose **last** line parses as JSON; trailing
+/// partial or garbage lines are excluded (iteratively, so a torn write
+/// that spilled across lines is fully dropped).
+fn valid_prefix_len(bytes: &[u8]) -> u64 {
+    let mut end = bytes.len();
+    loop {
+        let Some(nl) = bytes[..end].iter().rposition(|&b| b == b'\n') else {
+            return 0;
+        };
+        let start = bytes[..nl]
+            .iter()
+            .rposition(|&b| b == b'\n')
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        let line = &bytes[start..nl];
+        if !line.is_empty() {
+            if let Ok(s) = std::str::from_utf8(line) {
+                if Json::parse(s).is_ok() {
+                    return (nl + 1) as u64;
+                }
+            }
+        }
+        if start == 0 {
+            return 0;
+        }
+        end = start;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "cs-journal-{tag}-{}-{:x}",
+            std::process::id(),
+            crate::util::fnv1a(tag.as_bytes())
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn record(i: usize) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("span".into())),
+            ("i", Json::Num(i as f64)),
+        ])
+    }
+
+    #[test]
+    fn append_read_roundtrip() {
+        let dir = tmp_dir("roundtrip");
+        let j = Journal::open(JournalConfig::new(&dir)).unwrap();
+        for i in 0..5 {
+            j.append(&record(i));
+        }
+        j.flush();
+        assert_eq!(j.appended(), 5);
+        assert_eq!(j.errors(), 0);
+        let records = read_records(&dir).unwrap();
+        assert_eq!(records.len(), 5);
+        assert_eq!(records[4].get("i").and_then(Json::as_f64), Some(4.0));
+        drop(j);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rotation_and_total_cap_bound_disk() {
+        let dir = tmp_dir("rotate");
+        let cfg = JournalConfig {
+            max_file_bytes: 1024,
+            max_total_bytes: 3 * 1024,
+            fsync: FsyncPolicy::Rotate,
+            ..JournalConfig::new(&dir)
+        };
+        let j = Journal::open(cfg).unwrap();
+        // ~60 bytes per record → a few KiB forces several rotations and
+        // oldest-file eviction under the 3 KiB total cap.
+        for i in 0..200 {
+            j.append(&record(i));
+        }
+        j.flush();
+        let files = list_files(&dir).unwrap();
+        assert!(files.len() >= 2, "rotation must have produced several files");
+        let total: u64 = files
+            .iter()
+            .map(|(_, p)| fs::metadata(p).map(|m| m.len()).unwrap_or(0))
+            .sum();
+        // cap + one active file of slack (eviction runs at rotation)
+        assert!(total <= 4 * 1024, "total {total} exceeds cap+slack");
+        // the retained suffix is contiguous and ends with the last record
+        let records = read_records(&dir).unwrap();
+        assert!(!records.is_empty());
+        let last = records.last().unwrap().get("i").and_then(Json::as_f64);
+        assert_eq!(last, Some(199.0));
+        drop(j);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_recovered_on_open() {
+        let dir = tmp_dir("torn");
+        {
+            let j = Journal::open(JournalConfig::new(&dir)).unwrap();
+            for i in 0..3 {
+                j.append(&record(i));
+            }
+            j.flush();
+        }
+        // simulate a crash mid-write: a partial record with no newline
+        let (_, path) = list_files(&dir).unwrap().pop().unwrap();
+        let clean_len = fs::metadata(&path).unwrap().len();
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"kind\":\"span\",\"tor").unwrap();
+        }
+        // reopen: the torn bytes are truncated, appends resume cleanly
+        let j = Journal::open(JournalConfig::new(&dir)).unwrap();
+        assert_eq!(fs::metadata(&path).unwrap().len(), clean_len);
+        j.append(&record(3));
+        j.flush();
+        let records = read_records(&dir).unwrap();
+        let ids: Vec<f64> = records
+            .iter()
+            .filter_map(|r| r.get("i").and_then(Json::as_f64))
+            .collect();
+        assert_eq!(ids, vec![0.0, 1.0, 2.0, 3.0]);
+        drop(j);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_whole_garbage_line_is_also_dropped() {
+        let dir = tmp_dir("garbage");
+        {
+            let j = Journal::open(JournalConfig::new(&dir)).unwrap();
+            j.append(&record(0));
+            j.flush();
+        }
+        let (_, path) = list_files(&dir).unwrap().pop().unwrap();
+        let clean_len = fs::metadata(&path).unwrap().len();
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            // a complete line of garbage AND a partial tail
+            f.write_all(b"!!corrupted!!\n{\"par").unwrap();
+        }
+        let _ = Journal::open(JournalConfig::new(&dir)).unwrap();
+        assert_eq!(fs::metadata(&path).unwrap().len(), clean_len);
+        let records = read_records(&dir).unwrap();
+        assert_eq!(records.len(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fsync_policy_parses_and_roundtrips() {
+        assert_eq!(FsyncPolicy::parse("never").unwrap(), FsyncPolicy::Never);
+        assert_eq!(FsyncPolicy::parse("rotate").unwrap(), FsyncPolicy::Rotate);
+        assert_eq!(FsyncPolicy::parse("always").unwrap(), FsyncPolicy::Always);
+        assert!(FsyncPolicy::parse("sometimes").is_err());
+        for p in [FsyncPolicy::Never, FsyncPolicy::Rotate, FsyncPolicy::Always] {
+            assert_eq!(FsyncPolicy::parse(p.as_str()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn open_rejects_degenerate_bounds() {
+        let dir = tmp_dir("bounds");
+        let mut cfg = JournalConfig::new(&dir);
+        cfg.max_file_bytes = 10;
+        assert!(Journal::open(cfg.clone()).is_err());
+        cfg.max_file_bytes = 2048;
+        cfg.max_total_bytes = 1024;
+        assert!(Journal::open(cfg).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

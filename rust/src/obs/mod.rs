@@ -20,6 +20,20 @@
 //! bench twin) every instrumentation point is a thread-local read plus a
 //! branch — the overhead budget is enforced by `benches/obs_overhead.rs`
 //! (≤ 5% on the native trial hot path).
+//!
+//! The **ops plane** builds on this substrate:
+//! - every span carries a `span_id`/`parent_id` pair and every recorder a
+//!   [`TraceContext`], parsed from / emitted as a W3C `traceparent`
+//!   header, so traces stitch across the HTTP hop (and, later, across
+//!   coordinator → worker processes);
+//! - retired spans are fanned out through the process-wide
+//!   [`TelemetrySink`] to the `/v1/trace/stream` firehose bus and the
+//!   durable [`journal`], both off by default (one relaxed atomic load on
+//!   the hot path when disabled);
+//! - [`slo`] evaluates burn rates over the metrics this plumbing feeds.
+
+pub mod journal;
+pub mod slo;
 
 use crate::util::fnv1a;
 use crate::util::json::Json;
@@ -44,6 +58,12 @@ pub struct SpanRecord {
     /// Phase within the component (`"run"`, `"train"`, `"surveil"`,
     /// `"round"`, …).
     pub phase: &'static str,
+    /// Span identifier (W3C `parent-id` field width: 64 bits, rendered as
+    /// 16 hex digits). 0 means "not assigned" (hand-built test spans).
+    pub span_id: u64,
+    /// Parent span identifier; 0 means the span is a trace root (no
+    /// parent known).
+    pub parent_id: u64,
     /// Work start, µs since the recorder epoch (after any queue wait).
     pub start_us: u64,
     /// Work end, µs since the recorder epoch.
@@ -61,11 +81,21 @@ impl SpanRecord {
         self.end_us.saturating_sub(self.start_us)
     }
 
-    /// JSON object for the `/trace` endpoints.
+    /// JSON object for the `/trace` endpoints. `parent_id` is `null` for
+    /// root spans; ids render as 16-hex strings (the W3C field format).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::Str(self.name.to_string())),
             ("phase", Json::Str(self.phase.to_string())),
+            ("span_id", Json::Str(format!("{:016x}", self.span_id))),
+            (
+                "parent_id",
+                if self.parent_id == 0 {
+                    Json::Null
+                } else {
+                    Json::Str(format!("{:016x}", self.parent_id))
+                },
+            ),
             ("start_us", Json::Num(self.start_us as f64)),
             ("end_us", Json::Num(self.end_us as f64)),
             ("queue_us", Json::Num(self.queue_us as f64)),
@@ -73,6 +103,105 @@ impl SpanRecord {
             ("meta", Json::Str(self.meta.clone())),
         ])
     }
+}
+
+/// Propagated trace context: the trace identifier plus the span that any
+/// work started under it should report as its parent.
+///
+/// The HTTP layer builds one from an inbound W3C `traceparent` header
+/// (falling back to `x-request-id` with no parent); job submission stamps
+/// it on the job's [`FlightRecorder`], whose job-envelope span becomes the
+/// child of the caller's span — so a client, the HTTP request span, and
+/// every trial span share one stitchable trace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceContext {
+    /// Trace identifier. A 32-hex-digit W3C trace-id when propagated over
+    /// the wire; free-form (e.g. an `x-request-id`) otherwise.
+    pub trace_id: String,
+    /// Caller's span id (0 = none known).
+    pub parent_span: u64,
+}
+
+impl TraceContext {
+    /// Context with a bare trace id and no parent span.
+    pub fn from_id(trace_id: impl Into<String>) -> TraceContext {
+        TraceContext {
+            trace_id: trace_id.into(),
+            parent_span: 0,
+        }
+    }
+
+    /// Parse a W3C `traceparent` header value
+    /// (`00-{32 hex trace-id}-{16 hex parent-id}-{2 hex flags}`).
+    /// Returns `None` for unknown versions, malformed fields, or the
+    /// all-zero trace/parent ids the spec declares invalid.
+    pub fn parse_traceparent(v: &str) -> Option<TraceContext> {
+        let mut parts = v.trim().split('-');
+        let (version, trace, parent, flags) =
+            (parts.next()?, parts.next()?, parts.next()?, parts.next()?);
+        if parts.next().is_some() || version != "00" || flags.len() != 2 {
+            return None;
+        }
+        let lower_hex =
+            |s: &str| s.chars().all(|c| c.is_ascii_hexdigit() && !c.is_ascii_uppercase());
+        if trace.len() != 32 || parent.len() != 16 {
+            return None;
+        }
+        if !lower_hex(trace) || !lower_hex(parent) || !lower_hex(flags) {
+            return None;
+        }
+        if trace.chars().all(|c| c == '0') {
+            return None;
+        }
+        let parent_span = u64::from_str_radix(parent, 16).ok()?;
+        if parent_span == 0 {
+            return None;
+        }
+        Some(TraceContext {
+            trace_id: trace.to_string(),
+            parent_span,
+        })
+    }
+
+    /// Render a `traceparent` header value for an outbound hop that
+    /// continues this trace under `span_id`. Non-hex trace ids (an
+    /// `x-request-id` fallback) are hashed to a stable 32-hex form so the
+    /// emitted header is always spec-valid.
+    pub fn traceparent(&self, span_id: u64) -> String {
+        format!("00-{}-{:016x}-01", trace_id_hex32(&self.trace_id), span_id.max(1))
+    }
+}
+
+/// Normalize a trace id to the 32-lowercase-hex W3C wire form: already
+/// conformant ids pass through; anything else is hashed (FNV-1a over the
+/// raw id, two rounds) to a stable 32-hex digest.
+pub fn trace_id_hex32(id: &str) -> String {
+    let ok = id.len() == 32
+        && id
+            .chars()
+            .all(|c| c.is_ascii_hexdigit() && !c.is_ascii_uppercase())
+        && !id.chars().all(|c| c == '0');
+    if ok {
+        return id.to_string();
+    }
+    let lo = fnv1a(id.as_bytes());
+    let hi = fnv1a(&lo.to_le_bytes());
+    format!("{hi:016x}{lo:016x}")
+}
+
+/// Mint a non-zero 64-bit span id (FNV-1a over wall-clock nanos plus a
+/// process-wide sequence; unique within a process).
+pub fn mint_span_id() -> u64 {
+    static SEQ: AtomicU64 = AtomicU64::new(0x5eed);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let nanos = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default()
+        .as_nanos() as u64;
+    let mut bytes = [0u8; 16];
+    bytes[..8].copy_from_slice(&nanos.to_le_bytes());
+    bytes[8..].copy_from_slice(&seq.to_le_bytes());
+    fnv1a(&bytes).max(1)
 }
 
 struct Ring {
@@ -88,15 +217,34 @@ struct Ring {
 pub struct FlightRecorder {
     epoch: Instant,
     trace_id: String,
+    /// Root span id: the job-envelope span recorded by [`push_root`]
+    /// carries this id, and every plain [`push`] parents under it.
+    ///
+    /// [`push_root`]: FlightRecorder::push_root
+    /// [`push`]: FlightRecorder::push
+    root_span: u64,
+    /// Caller's span id from the propagated [`TraceContext`] (0 = none):
+    /// the root span's parent.
+    external_parent: u64,
     capacity: usize,
     inner: Mutex<Ring>,
 }
 
 impl FlightRecorder {
     /// Recorder with the default capacity; `trace_id` is the request's
-    /// correlation ID (inbound `x-request-id` or a minted one).
+    /// correlation ID (inbound `traceparent`/`x-request-id` or a minted
+    /// one).
     pub fn new(trace_id: impl Into<String>) -> FlightRecorder {
         FlightRecorder::with_capacity(trace_id, DEFAULT_SPAN_CAPACITY)
+    }
+
+    /// Recorder continuing a propagated [`TraceContext`]: spans share the
+    /// caller's trace id and the root span reports the caller's span as
+    /// its parent.
+    pub fn from_context(ctx: TraceContext) -> FlightRecorder {
+        let mut rec = FlightRecorder::new(ctx.trace_id);
+        rec.external_parent = ctx.parent_span;
+        rec
     }
 
     /// Recorder with an explicit ring capacity (min 1).
@@ -104,6 +252,8 @@ impl FlightRecorder {
         FlightRecorder {
             epoch: Instant::now(),
             trace_id: trace_id.into(),
+            root_span: mint_span_id(),
+            external_parent: 0,
             capacity: capacity.max(1),
             inner: Mutex::new(Ring {
                 spans: VecDeque::new(),
@@ -115,6 +265,21 @@ impl FlightRecorder {
     /// Correlation ID this recorder was created with.
     pub fn trace_id(&self) -> &str {
         &self.trace_id
+    }
+
+    /// Root span id (the parent of every plain [`FlightRecorder::push`]).
+    pub fn root_span(&self) -> u64 {
+        self.root_span
+    }
+
+    /// Context for an outbound hop that should parent under this
+    /// recorder's root span — render it with [`TraceContext::traceparent`]
+    /// to continue the trace in another process.
+    pub fn context(&self) -> TraceContext {
+        TraceContext {
+            trace_id: self.trace_id.clone(),
+            parent_span: self.root_span,
+        }
     }
 
     /// Ring capacity (the memory bound, in spans).
@@ -133,7 +298,9 @@ impl FlightRecorder {
     }
 
     /// Record a completed span from raw instants. `queue` is the time the
-    /// work sat in an executor queue before `start`.
+    /// work sat in an executor queue before `start`. The span gets a
+    /// fresh id, parented under the recorder's root span; the minted id
+    /// is returned for callers that chain children under it.
     pub fn push(
         &self,
         name: &'static str,
@@ -142,19 +309,68 @@ impl FlightRecorder {
         end: Instant,
         queue: Duration,
         meta: String,
-    ) {
+    ) -> u64 {
+        self.push_under(self.root_span, name, phase, start, end, queue, meta)
+    }
+
+    /// [`FlightRecorder::push`] with an explicit parent span id (e.g. a
+    /// planner-round span parenting the trials it dispatched).
+    #[allow(clippy::too_many_arguments)]
+    pub fn push_under(
+        &self,
+        parent_id: u64,
+        name: &'static str,
+        phase: &'static str,
+        start: Instant,
+        end: Instant,
+        queue: Duration,
+        meta: String,
+    ) -> u64 {
+        let span_id = mint_span_id();
         self.record(SpanRecord {
             name,
             phase,
+            span_id,
+            parent_id,
             start_us: self.offset_us(start),
             end_us: self.offset_us(end),
             queue_us: queue.as_micros() as u64,
             meta,
         });
+        span_id
+    }
+
+    /// Record the trace-root envelope span (the job's `run` span): it
+    /// carries the recorder's root span id and parents under the
+    /// propagated caller span, if any — the joint that stitches a job's
+    /// timeline under the submitting request's trace.
+    pub fn push_root(
+        &self,
+        name: &'static str,
+        phase: &'static str,
+        start: Instant,
+        end: Instant,
+        queue: Duration,
+        meta: String,
+    ) -> u64 {
+        self.record(SpanRecord {
+            name,
+            phase,
+            span_id: self.root_span,
+            parent_id: self.external_parent,
+            start_us: self.offset_us(start),
+            end_us: self.offset_us(end),
+            queue_us: queue.as_micros() as u64,
+            meta,
+        });
+        self.root_span
     }
 
     /// Record a pre-built span, evicting the oldest entry when full.
+    /// Retired spans are also fanned out through the process-wide
+    /// [`TelemetrySink`] (firehose stream + journal) when enabled.
     pub fn record(&self, span: SpanRecord) {
+        sink().retire(&self.trace_id, &span);
         let mut ring = self.inner.lock().unwrap();
         if ring.spans.len() >= self.capacity {
             ring.spans.pop_front();
@@ -356,6 +572,113 @@ impl EventBus {
     }
 }
 
+/// Process-wide fan-out for retired spans: a bounded firehose
+/// [`EventBus`] feeding `GET /v1/trace/stream` (replay-then-follow) and
+/// an optional durable [`journal::Journal`].
+///
+/// Both outputs are **off by default**: with neither enabled,
+/// [`FlightRecorder::record`] pays two relaxed atomic loads and returns —
+/// the obs-overhead bench gate (≤ 5%) covers the enabled paths
+/// separately. The sink is a process singleton ([`sink`]) because span
+/// retirement happens deep in executor workers that know nothing about
+/// the service instance.
+pub struct TelemetrySink {
+    stream_on: AtomicBool,
+    journal_on: AtomicBool,
+    bus: EventBus,
+    journal: Mutex<Option<Arc<journal::Journal>>>,
+}
+
+impl TelemetrySink {
+    fn new() -> TelemetrySink {
+        TelemetrySink {
+            stream_on: AtomicBool::new(false),
+            journal_on: AtomicBool::new(false),
+            bus: EventBus::new(),
+            journal: Mutex::new(None),
+        }
+    }
+
+    /// Turn the span firehose bus on/off (the service enables it at
+    /// startup; benches and plain CLI runs leave it off).
+    pub fn enable_stream(&self, on: bool) {
+        self.stream_on.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether the firehose bus is currently fed.
+    pub fn stream_enabled(&self) -> bool {
+        self.stream_on.load(Ordering::Relaxed)
+    }
+
+    /// The span firehose bus: subscribe for a bounded replay of recent
+    /// spans plus live follow. Never closed — streams end only when the
+    /// client disconnects.
+    pub fn span_bus(&self) -> &EventBus {
+        &self.bus
+    }
+
+    /// Install (or remove, with `None`) the durable journal every retired
+    /// span and periodic snapshot is appended to.
+    pub fn set_journal(&self, j: Option<Arc<journal::Journal>>) {
+        let mut slot = self.journal.lock().unwrap();
+        self.journal_on.store(j.is_some(), Ordering::Relaxed);
+        *slot = j;
+    }
+
+    /// Currently installed journal, if any.
+    pub fn journal(&self) -> Option<Arc<journal::Journal>> {
+        self.journal.lock().unwrap().clone()
+    }
+
+    /// Append a non-span record (`kind: "metrics"` / `"slo"` snapshots
+    /// from the ops tick thread) to the journal only.
+    pub fn journal_event(&self, frame: &Json) {
+        if !self.journal_on.load(Ordering::Relaxed) {
+            return;
+        }
+        if let Some(j) = self.journal() {
+            j.append(frame);
+        }
+    }
+
+    /// Fan a retired span out to the enabled outputs. The frame is the
+    /// span's `/trace` JSON plus `kind`, `ts_ms` (wall clock at
+    /// retirement) and `trace_id` — self-describing, so journal readers
+    /// and stream consumers need no side channel.
+    fn retire(&self, trace_id: &str, span: &SpanRecord) {
+        let stream = self.stream_on.load(Ordering::Relaxed);
+        let journal_on = self.journal_on.load(Ordering::Relaxed);
+        if !stream && !journal_on {
+            return;
+        }
+        let Json::Obj(mut fields) = span.to_json() else {
+            return;
+        };
+        let ts_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .unwrap_or_default()
+            .as_millis() as u64;
+        fields.insert("kind".to_string(), Json::Str("span".to_string()));
+        fields.insert("ts_ms".to_string(), Json::Num(ts_ms as f64));
+        fields.insert("trace_id".to_string(), Json::Str(trace_id.to_string()));
+        let frame = Json::Obj(fields);
+        if stream {
+            self.bus.publish_json(&frame);
+        }
+        if journal_on {
+            if let Some(j) = self.journal() {
+                j.append(&frame);
+            }
+        }
+    }
+}
+
+/// The process-wide telemetry sink.
+pub fn sink() -> &'static TelemetrySink {
+    static SINK: OnceLock<TelemetrySink> = OnceLock::new();
+    SINK.get_or_init(TelemetrySink::new)
+}
+
 static ACCESS_LOG: AtomicBool = AtomicBool::new(false);
 
 /// Turn HTTP access logging on/off (`containerstress serve --access-log`).
@@ -393,6 +716,8 @@ mod tests {
             rec.record(SpanRecord {
                 name: "trial",
                 phase: "train",
+                span_id: mint_span_id(),
+                parent_id: 0,
                 start_us: 100 - i * 10, // reversed starts: snapshot must sort
                 end_us: 200,
                 queue_us: i,
@@ -472,6 +797,91 @@ mod tests {
             vec!["e3", "e4"]
         );
         assert_eq!(replay[0].seq, 3);
+    }
+
+    #[test]
+    fn traceparent_roundtrip_and_rejection() {
+        let ctx = TraceContext::parse_traceparent(
+            "00-0af7651916cd43dd8448eb211c80319c-b7ad6b7169203331-01",
+        )
+        .expect("valid header parses");
+        assert_eq!(ctx.trace_id, "0af7651916cd43dd8448eb211c80319c");
+        assert_eq!(ctx.parent_span, 0xb7ad6b7169203331);
+        // re-emission preserves the trace id and carries the new span
+        let out = ctx.traceparent(0x1234);
+        assert_eq!(
+            out,
+            "00-0af7651916cd43dd8448eb211c80319c-0000000000001234-01"
+        );
+        assert_eq!(TraceContext::parse_traceparent(&out).unwrap().trace_id, ctx.trace_id);
+        for bad in [
+            "",
+            "01-0af7651916cd43dd8448eb211c80319c-b7ad6b7169203331-01", // version
+            "00-0af7651916cd43dd8448eb211c80319c-b7ad6b7169203331",    // missing flags
+            "00-00000000000000000000000000000000-b7ad6b7169203331-01", // zero trace
+            "00-0af7651916cd43dd8448eb211c80319c-0000000000000000-01", // zero parent
+            "00-0AF7651916CD43DD8448EB211C80319C-b7ad6b7169203331-01", // uppercase
+            "00-0af7651916cd43dd8448eb211c8031-b7ad6b7169203331-01",   // short trace
+            "00-0af7651916cd43dd8448eb211c80319c-b7ad6b71692033-01",   // short parent
+        ] {
+            assert!(TraceContext::parse_traceparent(bad).is_none(), "{bad:?}");
+        }
+        // non-hex fallback ids are hashed into a stable wire form
+        let fallback = TraceContext::from_id("req-abc123");
+        let tp = fallback.traceparent(7);
+        let parsed = TraceContext::parse_traceparent(&tp).unwrap();
+        assert_eq!(parsed.trace_id, trace_id_hex32("req-abc123"));
+        assert_eq!(trace_id_hex32("req-abc123"), trace_id_hex32("req-abc123"));
+    }
+
+    #[test]
+    fn spans_parent_under_root_and_root_under_caller() {
+        let rec = FlightRecorder::from_context(TraceContext {
+            trace_id: "0af7651916cd43dd8448eb211c80319c".into(),
+            parent_span: 0xfeed,
+        });
+        let t0 = Instant::now();
+        let child = rec.push("trial", "train", t0, t0, Duration::ZERO, String::new());
+        let root = rec.push_root("job", "run", t0, t0, Duration::ZERO, String::new());
+        assert_eq!(root, rec.root_span());
+        assert_ne!(child, root);
+        let spans = rec.snapshot();
+        let trial = spans.iter().find(|s| s.name == "trial").unwrap();
+        let job = spans.iter().find(|s| s.name == "job").unwrap();
+        assert_eq!(trial.parent_id, job.span_id, "trial is the job span's child");
+        assert_eq!(job.parent_id, 0xfeed, "job parents under the caller's span");
+        // outbound context continues the chain under the root span
+        let ctx = rec.context();
+        assert_eq!(ctx.parent_span, root);
+        let tp = ctx.traceparent(ctx.parent_span);
+        assert!(tp.starts_with("00-0af7651916cd43dd8448eb211c80319c-"));
+    }
+
+    #[test]
+    fn sink_fans_retired_spans_to_stream() {
+        let rec = FlightRecorder::new("sink-test-trace");
+        let t0 = Instant::now();
+        let mine = |replay: &[BusEvent]| -> Vec<Json> {
+            replay
+                .iter()
+                .filter_map(|e| Json::parse(&e.line).ok())
+                .filter(|j| j.get("trace_id").and_then(Json::as_str) == Some("sink-test-trace"))
+                .collect()
+        };
+        // disabled by default: recording does not publish
+        rec.push("trial", "train", t0, t0, Duration::ZERO, "off".into());
+        assert!(mine(&sink().span_bus().subscribe().0).is_empty());
+        sink().enable_stream(true);
+        rec.push("trial", "surveil", t0, t0, Duration::ZERO, "on".into());
+        sink().enable_stream(false);
+        let (replay, _rx) = sink().span_bus().subscribe();
+        let mine: Vec<Json> = mine(&replay);
+        assert_eq!(mine.len(), 1, "only the enabled-window span is published");
+        let frame = &mine[0];
+        assert_eq!(frame.get("kind").and_then(Json::as_str), Some("span"));
+        assert_eq!(frame.get("phase").and_then(Json::as_str), Some("surveil"));
+        assert!(frame.get("ts_ms").and_then(Json::as_f64).unwrap_or(0.0) > 0.0);
+        assert!(frame.get("span_id").and_then(Json::as_str).is_some());
     }
 
     #[test]

@@ -1,0 +1,690 @@
+//! SLO burn-rate engine: declarative per-route latency/error objectives
+//! evaluated with Google-SRE multi-window burn-rate math over the
+//! process metrics registry.
+//!
+//! An [`SloObjective`] states, per route class, what fraction of
+//! requests must complete under a latency threshold
+//! (`latency_target`, e.g. 0.99 under 250 ms) and what fraction must not
+//! fail with a 5xx (`error_target`, e.g. 0.999). The complement of a
+//! target is the **error budget**; the **burn rate** is how many times
+//! faster than budget the service is currently failing
+//! (`bad_fraction / (1 - target)`): burn 1 exhausts the budget exactly
+//! at the end of the base window, burn 14.4 exhausts it ~14× faster.
+//!
+//! Alerts use the SRE multi-window shape — a breach requires the burn
+//! rate to exceed the threshold over **both** a long window (sustained,
+//! not a blip) and a short window (still happening now), scaled from the
+//! configured base `window_s`:
+//!
+//! | severity | burn ≥ | long window | short window |
+//! |----------|--------|-------------|--------------|
+//! | `page`   | 14.4   | window/12   | window/144   |
+//! | `warn`   | 6.0    | window/2    | window/24    |
+//!
+//! The engine snapshots counter/histogram deltas on a tick (the service
+//! ops thread): windowed fractions come from diffing the newest counts
+//! against the snapshot nearest the window boundary, so evaluation costs
+//! a few histogram clones and no per-request work. Latency "bad"
+//! fractions are read from [`Histogram`] cumulative buckets, so the
+//! threshold is quantised to a bucket boundary (≤ ~9% relative — the
+//! log-bucket width), which is ample for burn-rate alerting.
+//!
+//! Engine state is surfaced in `GET /v1/slo`, summarized in `/healthz`,
+//! and advises the HTTP accept-loop load-shedder: while any objective
+//! **pages**, the shedder trips at a quarter of its normal pending-queue
+//! depth (breach → shed earlier is one code path, not a parallel limit).
+
+use crate::metrics::{Histogram, Registry};
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Burn-rate threshold for the paging (fast-window) alert.
+pub const PAGE_BURN: f64 = 14.4;
+
+/// Burn-rate threshold for the warning (slow-window) alert.
+pub const WARN_BURN: f64 = 6.0;
+
+/// Hard cap on retained snapshots (memory bound regardless of window /
+/// tick configuration).
+const MAX_SNAPS: usize = 4096;
+
+/// One declarative objective for a route class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloObjective {
+    /// Route class the objective covers: `"all"` for every request
+    /// (`service.http.request_seconds`), otherwise a route class name as
+    /// classified by the service (`scope`, `jobs`, `metrics`, …) read
+    /// from `service.route.<route>.seconds` / `.errors`.
+    pub route: String,
+    /// Latency threshold in milliseconds.
+    pub latency_ms: f64,
+    /// Fraction of requests that must complete within `latency_ms`
+    /// (0 < target < 1, e.g. 0.99).
+    pub latency_target: f64,
+    /// Fraction of requests that must not fail server-side (5xx)
+    /// (0 < target < 1, e.g. 0.999).
+    pub error_target: f64,
+}
+
+impl SloObjective {
+    /// Parse one `--slo` flag item: `route:latency_ms:latency_target:error_target`
+    /// (e.g. `all:250:0.99:0.999`).
+    pub fn parse_flag(spec: &str) -> anyhow::Result<SloObjective> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        anyhow::ensure!(
+            parts.len() == 4,
+            "--slo item {spec:?} must be route:latency_ms:latency_target:error_target"
+        );
+        let num = |what: &str, s: &str| -> anyhow::Result<f64> {
+            s.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--slo item {spec:?}: bad {what} {s:?}"))
+        };
+        let o = SloObjective {
+            route: parts[0].to_string(),
+            latency_ms: num("latency_ms", parts[1])?,
+            latency_target: num("latency_target", parts[2])?,
+            error_target: num("error_target", parts[3])?,
+        };
+        o.validate()?;
+        Ok(o)
+    }
+
+    /// Strict construction from a config-JSON object.
+    pub fn from_json(j: &Json) -> anyhow::Result<SloObjective> {
+        anyhow::ensure!(j.as_obj().is_some(), "slo objective must be an object");
+        let route = j
+            .get("route")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("slo objective needs a string `route`"))?
+            .to_string();
+        let num = |key: &str| -> anyhow::Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("slo objective {route:?} needs numeric `{key}`"))
+        };
+        let o = SloObjective {
+            route,
+            latency_ms: num("latency_ms")?,
+            latency_target: num("latency_target")?,
+            error_target: num("error_target")?,
+        };
+        o.validate()?;
+        Ok(o)
+    }
+
+    /// Config-JSON representation (round-trips through
+    /// [`SloObjective::from_json`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("route", Json::Str(self.route.clone())),
+            ("latency_ms", Json::Num(self.latency_ms)),
+            ("latency_target", Json::Num(self.latency_target)),
+            ("error_target", Json::Num(self.error_target)),
+        ])
+    }
+
+    /// Cross-field validation (targets strictly inside (0, 1), positive
+    /// finite threshold, plausible route token).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.route.is_empty()
+                && self
+                    .route
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+            "slo route {:?} must be a bare route-class token",
+            self.route
+        );
+        anyhow::ensure!(
+            self.latency_ms.is_finite() && self.latency_ms > 0.0,
+            "slo route {:?}: latency_ms must be positive",
+            self.route
+        );
+        for (what, v) in [
+            ("latency_target", self.latency_target),
+            ("error_target", self.error_target),
+        ] {
+            anyhow::ensure!(
+                v.is_finite() && v > 0.0 && v < 1.0,
+                "slo route {:?}: {what} must be in (0, 1)",
+                self.route
+            );
+        }
+        Ok(())
+    }
+
+    /// Metric names this objective reads: `(latency histogram, error
+    /// counter, total counter for the error dimension)`.
+    fn metric_names(&self) -> (String, String) {
+        if self.route == "all" {
+            (
+                "service.http.request_seconds".to_string(),
+                "service.http.responses.5xx".to_string(),
+            )
+        } else {
+            (
+                format!("service.route.{}.seconds", self.route),
+                format!("service.route.{}.errors", self.route),
+            )
+        }
+    }
+}
+
+/// Engine-level settings: the alert window base, the snapshot cadence,
+/// and the objectives (empty = SLO tracking disabled).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloSettings {
+    /// Base alert window in seconds; the four evaluation windows are
+    /// scaled from it (see the module docs).
+    pub window_s: u64,
+    /// Snapshot cadence of the ops tick thread, milliseconds.
+    pub tick_ms: u64,
+    /// Per-route objectives; empty disables the engine.
+    pub objectives: Vec<SloObjective>,
+}
+
+impl Default for SloSettings {
+    fn default() -> Self {
+        SloSettings {
+            window_s: 3600,
+            tick_ms: 1000,
+            objectives: Vec::new(),
+        }
+    }
+}
+
+impl SloSettings {
+    /// Whether any objective is configured.
+    pub fn enabled(&self) -> bool {
+        !self.objectives.is_empty()
+    }
+
+    /// Strict parse of the `service.slo` config object. Every present
+    /// key must be well-formed; absent keys keep `base`'s values.
+    pub fn from_json(base: &SloSettings, j: &Json) -> anyhow::Result<SloSettings> {
+        let mut s = base.clone();
+        anyhow::ensure!(j.as_obj().is_some(), "service.slo must be an object");
+        if let Some(v) = j.get("window_s") {
+            s.window_s = v
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("service.slo.window_s must be a positive integer"))?
+                as u64;
+        }
+        if let Some(v) = j.get("tick_ms") {
+            s.tick_ms = v
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("service.slo.tick_ms must be a positive integer"))?
+                as u64;
+        }
+        if let Some(v) = j.get("objectives") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("service.slo.objectives must be an array"))?;
+            s.objectives = arr
+                .iter()
+                .map(SloObjective::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Config-JSON representation.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("window_s", Json::Num(self.window_s as f64)),
+            ("tick_ms", Json::Num(self.tick_ms as f64)),
+            (
+                "objectives",
+                Json::Arr(self.objectives.iter().map(SloObjective::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Cross-field validation.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.window_s >= 1, "slo window_s must be >= 1");
+        anyhow::ensure!(self.tick_ms >= 1, "slo tick_ms must be >= 1");
+        for o in &self.objectives {
+            o.validate()?;
+        }
+        Ok(())
+    }
+
+    /// The four evaluation windows in milliseconds:
+    /// `(page_long, page_short, warn_long, warn_short)`, each at least
+    /// 1 ms.
+    fn windows_ms(&self) -> (u64, u64, u64, u64) {
+        let w = self.window_s * 1000;
+        (
+            (w / 12).max(1),
+            (w / 144).max(1),
+            (w / 2).max(1),
+            (w / 24).max(1),
+        )
+    }
+}
+
+/// Per-objective cumulative counts at one instant.
+#[derive(Clone, Copy, Debug, Default)]
+struct ObjCounts {
+    /// Requests observed (histogram count).
+    total: u64,
+    /// Requests over the latency threshold.
+    slow: u64,
+    /// Server-side failures (5xx).
+    errors: u64,
+}
+
+struct Snap {
+    at_ms: u64,
+    counts: Vec<ObjCounts>,
+}
+
+/// The burn-rate engine: settings, a bounded ring of count snapshots,
+/// and the advisory paging flag the load-shedder reads.
+pub struct SloEngine {
+    settings: SloSettings,
+    epoch: Instant,
+    snaps: Mutex<VecDeque<Snap>>,
+    paging: AtomicBool,
+}
+
+impl SloEngine {
+    /// Engine over the global metrics registry. Callers should [`tick`]
+    /// once right away so evaluation has a baseline snapshot.
+    ///
+    /// [`tick`]: SloEngine::tick
+    pub fn new(settings: SloSettings) -> SloEngine {
+        SloEngine {
+            settings,
+            epoch: Instant::now(),
+            snaps: Mutex::new(VecDeque::new()),
+            paging: AtomicBool::new(false),
+        }
+    }
+
+    /// Engine settings.
+    pub fn settings(&self) -> &SloSettings {
+        &self.settings
+    }
+
+    /// Milliseconds since the engine was created.
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    /// Counts for every objective from the live registry.
+    fn live_counts(&self) -> Vec<ObjCounts> {
+        let reg = Registry::global();
+        self.settings
+            .objectives
+            .iter()
+            .map(|o| {
+                let (hist_name, err_name) = o.metric_names();
+                let (total, slow) = match reg.histogram(&hist_name) {
+                    Some(h) => (h.count(), slow_count(&h, o.latency_ms / 1000.0)),
+                    None => (0, 0),
+                };
+                ObjCounts {
+                    total,
+                    slow,
+                    errors: reg.counter(&err_name),
+                }
+            })
+            .collect()
+    }
+
+    /// Record one snapshot and refresh the paging flag. Called on the
+    /// service ops-tick cadence (`tick_ms`).
+    pub fn tick(&self) {
+        let counts = self.live_counts();
+        let now = self.now_ms();
+        self.push_snap(now, counts.clone());
+        self.evaluate_at(now, &counts);
+    }
+
+    fn push_snap(&self, at_ms: u64, counts: Vec<ObjCounts>) {
+        let (_, _, warn_long, _) = self.settings.windows_ms();
+        let keep_from = at_ms.saturating_sub(warn_long + 2 * self.settings.tick_ms);
+        let mut snaps = self.snaps.lock().unwrap();
+        snaps.push_back(Snap { at_ms, counts });
+        while snaps.len() > MAX_SNAPS || snaps.front().is_some_and(|s| s.at_ms < keep_from) {
+            // keep at least one snapshot older than the longest window
+            if snaps.len() >= 2 && snaps[1].at_ms <= keep_from {
+                snaps.pop_front();
+            } else if snaps.len() > MAX_SNAPS {
+                snaps.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Whether any objective currently exceeds the paging burn rate —
+    /// the advisory input the HTTP load-shedder consults.
+    pub fn is_paging(&self) -> bool {
+        self.paging.load(Ordering::Relaxed)
+    }
+
+    /// Full evaluation against live counts (the `GET /v1/slo` body).
+    pub fn evaluate(&self) -> Json {
+        self.evaluate_at(self.now_ms(), &self.live_counts())
+    }
+
+    /// One-line summary for `/healthz`: overall status plus the routes
+    /// currently breaching (warn or page).
+    pub fn summary(&self) -> Json {
+        let full = self.evaluate();
+        let status = full
+            .get("status")
+            .and_then(Json::as_str)
+            .unwrap_or("ok")
+            .to_string();
+        let breaching: Vec<Json> = full
+            .get("objectives")
+            .and_then(Json::as_arr)
+            .map(|objs| {
+                objs.iter()
+                    .filter(|o| o.get("status").and_then(Json::as_str) != Some("ok"))
+                    .filter_map(|o| o.get("route").and_then(Json::as_str))
+                    .map(|r| Json::Str(r.to_string()))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Json::obj(vec![
+            ("status", Json::Str(status)),
+            ("breaching", Json::Arr(breaching)),
+            ("shedding", Json::Bool(self.is_paging())),
+        ])
+    }
+
+    /// Evaluate burn rates of `now` counts against the snapshot history
+    /// and update the paging flag. Split from [`SloEngine::evaluate`] so
+    /// tests can drive it with synthetic clocks and counts.
+    fn evaluate_at(&self, now_ms: u64, now: &[ObjCounts]) -> Json {
+        let (page_long, page_short, warn_long, warn_short) = self.settings.windows_ms();
+        let snaps = self.snaps.lock().unwrap();
+        let mut any_page = false;
+        let mut worst = 0u8; // 0 ok, 1 warn, 2 page
+        let mut objectives = Vec::with_capacity(self.settings.objectives.len());
+        for (i, o) in self.settings.objectives.iter().enumerate() {
+            let cur = now.get(i).copied().unwrap_or_default();
+            let dim_json = |bad_of: &dyn Fn(&ObjCounts) -> u64, target: f64| -> (u8, Json) {
+                let budget = 1.0 - target;
+                let frac = |window: u64| -> (f64, u64) {
+                    windowed_fraction(&snaps, i, now_ms, cur, window, bad_of)
+                };
+                let (f_pl, n_pl) = frac(page_long);
+                let (f_ps, _) = frac(page_short);
+                let (f_wl, _) = frac(warn_long);
+                let (f_ws, _) = frac(warn_short);
+                let burn = |f: f64| f / budget;
+                let page = burn(f_pl) >= PAGE_BURN && burn(f_ps) >= PAGE_BURN;
+                let warn = burn(f_wl) >= WARN_BURN && burn(f_ws) >= WARN_BURN;
+                let sev: u8 = if page {
+                    2
+                } else if warn {
+                    1
+                } else {
+                    0
+                };
+                let status = ["ok", "warn", "page"][sev as usize];
+                (
+                    sev,
+                    Json::obj(vec![
+                        ("status", Json::Str(status.to_string())),
+                        ("budget", Json::Num(budget)),
+                        ("bad_fraction", Json::Num(f_pl)),
+                        ("requests", Json::Num(n_pl as f64)),
+                        (
+                            "burn",
+                            Json::obj(vec![
+                                ("page_long", Json::Num(burn(f_pl))),
+                                ("page_short", Json::Num(burn(f_ps))),
+                                ("warn_long", Json::Num(burn(f_wl))),
+                                ("warn_short", Json::Num(burn(f_ws))),
+                            ]),
+                        ),
+                    ]),
+                )
+            };
+            let (lat_sev, lat) = dim_json(&|c: &ObjCounts| c.slow, o.latency_target);
+            let (err_sev, err) = dim_json(&|c: &ObjCounts| c.errors, o.error_target);
+            let sev = lat_sev.max(err_sev);
+            worst = worst.max(sev);
+            any_page |= sev == 2;
+            objectives.push(Json::obj(vec![
+                ("route", Json::Str(o.route.clone())),
+                ("latency_ms", Json::Num(o.latency_ms)),
+                ("latency_target", Json::Num(o.latency_target)),
+                ("error_target", Json::Num(o.error_target)),
+                ("status", Json::Str(["ok", "warn", "page"][sev as usize].to_string())),
+                ("latency", lat),
+                ("errors", err),
+            ]));
+        }
+        drop(snaps);
+        self.paging.store(any_page, Ordering::Relaxed);
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.settings.enabled())),
+            ("status", Json::Str(["ok", "warn", "page"][worst as usize].to_string())),
+            ("window_s", Json::Num(self.settings.window_s as f64)),
+            ("tick_ms", Json::Num(self.settings.tick_ms as f64)),
+            (
+                "windows_ms",
+                Json::obj(vec![
+                    ("page_long", Json::Num(page_long as f64)),
+                    ("page_short", Json::Num(page_short as f64)),
+                    ("warn_long", Json::Num(warn_long as f64)),
+                    ("warn_short", Json::Num(warn_short as f64)),
+                    ("page_burn", Json::Num(PAGE_BURN)),
+                    ("warn_burn", Json::Num(WARN_BURN)),
+                ]),
+            ),
+            ("shedding", Json::Bool(any_page)),
+            ("objectives", Json::Arr(objectives)),
+        ])
+    }
+}
+
+/// Bad-event fraction of objective `i` over the trailing `window_ms`:
+/// deltas between `now` counts and the newest snapshot at least
+/// `window_ms` old (or the oldest available while the history is still
+/// shorter than the window). Returns `(fraction, request_delta)`; an
+/// empty window is a 0.0 fraction.
+fn windowed_fraction(
+    snaps: &VecDeque<Snap>,
+    i: usize,
+    now_ms: u64,
+    now: ObjCounts,
+    window_ms: u64,
+    bad_of: &dyn Fn(&ObjCounts) -> u64,
+) -> (f64, u64) {
+    let cutoff = now_ms.saturating_sub(window_ms);
+    let base = snaps
+        .iter()
+        .rev()
+        .find(|s| s.at_ms <= cutoff)
+        .or_else(|| snaps.front());
+    let Some(base) = base else {
+        return (0.0, 0);
+    };
+    let old = base.counts.get(i).copied().unwrap_or_default();
+    let total = now.total.saturating_sub(old.total);
+    if total == 0 {
+        return (0.0, 0);
+    }
+    let bad = bad_of(&now).saturating_sub(bad_of(&old));
+    (bad.min(total) as f64 / total as f64, total)
+}
+
+/// Count of samples above `threshold_s` in a histogram, read from its
+/// cumulative buckets (quantised to the bucket boundary at or below the
+/// threshold — ≤ one log-bucket of relative error).
+fn slow_count(h: &Histogram, threshold_s: f64) -> u64 {
+    let mut good = 0;
+    for (le, cum) in h.cumulative_buckets() {
+        if le <= threshold_s {
+            good = cum;
+        } else {
+            break;
+        }
+    }
+    h.count().saturating_sub(good)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn objective(route: &str) -> SloObjective {
+        SloObjective {
+            route: route.to_string(),
+            latency_ms: 250.0,
+            latency_target: 0.99,
+            error_target: 0.999,
+        }
+    }
+
+    fn engine(window_s: u64) -> SloEngine {
+        SloEngine::new(SloSettings {
+            window_s,
+            tick_ms: 100,
+            objectives: vec![objective("all")],
+        })
+    }
+
+    fn counts(total: u64, slow: u64, errors: u64) -> Vec<ObjCounts> {
+        vec![ObjCounts { total, slow, errors }]
+    }
+
+    #[test]
+    fn quiet_service_is_ok() {
+        let e = engine(3600);
+        e.push_snap(0, counts(0, 0, 0));
+        let j = e.evaluate_at(60_000, &counts(1000, 0, 0));
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("ok"));
+        assert!(!e.is_paging());
+        let obj = &j.get("objectives").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(obj.get("status").and_then(Json::as_str), Some("ok"));
+    }
+
+    #[test]
+    fn sustained_latency_breach_pages_and_sheds() {
+        // window 3600s → page windows 300s / 25s. Saturate both: every
+        // request slow across the whole history.
+        let e = engine(3600);
+        e.push_snap(0, counts(0, 0, 0));
+        e.push_snap(300_000, counts(3000, 3000, 0));
+        e.push_snap(595_000, counts(5950, 5950, 0));
+        let j = e.evaluate_at(600_000, &counts(6000, 6000, 0));
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("page"));
+        assert_eq!(j.get("shedding"), Some(&Json::Bool(true)));
+        assert!(e.is_paging());
+        let obj = &j.get("objectives").and_then(Json::as_arr).unwrap()[0];
+        let lat = obj.get("latency").unwrap();
+        assert_eq!(lat.get("status").and_then(Json::as_str), Some("page"));
+        // bad fraction 1.0 against budget 0.01 → burn 100
+        let burn = lat.get("burn").unwrap();
+        assert!(burn.get("page_long").and_then(Json::as_f64).unwrap() > 99.0);
+        assert!(burn.get("page_short").and_then(Json::as_f64).unwrap() > 99.0);
+    }
+
+    #[test]
+    fn short_blip_does_not_page() {
+        // Bad only in the short window; the long window stays healthy →
+        // multi-window gating holds the alert back.
+        let e = engine(3600);
+        e.push_snap(0, counts(0, 0, 0));
+        // long window (300s): 100k requests, 10 slow → burn ≈ 0.01
+        e.push_snap(575_000, counts(100_000, 10, 0));
+        // short window (25s): 100 requests, all slow
+        let j = e.evaluate_at(600_000, &counts(100_100, 110, 0));
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("ok"));
+        assert!(!e.is_paging());
+    }
+
+    #[test]
+    fn error_burn_reports_separately_from_latency() {
+        let e = engine(3600);
+        e.push_snap(0, counts(0, 0, 0));
+        e.push_snap(595_000, counts(5950, 0, 5950));
+        let j = e.evaluate_at(600_000, &counts(6000, 0, 6000));
+        let obj = &j.get("objectives").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(
+            obj.get("latency").unwrap().get("status").and_then(Json::as_str),
+            Some("ok")
+        );
+        assert_eq!(
+            obj.get("errors").unwrap().get("status").and_then(Json::as_str),
+            Some("page")
+        );
+        assert_eq!(obj.get("status").and_then(Json::as_str), Some("page"));
+    }
+
+    #[test]
+    fn recovery_clears_paging_flag() {
+        let e = engine(1);
+        e.push_snap(0, counts(0, 0, 0));
+        e.evaluate_at(90, &counts(100, 100, 0));
+        assert!(e.is_paging());
+        // later: plenty of fresh, fast traffic dilutes every window
+        e.push_snap(100, counts(100, 100, 0));
+        e.evaluate_at(200, &counts(10_100, 100, 0));
+        assert!(!e.is_paging());
+    }
+
+    #[test]
+    fn snapshot_history_is_bounded() {
+        let e = engine(1); // warn_long = 500ms
+        for t in 0..10_000u64 {
+            e.push_snap(t * 10, counts(t, 0, 0));
+        }
+        let n = e.snaps.lock().unwrap().len();
+        assert!(n <= MAX_SNAPS, "snaps {n}");
+        assert!(n < 200, "pruning by window must keep the ring small, got {n}");
+    }
+
+    #[test]
+    fn slow_count_respects_threshold() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3); // 1..100 ms
+        }
+        let slow = slow_count(&h, 0.050);
+        // exact boundary is bucket-quantised: allow one bucket of slack
+        assert!((45..=55).contains(&(slow as i64)), "slow {slow}");
+        assert_eq!(slow_count(&h, 10.0), 0);
+        assert_eq!(slow_count(&h, 1e-9), 100);
+    }
+
+    #[test]
+    fn flag_and_json_roundtrip() {
+        let o = SloObjective::parse_flag("all:250:0.99:0.999").unwrap();
+        assert_eq!(o, objective("all"));
+        assert_eq!(SloObjective::from_json(&o.to_json()).unwrap(), o);
+        for bad in [
+            "all:250:0.99",          // missing field
+            "all:zero:0.99:0.999",   // bad number
+            "all:250:1.5:0.999",     // target out of range
+            "all:-1:0.99:0.999",     // negative threshold
+            ":250:0.99:0.999",       // empty route
+            "a b:250:0.99:0.999",    // bad route token
+        ] {
+            assert!(SloObjective::parse_flag(bad).is_err(), "{bad:?}");
+        }
+        let s = SloSettings {
+            window_s: 60,
+            tick_ms: 50,
+            objectives: vec![objective("all"), objective("scope")],
+        };
+        let parsed = SloSettings::from_json(&SloSettings::default(), &s.to_json()).unwrap();
+        assert_eq!(parsed, s);
+        let bad = Json::obj(vec![("window_s", Json::Str("x".into()))]);
+        assert!(SloSettings::from_json(&SloSettings::default(), &bad).is_err());
+    }
+}

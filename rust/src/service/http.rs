@@ -122,6 +122,20 @@ impl Request {
             .map(|(_, v)| v.as_str())
     }
 
+    /// The request's distributed-trace context: a valid W3C
+    /// `traceparent` header wins (trace id + caller span id); otherwise
+    /// the correlation ID (`x-request-id`) seeds a trace with no parent
+    /// span. `None` only before the connection handler injects a minted
+    /// request ID, so handlers always observe `Some`.
+    pub fn trace_context(&self) -> Option<crate::obs::TraceContext> {
+        if let Some(tp) = self.header_get("traceparent") {
+            if let Some(ctx) = crate::obs::TraceContext::parse_traceparent(tp) {
+                return Some(ctx);
+            }
+        }
+        self.request_id().map(crate::obs::TraceContext::from_id)
+    }
+
     /// Whether this request asks the connection to close afterwards
     /// (explicit `Connection: close`, or HTTP/1.0 without `keep-alive`).
     fn wants_close(&self) -> bool {
@@ -270,12 +284,16 @@ impl Response {
         &mut self,
         w: &mut dyn Write,
         request_id: Option<&str>,
+        traceparent: Option<&str>,
         keep_alive: bool,
     ) -> std::io::Result<u64> {
-        let rid = match request_id {
+        let mut rid = match request_id {
             Some(id) => format!("x-request-id: {id}\r\n"),
             None => String::new(),
         };
+        if let Some(tp) = traceparent {
+            rid.push_str(&format!("traceparent: {tp}\r\n"));
+        }
         let conn = if keep_alive { "keep-alive" } else { "close" };
         match self.stream.take() {
             None => {
@@ -626,7 +644,7 @@ fn read_request(reader: &mut BufReader<DeadlineStream<'_>>) -> Result<Request, R
 pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync + 'static>;
 
 /// Connection-handling options.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone)]
 pub struct HttpOptions {
     /// Keep connections open between requests (HTTP/1.1 persistent
     /// connections). When false every response carries
@@ -635,6 +653,21 @@ pub struct HttpOptions {
     /// Requests served per connection before the server forces a close
     /// (bounds how long one client can pin a worker).
     pub max_requests_per_conn: usize,
+    /// Advisory shed-early signal consulted by the accept loop: while it
+    /// returns true (e.g. an SLO burn-rate page), load shedding trips at
+    /// a quarter of the normal pending-connection cap, so an overloaded
+    /// service starts refusing work before the queue is saturated.
+    pub shed_advisor: Option<Arc<dyn Fn() -> bool + Send + Sync>>,
+}
+
+impl fmt::Debug for HttpOptions {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("HttpOptions")
+            .field("keep_alive", &self.keep_alive)
+            .field("max_requests_per_conn", &self.max_requests_per_conn)
+            .field("shed_advisor", &self.shed_advisor.as_ref().map(|_| "<fn>"))
+            .finish()
+    }
 }
 
 impl Default for HttpOptions {
@@ -642,15 +675,34 @@ impl Default for HttpOptions {
         HttpOptions {
             keep_alive: true,
             max_requests_per_conn: 1024,
+            shed_advisor: None,
         }
     }
 }
 
+/// Monotonic connection ids for the access log (`conn=` field), joining
+/// the requests multiplexed over one keep-alive connection.
+static CONN_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
 /// Serve requests off one connection until it closes.
+///
+/// Access-log format (target `http.access`, one line per request):
+///
+/// ```text
+/// <METHOD> <path> <status> <latency>ms [streamed ]<bytes>b \
+///     id=<request-id> trace=<trace-id> conn=<connection-id>
+/// ```
+///
+/// `<bytes>` is the response body bytes actually written (`aborted: <e>`
+/// replaces it when the client vanished mid-body); `trace=` carries the
+/// request's trace id (from `traceparent` or `x-request-id`), so one
+/// line joins logs ↔ traces ↔ metrics; `conn=` groups the requests
+/// pipelined over one keep-alive connection.
 fn handle_connection(stream: TcpStream, handler: Handler, opts: HttpOptions) {
     let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
     let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
     let _ = stream.set_nodelay(true);
+    let conn_id = CONN_SEQ.fetch_add(1, Ordering::Relaxed);
     let mut reader = BufReader::with_capacity(
         8 << 10,
         DeadlineStream {
@@ -662,7 +714,7 @@ fn handle_connection(stream: TcpStream, handler: Handler, opts: HttpOptions) {
     loop {
         reader.get_mut().deadline = Instant::now() + REQUEST_DEADLINE;
         let t0 = Instant::now();
-        let (mut resp, request_id, line, keep) = match read_request(&mut reader) {
+        let (mut resp, request_id, ctx, line, keep) = match read_request(&mut reader) {
             Ok(mut req) => {
                 served += 1;
                 // Honour the caller's correlation ID; mint one otherwise
@@ -680,12 +732,14 @@ fn handle_connection(stream: TcpStream, handler: Handler, opts: HttpOptions) {
                 let keep = opts.keep_alive
                     && served < opts.max_requests_per_conn
                     && !req.wants_close();
-                ((*handler)(&req), rid, line, keep)
+                let ctx = req.trace_context();
+                ((*handler)(&req), rid, ctx, line, keep)
             }
             Err(ReadError::Idle) => return,
             Err(ReadError::Bad(e)) => (
                 Response::error(400, &format!("bad request: {e}")),
                 crate::obs::mint_trace_id(),
+                None,
                 "<unparsed>".to_string(),
                 // Framing is unreliable after a parse error; never reuse.
                 false,
@@ -693,7 +747,13 @@ fn handle_connection(stream: TcpStream, handler: Handler, opts: HttpOptions) {
         };
         let streamed = resp.stream.is_some();
         let status = resp.status;
-        let wrote = resp.write_framed(&mut (&stream), Some(&request_id), keep);
+        // Echo the trace as a response `traceparent`, under a span id
+        // minted for this HTTP exchange — the access-log line below is
+        // that span's record.
+        let tp = ctx
+            .as_ref()
+            .map(|c| c.traceparent(crate::obs::mint_span_id()));
+        let wrote = resp.write_framed(&mut (&stream), Some(&request_id), tp.as_deref(), keep);
         let elapsed = t0.elapsed();
         let reg = Registry::global();
         reg.time("service.http.request_seconds", elapsed);
@@ -711,9 +771,10 @@ fn handle_connection(stream: TcpStream, handler: Handler, opts: HttpOptions) {
                 Ok(bytes) => format!("{bytes}b"),
                 Err(e) => format!("aborted: {e}"),
             };
+            let trace = ctx.as_ref().map(|c| c.trace_id.as_str()).unwrap_or("-");
             log::info!(
                 target: "http.access",
-                "{line} {status} {:.3}ms {}{outcome} id={request_id}",
+                "{line} {status} {:.3}ms {}{outcome} id={request_id} trace={trace} conn={conn_id}",
                 elapsed.as_secs_f64() * 1e3,
                 if streamed { "streamed " } else { "" },
             );
@@ -770,10 +831,22 @@ impl HttpServer {
                     }
                     match conn {
                         Ok(mut stream) => {
-                            if pending.load(Ordering::SeqCst) >= MAX_PENDING_CONNS {
+                            // Advisory shed-early: while the SLO engine
+                            // pages, trip the same 503 path at a quarter
+                            // of the normal queue depth.
+                            let cap = match &opts.shed_advisor {
+                                Some(advise) if advise() => MAX_PENDING_CONNS / 4,
+                                _ => MAX_PENDING_CONNS,
+                            };
+                            if pending.load(Ordering::SeqCst) >= cap {
                                 // Shed load instead of buffering sockets
                                 // without bound behind a busy pool.
-                                Registry::global().inc("service.http.responses.5xx");
+                                let reg = Registry::global();
+                                reg.inc("service.http.responses.5xx");
+                                reg.inc("service.http.shed");
+                                if cap < MAX_PENDING_CONNS {
+                                    reg.inc("service.http.shed.slo");
+                                }
                                 let _ = Response::error(503, "server busy; retry later")
                                     .write_to(&mut stream);
                                 continue;
@@ -781,12 +854,13 @@ impl HttpServer {
                             pending.fetch_add(1, Ordering::SeqCst);
                             let h = Arc::clone(&handler);
                             let p = Arc::clone(&pending);
+                            let o = opts.clone();
                             conns.submit(move || {
                                 // A panicking handler must not kill the
                                 // pool worker or leak its pending slot.
                                 let r = std::panic::catch_unwind(
                                     std::panic::AssertUnwindSafe(move || {
-                                        handle_connection(stream, h, opts)
+                                        handle_connection(stream, h, o)
                                     }),
                                 );
                                 if r.is_err() {

@@ -27,17 +27,119 @@ pub use routes::ServiceState;
 use crate::config::Config;
 use crate::coordinator::jobs::ScopingService;
 use crate::coordinator::{Backend, CellStore};
+use crate::metrics::Registry;
+use crate::obs::journal::{Journal, JournalConfig};
+use crate::obs::slo::SloEngine;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
 /// Connection-handler pool size. Handlers only parse/serialize JSON and
 /// enqueue jobs (sweep compute runs on the shared trial executor), so a
 /// small, fixed pool suffices.
 const HTTP_WORKERS: usize = 4;
 
+/// The ops-plane background thread: ticks the SLO engine on its snapshot
+/// cadence and journals periodic `metrics`/`slo` frames. Stops (and
+/// detaches the global journal) on drop, so every `Server` teardown path
+/// cleans up.
+struct OpsTick {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    journal: Option<Arc<Journal>>,
+}
+
+impl Drop for OpsTick {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        let sink = crate::obs::sink();
+        sink.set_journal(None);
+        sink.enable_stream(false);
+        if let Some(j) = &self.journal {
+            j.flush();
+        }
+    }
+}
+
 /// A running service instance: HTTP front + scoping queue + sweep cache.
 pub struct Server {
     http: HttpServer,
     state: Arc<ServiceState>,
+    // Dropped after `http`, stopping the tick thread and flushing the
+    // journal once no handler can touch them.
+    _ops: OpsTick,
+}
+
+/// Start the ops-tick thread: SLO snapshots every `slo_tick_ms`,
+/// journal `metrics` + `slo` frames every `snapshot_ms`. With neither an
+/// engine nor a journal the thread is not spawned at all.
+fn spawn_ops_tick(
+    slo: Option<Arc<SloEngine>>,
+    journal: Option<Arc<Journal>>,
+    slo_tick_ms: u64,
+    snapshot_ms: u64,
+) -> OpsTick {
+    let stop = Arc::new(AtomicBool::new(false));
+    if slo.is_none() && journal.is_none() {
+        return OpsTick {
+            stop,
+            handle: None,
+            journal,
+        };
+    }
+    let stop2 = Arc::clone(&stop);
+    let slo2 = slo.clone();
+    let journal2 = journal.clone();
+    let handle = std::thread::Builder::new()
+        .name("ops-tick".into())
+        .spawn(move || {
+            let step = Duration::from_millis(slo_tick_ms.min(snapshot_ms).clamp(10, 250));
+            let mut last_slo = Duration::ZERO;
+            let mut last_snap = Duration::ZERO;
+            let started = std::time::Instant::now();
+            while !stop2.load(Ordering::SeqCst) {
+                std::thread::sleep(step);
+                let elapsed = started.elapsed();
+                if let Some(engine) = &slo2 {
+                    if (elapsed - last_slo).as_millis() as u64 >= slo_tick_ms {
+                        last_slo = elapsed;
+                        engine.tick();
+                    }
+                }
+                if journal2.is_some()
+                    && (elapsed - last_snap).as_millis() as u64 >= snapshot_ms
+                {
+                    last_snap = elapsed;
+                    let ts_ms = SystemTime::now()
+                        .duration_since(UNIX_EPOCH)
+                        .unwrap_or_default()
+                        .as_millis() as u64;
+                    let sink = crate::obs::sink();
+                    sink.journal_event(&Json::obj(vec![
+                        ("kind", Json::Str("metrics".to_string())),
+                        ("ts_ms", Json::Num(ts_ms as f64)),
+                        ("metrics", Registry::global().to_json()),
+                    ]));
+                    if let Some(engine) = &slo2 {
+                        sink.journal_event(&Json::obj(vec![
+                            ("kind", Json::Str("slo".to_string())),
+                            ("ts_ms", Json::Num(ts_ms as f64)),
+                            ("slo", engine.evaluate()),
+                        ]));
+                    }
+                }
+            }
+        })
+        .expect("spawn ops-tick thread");
+    OpsTick {
+        stop,
+        handle: Some(handle),
+        journal,
+    }
 }
 
 impl Server {
@@ -58,26 +160,71 @@ impl Server {
             cfg.service.executor_workers,
             cfg.service.fair_share,
         );
-        let state = Arc::new(
-            ServiceState::new(svc, cache, cfg.sweep.clone()).with_stream_heartbeat(
-                std::time::Duration::from_millis(cfg.service.stream_heartbeat_ms),
-            ),
+        // Ops plane: live span firehose, optional durable journal,
+        // optional SLO burn-rate engine.
+        let sink = crate::obs::sink();
+        sink.enable_stream(true);
+        let journal = match &cfg.service.journal_dir {
+            Some(dir) => {
+                let jcfg = JournalConfig {
+                    dir: dir.clone(),
+                    max_file_bytes: cfg.service.journal_max_file_bytes,
+                    max_total_bytes: cfg.service.journal_max_total_bytes,
+                    fsync: cfg.service.journal_fsync,
+                };
+                let j = Arc::new(Journal::open(jcfg)?);
+                sink.set_journal(Some(Arc::clone(&j)));
+                Some(j)
+            }
+            None => None,
+        };
+        let slo = cfg.service.slo.enabled().then(|| {
+            let engine = Arc::new(SloEngine::new(cfg.service.slo.clone()));
+            engine.tick(); // baseline snapshot so windows evaluate immediately
+            engine
+        });
+
+        let mut state = ServiceState::new(svc, cache, cfg.sweep.clone()).with_stream_heartbeat(
+            std::time::Duration::from_millis(cfg.service.stream_heartbeat_ms),
         );
+        if let Some(engine) = &slo {
+            state = state.with_slo(Arc::clone(engine));
+        }
+        let state = Arc::new(state);
         let handler_state = Arc::clone(&state);
         let handler: Handler = Arc::new(move |req| handler_state.handle(req));
         let addr = format!("{}:{}", cfg.service.host, cfg.service.port);
         let opts = HttpOptions {
             keep_alive: cfg.service.keep_alive,
             max_requests_per_conn: cfg.service.keep_alive_max_requests,
+            shed_advisor: slo.as_ref().map(|engine| {
+                let engine = Arc::clone(engine);
+                Arc::new(move || engine.is_paging()) as Arc<dyn Fn() -> bool + Send + Sync>
+            }),
         };
+        let ops = spawn_ops_tick(
+            slo.clone(),
+            journal.clone(),
+            cfg.service.slo.tick_ms,
+            cfg.service.journal_snapshot_ms,
+        );
         let http = HttpServer::bind_with(&addr, HTTP_WORKERS, handler, opts)?;
         log::info!("scoping service listening on http://{}", http.addr());
-        Ok(Server { http, state })
+        Ok(Server {
+            http,
+            state,
+            _ops: ops,
+        })
     }
 
     /// The bound socket address.
     pub fn addr(&self) -> std::net::SocketAddr {
         self.http.addr()
+    }
+
+    /// The SLO engine, when objectives are configured.
+    pub fn slo(&self) -> Option<Arc<SloEngine>> {
+        self.state.slo()
     }
 
     /// Shared route state (job queue + cache) — tests and embedders.

@@ -18,6 +18,11 @@
 //! GET    /healthz                 liveness + uptime + queue/scheduler gauges
 //! GET    /metrics                 metrics registry
 //!                                 (?format=json|text|prometheus; json default)
+//! GET    /metrics/stream          live counter/gauge deltas on a heartbeat
+//!                                 (?format=ndjson|sse; ndjson default)
+//! GET    /v1/slo                  SLO objectives + multi-window burn rates
+//! GET    /v1/trace/stream         retired-span firehose, replay-then-follow
+//!                                 (?format=ndjson|sse, ?trace_id=… filter)
 //! ```
 //!
 //! The `/events` endpoints stream each job's live event bus (cell
@@ -53,7 +58,8 @@
 use crate::config;
 use crate::coordinator::jobs::{JobId, JobStatus, ScopingService};
 use crate::coordinator::{SweepResult, SweepSpec};
-use crate::metrics::Registry;
+use crate::metrics::{escape_label_value, Registry};
+use crate::obs::slo::SloEngine;
 use crate::obs::{BusEvent, FlightRecorder};
 use crate::recommend::{recommend_from_sweep, Sla};
 use crate::report;
@@ -62,7 +68,7 @@ use crate::service::cache::SweepCache;
 use crate::service::http::{BodyStream, IterBody, Request, Response};
 use crate::shapes::{self, Workload};
 use crate::util::json::{stream::StreamEmitter, Json};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -80,6 +86,8 @@ pub struct ServiceState {
     jobs: Mutex<HashMap<JobId, (Workload, Sla)>>,
     /// Heartbeat cadence on idle `/events` streams.
     heartbeat: Duration,
+    /// SLO burn-rate engine; `None` when no objectives are configured.
+    slo: Option<Arc<SloEngine>>,
 }
 
 impl ServiceState {
@@ -91,6 +99,7 @@ impl ServiceState {
             default_spec,
             jobs: Mutex::new(HashMap::new()),
             heartbeat: DEFAULT_STREAM_HEARTBEAT,
+            slo: None,
         }
     }
 
@@ -98,6 +107,18 @@ impl ServiceState {
     pub fn with_stream_heartbeat(mut self, heartbeat: Duration) -> Self {
         self.heartbeat = heartbeat.max(Duration::from_millis(10));
         self
+    }
+
+    /// Attach the SLO burn-rate engine (serves `GET /v1/slo` and the
+    /// `/healthz` summary).
+    pub fn with_slo(mut self, slo: Arc<SloEngine>) -> Self {
+        self.slo = Some(slo);
+        self
+    }
+
+    /// The attached SLO engine, when objectives are configured.
+    pub fn slo(&self) -> Option<Arc<SloEngine>> {
+        self.slo.clone()
     }
 
     /// The shared cell-level sweep cache.
@@ -122,6 +143,11 @@ impl ServiceState {
     }
 
     /// Top-level dispatch (the [`crate::service::http::Handler`] body).
+    ///
+    /// Besides the global request/error counters, each recognised route
+    /// class records `service.route.{class}.seconds` /
+    /// `.requests` / `.errors` (5xx only) — the per-route series the SLO
+    /// engine's named objectives read.
     pub fn handle(&self, req: &Request) -> Response {
         Registry::global().inc("service.http.requests");
         let segs: Vec<&str> = req
@@ -129,10 +155,15 @@ impl ServiceState {
             .split('/')
             .filter(|s| !s.is_empty())
             .collect();
+        let class = route_class(&segs);
+        let started = Instant::now();
         let resp = match (req.method.as_str(), segs.as_slice()) {
             ("GET", ["healthz"]) => self.healthz(),
             ("GET", ["metrics"]) => self.metrics(req),
+            ("GET", ["metrics", "stream"]) => self.metrics_stream(req),
             ("GET", ["v1", "shapes"]) => shapes_catalog(),
+            ("GET", ["v1", "slo"]) => self.slo_status(),
+            ("GET", ["v1", "trace", "stream"]) => self.trace_stream(req),
             ("POST", ["v1", "scope"]) => self.scope(req),
             ("POST", ["v1", "scenarios"]) => self.scenario_submit(req),
             ("GET", ["v1", "jobs", id]) => self.job_status(id),
@@ -148,7 +179,10 @@ impl ServiceState {
             ("GET", ["v1", "recommendations", id]) => self.recommendation(id),
             (_, ["healthz"])
             | (_, ["metrics"])
+            | (_, ["metrics", "stream"])
             | (_, ["v1", "shapes"])
+            | (_, ["v1", "slo"])
+            | (_, ["v1", "trace", "stream"])
             | (_, ["v1", "scope"])
             | (_, ["v1", "scenarios"])
             | (_, ["v1", "jobs", _])
@@ -169,15 +203,31 @@ impl ServiceState {
         if resp.status >= 400 {
             Registry::global().inc("service.http.errors");
         }
+        if let Some(class) = class {
+            let reg = Registry::global();
+            reg.sample(
+                &format!("service.route.{class}.seconds"),
+                started.elapsed().as_secs_f64(),
+            );
+            reg.inc(&format!("service.route.{class}.requests"));
+            if resp.status >= 500 {
+                reg.inc(&format!("service.route.{class}.errors"));
+            }
+        }
         resp
     }
 
     fn healthz(&self) -> Response {
         let kd = crate::linalg::simd::dispatch_info();
+        let slo = match &self.slo {
+            Some(engine) => engine.summary(),
+            None => Json::obj(vec![("status", Json::Str("disabled".into()))]),
+        };
         Response::json(
             200,
             &Json::obj(vec![
                 ("status", Json::Str("ok".into())),
+                ("slo", slo),
                 ("version", Json::Str(env!("CARGO_PKG_VERSION").into())),
                 ("uptime_s", Json::Num(crate::obs::uptime_s())),
                 ("jobs_in_flight", Json::Num(self.svc.in_flight() as f64)),
@@ -237,8 +287,8 @@ impl ServiceState {
                 body.push_str("# TYPE kernel_backend_info gauge\n");
                 body.push_str(&format!(
                     "kernel_backend_info{{kernel_backend=\"{}\",mode=\"{}\"}} 1\n",
-                    kd.active.isa(),
-                    kd.active.mode()
+                    escape_label_value(kd.active.isa()),
+                    escape_label_value(kd.active.mode())
                 ));
                 Response::text(200, body)
             }
@@ -247,6 +297,91 @@ impl ServiceState {
                 &format!("unknown format '{other}' (expected json|text|prometheus)"),
             ),
         }
+    }
+
+    /// `GET /v1/slo`: the full multi-window burn-rate evaluation, or a
+    /// `{"enabled": false}` stub when no objectives are configured.
+    fn slo_status(&self) -> Response {
+        match &self.slo {
+            Some(engine) => Response::json(200, &engine.evaluate()),
+            None => Response::json(
+                200,
+                &Json::obj(vec![
+                    ("enabled", Json::Bool(false)),
+                    ("status", Json::Str("disabled".into())),
+                ]),
+            ),
+        }
+    }
+
+    /// `GET /metrics/stream`: live metric deltas. The first frame is a
+    /// full counter/gauge snapshot (`"kind":"snapshot"`); each heartbeat
+    /// thereafter emits only the series that changed
+    /// (`"kind":"delta"`), or a keep-alive frame when nothing did.
+    fn metrics_stream(&self, req: &Request) -> Response {
+        let sse = match req.query_get("format") {
+            None | Some("ndjson") => false,
+            Some("sse") => true,
+            Some(other) => {
+                return Response::error(
+                    400,
+                    &format!("unknown format '{other}' (expected ndjson|sse)"),
+                )
+            }
+        };
+        let body = MetricsStreamBody {
+            sse,
+            heartbeat: self.heartbeat,
+            prev: None,
+            seq: 0,
+        };
+        Response::streamed(
+            if sse {
+                "text/event-stream"
+            } else {
+                "application/x-ndjson"
+            },
+            Box::new(body),
+        )
+    }
+
+    /// `GET /v1/trace/stream`: the retired-span firehose. Replays the
+    /// bus's retained tail, then follows live across all jobs;
+    /// `?trace_id=…` narrows the stream to a single trace.
+    fn trace_stream(&self, req: &Request) -> Response {
+        let sse = match req.query_get("format") {
+            None | Some("ndjson") => false,
+            Some("sse") => true,
+            Some(other) => {
+                return Response::error(
+                    400,
+                    &format!("unknown format '{other}' (expected ndjson|sse)"),
+                )
+            }
+        };
+        let filter = req
+            .query_get("trace_id")
+            .map(|id| format!("\"trace_id\":\"{id}\""));
+        let (replay, live) = crate::obs::sink().span_bus().subscribe();
+        let body = EventStreamBody {
+            replay: replay.into(),
+            rx: live,
+            sse,
+            heartbeat: self.heartbeat,
+            recorder: None,
+            filter,
+            started: Instant::now(),
+            delivered: 0,
+            meta: format!("trace_stream rid={}", req.request_id().unwrap_or("-")),
+        };
+        Response::streamed(
+            if sse {
+                "text/event-stream"
+            } else {
+                "application/x-ndjson"
+            },
+            Box::new(body),
+        )
     }
 
     /// `GET /v1/jobs/{id}/trace`: the job's flight-recorder timeline.
@@ -295,6 +430,7 @@ impl ServiceState {
             sse,
             heartbeat: self.heartbeat,
             recorder: self.svc.recorder(jid),
+            filter: None,
             started: Instant::now(),
             delivered: 0,
             meta: format!(
@@ -413,8 +549,8 @@ impl ServiceState {
             Ok(s) => s,
             Err(e) => return Response::error(422, &format!("invalid sla: {e}")),
         };
-        let trace_id = req.request_id().map(String::from);
-        match self.svc.submit_traced(spec, weight, trace_id) {
+        let ctx = req.trace_context();
+        match self.svc.submit_traced(spec, weight, ctx) {
             Ok(id) => {
                 let mut jobs = self.jobs.lock().unwrap();
                 // Drop scoping contexts for jobs the queue has evicted, so
@@ -542,11 +678,8 @@ impl ServiceState {
             Ok(w) => w,
             Err(e) => return Response::error(422, &format!("invalid scheduler: {e}")),
         };
-        let trace_id = req.request_id().map(String::from);
-        match self
-            .svc
-            .submit_scenario_traced(scenario, sweep, weight, trace_id)
-        {
+        let ctx = req.trace_context();
+        match self.svc.submit_scenario_traced(scenario, sweep, weight, ctx) {
             Ok(id) => {
                 Registry::global().inc("service.scenario.submitted");
                 Response::json(
@@ -729,6 +862,24 @@ fn stream_json_object(value: Json) -> Response {
     Response::streamed("application/json", Box::new(IterBody::new(chunks)))
 }
 
+/// The per-route metric class of a request path, or `None` for paths
+/// outside the API surface (unknown routes are not worth a metric series
+/// each — a scanner would mint unbounded names).
+fn route_class(segs: &[&str]) -> Option<&'static str> {
+    match segs {
+        ["healthz"] => Some("healthz"),
+        ["metrics"] | ["metrics", "stream"] => Some("metrics"),
+        ["v1", "shapes"] => Some("shapes"),
+        ["v1", "slo"] => Some("slo"),
+        ["v1", "trace", "stream"] => Some("trace"),
+        ["v1", "scope"] => Some("scope"),
+        ["v1", "scenarios"] | ["v1", "scenarios", ..] => Some("scenarios"),
+        ["v1", "jobs", ..] => Some("jobs"),
+        ["v1", "recommendations", _] => Some("recommendations"),
+        _ => None,
+    }
+}
+
 /// [`BodyStream`] over a job's [`EventBus`](crate::obs::EventBus):
 /// replays buffered history, then follows the live feed until the bus
 /// closes (the job published its terminal `summary`). Quiet periods emit
@@ -747,12 +898,23 @@ struct EventStreamBody {
     /// `http/stream` span on drop so streamed responses appear in the
     /// same trace as the work they observed.
     recorder: Option<Arc<FlightRecorder>>,
+    /// Substring an event line must contain to be delivered (the
+    /// `?trace_id=` needle on `/v1/trace/stream`); `None` passes all.
+    filter: Option<String>,
     started: Instant,
     delivered: u64,
     meta: String,
 }
 
 impl EventStreamBody {
+    /// Whether `ev` passes the optional substring filter.
+    fn matches(&self, ev: &BusEvent) -> bool {
+        match &self.filter {
+            Some(needle) => ev.line.contains(needle.as_str()),
+            None => true,
+        }
+    }
+
     /// Frame one bus event for the negotiated wire format.
     fn frame(&mut self, ev: &BusEvent) -> Vec<u8> {
         self.delivered += 1;
@@ -776,19 +938,30 @@ impl EventStreamBody {
 
 impl BodyStream for EventStreamBody {
     fn next_chunk(&mut self) -> std::io::Result<Option<Vec<u8>>> {
-        if let Some(ev) = self.replay.pop_front() {
-            return Ok(Some(self.frame(&ev)));
+        while let Some(ev) = self.replay.pop_front() {
+            if self.matches(&ev) {
+                return Ok(Some(self.frame(&ev)));
+            }
         }
-        let recv = match &self.rx {
-            None => return Ok(None),
-            Some(rx) => rx.recv_timeout(self.heartbeat),
-        };
-        match recv {
-            Ok(ev) => Ok(Some(self.frame(&ev))),
-            Err(mpsc::RecvTimeoutError::Timeout) => Ok(Some(self.heartbeat_frame())),
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                self.rx = None;
-                Ok(None)
+        let deadline = Instant::now() + self.heartbeat;
+        loop {
+            let timeout = deadline.saturating_duration_since(Instant::now());
+            let recv = match &self.rx {
+                None => return Ok(None),
+                Some(rx) => rx.recv_timeout(timeout),
+            };
+            match recv {
+                Ok(ev) if self.matches(&ev) => return Ok(Some(self.frame(&ev))),
+                // Filtered out: keep draining until a match or the
+                // heartbeat deadline — never a silent stall.
+                Ok(_) if Instant::now() < deadline => continue,
+                Ok(_) | Err(mpsc::RecvTimeoutError::Timeout) => {
+                    return Ok(Some(self.heartbeat_frame()))
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    self.rx = None;
+                    return Ok(None);
+                }
             }
         }
     }
@@ -805,6 +978,90 @@ impl Drop for EventStreamBody {
                 Duration::ZERO,
                 format!("{} events={}", self.meta, self.delivered),
             );
+        }
+    }
+}
+
+/// [`BodyStream`] behind `GET /metrics/stream`: a full counter/gauge
+/// snapshot first, then one delta frame per heartbeat carrying only the
+/// series whose values changed since the previous frame. Runs until the
+/// client disconnects (the chunk writer surfaces the broken pipe).
+struct MetricsStreamBody {
+    /// Server-Sent Events framing instead of NDJSON.
+    sse: bool,
+    /// Cadence between frames.
+    heartbeat: Duration,
+    /// Counter/gauge values as of the previous frame; `None` before the
+    /// initial snapshot.
+    prev: Option<BTreeMap<String, f64>>,
+    /// Frame sequence number (the SSE `id:`).
+    seq: u64,
+}
+
+/// Flatten the registry's counters and gauges into one comparable map
+/// (`counter.` / `gauge.` prefixes keep the namespaces distinct).
+fn metric_values() -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    if let Json::Obj(top) = Registry::global().to_json() {
+        for (section, prefix) in [("counters", "counter."), ("gauges", "gauge.")] {
+            if let Some(Json::Obj(m)) = top.get(section) {
+                for (name, v) in m {
+                    if let Some(x) = v.as_f64() {
+                        out.insert(format!("{prefix}{name}"), x);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+impl MetricsStreamBody {
+    /// Frame a `snapshot` or `delta` event for the negotiated format.
+    fn frame(&mut self, kind: &str, changed: Vec<(String, f64)>) -> Vec<u8> {
+        self.seq += 1;
+        let line = Json::obj(vec![
+            ("kind", Json::Str(kind.to_string())),
+            ("seq", Json::Num(self.seq as f64)),
+            (
+                "values",
+                Json::Obj(changed.into_iter().map(|(k, v)| (k, Json::Num(v))).collect()),
+            ),
+        ])
+        .to_string();
+        if self.sse {
+            format!("id: {}\ndata: {line}\n\n", self.seq).into_bytes()
+        } else {
+            format!("{line}\n").into_bytes()
+        }
+    }
+}
+
+impl BodyStream for MetricsStreamBody {
+    fn next_chunk(&mut self) -> std::io::Result<Option<Vec<u8>>> {
+        let Some(prev) = &self.prev else {
+            let now = metric_values();
+            let all: Vec<(String, f64)> = now.iter().map(|(k, v)| (k.clone(), *v)).collect();
+            self.prev = Some(now);
+            return Ok(Some(self.frame("snapshot", all)));
+        };
+        std::thread::sleep(self.heartbeat);
+        let now = metric_values();
+        let changed: Vec<(String, f64)> = now
+            .iter()
+            .filter(|(k, v)| prev.get(*k) != Some(v))
+            .map(|(k, v)| (k.clone(), *v))
+            .collect();
+        self.prev = Some(now);
+        if changed.is_empty() {
+            let hb = if self.sse {
+                b": keep-alive\n\n".to_vec()
+            } else {
+                b"\n".to_vec()
+            };
+            Ok(Some(hb))
+        } else {
+            Ok(Some(self.frame("delta", changed)))
         }
     }
 }
@@ -1546,5 +1803,166 @@ mod tests {
         assert!(j.get("rendered").and_then(Json::as_str).is_some());
         // streamed emission is byte-identical to batch serialisation
         assert_eq!(text, j.to_string());
+    }
+
+    #[test]
+    fn slo_route_and_healthz_summary() {
+        use crate::obs::slo::{SloObjective, SloSettings};
+        // No engine attached: the route answers with a disabled stub.
+        let st = state();
+        let r = st.handle(&get("/v1/slo"));
+        assert_eq!(r.status, 200);
+        let j = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(j.get("enabled").and_then(Json::as_bool), Some(false));
+        let r = st.handle(&get("/healthz"));
+        let h = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(
+            h.get("slo").unwrap().get("status").and_then(Json::as_str),
+            Some("disabled")
+        );
+        // With objectives: the full evaluation, summarised in /healthz.
+        let settings = SloSettings {
+            window_s: 3600,
+            tick_ms: 1000,
+            objectives: vec![SloObjective::parse_flag("all:500:0.99:0.999").unwrap()],
+        };
+        let engine = Arc::new(SloEngine::new(settings));
+        engine.tick();
+        let st = state().with_slo(Arc::clone(&engine));
+        let r = st.handle(&get("/v1/slo"));
+        assert_eq!(r.status, 200);
+        let j = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(j.get("enabled").and_then(Json::as_bool), Some(true));
+        let objs = j.get("objectives").unwrap().as_arr().unwrap();
+        assert_eq!(objs.len(), 1);
+        assert_eq!(objs[0].get("route").and_then(Json::as_str), Some("all"));
+        let r = st.handle(&get("/healthz"));
+        let h = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        let slo = h.get("slo").expect("healthz summarises the SLO engine");
+        assert!(slo.get("status").and_then(Json::as_str).is_some());
+        assert!(slo.get("breaching").is_some());
+        assert_eq!(st.handle(&post("/v1/slo", "")).status, 405);
+    }
+
+    #[test]
+    fn metrics_stream_snapshot_then_delta() {
+        let st = state().with_stream_heartbeat(Duration::from_millis(20));
+        let r = st.handle(&get("/metrics/stream"));
+        assert_eq!(r.status, 200);
+        assert_eq!(r.content_type, "application/x-ndjson");
+        let mut s = r.stream.expect("metric deltas are streamed");
+        let first = String::from_utf8(s.next_chunk().unwrap().unwrap()).unwrap();
+        let j = Json::parse(first.trim()).unwrap();
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("snapshot"));
+        assert!(j.get("values").unwrap().as_obj().is_some());
+        // Change one counter: a following frame is a delta carrying it.
+        Registry::global().inc("test.routes.metrics_stream.ticks");
+        let mut saw = false;
+        for _ in 0..50 {
+            let chunk = String::from_utf8(s.next_chunk().unwrap().unwrap()).unwrap();
+            if chunk.contains("counter.test.routes.metrics_stream.ticks") {
+                assert!(chunk.contains("\"kind\":\"delta\""), "{chunk}");
+                saw = true;
+                break;
+            }
+        }
+        assert!(saw, "delta frame carries the changed counter");
+        // format negotiation mirrors the other stream routes
+        let mut req = get("/metrics/stream");
+        req.query.push(("format".into(), "sse".into()));
+        let r = st.handle(&req);
+        assert_eq!(r.content_type, "text/event-stream");
+        let mut s = r.stream.unwrap();
+        let first = String::from_utf8(s.next_chunk().unwrap().unwrap()).unwrap();
+        assert!(first.starts_with("id: "), "{first}");
+        let mut req = get("/metrics/stream");
+        req.query.push(("format".into(), "xml".into()));
+        assert_eq!(st.handle(&req).status, 400);
+        assert_eq!(st.handle(&post("/metrics/stream", "")).status, 405);
+    }
+
+    #[test]
+    fn trace_stream_replays_and_filters() {
+        // Publish straight to the global span bus rather than toggling the
+        // sink's stream flag (other tests share the sink; only the obs
+        // sink unit test flips that switch).
+        let st = state().with_stream_heartbeat(Duration::from_millis(20));
+        let bus = crate::obs::sink().span_bus();
+        bus.publish_json(&Json::obj(vec![
+            ("kind", Json::Str("span".into())),
+            ("name", Json::Str("routes-test".into())),
+            ("trace_id", Json::Str("tr-routes-filter".into())),
+        ]));
+        bus.publish_json(&Json::obj(vec![
+            ("kind", Json::Str("span".into())),
+            ("name", Json::Str("routes-test".into())),
+            ("trace_id", Json::Str("tr-routes-other".into())),
+        ]));
+        let mut req = get("/v1/trace/stream");
+        req.query.push(("trace_id".into(), "tr-routes-filter".into()));
+        let r = st.handle(&req);
+        assert_eq!(r.status, 200);
+        assert_eq!(r.content_type, "application/x-ndjson");
+        let mut s = r.stream.expect("span firehose is streamed");
+        let first = String::from_utf8(s.next_chunk().unwrap().unwrap()).unwrap();
+        assert!(first.contains("tr-routes-filter"), "{first}");
+        // The non-matching span is filtered out: the next frame is a
+        // keep-alive (or another match), never `tr-routes-other`.
+        let next = String::from_utf8(s.next_chunk().unwrap().unwrap()).unwrap();
+        assert!(!next.contains("tr-routes-other"), "{next}");
+        drop(s);
+        // Unfiltered: the replay carries both spans.
+        let r = st.handle(&get("/v1/trace/stream"));
+        let mut s = r.stream.unwrap();
+        let mut seen = String::new();
+        for _ in 0..200 {
+            seen.push_str(&String::from_utf8(s.next_chunk().unwrap().unwrap()).unwrap());
+            if seen.contains("tr-routes-filter") && seen.contains("tr-routes-other") {
+                break;
+            }
+        }
+        assert!(seen.contains("tr-routes-filter"), "{seen}");
+        assert!(seen.contains("tr-routes-other"), "{seen}");
+        let mut req = get("/v1/trace/stream");
+        req.query.push(("format".into(), "xml".into()));
+        assert_eq!(st.handle(&req).status, 400);
+        assert_eq!(st.handle(&post("/v1/trace/stream", "")).status, 405);
+    }
+
+    #[test]
+    fn job_trace_after_cancel_serves_flushed_prefix() {
+        let st = state();
+        let id = submit_job(&st, "{}");
+        st.handle(&delete(&format!("/v1/jobs/{id}")));
+        // Cancelled or already done — either way the route must answer
+        // with whatever prefix of the timeline was flushed, never a 5xx.
+        let _ = st.svc.wait(id as u64);
+        let r = st.handle(&get(&format!("/v1/jobs/{id}/trace")));
+        assert_eq!(r.status, 200, "trace after DELETE must not fail");
+        let j = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert!(j.get("trace_id").and_then(Json::as_str).is_some());
+        assert!(j.get("spans").unwrap().as_arr().is_some());
+    }
+
+    #[test]
+    fn per_route_metrics_recorded() {
+        let st = state();
+        let before = Registry::global().counter("service.route.healthz.requests");
+        st.handle(&get("/healthz"));
+        let after = Registry::global().counter("service.route.healthz.requests");
+        assert!(after > before, "route counter increments");
+        assert!(
+            Registry::global()
+                .summary("service.route.healthz.seconds")
+                .is_some(),
+            "route latency histogram recorded"
+        );
+        // unknown paths do not mint per-route series (scanner safety)
+        assert_eq!(route_class(&["totally", "unknown"]), None);
+        // the error counter is 5xx-only: a 404 on a known class stays flat
+        let before = Registry::global().counter("service.route.jobs.errors");
+        st.handle(&get("/v1/jobs/99999"));
+        let after = Registry::global().counter("service.route.jobs.errors");
+        assert_eq!(after, before);
     }
 }

@@ -7,6 +7,8 @@
 use containerstress::config::Config;
 use containerstress::coordinator::Backend;
 use containerstress::metrics::Registry;
+use containerstress::obs::journal;
+use containerstress::obs::slo::{SloObjective, SloSettings};
 use containerstress::service::Server;
 use containerstress::util::json::Json;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -776,6 +778,9 @@ fn events_stream_is_live_and_matches_final_summary() {
 
 #[test]
 fn service_rejects_bad_requests() {
+    // Server teardown detaches the process-wide telemetry sink, so even
+    // this sweep-free test serializes with the journal/stream tests.
+    let _guard = sweep_lock();
     let server = Server::start(&test_config(), Backend::Native).expect("server");
     let addr = server.addr();
 
@@ -796,4 +801,181 @@ fn service_rejects_bad_requests() {
     assert_eq!(status, 405);
 
     server.shutdown();
+}
+
+/// The ops plane end to end: an impossible latency objective drives a
+/// burn-rate page visible in `/v1/slo` and `/healthz`; a job submitted
+/// under a client-supplied W3C `traceparent` streams its spans live over
+/// `/v1/trace/stream` with the parent/child chain intact; and after the
+/// server shuts down the trace is recovered from the on-disk telemetry
+/// journal — the same lookup `containerstress obs grep --trace-id` runs.
+#[test]
+fn ops_plane_slo_breach_trace_stream_and_journal_recovery() {
+    let _guard = sweep_lock();
+    let jdir = std::env::temp_dir().join(format!("cs-e2e-journal-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&jdir);
+
+    let mut cfg = test_config();
+    cfg.service.journal_dir = Some(jdir.clone());
+    cfg.service.journal_snapshot_ms = 50;
+    // A 100 ns latency threshold makes every request "slow": the page
+    // burn is bad_fraction / (1 - 0.99) = 100, clearing the 14.4 bar as
+    // soon as both page windows contain any traffic at all.
+    cfg.service.slo = SloSettings {
+        window_s: 60,
+        tick_ms: 25,
+        objectives: vec![SloObjective {
+            route: "all".into(),
+            latency_ms: 0.0001,
+            latency_target: 0.99,
+            error_target: 0.999,
+        }],
+    };
+
+    const TRACE_ID: &str = "e2e0ddcafe5105e77a11babe00000001";
+    const PARENT_SPAN: &str = "00000000000000aa";
+
+    let server = Server::start(&cfg, Backend::Native).expect("server");
+    let addr = server.addr();
+    let deadline = Instant::now() + Duration::from_secs(120);
+
+    // Subscribe to the span firehose (filtered to the caller's trace id)
+    // before submitting, so arriving spans are proven live, not replay.
+    let mut stream = Conn::connect(addr);
+    stream.send("GET", &format!("/v1/trace/stream?trace_id={TRACE_ID}"), None, "");
+    let (status, headers) = stream.read_head();
+    assert_eq!(status, 200);
+    assert!(headers.iter().any(|(k, v)| k == "transfer-encoding" && v == "chunked"));
+    assert!(headers.iter().any(|(k, v)| k == "content-type" && v == "application/x-ndjson"));
+
+    // Submit under a client traceparent; the 202 joins the caller's
+    // trace (same trace id) with a fresh server-side span id.
+    let mut sub = Conn::connect(addr);
+    sub.send(
+        "POST",
+        "/v1/scope",
+        Some(SMALL_SCOPE_BODY),
+        &format!("traceparent: 00-{TRACE_ID}-{PARENT_SPAN}-01\r\n"),
+    );
+    let (status, headers, body) = sub.read_response();
+    assert_eq!(status, 202, "{:?}", String::from_utf8_lossy(&body));
+    let echoed = headers
+        .iter()
+        .find(|(k, _)| k == "traceparent")
+        .map(|(_, v)| v.as_str())
+        .expect("202 must carry a traceparent header");
+    assert!(echoed.starts_with(&format!("00-{TRACE_ID}-")), "{echoed}");
+    assert!(!echoed.contains(PARENT_SPAN), "span id must be fresh: {echoed}");
+    let id = body_json(&body).get("job_id").unwrap().as_f64().unwrap() as u64;
+    drop(sub);
+
+    loop {
+        assert!(Instant::now() < deadline, "job {id} timed out");
+        match job_status(addr, id).0.as_str() {
+            "done" => break,
+            "queued" | "running" => std::thread::sleep(Duration::from_millis(5)),
+            other => panic!("job status {other:?}"),
+        }
+    }
+
+    // The job's spans arrive on the stream stitched under the caller's
+    // trace: the "run" envelope parents under the client's span id, the
+    // per-trial spans parent under the envelope.
+    let mut text = String::new();
+    let run = loop {
+        assert!(Instant::now() < deadline, "run span never streamed");
+        let chunk = stream.read_chunk().expect("trace stream ended");
+        text.push_str(std::str::from_utf8(&chunk).expect("utf-8 span line"));
+        let run = text
+            .lines()
+            .filter_map(|l| Json::parse(l.trim()).ok())
+            .find(|j| j.get("phase").and_then(Json::as_str) == Some("run"));
+        if let Some(run) = run {
+            break run;
+        }
+    };
+    assert_eq!(run.get("trace_id").and_then(Json::as_str), Some(TRACE_ID));
+    assert_eq!(run.get("parent_id").and_then(Json::as_str), Some(PARENT_SPAN));
+    let run_span_id = run
+        .get("span_id")
+        .and_then(Json::as_str)
+        .expect("span_id")
+        .to_string();
+    let spans: Vec<Json> = text
+        .lines()
+        .filter_map(|l| Json::parse(l.trim()).ok())
+        .filter(|j| j.get("kind").and_then(Json::as_str) == Some("span"))
+        .collect();
+    for s in &spans {
+        assert_eq!(
+            s.get("trace_id").and_then(Json::as_str),
+            Some(TRACE_ID),
+            "filtered stream leaked a foreign span: {s}"
+        );
+    }
+    let has_child = spans
+        .iter()
+        .any(|s| s.get("parent_id").and_then(Json::as_str) == Some(run_span_id.as_str()));
+    assert!(has_child, "no per-trial span parents under the run envelope");
+    drop(stream);
+
+    // Drive traffic until the engine pages. Burn is 100 from the first
+    // snapshot with traffic, so this converges within about the short
+    // page window (60 s / 144 ≈ 420 ms).
+    let slo = loop {
+        assert!(Instant::now() < deadline, "SLO engine never paged");
+        let (status, _) = request(addr, "GET", "/healthz", None);
+        assert_eq!(status, 200);
+        let (status, slo) = request(addr, "GET", "/v1/slo", None);
+        assert_eq!(status, 200, "{slo}");
+        assert_eq!(slo.get("enabled").and_then(Json::as_bool), Some(true));
+        if slo.get("status").and_then(Json::as_str) == Some("page") {
+            break slo;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    let objectives = slo.get("objectives").unwrap().as_arr().unwrap();
+    assert_eq!(objectives.len(), 1, "{slo}");
+    let obj = &objectives[0];
+    assert_eq!(obj.get("route").and_then(Json::as_str), Some("all"));
+    assert_eq!(obj.get("status").and_then(Json::as_str), Some("page"), "{slo}");
+    let burn = obj
+        .get("latency")
+        .and_then(|l| l.get("burn"))
+        .and_then(|b| b.get("page_long"))
+        .and_then(Json::as_f64)
+        .unwrap();
+    assert!(burn >= 14.4, "paging objective must clear the page burn: {slo}");
+
+    // /healthz carries the dashboard one-liner for the same state.
+    let (status, h) = request(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200);
+    let summary = h.get("slo").expect("healthz slo summary");
+    assert_eq!(summary.get("status").and_then(Json::as_str), Some("page"), "{h}");
+    let breaching = summary.get("breaching").unwrap().as_arr().unwrap();
+    assert!(breaching.iter().any(|r| r.as_str() == Some("all")), "{h}");
+    assert_eq!(summary.get("shedding").and_then(Json::as_bool), Some(true), "{h}");
+
+    // Shut down (flushing the journal) and recover the trace from disk —
+    // the lookup `containerstress obs grep --trace-id` performs.
+    server.shutdown();
+    let records = journal::read_records(&jdir).expect("read journal");
+    let kinds: Vec<&str> = records
+        .iter()
+        .filter_map(|r| r.get("kind").and_then(Json::as_str))
+        .collect();
+    assert!(kinds.contains(&"metrics"), "no metrics frames journaled");
+    assert!(kinds.contains(&"slo"), "no slo frames journaled");
+    let trace: Vec<&Json> = records
+        .iter()
+        .filter(|r| r.get("trace_id").and_then(Json::as_str) == Some(TRACE_ID))
+        .collect();
+    assert!(!trace.is_empty(), "journal lost the client trace");
+    let envelope = trace
+        .iter()
+        .find(|r| r.get("phase").and_then(Json::as_str) == Some("run"))
+        .expect("journal must hold the run envelope");
+    assert_eq!(envelope.get("parent_id").and_then(Json::as_str), Some(PARENT_SPAN));
+    assert_eq!(envelope.get("span_id").and_then(Json::as_str), Some(run_span_id.as_str()));
+    let _ = std::fs::remove_dir_all(&jdir);
 }
