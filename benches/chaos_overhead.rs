@@ -1,0 +1,157 @@
+//! **BENCH-chaos**: fault-injection overhead when no failpoint is armed.
+//!
+//! Failpoints sit on hot paths (every trial, every cache spill, every
+//! journal append), so the disarmed probe must be effectively free — one
+//! relaxed atomic load and a branch. Gates, enforced with asserts so CI
+//! catches regressions:
+//!
+//! 1. **Disarmed probe budget** — the measured cost of a disarmed
+//!    `hit()`, multiplied by a deliberately generous per-trial call
+//!    envelope (far more probes than any trial actually executes), must
+//!    stay under 1% of the median native trial. This bounds what the
+//!    chaos layer *can* add to an un-chaosed run, without asserting two
+//!    noisy end-to-end medians against each other.
+//! 2. **Armed-but-silent sanity** — a sweep with `executor.trial.run`
+//!    armed at rate 0 (the armed lookup runs on every trial, nothing ever
+//!    fires) stays within 5% of the disarmed twin: arming one point must
+//!    not change the economics of a clean run.
+//! 3. **Non-vacuity** — the same spec with rate 1 really injects (the
+//!    run fails classified), so gates 1–2 measure live machinery.
+//!
+//! Output: `results/BENCH_chaos.json` + `results/chaos_overhead.csv`.
+//! `CS_BENCH_QUICK=1` shortens the measuring windows but keeps every
+//! asserted point.
+
+use containerstress::bench::{black_box, figs, table, write_csv, Bencher, Measurement};
+use containerstress::coordinator::{run_sweep, Backend, SweepSpec};
+use containerstress::report;
+use containerstress::util::failpoint;
+use containerstress::util::json::Json;
+
+/// One surveillance-heavy cell, a few trials — the same hot-path shape the
+/// obs-overhead bench uses, so the two budgets are directly comparable.
+fn hotpath_spec(quick: bool) -> SweepSpec {
+    SweepSpec {
+        signals: vec![8],
+        memvecs: vec![32],
+        obs: vec![if quick { 1024 } else { 4096 }],
+        trials: 2,
+        seed: 11,
+        workers: 2,
+        ..SweepSpec::default()
+    }
+}
+
+/// Probes charged against one trial in the budget math. A real trial
+/// executes a handful (the trial hook, a couple of cache spills, a
+/// journal append); 64 is a ~10× envelope so the gate survives new
+/// failpoints without retuning.
+const PROBES_PER_TRIAL: f64 = 64.0;
+
+fn main() {
+    containerstress::util::logger::init();
+    let quick = figs::quick();
+    let b = if quick {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+
+    const MAX_DISARMED_FRACTION: f64 = 0.01; // of one trial, for PROBES_PER_TRIAL probes
+    const MAX_ARMED_SILENT_RATIO: f64 = 1.05; // armed-at-rate-0 / disarmed medians
+
+    let spec = hotpath_spec(quick);
+    failpoint::disarm_all();
+
+    // Non-vacuity: the machinery being costed really injects when told to.
+    failpoint::arm_from_str("executor.trial.run:1:error:3").expect("arm");
+    let err = run_sweep(&spec, Backend::Native).expect_err("rate-1 chaos must fail the run");
+    assert!(
+        failpoint::is_injected(&err),
+        "rate-1 failure must classify as injected: {err:#}"
+    );
+    failpoint::disarm_all();
+
+    // --- micro: the disarmed probe ---------------------------------------
+    let probe = b.run_with_units("hit_disarmed", 1.0, || {
+        black_box(failpoint::hit("executor.trial.run", black_box(1)).is_ok())
+    });
+
+    // --- end-to-end twins -------------------------------------------------
+    let disarmed = b.run("sweep_chaos_disarmed", || {
+        black_box(run_sweep(&spec, Backend::Native).expect("sweep"))
+    });
+    failpoint::arm_from_str("executor.trial.run:0:error:3").expect("arm rate 0");
+    let armed_silent = b.run("sweep_chaos_armed_rate0", || {
+        black_box(run_sweep(&spec, Backend::Native).expect("sweep"))
+    });
+    failpoint::disarm_all();
+
+    let trials = (spec.signals.len() * spec.memvecs.len() * spec.obs.len() * spec.trials) as f64;
+    let trial_s = disarmed.stats.median / trials;
+    let disarmed_fraction = probe.stats.median * PROBES_PER_TRIAL / trial_s;
+    let armed_ratio = armed_silent.stats.median / disarmed.stats.median;
+    println!(
+        "disarmed probe {:.1}ns; {PROBES_PER_TRIAL} probes = {:.5}% of a {:.4}s trial \
+         (budget {:.0}%)",
+        probe.stats.median * 1e9,
+        disarmed_fraction * 100.0,
+        trial_s,
+        MAX_DISARMED_FRACTION * 100.0
+    );
+    println!(
+        "armed-at-rate-0 sweep: {:.4}s vs disarmed {:.4}s → ratio {armed_ratio:.4} \
+         (ceiling {MAX_ARMED_SILENT_RATIO})",
+        armed_silent.stats.median, disarmed.stats.median
+    );
+    assert!(
+        disarmed_fraction <= MAX_DISARMED_FRACTION,
+        "disarmed failpoint probes cost {:.3}% of a trial (budget 1%)",
+        disarmed_fraction * 100.0
+    );
+    assert!(
+        armed_ratio <= MAX_ARMED_SILENT_RATIO,
+        "an armed-but-silent failpoint costs {:.1}% on the trial hot path (budget 5%)",
+        (armed_ratio - 1.0) * 100.0
+    );
+
+    // --- emit artifacts ---------------------------------------------------
+    let json = Json::obj(vec![
+        ("bench", Json::Str("chaos_overhead".into())),
+        ("quick", Json::Bool(quick)),
+        (
+            "sweep",
+            Json::obj(vec![
+                ("n", Json::Num(spec.signals[0] as f64)),
+                ("m", Json::Num(spec.memvecs[0] as f64)),
+                ("obs", Json::Num(spec.obs[0] as f64)),
+                ("trials", Json::Num(spec.trials as f64)),
+                ("disarmed_s", Json::Num(disarmed.stats.median)),
+                ("armed_rate0_s", Json::Num(armed_silent.stats.median)),
+            ]),
+        ),
+        (
+            "micro",
+            Json::obj(vec![
+                ("hit_disarmed_s", Json::Num(probe.stats.median)),
+                ("probes_per_trial", Json::Num(PROBES_PER_TRIAL)),
+                ("trial_s", Json::Num(trial_s)),
+            ]),
+        ),
+        (
+            "asserted",
+            Json::obj(vec![
+                ("max_disarmed_fraction", Json::Num(MAX_DISARMED_FRACTION)),
+                ("disarmed_fraction", Json::Num(disarmed_fraction)),
+                ("max_armed_silent_ratio", Json::Num(MAX_ARMED_SILENT_RATIO)),
+                ("armed_silent_ratio", Json::Num(armed_ratio)),
+            ]),
+        ),
+    ]);
+    let ms: Vec<Measurement> = vec![probe, disarmed, armed_silent];
+    let dir = std::path::Path::new("results");
+    report::write(dir, "BENCH_chaos.json", &json.to_pretty()).unwrap();
+    println!("{}", table(&ms));
+    write_csv("results/chaos_overhead.csv", &ms).unwrap();
+    println!("chaos_overhead done → results/BENCH_chaos.json, results/chaos_overhead.csv");
+}

@@ -35,6 +35,13 @@ pub struct Config {
     /// file's `"scenario"` object or a `--scenario file.json` flag;
     /// `None` makes `simulate` fall back to the built-in demo scenario.
     pub scenario: Option<ScenarioSpec>,
+    /// Deterministic fault injection: comma-separated
+    /// `point:rate:kind[:seed]` failpoint specs (see
+    /// [`crate::util::failpoint`]), from the config file's `"chaos"` key
+    /// or `--chaos`. The `CONTAINERSTRESS_CHAOS` env var takes
+    /// precedence when set. `None` leaves every failpoint disarmed
+    /// (the production default: one relaxed atomic load per hook).
+    pub chaos: Option<String>,
 }
 
 /// `containerstress serve` settings.
@@ -81,6 +88,18 @@ pub struct ServiceConfig {
     /// Cadence (ms) of periodic metric/SLO snapshot frames written to
     /// the journal.
     pub journal_snapshot_ms: u64,
+    /// Job write-ahead-log directory; `None` disables durable job
+    /// recovery. Submitted job specs are journalled (fsync-always)
+    /// before they run, so a crashed server can replay unfinished jobs
+    /// on restart with `--resume`.
+    pub wal_dir: Option<PathBuf>,
+    /// Replay unfinished WAL jobs at startup (requires `wal_dir`).
+    pub resume: bool,
+    /// Graceful-shutdown budget (ms): on SIGTERM the server stops
+    /// accepting connections and waits up to this long for in-flight
+    /// jobs before exiting (jobs still running stay pending in the WAL
+    /// and are replayed by the next `--resume` start).
+    pub drain_deadline_ms: u64,
 }
 
 impl Default for ServiceConfig {
@@ -102,6 +121,9 @@ impl Default for ServiceConfig {
             journal_max_total_bytes: crate::obs::journal::DEFAULT_MAX_TOTAL_BYTES,
             journal_fsync: FsyncPolicy::Never,
             journal_snapshot_ms: 5000,
+            wal_dir: None,
+            resume: false,
+            drain_deadline_ms: 5000,
         }
     }
 }
@@ -117,6 +139,36 @@ fn usize_list(j: &Json) -> Option<Vec<usize>> {
 /// Reject out-of-range ports instead of silently truncating to `u16`.
 fn port_u16(v: usize) -> anyhow::Result<u16> {
     u16::try_from(v).map_err(|_| anyhow::anyhow!("port must be 0..=65535, got {v}"))
+}
+
+/// Render a full [`SweepSpec`] as the same JSON schema
+/// [`sweep_spec_from_json`] reads — every overlay key is present, so
+/// `sweep_spec_from_json(any_base, &sweep_spec_to_json(&s))` reproduces
+/// `s` exactly regardless of the base. The job WAL depends on this
+/// round-trip for bit-identical replay after a crash.
+pub fn sweep_spec_to_json(s: &SweepSpec) -> Json {
+    Json::obj(vec![
+        (
+            "signals",
+            Json::arr_f64(&s.signals.iter().map(|&v| v as f64).collect::<Vec<_>>()),
+        ),
+        (
+            "memvecs",
+            Json::arr_f64(&s.memvecs.iter().map(|&v| v as f64).collect::<Vec<_>>()),
+        ),
+        (
+            "obs",
+            Json::arr_f64(&s.obs.iter().map(|&v| v as f64).collect::<Vec<_>>()),
+        ),
+        ("trials", Json::Num(s.trials as f64)),
+        ("seed", Json::Num(s.seed as f64)),
+        ("model", Json::Str(s.model.clone())),
+        ("workers", Json::Num(s.workers as f64)),
+        ("pilot_trials", Json::Num(s.pilot_trials as f64)),
+        ("ci_target", Json::Num(s.ci_target)),
+        ("max_trials", Json::Num(s.max_trials as f64)),
+        ("interpolate", Json::Bool(s.interpolate)),
+    ])
 }
 
 /// Overlay sweep keys from a JSON object onto `base` (missing keys keep the
@@ -200,6 +252,7 @@ impl Default for Config {
             sweep: SweepSpec::default(),
             service: ServiceConfig::default(),
             scenario: None,
+            chaos: None,
         }
     }
 }
@@ -246,6 +299,13 @@ impl Config {
             None => {}
             Some(Json::Null) => self.scenario = None,
             Some(s) => self.scenario = Some(ScenarioSpec::from_json(s)?),
+        }
+        match j.get("chaos") {
+            None => {}
+            Some(Json::Null) => self.chaos = None,
+            Some(Json::Str(v)) if v.is_empty() => self.chaos = None,
+            Some(Json::Str(v)) => self.chaos = Some(v.clone()),
+            Some(_) => anyhow::bail!("chaos must be a string or null"),
         }
         if let Some(s) = j.get("service") {
             // Same rule as the sweep section: a present-but-malformed key
@@ -354,6 +414,30 @@ impl Config {
                     v.as_usize().map(|n| n as u64).ok_or_else(|| {
                         anyhow::anyhow!(
                             "service.journal_snapshot_ms must be a non-negative integer"
+                        )
+                    })?;
+            }
+            match s.get("wal_dir") {
+                None => {}
+                Some(Json::Null) => self.service.wal_dir = None,
+                Some(Json::Str(v)) if v == "none" || v.is_empty() => {
+                    self.service.wal_dir = None
+                }
+                Some(Json::Str(v)) => self.service.wal_dir = Some(PathBuf::from(v)),
+                Some(_) => {
+                    anyhow::bail!("service.wal_dir must be a string or null")
+                }
+            }
+            if let Some(v) = s.get("resume") {
+                self.service.resume = v.as_bool().ok_or_else(|| {
+                    anyhow::anyhow!("service.resume must be a boolean")
+                })?;
+            }
+            if let Some(v) = s.get("drain_deadline_ms") {
+                self.service.drain_deadline_ms =
+                    v.as_usize().map(|n| n as u64).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "service.drain_deadline_ms must be a non-negative integer"
                         )
                     })?;
             }
@@ -472,6 +556,36 @@ impl Config {
             "journal-snapshot-ms",
             self.service.journal_snapshot_ms,
         )?;
+        if let Some(v) = args.get("wal-dir") {
+            self.service.wal_dir = if v == "none" || v.is_empty() {
+                None
+            } else {
+                Some(PathBuf::from(v))
+            };
+        }
+        // Accept both the bare `--resume` flag and the valued
+        // `--resume true|false` form (the parser binds a following
+        // non-flag token as a value, so both spellings occur).
+        if args.flag("resume") {
+            self.service.resume = true;
+        } else if let Some(v) = args.get("resume") {
+            self.service.resume = match v {
+                "true" | "yes" | "on" => true,
+                "false" | "no" | "off" => false,
+                _ => anyhow::bail!("--resume expects true|false, got '{v}'"),
+            };
+        }
+        self.service.drain_deadline_ms = args.get_u64(
+            "drain-deadline-ms",
+            self.service.drain_deadline_ms,
+        )?;
+        if let Some(v) = args.get("chaos") {
+            self.chaos = if v.is_empty() {
+                None
+            } else {
+                Some(v.to_string())
+            };
+        }
         if let Some(path) = args.get("scenario") {
             let text = std::fs::read_to_string(path)
                 .map_err(|e| anyhow::anyhow!("scenario {path}: {e}"))?;
@@ -548,6 +662,22 @@ impl Config {
             self.service.journal_snapshot_ms >= 1,
             "journal_snapshot_ms must be ≥ 1"
         );
+        anyhow::ensure!(
+            self.service.drain_deadline_ms >= 1,
+            "drain_deadline_ms must be ≥ 1"
+        );
+        anyhow::ensure!(
+            !self.service.resume || self.service.wal_dir.is_some(),
+            "--resume requires a WAL directory (--wal-dir)"
+        );
+        if let Some(chaos) = &self.chaos {
+            // Validate spec spelling and point names up front, so a typo'd
+            // chaos plan fails at config time instead of silently never
+            // injecting. Arming happens in main, after resolve.
+            for part in chaos.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+                crate::util::failpoint::FaultSpec::parse(part)?;
+            }
+        }
         if let Some(s) = &self.scenario {
             s.validate()?;
         }
@@ -566,40 +696,7 @@ impl Config {
                 Json::Str(self.output_dir.display().to_string()),
             ),
             ("backend", Json::Str(self.backend.clone())),
-            (
-                "sweep",
-                Json::obj(vec![
-                    (
-                        "signals",
-                        Json::arr_f64(
-                            &self.sweep.signals.iter().map(|&v| v as f64).collect::<Vec<_>>(),
-                        ),
-                    ),
-                    (
-                        "memvecs",
-                        Json::arr_f64(
-                            &self.sweep.memvecs.iter().map(|&v| v as f64).collect::<Vec<_>>(),
-                        ),
-                    ),
-                    (
-                        "obs",
-                        Json::arr_f64(
-                            &self.sweep.obs.iter().map(|&v| v as f64).collect::<Vec<_>>(),
-                        ),
-                    ),
-                    ("trials", Json::Num(self.sweep.trials as f64)),
-                    ("seed", Json::Num(self.sweep.seed as f64)),
-                    ("model", Json::Str(self.sweep.model.clone())),
-                    ("workers", Json::Num(self.sweep.workers as f64)),
-                    (
-                        "pilot_trials",
-                        Json::Num(self.sweep.pilot_trials as f64),
-                    ),
-                    ("ci_target", Json::Num(self.sweep.ci_target)),
-                    ("max_trials", Json::Num(self.sweep.max_trials as f64)),
-                    ("interpolate", Json::Bool(self.sweep.interpolate)),
-                ]),
-            ),
+            ("sweep", sweep_spec_to_json(&self.sweep)),
             (
                 "service",
                 Json::obj(vec![
@@ -652,6 +749,18 @@ impl Config {
                         "journal_snapshot_ms",
                         Json::Num(self.service.journal_snapshot_ms as f64),
                     ),
+                    (
+                        "wal_dir",
+                        match &self.service.wal_dir {
+                            Some(d) => Json::Str(d.display().to_string()),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("resume", Json::Bool(self.service.resume)),
+                    (
+                        "drain_deadline_ms",
+                        Json::Num(self.service.drain_deadline_ms as f64),
+                    ),
                 ]),
             ),
         ];
@@ -660,6 +769,9 @@ impl Config {
         }
         if let Some(s) = &self.scenario {
             fields.push(("scenario", s.to_json()));
+        }
+        if let Some(c) = &self.chaos {
+            fields.push(("chaos", Json::Str(c.clone())));
         }
         Json::obj(fields)
     }
@@ -964,6 +1076,112 @@ mod tests {
         )
         .unwrap();
         assert!(Config::from_file(path.to_str().unwrap()).is_err());
+    }
+
+    #[test]
+    fn fault_tolerance_knobs_from_flags_file_and_roundtrip() {
+        let mut cfg = Config::default();
+        assert_eq!(cfg.service.wal_dir, None);
+        assert!(!cfg.service.resume);
+        assert_eq!(cfg.service.drain_deadline_ms, 5000);
+        assert_eq!(cfg.chaos, None);
+        cfg.apply_args(&args(
+            "serve --wal-dir /tmp/cs-wal --resume --drain-deadline-ms 1200 \
+             --chaos journal.append:0.5:error:7 --backend native",
+        ))
+        .unwrap();
+        assert_eq!(
+            cfg.service.wal_dir.as_deref(),
+            Some(std::path::Path::new("/tmp/cs-wal"))
+        );
+        assert!(cfg.service.resume);
+        assert_eq!(cfg.service.drain_deadline_ms, 1200);
+        assert_eq!(cfg.chaos.as_deref(), Some("journal.append:0.5:error:7"));
+
+        // file roundtrip keeps every fault-tolerance knob
+        let path = std::env::temp_dir().join("cs_config_fault.json");
+        std::fs::write(&path, cfg.to_json().to_pretty()).unwrap();
+        let cfg2 = Config::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg2.service.wal_dir, cfg.service.wal_dir);
+        assert!(cfg2.service.resume);
+        assert_eq!(cfg2.service.drain_deadline_ms, 1200);
+        assert_eq!(cfg2.chaos, cfg.chaos);
+
+        // `--wal-dir none` / `--chaos ""` clear file-configured state
+        let mut cfg3 = Config::from_file(path.to_str().unwrap()).unwrap();
+        cfg3.service.resume = false; // resume without wal_dir must fail below
+        let clear = ["serve", "--wal-dir", "none", "--chaos", "", "--backend", "native"];
+        cfg3.apply_args(&Args::parse(clear.iter().map(|s| s.to_string())))
+            .unwrap();
+        assert_eq!(cfg3.service.wal_dir, None);
+        assert_eq!(cfg3.chaos, None);
+
+        // malformed knobs are errors, not silent defaults
+        let mut bad = Config::default();
+        let err = bad
+            .apply_args(&args("serve --resume --backend native"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("wal"), "{err}");
+        let mut bad = Config::default();
+        assert!(bad
+            .apply_args(&args("serve --chaos no.such.point:1:error"))
+            .is_err());
+        let mut bad = Config::default();
+        assert!(bad
+            .apply_args(&args("serve --chaos journal.append:2:error"))
+            .is_err());
+        let mut bad = Config::default();
+        assert!(bad
+            .apply_args(&args("serve --drain-deadline-ms 0"))
+            .is_err());
+        std::fs::write(&path, r#"{"backend": "native", "chaos": 7}"#).unwrap();
+        assert!(Config::from_file(path.to_str().unwrap()).is_err());
+        std::fs::write(
+            &path,
+            r#"{"backend": "native", "service": {"resume": "yes"}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_file(path.to_str().unwrap()).is_err());
+    }
+
+    #[test]
+    fn sweep_spec_json_roundtrip_is_exact_over_any_base() {
+        let spec = SweepSpec {
+            signals: vec![3, 9],
+            memvecs: vec![8, 24],
+            obs: vec![64],
+            trials: 4,
+            seed: 1234567,
+            model: "ridge".into(),
+            workers: 3,
+            pilot_trials: 2,
+            ci_target: 0.15,
+            max_trials: 9,
+            interpolate: false,
+            ..SweepSpec::default()
+        };
+        let j = sweep_spec_to_json(&spec);
+        // Overlaying the rendered JSON on a *different* base reproduces
+        // the original spec exactly — the WAL replay path depends on it.
+        let weird_base = SweepSpec {
+            signals: vec![99],
+            trials: 1,
+            model: "mset2".into(),
+            ..SweepSpec::default()
+        };
+        let back = sweep_spec_from_json(&weird_base, &j).unwrap();
+        assert_eq!(back.signals, spec.signals);
+        assert_eq!(back.memvecs, spec.memvecs);
+        assert_eq!(back.obs, spec.obs);
+        assert_eq!(back.trials, spec.trials);
+        assert_eq!(back.seed, spec.seed);
+        assert_eq!(back.model, spec.model);
+        assert_eq!(back.workers, spec.workers);
+        assert_eq!(back.pilot_trials, spec.pilot_trials);
+        assert_eq!(back.ci_target, spec.ci_target);
+        assert_eq!(back.max_trials, spec.max_trials);
+        assert_eq!(back.interpolate, spec.interpolate);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use super::sweep::{
     run_sweep_executor, Backend, Cancelled, CellStore, ProgressSnapshot, SweepProgress,
     SweepResult, SweepSpec,
 };
+use super::wal::JobWal;
 use crate::metrics::Registry;
 use crate::obs::{self, EventBus, FlightRecorder};
 use crate::scenario::fleet::{
@@ -104,6 +105,10 @@ pub struct ScopingService {
     drivers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     /// Max queued+running jobs before submits are rejected (backpressure).
     queue_cap: usize,
+    /// Optional job write-ahead log: submissions are journalled before
+    /// their drivers start, terminal states when they end, so a crashed
+    /// process's unfinished jobs can be replayed (see [`super::wal`]).
+    wal: Mutex<Option<Arc<JobWal>>>,
 }
 
 impl ScopingService {
@@ -154,7 +159,20 @@ impl ScopingService {
             next_id: Mutex::new(1),
             drivers: Mutex::new(Vec::new()),
             queue_cap: queue_cap.max(1),
+            wal: Mutex::new(None),
         }
+    }
+
+    /// Attach a job write-ahead log. Submissions from here on are
+    /// journalled durably before their drivers start; jobs already in
+    /// flight are unaffected.
+    pub fn set_wal(&self, wal: Arc<JobWal>) {
+        *self.wal.lock().unwrap() = Some(wal);
+    }
+
+    /// The attached WAL, if any.
+    pub fn wal(&self) -> Option<Arc<JobWal>> {
+        self.wal.lock().unwrap().clone()
     }
 
     /// Submit a sweep with an equal fair share; returns its job id, or an
@@ -182,17 +200,58 @@ impl ScopingService {
         weight: f64,
         ctx: Option<obs::TraceContext>,
     ) -> anyhow::Result<JobId> {
+        self.submit_traced_durable(spec, weight, ctx, None)
+    }
+
+    /// [`ScopingService::submit_traced`] with an opaque `extra` JSON value
+    /// journalled alongside the spec in the WAL submit record (the HTTP
+    /// layer stores the request's workload/SLA context there, so a resumed
+    /// job's recommendation endpoint works like the original's). A no-op
+    /// without an attached WAL.
+    pub fn submit_traced_durable(
+        &self,
+        spec: SweepSpec,
+        weight: f64,
+        ctx: Option<obs::TraceContext>,
+        extra: Option<Json>,
+    ) -> anyhow::Result<JobId> {
+        let wal_entry = self.wal().map(|w| {
+            let mut payload = vec![
+                ("spec", crate::config::sweep_spec_to_json(&spec)),
+                ("weight", Json::Num(weight)),
+            ];
+            if let Some(extra) = &extra {
+                payload.push(("extra", extra.clone()));
+            }
+            let id = w.log_submit("sweep", Json::obj(payload));
+            (w, id)
+        });
         let backend = self.backend.clone();
         let cache = self.cache.clone();
-        self.spawn_driver(weight, None, ctx, move |ticket, progress| {
-            let result =
-                run_sweep_executor(&spec, backend, cache.as_deref(), &ticket, &progress);
-            match result {
-                Ok(r) => JobStatus::Done(Arc::new(r)),
-                Err(e) if e.is::<Cancelled>() => JobStatus::Cancelled,
-                Err(e) => JobStatus::Failed(e.to_string()),
+        let result = self.spawn_driver(
+            weight,
+            None,
+            ctx,
+            wal_entry.clone(),
+            move |ticket, progress| {
+                let result =
+                    run_sweep_executor(&spec, backend, cache.as_deref(), &ticket, &progress);
+                match result {
+                    Ok(r) => JobStatus::Done(Arc::new(r)),
+                    Err(e) if e.is::<Cancelled>() => JobStatus::Cancelled,
+                    Err(e) => JobStatus::Failed(e.to_string()),
+                }
+            },
+        );
+        if result.is_err() {
+            // The submit was journalled but the job never got a slot; a
+            // dangling submit record would replay a job the client was
+            // told was rejected.
+            if let Some((w, id)) = &wal_entry {
+                w.log_terminal(*id, "rejected");
             }
-        })
+        }
+        result
     }
 
     /// Submit a fleet scenario replay with an equal fair share; it runs
@@ -243,11 +302,28 @@ impl ScopingService {
             scenario.workload.is_none() || sweep.is_some(),
             "workload-mode scenario needs a sweep spec to fit its oracle"
         );
+        let wal_entry = self.wal().map(|w| {
+            let id = w.log_submit(
+                "scenario",
+                Json::obj(vec![
+                    ("scenario", scenario.to_json()),
+                    (
+                        "sweep",
+                        match &sweep {
+                            Some(s) => crate::config::sweep_spec_to_json(s),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("weight", Json::Num(weight)),
+                ]),
+            );
+            (w, id)
+        });
         let backend = self.backend.clone();
         let cache = self.cache.clone();
         let scen_progress = Arc::new(ScenarioProgress::default());
         let scen = Arc::clone(&scen_progress);
-        self.spawn_driver(weight, Some(scen_progress), ctx, move |ticket, sweep_progress| {
+        let result = self.spawn_driver(weight, Some(scen_progress), ctx, wal_entry.clone(), move |ticket, sweep_progress| {
             let run = || -> anyhow::Result<ScenarioOutcome> {
                 let oracle = match (&scenario.workload, &sweep) {
                     (Some(_), Some(spec)) => {
@@ -275,7 +351,13 @@ impl ScopingService {
                 Err(e) if e.is::<Cancelled>() => JobStatus::Cancelled,
                 Err(e) => JobStatus::Failed(e.to_string()),
             }
-        })
+        });
+        if result.is_err() {
+            if let Some((w, id)) = &wal_entry {
+                w.log_terminal(*id, "rejected");
+            }
+        }
+        result
     }
 
     /// Shared driver machinery behind both job kinds: reserve a slot
@@ -287,6 +369,7 @@ impl ScopingService {
         weight: f64,
         scenario: Option<Arc<ScenarioProgress>>,
         ctx: Option<obs::TraceContext>,
+        wal_entry: Option<(Arc<JobWal>, u64)>,
         work: F,
     ) -> anyhow::Result<JobId>
     where
@@ -407,6 +490,11 @@ impl ScopingService {
                     JobStatus::Failed(e) => ("failed", Some(e.clone())),
                     JobStatus::Queued | JobStatus::Running => ("running", None),
                 };
+                // Retire the WAL entry: after this record is durable the
+                // job will not replay on a `--resume` restart.
+                if let Some((w, wal_id)) = &wal_entry {
+                    w.log_terminal(*wal_id, state);
+                }
                 let p = progress.snapshot();
                 let mut fields = vec![
                     ("event", Json::Str("summary".to_string())),
@@ -909,6 +997,58 @@ mod tests {
         );
         svc.wait(large).unwrap();
         svc.shutdown();
+    }
+
+    #[test]
+    fn wal_records_submits_and_retires_terminals() {
+        let dir = std::env::temp_dir().join(format!("cs_jobs_wal_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let wal = Arc::new(super::super::wal::JobWal::open(&dir).unwrap());
+        let svc = ScopingService::start(Backend::Native, 8);
+        svc.set_wal(Arc::clone(&wal));
+        // While the job runs its submit record is pending, and the
+        // journalled payload round-trips the full spec.
+        let id = svc.submit(slow_spec()).unwrap();
+        let p = wal.pending().unwrap();
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].kind, "sweep");
+        let spec_json = p[0].payload.get("spec").expect("spec journalled");
+        let back =
+            crate::config::sweep_spec_from_json(&SweepSpec::default(), spec_json).unwrap();
+        assert_eq!(back.obs, vec![4096]);
+        assert_eq!(back.seed, 2);
+        assert_eq!(
+            p[0].payload.get("weight").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        svc.wait(id).unwrap();
+        // The driver retires the entry just before the terminal summary
+        // event; give the record a moment to land.
+        let t0 = Instant::now();
+        while !wal.pending().unwrap().is_empty() {
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(10),
+                "WAL entry never retired after job completion"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        // A backpressure rejection retires its own submit record too — a
+        // dangling one would replay a job the client saw rejected.
+        let svc2 = ScopingService::start(Backend::Native, 1);
+        svc2.set_wal(Arc::clone(&wal));
+        let a = svc2.submit(slow_spec()).unwrap();
+        assert!(svc2.submit(slow_spec()).is_err());
+        svc2.wait(a).unwrap();
+        let t0 = Instant::now();
+        while !wal.pending().unwrap().is_empty() {
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(10),
+                "rejected submit left a pending WAL entry"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        svc.shutdown();
+        svc2.shutdown();
     }
 
     fn tiny_scenario() -> ScenarioSpec {

@@ -14,11 +14,15 @@
 //! - [`jobs`]    — the multi-job service front over the shared
 //!   [`crate::util::threadpool::TrialExecutor`] (fair scheduling, live
 //!   progress, cancellation); carries both sweep jobs and
-//!   [`crate::scenario`] fleet-replay jobs.
+//!   [`crate::scenario`] fleet-replay jobs;
+//! - [`wal`]     — durable job recovery: submissions are journalled
+//!   (write-ahead, fsync-always) so a crashed server replays unfinished
+//!   jobs on a `--resume` restart.
 
 pub mod jobs;
 pub mod planner;
 pub mod sweep;
+pub mod wal;
 
 pub use sweep::{
     run_sweep, run_sweep_cached, run_sweep_executor, Backend, Cancelled, CellCosts, CellKey,

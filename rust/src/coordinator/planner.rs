@@ -34,8 +34,8 @@
 //! can finish on an exhaustive run's stored cells and vice versa.
 
 use super::sweep::{
-    gap_measure, grid_keys, submit_trial, Backend, Cancelled, CellCosts, CellKey, CellMeasure,
-    CellStore, SweepProgress, SweepResult, SweepSpec, TrialCost,
+    failed_measure, gap_measure, grid_keys, submit_trial, Backend, Cancelled, CellCosts, CellKey,
+    CellMeasure, CellStore, SweepProgress, SweepResult, SweepSpec, TrialCost,
 };
 use crate::metrics::Registry;
 use crate::surface::{ResponseSurface, Sample};
@@ -135,6 +135,9 @@ struct CellState {
     buffer: HashMap<usize, TrialCost>,
     /// Scheduled trials whose results have not arrived yet.
     in_flight: usize,
+    /// A trial exhausted its retries: the cell is quarantined once its
+    /// in-flight trials drain (see [`CellMeasure::failed`]).
+    failed: bool,
 }
 
 impl CellState {
@@ -174,6 +177,30 @@ fn retire(
     }
     progress.cells_done.fetch_add(1, Ordering::SeqCst);
     progress.emit_cell(s.key, if s.interpolated { "interpolated" } else { "measured" });
+}
+
+/// Quarantine a cell whose trial exhausted its retries: keep (and store)
+/// the contiguous finished prefix, stop scheduling it, and let the sweep
+/// finish without it — mirrors the exhaustive engine's poison-cell path.
+fn retire_failed(
+    s: &mut CellState,
+    spec: &SweepSpec,
+    backend: &Backend,
+    cache: Option<&dyn CellStore>,
+    progress: &Arc<SweepProgress>,
+) {
+    debug_assert!(!s.retired, "cell retired twice");
+    s.retired = true;
+    if s.trials() > s.cached_trials {
+        if let Some(c) = cache {
+            // `costs` is contiguous by construction (out-of-order results
+            // wait in `buffer`), so the stored entry keeps the prefix
+            // property a resumed or fault-free rerun relies on.
+            c.store(s.key, spec, backend.tag(), s.costs.clone());
+        }
+    }
+    progress.cells_done.fetch_add(1, Ordering::SeqCst);
+    progress.emit_cell(s.key, "failed");
 }
 
 /// Submit trials `scheduled..goal` of cell `i` to the executor; returns
@@ -246,7 +273,15 @@ fn on_ready(
 /// `ci_target`. Returns the number of cells pruned. No-ops when fewer than
 /// 10 cells are measurable or either fit is below [`PRUNE_MIN_R2`].
 fn prune_by_surface(states: &mut [CellState], ci_target: f64) -> usize {
-    if states.len() < 10 {
+    // Quarantined (or still-empty) cells carry no usable medians; fit and
+    // prune over the healthy cells only.
+    let eligible: Vec<usize> = states
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| !s.failed && !s.costs.train_s.is_empty())
+        .map(|(i, _)| i)
+        .collect();
+    if eligible.len() < 10 {
         return 0;
     }
     let sample = |s: &CellState, cost: f64| Sample {
@@ -255,13 +290,13 @@ fn prune_by_surface(states: &mut [CellState], ci_target: f64) -> usize {
         n_obs: s.key.obs,
         cost: cost.max(1e-9),
     };
-    let train: Vec<Sample> = states
+    let train: Vec<Sample> = eligible
         .iter()
-        .map(|s| sample(s, Summary::of(&s.costs.train_s).median))
+        .map(|&i| sample(&states[i], Summary::of(&states[i].costs.train_s).median))
         .collect();
-    let surveil: Vec<Sample> = states
+    let surveil: Vec<Sample> = eligible
         .iter()
-        .map(|s| sample(s, Summary::of(&s.costs.surveil_s).median))
+        .map(|&i| sample(&states[i], Summary::of(&states[i].costs.surveil_s).median))
         .collect();
     let (ts, ss) = match (ResponseSurface::fit(&train), ResponseSurface::fit(&surveil)) {
         (Ok(a), Ok(b)) => (a, b),
@@ -276,14 +311,15 @@ fn prune_by_surface(states: &mut [CellState], ci_target: f64) -> usize {
         return 0;
     }
     let mut pruned = 0usize;
-    for (i, s) in states.iter_mut().enumerate() {
+    for (j, &i) in eligible.iter().enumerate() {
+        let s = &mut states[i];
         if s.retired || s.interpolated || converged(&s.costs, ci_target) {
             continue;
         }
-        // `train`/`surveil` were built in `states` order — reuse their
+        // `train`/`surveil` were built in `eligible` order — reuse their
         // medians instead of re-sorting both phases per cell.
-        let med_t = train[i].cost;
-        let med_s = surveil[i].cost;
+        let med_t = train[j].cost;
+        let med_s = surveil[j].cost;
         let pred_t = ts.predict(s.key.n, s.key.m, s.key.obs);
         let pred_s = ss.predict(s.key.n, s.key.m, s.key.obs);
         let within = |pred: f64, med: f64| med > 0.0 && ((pred - med) / med).abs() <= ci_target;
@@ -345,6 +381,7 @@ pub(crate) fn run_adaptive(
             scheduled: cached_trials,
             buffer: HashMap::new(),
             in_flight: 0,
+            failed: false,
         });
     }
     progress.cells_done.fetch_add(gaps, Ordering::SeqCst);
@@ -362,6 +399,9 @@ pub(crate) fn run_adaptive(
     let mut first_err: Option<anyhow::Error> = None;
     let mut dispatches = 0usize;
     let mut starved_rounds = 0usize;
+    // Set when the planner itself cancels on a fatal invariant violation
+    // (lost results); distinguishes that from an operator cancellation.
+    let mut fatal = false;
 
     // The job driver thread runs this loop, so the job's flight recorder
     // (if any) is in the thread-local; planner phases record driver-side
@@ -504,35 +544,60 @@ pub(crate) fn run_adaptive(
                             s.in_flight == 0
                         };
                         if ready {
-                            on_ready(
-                                &mut states, i, spec, target, max, prune_done, &mut heap,
-                                &mut parked, &backend, cache, progress,
-                            );
+                            if states[i].failed {
+                                // A sibling trial already poisoned this
+                                // cell; quarantine it now that its last
+                                // in-flight result has landed.
+                                if states[i].trials() < pilot {
+                                    pilot_gap -= 1;
+                                }
+                                retire_failed(&mut states[i], spec, &backend, cache, progress);
+                            } else {
+                                on_ready(
+                                    &mut states, i, spec, target, max, prune_done, &mut heap,
+                                    &mut parked, &backend, cache, progress,
+                                );
+                            }
                         }
                     }
                     Err(e) => {
-                        if first_err.is_none() {
-                            first_err =
-                                Some(anyhow::anyhow!("cell {:?}: {e}", states[i].key));
-                            // Reclaim queued tasks; in-flight trials finish
-                            // and are drained below.
-                            cancel.cancel();
+                        // Retries exhausted (see `submit_trial`): quarantine
+                        // the cell, keep the sweep going. The job only
+                        // errors if every measurable cell ends up failed.
+                        let ready = {
+                            let s = &mut states[i];
+                            s.in_flight = s.in_flight.saturating_sub(1);
+                            s.failed = true;
+                            if first_err.is_none() {
+                                first_err =
+                                    Some(anyhow::anyhow!("cell {:?}: {e:#}", s.key));
+                            }
+                            s.in_flight == 0
+                        };
+                        if ready {
+                            if states[i].trials() < pilot {
+                                pilot_gap -= 1;
+                            }
+                            retire_failed(&mut states[i], spec, &backend, cache, progress);
                         }
                     }
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                // A task that panicked was consumed without reporting. If
-                // the executor has nothing queued or running for this job
-                // across two silent timeouts (one guards against a result
-                // racing the first check), the outstanding count can never
-                // drain — fail the job instead of spinning forever.
+                // Task panics are contained and retried inside the task,
+                // so a silently-consumed result should be impossible — but
+                // keep the backstop: if the executor has nothing queued or
+                // running for this job across two silent timeouts (one
+                // guards against a result racing the first check), the
+                // outstanding count can never drain — fail the job instead
+                // of spinning forever.
                 if outstanding > 0 && ticket.pending() == (0, 0) {
                     starved_rounds += 1;
-                    if starved_rounds >= 2 && first_err.is_none() {
+                    if starved_rounds >= 2 {
                         first_err = Some(anyhow::anyhow!(
-                            "{outstanding} trial results lost (task panicked?)"
+                            "{outstanding} trial results lost (task reclaimed without cancel?)"
                         ));
+                        fatal = true;
                         cancel.cancel();
                         break;
                     }
@@ -567,8 +632,9 @@ pub(crate) fn run_adaptive(
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        if let Some(e) = first_err {
-            return Err(e);
+        if fatal {
+            return Err(first_err
+                .unwrap_or_else(|| anyhow::anyhow!("planner failed without a recorded cause")));
         }
         let mut flushed = 0usize;
         for s in states.iter_mut().filter(|s| !s.retired) {
@@ -593,18 +659,39 @@ pub(crate) fn run_adaptive(
             continue;
         }
         let s = by_key.get(&key).expect("planner state for measurable cell");
+        debug_assert!(s.retired, "unretired cell at assembly");
+        if s.failed {
+            // Quarantined: carries whatever contiguous prefix succeeded.
+            cells.push(failed_measure(key, &s.costs));
+            continue;
+        }
         anyhow::ensure!(
             !s.costs.train_s.is_empty(),
             "no trials completed for {key:?}"
         );
-        debug_assert!(s.retired, "unretired cell at assembly");
         cells.push(CellMeasure {
             key,
             train: Some(Summary::of(&s.costs.train_s)),
             surveil: Some(Summary::of(&s.costs.surveil_s)),
             violated: false,
             interpolated: s.interpolated,
+            failed: false,
         });
+    }
+    // Quarantine keeps partial results useful; a sweep where *every*
+    // measurable cell failed is still a job error.
+    let measurable = cells.iter().filter(|c| !c.violated).count();
+    let failed_n = cells.iter().filter(|c| c.failed).count();
+    if measurable > 0 && failed_n == measurable {
+        let cause = first_err
+            .take()
+            .unwrap_or_else(|| anyhow::anyhow!("unknown trial failure"));
+        return Err(cause.context(format!(
+            "sweep failed: all {measurable} measurable cells quarantined after trial retries"
+        )));
+    }
+    if failed_n > 0 {
+        log::warn!("planner finished with {failed_n}/{measurable} cells quarantined");
     }
     Ok(SweepResult {
         spec: spec.clone(),
@@ -738,6 +825,44 @@ mod tests {
                 "cell {:?} re-measured despite warm cache",
                 ca.key
             );
+            assert_eq!(
+                ca.train.as_ref().unwrap().median,
+                cb.train.as_ref().unwrap().median
+            );
+        }
+    }
+
+    #[test]
+    fn planner_reports_all_cells_quarantined_as_classified_error() {
+        use crate::util::failpoint;
+        let _g = failpoint::test_guard();
+        failpoint::disarm_all();
+        failpoint::arm_from_str("executor.trial.run:1:error:4").unwrap();
+        let err = run_sweep_cached(&adaptive_spec(), Backend::Native, None).unwrap_err();
+        failpoint::disarm_all();
+        assert!(
+            failpoint::is_injected(&err),
+            "error must classify as injected: {err:#}"
+        );
+        assert!(format!("{err:#}").contains("quarantined"), "{err:#}");
+    }
+
+    #[test]
+    fn warm_cache_makes_adaptive_run_immune_to_trial_faults() {
+        use crate::util::failpoint;
+        let _g = failpoint::test_guard();
+        failpoint::disarm_all();
+        let cache = SweepCache::in_memory();
+        let spec = adaptive_spec();
+        let a = run_sweep_cached(&spec, Backend::Native, Some(&cache)).unwrap();
+        // Every trial would fail — but a warm cache schedules none, so the
+        // run completes bit-identically to the fault-free one.
+        failpoint::arm_from_str("executor.trial.run:1:error:4").unwrap();
+        let b = run_sweep_cached(&spec, Backend::Native, Some(&cache)).unwrap();
+        failpoint::disarm_all();
+        assert!(b.failed_cells().is_empty());
+        for (ca, cb) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(ca.key, cb.key);
             assert_eq!(
                 ca.train.as_ref().unwrap().median,
                 cb.train.as_ref().unwrap().median

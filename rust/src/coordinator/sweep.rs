@@ -362,6 +362,12 @@ pub struct CellMeasure {
     /// the pilot when pruned. Always `false` in exhaustive mode; see
     /// [`crate::coordinator::planner`].
     pub interpolated: bool,
+    /// The cell exhausted its trial retries and was **quarantined**: the
+    /// sweep kept going and this entry carries whatever contiguous trial
+    /// prefix succeeded (possibly none). Failed cells are excluded from
+    /// surface fits, panels, and recommendations; a job only errors when
+    /// *every* measurable cell fails.
+    pub failed: bool,
 }
 
 /// Complete sweep output.
@@ -550,6 +556,9 @@ struct CellAcc {
     fresh: Vec<Option<TrialCost>>,
     /// Fresh results still outstanding.
     remaining: usize,
+    /// At least one trial exhausted its retries: the cell will retire
+    /// quarantined (see [`CellMeasure::failed`]).
+    failed: bool,
 }
 
 fn measure_of(key: CellKey, costs: &CellCosts) -> CellMeasure {
@@ -559,6 +568,21 @@ fn measure_of(key: CellKey, costs: &CellCosts) -> CellMeasure {
         surveil: Some(Summary::of(&costs.surveil_s)),
         violated: false,
         interpolated: false,
+        failed: false,
+    }
+}
+
+/// Quarantined-cell measure: summaries over whatever contiguous trial
+/// prefix survived (absent when nothing did).
+pub(crate) fn failed_measure(key: CellKey, costs: &CellCosts) -> CellMeasure {
+    Registry::global().inc("sweep.failed_cells");
+    CellMeasure {
+        key,
+        train: (!costs.train_s.is_empty()).then(|| Summary::of(&costs.train_s)),
+        surveil: (!costs.surveil_s.is_empty()).then(|| Summary::of(&costs.surveil_s)),
+        violated: false,
+        interpolated: false,
+        failed: true,
     }
 }
 
@@ -570,6 +594,77 @@ pub(crate) fn gap_measure(key: CellKey) -> CellMeasure {
         surveil: None,
         violated: true,
         interpolated: false,
+        failed: false,
+    }
+}
+
+/// Trial retry budget: a failing or panicking trial is re-attempted this
+/// many times before the engine gives up on it and quarantines the cell.
+pub(crate) const TRIAL_MAX_RETRIES: u64 = 2;
+
+/// Render a caught panic payload (the common `&str`/`String` cases).
+pub(crate) fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// One guarded trial attempt: the `executor.trial.run` failpoint, then the
+/// real measurement, with panics contained and converted to errors — a
+/// poisoned trial must cost the job one retry, not the whole sweep (the
+/// executor's `worker_loop` only logs escaped panics, permanently losing
+/// the in-flight trial's result slot).
+fn attempt_trial(
+    backend: &Backend,
+    model: &str,
+    key: CellKey,
+    seed: u64,
+    attempt: u64,
+) -> anyhow::Result<TrialCost> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        crate::util::failpoint::hit("executor.trial.run", seed.wrapping_add(attempt))?;
+        run_trial(backend, model, key, seed)
+    }))
+    .unwrap_or_else(|p| Err(anyhow::anyhow!("trial task panicked: {}", panic_text(&*p))))
+}
+
+/// Run a trial with bounded retries and deterministic backoff + jitter.
+/// The backoff schedule derives from the trial seed, so chaos runs replay
+/// identically; delays are milliseconds — retries are for transient faults
+/// (an injected fault, a panicked model, a blip), not capacity waits.
+fn run_trial_with_retries(
+    backend: &Backend,
+    model: &str,
+    key: CellKey,
+    seed: u64,
+    cancel: &CancelToken,
+) -> anyhow::Result<TrialCost> {
+    let mut attempt: u64 = 0;
+    loop {
+        match attempt_trial(backend, model, key, seed, attempt) {
+            Ok(c) => return Ok(c),
+            Err(e) => {
+                if attempt >= TRIAL_MAX_RETRIES || cancel.is_cancelled() {
+                    Registry::global().inc("executor.trial.failed");
+                    log::warn!(
+                        "trial {}/{}/{} seed {seed:#x} failed after {attempt} retries: {e:#}",
+                        key.n,
+                        key.m,
+                        key.obs
+                    );
+                    return Err(e);
+                }
+                attempt += 1;
+                Registry::global().inc("executor.trial.retries");
+                let base_ms = 1u64 << (attempt - 1).min(4);
+                let jitter_ms = Rng::new(seed ^ attempt.rotate_left(13)).below(base_ms + 1);
+                std::thread::sleep(Duration::from_millis(base_ms + jitter_ms));
+            }
+        }
     }
 }
 
@@ -577,7 +672,9 @@ pub(crate) fn gap_measure(key: CellKey) -> CellMeasure {
 /// result lands on `tx` tagged `(slot, t)` — a task reclaimed by a
 /// cancellation simply drops its sender without reporting. Shared by the
 /// exhaustive engine and the adaptive planner so both schedule trials
-/// identically.
+/// identically. An `Err` result means the trial exhausted
+/// [`TRIAL_MAX_RETRIES`] — the engines quarantine the owning cell rather
+/// than failing the job.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn submit_trial(
     ticket: &JobTicket,
@@ -609,7 +706,7 @@ pub(crate) fn submit_trial(
         }
         let started = Instant::now();
         let queue_wait = started.saturating_duration_since(enqueued);
-        let r = run_trial(&backend, &model, key, seed);
+        let r = run_trial_with_retries(&backend, &model, key, seed, &cancel);
         // The native numeric pipeline runs on this worker's thread-local
         // kernel workspace (zero steady-state allocations); keep the
         // arena warm for the next trial but bound what a huge cell can
@@ -698,6 +795,7 @@ fn run_exhaustive_streaming(
                 cached: have,
                 fresh: vec![None; fresh_n],
                 remaining: fresh_n,
+                failed: false,
             },
         );
     }
@@ -730,39 +828,55 @@ fn run_exhaustive_streaming(
                       cells: &mut Vec<Option<CellMeasure>>,
                       (i, t, r): (usize, usize, anyhow::Result<TrialCost>)| {
         let acc = accs.get_mut(&i).expect("result for unknown cell");
+        let slot = t - acc.cached;
         match r {
             Ok(c) => {
-                let slot = t - acc.cached;
                 if acc.fresh[slot].is_none() {
                     acc.remaining -= 1;
                 }
                 acc.fresh[slot] = Some(c);
-                if acc.remaining == 0 {
-                    // Retire this cell now — no waiting on the rest of the
-                    // grid. Fresh trials append in trial-index order, so the
-                    // merged vectors stay aligned with the deterministic
-                    // trial-seed sequence.
-                    let mut acc = accs.remove(&i).expect("accumulator present");
-                    for c in acc.fresh.iter().map(|c| c.expect("all fresh present")) {
+            }
+            Err(e) => {
+                // The trial exhausted its retries (see `submit_trial`):
+                // quarantine the cell but keep the sweep going — one
+                // poisoned cell must not fail the other cells' work. The
+                // slot stays empty; each task reports exactly once, so
+                // the outstanding count still converges.
+                acc.failed = true;
+                acc.remaining -= 1;
+                if first_err.is_none() {
+                    first_err = Some(anyhow::anyhow!("cell {:?}: {e:#}", acc.key));
+                }
+            }
+        }
+        if acc.remaining == 0 {
+            // Retire this cell now — no waiting on the rest of the grid.
+            // Fresh trials append in trial-index order, so the merged
+            // vectors stay aligned with the deterministic trial-seed
+            // sequence; a quarantined cell keeps only its contiguous
+            // finished prefix (the only reusable part).
+            let mut acc = accs.remove(&i).expect("accumulator present");
+            for c in &acc.fresh {
+                match c {
+                    Some(c) => {
                         acc.costs.train_s.push(c.train_s);
                         acc.costs.surveil_s.push(c.surveil_s);
                     }
-                    if let Some(store) = cache {
-                        store.store(acc.key, spec, backend.tag(), acc.costs.clone());
-                    }
-                    cells[i] = Some(measure_of(acc.key, &acc.costs));
-                    progress.cells_done.fetch_add(1, Ordering::SeqCst);
-                    progress.emit_cell(acc.key, "measured");
+                    None => break, // hole from a failed trial
                 }
             }
-            Err(e) => {
-                if first_err.is_none() {
-                    first_err = Some(anyhow::anyhow!("cell {:?}: {e}", acc.key));
-                    // Reclaim this job's queued tasks; in-flight trials
-                    // finish and are drained below.
-                    cancel.cancel();
+            if acc.costs.train_s.len() > acc.cached || !acc.failed {
+                if let Some(store) = cache {
+                    store.store(acc.key, spec, backend.tag(), acc.costs.clone());
                 }
             }
+            cells[i] = Some(if acc.failed {
+                failed_measure(acc.key, &acc.costs)
+            } else {
+                measure_of(acc.key, &acc.costs)
+            });
+            progress.cells_done.fetch_add(1, Ordering::SeqCst);
+            progress.emit_cell(acc.key, if acc.failed { "failed" } else { "measured" });
         }
     };
     loop {
@@ -783,9 +897,6 @@ fn run_exhaustive_streaming(
         }
     }
 
-    if let Some(e) = first_err {
-        return Err(e);
-    }
     if cancel.is_cancelled() {
         // Flush the contiguous finished prefix of every partial cell so a
         // resubmitted request reuses the work the cancellation stranded.
@@ -811,14 +922,30 @@ fn run_exhaustive_streaming(
         return Err(Cancelled.into());
     }
     // Every sender is gone and nothing was cancelled, so every cell must
-    // have retired — unless a task panicked and its result was lost, which
-    // is a job failure, not a panic in the driver.
+    // have retired — trial panics are contained and retried inside the
+    // task, so a missing cell here is an engine invariant violation, not
+    // an expected failure mode.
     let mut out = Vec::with_capacity(cells.len());
     for c in cells {
         match c {
             Some(m) => out.push(m),
-            None => anyhow::bail!("sweep lost trial results (task panicked?)"),
+            None => anyhow::bail!("sweep lost trial results (task reclaimed without cancel?)"),
         }
+    }
+    // Quarantine keeps a sweep useful through partial failures, but a run
+    // where *nothing* measured is an error the caller must see.
+    let measurable = out.iter().filter(|c| !c.violated).count();
+    let failed = out.iter().filter(|c| c.failed).count();
+    if measurable > 0 && failed == measurable {
+        let cause = first_err
+            .take()
+            .unwrap_or_else(|| anyhow::anyhow!("unknown trial failure"));
+        return Err(cause.context(format!(
+            "sweep failed: all {measurable} measurable cells quarantined after trial retries"
+        )));
+    }
+    if failed > 0 {
+        log::warn!("sweep finished with {failed}/{measurable} cells quarantined");
     }
     Ok(SweepResult {
         spec: spec.clone(),
@@ -828,10 +955,12 @@ fn run_exhaustive_streaming(
 
 impl SweepResult {
     /// Measured cells as response-surface samples for a phase
-    /// (`"train"` or `"surveil"`), using median cost.
+    /// (`"train"` or `"surveil"`), using median cost. Quarantined cells
+    /// are excluded — their partial timings must not skew surface fits.
     pub fn samples(&self, phase: &str) -> Vec<Sample> {
         self.cells
             .iter()
+            .filter(|c| !c.failed)
             .filter_map(|c| {
                 let s = match phase {
                     "train" => c.train.as_ref(),
@@ -859,7 +988,7 @@ impl SweepResult {
             cols.iter().map(|&v| v as f64).collect(),
         );
         for c in &self.cells {
-            if c.key.n != n_fixed || c.violated {
+            if c.key.n != n_fixed || c.violated || c.failed {
                 continue;
             }
             let v = match phase {
@@ -885,12 +1014,22 @@ impl SweepResult {
             .collect()
     }
 
-    /// Cells measured to full precision (non-gap, not interpolated).
+    /// Cells measured to full precision (non-gap, not interpolated, not
+    /// quarantined).
     pub fn measured_cells(&self) -> usize {
         self.cells
             .iter()
-            .filter(|c| !c.violated && !c.interpolated)
+            .filter(|c| !c.violated && !c.interpolated && !c.failed)
             .count()
+    }
+
+    /// Cells quarantined after exhausting their trial retries.
+    pub fn failed_cells(&self) -> Vec<CellKey> {
+        self.cells
+            .iter()
+            .filter(|c| c.failed)
+            .map(|c| c.key)
+            .collect()
     }
 
     /// Cells accepted at pilot precision via the planner's surface model.
@@ -1098,6 +1237,71 @@ mod tests {
         run_sweep_cached(&reseeded, Backend::Native, Some(&cache)).unwrap();
         assert_eq!(cache.hits(), 0, "different seed must not share cells");
         assert_eq!(cache.len(), 12);
+    }
+
+    #[test]
+    fn poisoned_cells_quarantine_while_healthy_cells_survive() {
+        use crate::util::failpoint;
+        let _g = failpoint::test_guard();
+        failpoint::disarm_all();
+        // Warm two cells, then poison every fresh trial: the warmed cells
+        // retire from the cache, the fresh ones quarantine, and the job
+        // still completes.
+        let cache = SweepCache::in_memory();
+        let sub = SweepSpec {
+            signals: vec![4],
+            memvecs: vec![8, 16],
+            obs: vec![32],
+            ..tiny_spec()
+        };
+        run_sweep_cached(&sub, Backend::Native, Some(&cache)).unwrap();
+        let r0 = Registry::global().counter("executor.trial.retries");
+        let f0 = Registry::global().counter("executor.trial.failed");
+        failpoint::arm_from_str("executor.trial.run:1:error:3").unwrap();
+        let full = SweepSpec {
+            signals: vec![4],
+            memvecs: vec![8, 16],
+            obs: vec![32, 64],
+            ..tiny_spec()
+        };
+        let res = run_sweep_cached(&full, Backend::Native, Some(&cache)).unwrap();
+        failpoint::disarm_all();
+        assert_eq!(res.cells.len(), 4);
+        let failed = res.failed_cells();
+        assert_eq!(failed.len(), 2, "both fresh cells must quarantine");
+        assert!(failed.iter().all(|k| k.obs == 64));
+        // Quarantined cells are excluded from fits, panels, and counts.
+        assert_eq!(res.samples("train").len(), 2);
+        assert_eq!(res.measured_cells(), 2);
+        // 2 cells × 2 trials, each retried TRIAL_MAX_RETRIES times.
+        assert_eq!(Registry::global().counter("executor.trial.failed") - f0, 4);
+        assert_eq!(
+            Registry::global().counter("executor.trial.retries") - r0,
+            4 * TRIAL_MAX_RETRIES
+        );
+    }
+
+    #[test]
+    fn all_cells_failing_is_a_classified_job_error() {
+        use crate::util::failpoint;
+        let _g = failpoint::test_guard();
+        failpoint::disarm_all();
+        // Injected *panics* exercise the containment path end to end.
+        failpoint::arm_from_str("executor.trial.run:1:panic:3").unwrap();
+        let spec = SweepSpec {
+            signals: vec![4],
+            memvecs: vec![16],
+            obs: vec![32],
+            trials: 1,
+            ..tiny_spec()
+        };
+        let err = run_sweep(&spec, Backend::Native).unwrap_err();
+        failpoint::disarm_all();
+        assert!(
+            failpoint::is_injected(&err),
+            "error must classify as injected: {err:#}"
+        );
+        assert!(format!("{err:#}").contains("quarantined"), "{err:#}");
     }
 
     #[test]

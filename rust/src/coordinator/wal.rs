@@ -1,0 +1,239 @@
+//! Durable job recovery: a write-ahead log of submitted job specs.
+//!
+//! Every accepted scope/scenario submission is journalled here **before**
+//! its driver starts, under [`crate::obs::journal`]'s size-rotated NDJSON
+//! machinery with `fsync=always` — a `submit` record survives any crash
+//! that happens after the client's 202. When the job reaches a terminal
+//! state (done / failed / cancelled) a matching `terminal` record is
+//! appended. On a `serve --resume` start, [`JobWal::pending`] returns the
+//! submits with no terminal record — the jobs a crashed process accepted
+//! but never finished — and the service resubmits them. Replay is
+//! bit-identical for sweep jobs: the payload round-trips the full
+//! [`crate::coordinator::SweepSpec`] (see
+//! [`crate::config::sweep_spec_to_json`]) and trials are seed-determined,
+//! so a resumed job recomputes exactly the cells the lost one would have
+//! (a warm cell cache serves the already-measured prefix without
+//! re-running a single trial).
+//!
+//! The WAL shares a directory format with the telemetry journal but uses
+//! its own `wal.` file prefix, so both can even share one directory
+//! without clashing sequence files. Append failures follow journal
+//! semantics — counted and logged, never propagated — so a dying disk
+//! degrades durability without taking submissions down;
+//! [`JobWal::errors`] feeds the service's `/healthz` degradation report.
+
+use crate::obs::journal::{self, FsyncPolicy, Journal, JournalConfig};
+use crate::util::json::Json;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// WAL journal file prefix (`wal.<seq>.ndjson`), distinct from the
+/// telemetry journal's `telemetry.` so the two never clash.
+pub const WAL_FILE_PREFIX: &str = "wal.";
+
+/// A `submit` record with no matching `terminal` record: a job an earlier
+/// process accepted but never finished.
+#[derive(Clone, Debug)]
+pub struct PendingJob {
+    /// WAL identity of the original submission (not the job id — job ids
+    /// restart at 1 on every boot; WAL ids are monotonic across restarts).
+    pub wal_id: u64,
+    /// Job kind: `"sweep"` or `"scenario"`.
+    pub kind: String,
+    /// The submission payload (spec JSON + weight + optional context).
+    pub payload: Json,
+}
+
+/// The job write-ahead log. One instance per server; cheap to share via
+/// `Arc` (appends serialize on the journal's internal writer lock).
+pub struct JobWal {
+    journal: Journal,
+    next_id: AtomicU64,
+}
+
+impl JobWal {
+    /// Open (or create) the WAL under `dir`. Scans existing records to
+    /// continue the monotonic `wal_id` sequence across restarts.
+    pub fn open(dir: &Path) -> anyhow::Result<JobWal> {
+        let max_id = journal::read_records_with_prefix(dir, WAL_FILE_PREFIX)?
+            .iter()
+            .filter_map(|r| r.get("wal_id").and_then(Json::as_usize))
+            .max()
+            .unwrap_or(0) as u64;
+        let cfg = JournalConfig {
+            fsync: FsyncPolicy::Always,
+            file_prefix: WAL_FILE_PREFIX.to_string(),
+            ..JournalConfig::new(dir)
+        };
+        Ok(JobWal {
+            journal: Journal::open(cfg)?,
+            next_id: AtomicU64::new(max_id + 1),
+        })
+    }
+
+    /// Journal a job submission; returns its WAL id. `kind` is `"sweep"`
+    /// or `"scenario"`; `payload` must round-trip everything resubmission
+    /// needs. Append failures are counted, not propagated (see module
+    /// docs) — the id is minted either way so terminal records stay
+    /// pairable.
+    pub fn log_submit(&self, kind: &str, payload: Json) -> u64 {
+        let wal_id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.journal.append(&Json::obj(vec![
+            ("kind", Json::Str("submit".to_string())),
+            ("wal_id", Json::Num(wal_id as f64)),
+            ("job", Json::Str(kind.to_string())),
+            ("ts_ms", Json::Num(now_ms() as f64)),
+            ("payload", payload),
+        ]));
+        wal_id
+    }
+
+    /// Journal a job's terminal state (`done` / `failed` / `cancelled`,
+    /// plus `resumed` for entries handed off to a replacement submission
+    /// at resume time). After this the submission is no longer pending.
+    pub fn log_terminal(&self, wal_id: u64, state: &str) {
+        self.journal.append(&Json::obj(vec![
+            ("kind", Json::Str("terminal".to_string())),
+            ("wal_id", Json::Num(wal_id as f64)),
+            ("state", Json::Str(state.to_string())),
+            ("ts_ms", Json::Num(now_ms() as f64)),
+        ]));
+    }
+
+    /// The submissions with no terminal record, in WAL-id order —
+    /// everything a crashed process accepted but never finished. Reads
+    /// the files on disk (tolerating a torn tail), so it reflects what
+    /// actually survived, not what this process believes it wrote.
+    pub fn pending(&self) -> anyhow::Result<Vec<PendingJob>> {
+        let records =
+            journal::read_records_with_prefix(self.journal.dir(), WAL_FILE_PREFIX)?;
+        let mut submits: std::collections::BTreeMap<u64, PendingJob> = Default::default();
+        for r in &records {
+            let Some(wal_id) = r.get("wal_id").and_then(Json::as_usize).map(|n| n as u64)
+            else {
+                continue;
+            };
+            match r.get("kind").and_then(Json::as_str) {
+                Some("submit") => {
+                    submits.insert(
+                        wal_id,
+                        PendingJob {
+                            wal_id,
+                            kind: r
+                                .get("job")
+                                .and_then(Json::as_str)
+                                .unwrap_or("sweep")
+                                .to_string(),
+                            payload: r.get("payload").cloned().unwrap_or(Json::Null),
+                        },
+                    );
+                }
+                Some("terminal") => {
+                    submits.remove(&wal_id);
+                }
+                _ => {}
+            }
+        }
+        Ok(submits.into_values().collect())
+    }
+
+    /// Flush buffered bytes to stable storage (drain path; appends are
+    /// already fsynced individually under `FsyncPolicy::Always`).
+    pub fn flush(&self) {
+        self.journal.flush();
+    }
+
+    /// Records successfully appended since open.
+    pub fn appended(&self) -> u64 {
+        self.journal.appended()
+    }
+
+    /// Append errors since open (each is logged; feeds `/healthz`).
+    pub fn errors(&self) -> u64 {
+        self.journal.errors()
+    }
+}
+
+fn now_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default()
+        .as_millis() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wal_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("cs_wal_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn submit_terminal_pending_roundtrip() {
+        let dir = wal_dir("roundtrip");
+        let wal = JobWal::open(&dir).unwrap();
+        assert!(wal.pending().unwrap().is_empty());
+        let payload = |n: f64| Json::obj(vec![("weight", Json::Num(n))]);
+        let a = wal.log_submit("sweep", payload(1.0));
+        let b = wal.log_submit("scenario", payload(2.0));
+        assert_ne!(a, b);
+        wal.log_terminal(a, "done");
+        let pending = wal.pending().unwrap();
+        assert_eq!(pending.len(), 1);
+        assert_eq!(pending[0].wal_id, b);
+        assert_eq!(pending[0].kind, "scenario");
+        assert_eq!(
+            pending[0].payload.get("weight").and_then(Json::as_f64),
+            Some(2.0)
+        );
+        assert_eq!(wal.appended(), 3);
+        assert_eq!(wal.errors(), 0);
+    }
+
+    #[test]
+    fn wal_ids_stay_monotonic_across_reopen() {
+        let dir = wal_dir("reopen");
+        let first = {
+            let wal = JobWal::open(&dir).unwrap();
+            wal.log_submit("sweep", Json::Null)
+        };
+        // Reopen (as a restarted process would): the pending submit is
+        // visible and new ids continue past every recorded one.
+        let wal = JobWal::open(&dir).unwrap();
+        let pending = wal.pending().unwrap();
+        assert_eq!(pending.len(), 1);
+        assert_eq!(pending[0].wal_id, first);
+        let second = wal.log_submit("sweep", Json::Null);
+        assert!(second > first, "{second} vs {first}");
+        wal.log_terminal(first, "resumed");
+        wal.log_terminal(second, "done");
+        assert!(wal.pending().unwrap().is_empty());
+    }
+
+    #[test]
+    fn torn_tail_keeps_whole_records_pending() {
+        let dir = wal_dir("torn");
+        {
+            let wal = JobWal::open(&dir).unwrap();
+            wal.log_submit("sweep", Json::obj(vec![("weight", Json::Num(1.0))]));
+        }
+        // Simulate a crash mid-append: a half-written record at the tail.
+        let (_, path) = journal::list_files_with_prefix(&dir, WAL_FILE_PREFIX)
+            .unwrap()
+            .pop()
+            .unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"{\"kind\":\"submit\",\"wal_id\":99");
+        std::fs::write(&path, bytes).unwrap();
+        let wal = JobWal::open(&dir).unwrap();
+        let pending = wal.pending().unwrap();
+        assert_eq!(pending.len(), 1, "torn record ignored, whole one kept");
+        // The torn id never entered the sequence; new ids continue from
+        // the last *whole* record.
+        assert_eq!(wal.log_submit("sweep", Json::Null), pending[0].wal_id + 1);
+    }
+}

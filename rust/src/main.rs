@@ -17,7 +17,9 @@
 //! kernel tier), `--metrics` to dump the metrics registry.
 //! `--ci-target F` (with `--pilot-trials`, `--max-trials`,
 //! `--interpolate`) switches `sweep`/`scope`/`serve` from the exhaustive
-//! fixed-trials loop to the adaptive sweep planner.
+//! fixed-trials loop to the adaptive sweep planner. `--chaos` arms
+//! deterministic failpoints (fault injection); `serve` adds `--wal-dir` /
+//! `--resume` / `--drain-deadline-ms` for durable job recovery.
 //!
 //! See `docs/ARCHITECTURE.md` for the module map and `docs/API.md` for the
 //! `serve` endpoint reference.
@@ -82,6 +84,10 @@ fn install_kernel_backend(cfg: &Config) -> anyhow::Result<()> {
 
 fn make_backend(cfg: &Config) -> anyhow::Result<(Backend, Option<DeviceServer>)> {
     install_kernel_backend(cfg)?;
+    // Deterministic fault injection: arm any `--chaos` / config / env
+    // specs before the first trial runs. make_backend is the common
+    // gateway for every work-running command (sweep/scope/simulate/serve).
+    containerstress::util::failpoint::arm_from_config(cfg.chaos.as_deref())?;
     match cfg.backend.as_str() {
         "native" => Ok((Backend::Native, None)),
         _ => {
@@ -155,6 +161,21 @@ fn print_help() {
            --journal-dir DIR|none     durable telemetry journal (NDJSON)\n\
            --journal-max-file-bytes N --journal-max-total-bytes N\n\
            --journal-fsync never|rotate|always  --journal-snapshot-ms MS\n\
+         serve fault-tolerance flags:\n\
+           --wal-dir DIR|none    durable job WAL: submissions are journalled\n\
+             (fsync always) before they run, so a crash loses no accepted job\n\
+           --resume              replay unfinished WAL jobs on boot\n\
+             (requires --wal-dir; share the --cache-dir for bit-identical,\n\
+              nearly-free replay)\n\
+           --drain-deadline-ms N graceful SIGTERM/SIGINT drain deadline\n\
+             (default 5000; jobs still running stay pending for --resume)\n\
+         chaos flags (sweep/scope/simulate/serve):\n\
+           --chaos point:rate:kind[:seed],...  deterministic fault injection\n\
+             at named failpoints (kind error|panic|delay; rate in [0,1];\n\
+             env CONTAINERSTRESS_CHAOS overrides; empty string clears).\n\
+             points: cellstore.spill.write cellstore.spill.read\n\
+             executor.trial.run journal.append http.conn.accept\n\
+             scenario.unit.run\n\
          \n\
          serve API:    POST /v1/scope  GET /v1/jobs/ID  DELETE /v1/jobs/ID\n\
                        GET /v1/jobs/ID/trace  GET /v1/scenarios/ID/trace\n\
@@ -294,6 +315,32 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Set by the SIGTERM/SIGINT handler; the serve loop polls it and turns
+/// a kill into a graceful drain (finish in-flight jobs up to the
+/// deadline, flush the WAL, leave the rest pending for `--resume`).
+static TERM_REQUESTED: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_term_handler() {
+    // No libc crate offline: reach signal(2) through its raw C symbol.
+    // The handler only flips an atomic, which is async-signal-safe.
+    extern "C" fn on_term(_sig: i32) {
+        TERM_REQUESTED.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_term as usize);
+        signal(SIGINT, on_term as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_term_handler() {}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = Config::resolve(args)?;
     let (backend, _device) = make_backend(&cfg)?;
@@ -350,7 +397,31 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             cfg.service.slo.tick_ms
         );
     }
-    server.join();
+    match &cfg.service.wal_dir {
+        Some(d) => println!(
+            "job WAL: {} (resume={}, drain deadline {}ms)",
+            d.display(),
+            cfg.service.resume,
+            cfg.service.drain_deadline_ms
+        ),
+        None => println!("job WAL: disabled (submissions are not crash-durable)"),
+    }
+    install_term_handler();
+    while !TERM_REQUESTED.load(std::sync::atomic::Ordering::SeqCst) {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!(
+        "shutdown signal received; draining in-flight jobs (deadline {}ms)",
+        cfg.service.drain_deadline_ms
+    );
+    let remaining =
+        server.drain(std::time::Duration::from_millis(cfg.service.drain_deadline_ms));
+    if remaining > 0 {
+        println!(
+            "{remaining} job(s) still running at the drain deadline; \
+             restart with --resume to replay them"
+        );
+    }
     Ok(())
 }
 

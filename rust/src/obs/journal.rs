@@ -40,7 +40,10 @@ pub const DEFAULT_MAX_FILE_BYTES: u64 = 8 << 20;
 /// Default whole-directory disk cap (64 MiB).
 pub const DEFAULT_MAX_TOTAL_BYTES: u64 = 64 << 20;
 
-const FILE_PREFIX: &str = "telemetry.";
+/// Default journal file prefix (the telemetry journal's). Other journal
+/// users (the job WAL) pick their own prefix so several journals can
+/// coexist without clashing sequence files.
+pub const DEFAULT_FILE_PREFIX: &str = "telemetry.";
 const FILE_SUFFIX: &str = ".ndjson";
 
 /// How eagerly journal writes are flushed to stable storage.
@@ -92,16 +95,22 @@ pub struct JournalConfig {
     pub max_total_bytes: u64,
     /// Durability policy.
     pub fsync: FsyncPolicy,
+    /// File-name prefix (`<prefix><seq>.ndjson`); defaults to
+    /// [`DEFAULT_FILE_PREFIX`]. Distinct prefixes let independent
+    /// journals (telemetry, the job WAL) share rotation machinery.
+    pub file_prefix: String,
 }
 
 impl JournalConfig {
-    /// Config with default bounds and [`FsyncPolicy::Never`].
+    /// Config with default bounds, [`FsyncPolicy::Never`], and the
+    /// telemetry file prefix.
     pub fn new(dir: impl Into<PathBuf>) -> JournalConfig {
         JournalConfig {
             dir: dir.into(),
             max_file_bytes: DEFAULT_MAX_FILE_BYTES,
             max_total_bytes: DEFAULT_MAX_TOTAL_BYTES,
             fsync: FsyncPolicy::Never,
+            file_prefix: DEFAULT_FILE_PREFIX.to_string(),
         }
     }
 }
@@ -133,7 +142,7 @@ impl Journal {
             "journal max_total_bytes must be >= max_file_bytes"
         );
         fs::create_dir_all(&cfg.dir)?;
-        let files = list_files(&cfg.dir)?;
+        let files = list_files_with_prefix(&cfg.dir, &cfg.file_prefix)?;
         let (seq, written) = match files.last() {
             None => (1, 0),
             Some((seq, path)) => {
@@ -141,7 +150,7 @@ impl Journal {
                 (*seq, valid)
             }
         };
-        let path = file_path(&cfg.dir, seq);
+        let path = file_path(&cfg.dir, &cfg.file_prefix, seq);
         let file = OpenOptions::new().create(true).append(true).open(&path)?;
         let journal = Journal {
             cfg,
@@ -180,7 +189,16 @@ impl Journal {
         let mut line = frame.to_string();
         line.push('\n');
         let mut w = self.inner.lock().unwrap();
-        if let Err(e) = self.append_locked(&mut w, line.as_bytes()) {
+        // Chaos hook; the tag advances with both counters so a failed
+        // injection doesn't pin the same decision forever.
+        let tag = self
+            .appended
+            .load(Ordering::Relaxed)
+            .wrapping_add(self.errors.load(Ordering::Relaxed));
+        let injected = crate::util::failpoint::hit_no_panic("journal.append", tag);
+        if let Err(e) = injected
+            .and_then(|_| self.append_locked(&mut w, line.as_bytes()).map_err(Into::into))
+        {
             drop(w);
             if self.errors.fetch_add(1, Ordering::Relaxed) == 0 {
                 log::warn!("telemetry journal append failed (further errors counted): {e}");
@@ -209,7 +227,7 @@ impl Journal {
             w.file.get_ref().sync_data()?;
         }
         w.seq += 1;
-        let path = file_path(&self.cfg.dir, w.seq);
+        let path = file_path(&self.cfg.dir, &self.cfg.file_prefix, w.seq);
         let file = OpenOptions::new().create(true).append(true).open(path)?;
         w.file = BufWriter::new(file);
         w.written = 0;
@@ -220,7 +238,7 @@ impl Journal {
     /// Delete the oldest sealed files until the directory fits the total
     /// cap; the active file is never deleted.
     fn enforce_total_cap(&self) {
-        let Ok(files) = list_files(&self.cfg.dir) else {
+        let Ok(files) = list_files_with_prefix(&self.cfg.dir, &self.cfg.file_prefix) else {
             return;
         };
         let sizes: Vec<(u64, PathBuf, u64)> = files
@@ -259,12 +277,21 @@ impl Drop for Journal {
     }
 }
 
-fn file_path(dir: &Path, seq: u64) -> PathBuf {
-    dir.join(format!("{FILE_PREFIX}{seq:08}{FILE_SUFFIX}"))
+fn file_path(dir: &Path, prefix: &str, seq: u64) -> PathBuf {
+    dir.join(format!("{prefix}{seq:08}{FILE_SUFFIX}"))
 }
 
-/// Journal files in `dir`, sorted by ascending sequence number.
+/// Telemetry journal files in `dir`, sorted by ascending sequence number.
 pub fn list_files(dir: &Path) -> anyhow::Result<Vec<(u64, PathBuf)>> {
+    list_files_with_prefix(dir, DEFAULT_FILE_PREFIX)
+}
+
+/// Journal files named `<prefix><seq>.ndjson` in `dir`, sorted by
+/// ascending sequence number.
+pub fn list_files_with_prefix(
+    dir: &Path,
+    prefix: &str,
+) -> anyhow::Result<Vec<(u64, PathBuf)>> {
     let mut files = Vec::new();
     let entries = match fs::read_dir(dir) {
         Ok(e) => e,
@@ -276,7 +303,7 @@ pub fn list_files(dir: &Path) -> anyhow::Result<Vec<(u64, PathBuf)>> {
         let name = entry.file_name();
         let Some(name) = name.to_str() else { continue };
         let Some(seq) = name
-            .strip_prefix(FILE_PREFIX)
+            .strip_prefix(prefix)
             .and_then(|s| s.strip_suffix(FILE_SUFFIX))
             .and_then(|s| s.parse::<u64>().ok())
         else {
@@ -288,12 +315,18 @@ pub fn list_files(dir: &Path) -> anyhow::Result<Vec<(u64, PathBuf)>> {
     Ok(files)
 }
 
-/// Read every record across the journal's files in append order,
-/// tolerating a torn tail (trailing unparseable lines of the newest file
-/// are skipped, mirroring what [`Journal::open`] would truncate).
+/// Read every telemetry record across the journal's files in append
+/// order, tolerating a torn tail (trailing unparseable lines of the
+/// newest file are skipped, mirroring what [`Journal::open`] would
+/// truncate).
 pub fn read_records(dir: &Path) -> anyhow::Result<Vec<Json>> {
+    read_records_with_prefix(dir, DEFAULT_FILE_PREFIX)
+}
+
+/// [`read_records`] for a journal with a custom file prefix.
+pub fn read_records_with_prefix(dir: &Path, prefix: &str) -> anyhow::Result<Vec<Json>> {
     let mut out = Vec::new();
-    for (_, path) in list_files(dir)? {
+    for (_, path) in list_files_with_prefix(dir, prefix)? {
         let text = fs::read_to_string(&path)?;
         for line in text.lines() {
             if line.is_empty() {
@@ -477,6 +510,55 @@ mod tests {
         assert_eq!(fs::metadata(&path).unwrap().len(), clean_len);
         let records = read_records(&dir).unwrap();
         assert_eq!(records.len(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn append_faults_are_counted_never_propagated() {
+        use crate::util::failpoint;
+        let _g = failpoint::test_guard();
+        failpoint::disarm_all();
+        let dir = tmp_dir("chaos-append");
+        let j = Journal::open(JournalConfig::new(&dir)).unwrap();
+        // panic kind at a no-panic site: downgraded to a counted error
+        failpoint::arm_from_str("journal.append:1:panic:3").unwrap();
+        for i in 0..4 {
+            j.append(&record(i));
+        }
+        failpoint::disarm_all();
+        assert_eq!(j.appended(), 0);
+        assert_eq!(j.errors(), 4);
+        // disarmed appends resume cleanly on the same handle
+        j.append(&record(9));
+        j.flush();
+        assert_eq!(j.appended(), 1);
+        let records = read_records(&dir).unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].get("i").and_then(Json::as_f64), Some(9.0));
+        drop(j);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn custom_prefix_journals_coexist_in_one_dir() {
+        let dir = tmp_dir("prefix");
+        let t = Journal::open(JournalConfig::new(&dir)).unwrap();
+        let w = Journal::open(JournalConfig {
+            file_prefix: "wal.".into(),
+            ..JournalConfig::new(&dir)
+        })
+        .unwrap();
+        t.append(&record(1));
+        w.append(&record(2));
+        t.flush();
+        w.flush();
+        let telemetry = read_records(&dir).unwrap();
+        assert_eq!(telemetry.len(), 1);
+        assert_eq!(telemetry[0].get("i").and_then(Json::as_f64), Some(1.0));
+        let wal = read_records_with_prefix(&dir, "wal.").unwrap();
+        assert_eq!(wal.len(), 1);
+        assert_eq!(wal[0].get("i").and_then(Json::as_f64), Some(2.0));
+        drop((t, w));
         let _ = fs::remove_dir_all(&dir);
     }
 

@@ -64,6 +64,10 @@ pub struct SurfaceBasis {
     pub interpolated: usize,
     /// Constraint-gap cells (`m < 2n`) with no measurements at all.
     pub gaps: usize,
+    /// Cells quarantined after trial-retry exhaustion — excluded from the
+    /// surface fits, surfaced so a consumer can tell a clean recommendation
+    /// from one computed around poisoned cells.
+    pub failed: usize,
 }
 
 /// Recommendation output.
@@ -221,6 +225,7 @@ pub fn recommend_from_sweep(
         measured: result.measured_cells(),
         interpolated: result.interpolated_cells(),
         gaps: result.gap_cells().len(),
+        failed: result.failed_cells().len(),
     };
     anyhow::ensure!(
         basis.measured + basis.interpolated > 0,
@@ -313,6 +318,7 @@ impl Recommendation {
                         ("measured_cells", Json::Num(b.measured as f64)),
                         ("interpolated_cells", Json::Num(b.interpolated as f64)),
                         ("gap_cells", Json::Num(b.gaps as f64)),
+                        ("failed_cells", Json::Num(b.failed as f64)),
                     ]),
                     None => Json::Null,
                 },
@@ -348,8 +354,15 @@ impl Recommendation {
         ));
         if let Some(b) = self.basis {
             out.push_str(&format!(
-                "Surfaces: {} measured + {} interpolated cells ({} constraint gaps)\n",
-                b.measured, b.interpolated, b.gaps
+                "Surfaces: {} measured + {} interpolated cells ({} constraint gaps{})\n",
+                b.measured,
+                b.interpolated,
+                b.gaps,
+                if b.failed > 0 {
+                    format!(", {} quarantined", b.failed)
+                } else {
+                    String::new()
+                }
             ));
         }
         if let Some(c) = self.calibration {
@@ -604,7 +617,8 @@ mod tests {
             Some(SurfaceBasis {
                 measured: 12,
                 interpolated: 0,
-                gaps: 0
+                gaps: 0,
+                failed: 0
             })
         );
         assert!(rec.render().contains("12 measured"));

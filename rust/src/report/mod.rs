@@ -54,9 +54,11 @@ pub fn sensitivity_table(result: &SweepResult, phase: &str) -> anyhow::Result<St
 
 /// Per-cell measurement CSV (full provenance of a sweep). The
 /// `interpolated` column distinguishes cells the adaptive planner accepted
-/// at pilot precision from fully measured ones, and `trials` is the count
-/// each cell actually ran (uniform in exhaustive mode, per-cell under the
-/// planner).
+/// at pilot precision from fully measured ones, `failed` marks cells
+/// quarantined after trial-retry exhaustion (their partial summaries are
+/// provenance only — excluded from surface fits), and `trials` is the
+/// count each cell actually ran (uniform in exhaustive mode, per-cell
+/// under the planner).
 pub fn sweep_csv(result: &SweepResult) -> String {
     let mut out = String::from(sweep_csv_header());
     for c in &result.cells {
@@ -68,7 +70,7 @@ pub fn sweep_csv(result: &SweepResult) -> String {
 /// The [`sweep_csv`] header line (with trailing newline). Split out so the
 /// service can stream the CSV row-by-row without materialising it.
 pub fn sweep_csv_header() -> &'static str {
-    "n_signals,n_memvec,n_obs,violated,interpolated,train_median_s,train_iqr_s,surveil_median_s,surveil_iqr_s,trials\n"
+    "n_signals,n_memvec,n_obs,violated,interpolated,failed,train_median_s,train_iqr_s,surveil_median_s,surveil_iqr_s,trials\n"
 }
 
 /// One [`sweep_csv`] data row (with trailing newline) for a single cell.
@@ -78,12 +80,13 @@ pub fn sweep_csv_row(c: &crate::coordinator::CellMeasure) -> String {
         None => ",".to_string(),
     };
     format!(
-        "{},{},{},{},{},{},{},{}\n",
+        "{},{},{},{},{},{},{},{},{}\n",
         c.key.n,
         c.key.m,
         c.key.obs,
         c.violated,
         c.interpolated,
+        c.failed,
         fmt(&c.train),
         fmt(&c.surveil),
         c.train.as_ref().map(|s| s.n).unwrap_or(0),

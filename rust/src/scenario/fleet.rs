@@ -467,6 +467,56 @@ impl ScenarioOutcome {
     }
 }
 
+/// Retry budget for one `(policy, tenant)` simulation unit. The sims are
+/// pure arithmetic, so retries only ever matter under the deterministic
+/// `scenario.unit.run` failpoint (or a genuine panic in a policy loop) —
+/// no backoff sleep is needed, just a varied failpoint tag per attempt.
+const UNIT_MAX_RETRIES: u64 = 2;
+
+/// Run one `(policy, tenant)` simulation with panic containment and
+/// bounded retries. Injected faults and panics are converted to classified
+/// errors (the failpoint message survives the chain) so the aggregation
+/// loop can fail the scenario cleanly instead of hanging on a lost slot.
+fn run_unit(
+    policy: &PolicySpec,
+    trace: &GrowthTrace,
+    unit_tag: u64,
+) -> anyhow::Result<TenantRun> {
+    let mut attempt: u64 = 0;
+    loop {
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::util::failpoint::hit(
+                "scenario.unit.run",
+                unit_tag.wrapping_add(attempt),
+            )?;
+            Ok(match *policy {
+                PolicySpec::PreScoped { headroom } => {
+                    run_fixed(prescope_shape(trace, headroom), trace)
+                }
+                PolicySpec::Reactive(p) => run_reactive(&p, trace),
+                PolicySpec::Predictive(p) => run_predictive(&p, trace),
+            })
+        }))
+        .unwrap_or_else(|p| {
+            Err(anyhow::anyhow!(
+                "scenario unit panicked: {}",
+                crate::coordinator::sweep::panic_text(&*p)
+            ))
+        });
+        match r {
+            Ok(run) => return Ok(run),
+            Err(e) if attempt >= UNIT_MAX_RETRIES => {
+                Registry::global().inc("scenario.unit.failed");
+                return Err(e);
+            }
+            Err(_) => {
+                attempt += 1;
+                Registry::global().inc("scenario.unit.retries");
+            }
+        }
+    }
+}
+
 /// Resolve every tenant's demand trace (core-equivalents). Runs on the
 /// driving thread: in workload mode each epoch consults the surface
 /// oracle, whose out-of-domain backstop may block on executor trials.
@@ -555,7 +605,7 @@ pub fn run_scenario_executor(
     );
 
     // Phase 2: fan (policy, tenant) simulations over the shared executor.
-    let (tx, rx) = mpsc::channel::<(usize, usize, TenantRun)>();
+    let (tx, rx) = mpsc::channel::<(usize, usize, anyhow::Result<TenantRun>)>();
     for pi in 0..np {
         for ti in 0..nt {
             let tx = tx.clone();
@@ -565,6 +615,7 @@ pub fn run_scenario_executor(
             let cancel = cancel.clone();
             let recorder = recorder.clone();
             let enqueued = Instant::now();
+            let unit_tag = (pi * nt + ti) as u64;
             ticket.submit(move || {
                 if cancel.is_cancelled() {
                     return;
@@ -572,13 +623,7 @@ pub fn run_scenario_executor(
                 let started = Instant::now();
                 let queue_wait = started.saturating_duration_since(enqueued);
                 let (_, trace) = &tenants[ti];
-                let run = match policies[pi] {
-                    PolicySpec::PreScoped { headroom } => {
-                        run_fixed(prescope_shape(trace, headroom), trace)
-                    }
-                    PolicySpec::Reactive(p) => run_reactive(&p, trace),
-                    PolicySpec::Predictive(p) => run_predictive(&p, trace),
-                };
+                let run = run_unit(&policies[pi], trace, unit_tag);
                 if let Some(rec) = &recorder {
                     let meta = format!(
                         "policy={} tenant={ti} epochs={}",
@@ -595,7 +640,8 @@ pub fn run_scenario_executor(
     }
     drop(tx);
 
-    let mut slots: Vec<Vec<Option<TenantRun>>> = (0..np).map(|_| vec![None; nt]).collect();
+    let mut slots: Vec<Vec<Option<anyhow::Result<TenantRun>>>> =
+        (0..np).map(|_| vec![None; nt]).collect();
     loop {
         match rx.recv_timeout(std::time::Duration::from_millis(50)) {
             Ok((pi, ti, run)) => slots[pi][ti] = Some(run),
@@ -625,8 +671,15 @@ pub fn run_scenario_executor(
         let mut viol = vec![0usize; spec.epochs];
         for (ti, run) in runs.into_iter().enumerate() {
             let Some(run) = run else {
-                anyhow::bail!("scenario lost simulation results (task panicked?)");
+                anyhow::bail!("scenario lost simulation results (task reclaimed without cancel?)");
             };
+            let run = run.map_err(|e| {
+                anyhow::anyhow!(
+                    "scenario unit (policy {}, tenant {ti}) failed after \
+                     {UNIT_MAX_RETRIES} retries: {e:#}",
+                    policies[pi].label()
+                )
+            })?;
             let arrival = tenants[ti].0;
             total += run.outcome.total_usd;
             violations += run.outcome.violation_epochs;
@@ -796,6 +849,35 @@ mod tests {
         let err = run_scenario_executor(&tiny_scenario(), None, None, &ticket, &progress)
             .unwrap_err();
         assert!(err.is::<Cancelled>(), "{err}");
+    }
+
+    #[test]
+    fn scenario_unit_faults_surface_as_classified_errors() {
+        use crate::util::failpoint;
+        let _g = failpoint::test_guard();
+        failpoint::disarm_all();
+        failpoint::arm_from_str("scenario.unit.run:1:panic:7").unwrap();
+        let err = run_scenario(&tiny_scenario(), None, None).unwrap_err();
+        failpoint::disarm_all();
+        assert!(failpoint::is_injected(&err), "{err:#}");
+        let text = format!("{err:#}");
+        assert!(text.contains("failed after"), "{text}");
+        // a sub-certain rate either retries through to the bit-identical
+        // fault-free outcome (sims are pure) or fails classified — never
+        // a third state
+        let clean = run_scenario(&tiny_scenario(), None, None).unwrap();
+        failpoint::arm_from_str("scenario.unit.run:0.4:error:7").unwrap();
+        let chaotic = run_scenario(&tiny_scenario(), None, None);
+        failpoint::disarm_all();
+        match chaotic {
+            Ok(out) => {
+                for (a, b) in clean.policies.iter().zip(&out.policies) {
+                    assert_eq!(a.total_usd, b.total_usd, "policy {}", a.label);
+                    assert_eq!(a.violation_epochs, b.violation_epochs);
+                }
+            }
+            Err(e) => assert!(failpoint::is_injected(&e), "{e:#}"),
+        }
     }
 
     #[test]

@@ -22,11 +22,12 @@
 
 use crate::coordinator::sweep::{CellKey, CellStore, SweepSpec};
 use crate::metrics::Registry;
+use crate::util::failpoint;
 use crate::util::fnv1a;
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 pub use crate::coordinator::sweep::CellCosts;
@@ -84,12 +85,22 @@ fn stem_of(canonical: &str) -> String {
 /// the cap an arbitrary entry (and its spill file) is evicted per insert.
 pub const MAX_CACHED_CELLS: usize = 65_536;
 
+/// How many times one spill write is attempted before the cache gives
+/// up on the disk and degrades to memory-only mode.
+const SPILL_WRITE_ATTEMPTS: u64 = 2;
+
 /// Content-addressed store of cell measurements (thread-safe).
 pub struct SweepCache {
     dir: Option<PathBuf>,
     map: Mutex<HashMap<String, CellCosts>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Set once a spill write exhausts its retries: the cache keeps
+    /// serving from memory but stops touching the disk, and `/healthz`
+    /// reports `degraded` with [`SweepCache::degrade_reason`].
+    degraded: AtomicBool,
+    degrade_reason: Mutex<Option<String>>,
+    spill_errors: AtomicU64,
 }
 
 impl SweepCache {
@@ -100,6 +111,9 @@ impl SweepCache {
             map: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            degraded: AtomicBool::new(false),
+            degrade_reason: Mutex::new(None),
+            spill_errors: AtomicU64::new(0),
         }
     }
 
@@ -120,8 +134,15 @@ impl SweepCache {
             if path.extension().and_then(|e| e.to_str()) != Some("json") {
                 continue;
             }
-            match std::fs::read_to_string(&path)
+            let tag = fnv1a(
+                path.file_name()
+                    .and_then(|s| s.to_str())
+                    .unwrap_or_default()
+                    .as_bytes(),
+            );
+            match failpoint::hit_no_panic("cellstore.spill.read", tag)
                 .ok()
+                .and_then(|_| std::fs::read_to_string(&path).ok())
                 .and_then(|text| Json::parse(&text).ok())
                 .and_then(|j| parse_entry(&j))
             {
@@ -142,7 +163,10 @@ impl SweepCache {
                         );
                     }
                 }
-                None => log::warn!("sweep cache: skipping unreadable {}", path.display()),
+                None => {
+                    Registry::global().inc("cache.spill.read_skipped");
+                    log::warn!("sweep cache: skipping unreadable {}", path.display());
+                }
             }
         }
         log::info!("sweep cache: {} entries loaded from {}", map.len(), dir.display());
@@ -151,6 +175,9 @@ impl SweepCache {
             map: Mutex::new(map),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            degraded: AtomicBool::new(false),
+            degrade_reason: Mutex::new(None),
+            spill_errors: AtomicU64::new(0),
         })
     }
 
@@ -174,9 +201,14 @@ impl SweepCache {
     }
 
     /// Insert a measurement, spilling it to disk when a directory is
-    /// configured. Spill failures are logged, never propagated. At
-    /// [`MAX_CACHED_CELLS`] an arbitrary entry is evicted (memory + spill
-    /// file) to keep the store bounded.
+    /// configured. Spill failures are retried once, then the cache
+    /// **degrades to memory-only mode**: the entry stays served from
+    /// memory, later inserts skip the disk, and the degradation is
+    /// surfaced through [`SweepCache::degrade_reason`] (→ `/healthz`)
+    /// and the `cache.spill.errors` counter — an unwritable disk must
+    /// never fail a job or take the service down. At
+    /// [`MAX_CACHED_CELLS`] an arbitrary entry is evicted (memory +
+    /// spill file) to keep the store bounded.
     pub fn put(&self, key: CacheKey, costs: CellCosts) {
         let canon = key.canonical();
         {
@@ -194,6 +226,9 @@ impl SweepCache {
             map.insert(canon, costs.clone());
         }
         if let Some(dir) = &self.dir {
+            if self.degraded.load(Ordering::Relaxed) {
+                return;
+            }
             // Spill files carry the seed as a JSON f64; a seed above 2^53
             // would reload rounded, silently never matching its key again.
             // Keep such entries memory-only (CLI-only case — the service
@@ -203,9 +238,30 @@ impl SweepCache {
                 return;
             }
             let path = dir.join(format!("{}.json", key.file_stem()));
-            if let Err(e) = std::fs::write(&path, entry_json(&key, &costs).to_pretty()) {
-                log::warn!("sweep cache: spill to {} failed: {e}", path.display());
+            let body = entry_json(&key, &costs).to_pretty();
+            let tag = fnv1a(key.file_stem().as_bytes());
+            let mut last_err = None;
+            for attempt in 0..SPILL_WRITE_ATTEMPTS {
+                let r = failpoint::hit_no_panic("cellstore.spill.write", tag.wrapping_add(attempt))
+                    .and_then(|_| std::fs::write(&path, &body).map_err(anyhow::Error::from));
+                match r {
+                    Ok(()) => return,
+                    Err(e) => {
+                        self.spill_errors.fetch_add(1, Ordering::Relaxed);
+                        Registry::global().inc("cache.spill.errors");
+                        last_err = Some(e);
+                    }
+                }
             }
+            let reason = format!(
+                "sweep cache degraded to memory-only: spill to {} failed after \
+                 {SPILL_WRITE_ATTEMPTS} attempts: {:#}",
+                path.display(),
+                last_err.expect("retry loop ran")
+            );
+            log::error!("{reason}");
+            *self.degrade_reason.lock().unwrap() = Some(reason);
+            self.degraded.store(true, Ordering::SeqCst);
         }
     }
 
@@ -237,6 +293,21 @@ impl SweepCache {
     /// Lookup misses since this instance was created.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// True once spill writes have been abandoned (memory-only mode).
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Human-readable reason the cache degraded, when it has.
+    pub fn degrade_reason(&self) -> Option<String> {
+        self.degrade_reason.lock().unwrap().clone()
+    }
+
+    /// Spill write errors observed (including retried ones).
+    pub fn spill_errors(&self) -> u64 {
+        self.spill_errors.load(Ordering::Relaxed)
     }
 }
 
@@ -392,6 +463,92 @@ mod tests {
         .unwrap();
         let c = SweepCache::open(&dir).unwrap();
         assert!(c.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_write_failure_degrades_to_memory_only() {
+        let _g = failpoint::test_guard();
+        failpoint::disarm_all();
+        let dir = std::env::temp_dir().join(format!(
+            "cs_cache_degrade_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = SweepCache::open(&dir).unwrap();
+        // Simulated disk-full: every spill write fails, including the retry.
+        failpoint::arm_from_str("cellstore.spill.write:1:error:5").unwrap();
+        c.put(key(4, 8, 32), costs());
+        assert!(c.is_degraded(), "exhausted retries must degrade the cache");
+        assert!(c.degrade_reason().unwrap().contains("memory-only"));
+        assert_eq!(c.spill_errors(), SPILL_WRITE_ATTEMPTS);
+        // Entries keep being served from memory; later puts skip the disk
+        // without accumulating further errors.
+        assert_eq!(c.get(&key(4, 8, 32)), Some(costs()));
+        c.put(key(8, 16, 64), costs());
+        assert_eq!(c.spill_errors(), SPILL_WRITE_ATTEMPTS);
+        assert_eq!(c.len(), 2);
+        failpoint::disarm_all();
+        // Nothing reached the disk, so a reopen starts cold — but clean.
+        let c2 = SweepCache::open(&dir).unwrap();
+        assert!(c2.is_empty());
+        assert!(!c2.is_degraded());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_read_faults_skip_entries_without_crashing() {
+        let _g = failpoint::test_guard();
+        failpoint::disarm_all();
+        let dir = std::env::temp_dir().join(format!(
+            "cs_cache_readfault_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let c = SweepCache::open(&dir).unwrap();
+            c.put(key(4, 8, 32), costs());
+            c.put(key(8, 16, 64), costs());
+        }
+        // Every read faults: open() must come up empty, not crash.
+        failpoint::arm_from_str("cellstore.spill.read:1:error:5").unwrap();
+        let c = SweepCache::open(&dir).unwrap();
+        assert!(c.is_empty());
+        failpoint::disarm_all();
+        // Fault cleared: both entries load again — nothing was corrupted.
+        let c2 = SweepCache::open(&dir).unwrap();
+        assert_eq!(c2.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_spill_file_is_skipped_and_reexecutable() {
+        let _g = failpoint::test_guard();
+        failpoint::disarm_all();
+        let dir = std::env::temp_dir().join(format!(
+            "cs_cache_torn_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let c = SweepCache::open(&dir).unwrap();
+            c.put(key(4, 8, 32), costs());
+        }
+        // Tear the spill file mid-write (half its bytes survive a crash).
+        let path = dir.join(format!("{}.json", key(4, 8, 32).file_stem()));
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        let c = SweepCache::open(&dir).unwrap();
+        assert!(c.is_empty(), "torn entry must be skipped, not crash the load");
+        // The cell is simply a miss now — it will be re-executed and the
+        // torn file overwritten by the fresh spill.
+        assert!(c.get(&key(4, 8, 32)).is_none());
+        c.put(key(4, 8, 32), costs());
+        let c2 = SweepCache::open(&dir).unwrap();
+        assert_eq!(c2.get(&key(4, 8, 32)), Some(costs()));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -825,12 +825,29 @@ impl HttpServer {
                 let pool = TrialExecutor::new(workers.max(1), false);
                 let conns = pool.register(1.0);
                 let pending = Arc::new(AtomicUsize::new(0));
+                let mut accepted: u64 = 0;
                 for conn in listener.incoming() {
                     if stop2.load(Ordering::SeqCst) {
                         break;
                     }
                     match conn {
                         Ok(mut stream) => {
+                            // Chaos hook: a deterministic accept fault
+                            // behaves like a connection reset — the socket
+                            // is dropped, the loop keeps serving. The tag
+                            // varies per connection so at rate<1 a client
+                            // retry succeeds (`hit_no_panic`: this thread
+                            // must never unwind).
+                            accepted += 1;
+                            if let Err(e) = crate::util::failpoint::hit_no_panic(
+                                "http.conn.accept",
+                                accepted,
+                            ) {
+                                Registry::global().inc("service.http.accept_faults");
+                                log::debug!("http: injected accept fault: {e:#}");
+                                drop(stream);
+                                continue;
+                            }
                             // Advisory shed-early: while the SLO engine
                             // pages, trip the same 503 path at a quarter
                             // of the normal queue depth.

@@ -26,10 +26,12 @@ pub use routes::ServiceState;
 
 use crate::config::Config;
 use crate::coordinator::jobs::ScopingService;
+use crate::coordinator::wal::JobWal;
 use crate::coordinator::{Backend, CellStore};
 use crate::metrics::Registry;
 use crate::obs::journal::{Journal, JournalConfig};
 use crate::obs::slo::SloEngine;
+use crate::scenario::ScenarioSpec;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -142,6 +144,103 @@ fn spawn_ops_tick(
     }
 }
 
+/// Replay every WAL submission that never reached a terminal state. Each
+/// pending entry is retired with a `resumed` terminal record and handed to
+/// a fresh durable submission (which journals its own submit under a new
+/// WAL id), so a crash *during* resume still loses nothing: either the old
+/// record is still pending, or the new one is. Returns the number of jobs
+/// resubmitted; malformed or unresubmittable records are logged, counted
+/// under `wal.resume.skipped`, and skipped — one bad record must not keep
+/// the service from booting.
+fn resume_pending(state: &Arc<ServiceState>, wal: &Arc<JobWal>, cfg: &Config) -> usize {
+    let pending = match wal.pending() {
+        Ok(p) => p,
+        Err(e) => {
+            log::warn!("wal: could not scan pending jobs: {e:#}");
+            return 0;
+        }
+    };
+    let mut resumed = 0usize;
+    for job in pending {
+        wal.log_terminal(job.wal_id, "resumed");
+        let outcome = match job.kind.as_str() {
+            "scenario" => resume_scenario(state, &job.payload),
+            _ => resume_sweep(state, &job.payload, cfg),
+        };
+        match outcome {
+            Ok(id) => {
+                log::info!(
+                    "wal: resumed {} submission wal_id={} as job {id}",
+                    job.kind,
+                    job.wal_id
+                );
+                resumed += 1;
+            }
+            Err(e) => {
+                Registry::global().inc("wal.resume.skipped");
+                log::warn!(
+                    "wal: skipping unresumable {} submission wal_id={}: {e:#}",
+                    job.kind,
+                    job.wal_id
+                );
+            }
+        }
+    }
+    resumed
+}
+
+/// Resubmit one journalled sweep job. The payload's `spec` is a full
+/// [`crate::config::sweep_spec_to_json`] rendering, so overlaying it on
+/// any base reproduces the original spec exactly — replay is
+/// bit-identical. The optional `extra` (workload/SLA context from the
+/// HTTP layer) is restored so `/jobs/{id}/recommendation` works as it
+/// did for the original job.
+fn resume_sweep(
+    state: &Arc<ServiceState>,
+    payload: &Json,
+    cfg: &Config,
+) -> anyhow::Result<crate::coordinator::jobs::JobId> {
+    let spec_json = payload
+        .get("spec")
+        .ok_or_else(|| anyhow::anyhow!("submit payload has no spec"))?;
+    let spec = crate::config::sweep_spec_from_json(&cfg.sweep, spec_json)?;
+    let weight = payload.get("weight").and_then(Json::as_f64).unwrap_or(1.0);
+    let extra = payload.get("extra").cloned();
+    let id = state
+        .service()
+        .submit_traced_durable(spec, weight, None, extra.clone())?;
+    if let Some(extra) = &extra {
+        state.restore_context_json(id, extra)?;
+    }
+    Ok(id)
+}
+
+/// Resubmit one journalled scenario job from its `scenario` + optional
+/// `sweep` + `weight` payload.
+fn resume_scenario(
+    state: &Arc<ServiceState>,
+    payload: &Json,
+) -> anyhow::Result<crate::coordinator::jobs::JobId> {
+    let scenario_json = payload
+        .get("scenario")
+        .ok_or_else(|| anyhow::anyhow!("submit payload has no scenario"))?;
+    let scenario = ScenarioSpec::from_json(scenario_json)?;
+    let sweep = match payload.get("sweep") {
+        None | Some(Json::Null) => None,
+        Some(j) => {
+            // The journalled sweep rendering is complete, so any base works.
+            Some(crate::config::sweep_spec_from_json(
+                &crate::coordinator::SweepSpec::default(),
+                j,
+            )?)
+        }
+    };
+    let weight = payload.get("weight").and_then(Json::as_f64).unwrap_or(1.0);
+    state
+        .service()
+        .submit_scenario_traced(scenario, sweep, weight, None)
+}
+
 impl Server {
     /// Start serving on `cfg.service.host:port` (port 0 picks an ephemeral
     /// port — use [`Server::addr`] for the real one). The sweep cache is
@@ -160,6 +259,16 @@ impl Server {
             cfg.service.executor_workers,
             cfg.service.fair_share,
         );
+        // Durable job recovery: journal every accepted submission so a
+        // crashed server can replay unfinished jobs on `--resume`.
+        let wal = match &cfg.service.wal_dir {
+            Some(dir) => {
+                let wal = Arc::new(JobWal::open(dir)?);
+                svc.set_wal(Arc::clone(&wal));
+                Some(wal)
+            }
+            None => None,
+        };
         // Ops plane: live span firehose, optional durable journal,
         // optional SLO burn-rate engine.
         let sink = crate::obs::sink();
@@ -167,10 +276,10 @@ impl Server {
         let journal = match &cfg.service.journal_dir {
             Some(dir) => {
                 let jcfg = JournalConfig {
-                    dir: dir.clone(),
                     max_file_bytes: cfg.service.journal_max_file_bytes,
                     max_total_bytes: cfg.service.journal_max_total_bytes,
                     fsync: cfg.service.journal_fsync,
+                    ..JournalConfig::new(dir.clone())
                 };
                 let j = Arc::new(Journal::open(jcfg)?);
                 sink.set_journal(Some(Arc::clone(&j)));
@@ -191,6 +300,12 @@ impl Server {
             state = state.with_slo(Arc::clone(engine));
         }
         let state = Arc::new(state);
+        if cfg.service.resume {
+            if let Some(wal) = &wal {
+                let resumed = resume_pending(&state, wal, cfg);
+                log::info!("resumed {resumed} unfinished job(s) from the WAL");
+            }
+        }
         let handler_state = Arc::clone(&state);
         let handler: Handler = Arc::new(move |req| handler_state.handle(req));
         let addr = format!("{}:{}", cfg.service.host, cfg.service.port);
@@ -240,5 +355,35 @@ impl Server {
     /// Stop accepting and drain in-flight connections.
     pub fn shutdown(self) {
         self.http.shutdown();
+    }
+
+    /// Graceful-drain shutdown (the serve loop's SIGTERM path): stop
+    /// accepting connections, then wait up to `deadline` for in-flight
+    /// jobs to retire their WAL records. Returns the number of jobs still
+    /// running when the deadline hit — those keep their pending WAL
+    /// submits and are replayed by the next `serve --resume`.
+    pub fn drain(self, deadline: Duration) -> usize {
+        let Server { http, state, _ops } = self;
+        // Closing the HTTP front first: no new submissions can arrive
+        // while we wait, and in-flight request handlers finish inside
+        // `shutdown()`'s pool drain.
+        http.shutdown();
+        let started = std::time::Instant::now();
+        loop {
+            let in_flight = state.service().in_flight();
+            if in_flight == 0 || started.elapsed() >= deadline {
+                if let Some(wal) = state.service().wal() {
+                    wal.flush();
+                }
+                if in_flight > 0 {
+                    log::warn!(
+                        "drain deadline hit with {in_flight} job(s) in flight; \
+                         their WAL records stay pending for --resume"
+                    );
+                }
+                return in_flight;
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
     }
 }

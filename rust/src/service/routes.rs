@@ -142,6 +142,19 @@ impl ServiceState {
         &self.svc
     }
 
+    /// Re-attach a resumed job's recommendation context from the `extra`
+    /// payload its durable submit journalled (see
+    /// [`ScopingService::submit_traced_durable`]): the same
+    /// `workload`/`sla` JSON shapes `POST /v1/scope` accepts, so
+    /// `GET /v1/recommendations/{id}` answers for the replayed job
+    /// exactly as it would have for the lost one.
+    pub fn restore_context_json(&self, id: JobId, extra: &Json) -> anyhow::Result<()> {
+        let workload = workload_from_json(extra.get("workload"))?;
+        let sla = sla_from_json(extra.get("sla"))?;
+        self.jobs.lock().unwrap().insert(id, (workload, sla));
+        Ok(())
+    }
+
     /// Top-level dispatch (the [`crate::service::http::Handler`] body).
     ///
     /// Besides the global request/error counters, each recognised route
@@ -217,16 +230,72 @@ impl ServiceState {
         resp
     }
 
+    /// `GET /healthz`: tri-state health (`ok` / `degraded` / `failing`)
+    /// with a `reasons` array naming each contributor. Degraded means the
+    /// service still serves correct answers with reduced guarantees
+    /// (memory-only cache, lossy WAL/journal, SLO warn burn); failing
+    /// means the SLO engine is paging and the HTTP front is shedding.
+    /// Always 200 — the body, not the status code, carries the verdict,
+    /// so liveness probes don't restart a merely degraded node.
     fn healthz(&self) -> Response {
         let kd = crate::linalg::simd::dispatch_info();
+        let mut reasons: Vec<String> = Vec::new();
+        let mut failing = false;
+        if self.cache.is_degraded() {
+            reasons.push(match self.cache.degrade_reason() {
+                Some(r) => format!("cache degraded: {r}"),
+                None => "cache degraded to memory-only".to_string(),
+            });
+        }
+        if let Some(wal) = self.svc.wal() {
+            let errs = wal.errors();
+            if errs > 0 {
+                reasons.push(format!(
+                    "job WAL append errors: {errs} (recovery may miss jobs)"
+                ));
+            }
+        }
+        if let Some(journal) = crate::obs::sink().journal() {
+            let errs = journal.errors();
+            if errs > 0 {
+                reasons.push(format!("telemetry journal append errors: {errs}"));
+            }
+        }
         let slo = match &self.slo {
-            Some(engine) => engine.summary(),
+            Some(engine) => {
+                let summary = engine.summary();
+                match summary.get("status").and_then(Json::as_str) {
+                    Some("warn") => {
+                        reasons.push("SLO error budget burning at warn rate".to_string());
+                    }
+                    Some("page") => {
+                        failing = true;
+                        reasons.push(
+                            "SLO error budget burning at page rate (shedding load)"
+                                .to_string(),
+                        );
+                    }
+                    _ => {}
+                }
+                summary
+            }
             None => Json::obj(vec![("status", Json::Str("disabled".into()))]),
+        };
+        let status = if failing {
+            "failing"
+        } else if !reasons.is_empty() {
+            "degraded"
+        } else {
+            "ok"
         };
         Response::json(
             200,
             &Json::obj(vec![
-                ("status", Json::Str("ok".into())),
+                ("status", Json::Str(status.into())),
+                (
+                    "reasons",
+                    Json::Arr(reasons.into_iter().map(Json::Str).collect()),
+                ),
                 ("slo", slo),
                 ("version", Json::Str(env!("CARGO_PKG_VERSION").into())),
                 ("uptime_s", Json::Num(crate::obs::uptime_s())),
@@ -550,7 +619,28 @@ impl ServiceState {
             Err(e) => return Response::error(422, &format!("invalid sla: {e}")),
         };
         let ctx = req.trace_context();
-        match self.svc.submit_traced(spec, weight, ctx) {
+        // Journalled alongside the spec in the WAL submit record, so a
+        // resumed job's recommendation context survives the crash. Same
+        // shapes `workload_from_json` / `sla_from_json` parse.
+        let extra = Json::obj(vec![
+            (
+                "workload",
+                Json::obj(vec![
+                    ("signals", Json::Num(workload.n_signals as f64)),
+                    ("memvecs", Json::Num(workload.n_memvec as f64)),
+                    ("obs_per_sec", Json::Num(workload.obs_per_sec)),
+                    ("train_window", Json::Num(workload.train_window as f64)),
+                ]),
+            ),
+            (
+                "sla",
+                Json::obj(vec![
+                    ("headroom", Json::Num(sla.headroom)),
+                    ("max_train_s", Json::Num(sla.max_train_s)),
+                ]),
+            ),
+        ]);
+        match self.svc.submit_traced_durable(spec, weight, ctx, Some(extra)) {
             Ok(id) => {
                 let mut jobs = self.jobs.lock().unwrap();
                 // Drop scoping contexts for jobs the queue has evicted, so

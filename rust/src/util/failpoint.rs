@@ -1,0 +1,366 @@
+//! Deterministic fault injection: a registry of named **failpoints**.
+//!
+//! A failpoint is a named hook compiled into a failure-prone code path
+//! (spill I/O, trial execution, journal appends, socket accepts). In
+//! normal operation every hook is disarmed and costs a single relaxed
+//! atomic load. Chaos runs arm one or more points with a
+//! `point:rate:kind[:seed]` spec — via `--chaos`, the `chaos` config
+//! key, or the `CONTAINERSTRESS_CHAOS` environment variable — and the
+//! armed hooks then inject errors, panics, or delays.
+//!
+//! # Determinism
+//!
+//! Whether a given hit injects is **not** drawn from a shared RNG
+//! stream: under a threaded executor the interleaving of trials would
+//! decide which trial consumes which random draw, and chaos runs would
+//! stop being reproducible. Instead every call site passes a `tag`
+//! that identifies the unit of work (the trial seed and attempt
+//! number, a spill file-stem hash, a journal sequence number), and the
+//! decision is a pure function of `(spec seed, point name, tag)`. Two
+//! runs with the same spec and the same workload therefore inject
+//! faults into exactly the same units of work regardless of thread
+//! scheduling — the foundation of the `chaos_props` bit-identity
+//! suite.
+//!
+//! # Panic safety
+//!
+//! [`hit`] may panic when the armed kind is `panic`; it is only placed
+//! inside `catch_unwind` scopes (trial tasks, scenario units).
+//! [`hit_no_panic`] converts an armed panic into an injected error and
+//! is used at sites where unwinding would poison a lock or strand a
+//! waiter (journal appends, cache spills, the accept loop).
+
+use crate::metrics::Registry;
+use crate::util::fnv1a;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Every failpoint compiled into the binary. Arming a name outside
+/// this list is a configuration error (it would silently never fire).
+pub const POINTS: &[&str] = &[
+    "cellstore.spill.write",
+    "cellstore.spill.read",
+    "executor.trial.run",
+    "journal.append",
+    "http.conn.accept",
+    "scenario.unit.run",
+];
+
+/// What an armed failpoint injects when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Return an `anyhow` error from the hook.
+    Error,
+    /// Panic (only honoured by [`hit`]; [`hit_no_panic`] downgrades
+    /// this to an injected error).
+    Panic,
+    /// Sleep for a fixed 25 ms, then succeed — exercises timeout and
+    /// backpressure paths without changing results.
+    Delay,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Option<FaultKind> {
+        match s {
+            "error" => Some(FaultKind::Error),
+            "panic" => Some(FaultKind::Panic),
+            "delay" => Some(FaultKind::Delay),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling, as accepted by [`FaultSpec::parse`].
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultKind::Error => "error",
+            FaultKind::Panic => "panic",
+            FaultKind::Delay => "delay",
+        }
+    }
+}
+
+/// One armed failpoint: which point, how often, what to inject, and
+/// the seed the per-hit decision derives from.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    /// Registered point name (one of [`POINTS`]).
+    pub point: &'static str,
+    /// Injection probability per hit, in `[0, 1]`.
+    pub rate: f64,
+    /// What to inject.
+    pub kind: FaultKind,
+    /// Decision seed (defaults to 1 when the spec omits it).
+    pub seed: u64,
+}
+
+impl FaultSpec {
+    /// Parse a single `point:rate:kind[:seed]` spec.
+    pub fn parse(s: &str) -> anyhow::Result<FaultSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        anyhow::ensure!(
+            parts.len() == 3 || parts.len() == 4,
+            "chaos spec '{s}' must be point:rate:kind[:seed]"
+        );
+        let point = POINTS
+            .iter()
+            .copied()
+            .find(|p| *p == parts[0])
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown failpoint '{}' (registered: {})",
+                    parts[0],
+                    POINTS.join(", ")
+                )
+            })?;
+        let rate: f64 = parts[1]
+            .parse()
+            .map_err(|_| anyhow::anyhow!("chaos spec '{s}': rate '{}' is not a number", parts[1]))?;
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&rate),
+            "chaos spec '{s}': rate must be in [0, 1]"
+        );
+        let kind = FaultKind::parse(parts[2]).ok_or_else(|| {
+            anyhow::anyhow!("chaos spec '{s}': kind '{}' is not error|panic|delay", parts[2])
+        })?;
+        let seed = match parts.get(3) {
+            Some(raw) => raw
+                .parse()
+                .map_err(|_| anyhow::anyhow!("chaos spec '{s}': seed '{raw}' is not a u64"))?,
+            None => 1,
+        };
+        Ok(FaultSpec { point, rate, kind, seed })
+    }
+
+    /// Render back to the `point:rate:kind:seed` wire form.
+    pub fn render(&self) -> String {
+        format!("{}:{}:{}:{}", self.point, self.rate, self.kind.as_str(), self.seed)
+    }
+}
+
+/// Number of armed points — the disarmed fast path is this single
+/// relaxed load.
+static ARMED_COUNT: AtomicUsize = AtomicUsize::new(0);
+static ARMED: Mutex<Vec<FaultSpec>> = Mutex::new(Vec::new());
+
+fn armed_lock() -> std::sync::MutexGuard<'static, Vec<FaultSpec>> {
+    // A panicking injection can never happen while this lock is held
+    // (decisions are computed after release), but be robust anyway.
+    ARMED.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Arm one failpoint. Re-arming a point replaces its previous spec.
+pub fn arm(spec: FaultSpec) {
+    let mut armed = armed_lock();
+    armed.retain(|s| s.point != spec.point);
+    armed.push(spec);
+    ARMED_COUNT.store(armed.len(), Ordering::SeqCst);
+}
+
+/// Parse and arm a comma-separated list of `point:rate:kind[:seed]`
+/// specs. An empty string arms nothing.
+pub fn arm_from_str(specs: &str) -> anyhow::Result<()> {
+    for part in specs.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        arm(FaultSpec::parse(part)?);
+    }
+    Ok(())
+}
+
+/// Arm failpoints for a process: the `CONTAINERSTRESS_CHAOS`
+/// environment variable first (highest precedence), then the resolved
+/// config/CLI spec. Logs every armed point so chaos runs are
+/// self-describing.
+pub fn arm_from_config(chaos: Option<&str>) -> anyhow::Result<()> {
+    if let Ok(env) = std::env::var("CONTAINERSTRESS_CHAOS") {
+        arm_from_str(&env)?;
+    } else if let Some(spec) = chaos {
+        arm_from_str(spec)?;
+    }
+    for spec in armed() {
+        log::warn!("chaos: failpoint armed: {}", spec.render());
+    }
+    Ok(())
+}
+
+/// Disarm every failpoint (used by tests and between chaos scenarios).
+pub fn disarm_all() {
+    let mut armed = armed_lock();
+    armed.clear();
+    ARMED_COUNT.store(0, Ordering::SeqCst);
+}
+
+/// Snapshot of the currently armed specs.
+pub fn armed() -> Vec<FaultSpec> {
+    armed_lock().clone()
+}
+
+/// True when at least one failpoint is armed.
+#[inline]
+pub fn any_armed() -> bool {
+    ARMED_COUNT.load(Ordering::Relaxed) != 0
+}
+
+/// Serialises tests that arm the (global) registry. Lib unit tests in
+/// different modules share one process; each takes this guard before
+/// arming so a parallel test never observes a foreign spec.
+#[doc(hidden)]
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The pure injection decision: fires iff the armed rate exceeds a
+/// uniform draw derived only from `(seed, point, tag)`.
+fn decide(spec: &FaultSpec, point: &str, tag: u64) -> bool {
+    if spec.rate >= 1.0 {
+        return true;
+    }
+    if spec.rate <= 0.0 {
+        return false;
+    }
+    let mix = spec
+        .seed
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        ^ fnv1a(point.as_bytes())
+        ^ tag.rotate_left(29);
+    Rng::new(mix).f64() < spec.rate
+}
+
+fn fire(spec: FaultSpec, point: &'static str, tag: u64, allow_panic: bool) -> anyhow::Result<()> {
+    Registry::global().inc(&format!("chaos.injected.{point}"));
+    match spec.kind {
+        FaultKind::Delay => {
+            std::thread::sleep(std::time::Duration::from_millis(25));
+            Ok(())
+        }
+        FaultKind::Panic if allow_panic => {
+            panic!("failpoint '{point}' injected panic (tag {tag:#x})")
+        }
+        // `hit_no_panic` call sites cannot unwind safely; an armed
+        // panic degrades to an injected error there.
+        FaultKind::Panic | FaultKind::Error => Err(anyhow::anyhow!(
+            "failpoint '{point}' injected error (tag {tag:#x})"
+        )),
+    }
+}
+
+fn hit_slow(point: &'static str, tag: u64, allow_panic: bool) -> anyhow::Result<()> {
+    let spec = match armed_lock().iter().find(|s| s.point == point) {
+        Some(s) => s.clone(),
+        None => return Ok(()),
+    };
+    if !decide(&spec, point, tag) {
+        return Ok(());
+    }
+    fire(spec, point, tag, allow_panic)
+}
+
+/// Evaluate a failpoint. Disarmed: one relaxed atomic load. Armed
+/// with kind `panic`, this call panics — only use inside
+/// `catch_unwind` scopes; elsewhere use [`hit_no_panic`].
+#[inline]
+pub fn hit(point: &'static str, tag: u64) -> anyhow::Result<()> {
+    if ARMED_COUNT.load(Ordering::Relaxed) == 0 {
+        return Ok(());
+    }
+    hit_slow(point, tag, true)
+}
+
+/// Like [`hit`] but never panics: an armed `panic` kind injects an
+/// error instead. For call sites where unwinding would poison a lock
+/// or strand a blocked waiter.
+#[inline]
+pub fn hit_no_panic(point: &'static str, tag: u64) -> anyhow::Result<()> {
+    if ARMED_COUNT.load(Ordering::Relaxed) == 0 {
+        return Ok(());
+    }
+    hit_slow(point, tag, false)
+}
+
+/// True when an error chain contains an injected-fault message —
+/// chaos tests use this to classify failures as injected vs organic.
+pub fn is_injected(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c.to_string().contains("failpoint '"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_roundtrip_and_errors() {
+        let _g = test_guard();
+        let s = FaultSpec::parse("executor.trial.run:0.25:panic:42").unwrap();
+        assert_eq!(s.point, "executor.trial.run");
+        assert_eq!(s.rate, 0.25);
+        assert_eq!(s.kind, FaultKind::Panic);
+        assert_eq!(s.seed, 42);
+        assert_eq!(s.render(), "executor.trial.run:0.25:panic:42");
+        // defaulted seed
+        assert_eq!(FaultSpec::parse("journal.append:1:error").unwrap().seed, 1);
+        assert!(FaultSpec::parse("nope.point:0.5:error").is_err());
+        assert!(FaultSpec::parse("journal.append:1.5:error").is_err());
+        assert!(FaultSpec::parse("journal.append:0.5:explode").is_err());
+        assert!(FaultSpec::parse("journal.append").is_err());
+    }
+
+    #[test]
+    fn disarmed_hits_are_free_and_ok() {
+        let _g = test_guard();
+        disarm_all();
+        assert!(!any_armed());
+        for t in 0..100 {
+            assert!(hit("executor.trial.run", t).is_ok());
+            assert!(hit_no_panic("journal.append", t).is_ok());
+        }
+    }
+
+    #[test]
+    fn decisions_are_pure_in_the_tag() {
+        let _g = test_guard();
+        disarm_all();
+        arm(FaultSpec::parse("journal.append:0.3:error:7").unwrap());
+        let first: Vec<bool> = (0..200)
+            .map(|t| hit_no_panic("journal.append", t).is_err())
+            .collect();
+        let second: Vec<bool> = (0..200)
+            .map(|t| hit_no_panic("journal.append", t).is_err())
+            .collect();
+        assert_eq!(first, second, "same (seed, point, tag) must decide identically");
+        let fired = first.iter().filter(|&&b| b).count();
+        // 0.3 ± a generous tolerance over 200 tags.
+        assert!((30..=90).contains(&fired), "fired {fired}/200 at rate 0.3");
+        // A different point with the same tags decides independently.
+        arm(FaultSpec::parse("cellstore.spill.write:0.3:error:7").unwrap());
+        let other: Vec<bool> = (0..200)
+            .map(|t| hit_no_panic("cellstore.spill.write", t).is_err())
+            .collect();
+        assert_ne!(first, other);
+        disarm_all();
+    }
+
+    #[test]
+    fn no_panic_variant_downgrades_panics() {
+        let _g = test_guard();
+        disarm_all();
+        arm(FaultSpec::parse("journal.append:1:panic:3").unwrap());
+        let err = hit_no_panic("journal.append", 9).unwrap_err();
+        assert!(is_injected(&err), "downgraded panic classifies as injected: {err:#}");
+        disarm_all();
+    }
+
+    #[test]
+    fn rearm_replaces_and_env_precedence_parses() {
+        let _g = test_guard();
+        disarm_all();
+        arm_from_str("journal.append:0.1:error:1, http.conn.accept:0.2:delay").unwrap();
+        assert_eq!(armed().len(), 2);
+        arm_from_str("journal.append:0.9:error:2").unwrap();
+        let specs = armed();
+        assert_eq!(specs.len(), 2);
+        let j = specs.iter().find(|s| s.point == "journal.append").unwrap();
+        assert_eq!(j.rate, 0.9);
+        assert!(arm_from_str("bogus").is_err());
+        disarm_all();
+    }
+}

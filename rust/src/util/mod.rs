@@ -5,6 +5,7 @@
 //! plus ASCII surface plotting.
 
 pub mod cli;
+pub mod failpoint;
 pub mod json;
 pub mod logger;
 pub mod plot;

@@ -1,0 +1,405 @@
+//! Chaos property suite: every compiled-in failpoint, armed
+//! deterministically, drives the system into exactly one of two states —
+//! a result equivalent to the fault-free run, or a *classified* injected
+//! failure. Never a hang, never corruption, never an unclassified error.
+//! Plus the headline robustness end-to-end: kill -9 a serving process
+//! mid-sweep and prove `serve --resume` replays the lost job to a
+//! recommendation bit-identical to an undisturbed run over the same
+//! cache.
+//!
+//! Failpoint decisions are pure functions of `(seed, point, tag)`, so
+//! every property here is replayable: a failing seed prints in the
+//! assertion message and re-running reproduces it exactly.
+
+use containerstress::coordinator::{run_sweep, run_sweep_cached, Backend, SweepSpec};
+use containerstress::metrics::Registry;
+use containerstress::obs::journal::{Journal, JournalConfig};
+use containerstress::service::SweepCache;
+use containerstress::util::failpoint;
+use containerstress::util::json::Json;
+use std::io::{Read, Write};
+use std::time::{Duration, Instant};
+
+/// One measurable cell (m ≥ 2n), one trial: milliseconds per run, so the
+/// 100-seed properties stay fast.
+fn one_cell_spec(seed: u64) -> SweepSpec {
+    SweepSpec {
+        signals: vec![2],
+        memvecs: vec![8],
+        obs: vec![16],
+        trials: 1,
+        seed,
+        workers: 1,
+        ..SweepSpec::default()
+    }
+}
+
+/// Every failpoint's injection decision is a pure function of
+/// `(seed, point, tag)`: re-arming the same spec reproduces the same
+/// fire-set, rate 0 never fires, rate 1 always fires — for all six
+/// compiled-in points over 100 seeds each.
+#[test]
+fn injection_decisions_are_pure_over_100_seeds_per_point() {
+    let _g = failpoint::test_guard();
+    failpoint::disarm_all();
+    for &point in failpoint::POINTS {
+        for seed in 0..100u64 {
+            let fire_set = |spec: &str| -> Vec<bool> {
+                failpoint::disarm_all();
+                failpoint::arm_from_str(spec).unwrap();
+                (0..64).map(|tag| failpoint::hit_no_panic(point, tag).is_err()).collect()
+            };
+            let a = fire_set(&format!("{point}:0.5:error:{seed}"));
+            let b = fire_set(&format!("{point}:0.5:error:{seed}"));
+            assert_eq!(a, b, "{point} seed {seed}: decisions must replay");
+            assert!(
+                fire_set(&format!("{point}:0:error:{seed}")).iter().all(|f| !f),
+                "{point} seed {seed}: rate 0 fired"
+            );
+            assert!(
+                fire_set(&format!("{point}:1:error:{seed}")).iter().all(|f| *f),
+                "{point} seed {seed}: rate 1 missed"
+            );
+        }
+    }
+    failpoint::disarm_all();
+}
+
+/// `executor.trial.run` under a heavy error rate, 100 seeds: every run
+/// terminates as either a complete result (retries absorbed the faults),
+/// a result with quarantined cells, or a classified injected job error.
+/// Both terminal classes must occur across the sweep of seeds.
+#[test]
+fn trial_faults_complete_or_classify_over_100_seeds() {
+    let _g = failpoint::test_guard();
+    failpoint::disarm_all();
+    let (mut ok, mut failed) = (0u32, 0u32);
+    for seed in 0..100u64 {
+        failpoint::disarm_all();
+        failpoint::arm_from_str(&format!("executor.trial.run:0.9:error:{seed}")).unwrap();
+        match run_sweep(&one_cell_spec(7), Backend::Native) {
+            Ok(r) => {
+                assert_eq!(r.cells.len(), 1, "seed {seed}");
+                if r.failed_cells().is_empty() {
+                    let train = r.cells[0].train.as_ref().expect("healthy cell has costs");
+                    assert!(train.median.is_finite() && train.median >= 0.0, "seed {seed}");
+                    ok += 1;
+                } else {
+                    // single-cell job with its only cell quarantined is a
+                    // job error, not an Ok — count defensively anyway
+                    failed += 1;
+                }
+            }
+            Err(e) => {
+                assert!(
+                    failpoint::is_injected(&e),
+                    "seed {seed}: organic failure under chaos: {e:#}"
+                );
+                failed += 1;
+            }
+        }
+    }
+    failpoint::disarm_all();
+    assert!(ok > 0, "retries never absorbed a fault ({failed} failures)");
+    assert!(failed > 0, "rate 0.9 never exhausted retries ({ok} clean)");
+}
+
+/// Spill-layer chaos, 100 seeds: write faults may degrade the cache to
+/// memory-only and read faults may skip warm entries, but the sweep job
+/// itself always completes with full, healthy cells.
+#[test]
+fn spill_faults_degrade_cache_but_never_fail_jobs_over_100_seeds() {
+    let _g = failpoint::test_guard();
+    failpoint::disarm_all();
+    let dir = std::env::temp_dir().join(format!("cs_chaos_spill_{}", std::process::id()));
+    let mut degraded = 0u32;
+    for seed in 0..100u64 {
+        let _ = std::fs::remove_dir_all(&dir);
+        // Cold run under write faults: every spill write may fail.
+        failpoint::disarm_all();
+        failpoint::arm_from_str(&format!("cellstore.spill.write:0.5:error:{seed}")).unwrap();
+        let cache = SweepCache::open(&dir).unwrap();
+        let r = run_sweep_cached(&one_cell_spec(7), Backend::Native, Some(&cache)).unwrap();
+        assert_eq!(r.cells.len(), 1, "seed {seed}");
+        assert!(r.failed_cells().is_empty(), "seed {seed}: spill fault leaked into cells");
+        if cache.is_degraded() {
+            degraded += 1;
+            let reason = cache.degrade_reason().unwrap_or_default();
+            assert!(reason.contains("spill"), "seed {seed}: reason '{reason}'");
+        }
+        // Reopen under read faults: skipped entries are re-measured, not
+        // errors.
+        failpoint::disarm_all();
+        failpoint::arm_from_str(&format!("cellstore.spill.read:0.5:error:{seed}")).unwrap();
+        let cache2 = SweepCache::open(&dir).unwrap();
+        let r2 = run_sweep_cached(&one_cell_spec(7), Backend::Native, Some(&cache2)).unwrap();
+        assert_eq!(r2.cells.len(), 1, "seed {seed}");
+        assert!(r2.failed_cells().is_empty(), "seed {seed}");
+    }
+    failpoint::disarm_all();
+    let _ = std::fs::remove_dir_all(&dir);
+    assert!(degraded > 0, "write rate 0.5 never degraded the cache");
+}
+
+/// `journal.append` chaos, 100 seeds: every append lands in exactly one
+/// counter (appended or errors), the writer never panics or propagates,
+/// and whatever survived on disk parses back record-for-record.
+#[test]
+fn journal_faults_are_counted_and_survivors_parse_over_100_seeds() {
+    let _g = failpoint::test_guard();
+    failpoint::disarm_all();
+    let dir = std::env::temp_dir().join(format!("cs_chaos_journal_{}", std::process::id()));
+    let mut injected_total = 0u64;
+    for seed in 0..100u64 {
+        let _ = std::fs::remove_dir_all(&dir);
+        failpoint::disarm_all();
+        failpoint::arm_from_str(&format!("journal.append:0.5:error:{seed}")).unwrap();
+        let j = Journal::open(JournalConfig::new(&dir)).unwrap();
+        for i in 0..10 {
+            j.append(&Json::obj(vec![("i", Json::Num(i as f64))]));
+        }
+        j.flush();
+        assert_eq!(j.appended() + j.errors(), 10, "seed {seed}: lost an append");
+        injected_total += j.errors();
+        let on_disk = containerstress::obs::journal::read_records(&dir).unwrap();
+        assert_eq!(
+            on_disk.len() as u64,
+            j.appended(),
+            "seed {seed}: disk disagrees with the appended counter"
+        );
+        drop(j);
+    }
+    failpoint::disarm_all();
+    let _ = std::fs::remove_dir_all(&dir);
+    assert!(injected_total > 0, "rate 0.5 never injected over 1000 appends");
+}
+
+/// `http.conn.accept` chaos: injected accept faults drop individual
+/// connections (a client retry reconnects fine) but never wedge the
+/// accept loop — 100 requests all eventually succeed at fault rate 0.5.
+#[test]
+fn accept_faults_drop_connections_but_never_wedge_the_server() {
+    let _g = failpoint::test_guard();
+    failpoint::disarm_all();
+    let mut cfg = containerstress::config::Config {
+        backend: "native".into(),
+        ..Default::default()
+    };
+    cfg.service.port = 0;
+    cfg.service.cache_dir = None;
+    let server = containerstress::service::Server::start(&cfg, Backend::Native).unwrap();
+    let addr = server.addr();
+    let faults0 = Registry::global().counter("service.http.accept_faults");
+    failpoint::arm_from_str("http.conn.accept:0.5:error:11").unwrap();
+    for i in 0..100 {
+        let mut served = false;
+        for _attempt in 0..20 {
+            let Ok(mut stream) = std::net::TcpStream::connect(addr) else {
+                continue;
+            };
+            let req = b"GET /healthz HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n";
+            if stream.write_all(req).is_err() {
+                continue; // injected drop raced the write — reconnect
+            }
+            let mut out = String::new();
+            if stream.read_to_string(&mut out).is_ok() && out.contains("200") {
+                served = true;
+                break;
+            }
+        }
+        assert!(served, "request {i} never got through at fault rate 0.5");
+    }
+    failpoint::disarm_all();
+    assert!(
+        Registry::global().counter("service.http.accept_faults") > faults0,
+        "rate 0.5 over 100+ connections never injected"
+    );
+    server.shutdown();
+}
+
+// --- crash → restart → resume, through the real binary ------------------
+
+#[cfg(unix)]
+mod crash_resume {
+    use super::*;
+    use std::io::BufRead;
+    use std::process::{Child, Command, Stdio};
+
+    /// Heavy enough (12 cells × 3 trials on 4096/8192-obs cells) that a
+    /// kill lands mid-sweep even on a fast machine.
+    const SCOPE_BODY: &str = r#"{
+      "sweep": {"signals": [2, 3], "memvecs": [8, 12, 16], "obs": [4096, 8192],
+                "trials": 3, "seed": 33, "model": "mset2", "workers": 2},
+      "workload": {"signals": 8, "memvecs": 16, "obs_per_sec": 0.5, "train_window": 256},
+      "sla": {"headroom": 2.0, "max_train_s": 3600.0}
+    }"#;
+
+    fn spawn_serve(wal: &std::path::Path, cache: &std::path::Path, resume: bool) -> (Child, std::net::SocketAddr) {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_containerstress"));
+        cmd.args([
+            "serve",
+            "--host",
+            "127.0.0.1",
+            "--port",
+            "0",
+            "--backend",
+            "native",
+            "--wal-dir",
+            wal.to_str().unwrap(),
+            "--cache-dir",
+            cache.to_str().unwrap(),
+        ]);
+        if resume {
+            cmd.arg("--resume");
+        }
+        let mut child = cmd
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn serve");
+        let stdout = child.stdout.take().expect("stdout piped");
+        let mut lines = std::io::BufReader::new(stdout).lines();
+        let addr = loop {
+            let line = lines
+                .next()
+                .expect("serve exited before announcing its address")
+                .expect("read serve stdout");
+            if let Some(rest) = line.split("http://").nth(1) {
+                break rest.trim().parse().expect("parse listen addr");
+            }
+        };
+        // Keep draining stdout so the child never blocks on a full pipe.
+        std::thread::spawn(move || for _ in lines {});
+        (child, addr)
+    }
+
+    fn request(addr: std::net::SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
+        let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+        let body = body.unwrap_or("");
+        let raw = format!(
+            "{method} {path} HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        stream.write_all(raw.as_bytes()).expect("send");
+        let mut out = String::new();
+        stream.read_to_string(&mut out).expect("recv");
+        let status: u16 = out.split_whitespace().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+        let payload = out.split("\r\n\r\n").nth(1).unwrap_or("");
+        let json = if payload.is_empty() { Json::Null } else { Json::parse(payload).unwrap() };
+        (status, json)
+    }
+
+    fn await_done(addr: std::net::SocketAddr, id: u64) {
+        let deadline = Instant::now() + Duration::from_secs(300);
+        loop {
+            let (status, j) = request(addr, "GET", &format!("/v1/jobs/{id}"), None);
+            assert_eq!(status, 200, "{j}");
+            match j.get("status").and_then(Json::as_str) {
+                Some("done") => return,
+                Some("failed") => panic!("job {id} failed: {j}"),
+                _ => {
+                    assert!(Instant::now() < deadline, "job {id} timed out");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kill9_mid_sweep_then_resume_replays_to_identical_recommendation() {
+        let pid = std::process::id();
+        let wal = std::env::temp_dir().join(format!("cs_crash_wal_{pid}"));
+        let cache = std::env::temp_dir().join(format!("cs_crash_cache_{pid}"));
+        let _ = std::fs::remove_dir_all(&wal);
+        let _ = std::fs::remove_dir_all(&cache);
+
+        // Boot, submit, let it measure for a moment, then kill -9.
+        let (mut child, addr) = spawn_serve(&wal, &cache, false);
+        let (status, j) = request(addr, "POST", "/v1/scope", Some(SCOPE_BODY));
+        assert_eq!(status, 202, "{j}");
+        let deadline = Instant::now() + Duration::from_secs(120);
+        loop {
+            let (_, j) = request(addr, "GET", "/v1/jobs/1", None);
+            let done = j
+                .get("progress")
+                .and_then(|p| p.get("trials_done"))
+                .and_then(Json::as_usize)
+                .unwrap_or(0);
+            if done >= 2 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "job never got mid-flight: {j}");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        child.kill().expect("kill -9");
+        let _ = child.wait();
+
+        // The WAL must still hold the un-retired submission.
+        let pending = containerstress::coordinator::wal::JobWal::open(&wal)
+            .unwrap()
+            .pending()
+            .unwrap();
+        assert_eq!(pending.len(), 1, "crashed submit must stay pending");
+        assert_eq!(pending[0].kind, "sweep");
+
+        // Restart with --resume: the lost job replays as job 1 (partial
+        // cells served from the shared cache) and runs to done.
+        let (mut child2, addr2) = spawn_serve(&wal, &cache, true);
+        await_done(addr2, 1);
+        let (status, resumed_rec) = request(addr2, "GET", "/v1/recommendations/1", None);
+        assert_eq!(status, 200, "{resumed_rec}");
+
+        // An undisturbed submission of the same request against the now
+        // fully warm cache re-measures nothing, so its recommendation is
+        // bit-identical to the resumed job's.
+        let (status, j) = request(addr2, "POST", "/v1/scope", Some(SCOPE_BODY));
+        assert_eq!(status, 202, "{j}");
+        let id2 = j.get("job_id").and_then(Json::as_usize).unwrap() as u64;
+        await_done(addr2, id2);
+        let (status, clean_rec) = request(addr2, "GET", &format!("/v1/recommendations/{id2}"), None);
+        assert_eq!(status, 200);
+        assert_eq!(
+            resumed_rec.to_string(),
+            clean_rec.to_string(),
+            "resumed recommendation must be bit-identical to the clean one"
+        );
+
+        child2.kill().expect("kill server 2");
+        let _ = child2.wait();
+
+        // Every WAL entry is now retired: a third resume replays nothing.
+        let wal_after = containerstress::coordinator::wal::JobWal::open(&wal).unwrap();
+        assert!(wal_after.pending().unwrap().is_empty(), "all submits must be retired");
+
+        let _ = std::fs::remove_dir_all(&wal);
+        let _ = std::fs::remove_dir_all(&cache);
+    }
+
+    #[test]
+    fn sigterm_drains_gracefully_and_exits_zero() {
+        let pid = std::process::id();
+        let wal = std::env::temp_dir().join(format!("cs_drain_wal_{pid}"));
+        let cache = std::env::temp_dir().join(format!("cs_drain_cache_{pid}"));
+        let _ = std::fs::remove_dir_all(&wal);
+        let _ = std::fs::remove_dir_all(&cache);
+        let (mut child, addr) = spawn_serve(&wal, &cache, false);
+        let (status, _) = request(addr, "GET", "/healthz", None);
+        assert_eq!(status, 200);
+        let term = Command::new("kill")
+            .args(["-TERM", &child.id().to_string()])
+            .status()
+            .expect("send SIGTERM");
+        assert!(term.success());
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let code = loop {
+            if let Some(st) = child.try_wait().expect("try_wait") {
+                break st;
+            }
+            assert!(Instant::now() < deadline, "serve ignored SIGTERM");
+            std::thread::sleep(Duration::from_millis(25));
+        };
+        assert!(code.success(), "graceful drain must exit 0, got {code:?}");
+        let _ = std::fs::remove_dir_all(&wal);
+        let _ = std::fs::remove_dir_all(&cache);
+    }
+}
